@@ -1,0 +1,113 @@
+//! Fig 5 reproduction: simulate the attention accelerator under the
+//! token-pipeline (Fig 2) and element-wise (Fig 4b) schedules, render the
+//! module timelines, and sweep context length to show the widening gap.
+//!
+//! Run: `cargo run --example pipeline_sim`
+
+use consmax::sim::pipeline::fig5_time_saving;
+use consmax::sim::{simulate, NormKind, Schedule, SimResult, Workload};
+use consmax::util::bench::print_table;
+
+/// ASCII timeline: one row per module, '#' = busy.
+fn render_timeline(r: &SimResult, width: usize) {
+    let scale = r.total_cycles as f64 / width as f64;
+    for (name, m) in [("QK  ", &r.qk), ("Norm", &r.norm_unit), ("PV  ", &r.pv)] {
+        let mut line = vec![' '; width];
+        for &(s, e) in &m.segments {
+            let a = (s as f64 / scale) as usize;
+            let b = ((e as f64 / scale) as usize).min(width - 1);
+            for c in line.iter_mut().take(b + 1).skip(a) {
+                *c = '#';
+            }
+        }
+        println!("  {name} |{}|", line.iter().collect::<String>());
+    }
+}
+
+fn main() {
+    // ---------------- single-token generation (the Fig 5 case) ---------
+    let seq = 256;
+    let w = Workload::paper_generation(seq);
+    println!("generation stage, context {seq}, head_dim {}\n", w.head_dim);
+
+    let base = simulate(&w, NormKind::Softmax, Schedule::TokenPipeline);
+    println!(
+        "Softmax / token pipeline — {} cycles, utilization {:.0}%",
+        base.total_cycles,
+        base.utilization() * 100.0
+    );
+    render_timeline(&base, 72);
+
+    let soft = simulate(&w, NormKind::Softermax, Schedule::TokenPipeline);
+    println!(
+        "\nSoftermax / token pipeline — {} cycles, utilization {:.0}%",
+        soft.total_cycles,
+        soft.utilization() * 100.0
+    );
+    render_timeline(&soft, 72);
+
+    let cons = simulate(&w, NormKind::ConSmax, Schedule::ElementWise);
+    println!(
+        "\nConSmax / element-wise pipeline — {} cycles, utilization {:.0}%",
+        cons.total_cycles,
+        cons.utilization() * 100.0
+    );
+    render_timeline(&cons, 72);
+
+    println!(
+        "\nConSmax time saving vs Softmax: {:.1}%  (speedup {:.2}x)",
+        (1.0 - cons.total_cycles as f64 / base.total_cycles as f64) * 100.0,
+        cons.speedup_over(&base)
+    );
+
+    // ---------------- context-length sweep -----------------------------
+    let mut rows = Vec::new();
+    for seq in [256usize, 512, 1024, 2048, 4096, 8192] {
+        let (base, cons, saving) = fig5_time_saving(seq);
+        let soft = simulate(
+            &Workload::paper_generation(seq),
+            NormKind::Softermax,
+            Schedule::TokenPipeline,
+        );
+        let part = simulate(
+            &Workload::paper_generation(seq),
+            NormKind::PartialSoftmax { chunks: 8 },
+            Schedule::TokenPipeline,
+        );
+        rows.push(vec![
+            seq.to_string(),
+            base.total_cycles.to_string(),
+            soft.total_cycles.to_string(),
+            part.total_cycles.to_string(),
+            cons.total_cycles.to_string(),
+            format!("{:.1}%", saving * 100.0),
+            format!("{:.0}%", cons.utilization() * 100.0),
+        ]);
+    }
+    print_table(
+        "Fig 5 sweep: generation latency (cycles) by normalizer; \
+         ConSmax element-wise keeps all modules busy at any context",
+        &["seq", "Softmax", "Softermax", "Partial/8", "ConSmax", "saving", "util"],
+        &rows,
+    );
+
+    // ---------------- summarization (multi-token) ----------------------
+    let mut rows = Vec::new();
+    for tokens in [1usize, 4, 16, 64] {
+        let w = Workload::summarization(tokens, 256);
+        let sm = simulate(&w, NormKind::Softmax, Schedule::TokenPipeline);
+        let cs = simulate(&w, NormKind::ConSmax, Schedule::ElementWise);
+        rows.push(vec![
+            tokens.to_string(),
+            format!("{}", sm.total_cycles),
+            format!("{}", cs.total_cycles),
+            format!("{:.2}x", cs.speedup_over(&sm)),
+        ]);
+    }
+    print_table(
+        "Summarization: the token pipeline amortizes across tokens but never \
+         catches the element-wise schedule",
+        &["tokens", "Softmax cycles", "ConSmax cycles", "speedup"],
+        &rows,
+    );
+}

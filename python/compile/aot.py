@@ -1,0 +1,265 @@
+"""AOT export: lower every entry point to HLO *text* + write the manifest.
+
+HLO text (NOT ``lowered.compile().serialize()`` / HloModuleProto bytes) is
+the interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+that the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Run as ``python -m compile.aot --out ../artifacts`` (from python/), or via
+``make artifacts``. Python never runs again after this: the Rust
+coordinator reads ``manifest.json`` for shapes/ordering and executes the
+``.hlo.txt`` modules through PJRT.
+
+Also emits ``golden.json``: concrete input/output vectors for a selection
+of entry points, consumed by the Rust integration tests to pin the
+cross-language numerics.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import consmax as kernels
+from .kernels import lut as lutk
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_of(x) -> dict:
+    return {"shape": list(x.shape), "dtype": str(x.dtype)}
+
+
+@dataclasses.dataclass
+class Entry:
+    name: str
+    fn: object
+    example_args: tuple
+    doc: str
+
+
+def build_entries(cfg: model.GPTConfig, cfg_name: str, batch: int,
+                  decode_batches: list[int]) -> list[Entry]:
+    """Entry points for one (config, normalizer) pair."""
+    key = jax.random.PRNGKey(0)
+    params = model.init_params(cfg, key)
+    flat = model.flatten_params(cfg, params)
+    zeros = [jnp.zeros_like(p) for p in flat]
+    x = jnp.zeros((batch, cfg.ctx), jnp.int32)
+    y = jnp.zeros((batch, cfg.ctx), jnp.int32)
+    step = jnp.zeros((), jnp.float32)
+    order = model.param_order(cfg)
+    n = len(order)
+
+    def train_fn(*args):
+        p = model.unflatten_params(cfg, list(args[:n]))
+        m = model.unflatten_params(cfg, list(args[n:2 * n]))
+        v = model.unflatten_params(cfg, list(args[2 * n:3 * n]))
+        st, xx, yy = args[3 * n], args[3 * n + 1], args[3 * n + 2]
+        p2, m2, v2, loss, gnorm = model.train_step(cfg, p, m, v, st, xx, yy)
+        return (*model.flatten_params(cfg, p2),
+                *model.flatten_params(cfg, m2),
+                *model.flatten_params(cfg, v2), loss, gnorm)
+
+    def eval_fn(*args):
+        p = model.unflatten_params(cfg, list(args[:n]))
+        return (model.eval_step(cfg, p, args[n], args[n + 1]),)
+
+    def forward_fn(*args):
+        p = model.unflatten_params(cfg, list(args[:n]))
+        return (model.forward(cfg, p, args[n], use_pallas=True),)
+
+    def eval_quant_fn(*args):
+        p = model.unflatten_params(cfg, list(args[:n]))
+        return (model.eval_step_quant(cfg, p, args[n], args[n + 1]),)
+
+    entries = [
+        Entry(f"{cfg_name}_{cfg.normalizer}_train_step", train_fn,
+              (*flat, *zeros, *zeros, step, x, y),
+              "fused fwd+bwd+AdamW; inputs params|m|v|step|x|y, "
+              "outputs params'|m'|v'|loss|gnorm"),
+        Entry(f"{cfg_name}_{cfg.normalizer}_eval_step", eval_fn,
+              (*flat, x, y), "mean NLL over a batch"),
+        Entry(f"{cfg_name}_{cfg.normalizer}_forward", forward_fn,
+              (*flat, jnp.zeros((1, cfg.ctx), jnp.int32)),
+              "full-context logits (B=1), pallas normalizer kernels"),
+    ]
+    if cfg.normalizer == "consmax":
+        entries.append(Entry(
+            f"{cfg_name}_consmax_eval_quant", eval_quant_fn,
+            (*flat, x, y),
+            "mean NLL with the INT8 bitwidth-split hardware normalizer "
+            "(deployment-form accuracy, Fig 4a datapath)"))
+
+    for db in decode_batches:
+        kc, vc = model.init_kv_cache(cfg, db)
+        tok = jnp.zeros((db,), jnp.int32)
+        pos = jnp.zeros((), jnp.int32)
+
+        def decode_fn(*args, _db=db):
+            p = model.unflatten_params(cfg, list(args[:n]))
+            return model.decode_step(cfg, p, args[n], args[n + 1],
+                                     args[n + 2], args[n + 3])
+
+        entries.append(Entry(
+            f"{cfg_name}_{cfg.normalizer}_decode_b{db}", decode_fn,
+            (*flat, kc, vc, pos, tok),
+            f"KV-cached single-token decode, batch {db}; "
+            "inputs params|kc|vc|pos|token, outputs logits|kc'|vc'"))
+    return entries
+
+
+def op_entries() -> list[Entry]:
+    """Standalone normalizer ops (quickstart + runtime microbench)."""
+    s = jnp.zeros((64, 256), jnp.float32)
+    c = jnp.zeros((64, 256), jnp.float32)
+    q = jnp.zeros((64, 256), jnp.int8)
+    return [
+        Entry("op_consmax", lambda a, b: (kernels.consmax_pallas(a, b),),
+              (s, c), "pallas ConSmax: C*exp(s), tiled, reduction-free"),
+        Entry("op_softmax", lambda a: (kernels.softmax_pallas(a),),
+              (s,), "pallas row softmax baseline"),
+        Entry("op_softermax", lambda a: (kernels.softermax_pallas(a),),
+              (s,), "pallas base-2 softermax baseline"),
+        Entry("op_lut_consmax",
+              lambda a, b: (lutk.lut_consmax_pallas(a, b),),
+              (q, c), "bit-exact bitwidth-split LUT ConSmax on INT8 codes"),
+        Entry("op_consmax_pv",
+              lambda a, b, v: (kernels.consmax_pv_pallas(a, b, v),),
+              (jnp.zeros((256, 256), jnp.float32),
+               jnp.zeros((256, 256), jnp.float32),
+               jnp.zeros((256, 64), jnp.float32)),
+              "fused ConSmax + PxV streaming tail (element-wise pipeline)"),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Golden vectors for Rust integration tests
+# ---------------------------------------------------------------------------
+
+def golden_vectors() -> dict:
+    """Small concrete cases pinning cross-language numerics."""
+    rng = np.random.default_rng(42)
+    out = {}
+
+    s = rng.normal(size=(4, 8)).astype(np.float32)
+    beta, gamma = np.float32(1.5), np.float32(100.0)
+    c = float(np.exp(-beta) / gamma)
+    out["consmax"] = {
+        "s": s.ravel().tolist(), "shape": [4, 8],
+        "beta": float(beta), "gamma": float(gamma), "c": c,
+        "out": np.asarray(
+            ref.consmax_ref(jnp.asarray(s), beta, gamma)).ravel().tolist(),
+    }
+
+    out["softmax"] = {
+        "s": s.ravel().tolist(), "shape": [4, 8],
+        "out": np.asarray(ref.softmax_ref(jnp.asarray(s))).ravel().tolist(),
+    }
+
+    # exhaustive INT8 LUT grid - THE lossless-hardware golden
+    q = np.arange(-128, 128, dtype=np.int8)
+    for scale_name, scale in [("s16", 1.0 / 16.0), ("s32", 1.0 / 32.0)]:
+        e = np.asarray(ref.lut_exp_ref(jnp.asarray(q), scale),
+                       dtype=np.float16)
+        out[f"lut_exp_{scale_name}"] = {
+            "scale": scale,
+            "q": q.astype(int).tolist(),
+            # bit pattern, not value: the Rust model must match EXACTLY
+            "out_bits": e.view(np.uint16).astype(int).tolist(),
+        }
+    msb, lsb = (np.asarray(t) for t in ref.lut_tables(1.0 / 16.0))
+    out["lut_tables_s16"] = {
+        "msb_bits": msb.view(np.uint16).astype(int).tolist(),
+        "lsb_bits": lsb.view(np.uint16).astype(int).tolist(),
+    }
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Main
+# ---------------------------------------------------------------------------
+
+def export(outdir: str, configs: list[str], normalizers: list[str],
+           batch: int | None, skip_unchanged: bool = True) -> None:
+    os.makedirs(outdir, exist_ok=True)
+    manifest = {"format": "hlo-text-v1", "entries": {}, "configs": {}}
+
+    all_entries: list[Entry] = op_entries()
+    for cfg_name in configs:
+        for norm in normalizers:
+            cfg = model.config_by_name(cfg_name, normalizer=norm)
+            b = batch or (8 if cfg_name == "paper" else 4)
+            decode_b = [1, 4] if cfg_name == "paper" else [1]
+            all_entries += build_entries(cfg, cfg_name, b, decode_b)
+            key = f"{cfg_name}_{norm}"
+            manifest["configs"][key] = {
+                **{f.name: getattr(cfg, f.name)
+                   for f in dataclasses.fields(cfg)},
+                "param_order": model.param_order(cfg),
+                "param_shapes": {
+                    k: list(v.shape) for k, v in
+                    model.init_params(cfg, jax.random.PRNGKey(0)).items()
+                },
+                "train_batch": b,
+            }
+
+    for e in all_entries:
+        path = os.path.join(outdir, f"{e.name}.hlo.txt")
+        # keep_unused=True: softmax/softermax variants never read beta/gamma,
+        # and jit would silently prune those parameters from the HLO
+        # signature, breaking the manifest's input contract with Rust.
+        lowered = jax.jit(e.fn, keep_unused=True).lower(*e.example_args)
+        text = to_hlo_text(lowered)
+        if not (skip_unchanged and os.path.exists(path)
+                and open(path).read() == text):
+            with open(path, "w") as f:
+                f.write(text)
+        outs = jax.eval_shape(e.fn, *e.example_args)
+        manifest["entries"][e.name] = {
+            "file": f"{e.name}.hlo.txt",
+            "doc": e.doc,
+            "inputs": [spec_of(a) for a in e.example_args],
+            "outputs": [spec_of(o) for o in outs],
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        }
+        print(f"  exported {e.name}: {len(e.example_args)} inputs, "
+              f"{len(text)} chars")
+
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    with open(os.path.join(outdir, "golden.json"), "w") as f:
+        json.dump(golden_vectors(), f)
+    print(f"wrote manifest with {len(manifest['entries'])} entries")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default="tiny,paper")
+    ap.add_argument("--normalizers", default="consmax,softmax")
+    ap.add_argument("--batch", type=int, default=None)
+    args = ap.parse_args()
+    export(args.out, args.configs.split(","), args.normalizers.split(","),
+           args.batch)
+
+
+if __name__ == "__main__":
+    main()

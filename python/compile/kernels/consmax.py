@@ -1,0 +1,222 @@
+"""Layer-1 Pallas kernels: ConSmax, Softmax and Softermax score normalizers.
+
+The ConSmax kernel is the paper's compute contribution mapped to TPU idiom
+(DESIGN.md §Hardware-Adaptation): because ConSmax(S_i) = C * exp(S_i - beta)
+has **no reduction over the score axis**, every (query-block, key-block)
+tile is independent - the BlockSpec grid carries no cross-tile state, no
+online-max running maximum, no second normalization pass. That is the TPU
+translation of the paper's "synchronization-free" hardware property: the
+HBM->VMEM schedule streams score tiles once and emits probability tiles
+immediately, exactly like the element-wise pipeline of Fig. 4(b).
+
+The softmax/softermax kernels exist as the baseline: they need the whole
+score row in VMEM (or a two-pass/online schedule) before any output can be
+produced - the stall the paper attacks.
+
+All kernels use ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and correctness (not wallclock) is what the interpret
+path validates. Real-TPU resource estimates live in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block sizes for the (rows, seq) tiling. 128 matches the MXU/VPU lane
+# width; on TPU a (128, 128) f32 tile is 64 KiB of VMEM, so a double-
+# buffered in+out stream fits comfortably in the ~16 MiB VMEM budget.
+ROW_BLOCK = 128
+SEQ_BLOCK = 128
+
+
+def _consmax_kernel(s_ref, c_ref, o_ref):
+    """Tile-local ConSmax: o = C * exp(s). No cross-tile state (the point)."""
+    o_ref[...] = c_ref[...] * jnp.exp(s_ref[...])
+
+
+def _pad_to(x: jax.Array, mult_rows: int, mult_cols: int, fill: float):
+    r, c = x.shape
+    pr = (-r) % mult_rows
+    pc = (-c) % mult_cols
+    if pr or pc:
+        x = jnp.pad(x, ((0, pr), (0, pc)), constant_values=fill)
+    return x, r, c
+
+
+@functools.partial(jax.jit, static_argnames=("row_block", "seq_block"))
+def consmax_pallas(
+    s: jax.Array,
+    c: jax.Array,
+    *,
+    row_block: int = ROW_BLOCK,
+    seq_block: int = SEQ_BLOCK,
+) -> jax.Array:
+    """ConSmax over the last axis of ``s`` with per-row merged constant ``C``.
+
+    ``s``: (..., T) scores. ``c``: broadcastable to ``s`` (per-head scalar in
+    the paper; here materialized per-row so one kernel serves every layout).
+
+    The grid is (rows/row_block, T/seq_block); each program instance touches
+    one tile and nothing else - contrast with softmax_pallas below.
+    """
+    orig_shape = s.shape
+    t = orig_shape[-1]
+    rows = 1
+    for d in orig_shape[:-1]:
+        rows *= d
+    s2 = s.reshape(rows, t)
+    c2 = jnp.broadcast_to(c, orig_shape).reshape(rows, t)
+
+    s2, r0, c0 = _pad_to(s2, row_block, seq_block, 0.0)
+    c2, _, _ = _pad_to(c2, row_block, seq_block, 0.0)
+    pr, pt = s2.shape
+
+    out = pl.pallas_call(
+        _consmax_kernel,
+        out_shape=jax.ShapeDtypeStruct((pr, pt), s.dtype),
+        grid=(pr // row_block, pt // seq_block),
+        in_specs=[
+            pl.BlockSpec((row_block, seq_block), lambda i, j: (i, j)),
+            pl.BlockSpec((row_block, seq_block), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((row_block, seq_block), lambda i, j: (i, j)),
+        interpret=True,
+    )(s2, c2)
+    return out[:r0, :c0].reshape(orig_shape)
+
+
+def _softmax_kernel(s_ref, o_ref):
+    """Whole-row softmax: needs the full score row resident (the baseline)."""
+    s = s_ref[...]
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("row_block",))
+def softmax_pallas(s: jax.Array, *, row_block: int = ROW_BLOCK) -> jax.Array:
+    """Standard softmax over the last axis, one full row per program.
+
+    The BlockSpec must span the entire score axis - the max/sum reductions
+    couple every element of the row. This is the VMEM-resident requirement
+    ConSmax removes.
+    """
+    orig_shape = s.shape
+    t = orig_shape[-1]
+    rows = 1
+    for d in orig_shape[:-1]:
+        rows *= d
+    s2 = s.reshape(rows, t)
+    # pad rows to the block multiple; pad cols with -inf so they don't
+    # perturb max or sum
+    s2, r0, _ = _pad_to(s2, row_block, 1, -jnp.inf)
+    pr = s2.shape[0]
+
+    out = pl.pallas_call(
+        _softmax_kernel,
+        out_shape=jax.ShapeDtypeStruct((pr, t), s.dtype),
+        grid=(pr // row_block,),
+        in_specs=[pl.BlockSpec((row_block, t), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((row_block, t), lambda i: (i, 0)),
+        interpret=True,
+    )(s2)
+    return out[:r0].reshape(orig_shape)
+
+
+def _softermax_kernel(s_ref, o_ref):
+    s = s_ref[...]
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp2(s - m)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("row_block",))
+def softermax_pallas(s: jax.Array, *, row_block: int = ROW_BLOCK) -> jax.Array:
+    """Softermax (base-2 softmax) over the last axis; same coupling as softmax."""
+    orig_shape = s.shape
+    t = orig_shape[-1]
+    rows = 1
+    for d in orig_shape[:-1]:
+        rows *= d
+    s2 = s.reshape(rows, t)
+    s2, r0, _ = _pad_to(s2, row_block, 1, -jnp.inf)
+    pr = s2.shape[0]
+
+    out = pl.pallas_call(
+        _softermax_kernel,
+        out_shape=jax.ShapeDtypeStruct((pr, t), s.dtype),
+        grid=(pr // row_block,),
+        in_specs=[pl.BlockSpec((row_block, t), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((row_block, t), lambda i: (i, 0)),
+        interpret=True,
+    )(s2)
+    return out[:r0].reshape(orig_shape)
+
+
+# ---------------------------------------------------------------------------
+# Fused attention tail: ConSmax + P x V in one streaming kernel.
+# ---------------------------------------------------------------------------
+
+def _consmax_pv_kernel(s_ref, c_ref, v_ref, o_ref):
+    """One (q-block, k-block) step of the element-wise pipeline of Fig. 4(b).
+
+    Normalizes the score tile and immediately accumulates its P x V
+    contribution - no waiting for the rest of the score row. The grid's
+    k axis is the innermost (sequential) dimension, so o_ref accumulates
+    across k-steps; this is legal because ConSmax needs no cross-k state.
+    """
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    p = c_ref[...] * jnp.exp(s_ref[...])
+    o_ref[...] += jnp.dot(p, v_ref[...], preferred_element_type=o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("row_block", "seq_block"))
+def consmax_pv_pallas(
+    s: jax.Array,
+    c: jax.Array,
+    v: jax.Array,
+    *,
+    row_block: int = ROW_BLOCK,
+    seq_block: int = SEQ_BLOCK,
+) -> jax.Array:
+    """Fused ConSmax(S) @ V for 2-D ``s`` (Tq, Tk) and ``v`` (Tk, D).
+
+    The TPU realization of the paper's integration claim: because the
+    normalizer is element-local, the P x V matmul consumes probability
+    tiles as they are produced (k-axis accumulation), never materializing
+    the full P row - the software analogue of the back-end tensor core
+    starting before the score row is complete.
+    """
+    tq, tk = s.shape
+    d = v.shape[1]
+    c2 = jnp.broadcast_to(c, s.shape)
+
+    s2, q0, _ = _pad_to(s, row_block, seq_block, -jnp.inf)
+    c2, _, _ = _pad_to(c2, row_block, seq_block, 0.0)
+    # -inf scores pad to p = c*exp(-inf) = 0 contribution; c pad 0 makes the
+    # padded columns contribute exactly zero even where s pad is 0.
+    v2, _, _ = _pad_to(v, seq_block, 1, 0.0)
+    pq, pk = s2.shape
+
+    out = pl.pallas_call(
+        _consmax_pv_kernel,
+        out_shape=jax.ShapeDtypeStruct((pq, d), jnp.float32),
+        grid=(pq // row_block, pk // seq_block),
+        in_specs=[
+            pl.BlockSpec((row_block, seq_block), lambda i, k: (i, k)),
+            pl.BlockSpec((row_block, seq_block), lambda i, k: (i, k)),
+            pl.BlockSpec((seq_block, d), lambda i, k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((row_block, d), lambda i, k: (i, 0)),
+        interpret=True,
+    )(s2, c2, v2)
+    return out[:q0].astype(s.dtype)

@@ -1,0 +1,67 @@
+"""Pallas kernel for the bitwidth-split LUT ConSmax unit (paper §IV-A).
+
+This is the *hardware-exact* kernel: it consumes INT8 quantized scores and
+reproduces, bit for bit, what the two 16-entry FP16 LUTs + FP16 multiplier
+chain of Fig. 4(a) emit. It exists to (1) prove the "lossless" claim on the
+exhaustive input grid, and (2) produce golden vectors for the Rust `quant`
+module so the three implementations (paper hardware, python model, rust
+model) are pinned to identical bits.
+
+TPU note: a 16-entry FP16 table lives in SMEM/VMEM trivially; the gather is
+a vectorized table lookup. interpret=True as everywhere (CPU PJRT).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _lut_kernel(q_ref, c_ref, msb_ref, lsb_ref, o_ref):
+    """o = fp16( fp16(MSB_LUT[q>>4]) * fp16(LSB_LUT[q&0xF]) * fp16(C) )."""
+    q = q_ref[...].astype(jnp.int32)
+    mi = (q >> 4) + 8          # signed high nibble -> LUT index 0..15
+    li = q & 0xF
+    e = (msb_ref[mi] * lsb_ref[li]).astype(jnp.float16)
+    o_ref[...] = (e * c_ref[...].astype(jnp.float16)).astype(jnp.float16)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block"))
+def lut_consmax_pallas(
+    q: jax.Array, c: jax.Array, *, scale: float = 1.0 / 16.0, block: int = 256
+) -> jax.Array:
+    """Bitwidth-split ConSmax over INT8 codes ``q`` with merged constant ``c``.
+
+    ``q``: int8 tensor of any shape; ``c``: broadcastable fp constant.
+    Returns fp16, exactly the hardware datapath result.
+    """
+    orig_shape = q.shape
+    n = q.size
+    qf = q.reshape(-1)
+    cf = jnp.broadcast_to(c, orig_shape).reshape(-1).astype(jnp.float16)
+    pad = (-n) % block
+    if pad:
+        qf = jnp.pad(qf, (0, pad))
+        cf = jnp.pad(cf, (0, pad))
+    msb, lsb = ref.lut_tables(scale)
+
+    out = pl.pallas_call(
+        _lut_kernel,
+        out_shape=jax.ShapeDtypeStruct((qf.size,), jnp.float16),
+        grid=(qf.size // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            # the LUTs are tiny and replicated to every program instance
+            pl.BlockSpec((16,), lambda i: (0,)),
+            pl.BlockSpec((16,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        interpret=True,
+    )(qf, cf, msb, lsb)
+    return out[:n].reshape(orig_shape)

@@ -1,0 +1,103 @@
+"""Quantized ConSmax attention (paper §IV-A / Fig 4a deployment form).
+
+The accelerator's actual dataflow: the QxK tensor core emits INT8 scores,
+the ConSmax unit turns each code into an fp16 probability through the
+bitwidth-split LUTs, and the PV core consumes the fp16 stream. This
+module implements that pipeline as a Pallas kernel (bit-faithful to the
+hardware) plus a model-level helper to measure the accuracy cost of
+deploying a trained float model with the quantized normalizer.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _quant_consmax_kernel(s_ref, c_ref, msb_ref, lsb_ref, o_ref, *, scale):
+    """Float scores -> INT8 quantize -> LUT exp -> xC, all hardware-exact."""
+    s = s_ref[...]
+    q = jnp.clip(jnp.round(s / scale), -128, 127).astype(jnp.int32)
+    mi = (q >> 4) + 8
+    li = q & 0xF
+    e = (msb_ref[mi] * lsb_ref[li]).astype(jnp.float16)
+    o_ref[...] = (e * c_ref[...].astype(jnp.float16)).astype(jnp.float16)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block"))
+def quant_consmax_pallas(
+    s: jax.Array, c: jax.Array, *, scale: float = 1.0 / 16.0, block: int = 256
+) -> jax.Array:
+    """End-to-end hardware normalizer: float scores in, fp16 probs out.
+
+    Models the full Fig 4(a) unit including the INT8 quantization that the
+    QxK core performs; output bits equal BitSplitLut::consmax(quantize(s)).
+    """
+    orig_shape = s.shape
+    n = s.size
+    sf = s.reshape(-1)
+    cf = jnp.broadcast_to(c, orig_shape).reshape(-1)
+    pad = (-n) % block
+    if pad:
+        sf = jnp.pad(sf, (0, pad))
+        cf = jnp.pad(cf, (0, pad))
+    msb, lsb = ref.lut_tables(scale)
+
+    out = pl.pallas_call(
+        functools.partial(_quant_consmax_kernel, scale=scale),
+        out_shape=jax.ShapeDtypeStruct((sf.size,), jnp.float16),
+        grid=(sf.size // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((16,), lambda i: (0,)),
+            pl.BlockSpec((16,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        interpret=True,
+    )(sf, cf, msb, lsb)
+    return out[:n].reshape(orig_shape)
+
+
+def quantized_consmax_attention(
+    q: jax.Array,            # (B, H, T, hd)
+    k: jax.Array,            # (B, H, T, hd)
+    v: jax.Array,            # (B, H, T, hd)
+    beta: jax.Array,         # (H,)
+    gamma: jax.Array,        # (H,)
+    *,
+    scale: float = 1.0 / 16.0,
+) -> jax.Array:
+    """Causal attention with the hardware-quantized ConSmax normalizer.
+
+    Everything outside the normalizer stays float (the tensor cores run
+    int8/bf16 in a real accelerator, but score quantization is the paper's
+    focus and the only accuracy-relevant change ConSmax introduces).
+    """
+    bsz, h, t, hd = q.shape
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(hd))
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    # hardware masking: masked positions force probability to exactly 0
+    # AFTER the unit (a gate on the output stream), since -inf cannot be
+    # represented in INT8
+    c = ref.merge_beta_gamma(beta, gamma)[None, :, None, None]
+    probs = quant_consmax_pallas(scores, c, scale=scale).astype(jnp.float32)
+    probs = jnp.where(mask[None, None], probs, 0.0)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def float_consmax_attention(q, k, v, beta, gamma):
+    """Float reference for the same attention (training-time semantics)."""
+    bsz, h, t, hd = q.shape
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(hd))
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    probs = ref.consmax_ref(
+        scores, beta[None, :, None, None], gamma[None, :, None, None]
+    )
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)

@@ -1,0 +1,191 @@
+"""Pure-jnp correctness oracles for the L1 kernels.
+
+These are the ground-truth implementations every Pallas kernel (and the
+Rust `quant/` bit-exact model, via golden vectors) is validated against.
+
+All functions operate on a score tensor ``s`` of shape ``(..., seq)`` where
+the last axis is the key/score axis that Softmax normalizes over.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_ref(s: jax.Array, axis: int = -1) -> jax.Array:
+    """Numerically-stable standard Softmax (Eq. 1 with beta = max)."""
+    m = jnp.max(s, axis=axis, keepdims=True)
+    e = jnp.exp(s - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def consmax_ref(s: jax.Array, beta: jax.Array, gamma: jax.Array) -> jax.Array:
+    """ConSmax, training form (Eq. 2): exp(s - beta) / gamma.
+
+    ``beta``/``gamma`` broadcast against ``s``; in the paper they are scalar
+    per attention head, so for a ``(B, H, T, T)`` score tensor they have
+    shape ``(H, 1, 1)`` (or scalar).
+    """
+    return jnp.exp(s - beta) / gamma
+
+
+def consmax_inference_ref(s: jax.Array, c: jax.Array) -> jax.Array:
+    """ConSmax, inference form (Eq. 3): C * exp(s), C = exp(-beta)/gamma.
+
+    Note the paper's Eq. 3 prints ``C = -exp(beta)/gamma``; the sign (and
+    the missing negation of beta in the exponent) is a typo - it
+    contradicts Eq. 2 and would negate every probability - so we use
+    ``C = exp(-beta)/gamma``, the form algebraically equal to Eq. 2.
+    """
+    return c * jnp.exp(s)
+
+
+def merge_beta_gamma(beta: jax.Array, gamma: jax.Array) -> jax.Array:
+    """Merge the two trained parameters into the single inference constant."""
+    return jnp.exp(-beta) / gamma
+
+
+def softermax_ref(s: jax.Array, axis: int = -1) -> jax.Array:
+    """Softermax (Stevens et al., DAC'21): base-2 softmax.
+
+    Computes 2^(s - max) / sum 2^(s - max). In hardware the max/sum are
+    obtained by a chunked two-pass schedule (the partial-softmax structure
+    of Fig. 3b); mathematically that equals this monolithic form, and the
+    chunked dataflow itself is exercised by the pipeline simulator.
+    """
+    m = jnp.max(s, axis=axis, keepdims=True)
+    e = jnp.exp2(s - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def partial_softmax_ref(s: jax.Array, n_chunks: int = 4) -> jax.Array:
+    """Partial softmax (Fig. 3b): per-chunk local softmax + synchronization.
+
+    Splits the last axis into ``n_chunks`` partial vectors, applies the
+    standard softmax on each with its LOCAL max/sum, then rescales with the
+    global max and global sum. Equals softmax_ref exactly; exists to model
+    (and test) the synchronization structure FlashAttention-style schemes
+    require and ConSmax eliminates.
+    """
+    t = s.shape[-1]
+    assert t % n_chunks == 0, "chunk count must divide the score length"
+    chunks = jnp.split(s, n_chunks, axis=-1)
+    local_max = [jnp.max(c, axis=-1, keepdims=True) for c in chunks]
+    local_exp = [jnp.exp(c - m) for c, m in zip(chunks, local_max)]
+    local_sum = [jnp.sum(e, axis=-1, keepdims=True) for e in local_exp]
+    # synchronization pass: global max, rescale local sums/exps
+    g_max = jnp.max(jnp.concatenate(local_max, axis=-1), axis=-1, keepdims=True)
+    scale = [jnp.exp(m - g_max) for m in local_max]
+    g_sum = sum(sc * su for sc, su in zip(scale, local_sum))
+    out = [e * sc / g_sum for e, sc in zip(local_exp, scale)]
+    return jnp.concatenate(out, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Bitwidth-split LUT path (paper Eq. 4) - the hardware-exact oracle.
+# ---------------------------------------------------------------------------
+
+def lut_tables(scale: float = 1.0 / 16.0) -> tuple[jax.Array, jax.Array]:
+    """Build the two 16-entry FP16 LUTs of the bitwidth-split unit.
+
+    An INT8 score code ``q`` (two's complement, value range [-128, 127])
+    dequantizes to ``x = q * scale``.  Splitting ``q = 16*m + l`` with
+    ``m`` the *signed* MSB nibble (-8..7) and ``l`` the unsigned LSB nibble
+    (0..15) gives Eq. 4:
+
+        exp(q*scale) = exp(16*scale*m) * exp(scale*l)
+
+    MSB-LUT[m+8] = fp16(exp(16*scale*m)), LSB-LUT[l] = fp16(exp(scale*l)).
+    """
+    m = jnp.arange(-8, 8, dtype=jnp.float32)          # signed MSB nibble
+    l = jnp.arange(0, 16, dtype=jnp.float32)          # unsigned LSB nibble
+    msb = jnp.exp(16.0 * scale * m).astype(jnp.float16)
+    lsb = jnp.exp(scale * l).astype(jnp.float16)
+    return msb, lsb
+
+
+def split_int8(q: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Split signed INT8 codes into (MSB LUT index 0..15, LSB nibble 0..15).
+
+    The MSB nibble is the arithmetic-shifted high nibble (-8..7); the LUT
+    is laid out for m = -8..7 so the index is m + 8.
+    """
+    q = q.astype(jnp.int32)
+    m = q >> 4                     # arithmetic shift: -8..7
+    l = q & 0xF                    # 0..15
+    return (m + 8).astype(jnp.int32), l.astype(jnp.int32)
+
+
+def lut_exp_ref(q: jax.Array, scale: float = 1.0 / 16.0) -> jax.Array:
+    """Bit-exact model of the bitwidth-split exponential: fp16 LUTs + fp16 mult.
+
+    This is what the ConSmax hardware unit computes BEFORE the C-multiply.
+    Lossless in the paper's sense: for every one of the 256 INT8 input
+    codes the result is fp16(exp(16sm)) * fp16(exp(sl)) - no
+    piecewise-linear approximation error, only fp16 representation
+    rounding, identical between hardware and this model.
+    """
+    msb_lut, lsb_lut = lut_tables(scale)
+    mi, li = split_int8(q)
+    return (msb_lut[mi] * lsb_lut[li]).astype(jnp.float16)
+
+
+def lut_consmax_ref(
+    q: jax.Array, c: jax.Array, scale: float = 1.0 / 16.0
+) -> jax.Array:
+    """Full ConSmax hardware unit output: LUT-exp then multiply by C (fp16)."""
+    e = lut_exp_ref(q, scale)
+    return (e * c.astype(jnp.float16)).astype(jnp.float16)
+
+
+def quantize_int8(x: jax.Array, scale: float = 1.0 / 16.0) -> jax.Array:
+    """Symmetric INT8 quantizer used to feed the LUT path with real scores."""
+    q = jnp.round(x / scale)
+    return jnp.clip(q, -128, 127).astype(jnp.int8)
+
+
+# INT16 path through the reduction unit (two 8-bit slices, Eq. 4 chained).
+
+def split_int16(q: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Split signed INT16 into (signed high byte -128..127, unsigned low byte)."""
+    q = q.astype(jnp.int32)
+    hi = q >> 8
+    lo = q & 0xFF
+    return hi, lo
+
+
+def lut_exp16_ref(q: jax.Array, scale: float = 1.0 / 256.0) -> jax.Array:
+    """INT16 exponential via the reduction unit: chain two bitwidth-split units.
+
+    exp(q*scale) = exp(256*scale*hi) * exp(scale*lo); each byte-level factor
+    is computed by a nibble-split LUT pair and the reduction unit's
+    multiplier chain merges the partial factors (Eq. 4 chained).
+
+    Precision note: the high-byte factor spans a much wider dynamic range
+    than the low byte (its effective scale is 256x), so its LUT pair is
+    stored in single precision and only the merged per-byte factor is
+    rounded to fp16 - nibble-level fp16 rounding of the high byte would
+    overflow fp16 for in-range inputs. This mirrors the paper's
+    mixed-precision reduction unit, which allocates wider formats where
+    the dynamic range demands them (§IV-A2).
+    """
+    hi, lo = split_int16(q)
+    # high byte: signed nibble split, fp32 LUT entries, merged then rounded
+    hs = 256.0 * scale
+    m = hi >> 4                    # -8..7
+    l_hi = hi & 0xF
+    e_hi = (
+        jnp.exp(16.0 * hs * m.astype(jnp.float32))
+        * jnp.exp(hs * l_hi.astype(jnp.float32))
+    ).astype(jnp.float16)
+    # low byte: unsigned 0..255 - two unsigned nibbles with scale `scale`,
+    # narrow dynamic range -> fp16 tables exactly as the 8-bit unit
+    mi = (lo >> 4).astype(jnp.int32)
+    li = (lo & 0xF).astype(jnp.int32)
+    msb = jnp.exp(16.0 * scale * jnp.arange(0, 16, dtype=jnp.float32)).astype(
+        jnp.float16
+    )
+    lsb = jnp.exp(scale * jnp.arange(0, 16, dtype=jnp.float32)).astype(jnp.float16)
+    e_lo = (msb[mi] * lsb[li]).astype(jnp.float16)
+    return (e_hi * e_lo).astype(jnp.float16)

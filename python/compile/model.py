@@ -1,0 +1,400 @@
+"""Layer-2: the paper's benchmark GPT model in JAX, with pluggable score
+normalizer (softmax | consmax | softermax).
+
+Architecture = the paper's evaluation model (§V-A): a GPT-2-style decoder
+with 6 transformer layers, 6 attention heads, embedding size 384, context
+256, byte-level vocab (256). ConSmax replaces softmax *inside attention
+only*; the LM-head cross-entropy keeps standard softmax, as in the paper.
+
+beta and gamma are learnable per-(layer, head) scalars (§III-A: "the
+combination of beta and gamma varies across different self-attention
+heads"), initialized from the paper's sweep ranges (beta in [0.5, 2.5],
+gamma = 100).
+
+Layers are folded with ``lax.scan`` so the lowered HLO stays compact for
+AOT export; per-layer parameters are stacked along a leading L axis.
+
+Everything here is build-time Python: ``aot.py`` lowers the jitted entry
+points to HLO text once, and the Rust coordinator owns them afterwards.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import consmax as kernels
+from .kernels import ref
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class GPTConfig:
+    """Model + optimizer hyper-parameters (build-time constants)."""
+
+    vocab: int = 256          # byte-level tokenizer
+    ctx: int = 256            # paper: default token length 256
+    n_layer: int = 6          # paper: 6 transformer layers
+    n_head: int = 6           # paper: 6 self-attention heads
+    n_embd: int = 384         # paper: embedding size 384
+    normalizer: str = "consmax"   # softmax | consmax | softermax
+    beta_init: float = 2.5    # paper Fig 6/7: beta in [0.5, 2.5]
+    gamma_init: float = 100.0  # paper: gamma = 100
+    # optimizer (GPT-2-small-style AdamW)
+    lr_max: float = 1e-3
+    lr_min: float = 1e-4
+    warmup_steps: int = 100
+    total_steps: int = 2000
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+    @property
+    def head_dim(self) -> int:
+        assert self.n_embd % self.n_head == 0
+        return self.n_embd // self.n_head
+
+
+TINY = GPTConfig(ctx=64, n_layer=2, n_head=2, n_embd=64,
+                 warmup_steps=10, total_steps=200)
+PAPER = GPTConfig()
+
+
+def config_by_name(name: str, **overrides) -> GPTConfig:
+    base = {"tiny": TINY, "paper": PAPER}[name]
+    return dataclasses.replace(base, **overrides) if overrides else base
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: GPTConfig, key: jax.Array) -> Params:
+    """GPT-2 initialization: N(0, 0.02), residual projections scaled by
+    1/sqrt(2L), LM head tied to the token embedding."""
+    k = iter(jax.random.split(key, 16))
+    d, h, l = cfg.n_embd, cfg.n_head, cfg.n_layer
+    std = 0.02
+    rstd = std / jnp.sqrt(2.0 * l)
+
+    def norm(kk, shape, s=std):
+        return (jax.random.normal(kk, shape) * s).astype(jnp.float32)
+
+    # beta initialized uniformly over the paper's sweep range so different
+    # heads start at different points (Fig 7 traces several starts).
+    beta = jax.random.uniform(
+        next(k), (l, h), minval=0.5, maxval=cfg.beta_init
+    ).astype(jnp.float32)
+    gamma = jnp.full((l, h), cfg.gamma_init, dtype=jnp.float32)
+
+    return {
+        "wte": norm(next(k), (cfg.vocab, d)),
+        "wpe": norm(next(k), (cfg.ctx, d)),
+        # stacked per-layer blocks (leading axis L) for lax.scan
+        "ln1_g": jnp.ones((l, d)), "ln1_b": jnp.zeros((l, d)),
+        "attn_qkv_w": norm(next(k), (l, d, 3 * d)),
+        "attn_qkv_b": jnp.zeros((l, 3 * d)),
+        "attn_proj_w": norm(next(k), (l, d, d), rstd),
+        "attn_proj_b": jnp.zeros((l, d)),
+        "beta": beta,
+        "gamma": gamma,
+        "ln2_g": jnp.ones((l, d)), "ln2_b": jnp.zeros((l, d)),
+        "mlp_fc_w": norm(next(k), (l, d, 4 * d)),
+        "mlp_fc_b": jnp.zeros((l, 4 * d)),
+        "mlp_proj_w": norm(next(k), (l, 4 * d, d), rstd),
+        "mlp_proj_b": jnp.zeros((l, d)),
+        "lnf_g": jnp.ones((d,)), "lnf_b": jnp.zeros((d,)),
+    }
+
+
+def param_order(cfg: GPTConfig) -> list[str]:
+    """Canonical flattening order shared with the Rust coordinator."""
+    del cfg
+    return [
+        "wte", "wpe",
+        "ln1_g", "ln1_b", "attn_qkv_w", "attn_qkv_b",
+        "attn_proj_w", "attn_proj_b", "beta", "gamma",
+        "ln2_g", "ln2_b", "mlp_fc_w", "mlp_fc_b",
+        "mlp_proj_w", "mlp_proj_b", "lnf_g", "lnf_b",
+    ]
+
+
+def flatten_params(cfg: GPTConfig, params: Params) -> list[jax.Array]:
+    return [params[n] for n in param_order(cfg)]
+
+
+def unflatten_params(cfg: GPTConfig, leaves: list[jax.Array]) -> Params:
+    return dict(zip(param_order(cfg), leaves))
+
+
+def decayed_mask(cfg: GPTConfig, params: Params) -> Params:
+    """AdamW weight-decay mask: decay matrices only - never layernorm,
+    biases, embeddings' positional table, or the normalizer params
+    beta/gamma (decaying those would fight the paper's convergence)."""
+    decay = {"attn_qkv_w", "attn_proj_w", "mlp_fc_w", "mlp_proj_w", "wte"}
+    return {n: jnp.float32(1.0 if n in decay else 0.0) * jnp.ones(())
+            for n in params}
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def normalize_scores(
+    cfg: GPTConfig,
+    scores: jax.Array,            # (B, H, T, T), causal mask already applied
+    beta: jax.Array,              # (H,)
+    gamma: jax.Array,             # (H,)
+    *,
+    use_pallas: bool = False,
+    quantized: bool = False,
+) -> jax.Array:
+    """Dispatch to the configured score normalizer.
+
+    ``use_pallas=True`` routes through the L1 Pallas kernels (inference /
+    AOT-export paths); the plain-jnp form is used inside the differentiable
+    training step (interpret-mode pallas_call does not define a VJP).
+    Both are validated against each other in python/tests.
+
+    ``quantized=True`` (consmax only) runs the *deployment* datapath: INT8
+    score quantization + the bitwidth-split LUT unit, exactly as the
+    Fig 4(a) hardware computes it. Masked (-inf) scores saturate to the
+    most negative code, so their probability is forced to exact zero
+    afterwards by the caller's mask gate.
+    """
+    if quantized:
+        if cfg.normalizer != "consmax":
+            raise ValueError("quantized deployment path is consmax-only")
+        from .kernels import quant_attn
+        b = beta[None, :, None, None]
+        g = gamma[None, :, None, None]
+        c = ref.merge_beta_gamma(b, g)
+        finite = jnp.isfinite(scores)
+        q = jnp.where(finite, scores, 0.0)
+        probs = quant_attn.quant_consmax_pallas(q, c).astype(scores.dtype)
+        return jnp.where(finite, probs, 0.0)
+    if cfg.normalizer == "softmax":
+        if use_pallas:
+            return kernels.softmax_pallas(scores)
+        return ref.softmax_ref(scores)
+    if cfg.normalizer == "softermax":
+        if use_pallas:
+            return kernels.softermax_pallas(scores)
+        return ref.softermax_ref(scores)
+    if cfg.normalizer == "consmax":
+        b = beta[None, :, None, None]
+        g = gamma[None, :, None, None]
+        if use_pallas:
+            c = ref.merge_beta_gamma(b, g)
+            return kernels.consmax_pallas(scores, c)
+        return ref.consmax_ref(scores, b, g)
+    raise ValueError(f"unknown normalizer {cfg.normalizer!r}")
+
+
+def attention(cfg: GPTConfig, x, lp, *, use_pallas=False, quantized=False):
+    """One multi-head causal self-attention block (pre-LN)."""
+    bsz, t, d = x.shape
+    h, hd = cfg.n_head, cfg.head_dim
+    xn = layer_norm(x, lp["ln1_g"], lp["ln1_b"])
+    qkv = xn @ lp["attn_qkv_w"] + lp["attn_qkv_b"]
+    q, kk, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(bsz, t, h, hd).transpose(0, 2, 1, 3)
+    kk = kk.reshape(bsz, t, h, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(bsz, t, h, hd).transpose(0, 2, 1, 3)
+
+    scores = (q @ kk.transpose(0, 1, 3, 2)) / jnp.sqrt(jnp.float32(hd))
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    # -inf masking works for every normalizer here: exp(-inf)=0 (consmax),
+    # and softmax/softermax subtract the max first.
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    # consmax: exp(-inf - beta) = 0 exactly, but -inf * 0 NaN-guards below
+    # are unnecessary since exp is applied directly.
+    probs = normalize_scores(cfg, scores, lp["beta"], lp["gamma"],
+                             use_pallas=use_pallas, quantized=quantized)
+    y = (probs @ v).transpose(0, 2, 1, 3).reshape(bsz, t, d)
+    return y @ lp["attn_proj_w"] + lp["attn_proj_b"]
+
+
+def mlp(x, lp):
+    hcur = x @ lp["mlp_fc_w"] + lp["mlp_fc_b"]
+    hcur = jax.nn.gelu(hcur)
+    return hcur @ lp["mlp_proj_w"] + lp["mlp_proj_b"]
+
+
+_LAYER_KEYS = [
+    "ln1_g", "ln1_b", "attn_qkv_w", "attn_qkv_b", "attn_proj_w",
+    "attn_proj_b", "beta", "gamma", "ln2_g", "ln2_b",
+    "mlp_fc_w", "mlp_fc_b", "mlp_proj_w", "mlp_proj_b",
+]
+
+
+def forward(cfg: GPTConfig, params: Params, tokens: jax.Array,
+            *, use_pallas: bool = False, quantized: bool = False) -> jax.Array:
+    """Token ids (B, T) -> logits (B, T, vocab). T must be <= cfg.ctx."""
+    bsz, t = tokens.shape
+    x = params["wte"][tokens] + params["wpe"][:t][None]
+
+    stacked = {k: params[k] for k in _LAYER_KEYS}
+
+    def body(carry, lp):
+        y = carry
+        y = y + attention(cfg, y, lp, use_pallas=use_pallas,
+                          quantized=quantized)
+        yn = layer_norm(y, lp["ln2_g"], lp["ln2_b"])
+        y = y + mlp(yn, lp)
+        return y, None
+
+    if use_pallas or quantized:
+        # pallas_call inside lax.scan lowers fine, but unrolling keeps the
+        # interpret-mode callback count low; layer count is small (<=6).
+        x2 = x
+        for i in range(cfg.n_layer):
+            lp = {k: stacked[k][i] for k in _LAYER_KEYS}
+            x2, _ = body(x2, lp)
+        x = x2
+    else:
+        x, _ = jax.lax.scan(body, x, stacked)
+
+    x = layer_norm(x, params["lnf_g"], params["lnf_b"])
+    return x @ params["wte"].T          # tied LM head
+
+
+def loss_fn(cfg: GPTConfig, params: Params, x: jax.Array, y: jax.Array,
+            *, use_pallas: bool = False, quantized: bool = False) -> jax.Array:
+    """Mean next-token cross-entropy. x, y: (B, T) int32, y = x shifted."""
+    logits = forward(cfg, params, x, use_pallas=use_pallas, quantized=quantized)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer: fused AdamW with warmup-cosine schedule and global-norm clip
+# ---------------------------------------------------------------------------
+
+def lr_schedule(cfg: GPTConfig, step: jax.Array) -> jax.Array:
+    warm = cfg.lr_max * (step + 1.0) / float(cfg.warmup_steps)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps)
+        / float(max(1, cfg.total_steps - cfg.warmup_steps)),
+        0.0, 1.0,
+    )
+    cos = cfg.lr_min + 0.5 * (cfg.lr_max - cfg.lr_min) * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def train_step(cfg: GPTConfig, params: Params, m: Params, v: Params,
+               step: jax.Array, x: jax.Array, y: jax.Array):
+    """One fused fwd+bwd+AdamW update. Everything in one HLO executable so
+    the Rust hot loop makes a single PJRT execute() per step."""
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, x, y))(params)
+
+    # global-norm clip
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads.values()))
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-6))
+    grads = {k: g * clip for k, g in grads.items()}
+
+    lr = lr_schedule(cfg, step)
+    t = step + 1.0
+    bc1 = 1.0 - cfg.beta1 ** t
+    bc2 = 1.0 - cfg.beta2 ** t
+    decay = {"attn_qkv_w", "attn_proj_w", "mlp_fc_w", "mlp_proj_w", "wte"}
+
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        g = grads[k]
+        m2 = cfg.beta1 * m[k] + (1 - cfg.beta1) * g
+        v2 = cfg.beta2 * v[k] + (1 - cfg.beta2) * (g * g)
+        upd = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + cfg.eps)
+        wd = cfg.weight_decay if k in decay else 0.0
+        new_p[k] = params[k] - lr * (upd + wd * params[k])
+        new_m[k] = m2
+        new_v[k] = v2
+    return new_p, new_m, new_v, loss, gnorm
+
+
+def eval_step(cfg: GPTConfig, params: Params, x: jax.Array, y: jax.Array):
+    return loss_fn(cfg, params, x, y)
+
+
+def eval_step_quant(cfg: GPTConfig, params: Params, x: jax.Array, y: jax.Array):
+    """Deployment-form evaluation: the trained float model scored with the
+    INT8 bitwidth-split ConSmax hardware datapath in every attention block
+    (the accuracy a Fig 4(b) accelerator would actually deliver)."""
+    return loss_fn(cfg, params, x, y, quantized=True)
+
+
+# ---------------------------------------------------------------------------
+# KV-cached single-token decode (the serving hot path)
+# ---------------------------------------------------------------------------
+
+def decode_step(cfg: GPTConfig, params: Params,
+                kc: jax.Array, vc: jax.Array,
+                pos: jax.Array, token: jax.Array):
+    """One autoregressive step with a KV cache.
+
+    kc, vc: (L, B, H, ctx, hd) caches; pos: scalar int32 write index;
+    token: (B,) int32. Returns (logits (B, vocab), kc', vc').
+
+    The ConSmax advantage is concrete here: probabilities for the cached
+    positions need no row-wide max/sum, so masking is a pure elementwise
+    multiply by (index <= pos) - the synchronization-free form the
+    accelerator of Fig. 4(b) exploits.
+    """
+    bsz = token.shape[0]
+    d, h, hd = cfg.n_embd, cfg.n_head, cfg.head_dim
+    x = params["wte"][token] + params["wpe"][pos][None]     # (B, d)
+
+    valid = (jnp.arange(cfg.ctx) <= pos)                    # (ctx,)
+
+    new_kc, new_vc = [], []
+    for i in range(cfg.n_layer):
+        lp = {k: params[k][i] for k in _LAYER_KEYS}
+        xn = layer_norm(x, lp["ln1_g"], lp["ln1_b"])
+        qkv = xn @ lp["attn_qkv_w"] + lp["attn_qkv_b"]
+        q, kk, vv = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(bsz, h, hd)
+        kk = kk.reshape(bsz, h, hd)
+        vv = vv.reshape(bsz, h, hd)
+        kci = jax.lax.dynamic_update_slice_in_dim(
+            kc[i], kk[:, :, None, :], pos, axis=2)
+        vci = jax.lax.dynamic_update_slice_in_dim(
+            vc[i], vv[:, :, None, :], pos, axis=2)
+        new_kc.append(kci)
+        new_vc.append(vci)
+
+        scores = jnp.einsum("bhd,bhtd->bht", q, kci) / jnp.sqrt(jnp.float32(hd))
+        if cfg.normalizer == "consmax":
+            c = ref.merge_beta_gamma(lp["beta"], lp["gamma"])  # (H,)
+            probs = c[None, :, None] * jnp.exp(scores) * valid[None, None, :]
+        elif cfg.normalizer == "softermax":
+            smask = jnp.where(valid[None, None, :], scores, -jnp.inf)
+            probs = ref.softermax_ref(smask)
+        else:
+            smask = jnp.where(valid[None, None, :], scores, -jnp.inf)
+            probs = ref.softmax_ref(smask)
+        y = jnp.einsum("bht,bhtd->bhd", probs, vci).reshape(bsz, d)
+        x = x + y @ lp["attn_proj_w"] + lp["attn_proj_b"]
+        xn2 = layer_norm(x, lp["ln2_g"], lp["ln2_b"])
+        x = x + mlp(xn2, lp)
+
+    x = layer_norm(x, params["lnf_g"], params["lnf_b"])
+    logits = x @ params["wte"].T
+    return logits, jnp.stack(new_kc), jnp.stack(new_vc)
+
+
+def init_kv_cache(cfg: GPTConfig, batch: int):
+    shape = (cfg.n_layer, batch, cfg.n_head, cfg.ctx, cfg.head_dim)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)

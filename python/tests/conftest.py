@@ -1,0 +1,14 @@
+import os
+import sys
+
+# Make `compile` importable when pytest runs from python/ or repo root.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import hypothesis
+
+# JAX JIT-compiles on first call, so wall-clock deadlines misfire.
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow],
+)
+hypothesis.settings.load_profile("ci")

@@ -1,0 +1,211 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and value ranges; fixed cases pin the exact
+configurations the AOT artifacts use.
+"""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import consmax as k
+from compile.kernels import lut as lutk
+from compile.kernels import ref
+
+def rnd(shape, seed=0, lo=-4.0, hi=4.0):
+    r = np.random.default_rng(seed)
+    return jnp.asarray(r.uniform(lo, hi, shape).astype(np.float32))
+
+
+shapes = st.sampled_from(
+    [(1, 8), (3, 17), (2, 2, 64), (4, 6, 16, 16), (128, 256), (5, 300)]
+)
+
+
+class TestConsmaxKernel:
+    @given(shape=shapes, seed=st.integers(0, 10_000))
+    def test_matches_ref(self, shape, seed):
+        s = rnd(shape, seed)
+        beta, gamma = 1.5, 100.0
+        c = ref.merge_beta_gamma(jnp.float32(beta), jnp.float32(gamma))
+        got = k.consmax_pallas(s, c)
+        want = ref.consmax_ref(s, beta, gamma)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-7)
+
+    @given(seed=st.integers(0, 10_000),
+           beta=st.floats(0.25, 4.0), gamma=st.floats(1.0, 500.0))
+    def test_beta_gamma_sweep(self, seed, beta, gamma):
+        s = rnd((4, 32), seed)
+        c = ref.merge_beta_gamma(jnp.float32(beta), jnp.float32(gamma))
+        np.testing.assert_allclose(
+            k.consmax_pallas(s, c), ref.consmax_ref(s, beta, gamma),
+            rtol=1e-5, atol=1e-7)
+
+    def test_per_head_constants(self):
+        """Per-head C broadcasting - the layout attention actually uses."""
+        s = rnd((2, 6, 16, 16), 7)
+        beta = jnp.linspace(0.5, 2.5, 6)[None, :, None, None]
+        gamma = jnp.full((1, 6, 1, 1), 100.0)
+        c = ref.merge_beta_gamma(beta, gamma)
+        got = k.consmax_pallas(s, jnp.broadcast_to(c, s.shape))
+        np.testing.assert_allclose(
+            got, ref.consmax_ref(s, beta, gamma), rtol=1e-5, atol=1e-7)
+
+    def test_training_vs_inference_form(self):
+        """Eq. 2 (train) == Eq. 3 (merged-C inference) algebraically."""
+        s = rnd((8, 64), 3)
+        beta, gamma = jnp.float32(1.7), jnp.float32(88.0)
+        train = ref.consmax_ref(s, beta, gamma)
+        infer = ref.consmax_inference_ref(s, ref.merge_beta_gamma(beta, gamma))
+        np.testing.assert_allclose(train, infer, rtol=1e-6)
+
+    def test_masked_scores_give_zero_probability(self):
+        """-inf masking must yield exactly 0 (causal mask correctness)."""
+        s = jnp.array([[0.5, -jnp.inf, 1.0, -jnp.inf]], jnp.float32)
+        out = k.consmax_pallas(s, jnp.float32(0.01))
+        assert out[0, 1] == 0.0 and out[0, 3] == 0.0
+        assert out[0, 0] > 0.0 and out[0, 2] > 0.0
+
+    def test_no_reduction_property(self):
+        """THE ConSmax property: each element depends only on itself -
+        perturbing one score never changes any other output."""
+        s = rnd((2, 32), 11)
+        c = jnp.float32(0.02)
+        base = np.asarray(k.consmax_pallas(s, c))
+        s2 = s.at[0, 5].set(99.0)
+        pert = np.asarray(k.consmax_pallas(s2, c))
+        mask = np.ones_like(base, bool)
+        mask[0, 5] = False
+        np.testing.assert_array_equal(base[mask], pert[mask])
+
+    def test_softmax_lacks_that_property(self):
+        """Sanity check of the test above: softmax outputs DO couple."""
+        s = rnd((2, 32), 11)
+        base = np.asarray(k.softmax_pallas(s))
+        pert = np.asarray(k.softmax_pallas(s.at[0, 5].set(99.0)))
+        assert not np.allclose(base[0, :5], pert[0, :5])
+
+    @pytest.mark.parametrize("rb,sb", [(8, 8), (32, 16), (128, 128)])
+    def test_block_shape_invariance(self, rb, sb):
+        """Output must not depend on the tiling choice."""
+        s = rnd((100, 200), 5)
+        c = jnp.float32(0.015)
+        a = k.consmax_pallas(s, c, row_block=rb, seq_block=sb)
+        b = ref.consmax_inference_ref(s, c)
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-7)
+
+
+class TestSoftmaxBaselines:
+    @given(shape=shapes, seed=st.integers(0, 10_000))
+    def test_softmax_matches_ref(self, shape, seed):
+        s = rnd(shape, seed)
+        np.testing.assert_allclose(
+            k.softmax_pallas(s), ref.softmax_ref(s), rtol=1e-5, atol=1e-7)
+
+    @given(shape=shapes, seed=st.integers(0, 10_000))
+    def test_softermax_matches_ref(self, shape, seed):
+        s = rnd(shape, seed)
+        np.testing.assert_allclose(
+            k.softermax_pallas(s), ref.softermax_ref(s), rtol=1e-5, atol=1e-7)
+
+    @given(seed=st.integers(0, 10_000), n_chunks=st.sampled_from([1, 2, 4, 8]))
+    def test_partial_softmax_is_exact(self, seed, n_chunks):
+        """Fig 3(b): partial softmax + sync == monolithic softmax."""
+        s = rnd((3, 64), seed)
+        np.testing.assert_allclose(
+            ref.partial_softmax_ref(s, n_chunks), ref.softmax_ref(s),
+            rtol=1e-5, atol=1e-7)
+
+    def test_softmax_rows_sum_to_one(self):
+        s = rnd((16, 33), 2, -10, 10)
+        out = np.asarray(k.softmax_pallas(s))
+        np.testing.assert_allclose(out.sum(-1), 1.0, rtol=1e-5)
+
+    def test_consmax_rows_need_not_sum_to_one(self):
+        """The paper's relaxation: the probability vector is NOT unit."""
+        s = rnd((4, 64), 9)
+        out = np.asarray(k.consmax_pallas(s, jnp.float32(0.01)))
+        assert not np.allclose(out.sum(-1), 1.0)
+
+    def test_softmax_invariant_to_shift(self):
+        s = rnd((4, 32), 1)
+        np.testing.assert_allclose(
+            ref.softmax_ref(s), ref.softmax_ref(s + 123.0), rtol=1e-4)
+
+    def test_softmax_extreme_values_stable(self):
+        s = jnp.array([[1e4, -1e4, 0.0, 5e3]], jnp.float32)
+        out = np.asarray(k.softmax_pallas(s))
+        assert np.isfinite(out).all()
+
+
+class TestFusedConsmaxPV:
+    @given(seed=st.integers(0, 1000),
+           tq=st.sampled_from([16, 50, 128]),
+           tk=st.sampled_from([32, 96]),
+           d=st.sampled_from([8, 64]))
+    def test_matches_two_step(self, seed, tq, tk, d):
+        r = np.random.default_rng(seed)
+        s = jnp.asarray(r.normal(size=(tq, tk)).astype(np.float32))
+        v = jnp.asarray(r.normal(size=(tk, d)).astype(np.float32))
+        c = jnp.float32(0.02)
+        got = k.consmax_pv_pallas(s, c, v, row_block=16, seq_block=16)
+        want = ref.consmax_inference_ref(s, c) @ v
+        np.testing.assert_allclose(got, want, rtol=5e-4, atol=1e-4)
+
+    def test_causal_masked_input(self):
+        """-inf masked scores contribute exactly zero to the PV output."""
+        t, d = 32, 16
+        r = np.random.default_rng(0)
+        s = jnp.asarray(r.normal(size=(t, t)).astype(np.float32))
+        mask = jnp.tril(jnp.ones((t, t), bool))
+        sm = jnp.where(mask, s, -jnp.inf)
+        v = jnp.asarray(r.normal(size=(t, d)).astype(np.float32))
+        c = jnp.float32(0.02)
+        got = k.consmax_pv_pallas(sm, c, v, row_block=16, seq_block=16)
+        p = np.asarray(ref.consmax_inference_ref(sm, c))
+        assert np.isfinite(got).all()
+        np.testing.assert_allclose(got, p @ np.asarray(v),
+                                   rtol=5e-4, atol=1e-4)
+
+
+class TestDtypes:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_consmax_dtypes(self, dtype):
+        s = rnd((8, 32), 0).astype(dtype)
+        c = jnp.asarray(0.02, dtype)
+        got = k.consmax_pallas(s, c)
+        assert got.dtype == dtype
+        want = ref.consmax_inference_ref(
+            s.astype(jnp.float32), jnp.float32(0.02))
+        tol = 1e-5 if dtype == jnp.float32 else 3e-2
+        np.testing.assert_allclose(got.astype(jnp.float32), want,
+                                   rtol=tol, atol=tol)
+
+
+class TestGradients:
+    def test_consmax_ref_grad(self):
+        """beta and gamma must receive gradients (they are learnable)."""
+        s = rnd((4, 16), 0)
+
+        def f(beta, gamma):
+            return jnp.sum(ref.consmax_ref(s, beta, gamma) ** 2)
+
+        gb, gg = jax.grad(f, argnums=(0, 1))(jnp.float32(1.5),
+                                             jnp.float32(100.0))
+        assert np.isfinite(gb) and np.isfinite(gg)
+        assert gb != 0.0 and gg != 0.0
+
+    def test_consmax_grad_matches_finite_difference(self):
+        s = rnd((2, 8), 1)
+
+        def f(beta):
+            return jnp.sum(ref.consmax_ref(s, beta, jnp.float32(50.0)))
+
+        b0 = jnp.float32(1.2)
+        g = jax.grad(f)(b0)
+        eps = 1e-3
+        fd = (f(b0 + eps) - f(b0 - eps)) / (2 * eps)
+        np.testing.assert_allclose(g, fd, rtol=1e-2)

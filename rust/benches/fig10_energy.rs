@@ -1,0 +1,49 @@
+//! Bench: regenerate **Fig 10** — energy-per-op vs frequency U-curves
+//! with the optimum-energy operating points, per design, both nodes and
+//! flows.
+//!
+//! Run: `cargo bench --bench fig10_energy`
+
+use consmax::hw::{fig10, EdaFlow, TechNode};
+use consmax::util::bench::{print_table, Bencher};
+
+fn main() {
+    for (node, flow) in [
+        (TechNode::Fin16, EdaFlow::Proprietary),
+        (TechNode::Fin16, EdaFlow::OpenSource),
+        (TechNode::Sky130, EdaFlow::Proprietary),
+    ] {
+        let series = fig10(node, flow, 256, 10);
+        let mut rows = Vec::new();
+        for (name, sweep, opt) in &series {
+            for p in sweep {
+                rows.push(vec![
+                    name.clone(),
+                    format!("{:.0}", p.freq_mhz),
+                    format!("{:.2}", p.voltage),
+                    format!("{:.3}", p.energy_pj_per_elem),
+                ]);
+            }
+            rows.push(vec![
+                format!("{name} OPTIMUM"),
+                format!("{:.0}", opt.freq_mhz),
+                format!("{:.2}", opt.voltage),
+                format!("{:.3}", opt.energy_pj_per_elem),
+            ]);
+        }
+        print_table(
+            &format!(
+                "Fig 10 @ {node:?}/{flow:?} (paper 16nm optima: ConSmax 0.2 pJ \
+                 @666 MHz, Softermax 0.7 @666, Softmax 1.5 @714)"
+            ),
+            &["design", "MHz", "V", "pJ/elem"],
+            &rows,
+        );
+    }
+
+    println!();
+    let mut b = Bencher::new();
+    b.bench("fig10 sweep (3 designs x 200 points)", || {
+        fig10(TechNode::Fin16, EdaFlow::Proprietary, 256, 200)
+    });
+}

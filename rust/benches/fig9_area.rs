@@ -1,0 +1,52 @@
+//! Bench: regenerate **Fig 9** — cell-area breakdown per design under
+//! both EDA flows, plus the Fmax comparison, at 16nm and 130nm.
+//!
+//! Run: `cargo bench --bench fig9_area`
+
+use consmax::hw::{fig9, TechNode};
+use consmax::util::bench::{print_table, Bencher};
+
+fn main() {
+    for node in [TechNode::Fin16, TechNode::Sky130] {
+        let entries = fig9(node, 256);
+        let mut rows = Vec::new();
+        for e in &entries {
+            let total: f64 = e.breakdown_um2.iter().map(|(_, v)| v).sum();
+            for (class, um2) in &e.breakdown_um2 {
+                rows.push(vec![
+                    e.design.clone(),
+                    e.flow.clone(),
+                    class.to_string(),
+                    format!("{um2:.0}"),
+                    format!("{:.1}%", um2 / total * 100.0),
+                ]);
+            }
+        }
+        print_table(
+            &format!("Fig 9(a/b): area breakdown @ {node:?}"),
+            &["design", "flow", "class", "area um2", "share"],
+            &rows,
+        );
+
+        let fmax_rows: Vec<Vec<String>> = entries
+            .iter()
+            .map(|e| {
+                vec![
+                    e.design.clone(),
+                    e.flow.clone(),
+                    format!("{:.0}", e.fmax_mhz),
+                ]
+            })
+            .collect();
+        print_table(
+            &format!("Fig 9(c): Fmax by EDA flow @ {node:?} \
+                      (paper 16nm: ConSmax 1250/2000, Softermax 1111/1000, Softmax 909/500)"),
+            &["design", "flow", "Fmax MHz"],
+            &fmax_rows,
+        );
+    }
+
+    println!();
+    let mut b = Bencher::new();
+    b.bench("fig9(16nm, both flows)", || fig9(TechNode::Fin16, 256));
+}

@@ -1,0 +1,151 @@
+//! Bench: the L3 hot paths — PJRT kernel dispatch (ConSmax vs Softmax vs
+//! the LUT path), KV-cached decode step, literal marshalling, and the
+//! bit-exact software LUT. This is the §Perf workhorse.
+//!
+//! Run: `cargo bench --bench runtime_hotpath` (needs `make artifacts`)
+
+use consmax::coordinator::ParamStore;
+use consmax::quant::{merge_beta_gamma, BitSplitLut, Int8Quantizer};
+use consmax::runtime::{DType, Engine, HostTensor};
+use consmax::util::bench::Bencher;
+use consmax::util::rng::Pcg32;
+
+fn main() {
+    let Ok(engine) = Engine::new("artifacts") else {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    };
+    let mut b = Bencher::new();
+    let mut rng = Pcg32::seeded(0);
+
+    // ---- normalizer kernels over a (64, 256) score block ---------------
+    let n = 64 * 256;
+    let scores: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let c = vec![(-1.5f32).exp() / 100.0; n];
+    let s_t = HostTensor::from_f32(&scores, &[64, 256]);
+    let c_t = HostTensor::from_f32(&c, &[64, 256]);
+
+    // warm the executable cache outside the timed region
+    engine.execute("op_consmax", &[s_t.clone(), c_t.clone()]).unwrap();
+    engine.execute("op_softmax", std::slice::from_ref(&s_t)).unwrap();
+    engine.execute("op_softermax", std::slice::from_ref(&s_t)).unwrap();
+
+    let st = b.bench("op_consmax (64x256) via PJRT", || {
+        engine.execute("op_consmax", &[s_t.clone(), c_t.clone()]).unwrap()
+    });
+    println!("    -> {:.1} Melem/s", st.throughput(n as f64) / 1e6);
+    b.bench("op_softmax (64x256) via PJRT", || {
+        engine.execute("op_softmax", std::slice::from_ref(&s_t)).unwrap()
+    });
+    b.bench("op_softermax (64x256) via PJRT", || {
+        engine.execute("op_softermax", std::slice::from_ref(&s_t)).unwrap()
+    });
+
+    // ---- INT8 LUT path: AOT kernel vs native Rust model -----------------
+    let qs: Vec<i8> = (0..n).map(|_| (rng.next_u32() & 0xFF) as u8 as i8).collect();
+    let q_t = HostTensor::from_i8(&qs, &[64, 256]);
+    engine.execute("op_lut_consmax", &[q_t.clone(), c_t.clone()]).unwrap();
+    b.bench("op_lut_consmax (64x256) via PJRT", || {
+        engine.execute("op_lut_consmax", &[q_t.clone(), c_t.clone()]).unwrap()
+    });
+    let lut = BitSplitLut::paper();
+    let chw = merge_beta_gamma(1.5, 100.0);
+    let st = b.bench("BitSplitLut::consmax 16k elems (native)", || {
+        lut.consmax_slice(&qs, chw)
+    });
+    println!("    -> {:.1} Melem/s", st.throughput(n as f64) / 1e6);
+    let quant = Int8Quantizer::paper();
+    b.bench("Int8Quantizer 16k elems", || quant.quantize_slice(&scores));
+
+    // ---- fused consmax+PV tail ------------------------------------------
+    let s256: Vec<f32> = (0..256 * 256).map(|_| rng.normal() as f32).collect();
+    let c256 = vec![0.01f32; 256 * 256];
+    let v: Vec<f32> = (0..256 * 64).map(|_| rng.normal() as f32).collect();
+    let spv = [
+        HostTensor::from_f32(&s256, &[256, 256]),
+        HostTensor::from_f32(&c256, &[256, 256]),
+        HostTensor::from_f32(&v, &[256, 64]),
+    ];
+    engine.execute("op_consmax_pv", &spv).unwrap();
+    b.bench("op_consmax_pv (256x256 @ 64) via PJRT", || {
+        engine.execute("op_consmax_pv", &spv).unwrap()
+    });
+
+    // ---- marshalling ------------------------------------------------------
+    b.bench("HostTensor->Literal (64KiB f32)", || s_t.to_literal().unwrap());
+    let lit = s_t.to_literal().unwrap();
+    b.bench("Literal->HostTensor (64KiB f32)", || {
+        HostTensor::from_literal(&lit).unwrap()
+    });
+
+    // ---- decode step (tiny model, the serving inner loop) ----------------
+    if let Ok(cfg) = engine.manifest.config("tiny_consmax") {
+        let cfg = cfg.clone();
+        let store = ParamStore::init(&cfg, 0).unwrap();
+        let params: Vec<xla::Literal> =
+            store.params.iter().map(|t| t.to_literal().unwrap()).collect();
+        let shape = vec![cfg.n_layer, 1, cfg.n_head, cfg.ctx, cfg.head_dim()];
+        let kc = HostTensor::zeros(DType::F32, &shape).to_literal().unwrap();
+        let vc = HostTensor::zeros(DType::F32, &shape).to_literal().unwrap();
+        let pos = HostTensor::scalar_i32(0).to_literal().unwrap();
+        let tok = HostTensor::from_i32(&[65], &[1]).to_literal().unwrap();
+        let entry = "tiny_consmax_decode_b1";
+        let exe = engine.load(entry).unwrap();
+        let inputs: Vec<&xla::Literal> =
+            params.iter().chain([&kc, &vc, &pos, &tok]).collect();
+        engine.execute_literal_refs(entry, &exe, &inputs).unwrap();
+        let st = b.bench("decode_b1 step (per-call param upload)", || {
+            engine.execute_literal_refs(entry, &exe, &inputs).unwrap()
+        });
+        println!(
+            "    -> {:.0} tok/s single-stream ceiling",
+            1e9 / st.median_ns
+        );
+        // serving path: params uploaded once, reused as device buffers
+        let pbufs: Vec<xla::PjRtBuffer> =
+            store.params.iter().map(|t| engine.upload(t).unwrap()).collect();
+        let kcb = engine.upload_literal(&kc).unwrap();
+        let vcb = engine.upload_literal(&vc).unwrap();
+        let posb = engine.upload_literal(&pos).unwrap();
+        let tokb = engine.upload_literal(&tok).unwrap();
+        let binputs: Vec<&xla::PjRtBuffer> =
+            pbufs.iter().chain([&kcb, &vcb, &posb, &tokb]).collect();
+        engine.execute_buffer_refs(entry, &exe, &binputs).unwrap();
+        let st = b.bench("decode_b1 step (cached param buffers)", || {
+            engine.execute_buffer_refs(entry, &exe, &binputs).unwrap()
+        });
+        println!(
+            "    -> {:.0} tok/s single-stream ceiling",
+            1e9 / st.median_ns
+        );
+    }
+
+    // ---- end-to-end train step (tiny) -------------------------------------
+    if let Ok(cfg) = engine.manifest.config("tiny_consmax") {
+        let cfg = cfg.clone();
+        let store = ParamStore::init(&cfg, 0).unwrap();
+        let mut state: Vec<xla::Literal> = Vec::new();
+        for group in [&store.params, &store.m, &store.v] {
+            for t in group {
+                state.push(t.to_literal().unwrap());
+            }
+        }
+        let x = HostTensor::from_i32(
+            &vec![1; cfg.train_batch * cfg.ctx],
+            &[cfg.train_batch, cfg.ctx],
+        )
+        .to_literal()
+        .unwrap();
+        let stp = HostTensor::scalar_f32(0.0).to_literal().unwrap();
+        let entry = "tiny_consmax_train_step";
+        let exe = engine.load(entry).unwrap();
+        let inputs: Vec<&xla::Literal> =
+            state.iter().chain([&stp, &x, &x]).collect();
+        engine.execute_literal_refs(entry, &exe, &inputs).unwrap();
+        let mut bc = Bencher::coarse();
+        let st = bc.bench("train_step (tiny, fused fwd+bwd+AdamW)", || {
+            engine.execute_literal_refs(entry, &exe, &inputs).unwrap()
+        });
+        println!("    -> {:.1} steps/s", 1e9 / st.median_ns);
+    }
+}

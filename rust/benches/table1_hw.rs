@@ -1,0 +1,64 @@
+//! Bench: regenerate **Table I** (the paper's headline hardware
+//! comparison) under both EDA flows and time the synthesis estimator.
+//! The printed tables ARE the reproduced artifact; timings confirm the
+//! estimator is cheap enough to sweep.
+//!
+//! Run: `cargo bench --bench table1_hw`
+
+use consmax::hw::report::paper_table1_reference;
+use consmax::hw::{savings, table1, EdaFlow};
+use consmax::util::bench::{print_table, Bencher};
+
+fn main() {
+    for flow in [EdaFlow::Proprietary, EdaFlow::OpenSource] {
+        let rows = table1(flow, 256);
+        let refs = paper_table1_reference();
+        let table: Vec<Vec<String>> = rows
+            .iter()
+            .map(|r| {
+                let node = if r.corner.starts_with("16nm") { "16nm" } else { "130nm" };
+                let p = refs
+                    .iter()
+                    .find(|(d, n, _)| *d == r.design && *n == node)
+                    .map(|(_, _, v)| *v)
+                    .unwrap_or([f64::NAN; 4]);
+                vec![
+                    r.design.clone(),
+                    r.corner.clone(),
+                    format!("{:.0} ({:.0})", r.fmax_mhz, p[0]),
+                    format!("{:.5} ({})", r.area_mm2, p[1]),
+                    format!("{:.2} ({})", r.power_mw, p[2]),
+                    format!("{:.2} ({})", r.opt_energy_pj, p[3]),
+                ]
+            })
+            .collect();
+        print_table(
+            &format!("Table I, {flow:?} flow — measured (paper reference)"),
+            &["design", "corner", "Fmax MHz", "area mm2", "power mW", "opt E pJ"],
+            &table,
+        );
+        let s: Vec<Vec<String>> = savings(&rows)
+            .iter()
+            .map(|s| {
+                vec![
+                    s.corner.clone(),
+                    s.vs.clone(),
+                    format!("{:.2}x", s.power_ratio),
+                    format!("{:.2}x", s.area_ratio),
+                ]
+            })
+            .collect();
+        print_table(
+            "savings (paper: 3.35x/2.75x vs Softermax @16nm; 3.15x/4.14x open flow)",
+            &["corner", "vs", "power", "area"],
+            &s,
+        );
+    }
+
+    println!();
+    let mut b = Bencher::new();
+    b.bench("table1(both nodes, 3 designs)", || {
+        table1(EdaFlow::Proprietary, 256)
+    });
+    b.bench("table1 @ seq 8192", || table1(EdaFlow::Proprietary, 8192));
+}

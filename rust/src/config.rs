@@ -1,0 +1,306 @@
+//! Run configuration: a typed view over the artifact manifest plus the
+//! coordinator's own knobs. Everything the Rust side needs to know about
+//! a model variant comes from `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`), keeping the two languages in lock-step.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One (config, normalizer) pair from the manifest, e.g. `paper_consmax`.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub key: String,
+    pub vocab: usize,
+    pub ctx: usize,
+    pub n_layer: usize,
+    pub n_head: usize,
+    pub n_embd: usize,
+    pub normalizer: String,
+    pub beta_init: f64,
+    pub gamma_init: f64,
+    pub total_steps: usize,
+    pub train_batch: usize,
+    /// Canonical parameter flattening order shared with python.
+    pub param_order: Vec<String>,
+    /// name -> shape.
+    pub param_shapes: BTreeMap<String, Vec<usize>>,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.n_embd / self.n_head
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.param_shapes
+            .values()
+            .map(|s| s.iter().product::<usize>())
+            .sum()
+    }
+
+    pub fn shape_of(&self, name: &str) -> Result<&[usize]> {
+        self.param_shapes
+            .get(name)
+            .map(Vec::as_slice)
+            .with_context(|| format!("unknown param {name}"))
+    }
+
+    fn from_json(key: &str, v: &Json) -> Result<ModelConfig> {
+        let req_usize = |k: &str| -> Result<usize> {
+            v.get(k)
+                .as_usize()
+                .with_context(|| format!("config {key}: missing/invalid {k}"))
+        };
+        let mut param_shapes = BTreeMap::new();
+        let shapes = v
+            .get("param_shapes")
+            .as_obj()
+            .context("missing param_shapes")?;
+        for (name, shape) in shapes {
+            param_shapes.insert(
+                name.clone(),
+                shape
+                    .to_usize_vec()
+                    .with_context(|| format!("bad shape for {name}"))?,
+            );
+        }
+        Ok(ModelConfig {
+            key: key.to_string(),
+            vocab: req_usize("vocab")?,
+            ctx: req_usize("ctx")?,
+            n_layer: req_usize("n_layer")?,
+            n_head: req_usize("n_head")?,
+            n_embd: req_usize("n_embd")?,
+            normalizer: v
+                .get("normalizer")
+                .as_str()
+                .context("missing normalizer")?
+                .to_string(),
+            beta_init: v.get("beta_init").as_f64().unwrap_or(2.5),
+            gamma_init: v.get("gamma_init").as_f64().unwrap_or(100.0),
+            total_steps: v.get("total_steps").as_usize().unwrap_or(2000),
+            train_batch: req_usize("train_batch")?,
+            param_order: v
+                .get("param_order")
+                .as_arr()
+                .context("missing param_order")?
+                .iter()
+                .map(|s| s.as_str().unwrap_or_default().to_string())
+                .collect(),
+            param_shapes,
+        })
+    }
+}
+
+/// I/O spec of one AOT entry point.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            shape: v.get("shape").to_usize_vec().context("bad shape")?,
+            dtype: v
+                .get("dtype")
+                .as_str()
+                .context("bad dtype")?
+                .to_string(),
+        })
+    }
+}
+
+/// One AOT artifact (an HLO-text executable-to-be).
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub doc: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: BTreeMap<String, EntrySpec>,
+    pub configs: BTreeMap<String, ModelConfig>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = Json::parse(&text).context("parsing manifest.json")?;
+        if v.get("format").as_str() != Some("hlo-text-v1") {
+            bail!("unsupported manifest format {:?}", v.get("format"));
+        }
+
+        let mut entries = BTreeMap::new();
+        for (name, e) in v.get("entries").as_obj().context("entries")? {
+            entries.insert(
+                name.clone(),
+                EntrySpec {
+                    name: name.clone(),
+                    file: dir.join(e.get("file").as_str().context("file")?),
+                    doc: e.get("doc").as_str().unwrap_or("").to_string(),
+                    inputs: e
+                        .get("inputs")
+                        .as_arr()
+                        .context("inputs")?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<_>>()?,
+                    outputs: e
+                        .get("outputs")
+                        .as_arr()
+                        .context("outputs")?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<_>>()?,
+                },
+            );
+        }
+
+        let mut configs = BTreeMap::new();
+        for (key, c) in v.get("configs").as_obj().context("configs")? {
+            configs.insert(key.clone(), ModelConfig::from_json(key, c)?);
+        }
+        Ok(Manifest { dir, entries, configs })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entries
+            .get(name)
+            .with_context(|| format!("no artifact entry {name:?} (run `make artifacts`)"))
+    }
+
+    pub fn config(&self, key: &str) -> Result<&ModelConfig> {
+        self.configs
+            .get(key)
+            .with_context(|| format!("no model config {key:?}"))
+    }
+}
+
+/// Coordinator-level run configuration (CLI-facing).
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub artifacts_dir: PathBuf,
+    pub config: String,
+    pub normalizer: String,
+    pub steps: usize,
+    pub seed: u64,
+    pub log_every: usize,
+    pub eval_every: usize,
+    pub out_dir: PathBuf,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            config: "tiny".into(),
+            normalizer: "consmax".into(),
+            steps: 200,
+            seed: 0,
+            log_every: 10,
+            eval_every: 50,
+            out_dir: PathBuf::from("runs"),
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn model_key(&self) -> String {
+        format!("{}_{}", self.config, self.normalizer)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn minimal_manifest_json() -> String {
+        r#"{
+          "format": "hlo-text-v1",
+          "entries": {
+            "tiny_consmax_eval_step": {
+              "file": "tiny_consmax_eval_step.hlo.txt",
+              "doc": "d",
+              "inputs": [{"shape": [2, 3], "dtype": "float32"}],
+              "outputs": [{"shape": [], "dtype": "float32"}]
+            }
+          },
+          "configs": {
+            "tiny_consmax": {
+              "vocab": 256, "ctx": 64, "n_layer": 2, "n_head": 2,
+              "n_embd": 64, "normalizer": "consmax", "beta_init": 2.5,
+              "gamma_init": 100.0, "total_steps": 200, "train_batch": 4,
+              "param_order": ["wte", "beta"],
+              "param_shapes": {"wte": [256, 64], "beta": [2, 2]}
+            }
+          }
+        }"#
+        .to_string()
+    }
+
+    fn write_manifest(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), minimal_manifest_json())
+            .unwrap();
+    }
+
+    #[test]
+    fn loads_minimal_manifest() {
+        let dir = std::env::temp_dir().join("consmax_test_manifest_1");
+        write_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        let c = m.config("tiny_consmax").unwrap();
+        assert_eq!(c.n_embd, 64);
+        assert_eq!(c.head_dim(), 32);
+        assert_eq!(c.param_count(), 256 * 64 + 4);
+        let e = m.entry("tiny_consmax_eval_step").unwrap();
+        assert_eq!(e.inputs[0].elems(), 6);
+        assert_eq!(e.outputs[0].shape, Vec::<usize>::new());
+    }
+
+    #[test]
+    fn missing_entry_errors_helpfully() {
+        let dir = std::env::temp_dir().join("consmax_test_manifest_2");
+        write_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        let err = m.entry("nope").unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn rejects_unknown_format() {
+        let dir = std::env::temp_dir().join("consmax_test_manifest_3");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"format": "other", "entries": {}, "configs": {}}"#,
+        )
+        .unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn run_config_key() {
+        let rc = RunConfig::default();
+        assert_eq!(rc.model_key(), "tiny_consmax");
+    }
+}

@@ -1,0 +1,23 @@
+//! Layer-3 coordinator: everything that runs at request time.
+//!
+//! * [`params`] — parameter/optimizer state + checkpoints.
+//! * [`trainer`] — the training loop over the AOT `train_step` (Fig 6/7).
+//! * [`sweep`] — β/γ initialization grid search (Fig 8).
+//! * [`server`] — batched KV-cached generation service.
+//!
+//! The paper's contribution lives at L1/L2 (the normalizer) and in the
+//! `hw`/`sim` substrates; this layer is the thin-but-real driver the
+//! system prompt's architecture calls for: CLI, process lifecycle,
+//! training/serving loops, metrics.
+
+pub mod params;
+pub mod report;
+pub mod server;
+pub mod sweep;
+pub mod trainer;
+
+pub use params::ParamStore;
+pub use report::{report_compare, report_run};
+pub use server::{GenRequest, GenResponse, Generator, Server};
+pub use sweep::{best_point, sweep_init, SweepOptions, SweepPoint};
+pub use trainer::{TrainOptions, TrainReport, Trainer};

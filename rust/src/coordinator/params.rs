@@ -1,0 +1,306 @@
+//! Parameter store: owns the model parameters and optimizer state as
+//! host tensors, initializes them with the same scheme as
+//! `model.init_params` (GPT-2 init, β ~ U[0.5, β_init], γ = γ_init), and
+//! persists checkpoints.
+//!
+//! Checkpoint format: `<name>.ckpt` = JSON header line (shapes, step,
+//! config key) + '\0' + concatenated little-endian f32 payloads in
+//! `param_order` order, params then m then v. Self-describing and
+//! mmap-friendly.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ModelConfig;
+use crate::runtime::HostTensor;
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+
+/// Model parameters + AdamW moments, in canonical flattening order.
+#[derive(Debug, Clone)]
+pub struct ParamStore {
+    pub config_key: String,
+    pub order: Vec<String>,
+    pub params: Vec<HostTensor>,
+    pub m: Vec<HostTensor>,
+    pub v: Vec<HostTensor>,
+    pub step: u64,
+}
+
+impl ParamStore {
+    /// Initialize like python's `init_params` (same distributions; the
+    /// exact draws differ, which is fine — each language trains from its
+    /// own seed and the claims are about convergence behaviour).
+    pub fn init(cfg: &ModelConfig, seed: u64) -> Result<ParamStore> {
+        let mut rng = Pcg32::seeded(seed);
+        let std = 0.02f32;
+        let rstd = std / (2.0 * cfg.n_layer as f32).sqrt();
+
+        let mut params = Vec::with_capacity(cfg.param_order.len());
+        for name in &cfg.param_order {
+            let shape = cfg.shape_of(name)?.to_vec();
+            let n: usize = shape.iter().product();
+            let vals: Vec<f32> = match name.as_str() {
+                "wte" | "wpe" | "attn_qkv_w" | "mlp_fc_w" => {
+                    rng.normal_vec_f32(n, 0.0, std)
+                }
+                // residual projections scaled down (GPT-2)
+                "attn_proj_w" | "mlp_proj_w" => rng.normal_vec_f32(n, 0.0, rstd),
+                // layernorm gains
+                "ln1_g" | "ln2_g" | "lnf_g" => vec![1.0; n],
+                // biases / layernorm shifts
+                "ln1_b" | "ln2_b" | "lnf_b" | "attn_qkv_b" | "attn_proj_b"
+                | "mlp_fc_b" | "mlp_proj_b" => vec![0.0; n],
+                "beta" => (0..n)
+                    .map(|_| rng.range_f64(0.5, cfg.beta_init.max(0.5001)) as f32)
+                    .collect(),
+                "gamma" => vec![cfg.gamma_init as f32; n],
+                other => bail!("no init rule for param {other:?}"),
+            };
+            params.push(HostTensor::from_f32(&vals, &shape));
+        }
+        let zeros: Vec<HostTensor> = params
+            .iter()
+            .map(|p| HostTensor::zeros(p.dtype, &p.shape))
+            .collect();
+        Ok(ParamStore {
+            config_key: cfg.key.clone(),
+            order: cfg.param_order.clone(),
+            params,
+            m: zeros.clone(),
+            v: zeros,
+            step: 0,
+        })
+    }
+
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.order.iter().position(|n| n == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&HostTensor> {
+        self.index_of(name).map(|i| &self.params[i])
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.params.iter().map(HostTensor::elems).sum()
+    }
+
+    // ---- checkpointing -----------------------------------------------------
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut header = Json::obj();
+        header.set("config_key", Json::from(self.config_key.as_str()));
+        header.set("step", Json::from(self.step as f64));
+        header.set(
+            "order",
+            Json::Arr(self.order.iter().map(|s| Json::from(s.as_str())).collect()),
+        );
+        let mut shapes = Json::obj();
+        for (name, t) in self.order.iter().zip(&self.params) {
+            shapes.set(name, Json::from(t.shape.clone()));
+        }
+        header.set("shapes", shapes);
+
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        f.write_all(header.to_string().as_bytes())?;
+        f.write_all(&[0u8])?;
+        for group in [&self.params, &self.m, &self.v] {
+            for t in group {
+                f.write_all(&t.data)?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path, cfg: &ModelConfig) -> Result<ParamStore> {
+        let mut bytes = Vec::new();
+        std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?
+            .read_to_end(&mut bytes)?;
+        let nul = bytes
+            .iter()
+            .position(|&b| b == 0)
+            .context("missing header terminator")?;
+        let header = Json::parse(std::str::from_utf8(&bytes[..nul])?)?;
+        let key = header.get("config_key").as_str().context("config_key")?;
+        if key != cfg.key {
+            bail!("checkpoint is for {key:?}, engine config is {:?}", cfg.key);
+        }
+        let step = header.get("step").as_f64().context("step")? as u64;
+        let order: Vec<String> = header
+            .get("order")
+            .as_arr()
+            .context("order")?
+            .iter()
+            .map(|v| v.as_str().unwrap_or_default().to_string())
+            .collect();
+        if order != cfg.param_order {
+            bail!("checkpoint param order mismatch");
+        }
+
+        let mut offset = nul + 1;
+        let mut read_group = |shapes: &BTreeMap<String, Vec<usize>>| -> Result<Vec<HostTensor>> {
+            let mut out = Vec::with_capacity(order.len());
+            for name in &order {
+                let shape = &shapes[name];
+                let n: usize = shape.iter().product();
+                let len = n * 4;
+                if offset + len > bytes.len() {
+                    bail!("checkpoint truncated at {name}");
+                }
+                out.push(HostTensor {
+                    dtype: crate::runtime::DType::F32,
+                    shape: shape.clone(),
+                    data: bytes[offset..offset + len].to_vec(),
+                });
+                offset += len;
+            }
+            Ok(out)
+        };
+        let params = read_group(&cfg.param_shapes)?;
+        let m = read_group(&cfg.param_shapes)?;
+        let v = read_group(&cfg.param_shapes)?;
+        if offset != bytes.len() {
+            bail!("checkpoint has {} trailing bytes", bytes.len() - offset);
+        }
+        Ok(ParamStore {
+            config_key: key.to_string(),
+            order,
+            params,
+            m,
+            v,
+            step,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Manifest;
+
+    fn test_cfg() -> ModelConfig {
+        // hand-built config mirroring the tiny model
+        let json = r#"{
+          "format": "hlo-text-v1", "entries": {},
+          "configs": { "tiny_consmax": {
+            "vocab": 256, "ctx": 64, "n_layer": 2, "n_head": 2,
+            "n_embd": 64, "normalizer": "consmax", "beta_init": 2.5,
+            "gamma_init": 100.0, "total_steps": 200, "train_batch": 4,
+            "param_order": ["wte", "wpe", "ln1_g", "ln1_b", "attn_qkv_w",
+              "attn_qkv_b", "attn_proj_w", "attn_proj_b", "beta", "gamma",
+              "ln2_g", "ln2_b", "mlp_fc_w", "mlp_fc_b", "mlp_proj_w",
+              "mlp_proj_b", "lnf_g", "lnf_b"],
+            "param_shapes": {
+              "wte": [256, 64], "wpe": [64, 64],
+              "ln1_g": [2, 64], "ln1_b": [2, 64],
+              "attn_qkv_w": [2, 64, 192], "attn_qkv_b": [2, 192],
+              "attn_proj_w": [2, 64, 64], "attn_proj_b": [2, 64],
+              "beta": [2, 2], "gamma": [2, 2],
+              "ln2_g": [2, 64], "ln2_b": [2, 64],
+              "mlp_fc_w": [2, 64, 256], "mlp_fc_b": [2, 256],
+              "mlp_proj_w": [2, 256, 64], "mlp_proj_b": [2, 64],
+              "lnf_g": [64], "lnf_b": [64]
+            }
+          }}}"#;
+        let dir = std::env::temp_dir().join("consmax_params_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), json).unwrap();
+        Manifest::load(&dir).unwrap().config("tiny_consmax").unwrap().clone()
+    }
+
+    #[test]
+    fn init_respects_rules() {
+        let cfg = test_cfg();
+        let ps = ParamStore::init(&cfg, 0).unwrap();
+        // gamma constant
+        let gamma = ps.get("gamma").unwrap().as_f32().unwrap();
+        assert!(gamma.iter().all(|&g| g == 100.0));
+        // beta in range and varied
+        let beta = ps.get("beta").unwrap().as_f32().unwrap();
+        assert!(beta.iter().all(|&b| (0.5..=2.5).contains(&b)));
+        assert!(beta.windows(2).any(|w| w[0] != w[1]));
+        // ln gains are ones
+        let g = ps.get("ln1_g").unwrap().as_f32().unwrap();
+        assert!(g.iter().all(|&x| x == 1.0));
+        // weights have plausible std
+        let w = ps.get("attn_qkv_w").unwrap().as_f32().unwrap();
+        let mean: f32 = w.iter().sum::<f32>() / w.len() as f32;
+        let var: f32 =
+            w.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / w.len() as f32;
+        assert!((var.sqrt() - 0.02).abs() < 0.002, "{}", var.sqrt());
+    }
+
+    #[test]
+    fn init_deterministic() {
+        let cfg = test_cfg();
+        let a = ParamStore::init(&cfg, 7).unwrap();
+        let b = ParamStore::init(&cfg, 7).unwrap();
+        assert_eq!(a.params[0].data, b.params[0].data);
+        let c = ParamStore::init(&cfg, 8).unwrap();
+        assert_ne!(a.params[0].data, c.params[0].data);
+    }
+
+    #[test]
+    fn moments_start_zero() {
+        let cfg = test_cfg();
+        let ps = ParamStore::init(&cfg, 0).unwrap();
+        for t in ps.m.iter().chain(&ps.v) {
+            assert!(t.data.iter().all(|&b| b == 0));
+        }
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let cfg = test_cfg();
+        let mut ps = ParamStore::init(&cfg, 3).unwrap();
+        ps.step = 42;
+        let path = std::env::temp_dir().join("consmax_params_test/ck.ckpt");
+        ps.save(&path).unwrap();
+        let back = ParamStore::load(&path, &cfg).unwrap();
+        assert_eq!(back.step, 42);
+        assert_eq!(back.params.len(), ps.params.len());
+        for (a, b) in back.params.iter().zip(&ps.params) {
+            assert_eq!(a, b);
+        }
+        for (a, b) in back.v.iter().zip(&ps.v) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn checkpoint_rejects_wrong_config() {
+        let cfg = test_cfg();
+        let ps = ParamStore::init(&cfg, 0).unwrap();
+        let path = std::env::temp_dir().join("consmax_params_test/ck2.ckpt");
+        ps.save(&path).unwrap();
+        let mut other = cfg.clone();
+        other.key = "paper_softmax".into();
+        assert!(ParamStore::load(&path, &other).is_err());
+    }
+
+    #[test]
+    fn truncated_checkpoint_rejected() {
+        let cfg = test_cfg();
+        let ps = ParamStore::init(&cfg, 0).unwrap();
+        let path = std::env::temp_dir().join("consmax_params_test/ck3.ckpt");
+        ps.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 100]).unwrap();
+        assert!(ParamStore::load(&path, &cfg).is_err());
+    }
+
+    #[test]
+    fn param_count_matches_config() {
+        let cfg = test_cfg();
+        let ps = ParamStore::init(&cfg, 0).unwrap();
+        assert_eq!(ps.param_count(), cfg.param_count());
+    }
+}

@@ -1,0 +1,213 @@
+//! Run reporting: render metric series from `runs/*.jsonl` as ASCII
+//! charts and summary tables — the Fig 6/7 figures without leaving the
+//! terminal. Used by `consmax report`.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::metrics::Metrics;
+
+/// An ASCII line chart of one or more series on a shared x (step) axis.
+pub fn render_chart(
+    title: &str,
+    series: &[(&str, &[(u64, f64)])],
+    width: usize,
+    height: usize,
+) -> String {
+    let mut out = format!("\n{title}\n");
+    let all: Vec<(u64, f64)> = series
+        .iter()
+        .flat_map(|(_, pts)| pts.iter().copied())
+        .collect();
+    if all.is_empty() {
+        return out + "(no data)\n";
+    }
+    let x_min = all.iter().map(|p| p.0).min().unwrap() as f64;
+    let x_max = all.iter().map(|p| p.0).max().unwrap() as f64;
+    let y_min = all.iter().map(|p| p.1).fold(f64::INFINITY, f64::min);
+    let y_max = all.iter().map(|p| p.1).fold(f64::NEG_INFINITY, f64::max);
+    let y_span = (y_max - y_min).max(1e-12);
+    let x_span = (x_max - x_min).max(1.0);
+
+    let marks = ['*', 'o', '+', 'x', '#', '@'];
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, pts)) in series.iter().enumerate() {
+        let mark = marks[si % marks.len()];
+        for &(x, y) in pts.iter() {
+            let col = (((x as f64 - x_min) / x_span) * (width - 1) as f64)
+                .round() as usize;
+            let row = (((y_max - y) / y_span) * (height - 1) as f64).round()
+                as usize;
+            grid[row.min(height - 1)][col.min(width - 1)] = mark;
+        }
+    }
+    for (r, line) in grid.iter().enumerate() {
+        let label = if r == 0 {
+            format!("{y_max:9.3} |")
+        } else if r == height - 1 {
+            format!("{y_min:9.3} |")
+        } else {
+            "          |".to_string()
+        };
+        out.push_str(&label);
+        out.extend(line.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "          +{}\n           step {:.0} .. {:.0}   ",
+        "-".repeat(width),
+        x_min,
+        x_max
+    ));
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("[{}] {}  ", marks[si % marks.len()], name));
+    }
+    out.push('\n');
+    out
+}
+
+/// Load a metrics file and render train/val loss + β/γ summaries.
+pub fn report_run(path: &Path) -> Result<String> {
+    let m = Metrics::load(path)
+        .with_context(|| format!("loading {}", path.display()))?;
+    let mut out = format!("# run report: {}\n", path.display());
+
+    let mut loss_series: Vec<(&str, &[(u64, f64)])> = Vec::new();
+    if let Some(s) = m.get("train_loss") {
+        loss_series.push(("train", &s.points));
+    }
+    if let Some(s) = m.get("val_loss") {
+        loss_series.push(("val", &s.points));
+    }
+    if !loss_series.is_empty() {
+        out.push_str(&render_chart("loss", &loss_series, 64, 14));
+    }
+
+    // β/γ trace summary (Fig 7)
+    let mut beta_rows = Vec::new();
+    for (name, s) in &m.series {
+        if let Some(rest) = name.strip_prefix("beta_") {
+            let first = s.points.first().unwrap().1;
+            let last = s.points.last().unwrap().1;
+            beta_rows.push(format!(
+                "  beta[{rest}]: {first:.3} -> {last:.3} ({:+.1}%)",
+                (last - first) / first * 100.0
+            ));
+        }
+    }
+    if !beta_rows.is_empty() {
+        out.push_str("\nFig 7 β traces:\n");
+        out.push_str(&beta_rows.join("\n"));
+        out.push('\n');
+        // γ summary: mean drift only ("low % change")
+        let gammas: Vec<(f64, f64)> = m
+            .series
+            .iter()
+            .filter(|(n, _)| n.starts_with("gamma_"))
+            .map(|(_, s)| {
+                (s.points.first().unwrap().1, s.points.last().unwrap().1)
+            })
+            .collect();
+        if !gammas.is_empty() {
+            let mean0: f64 =
+                gammas.iter().map(|g| g.0).sum::<f64>() / gammas.len() as f64;
+            let mean1: f64 =
+                gammas.iter().map(|g| g.1).sum::<f64>() / gammas.len() as f64;
+            out.push_str(&format!(
+                "γ mean: {mean0:.2} -> {mean1:.2} ({:+.3}%) — the paper's \
+                 'low % change'\n",
+                (mean1 - mean0) / mean0 * 100.0
+            ));
+        }
+    }
+
+    if let Some(s) = m.get("train_loss") {
+        out.push_str(&format!(
+            "\nfinal train loss {:.4}; best {:.4}; tail-10 mean {:.4}\n",
+            s.last().unwrap_or(f64::NAN),
+            s.min().unwrap_or(f64::NAN),
+            s.tail_mean(10).unwrap_or(f64::NAN),
+        ));
+    }
+    Ok(out)
+}
+
+/// Side-by-side comparison of two runs' loss curves (Fig 6).
+pub fn report_compare(a: &Path, b: &Path) -> Result<String> {
+    let ma = Metrics::load(a)?;
+    let mb = Metrics::load(b)?;
+    let name_a = a.file_stem().unwrap().to_string_lossy().into_owned();
+    let name_b = b.file_stem().unwrap().to_string_lossy().into_owned();
+    let sa = ma.get("train_loss").context("train_loss in a")?;
+    let sb = mb.get("train_loss").context("train_loss in b")?;
+    let mut out = render_chart(
+        "Fig 6: train loss",
+        &[(&name_a, &sa.points), (&name_b, &sb.points)],
+        64,
+        16,
+    );
+    if let (Some(va), Some(vb)) = (ma.get("val_loss"), mb.get("val_loss")) {
+        out.push_str(&render_chart(
+            "Fig 6: val loss",
+            &[(&name_a, &va.points), (&name_b, &vb.points)],
+            64,
+            12,
+        ));
+        if let (Some(la), Some(lb)) = (va.last(), vb.last()) {
+            out.push_str(&format!(
+                "\nfinal val: {name_a} {la:.4} vs {name_b} {lb:.4} \
+                 ({:+.2}%)\n",
+                (lb - la) / la * 100.0
+            ));
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chart_renders_extremes() {
+        let pts: Vec<(u64, f64)> = (0..20).map(|i| (i, (i as f64).sin())).collect();
+        let s = render_chart("t", &[("sin", &pts)], 40, 8);
+        assert!(s.contains('*'));
+        assert!(s.contains("step 0 .. 19"));
+        assert!(s.lines().count() > 8);
+    }
+
+    #[test]
+    fn chart_handles_empty() {
+        let s = render_chart("t", &[("x", &[])], 40, 8);
+        assert!(s.contains("no data"));
+    }
+
+    #[test]
+    fn chart_two_series_distinct_marks() {
+        let a: Vec<(u64, f64)> = vec![(0, 0.0), (10, 1.0)];
+        let b: Vec<(u64, f64)> = vec![(0, 1.0), (10, 0.0)];
+        let s = render_chart("t", &[("a", &a), ("b", &b)], 30, 6);
+        assert!(s.contains('*') && s.contains('o'));
+        assert!(s.contains("[*] a") && s.contains("[o] b"));
+    }
+
+    #[test]
+    fn report_run_roundtrip() {
+        let mut m = crate::metrics::Metrics::new();
+        for i in 0..10u64 {
+            m.log("train_loss", i * 10, 5.0 - i as f64 * 0.3);
+            m.log("beta_l0h0", i * 10, 1.0 + i as f64 * 0.01);
+            m.log("gamma_l0h0", i * 10, 100.0);
+        }
+        let dir = std::env::temp_dir().join("consmax_report_test");
+        let path = dir.join("m.jsonl");
+        m.save(&path).unwrap();
+        let rep = report_run(&path).unwrap();
+        assert!(rep.contains("loss"));
+        assert!(rep.contains("beta[l0h0]"));
+        assert!(rep.contains("low % change"));
+        assert!(rep.contains("final train loss 2.3000"));
+    }
+}

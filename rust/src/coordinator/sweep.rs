@@ -1,0 +1,137 @@
+//! β/γ initialization sweep (paper Fig 8): train short runs over a grid
+//! of initial values and report validation loss, selecting the best
+//! combination — the paper's "hyperparameter tuning during warm-up
+//! iterations" procedure (§III-A).
+
+use anyhow::Result;
+
+use crate::config::ModelConfig;
+use crate::coordinator::params::ParamStore;
+use crate::coordinator::trainer::{TrainOptions, Trainer};
+use crate::data::BatchSampler;
+use crate::runtime::{Engine, HostTensor};
+
+/// One grid point's outcome.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub beta0: f64,
+    pub gamma0: f64,
+    pub final_train_loss: f64,
+    pub val_loss: f64,
+}
+
+/// Sweep configuration.
+#[derive(Debug, Clone)]
+pub struct SweepOptions {
+    pub betas: Vec<f64>,
+    pub gammas: Vec<f64>,
+    pub warmup_steps: usize,
+    pub seed: u64,
+}
+
+impl Default for SweepOptions {
+    fn default() -> Self {
+        // the paper explores beta in [0.5, 2.5] at gamma = 100, plus
+        // gamma variations (Fig 8 shows a (beta, gamma) grid)
+        SweepOptions {
+            betas: vec![0.5, 1.0, 1.5, 2.0, 2.5],
+            gammas: vec![10.0, 100.0, 300.0],
+            warmup_steps: 30,
+            seed: 0,
+        }
+    }
+}
+
+/// Set every (layer, head) β/γ to the given constants (overriding the
+/// randomized init) so the sweep isolates the initialization effect.
+pub fn pin_beta_gamma(store: &mut ParamStore, beta0: f32, gamma0: f32) {
+    if let Some(i) = store.index_of("beta") {
+        let shape = store.params[i].shape.clone();
+        let n: usize = shape.iter().product();
+        store.params[i] = HostTensor::from_f32(&vec![beta0; n], &shape);
+    }
+    if let Some(i) = store.index_of("gamma") {
+        let shape = store.params[i].shape.clone();
+        let n: usize = shape.iter().product();
+        store.params[i] = HostTensor::from_f32(&vec![gamma0; n], &shape);
+    }
+}
+
+/// Run the grid. Each point trains `warmup_steps` from an identical seed
+/// (identical weights, identical data order) with only β₀/γ₀ varying.
+pub fn sweep_init(
+    engine: &Engine,
+    cfg: &ModelConfig,
+    tokens: &[i32],
+    val_tokens: &[i32],
+    opts: &SweepOptions,
+) -> Result<Vec<SweepPoint>> {
+    let mut out = Vec::new();
+    for &beta0 in &opts.betas {
+        for &gamma0 in &opts.gammas {
+            let mut store = ParamStore::init(cfg, opts.seed)?;
+            pin_beta_gamma(&mut store, beta0 as f32, gamma0 as f32);
+            let train =
+                BatchSampler::new(tokens.to_vec(), cfg.train_batch, cfg.ctx, opts.seed);
+            let val = BatchSampler::new(
+                val_tokens.to_vec(),
+                cfg.train_batch,
+                cfg.ctx,
+                opts.seed,
+            );
+            let mut tr = Trainer::new(engine, &cfg.key, store, train, Some(val))?;
+            let report = tr.train(&TrainOptions {
+                steps: opts.warmup_steps,
+                log_every: opts.warmup_steps.max(1),
+                eval_every: 0,
+                eval_batches: 2,
+                trace_params: false,
+                checkpoint: None,
+            })?;
+            let val_loss = tr.evaluate(2)?;
+            log::info!(
+                "sweep beta0={beta0} gamma0={gamma0}: train {:.4} val {val_loss:.4}",
+                report.final_loss
+            );
+            out.push(SweepPoint {
+                beta0,
+                gamma0,
+                final_train_loss: report.final_loss,
+                val_loss,
+            });
+        }
+    }
+    Ok(out)
+}
+
+/// The winning grid point (lowest validation loss), i.e. the combination
+/// the paper "utilizes to train the model until convergence".
+pub fn best_point(points: &[SweepPoint]) -> Option<&SweepPoint> {
+    points
+        .iter()
+        .min_by(|a, b| a.val_loss.partial_cmp(&b.val_loss).unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn best_point_picks_min_val() {
+        let pts = vec![
+            SweepPoint { beta0: 0.5, gamma0: 100.0, final_train_loss: 5.0, val_loss: 5.2 },
+            SweepPoint { beta0: 1.0, gamma0: 100.0, final_train_loss: 5.1, val_loss: 5.0 },
+            SweepPoint { beta0: 2.5, gamma0: 10.0, final_train_loss: 4.9, val_loss: 5.4 },
+        ];
+        let best = best_point(&pts).unwrap();
+        assert_eq!(best.beta0, 1.0);
+    }
+
+    #[test]
+    fn default_grid_matches_paper_ranges() {
+        let o = SweepOptions::default();
+        assert_eq!(*o.betas.first().unwrap(), 0.5);
+        assert_eq!(*o.betas.last().unwrap(), 2.5);
+        assert!(o.gammas.contains(&100.0));
+    }
+}

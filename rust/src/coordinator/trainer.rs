@@ -1,0 +1,287 @@
+//! Training orchestrator: owns the parameter state, feeds the AOT
+//! `train_step` executable, and records the metrics the paper's software
+//! evaluation plots (Fig 6 loss/perplexity curves, Fig 7 β/γ traces).
+//!
+//! The hot loop keeps params + moments as PJRT literals: the train-step
+//! outputs of step *t* are the inputs of step *t+1* without a host
+//! round-trip; only the scalar loss (and, at log points, the tiny β/γ
+//! tensors) are copied back.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::ModelConfig;
+use crate::coordinator::params::ParamStore;
+use crate::data::BatchSampler;
+use crate::metrics::{perplexity, Metrics};
+use crate::runtime::{Engine, HostTensor};
+
+/// Options for one training run.
+#[derive(Debug, Clone)]
+pub struct TrainOptions {
+    pub steps: usize,
+    pub log_every: usize,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    /// Record per-head β/γ series (Fig 7).
+    pub trace_params: bool,
+    pub checkpoint: Option<PathBuf>,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        TrainOptions {
+            steps: 100,
+            log_every: 10,
+            eval_every: 0,
+            eval_batches: 4,
+            trace_params: true,
+            checkpoint: None,
+        }
+    }
+}
+
+/// Result summary of a run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub final_loss: f64,
+    pub final_ppl: f64,
+    pub best_val_loss: Option<f64>,
+    pub steps: usize,
+    pub wall_s: f64,
+    pub steps_per_s: f64,
+}
+
+pub struct Trainer<'e> {
+    pub engine: &'e Engine,
+    pub cfg: ModelConfig,
+    pub store: ParamStore,
+    pub train_sampler: BatchSampler,
+    pub val_sampler: Option<BatchSampler>,
+    pub metrics: Metrics,
+}
+
+impl<'e> Trainer<'e> {
+    pub fn new(
+        engine: &'e Engine,
+        config_key: &str,
+        store: ParamStore,
+        train_sampler: BatchSampler,
+        val_sampler: Option<BatchSampler>,
+    ) -> Result<Trainer<'e>> {
+        let cfg = engine.manifest.config(config_key)?.clone();
+        Ok(Trainer {
+            engine,
+            cfg,
+            store,
+            train_sampler,
+            val_sampler,
+            metrics: Metrics::new(),
+        })
+    }
+
+    fn entry(&self, which: &str) -> String {
+        format!("{}_{which}", self.cfg.key)
+    }
+
+    /// Run the training loop.
+    pub fn train(&mut self, opts: &TrainOptions) -> Result<TrainReport> {
+        let entry = self.entry("train_step");
+        let exe = self.engine.load(&entry)?;
+        let n = self.store.order.len();
+        let beta_idx = self.store.index_of("beta");
+        let gamma_idx = self.store.index_of("gamma");
+
+        // marshal state into literals once
+        let mut state: Vec<xla::Literal> = Vec::with_capacity(3 * n);
+        for group in [&self.store.params, &self.store.m, &self.store.v] {
+            for t in group {
+                state.push(t.to_literal()?);
+            }
+        }
+
+        let t0 = Instant::now();
+        let mut final_loss = f64::NAN;
+        let mut best_val = None::<f64>;
+        let start_step = self.store.step;
+
+        for local in 0..opts.steps {
+            let step = start_step + local as u64;
+            let (x, y) = self.train_sampler.sample();
+            let xt = HostTensor::from_i32(
+                &x,
+                &[self.cfg.train_batch, self.cfg.ctx],
+            )
+            .to_literal()?;
+            let yt = HostTensor::from_i32(
+                &y,
+                &[self.cfg.train_batch, self.cfg.ctx],
+            )
+            .to_literal()?;
+            let st = HostTensor::scalar_f32(step as f32).to_literal()?;
+
+            let mut inputs: Vec<&xla::Literal> = state.iter().collect();
+            inputs.push(&st);
+            inputs.push(&xt);
+            inputs.push(&yt);
+
+            let mut outs =
+                self.engine.execute_literal_refs(&entry, &exe, &inputs)?;
+            // outputs: params'(n) | m'(n) | v'(n) | loss | gnorm
+            let gnorm_lit = outs.pop().context("missing gnorm")?;
+            let loss_lit = outs.pop().context("missing loss")?;
+            let loss = HostTensor::from_literal(&loss_lit)?.scalar_as_f32()? as f64;
+            let gnorm =
+                HostTensor::from_literal(&gnorm_lit)?.scalar_as_f32()? as f64;
+            state = outs;
+            final_loss = loss;
+
+            if !loss.is_finite() {
+                anyhow::bail!("loss diverged (NaN/Inf) at step {step}");
+            }
+
+            if local % opts.log_every == 0 || local + 1 == opts.steps {
+                self.metrics.log("train_loss", step, loss);
+                self.metrics.log("train_ppl", step, perplexity(loss));
+                self.metrics.log("grad_norm", step, gnorm);
+                if opts.trace_params {
+                    self.trace_beta_gamma(&state, step, beta_idx, gamma_idx)?;
+                }
+                log::info!(
+                    "step {step}: loss {loss:.4} ppl {:.1} gnorm {gnorm:.2}",
+                    perplexity(loss)
+                );
+            }
+
+            if opts.eval_every > 0
+                && local > 0
+                && local % opts.eval_every == 0
+            {
+                let val = self.evaluate_with_state(&state, opts.eval_batches)?;
+                self.metrics.log("val_loss", step, val);
+                self.metrics.log("val_ppl", step, perplexity(val));
+                best_val = Some(best_val.map_or(val, |b: f64| b.min(val)));
+            }
+        }
+
+        // copy final state back to the store
+        for (i, lit) in state.iter().enumerate() {
+            let t = HostTensor::from_literal(lit)?;
+            match i / n {
+                0 => self.store.params[i % n] = t,
+                1 => self.store.m[i % n] = t,
+                _ => self.store.v[i % n] = t,
+            }
+        }
+        self.store.step = start_step + opts.steps as u64;
+
+        if let Some(path) = &opts.checkpoint {
+            self.store.save(path)?;
+        }
+
+        let wall = t0.elapsed().as_secs_f64();
+        Ok(TrainReport {
+            final_loss,
+            final_ppl: perplexity(final_loss),
+            best_val_loss: best_val,
+            steps: opts.steps,
+            wall_s: wall,
+            steps_per_s: opts.steps as f64 / wall,
+        })
+    }
+
+    /// Log per-(layer, head) β and γ values (Fig 7 traces).
+    fn trace_beta_gamma(
+        &mut self,
+        state: &[xla::Literal],
+        step: u64,
+        beta_idx: Option<usize>,
+        gamma_idx: Option<usize>,
+    ) -> Result<()> {
+        for (name, idx) in [("beta", beta_idx), ("gamma", gamma_idx)] {
+            let Some(idx) = idx else { continue };
+            let t = HostTensor::from_literal(&state[idx])?;
+            let vals = t.as_f32()?;
+            let heads = self.cfg.n_head;
+            for (i, v) in vals.iter().enumerate() {
+                let (l, h) = (i / heads, i % heads);
+                self.metrics
+                    .log(&format!("{name}_l{l}h{h}"), step, *v as f64);
+            }
+        }
+        Ok(())
+    }
+
+    /// Mean validation loss over up to `max_batches` deterministic batches.
+    pub fn evaluate(&mut self, max_batches: usize) -> Result<f64> {
+        let state: Vec<xla::Literal> = self
+            .store
+            .params
+            .iter()
+            .map(HostTensor::to_literal)
+            .collect::<Result<_>>()?;
+        self.eval_params(&state, max_batches)
+    }
+
+    /// Deployment-form validation loss: the same weights scored through
+    /// the INT8 bitwidth-split ConSmax hardware normalizer (the accuracy
+    /// a Fig 4(b) accelerator delivers). Only exported for consmax
+    /// configs.
+    pub fn evaluate_quantized(&mut self, max_batches: usize) -> Result<f64> {
+        let state: Vec<xla::Literal> = self
+            .store
+            .params
+            .iter()
+            .map(HostTensor::to_literal)
+            .collect::<Result<_>>()?;
+        self.eval_params_with(&state, max_batches, "eval_quant")
+    }
+
+    fn evaluate_with_state(
+        &self,
+        state: &[xla::Literal],
+        max_batches: usize,
+    ) -> Result<f64> {
+        let n = self.store.order.len();
+        self.eval_params(&state[..n], max_batches)
+    }
+
+    fn eval_params(
+        &self,
+        params: &[xla::Literal],
+        max_batches: usize,
+    ) -> Result<f64> {
+        self.eval_params_with(params, max_batches, "eval_step")
+    }
+
+    fn eval_params_with(
+        &self,
+        params: &[xla::Literal],
+        max_batches: usize,
+        which: &str,
+    ) -> Result<f64> {
+        let sampler = self
+            .val_sampler
+            .as_ref()
+            .unwrap_or(&self.train_sampler);
+        let entry = self.entry(which);
+        let exe = self.engine.load(&entry)?;
+        let batches = sampler.eval_batches(max_batches);
+        anyhow::ensure!(!batches.is_empty(), "validation stream too small");
+        let mut total = 0.0;
+        for (x, y) in &batches {
+            let xt = HostTensor::from_i32(x, &[self.cfg.train_batch, self.cfg.ctx])
+                .to_literal()?;
+            let yt = HostTensor::from_i32(y, &[self.cfg.train_batch, self.cfg.ctx])
+                .to_literal()?;
+            let mut inputs: Vec<&xla::Literal> = params.iter().collect();
+            inputs.push(&xt);
+            inputs.push(&yt);
+            let outs = self.engine.execute_literal_refs(&entry, &exe, &inputs)?;
+            total += HostTensor::from_literal(&outs[0])?.scalar_as_f32()? as f64;
+        }
+        Ok(total / batches.len() as f64)
+    }
+}

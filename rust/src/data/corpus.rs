@@ -1,0 +1,215 @@
+//! Corpora: a bundled tiny English text and a deterministic synthetic
+//! generator with WikiText-like statistics (Zipfian unigrams over a word
+//! inventory + Markov sentence structure). See module docs in `mod.rs`
+//! for why this substitutes for WikiText103.
+
+use crate::util::rng::Pcg32;
+
+/// A training corpus: raw text + provenance tag.
+#[derive(Debug, Clone)]
+pub struct Corpus {
+    pub name: String,
+    pub text: String,
+}
+
+impl Corpus {
+    pub fn tiny() -> Corpus {
+        Corpus { name: "tiny-english".into(), text: TINY_CORPUS.repeat(4) }
+    }
+
+    pub fn synthetic(words: usize, seed: u64) -> Corpus {
+        Corpus {
+            name: format!("synthetic-{words}w-s{seed}"),
+            text: synthetic_corpus(words, seed),
+        }
+    }
+
+    /// Load from a file (for users with a real WikiText103 dump).
+    pub fn from_file(path: &std::path::Path) -> anyhow::Result<Corpus> {
+        Ok(Corpus {
+            name: path.display().to_string(),
+            text: std::fs::read_to_string(path)?,
+        })
+    }
+
+    pub fn len_bytes(&self) -> usize {
+        self.text.len()
+    }
+
+    /// 90/10 train/validation split at a sentence-ish boundary.
+    pub fn split(&self) -> (&str, &str) {
+        let cut = (self.text.len() * 9) / 10;
+        let cut = self.text[..cut]
+            .rfind(". ")
+            .map(|i| i + 2)
+            .unwrap_or(cut);
+        (&self.text[..cut], &self.text[cut..])
+    }
+}
+
+/// Bundled seed text (public-domain-style prose written for this repo;
+/// statistics comparable to encyclopedic English).
+pub const TINY_CORPUS: &str = "\
+The transformer architecture changed how machines process language. \
+Attention lets every token look at every other token, and the softmax \
+function turns raw similarity scores into a probability distribution. \
+Computing softmax requires finding the maximum score and summing the \
+exponentials, which forces the hardware to wait for the whole score \
+vector before any output can be produced. The constant softmax replaces \
+the maximum and the denominator with two learnable parameters, so each \
+score can be normalized the moment it arrives. A small lookup table \
+stores the exponential of the high bits and the low bits separately, and \
+a half precision multiplier merges the two factors without any loss of \
+accuracy. During training the two parameters drift toward values that \
+keep the attention probabilities well scaled, and during inference they \
+are folded into a single constant. The hardware that results is small, \
+fast, and cool, because it never buffers the score vector and never \
+divides. Long contexts make the difference larger, since the buffers in \
+the ordinary design grow with the sequence while the constant design \
+stays the same size. An accelerator built this way keeps its multiply \
+units busy even when generating one token at a time, which is exactly \
+the case that matters for interactive use. The language model head still \
+uses the ordinary softmax, because the output distribution must sum to \
+one for sampling, but inside the attention blocks the constant form is \
+enough to tell strong matches from weak ones. Careful initialization of \
+the two parameters shortens the unstable phase at the start of training. \
+Measurements on a small model show the two curves meeting after enough \
+iterations, with the constant form briefly behind early on. Silicon area \
+and power both drop by large factors when the comparison is made against \
+a faithful implementation of the ordinary function, and the advantage \
+persists across process nodes and tool chains. ";
+
+/// Word inventory for the synthetic generator (mixed-frequency content
+/// and function words).
+const FUNCTION_WORDS: &[&str] = &[
+    "the", "of", "and", "a", "to", "in", "is", "was", "it", "for", "with",
+    "as", "on", "that", "by", "this", "at", "from", "are", "an", "be",
+    "or", "which", "were", "but", "not", "its", "also", "has", "had",
+];
+
+const CONTENT_WORDS: &[&str] = &[
+    "attention", "model", "token", "score", "softmax", "hardware", "layer",
+    "training", "language", "sequence", "vector", "memory", "parameter",
+    "function", "design", "power", "area", "energy", "silicon", "buffer",
+    "multiplier", "lookup", "table", "precision", "constant", "gradient",
+    "context", "pipeline", "module", "accelerator", "throughput", "latency",
+    "network", "weight", "value", "query", "key", "head", "block", "unit",
+    "distribution", "probability", "maximum", "summation", "exponential",
+    "normalization", "synthesis", "frequency", "voltage", "technology",
+    "measurement", "iteration", "convergence", "perplexity", "dataset",
+    "inference", "generation", "decoder", "embedding", "projection",
+];
+
+/// Deterministic synthetic text: Zipf-weighted unigrams with light
+/// bigram structure (function word ↔ content word alternation bias) and
+/// sentence/paragraph punctuation. Statistically stationary, byte-level
+/// entropy comparable to prose.
+pub fn synthetic_corpus(words: usize, seed: u64) -> String {
+    let mut rng = Pcg32::seeded(seed ^ 0x5EED_C0FF);
+    // Zipf weights over the combined inventory
+    let func_w: Vec<f64> =
+        (0..FUNCTION_WORDS.len()).map(|i| 1.0 / (i + 1) as f64).collect();
+    let cont_w: Vec<f64> =
+        (0..CONTENT_WORDS.len()).map(|i| 1.0 / (i + 2) as f64).collect();
+
+    let mut out = String::with_capacity(words * 7);
+    let mut sentence_len = 0usize;
+    let mut want_content = false;
+    for i in 0..words {
+        let word = if want_content || rng.uniform() < 0.55 {
+            CONTENT_WORDS[rng.weighted(&cont_w)]
+        } else {
+            FUNCTION_WORDS[rng.weighted(&func_w)]
+        };
+        // bias alternation: content follows function more often
+        want_content = !want_content && rng.uniform() < 0.6;
+
+        if sentence_len == 0 {
+            // capitalize
+            let mut cs = word.chars();
+            if let Some(c0) = cs.next() {
+                out.extend(c0.to_uppercase());
+                out.push_str(cs.as_str());
+            }
+        } else {
+            out.push_str(word);
+        }
+        sentence_len += 1;
+
+        let end_sentence = sentence_len >= 6 && rng.uniform() < 0.18;
+        if end_sentence || i + 1 == words {
+            out.push('.');
+            out.push(' ');
+            sentence_len = 0;
+            if rng.uniform() < 0.12 {
+                out.push('\n');
+            }
+        } else {
+            out.push(' ');
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn tiny_corpus_is_substantial() {
+        let c = Corpus::tiny();
+        assert!(c.len_bytes() > 4000);
+    }
+
+    #[test]
+    fn split_gives_both_parts() {
+        let c = Corpus::tiny();
+        let (train, val) = c.split();
+        assert!(train.len() > 5 * val.len() / 2);
+        assert!(!val.is_empty());
+        assert_eq!(train.len() + val.len(), c.text.len());
+    }
+
+    #[test]
+    fn synthetic_is_deterministic() {
+        assert_eq!(synthetic_corpus(500, 7), synthetic_corpus(500, 7));
+        assert_ne!(synthetic_corpus(500, 7), synthetic_corpus(500, 8));
+    }
+
+    #[test]
+    fn synthetic_has_requested_scale() {
+        let text = synthetic_corpus(10_000, 1);
+        let words = text.split_whitespace().count();
+        assert!((9_000..=11_000).contains(&words), "{words}");
+    }
+
+    #[test]
+    fn synthetic_unigrams_are_zipfian() {
+        // most-common word should dominate the tail strongly
+        let text = synthetic_corpus(20_000, 3);
+        let mut counts: BTreeMap<&str, usize> = BTreeMap::new();
+        for w in text.split_whitespace() {
+            let w = w.trim_matches(|c: char| !c.is_alphanumeric());
+            if !w.is_empty() {
+                *counts.entry(w).or_default() += 1;
+            }
+        }
+        let mut freqs: Vec<usize> = counts.values().copied().collect();
+        freqs.sort_unstable_by(|a, b| b.cmp(a));
+        assert!(freqs[0] > 4 * freqs[freqs.len() / 2], "{:?}", &freqs[..5]);
+    }
+
+    #[test]
+    fn synthetic_has_sentences() {
+        let text = synthetic_corpus(2_000, 4);
+        let sentences = text.matches(". ").count();
+        assert!(sentences > 50, "{sentences}");
+    }
+
+    #[test]
+    fn synthetic_is_ascii_byte_friendly() {
+        let text = synthetic_corpus(1_000, 5);
+        assert!(text.is_ascii());
+    }
+}

@@ -1,0 +1,175 @@
+//! Data substrate: corpus, tokenizer, batching.
+//!
+//! The paper trains on WikiText103, which is unavailable offline (541 MB,
+//! license-gated download). Per DESIGN.md §2 we substitute (a) a bundled
+//! tiny English corpus for smoke-scale runs and (b) a deterministic
+//! synthetic generator with Zipfian unigram statistics and Markov bigram
+//! structure for volume — what matters to the experiment (Softmax vs
+//! ConSmax convergence parity on identical data) is preserved by any
+//! stationary text-like stream.
+//!
+//! Tokenization is byte-level (vocab 256), matching the model's embedding
+//! table; no merges, no OOV, fully reversible.
+
+pub mod corpus;
+
+pub use corpus::{synthetic_corpus, Corpus, TINY_CORPUS};
+
+use crate::util::rng::Pcg32;
+
+/// Byte-level tokenizer (identity over UTF-8 bytes).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub const VOCAB: usize = 256;
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.as_bytes().iter().map(|&b| b as i32).collect()
+    }
+
+    pub fn decode(&self, tokens: &[i32]) -> String {
+        let bytes: Vec<u8> = tokens
+            .iter()
+            .map(|&t| t.clamp(0, 255) as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+/// Sliding-window (x, y) batch sampler over a token stream.
+#[derive(Debug)]
+pub struct BatchSampler {
+    tokens: Vec<i32>,
+    rng: Pcg32,
+    pub batch: usize,
+    pub ctx: usize,
+}
+
+impl BatchSampler {
+    pub fn new(tokens: Vec<i32>, batch: usize, ctx: usize, seed: u64) -> BatchSampler {
+        assert!(
+            tokens.len() > ctx + 1,
+            "corpus too small: {} tokens for ctx {}",
+            tokens.len(),
+            ctx
+        );
+        BatchSampler { tokens, rng: Pcg32::seeded(seed), batch, ctx }
+    }
+
+    /// Sample a batch: x = windows, y = x shifted by one.
+    /// Returned flat, row-major (batch, ctx).
+    pub fn sample(&mut self) -> (Vec<i32>, Vec<i32>) {
+        let mut x = Vec::with_capacity(self.batch * self.ctx);
+        let mut y = Vec::with_capacity(self.batch * self.ctx);
+        for _ in 0..self.batch {
+            let start = self
+                .rng
+                .below((self.tokens.len() - self.ctx - 1) as u64)
+                as usize;
+            x.extend_from_slice(&self.tokens[start..start + self.ctx]);
+            y.extend_from_slice(&self.tokens[start + 1..start + self.ctx + 1]);
+        }
+        (x, y)
+    }
+
+    /// Deterministic evaluation batches covering the stream without
+    /// overlap (for the validation-loss curves of Fig 6).
+    pub fn eval_batches(&self, max_batches: usize) -> Vec<(Vec<i32>, Vec<i32>)> {
+        let mut out = Vec::new();
+        let stride = self.ctx + 1;
+        let mut pos = 0;
+        'outer: for _ in 0..max_batches {
+            let mut x = Vec::with_capacity(self.batch * self.ctx);
+            let mut y = Vec::with_capacity(self.batch * self.ctx);
+            for _ in 0..self.batch {
+                if pos + stride >= self.tokens.len() {
+                    break 'outer;
+                }
+                x.extend_from_slice(&self.tokens[pos..pos + self.ctx]);
+                y.extend_from_slice(&self.tokens[pos + 1..pos + self.ctx + 1]);
+                pos += stride;
+            }
+            out.push((x, y));
+        }
+        out
+    }
+
+    pub fn token_count(&self) -> usize {
+        self.tokens.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokenizer_roundtrip_ascii() {
+        let t = ByteTokenizer;
+        let s = "The quick brown fox! 123";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn tokenizer_roundtrip_utf8() {
+        let t = ByteTokenizer;
+        let s = "héllo wörld — ConSmax";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let t = ByteTokenizer;
+        for tok in t.encode("any text at all ∞") {
+            assert!((0..256).contains(&tok));
+        }
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let toks: Vec<i32> = (0..1000).map(|i| i % 256).collect();
+        let mut s = BatchSampler::new(toks, 4, 32, 0);
+        let (x, y) = s.sample();
+        assert_eq!(x.len(), 4 * 32);
+        assert_eq!(y.len(), 4 * 32);
+    }
+
+    #[test]
+    fn y_is_x_shifted() {
+        let toks: Vec<i32> = (0..500).map(|i| i % 251) .collect();
+        let mut s = BatchSampler::new(toks, 2, 16, 1);
+        let (x, y) = s.sample();
+        for row in 0..2 {
+            for i in 0..15 {
+                assert_eq!(x[row * 16 + i + 1], y[row * 16 + i]);
+            }
+        }
+    }
+
+    #[test]
+    fn sampling_is_deterministic_per_seed() {
+        let toks: Vec<i32> = (0..500).map(|i| (i * 7) % 256).collect();
+        let mut a = BatchSampler::new(toks.clone(), 2, 16, 42);
+        let mut b = BatchSampler::new(toks, 2, 16, 42);
+        assert_eq!(a.sample(), b.sample());
+    }
+
+    #[test]
+    fn eval_batches_nonoverlapping() {
+        let toks: Vec<i32> = (0..2000).map(|i| i % 256).collect();
+        let s = BatchSampler::new(toks, 2, 32, 0);
+        let batches = s.eval_batches(5);
+        assert!(!batches.is_empty());
+        // first tokens of consecutive rows differ by stride
+        let (x0, _) = &batches[0];
+        assert_eq!(x0[0], 0);
+        assert_eq!(x0[32], 33); // next row starts at pos 33
+    }
+
+    #[test]
+    #[should_panic(expected = "corpus too small")]
+    fn tiny_corpus_rejected() {
+        BatchSampler::new(vec![1, 2, 3], 1, 16, 0);
+    }
+}

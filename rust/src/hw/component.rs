@@ -1,0 +1,152 @@
+//! Datapath component library.
+//!
+//! Every normalizer unit is decomposed into instances of these components;
+//! the synthesis estimator multiplies intrinsic costs (calibrated at the
+//! 16nm-proprietary corner against DesignWare-class figures) by the
+//! technology profile. Intrinsic numbers are per *operation* for energy
+//! and per *instance* for area.
+
+/// Component classes used by the three normalizer designs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Kind {
+    /// Register bits (pipeline regs, I/O staging). `bits` = width.
+    Reg,
+    /// Register-file storage (small LUTs: the 2x16-entry ConSmax tables).
+    RegFileBit,
+    /// SRAM storage (score buffers; denser but slower than regfile).
+    SramBit,
+    /// Half-precision multiplier.
+    FpMul16,
+    /// Half-precision adder (accumulator datapath).
+    FpAdd16,
+    /// Single-precision multiplier.
+    FpMul32,
+    /// Single-precision adder / accumulator slice.
+    FpAdd32,
+    /// Single-precision divider (SRT-class, the Softmax normalize step).
+    FpDiv32,
+    /// Integer comparator (max search), 8-bit class.
+    CmpInt8,
+    /// FP comparator (running max on dequantized scores).
+    CmpFp16,
+    /// FP -> INT converter (ConSmax output stage).
+    FpToInt,
+    /// Fixed-function control / FSM overhead (per design).
+    Control,
+}
+
+/// Intrinsic cost at the calibration corner.
+#[derive(Debug, Clone, Copy)]
+pub struct Intrinsic {
+    /// µm² per instance (per bit for storage kinds).
+    pub area_um2: f64,
+    /// pJ per operation at nominal voltage (per-bit for storage kinds:
+    /// read+write averaged).
+    pub energy_pj: f64,
+    /// Combinational delay through the component, ns (storage kinds:
+    /// access time).
+    pub delay_ns: f64,
+}
+
+impl Kind {
+    /// Calibrated intrinsic costs at 16nm FinFET / proprietary flow.
+    ///
+    /// Sources for the calibration: published DesignWare FP datapath area
+    /// in 16nm-class nodes (FP16 mult ≈ 200–300 µm², FP32 mult ≈ 4x FP16,
+    /// SRT FP32 divide ≈ 10–15x FP16 mult), SRAM bitcell + periphery
+    /// ≈ 0.15 µm²/bit for KB-class macros, regfile ≈ 0.5 µm²/bit, and
+    /// switching energies in the 10–100 fJ range per 16-bit FP op.
+    pub fn intrinsic(self) -> Intrinsic {
+        match self {
+            Kind::Reg => Intrinsic { area_um2: 1.2, energy_pj: 0.002, delay_ns: 0.05 },
+            Kind::RegFileBit => Intrinsic { area_um2: 0.50, energy_pj: 0.0008, delay_ns: 0.25 },
+            Kind::SramBit => Intrinsic { area_um2: 0.15, energy_pj: 0.0005, delay_ns: 0.45 },
+            Kind::FpMul16 => Intrinsic { area_um2: 220.0, energy_pj: 0.055, delay_ns: 0.55 },
+            Kind::FpAdd16 => Intrinsic { area_um2: 160.0, energy_pj: 0.040, delay_ns: 0.60 },
+            Kind::FpMul32 => Intrinsic { area_um2: 850.0, energy_pj: 0.210, delay_ns: 0.75 },
+            Kind::FpAdd32 => Intrinsic { area_um2: 420.0, energy_pj: 0.110, delay_ns: 0.80 },
+            Kind::FpDiv32 => Intrinsic { area_um2: 2600.0, energy_pj: 0.900, delay_ns: 1.05 },
+            Kind::CmpInt8 => Intrinsic { area_um2: 35.0, energy_pj: 0.004, delay_ns: 0.20 },
+            Kind::CmpFp16 => Intrinsic { area_um2: 90.0, energy_pj: 0.012, delay_ns: 0.35 },
+            Kind::FpToInt => Intrinsic { area_um2: 110.0, energy_pj: 0.018, delay_ns: 0.40 },
+            Kind::Control => Intrinsic { area_um2: 120.0, energy_pj: 0.010, delay_ns: 0.30 },
+        }
+    }
+
+    /// Component class for the Fig 9 area-breakdown buckets.
+    pub fn breakdown_class(self) -> &'static str {
+        match self {
+            Kind::Reg | Kind::Control => "control+regs",
+            Kind::RegFileBit | Kind::SramBit => "storage",
+            Kind::FpMul16 | Kind::FpMul32 => "multipliers",
+            Kind::FpAdd16 | Kind::FpAdd32 => "adders/accum",
+            Kind::FpDiv32 => "divider",
+            Kind::CmpInt8 | Kind::CmpFp16 => "comparators",
+            Kind::FpToInt => "converters",
+        }
+    }
+}
+
+/// One component instance group in a netlist.
+#[derive(Debug, Clone, Copy)]
+pub struct Instance {
+    pub kind: Kind,
+    /// Instance count (bit count for storage kinds).
+    pub count: f64,
+    /// Activity factor: average operations per processed score element
+    /// (storage kinds: accesses per element). This is what makes energy a
+    /// per-element quantity.
+    pub activity: f64,
+    /// Whether the component sits on the clocked critical path.
+    pub on_critical_path: bool,
+}
+
+impl Instance {
+    pub fn new(kind: Kind, count: f64, activity: f64) -> Instance {
+        Instance { kind, count, activity, on_critical_path: false }
+    }
+
+    pub fn critical(mut self) -> Instance {
+        self.on_critical_path = true;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn storage_density_ordering() {
+        // SRAM must be denser than regfile, which is denser than flops.
+        assert!(Kind::SramBit.intrinsic().area_um2 < Kind::RegFileBit.intrinsic().area_um2);
+        assert!(Kind::RegFileBit.intrinsic().area_um2 < Kind::Reg.intrinsic().area_um2);
+    }
+
+    #[test]
+    fn fp32_costs_more_than_fp16() {
+        assert!(Kind::FpMul32.intrinsic().area_um2 > 2.0 * Kind::FpMul16.intrinsic().area_um2);
+        assert!(Kind::FpAdd32.intrinsic().energy_pj > Kind::FpAdd16.intrinsic().energy_pj);
+    }
+
+    #[test]
+    fn divider_dominates_multiplier() {
+        let div = Kind::FpDiv32.intrinsic();
+        let mul = Kind::FpMul32.intrinsic();
+        assert!(div.area_um2 > 2.0 * mul.area_um2);
+        assert!(div.delay_ns > mul.delay_ns);
+    }
+
+    #[test]
+    fn all_kinds_have_positive_costs() {
+        for k in [
+            Kind::Reg, Kind::RegFileBit, Kind::SramBit, Kind::FpMul16,
+            Kind::FpAdd16, Kind::FpMul32, Kind::FpAdd32, Kind::FpDiv32,
+            Kind::CmpInt8, Kind::CmpFp16, Kind::FpToInt, Kind::Control,
+        ] {
+            let i = k.intrinsic();
+            assert!(i.area_um2 > 0.0 && i.energy_pj > 0.0 && i.delay_ns > 0.0);
+            assert!(!k.breakdown_class().is_empty());
+        }
+    }
+}

@@ -1,0 +1,238 @@
+//! Netlists for the three normalizer units, built from the component
+//! library. Structure follows the paper:
+//!
+//! * **ConSmax** (Fig 4a): bitwidth-split LUT pair + FP16 multiplier chain
+//!   + FP→INT converter. *No* max search, *no* accumulator, *no* divider,
+//!   *no* score buffer — the score stream normalizes element-by-element.
+//! * **Softermax** (Stevens et al.): running max + base-2 LUT exponential
+//!   + running-sum accumulator + reciprocal-and-rescale pass, which forces
+//!   a sequence-length score buffer (double-buffered).
+//! * **Softmax** (DesignWare-style): exact two-pass softmax — max tree,
+//!   FP32 exp (LUT + Taylor refinement), FP32 accumulation, FP32 division,
+//!   with a full-precision double buffer.
+//!
+//! Buffer sizes scale with the token sequence length, which is exactly the
+//! long-context pain the paper describes (§III-A); ConSmax's netlist is
+//! the only one independent of sequence length.
+
+use super::component::{Instance, Kind};
+
+/// A synthesizable unit: name + instance groups.
+#[derive(Debug, Clone)]
+pub struct UnitDesign {
+    pub name: String,
+    pub instances: Vec<Instance>,
+    /// Elements processed per clock in steady state (pipeline throughput).
+    pub elems_per_cycle: f64,
+}
+
+impl UnitDesign {
+    pub fn total_area_instances(&self) -> f64 {
+        self.instances.iter().map(|i| i.count).sum()
+    }
+}
+
+/// Precision of the score input stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    Int8,
+    /// INT16 via the reduction unit: two bitwidth-split units + an extra
+    /// merge multiplier (paper §IV-A2).
+    Int16,
+}
+
+/// The ConSmax unit of Fig 4(a).
+///
+/// Datapath per score element: two 16-entry×16b LUT reads (MSB/LSB nibble)
+/// → FP16 multiply (merge, Eq. 4) → FP16 multiply (×C) → FP→INT convert.
+/// Fully pipelined, one element per cycle, no sequence-length state.
+pub fn consmax_unit(precision: Precision) -> UnitDesign {
+    let units = match precision {
+        Precision::Int8 => 1.0,
+        Precision::Int16 => 2.0,
+    };
+    let mut instances = vec![
+        // 2 LUTs × 16 entries × 16 bits, regfile-class storage
+        Instance::new(Kind::RegFileBit, units * 2.0 * 16.0 * 16.0, 2.0).critical(),
+        // LUT-merge multiplier + C multiplier
+        Instance::new(Kind::FpMul16, units * 2.0, 2.0).critical(),
+        // output converter
+        Instance::new(Kind::FpToInt, units, 1.0),
+        // I/O + pipeline registers: in(8b) + two fp16 stages + out(16b)
+        Instance::new(Kind::Reg, units * (8.0 + 16.0 + 16.0 + 16.0), 4.0),
+        Instance::new(Kind::Control, 1.0, 1.0),
+    ];
+    if precision == Precision::Int16 {
+        // reduction-unit merge multiplier chaining the two 8-bit slices
+        instances.push(Instance::new(Kind::FpMul16, 1.0, 1.0).critical());
+    }
+    UnitDesign {
+        name: match precision {
+            Precision::Int8 => "ConSmax".into(),
+            Precision::Int16 => "ConSmax-16b".into(),
+        },
+        instances,
+        elems_per_cycle: 1.0,
+    }
+}
+
+/// Softermax unit (base-2 partial softmax) for a score vector of `seq`.
+///
+/// Pass 1 streams scores through a running max + base-2 exponential +
+/// running sum, buffering 2^(s−m) per element; pass 2 rescales each
+/// buffered value by the reciprocal of the final sum (and the max
+/// correction). The buffer is double-banked so passes overlap across
+/// tokens. Effective throughput ~1 element/cycle but every element is
+/// touched twice.
+pub fn softermax_unit(seq: usize) -> UnitDesign {
+    let seq = seq as f64;
+    UnitDesign {
+        name: "Softermax".into(),
+        instances: vec![
+            // running max over dequantized scores
+            Instance::new(Kind::CmpFp16, 1.0, 1.0),
+            // subtract (s - max) on the accumulate path
+            Instance::new(Kind::FpAdd16, 1.0, 1.0).critical(),
+            // base-2 exponential: 16-entry LUT + linear-interp mult-add
+            Instance::new(Kind::RegFileBit, 16.0 * 16.0, 1.0),
+            Instance::new(Kind::FpMul16, 1.0, 1.0).critical(),
+            Instance::new(Kind::FpAdd16, 1.0, 1.0),
+            // running-sum accumulator
+            Instance::new(Kind::FpAdd16, 1.0, 1.0).critical(),
+            // reciprocal: seed LUT + 1 Newton step (2 mult + 1 add),
+            // amortized once per vector but synthesized in full
+            Instance::new(Kind::RegFileBit, 32.0 * 16.0, 1.0 / seq),
+            Instance::new(Kind::FpMul16, 2.0, 2.0 / seq),
+            Instance::new(Kind::FpAdd16, 1.0, 1.0 / seq),
+            // rescale multiply on pass 2
+            Instance::new(Kind::FpMul16, 1.0, 1.0),
+            // double-buffered score storage: 2 × seq × 16 bits
+            Instance::new(Kind::SramBit, 2.0 * seq * 16.0, 2.0),
+            // pipeline/IO regs
+            Instance::new(Kind::Reg, 8.0 + 16.0 * 3.0, 4.0),
+            Instance::new(Kind::Control, 2.0, 1.0),
+        ],
+        elems_per_cycle: 1.0,
+    }
+}
+
+/// DesignWare-style exact Softmax unit for a score vector of `seq`.
+///
+/// Two passes in FP32: (1) max search, (2) exp(s−max) via LUT + 2-term
+/// Taylor refinement, accumulate; then a division per element. The full
+/// vector is buffered at 32 bits, double-banked.
+pub fn softmax_unit(seq: usize) -> UnitDesign {
+    let seq = seq as f64;
+    UnitDesign {
+        name: "Softmax".into(),
+        instances: vec![
+            // pass-1 max: FP32-class comparator (8 int8 lanes equiv)
+            Instance::new(Kind::CmpFp16, 2.0, 1.0),
+            // exp datapath: range reduction add + LUT + 2 Taylor terms
+            // (2 mult-add pairs) + reconstruction multiply, FP32
+            Instance::new(Kind::FpAdd32, 1.0, 1.0).critical(),
+            Instance::new(Kind::RegFileBit, 64.0 * 32.0, 1.0),
+            Instance::new(Kind::FpMul32, 3.0, 3.0).critical(),
+            Instance::new(Kind::FpAdd32, 2.0, 2.0),
+            // accumulator
+            Instance::new(Kind::FpAdd32, 1.0, 1.0).critical(),
+            // divider (normalization, per element)
+            Instance::new(Kind::FpDiv32, 1.0, 1.0).critical(),
+            // double-buffered FP32 score storage
+            Instance::new(Kind::SramBit, 2.0 * seq * 32.0, 2.0),
+            // wider pipeline/IO registers
+            Instance::new(Kind::Reg, 8.0 + 32.0 * 4.0, 4.0),
+            Instance::new(Kind::Control, 3.0, 1.0),
+        ],
+        elems_per_cycle: 1.0,
+    }
+}
+
+/// All three designs at the paper's workload (seq tokens, INT8 scores).
+pub fn paper_designs(seq: usize) -> Vec<UnitDesign> {
+    vec![
+        consmax_unit(Precision::Int8),
+        softermax_unit(seq),
+        softmax_unit(seq),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn consmax_has_no_sequence_state() {
+        let a = consmax_unit(Precision::Int8);
+        // identical netlist regardless of seq (nothing takes seq at all):
+        // the type system enforces it — this test documents it.
+        assert!(a.instances.iter().all(|i| i.count < 1000.0));
+    }
+
+    #[test]
+    fn baselines_scale_with_sequence() {
+        let s256 = softermax_unit(256);
+        let s4k = softermax_unit(4096);
+        let bits = |d: &UnitDesign| -> f64 {
+            d.instances
+                .iter()
+                .filter(|i| i.kind == Kind::SramBit)
+                .map(|i| i.count)
+                .sum()
+        };
+        assert!(bits(&s4k) > 10.0 * bits(&s256));
+        let m256 = softmax_unit(256);
+        let m4k = softmax_unit(4096);
+        assert!(bits(&m4k) > 10.0 * bits(&m256));
+    }
+
+    #[test]
+    fn softmax_buffers_twice_the_bits_of_softermax() {
+        let bits = |d: &UnitDesign| -> f64 {
+            d.instances
+                .iter()
+                .filter(|i| i.kind == Kind::SramBit)
+                .map(|i| i.count)
+                .sum()
+        };
+        assert_eq!(bits(&softmax_unit(256)), 2.0 * bits(&softermax_unit(256)));
+    }
+
+    #[test]
+    fn consmax_lacks_divider_and_accumulator() {
+        let d = consmax_unit(Precision::Int8);
+        assert!(d.instances.iter().all(|i| i.kind != Kind::FpDiv32));
+        assert!(d.instances.iter().all(|i| i.kind != Kind::FpAdd32));
+        assert!(d.instances.iter().all(|i| i.kind != Kind::FpAdd16));
+        assert!(d.instances.iter().all(|i| i.kind != Kind::CmpFp16));
+    }
+
+    #[test]
+    fn int16_uses_two_split_units_plus_merge() {
+        let d8 = consmax_unit(Precision::Int8);
+        let d16 = consmax_unit(Precision::Int16);
+        let muls = |d: &UnitDesign| -> f64 {
+            d.instances
+                .iter()
+                .filter(|i| i.kind == Kind::FpMul16)
+                .map(|i| i.count)
+                .sum()
+        };
+        assert_eq!(muls(&d8), 2.0);
+        assert_eq!(muls(&d16), 5.0); // 2x2 split + 1 reduction merge
+    }
+
+    #[test]
+    fn lut_capacity_is_the_bitwidth_split_one() {
+        // 2 x 16 entries x 16 bits = 512 bits, NOT 256 x 16 = 4096: the
+        // whole point of the nibble split (paper §IV-A1).
+        let d = consmax_unit(Precision::Int8);
+        let lut_bits: f64 = d
+            .instances
+            .iter()
+            .filter(|i| i.kind == Kind::RegFileBit)
+            .map(|i| i.count)
+            .sum();
+        assert_eq!(lut_bits, 512.0);
+    }
+}

@@ -1,0 +1,17 @@
+//! Hardware substrate: the synthesis estimator that stands in for the
+//! paper's Synopsys-DC / OpenROAD flows (DESIGN.md §2 documents the
+//! substitution). Netlists for the three normalizer units are costed with
+//! a calibrated component library under four (node, flow) corners to
+//! regenerate Table I, Fig 9 and Fig 10.
+
+pub mod component;
+pub mod designs;
+pub mod report;
+pub mod rtl;
+pub mod synth;
+pub mod tech;
+
+pub use designs::{consmax_unit, paper_designs, softermax_unit, softmax_unit, Precision, UnitDesign};
+pub use report::{fig10, fig9, savings, table1, Table1Row};
+pub use synth::{SynthReport, Synthesizer};
+pub use tech::{EdaFlow, TechNode, TechProfile};

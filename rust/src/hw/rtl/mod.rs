@@ -1,0 +1,27 @@
+//! Verilog RTL for the ConSmax hardware unit (paper §IV / §V-A: "We have
+//! developed a ConSmax prototype using Verilog RTL").
+//!
+//! Two halves:
+//!
+//! * [`verilog`] — emits synthesizable Verilog for the bitwidth-split
+//!   ConSmax unit of Fig 4(a): nibble-split, two 16-entry fp16 ROMs
+//!   (contents generated from [`crate::quant::BitSplitLut`], so the ROM
+//!   image is bit-identical to the software model and the python
+//!   goldens), an fp16 multiplier chain, and the valid-chain pipeline
+//!   control. Plus a self-checking testbench that sweeps all 256 input
+//!   codes.
+//! * [`sim`] — a cycle- and bit-accurate structural simulator of that
+//!   exact design (same registers, same ROMs, same rounding), used to
+//!   verify the RTL's semantics in-repo: every clocked element of the
+//!   Verilog has a field in the simulator, and the tests pin the
+//!   simulator to the software LUT model over the exhaustive grid.
+//!
+//! The generated RTL has no vendor dependencies: the fp16 multiplier is
+//! a behavioral IEEE-754 half multiplier (RNE) that synthesis maps to
+//! DesignWare/generic arithmetic cells.
+
+pub mod sim;
+pub mod verilog;
+
+pub use sim::{ConsmaxUnitSim, SimInput};
+pub use verilog::{emit_consmax_unit, emit_fp16_mul, emit_testbench, RtlBundle};

@@ -1,0 +1,293 @@
+//! Cycle- and bit-accurate structural simulator of the generated
+//! `consmax_unit.v`.
+//!
+//! Every clocked element of the Verilog has a corresponding field here
+//! (stage-1 ROM-output registers, stage-2 merge-product register,
+//! stage-3 output register, and the valid chain), and the combinational
+//! fp16 multiplies use [`crate::util::fp16::F16::mul`] — the same
+//! round-to-nearest-even semantics the behavioral `fp16_mul.v`
+//! implements. Tests pin the simulator against [`BitSplitLut`] (and thus
+//! against the python goldens) over the exhaustive input grid, and check
+//! the pipeline timing contract (latency 3, II 1, reset behaviour).
+
+use crate::quant::BitSplitLut;
+use crate::util::fp16::F16;
+
+/// Input to one clock cycle.
+#[derive(Debug, Clone, Copy)]
+pub struct SimInput {
+    pub valid: bool,
+    pub score: i8,
+    pub c_const: F16,
+}
+
+impl SimInput {
+    pub fn bubble() -> SimInput {
+        SimInput { valid: false, score: 0, c_const: F16::ZERO }
+    }
+}
+
+/// Output of one clock cycle.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SimOutput {
+    pub valid: bool,
+    pub prob: F16,
+}
+
+/// The structural model of `consmax_unit.v`.
+#[derive(Debug, Clone)]
+pub struct ConsmaxUnitSim {
+    rom_msb: [F16; 16],
+    rom_lsb: [F16; 16],
+    // stage 1 registers
+    v1: bool,
+    r_msb: F16,
+    r_lsb: F16,
+    r_c1: F16,
+    // stage 2 registers
+    v2: bool,
+    r_exp: F16,
+    r_c2: F16,
+    // stage 3 registers
+    v3: bool,
+    r_out: F16,
+    /// Cycles elapsed since reset (for timing assertions).
+    pub cycle: u64,
+}
+
+impl ConsmaxUnitSim {
+    /// Build with the ROM image for `scale` (identical to the Verilog
+    /// emitter's tables).
+    pub fn new(scale: f32) -> ConsmaxUnitSim {
+        let lut = BitSplitLut::new(scale);
+        let (msb_bits, lsb_bits) = lut.table_bits();
+        let mut rom_msb = [F16::ZERO; 16];
+        let mut rom_lsb = [F16::ZERO; 16];
+        for i in 0..16 {
+            rom_msb[i] = F16::from_bits(msb_bits[i]);
+            rom_lsb[i] = F16::from_bits(lsb_bits[i]);
+        }
+        ConsmaxUnitSim {
+            rom_msb,
+            rom_lsb,
+            v1: false,
+            r_msb: F16::ZERO,
+            r_lsb: F16::ZERO,
+            r_c1: F16::ZERO,
+            v2: false,
+            r_exp: F16::ZERO,
+            r_c2: F16::ZERO,
+            v3: false,
+            r_out: F16::ZERO,
+            cycle: 0,
+        }
+    }
+
+    /// Asynchronous reset (rst_n low): clears the valid chain.
+    pub fn reset(&mut self) {
+        self.v1 = false;
+        self.v2 = false;
+        self.v3 = false;
+        self.r_msb = F16::ZERO;
+        self.r_lsb = F16::ZERO;
+        self.r_c1 = F16::ZERO;
+        self.r_exp = F16::ZERO;
+        self.r_c2 = F16::ZERO;
+        self.r_out = F16::ZERO;
+        self.cycle = 0;
+    }
+
+    /// One posedge: returns the output *after* the edge (what a checker
+    /// sampling on the following negedge would see).
+    pub fn clock(&mut self, input: SimInput) -> SimOutput {
+        // combinational stage 0: nibble split + ROM read (pre-edge values)
+        let (mi, li) = BitSplitLut::split(input.score);
+        let msb_val = self.rom_msb[mi];
+        let lsb_val = self.rom_lsb[li];
+        // combinational stage 2 input: merge multiply from stage-1 regs
+        let merge_p = self.r_msb.mul(self.r_lsb);
+        // combinational stage 3 input: C multiply from stage-2 regs
+        let final_p = self.r_exp.mul(self.r_c2);
+
+        // clock edge: shift the pipeline (reverse order, like the RTL's
+        // simultaneous nonblocking assignments)
+        self.v3 = self.v2;
+        self.r_out = final_p;
+        self.v2 = self.v1;
+        self.r_exp = merge_p;
+        self.r_c2 = self.r_c1;
+        self.v1 = input.valid;
+        self.r_msb = msb_val;
+        self.r_lsb = lsb_val;
+        self.r_c1 = input.c_const;
+        self.cycle += 1;
+
+        SimOutput { valid: self.v3, prob: self.r_out }
+    }
+
+    /// Stream a slice of scores at full rate (II = 1) and collect the
+    /// valid outputs. Drains the pipeline with bubbles at the end.
+    pub fn run_stream(&mut self, scores: &[i8], c: F16) -> Vec<F16> {
+        let mut out = Vec::with_capacity(scores.len());
+        for &q in scores {
+            let o = self.clock(SimInput { valid: true, score: q, c_const: c });
+            if o.valid {
+                out.push(o.prob);
+            }
+        }
+        for _ in 0..4 {
+            let o = self.clock(SimInput::bubble());
+            if o.valid {
+                out.push(o.prob);
+            }
+        }
+        out
+    }
+
+    /// Pipeline latency in cycles (input edge to output-valid edge).
+    pub const LATENCY: u64 = 3;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bit_exact_vs_software_model_full_grid() {
+        // the central check: RTL semantics == BitSplitLut == python golden
+        let lut = BitSplitLut::paper();
+        let c = F16::from_f32(0.013);
+        let mut sim = ConsmaxUnitSim::new(1.0 / 16.0);
+        let scores: Vec<i8> = (-128i16..=127).map(|q| q as i8).collect();
+        let outs = sim.run_stream(&scores, c);
+        assert_eq!(outs.len(), 256);
+        for (q, got) in scores.iter().zip(&outs) {
+            let want = lut.consmax(*q, c);
+            assert_eq!(
+                got.to_bits(),
+                want.to_bits(),
+                "q={q}: sim {:#06x} vs model {:#06x}",
+                got.to_bits(),
+                want.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn latency_is_three_cycles() {
+        let mut sim = ConsmaxUnitSim::new(1.0 / 16.0);
+        let c = F16::from_f32(1.0);
+        // first input at cycle 1; output must appear exactly at cycle 3
+        let o1 = sim.clock(SimInput { valid: true, score: 0, c_const: c });
+        assert!(!o1.valid);
+        let o2 = sim.clock(SimInput::bubble());
+        assert!(!o2.valid);
+        let o3 = sim.clock(SimInput::bubble());
+        assert!(o3.valid, "latency should be exactly {}", ConsmaxUnitSim::LATENCY);
+        // exp(0)*1.0 = 1.0
+        assert_eq!(o3.prob.to_bits(), F16::ONE.to_bits());
+        let o4 = sim.clock(SimInput::bubble());
+        assert!(!o4.valid, "single input must produce single output");
+    }
+
+    #[test]
+    fn initiation_interval_is_one() {
+        // back-to-back inputs yield back-to-back outputs, no bubbles
+        let mut sim = ConsmaxUnitSim::new(1.0 / 16.0);
+        let c = F16::from_f32(0.5);
+        let mut valid_run = 0;
+        for i in 0..20 {
+            let o = sim.clock(SimInput { valid: true, score: (i % 5) as i8, c_const: c });
+            if o.valid {
+                valid_run += 1;
+            } else {
+                assert!(valid_run == 0, "bubble after outputs started");
+            }
+        }
+        // input sampled at edge N is visible on the return of edge
+        // N + LATENCY - 1 (3 edges involved end to end)
+        assert_eq!(valid_run, 20 - (ConsmaxUnitSim::LATENCY as usize - 1));
+    }
+
+    #[test]
+    fn bubbles_propagate() {
+        let mut sim = ConsmaxUnitSim::new(1.0 / 16.0);
+        let c = F16::from_f32(0.5);
+        // pattern: valid, bubble, valid -> outputs follow same pattern
+        let mut outs = Vec::new();
+        for (v, q) in [(true, 1i8), (false, 0), (true, 2), (false, 0), (false, 0), (false, 0)] {
+            outs.push(sim.clock(SimInput { valid: v, score: q, c_const: c }).valid);
+        }
+        // inputs at edges 1 and 3 emerge on the returns of edges 3 and 5
+        assert_eq!(outs, vec![false, false, true, false, true, false]);
+    }
+
+    #[test]
+    fn reset_clears_pipeline() {
+        let mut sim = ConsmaxUnitSim::new(1.0 / 16.0);
+        let c = F16::from_f32(0.5);
+        sim.clock(SimInput { valid: true, score: 3, c_const: c });
+        sim.clock(SimInput { valid: true, score: 4, c_const: c });
+        sim.reset();
+        assert_eq!(sim.cycle, 0);
+        for _ in 0..3 {
+            assert!(!sim.clock(SimInput::bubble()).valid);
+        }
+    }
+
+    #[test]
+    fn per_element_c_travels_with_data() {
+        // different C per element (mixed-head streams): each output must
+        // use the C that entered with its score
+        let lut = BitSplitLut::paper();
+        let mut sim = ConsmaxUnitSim::new(1.0 / 16.0);
+        let cs = [0.013f32, 0.5, 0.002];
+        let qs = [10i8, 10, 10];
+        let mut outs = Vec::new();
+        for (q, c) in qs.iter().zip(&cs) {
+            let o = sim.clock(SimInput {
+                valid: true,
+                score: *q,
+                c_const: F16::from_f32(*c),
+            });
+            if o.valid {
+                outs.push(o.prob);
+            }
+        }
+        for _ in 0..3 {
+            let o = sim.clock(SimInput::bubble());
+            if o.valid {
+                outs.push(o.prob);
+            }
+        }
+        assert_eq!(outs.len(), 3);
+        for ((q, c), got) in qs.iter().zip(&cs).zip(&outs) {
+            let want = lut.consmax(*q, F16::from_f32(*c));
+            assert_eq!(got.to_bits(), want.to_bits());
+        }
+    }
+
+    #[test]
+    fn matches_other_scales() {
+        for scale in [1.0f32 / 8.0, 1.0 / 32.0, 1.0 / 64.0] {
+            let lut = BitSplitLut::new(scale);
+            let c = F16::from_f32(0.1);
+            let mut sim = ConsmaxUnitSim::new(scale);
+            let scores: Vec<i8> = (-128i16..=127).step_by(3).map(|q| q as i8).collect();
+            let outs = sim.run_stream(&scores, c);
+            for (q, got) in scores.iter().zip(&outs) {
+                assert_eq!(got.to_bits(), lut.consmax(*q, c).to_bits(), "scale {scale} q {q}");
+            }
+        }
+    }
+
+    #[test]
+    fn throughput_one_elem_per_cycle_over_long_stream() {
+        let mut sim = ConsmaxUnitSim::new(1.0 / 16.0);
+        let scores: Vec<i8> = (0..10_000).map(|i| (i % 251) as u8 as i8).collect();
+        let outs = sim.run_stream(&scores, F16::from_f32(0.01));
+        assert_eq!(outs.len(), scores.len());
+        // cycles = inputs + drain
+        assert_eq!(sim.cycle, scores.len() as u64 + 4);
+    }
+}

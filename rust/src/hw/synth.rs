@@ -1,0 +1,288 @@
+//! Synthesis estimator: netlist × technology profile → area / Fmax /
+//! power / energy-per-op, plus the voltage–frequency energy sweep that
+//! produces the U-curves of Fig 10.
+
+use std::collections::BTreeMap;
+
+use super::component::Kind;
+use super::designs::UnitDesign;
+use super::tech::TechProfile;
+
+/// Post-"synthesis" figures for one design at one corner.
+#[derive(Debug, Clone)]
+pub struct SynthReport {
+    pub design: String,
+    pub corner: String,
+    pub area_mm2: f64,
+    pub fmax_mhz: f64,
+    /// Dynamic + leakage power at frequency `f_mhz` and the matching
+    /// minimum voltage.
+    pub energy_pj_per_elem_nominal: f64,
+    pub leakage_mw_nominal: f64,
+    /// Area by breakdown class (Fig 9).
+    pub area_breakdown_um2: BTreeMap<&'static str, f64>,
+}
+
+/// One point of the energy-vs-frequency sweep (Fig 10).
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyPoint {
+    pub freq_mhz: f64,
+    pub voltage: f64,
+    pub energy_pj_per_elem: f64,
+    pub power_mw: f64,
+}
+
+pub struct Synthesizer {
+    pub profile: TechProfile,
+}
+
+impl Synthesizer {
+    pub fn new(profile: TechProfile) -> Synthesizer {
+        Synthesizer { profile }
+    }
+
+    /// "Synthesize" a unit design at this corner.
+    pub fn synthesize(&self, design: &UnitDesign) -> SynthReport {
+        let p = &self.profile;
+        let mut area_um2 = 0.0;
+        let mut energy_pj = 0.0;
+        let mut crit_ns: f64 = 0.0;
+        let mut breakdown: BTreeMap<&'static str, f64> = BTreeMap::new();
+
+        for inst in &design.instances {
+            let i = inst.kind.intrinsic();
+            let a = i.area_um2 * inst.count * p.area_scale;
+            area_um2 += a;
+            *breakdown.entry(inst.kind.breakdown_class()).or_insert(0.0) += a;
+            // Energy per processed element at nominal voltage. `activity`
+            // counts operations (or word accesses) per element for the
+            // whole instance group; storage intrinsics are per *bit*, so
+            // scale by the accessed word width — the array size only costs
+            // area/leakage, not switching.
+            let per_elem = match inst.kind {
+                Kind::RegFileBit | Kind::SramBit | Kind::Reg => {
+                    i.energy_pj * word_bits(inst.kind) * inst.activity
+                }
+                _ => i.energy_pj * inst.activity,
+            };
+            energy_pj += per_elem * p.energy_scale;
+            if inst.on_critical_path {
+                crit_ns = crit_ns.max(i.delay_ns * p.delay_scale);
+            }
+        }
+
+        // clock overhead (setup + skew): 15% of the worst stage
+        let cycle_ns = crit_ns * 1.15;
+        let fmax_mhz = 1000.0 / cycle_ns;
+        let leakage_mw = area_um2 * p.leak_uw_per_um2 / 1000.0;
+
+        SynthReport {
+            design: design.name.clone(),
+            corner: p.name(),
+            area_mm2: area_um2 / 1.0e6,
+            fmax_mhz,
+            energy_pj_per_elem_nominal: energy_pj,
+            leakage_mw_nominal: leakage_mw,
+            area_breakdown_um2: breakdown,
+        }
+    }
+
+    /// Power at nominal supply (no DVFS) when streaming at `f_mhz` — the
+    /// condition Table I's power footnote measures under.
+    pub fn power_mw_nominal(&self, rep: &SynthReport, f_mhz: f64) -> f64 {
+        rep.energy_pj_per_elem_nominal * f_mhz * 1e-3 + rep.leakage_mw_nominal
+    }
+
+    /// Total power when streaming one element per cycle at `f_mhz`
+    /// (voltage scaled to the minimum that sustains `f_mhz`).
+    pub fn power_mw_at(&self, rep: &SynthReport, f_mhz: f64) -> Option<f64> {
+        let v = self.profile.voltage_for_freq(rep.fmax_mhz, f_mhz)?;
+        let dyn_mw = rep.energy_pj_per_elem_nominal
+            * self.profile.energy_factor(v)
+            * f_mhz
+            * 1e-3; // pJ * MHz = µW; /1000 -> mW
+        let leak_mw = rep.leakage_mw_nominal * self.profile.leakage_factor(v);
+        Some(dyn_mw + leak_mw)
+    }
+
+    /// Energy per element at `f_mhz`: dynamic at the scaled voltage plus
+    /// leakage amortized over the cycle. This produces Fig 10's U-shape:
+    /// low f pays leakage per op, high f pays V² overdrive.
+    pub fn energy_pj_at(&self, rep: &SynthReport, f_mhz: f64) -> Option<f64> {
+        let v = self.profile.voltage_for_freq(rep.fmax_mhz, f_mhz)?;
+        let dyn_pj =
+            rep.energy_pj_per_elem_nominal * self.profile.energy_factor(v);
+        // 1 mW = 1e9 pJ/s; at f_mhz * 1e6 elements/s the leakage charge
+        // per element is leak_mw * 1e9 / (f_mhz * 1e6) = leak_mw * 1e3 / f_mhz.
+        let leak_pj = rep.leakage_mw_nominal * self.profile.leakage_factor(v)
+            * 1e3
+            / f_mhz;
+        Some(dyn_pj + leak_pj)
+    }
+
+    /// Sweep energy/op across the frequency range (Fig 10) and find the
+    /// optimum-energy frequency.
+    pub fn energy_sweep(
+        &self,
+        rep: &SynthReport,
+        points: usize,
+    ) -> Vec<EnergyPoint> {
+        let fmax_v = self
+            .profile
+            .freq_at_voltage(rep.fmax_mhz, self.profile.vmax);
+        let f_lo = rep.fmax_mhz * 0.05;
+        (0..points)
+            .filter_map(|i| {
+                let f = f_lo + (fmax_v - f_lo) * i as f64 / (points - 1) as f64;
+                let v = self.profile.voltage_for_freq(rep.fmax_mhz, f)?;
+                Some(EnergyPoint {
+                    freq_mhz: f,
+                    voltage: v,
+                    energy_pj_per_elem: self.energy_pj_at(rep, f)?,
+                    power_mw: self.power_mw_at(rep, f)?,
+                })
+            })
+            .collect()
+    }
+
+    /// The optimum-energy operating point (Fig 10's marked minima).
+    pub fn optimum_energy(&self, rep: &SynthReport) -> EnergyPoint {
+        self.energy_sweep(rep, 200)
+            .into_iter()
+            .min_by(|a, b| {
+                a.energy_pj_per_elem
+                    .partial_cmp(&b.energy_pj_per_elem)
+                    .unwrap()
+            })
+            .expect("non-empty sweep")
+    }
+}
+
+/// Storage word width per access for energy accounting.
+fn word_bits(kind: Kind) -> f64 {
+    match kind {
+        Kind::RegFileBit => 16.0,
+        Kind::SramBit => 16.0,
+        _ => 1.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::designs::{consmax_unit, paper_designs, softermax_unit, softmax_unit, Precision};
+    use crate::hw::tech::{EdaFlow, TechNode, TechProfile};
+
+    fn synth16() -> Synthesizer {
+        Synthesizer::new(TechProfile::new(TechNode::Fin16, EdaFlow::Proprietary))
+    }
+
+    #[test]
+    fn consmax_wins_area_and_power_16nm() {
+        let s = synth16();
+        let reports: Vec<SynthReport> =
+            paper_designs(256).iter().map(|d| s.synthesize(d)).collect();
+        let (c, soft, sm) = (&reports[0], &reports[1], &reports[2]);
+        assert!(c.area_mm2 < soft.area_mm2);
+        assert!(soft.area_mm2 < sm.area_mm2);
+        let pc = s.power_mw_at(c, 500.0).unwrap();
+        let ps = s.power_mw_at(soft, 500.0).unwrap();
+        assert!(pc < ps);
+    }
+
+    #[test]
+    fn table1_16nm_magnitudes() {
+        // shape check against the paper's 16nm column: ConSmax ~0.0008 mm²
+        // (within ~2x), Softermax/ConSmax area ratio in [1.8, 5],
+        // Softmax/ConSmax in [6, 30].
+        let s = synth16();
+        let c = s.synthesize(&consmax_unit(Precision::Int8));
+        let soft = s.synthesize(&softermax_unit(256));
+        let sm = s.synthesize(&softmax_unit(256));
+        assert!(c.area_mm2 > 0.0003 && c.area_mm2 < 0.0020, "{}", c.area_mm2);
+        let r1 = soft.area_mm2 / c.area_mm2;
+        let r2 = sm.area_mm2 / c.area_mm2;
+        assert!((1.8..5.0).contains(&r1), "softermax/consmax area {r1}");
+        assert!((6.0..30.0).contains(&r2), "softmax/consmax area {r2}");
+    }
+
+    #[test]
+    fn fmax_ordering_matches_paper() {
+        // paper: ConSmax 1250 > Softermax 1111 > Softmax 909 (16nm)
+        let s = synth16();
+        let f = |d: &UnitDesign| s.synthesize(d).fmax_mhz;
+        let fc = f(&consmax_unit(Precision::Int8));
+        let fs = f(&softermax_unit(256));
+        let fm = f(&softmax_unit(256));
+        assert!(fc > fs && fs > fm, "fc={fc} fs={fs} fm={fm}");
+        assert!(fc > 900.0 && fc < 2500.0, "{fc}");
+    }
+
+    #[test]
+    fn sky130_slower_and_bigger() {
+        let s16 = synth16();
+        let s130 = Synthesizer::new(TechProfile::new(
+            TechNode::Sky130,
+            EdaFlow::Proprietary,
+        ));
+        let d = consmax_unit(Precision::Int8);
+        let r16 = s16.synthesize(&d);
+        let r130 = s130.synthesize(&d);
+        assert!(r130.area_mm2 > 5.0 * r16.area_mm2);
+        assert!(r130.fmax_mhz < r16.fmax_mhz / 1.5);
+    }
+
+    #[test]
+    fn energy_curve_is_u_shaped() {
+        let s = synth16();
+        let rep = s.synthesize(&consmax_unit(Precision::Int8));
+        let sweep = s.energy_sweep(&rep, 50);
+        assert!(sweep.len() > 40);
+        let e_lo = sweep.first().unwrap().energy_pj_per_elem;
+        let e_hi = sweep.last().unwrap().energy_pj_per_elem;
+        let e_min = s.optimum_energy(&rep).energy_pj_per_elem;
+        assert!(e_min < e_lo, "leakage should dominate at low f");
+        assert!(e_min < e_hi, "overdrive V² should dominate at high f");
+    }
+
+    #[test]
+    fn optimum_inside_frequency_range() {
+        let s = synth16();
+        for d in paper_designs(256) {
+            let rep = s.synthesize(&d);
+            let opt = s.optimum_energy(&rep);
+            assert!(opt.freq_mhz > 0.0);
+            assert!(
+                opt.freq_mhz
+                    <= s.profile.freq_at_voltage(rep.fmax_mhz, s.profile.vmax)
+                        + 1.0
+            );
+        }
+    }
+
+    #[test]
+    fn power_beyond_envelope_is_none() {
+        let s = synth16();
+        let rep = s.synthesize(&consmax_unit(Precision::Int8));
+        assert!(s.power_mw_at(&rep, rep.fmax_mhz * 3.0).is_none());
+    }
+
+    #[test]
+    fn breakdown_sums_to_total() {
+        let s = synth16();
+        for d in paper_designs(256) {
+            let rep = s.synthesize(&d);
+            let sum: f64 = rep.area_breakdown_um2.values().sum();
+            assert!((sum / 1e6 - rep.area_mm2).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn softmax_breakdown_dominated_by_storage_and_fp32(){
+        let s = synth16();
+        let rep = s.synthesize(&softmax_unit(256));
+        let storage = rep.area_breakdown_um2["storage"];
+        let total = rep.area_mm2 * 1e6;
+        assert!(storage / total > 0.25, "storage frac {}", storage / total);
+    }
+}

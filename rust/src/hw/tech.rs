@@ -1,0 +1,214 @@
+//! Technology nodes and EDA-flow profiles.
+//!
+//! The paper synthesizes three designs under (16nm FinFET, Synopsys DC)
+//! and (SkyWater 130nm, OpenROAD). Neither PDK nor toolchain is available
+//! here, so this module captures both as *scaling profiles* applied to a
+//! component-level cost model calibrated at the 16nm-proprietary corner
+//! (see `component.rs`). The profile factors are drawn from public
+//! node-to-node scaling data (gate density, FO4 delay, CV² energy) and
+//! from the flow-efficiency gap the paper itself reports between DC and
+//! OpenROAD. Absolute numbers are estimates; the *ratios between designs*
+//! — Table I's actual claim — come from the datapath structure, not from
+//! these constants.
+
+/// Process node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TechNode {
+    /// 16nm FinFET, 0.8 V nominal (the paper's proprietary corner).
+    Fin16,
+    /// SkyWater 130nm CMOS, 1.8 V nominal core (paper uses 0.8 V for the
+    /// 130nm power tests; we keep their operating point).
+    Sky130,
+}
+
+/// Synthesis flow.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdaFlow {
+    /// Synopsys Design Compiler class results.
+    Proprietary,
+    /// OpenROAD / open-source flow: the paper's own data shows lower
+    /// achieved Fmax and looser placement for the same RTL.
+    OpenSource,
+}
+
+/// Scaling profile relative to the (Fin16, Proprietary) calibration corner.
+#[derive(Debug, Clone, Copy)]
+pub struct TechProfile {
+    pub node: TechNode,
+    pub flow: EdaFlow,
+    /// Area multiplier per component.
+    pub area_scale: f64,
+    /// Combinational delay multiplier (FO4 ratio).
+    pub delay_scale: f64,
+    /// Switching energy multiplier (C·V² ratio).
+    pub energy_scale: f64,
+    /// Leakage power density, µW per µm² at nominal voltage.
+    pub leak_uw_per_um2: f64,
+    /// Nominal supply (V).
+    pub vnom: f64,
+    /// Threshold-ish voltage floor for the linear f(V) model (V).
+    pub vt: f64,
+    /// Max overdrive supply (V).
+    pub vmax: f64,
+}
+
+impl TechProfile {
+    pub fn new(node: TechNode, flow: EdaFlow) -> TechProfile {
+        // Node scaling vs 16nm FinFET.
+        // area: 130nm has ~12x the per-gate area of a 16nm FinFET library
+        //   cell once FinFET density and routing overhead are folded in
+        //   (consistent with the paper's measured 9-16x area ratios).
+        // delay: FO4(130nm)/FO4(16nm) ~ 2.4 at matched corners.
+        // energy: C and V both larger; CV^2 per gate ~ 25x.
+        // Sky130 runs at its 1.8 V nominal core supply (the paper's 130nm
+        // power column is consistent with a nominal-voltage test, not a
+        // DVFS point): CV² vs the 16nm/0.8V corner is ~ 8x capacitance x
+        // 5x V² ≈ 40x, plus wire-dominated old-node caps → ~90x.
+        let (area_scale, delay_scale, energy_scale, leak, vnom, vt, vmax) =
+            match node {
+                TechNode::Fin16 => (1.0, 1.0, 1.0, 0.12, 0.80, 0.38, 0.95),
+                TechNode::Sky130 => (12.0, 2.4, 90.0, 0.004, 1.80, 0.55, 1.90),
+            };
+        // Flow derating: the paper's Fig 9(c)/10(c) comparison shows the
+        // open flow trails DC on Fmax and area for identical RTL on the
+        // bigger designs (~15-40%); energy follows area.
+        let (fa, fd, fe) = match flow {
+            EdaFlow::Proprietary => (1.0, 1.0, 1.0),
+            EdaFlow::OpenSource => (1.30, 1.25, 1.20),
+        };
+        TechProfile {
+            node,
+            flow,
+            area_scale: area_scale * fa,
+            delay_scale: delay_scale * fd,
+            energy_scale: energy_scale * fe,
+            leak_uw_per_um2: leak,
+            vnom,
+            vt,
+            vmax,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        let n = match self.node {
+            TechNode::Fin16 => "16nm",
+            TechNode::Sky130 => "130nm",
+        };
+        let f = match self.flow {
+            EdaFlow::Proprietary => "proprietary",
+            EdaFlow::OpenSource => "opensource",
+        };
+        format!("{n}/{f}")
+    }
+
+    /// Frequency achievable at supply `v`, given the critical path at
+    /// nominal voltage. Linear alpha-power-ish model:
+    /// f(v) = fnom * (v - vt) / (vnom - vt).
+    pub fn freq_at_voltage(&self, fnom_mhz: f64, v: f64) -> f64 {
+        if v <= self.vt {
+            return 0.0;
+        }
+        fnom_mhz * (v - self.vt) / (self.vnom - self.vt)
+    }
+
+    /// Minimum supply voltage to run at `f_mhz` (inverse of the above),
+    /// clamped to [vt + margin, vmax]. Returns None when f > f(vmax).
+    pub fn voltage_for_freq(&self, fnom_mhz: f64, f_mhz: f64) -> Option<f64> {
+        let v = self.vt + (f_mhz / fnom_mhz) * (self.vnom - self.vt);
+        if v > self.vmax + 1e-12 {
+            None
+        } else {
+            Some(v.max(self.vt + 0.05))
+        }
+    }
+
+    /// Dynamic-energy multiplier at supply `v` relative to nominal: (v/vnom)^2.
+    pub fn energy_factor(&self, v: f64) -> f64 {
+        (v / self.vnom) * (v / self.vnom)
+    }
+
+    /// Leakage-power multiplier at supply `v` (roughly linear-exponential;
+    /// a gentle super-linear term captures DIBL).
+    pub fn leakage_factor(&self, v: f64) -> f64 {
+        let r = v / self.vnom;
+        r * r.sqrt()
+    }
+
+    /// All four corners the paper evaluates.
+    pub fn all_corners() -> Vec<TechProfile> {
+        vec![
+            TechProfile::new(TechNode::Fin16, EdaFlow::Proprietary),
+            TechProfile::new(TechNode::Sky130, EdaFlow::Proprietary),
+            TechProfile::new(TechNode::Fin16, EdaFlow::OpenSource),
+            TechProfile::new(TechNode::Sky130, EdaFlow::OpenSource),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_corner_is_identity() {
+        let p = TechProfile::new(TechNode::Fin16, EdaFlow::Proprietary);
+        assert_eq!(p.area_scale, 1.0);
+        assert_eq!(p.delay_scale, 1.0);
+        assert_eq!(p.energy_scale, 1.0);
+    }
+
+    #[test]
+    fn sky130_is_bigger_slower_hungrier() {
+        let p16 = TechProfile::new(TechNode::Fin16, EdaFlow::Proprietary);
+        let p130 = TechProfile::new(TechNode::Sky130, EdaFlow::Proprietary);
+        assert!(p130.area_scale > 5.0 * p16.area_scale);
+        assert!(p130.delay_scale > p16.delay_scale);
+        assert!(p130.energy_scale > 10.0 * p16.energy_scale);
+    }
+
+    #[test]
+    fn open_flow_derates_every_axis() {
+        let prop = TechProfile::new(TechNode::Fin16, EdaFlow::Proprietary);
+        let open = TechProfile::new(TechNode::Fin16, EdaFlow::OpenSource);
+        assert!(open.area_scale > prop.area_scale);
+        assert!(open.delay_scale > prop.delay_scale);
+        assert!(open.energy_scale > prop.energy_scale);
+    }
+
+    #[test]
+    fn voltage_frequency_roundtrip() {
+        let p = TechProfile::new(TechNode::Fin16, EdaFlow::Proprietary);
+        let fnom = 1000.0;
+        let v = p.voltage_for_freq(fnom, 600.0).unwrap();
+        let f = p.freq_at_voltage(fnom, v);
+        assert!((f - 600.0).abs() < 1e-9, "{f}");
+    }
+
+    #[test]
+    fn overclock_needs_overdrive() {
+        let p = TechProfile::new(TechNode::Fin16, EdaFlow::Proprietary);
+        // nominal fmax at vnom; a little past it needs v > vnom
+        let v = p.voltage_for_freq(1000.0, 1100.0).unwrap();
+        assert!(v > p.vnom);
+        // far past vmax is unreachable
+        assert!(p.voltage_for_freq(1000.0, 2500.0).is_none());
+    }
+
+    #[test]
+    fn below_vt_no_switching() {
+        let p = TechProfile::new(TechNode::Sky130, EdaFlow::Proprietary);
+        assert_eq!(p.freq_at_voltage(500.0, p.vt - 0.01), 0.0);
+    }
+
+    #[test]
+    fn energy_factor_quadratic() {
+        let p = TechProfile::new(TechNode::Fin16, EdaFlow::Proprietary);
+        assert!((p.energy_factor(p.vnom) - 1.0).abs() < 1e-12);
+        assert!((p.energy_factor(p.vnom / 2.0) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn four_corners() {
+        assert_eq!(TechProfile::all_corners().len(), 4);
+    }
+}

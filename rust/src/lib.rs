@@ -1,0 +1,36 @@
+//! # ConSmax — full-stack reproduction
+//!
+//! *ConSmax: Hardware-Friendly Alternative Softmax with Learnable
+//! Parameters* (Liu et al., 2024) as a three-layer Rust + JAX + Pallas
+//! system:
+//!
+//! * **Layer 1** (`python/compile/kernels/`): the ConSmax normalizer (and
+//!   softmax / softermax baselines) as Pallas kernels, plus the bit-exact
+//!   bitwidth-split LUT model of the paper's hardware unit.
+//! * **Layer 2** (`python/compile/model.py`): the paper's GPT benchmark
+//!   model (6L / 6H / 384-embd / 256-ctx) with a pluggable score
+//!   normalizer, AOT-lowered to HLO text once at build time.
+//! * **Layer 3** (this crate): the coordinator that owns everything at
+//!   run time — training loop, evaluation, generation server, plus the
+//!   simulated hardware substrates that regenerate the paper's evaluation
+//!   (synthesis estimator for Table I / Figs 9–10, cycle-accurate
+//!   attention-pipeline simulator for Fig 5).
+//!
+//! Python never runs on the request path: `make artifacts` lowers the JAX
+//! entry points to `artifacts/*.hlo.txt`, and [`runtime`] loads and
+//! executes them through PJRT (`xla` crate).
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod hw;
+pub mod metrics;
+pub mod quant;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub use config::RunConfig;

@@ -1,0 +1,558 @@
+//! `consmax` — the coordinator CLI.
+//!
+//! ```text
+//! consmax train        train a GPT variant via the AOT train-step
+//! consmax compare      Fig 6: train softmax vs consmax on identical data
+//! consmax eval         validation loss/perplexity of a checkpoint
+//! consmax sweep-init   Fig 8: β/γ initialization grid
+//! consmax generate     sample text from a checkpoint
+//! consmax serve-demo   batched generation service + latency stats
+//! consmax hw-report    Table I + savings ratios (synthesis estimator)
+//! consmax sim          Fig 5: pipeline schedules, utilization, savings
+//! consmax info         artifact manifest + platform summary
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use consmax::coordinator::{
+    best_point, sweep_init, GenRequest, Generator, ParamStore, Server,
+    SweepOptions, TrainOptions, Trainer,
+};
+use consmax::data::{BatchSampler, Corpus};
+use consmax::hw::{savings, table1, EdaFlow};
+use consmax::metrics::perplexity;
+use consmax::runtime::Engine;
+use consmax::sim::{simulate, NormKind, Schedule, Workload};
+use consmax::util::bench::print_table;
+use consmax::util::cli::{render_help, Args, Spec};
+use consmax::util::rng::Pcg32;
+
+fn specs() -> Vec<Spec> {
+    vec![
+        Spec::opt_default("artifacts", "artifacts", "artifacts directory"),
+        Spec::opt_default("config", "tiny", "model config (tiny|paper)"),
+        Spec::opt_default("normalizer", "consmax", "softmax|consmax|softermax"),
+        Spec::opt_default("steps", "100", "training steps"),
+        Spec::opt_default("seed", "0", "RNG seed"),
+        Spec::opt_default("corpus", "tiny", "tiny|synthetic|<path>"),
+        Spec::opt_default("corpus-words", "100000", "synthetic corpus size"),
+        Spec::opt_default("log-every", "10", "metric logging stride"),
+        Spec::opt_default("eval-every", "0", "validation stride (0 = off)"),
+        Spec::opt("checkpoint", "checkpoint path to save/load"),
+        Spec::opt_default("out", "runs", "output directory for metrics"),
+        Spec::opt_default("prompt", "The attention ", "generation prompt"),
+        Spec::opt_default("max-new", "64", "tokens to generate"),
+        Spec::opt_default("temperature", "0", "sampling temperature (0=greedy)"),
+        Spec::opt_default("requests", "16", "serve-demo request count"),
+        Spec::opt_default("seq", "256", "sim/hw: context length"),
+        Spec::opt_default("tokens", "1", "sim: tokens to process"),
+        Spec::opt_default("norm", "consmax", "sim: normalizer"),
+        Spec::opt_default("schedule", "auto", "sim: token|element|auto"),
+        Spec::opt_default("flow", "proprietary", "hw: proprietary|opensource"),
+        Spec::opt_default("warmup-steps", "30", "sweep: steps per grid point"),
+        Spec::flag("no-trace-params", "disable beta/gamma series logging"),
+        Spec::flag("quant", "eval: use the INT8 hardware normalizer path"),
+        Spec::opt("beta0", "train: pin all beta inits to this value (Fig 8 winner)"),
+        Spec::opt("gamma0", "train: pin all gamma inits to this value"),
+        Spec::flag("help", "show help"),
+    ]
+}
+
+fn main() {
+    env_logger_lite();
+    let args = match Args::parse(std::env::args().skip(1), &specs()) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if args.has_flag("help") || args.subcommand.is_none() {
+        print!(
+            "{}",
+            render_help(
+                "consmax",
+                "ConSmax paper reproduction coordinator",
+                &[
+                    ("train", "train a GPT variant via the AOT train-step"),
+                    ("compare", "Fig 6: softmax vs consmax on identical data"),
+                    ("eval", "validation loss of a checkpoint"),
+                    ("sweep-init", "Fig 8: beta/gamma initialization grid"),
+                    ("generate", "sample text from a checkpoint"),
+                    ("serve-demo", "batched generation + latency stats"),
+                    ("hw-report", "Table I + savings ratios"),
+                    ("sim", "Fig 5 pipeline simulation"),
+                    ("info", "artifact manifest summary"),
+                ],
+                &specs()
+            )
+        );
+        return;
+    }
+    let cmd = args.subcommand.clone().unwrap();
+    let code = match run(&cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+/// Minimal env_logger replacement: RUST_LOG=debug|warn|error, default info.
+fn env_logger_lite() {
+    struct L;
+    impl log::Log for L {
+        fn enabled(&self, m: &log::Metadata) -> bool {
+            m.level() <= log::max_level()
+        }
+        fn log(&self, r: &log::Record) {
+            if self.enabled(r.metadata()) {
+                eprintln!("[{}] {}", r.level(), r.args());
+            }
+        }
+        fn flush(&self) {}
+    }
+    static LOGGER: L = L;
+    let _ = log::set_logger(&LOGGER);
+    let lvl = match std::env::var("RUST_LOG").as_deref() {
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("warn") => log::LevelFilter::Warn,
+        Ok("error") => log::LevelFilter::Error,
+        _ => log::LevelFilter::Info,
+    };
+    log::set_max_level(lvl);
+}
+
+fn load_corpus(args: &Args) -> Result<Corpus> {
+    Ok(match args.get("corpus").unwrap_or("tiny") {
+        "tiny" => Corpus::tiny(),
+        "synthetic" => Corpus::synthetic(
+            args.get_usize("corpus-words", 100_000)?,
+            args.get_u64("seed", 0)?,
+        ),
+        path => Corpus::from_file(std::path::Path::new(path))?,
+    })
+}
+
+fn build_trainer<'e>(
+    engine: &'e Engine,
+    args: &Args,
+    normalizer: &str,
+) -> Result<Trainer<'e>> {
+    let key = format!("{}_{normalizer}", args.get_string("config", "tiny"));
+    let cfg = engine.manifest.config(&key)?.clone();
+    let seed = args.get_u64("seed", 0)?;
+    let corpus = load_corpus(args)?;
+    let (train_text, val_text) = corpus.split();
+    let tok = consmax::data::ByteTokenizer;
+    let train =
+        BatchSampler::new(tok.encode(train_text), cfg.train_batch, cfg.ctx, seed);
+    let val =
+        BatchSampler::new(tok.encode(val_text), cfg.train_batch, cfg.ctx, seed);
+
+    let store = match args.get("checkpoint") {
+        Some(p) if std::path::Path::new(p).exists() => {
+            ParamStore::load(std::path::Path::new(p), &cfg)?
+        }
+        _ => ParamStore::init(&cfg, seed)?,
+    };
+    let mut store = store;
+    if let (Some(b), Some(g)) = (args.get("beta0"), args.get("gamma0")) {
+        let b: f32 = b.parse().map_err(|_| anyhow::anyhow!("bad beta0"))?;
+        let g: f32 = g.parse().map_err(|_| anyhow::anyhow!("bad gamma0"))?;
+        consmax::coordinator::sweep::pin_beta_gamma(&mut store, b, g);
+        log::info!("pinned beta0={b} gamma0={g}");
+    }
+    log::info!(
+        "model {key}: {} params, corpus {} ({} bytes)",
+        store.param_count(),
+        corpus.name,
+        corpus.len_bytes()
+    );
+    Trainer::new(engine, &key, store, train, Some(val))
+}
+
+fn train_opts(args: &Args) -> Result<TrainOptions> {
+    Ok(TrainOptions {
+        steps: args.get_usize("steps", 100)?,
+        log_every: args.get_usize("log-every", 10)?.max(1),
+        eval_every: args.get_usize("eval-every", 0)?,
+        eval_batches: 4,
+        trace_params: !args.has_flag("no-trace-params"),
+        checkpoint: args.get("checkpoint").map(PathBuf::from),
+    })
+}
+
+fn run(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "train" => {
+            let engine = Engine::new(args.get_string("artifacts", "artifacts"))?;
+            let normalizer = args.get_string("normalizer", "consmax");
+            let mut tr = build_trainer(&engine, args, &normalizer)?;
+            let report = tr.train(&train_opts(args)?)?;
+            let out = PathBuf::from(args.get_string("out", "runs"))
+                .join(format!("{}_train.jsonl", tr.cfg.key));
+            tr.metrics.save(&out)?;
+            println!(
+                "trained {} steps: loss {:.4} (ppl {:.1}), {:.2} steps/s; metrics -> {}",
+                report.steps,
+                report.final_loss,
+                report.final_ppl,
+                report.steps_per_s,
+                out.display()
+            );
+            Ok(())
+        }
+        "compare" => {
+            let engine = Engine::new(args.get_string("artifacts", "artifacts"))?;
+            let mut rows = Vec::new();
+            for norm in ["softmax", "consmax"] {
+                let mut tr = build_trainer(&engine, args, norm)?;
+                let mut opts = train_opts(args)?;
+                // keep per-normalizer checkpoints so deployment-form
+                // (quantized) evaluation can reuse the trained weights
+                opts.checkpoint = Some(
+                    PathBuf::from(args.get_string("out", "runs"))
+                        .join(format!("{}_compare.ckpt", tr.cfg.key)),
+                );
+                let report = tr.train(&opts)?;
+                let val = tr.evaluate(4)?;
+                let out = PathBuf::from(args.get_string("out", "runs"))
+                    .join(format!("{}_compare.jsonl", tr.cfg.key));
+                tr.metrics.save(&out)?;
+                rows.push(vec![
+                    norm.to_string(),
+                    format!("{:.4}", report.final_loss),
+                    format!("{:.1}", report.final_ppl),
+                    format!("{:.4}", val),
+                    format!("{:.1}", perplexity(val)),
+                ]);
+            }
+            print_table(
+                "Fig 6 reproduction: Softmax vs ConSmax (same data, same seed)",
+                &["normalizer", "train loss", "train ppl", "val loss", "val ppl"],
+                &rows,
+            );
+            let sm: f64 = rows[0][3].parse().unwrap();
+            let cs: f64 = rows[1][3].parse().unwrap();
+            println!(
+                "\nConSmax val-loss gap vs Softmax: {:+.2}%",
+                (cs - sm) / sm * 100.0
+            );
+            Ok(())
+        }
+        "eval" => {
+            let engine = Engine::new(args.get_string("artifacts", "artifacts"))?;
+            let normalizer = args.get_string("normalizer", "consmax");
+            let mut tr = build_trainer(&engine, args, &normalizer)?;
+            let loss = if args.has_flag("quant") {
+                tr.evaluate_quantized(8)?
+            } else {
+                tr.evaluate(8)?
+            };
+            let tag = if args.has_flag("quant") { " (INT8 hw normalizer)" } else { "" };
+            println!("val loss {loss:.4}  ppl {:.2}{tag}", perplexity(loss));
+            Ok(())
+        }
+        "sweep-init" => {
+            let engine = Engine::new(args.get_string("artifacts", "artifacts"))?;
+            let key = format!(
+                "{}_{}",
+                args.get_string("config", "tiny"),
+                args.get_string("normalizer", "consmax")
+            );
+            let cfg = engine.manifest.config(&key)?.clone();
+            let corpus = load_corpus(args)?;
+            let (train_text, val_text) = corpus.split();
+            let tok = consmax::data::ByteTokenizer;
+            let opts = SweepOptions {
+                warmup_steps: args.get_usize("warmup-steps", 30)?,
+                seed: args.get_u64("seed", 0)?,
+                ..SweepOptions::default()
+            };
+            let points = sweep_init(
+                &engine,
+                &cfg,
+                &tok.encode(train_text),
+                &tok.encode(val_text),
+                &opts,
+            )?;
+            let rows: Vec<Vec<String>> = points
+                .iter()
+                .map(|p| {
+                    vec![
+                        format!("{:.2}", p.beta0),
+                        format!("{:.0}", p.gamma0),
+                        format!("{:.4}", p.final_train_loss),
+                        format!("{:.4}", p.val_loss),
+                        format!("{:.2}", perplexity(p.val_loss)),
+                    ]
+                })
+                .collect();
+            print_table(
+                "Fig 8 reproduction: beta/gamma initialization sweep",
+                &["beta0", "gamma0", "train loss", "val loss", "val ppl"],
+                &rows,
+            );
+            if let Some(b) = best_point(&points) {
+                println!(
+                    "\nbest init: beta0={} gamma0={} (val loss {:.4})",
+                    b.beta0, b.gamma0, b.val_loss
+                );
+            }
+            Ok(())
+        }
+        "generate" => {
+            let engine = Engine::new(args.get_string("artifacts", "artifacts"))?;
+            let normalizer = args.get_string("normalizer", "consmax");
+            let key = format!("{}_{normalizer}", args.get_string("config", "tiny"));
+            let cfg = engine.manifest.config(&key)?.clone();
+            let store = match args.get("checkpoint") {
+                Some(p) => ParamStore::load(std::path::Path::new(p), &cfg)?,
+                None => {
+                    log::warn!("no checkpoint: generating from random weights");
+                    ParamStore::init(&cfg, args.get_u64("seed", 0)?)?
+                }
+            };
+            let mut g = Generator::new(&engine, &store, args.get_u64("seed", 0)?)?;
+            let prompt = args.get_string("prompt", "The attention ");
+            let out = g.generate_batch(
+                &[prompt.clone()],
+                args.get_usize("max-new", 64)?,
+                args.get_f64("temperature", 0.0)? as f32,
+            )?;
+            println!("{prompt}{}", out[0]);
+            Ok(())
+        }
+        "serve-demo" => {
+            let engine = Engine::new(args.get_string("artifacts", "artifacts"))?;
+            let normalizer = args.get_string("normalizer", "consmax");
+            let key = format!("{}_{normalizer}", args.get_string("config", "tiny"));
+            let cfg = engine.manifest.config(&key)?.clone();
+            let store = match args.get("checkpoint") {
+                Some(p) => ParamStore::load(std::path::Path::new(p), &cfg)?,
+                None => ParamStore::init(&cfg, args.get_u64("seed", 0)?)?,
+            };
+            let gen = Generator::new(&engine, &store, 1)?;
+            let mut server = Server::new(gen);
+            let n = args.get_usize("requests", 16)?;
+            let max_new = args.get_usize("max-new", 32)?;
+            let mut rng = Pcg32::seeded(args.get_u64("seed", 0)?);
+            let prompts = [
+                "The transformer ", "Attention lets ", "Hardware that ",
+                "During training ", "A lookup table ", "Long contexts ",
+            ];
+            for id in 0..n as u64 {
+                server.submit(GenRequest {
+                    id,
+                    prompt: prompts[rng.below(prompts.len() as u64) as usize].into(),
+                    max_new_tokens: max_new,
+                    temperature: 0.8,
+                });
+            }
+            let t0 = std::time::Instant::now();
+            let responses = server.run_to_completion()?;
+            let wall = t0.elapsed().as_secs_f64();
+            println!(
+                "served {} requests in {wall:.2}s ({:.1} tok/s); \
+                 latency p50 {:.0} ms p95 {:.0} ms (batch sizes up to {})",
+                responses.len(),
+                server.tokens_out as f64 / wall,
+                server.latencies.percentile(50.0).unwrap_or(0.0) / 1e3,
+                server.latencies.percentile(95.0).unwrap_or(0.0) / 1e3,
+                server.generator.max_batch(),
+            );
+            Ok(())
+        }
+        "hw-report" => {
+            let flow = match args.get("flow").unwrap_or("proprietary") {
+                "proprietary" => EdaFlow::Proprietary,
+                "opensource" => EdaFlow::OpenSource,
+                other => bail!("unknown flow {other:?}"),
+            };
+            let seq = args.get_usize("seq", 256)?;
+            let rows = table1(flow, seq);
+            let table: Vec<Vec<String>> = rows
+                .iter()
+                .map(|r| {
+                    vec![
+                        r.design.clone(),
+                        r.corner.clone(),
+                        format!("{:.0}", r.fmax_mhz),
+                        format!("{:.5}", r.area_mm2),
+                        format!("{:.3}", r.power_mw),
+                        format!("{:.2}", r.opt_energy_pj),
+                        format!("{:.0}", r.opt_energy_freq_mhz),
+                    ]
+                })
+                .collect();
+            print_table(
+                &format!("Table I reproduction ({flow:?} flow, seq {seq})"),
+                &["design", "corner", "Fmax MHz", "area mm2", "power mW",
+                  "opt E pJ", "@ MHz"],
+                &table,
+            );
+            let s_rows: Vec<Vec<String>> = savings(&rows)
+                .iter()
+                .map(|s| {
+                    vec![
+                        s.corner.clone(),
+                        s.vs.clone(),
+                        format!("{:.2}x", s.power_ratio),
+                        format!("{:.2}x", s.area_ratio),
+                    ]
+                })
+                .collect();
+            print_table(
+                "ConSmax savings",
+                &["corner", "vs", "power", "area"],
+                &s_rows,
+            );
+            Ok(())
+        }
+        "sim" => {
+            let seq = args.get_usize("seq", 256)?;
+            let tokens = args.get_usize("tokens", 1)?;
+            let norm = match args.get("norm").unwrap_or("consmax") {
+                "softmax" => NormKind::Softmax,
+                "softermax" => NormKind::Softermax,
+                "consmax" => NormKind::ConSmax,
+                "partial" => NormKind::PartialSoftmax { chunks: 8 },
+                other => bail!("unknown normalizer {other:?}"),
+            };
+            let schedule = match args.get("schedule").unwrap_or("auto") {
+                "token" => Schedule::TokenPipeline,
+                "element" => Schedule::ElementWise,
+                "auto" => {
+                    if norm.is_streaming() {
+                        Schedule::ElementWise
+                    } else {
+                        Schedule::TokenPipeline
+                    }
+                }
+                other => bail!("unknown schedule {other:?}"),
+            };
+            let w = Workload { tokens, ..Workload::paper_generation(seq) };
+            let r = simulate(&w, norm, schedule);
+            println!(
+                "{} / {:?}: {} cycles, utilization {:.1}% \
+                 (QK busy {}, norm busy {}, PV busy {})",
+                norm.name(),
+                schedule,
+                r.total_cycles,
+                r.utilization() * 100.0,
+                r.qk.busy_cycles,
+                r.norm_unit.busy_cycles,
+                r.pv.busy_cycles
+            );
+            let base = simulate(&w, NormKind::Softmax, Schedule::TokenPipeline);
+            println!(
+                "vs Softmax token-pipeline: {:.2}x speedup ({:.1}% time saving)",
+                r.speedup_over(&base),
+                (1.0 - r.total_cycles as f64 / base.total_cycles as f64) * 100.0
+            );
+            Ok(())
+        }
+        "report" => {
+            // render run metrics (Fig 6/7 style) from runs/*.jsonl
+            use consmax::coordinator::{report_compare, report_run};
+            match args.positional.len() {
+                1 => print!("{}", report_run(std::path::Path::new(&args.positional[0]))?),
+                2 => print!(
+                    "{}",
+                    report_compare(
+                        std::path::Path::new(&args.positional[0]),
+                        std::path::Path::new(&args.positional[1])
+                    )?
+                ),
+                _ => bail!("usage: consmax report <run.jsonl> [other.jsonl]"),
+            }
+            Ok(())
+        }
+        "rtl-gen" => {
+            // emit the synthesizable Verilog bundle (paper §IV prototype)
+            let dir = PathBuf::from(args.get_string("out", "runs")).join("rtl");
+            let scale = 1.0 / 16.0;
+            let bundle = consmax::hw::rtl::RtlBundle::generate(scale);
+            bundle.write_to(&dir)?;
+            for (name, text) in &bundle.files {
+                println!(
+                    "wrote {} ({} lines)",
+                    dir.join(name).display(),
+                    text.lines().count()
+                );
+            }
+            println!(
+                "\nROM image is bit-identical to quant::BitSplitLut (scale {scale}); \
+                 simulate with any Verilog simulator:\n  iverilog -o tb {}/*.v && ./tb",
+                dir.display()
+            );
+            Ok(())
+        }
+        "accel-report" => {
+            // end-to-end accelerator integration (paper §IV-B)
+            use consmax::sim::{compare_designs, AttentionConfig};
+            let cfg = match args.get("config").unwrap_or("tiny") {
+                "paper" | "tiny" => AttentionConfig::paper_gpt(),
+                "gpt2" => AttentionConfig::gpt2_small_1k(),
+                other => bail!("unknown accel config {other:?}"),
+            };
+            let rows: Vec<Vec<String>> = compare_designs(
+                &cfg,
+                consmax::hw::TechNode::Fin16,
+                EdaFlow::Proprietary,
+                500.0,
+            )
+            .iter()
+            .map(|r| {
+                vec![
+                    r.design.clone(),
+                    format!("{:.1}", r.token_latency_us),
+                    format!("{:.2}", r.norm_energy_nj),
+                    format!("{:.2}", r.tensorcore_energy_nj),
+                    format!("{:.2}", r.stall_leakage_nj),
+                    format!("{:.0}%", r.utilization * 100.0),
+                ]
+            })
+            .collect();
+            print_table(
+                &format!(
+                    "Accelerator integration: per-token attention cost \
+                     ({}L/{}H/hd{} @ seq {}, 16nm, 500 MHz)",
+                    cfg.n_layer, cfg.n_head, cfg.head_dim, cfg.seq
+                ),
+                &["normalizer", "latency us", "norm nJ", "tensorcore nJ",
+                  "stall-leak nJ", "util"],
+                &rows,
+            );
+            Ok(())
+        }
+        "info" => {
+            let engine = Engine::new(args.get_string("artifacts", "artifacts"))?;
+            println!("platform: {}", engine.platform());
+            println!("configs:");
+            for (key, cfg) in &engine.manifest.configs {
+                println!(
+                    "  {key}: {}L/{}H/{}d ctx {} vocab {} ({} params)",
+                    cfg.n_layer, cfg.n_head, cfg.n_embd, cfg.ctx, cfg.vocab,
+                    cfg.param_count()
+                );
+            }
+            println!("entries:");
+            for (name, e) in &engine.manifest.entries {
+                println!(
+                    "  {name}: {} in / {} out - {}",
+                    e.inputs.len(),
+                    e.outputs.len(),
+                    e.doc
+                );
+            }
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; run with --help"),
+    }
+}

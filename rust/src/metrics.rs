@@ -1,0 +1,205 @@
+//! Run metrics: scalar time series (loss, perplexity, beta/gamma traces,
+//! latency percentiles) with JSON-lines persistence. This is what the
+//! trainer and server log through, and what EXPERIMENTS.md numbers are
+//! extracted from.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// A named series of (step, value) points.
+#[derive(Debug, Clone, Default)]
+pub struct Series {
+    pub points: Vec<(u64, f64)>,
+}
+
+impl Series {
+    pub fn push(&mut self, step: u64, value: f64) {
+        self.points.push((step, value));
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.points.last().map(|&(_, v)| v)
+    }
+
+    pub fn min(&self) -> Option<f64> {
+        self.points
+            .iter()
+            .map(|&(_, v)| v)
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    /// Mean over the last `n` points (smoothing for noisy loss curves).
+    pub fn tail_mean(&self, n: usize) -> Option<f64> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let tail = &self.points[self.points.len().saturating_sub(n)..];
+        Some(tail.iter().map(|&(_, v)| v).sum::<f64>() / tail.len() as f64)
+    }
+}
+
+/// Metric registry for one run.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub series: BTreeMap<String, Series>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn log(&mut self, name: &str, step: u64, value: f64) {
+        self.series.entry(name.to_string()).or_default().push(step, value);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Series> {
+        self.series.get(name)
+    }
+
+    /// Serialize every series as JSON lines: {"series": "...", "step": s, "value": v}.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for (name, series) in &self.series {
+            for &(step, value) in &series.points {
+                let row = Json::from_pairs([
+                    ("series".into(), Json::from(name.as_str())),
+                    ("step".into(), Json::from(step as f64)),
+                    ("value".into(), Json::from(value)),
+                ]);
+                out.push_str(&row.to_string());
+                out.push('\n');
+            }
+        }
+        out
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        f.write_all(self.to_jsonl().as_bytes())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Metrics> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        let mut m = Metrics::new();
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let v = Json::parse(line)?;
+            let name = v.get("series").as_str().context("series")?;
+            let step = v.get("step").as_f64().context("step")? as u64;
+            let value = v.get("value").as_f64().context("value")?;
+            m.log(name, step, value);
+        }
+        Ok(m)
+    }
+}
+
+/// Latency recorder with percentile queries (serving metrics).
+#[derive(Debug, Default, Clone)]
+pub struct LatencyRecorder {
+    samples_us: Vec<f64>,
+}
+
+impl LatencyRecorder {
+    pub fn record_us(&mut self, us: f64) {
+        self.samples_us.push(us);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples_us.is_empty()
+    }
+
+    pub fn percentile(&self, p: f64) -> Option<f64> {
+        if self.samples_us.is_empty() {
+            return None;
+        }
+        let mut s = self.samples_us.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // nearest-rank method: idx = ceil(p/100 * N) - 1
+        let rank = ((p / 100.0) * s.len() as f64).ceil() as isize - 1;
+        let idx = rank.max(0) as usize;
+        Some(s[idx.min(s.len() - 1)])
+    }
+
+    pub fn mean(&self) -> Option<f64> {
+        if self.samples_us.is_empty() {
+            return None;
+        }
+        Some(self.samples_us.iter().sum::<f64>() / self.samples_us.len() as f64)
+    }
+}
+
+/// Perplexity from mean NLL (the paper's Fig 6 metric).
+pub fn perplexity(mean_nll: f64) -> f64 {
+    mean_nll.exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_basics() {
+        let mut m = Metrics::new();
+        m.log("loss", 0, 5.5);
+        m.log("loss", 10, 4.2);
+        m.log("ppl", 10, 66.7);
+        let loss = m.get("loss").unwrap();
+        assert_eq!(loss.last(), Some(4.2));
+        assert_eq!(loss.min(), Some(4.2));
+        assert_eq!(loss.tail_mean(1), Some(4.2));
+        assert_eq!(loss.tail_mean(10), Some((5.5 + 4.2) / 2.0));
+    }
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let mut m = Metrics::new();
+        m.log("a", 1, 2.0);
+        m.log("b", 3, -0.5);
+        let dir = std::env::temp_dir().join("consmax_metrics_test");
+        let path = dir.join("metrics.jsonl");
+        m.save(&path).unwrap();
+        let m2 = Metrics::load(&path).unwrap();
+        assert_eq!(m2.get("a").unwrap().points, vec![(1, 2.0)]);
+        assert_eq!(m2.get("b").unwrap().points, vec![(3, -0.5)]);
+    }
+
+    #[test]
+    fn latency_percentiles() {
+        let mut l = LatencyRecorder::default();
+        for i in 1..=100 {
+            l.record_us(i as f64);
+        }
+        assert_eq!(l.percentile(50.0), Some(50.0));
+        assert_eq!(l.percentile(99.0), Some(99.0));
+        assert_eq!(l.percentile(0.0), Some(1.0));
+        assert!((l.mean().unwrap() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_latency() {
+        let l = LatencyRecorder::default();
+        assert_eq!(l.percentile(50.0), None);
+        assert_eq!(l.mean(), None);
+    }
+
+    #[test]
+    fn perplexity_of_uniform_byte_model() {
+        // ln(256) nats -> ppl 256
+        assert!((perplexity((256f64).ln()) - 256.0).abs() < 1e-9);
+    }
+}

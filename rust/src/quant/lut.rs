@@ -1,0 +1,256 @@
+//! Bit-exact model of the bitwidth-split LUT datapath (paper Fig 4a,
+//! Eq. 4).
+//!
+//! An INT8 score code `q` splits into a signed MSB nibble `m = q >> 4`
+//! and an unsigned LSB nibble `l = q & 0xF`; two 16-entry fp16 tables
+//! hold `exp(16·s·m)` and `exp(s·l)` and an fp16 multiplier merges them:
+//!
+//! ```text
+//! exp(q·s) = MSB_LUT[m] × LSB_LUT[l]          (one fp16 rounding)
+//! ConSmax(q) = (MSB_LUT[m] × LSB_LUT[l]) × C  (one more fp16 rounding)
+//! ```
+//!
+//! Every arithmetic step is IEEE binary16 with round-to-nearest-even —
+//! exactly what the synthesized datapath computes — so outputs are
+//! bit-identical to the python oracle and (per the paper's claim) to the
+//! RTL.
+
+use crate::util::fp16::F16;
+
+/// One bitwidth-split unit: the two 16-entry LUTs for a given scale.
+#[derive(Debug, Clone)]
+pub struct BitSplitLut {
+    pub scale: f32,
+    msb: [F16; 16],
+    lsb: [F16; 16],
+}
+
+impl BitSplitLut {
+    /// Build the tables for input codes dequantized as `x = q * scale`.
+    pub fn new(scale: f32) -> BitSplitLut {
+        let mut msb = [F16::ZERO; 16];
+        let mut lsb = [F16::ZERO; 16];
+        for (i, slot) in msb.iter_mut().enumerate() {
+            let m = i as f32 - 8.0; // signed nibble -8..7 at index m+8
+            *slot = F16::from_f32((16.0 * scale * m).exp());
+        }
+        for (i, slot) in lsb.iter_mut().enumerate() {
+            *slot = F16::from_f32((scale * i as f32).exp());
+        }
+        BitSplitLut { scale, msb, lsb }
+    }
+
+    /// The paper's operating point (scale 1/16).
+    pub fn paper() -> BitSplitLut {
+        BitSplitLut::new(1.0 / 16.0)
+    }
+
+    /// Split a signed INT8 code into (MSB table index, LSB nibble).
+    #[inline]
+    pub fn split(q: i8) -> (usize, usize) {
+        let m = (q as i32) >> 4; // arithmetic shift: -8..7
+        let l = (q as i32) & 0xF;
+        ((m + 8) as usize, l as usize)
+    }
+
+    /// The raw exponential `fp16(exp(q*scale))` through the LUT datapath.
+    #[inline]
+    pub fn exp(&self, q: i8) -> F16 {
+        let (mi, li) = Self::split(q);
+        self.msb[mi].mul(self.lsb[li])
+    }
+
+    /// Full ConSmax unit output: LUT-exp then ×C, both in fp16.
+    #[inline]
+    pub fn consmax(&self, q: i8, c: F16) -> F16 {
+        self.exp(q).mul(c)
+    }
+
+    /// Vectorized form used by the serving post-processor.
+    ///
+    /// Perf: the unit's response is a pure function of the 256 input
+    /// codes, so we materialize the full response table once (256 × two
+    /// fp16 multiplies) and stream lookups after — bit-identical to the
+    /// per-element path (asserted in tests) and ~20x faster on long
+    /// streams (EXPERIMENTS.md §Perf).
+    pub fn consmax_slice(&self, qs: &[i8], c: F16) -> Vec<F16> {
+        let table = self.response_table(c);
+        qs.iter().map(|&q| table[q as u8 as usize]).collect()
+    }
+
+    /// The full 256-entry response table for a fixed C (index = q as u8,
+    /// i.e. two's-complement bit pattern).
+    pub fn response_table(&self, c: F16) -> [F16; 256] {
+        let mut t = [F16::ZERO; 256];
+        for i in 0..256usize {
+            t[i] = self.consmax(i as u8 as i8, c);
+        }
+        t
+    }
+
+    /// Table contents as bit patterns (hw ROM image / golden comparison).
+    pub fn table_bits(&self) -> ([u16; 16], [u16; 16]) {
+        let mut m = [0u16; 16];
+        let mut l = [0u16; 16];
+        for i in 0..16 {
+            m[i] = self.msb[i].to_bits();
+            l[i] = self.lsb[i].to_bits();
+        }
+        (m, l)
+    }
+
+    /// Total LUT capacity in bits (the §IV-A1 claim: 512, not 4096).
+    pub const CAPACITY_BITS: usize = 2 * 16 * 16;
+}
+
+/// The Level-2 reduction unit (paper Fig 4a right, §IV-A2): chains
+/// bitwidth-split units through an fp16 multiplier chain to support wider
+/// input precision (mixed-precision computing).
+#[derive(Debug, Clone)]
+pub struct ReductionUnit {
+    /// low-byte unit (unsigned byte: two unsigned nibbles)
+    lo_msb: [F16; 16],
+    lo_lsb: [F16; 16],
+    /// high-byte factors, wider format internally (see ref.py note): the
+    /// per-byte factor is produced in f32 and rounded once to fp16.
+    scale: f32,
+}
+
+impl ReductionUnit {
+    pub fn new(scale: f32) -> ReductionUnit {
+        let mut lo_msb = [F16::ZERO; 16];
+        let mut lo_lsb = [F16::ZERO; 16];
+        for i in 0..16 {
+            lo_msb[i] = F16::from_f32((16.0 * scale * i as f32).exp());
+            lo_lsb[i] = F16::from_f32((scale * i as f32).exp());
+        }
+        ReductionUnit { lo_msb, lo_lsb, scale }
+    }
+
+    /// Split signed INT16 into (signed high byte, unsigned low byte).
+    #[inline]
+    pub fn split(q: i16) -> (i32, u32) {
+        ((q as i32) >> 8, (q as i32 & 0xFF) as u32)
+    }
+
+    /// fp16(exp(q*scale)) for INT16 codes via the multiplier chain.
+    pub fn exp16(&self, q: i16) -> F16 {
+        let (hi, lo) = Self::split(q);
+        // high byte: wider-format LUT pair, merged in f32, rounded once
+        let hs = 256.0 * self.scale;
+        let m = hi >> 4;
+        let l = hi & 0xF;
+        let e_hi = F16::from_f32(
+            ((16.0 * hs * m as f32).exp()) * ((hs * l as f32).exp()),
+        );
+        // low byte: fp16 nibble tables exactly like the 8-bit unit
+        let mi = (lo >> 4) as usize;
+        let li = (lo & 0xF) as usize;
+        let e_lo = self.lo_msb[mi].mul(self.lo_lsb[li]);
+        e_hi.mul(e_lo)
+    }
+
+    pub fn consmax16(&self, q: i16, c: F16) -> F16 {
+        self.exp16(q).mul(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_reassembles() {
+        for q in i8::MIN..=i8::MAX {
+            let (mi, li) = BitSplitLut::split(q);
+            assert_eq!(16 * (mi as i32 - 8) + li as i32, q as i32);
+            assert!(mi < 16 && li < 16);
+        }
+    }
+
+    #[test]
+    fn lossless_against_direct_fp16_exp() {
+        // the paper's "lossless" claim: LUT path vs direct exp, within one
+        // fp16 multiply rounding, over the EXHAUSTIVE input grid
+        let lut = BitSplitLut::paper();
+        for q in i8::MIN..=i8::MAX {
+            let got = lut.exp(q).to_f32() as f64;
+            let want = ((q as f64) / 16.0).exp();
+            let rel = (got - want).abs() / want;
+            assert!(rel < 2.0_f64.powi(-10), "q={q} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn matches_scalar_reference_bitwise() {
+        // independent recomputation: fp16(fp16(exp(16sm)) * fp16(exp(sl)))
+        let lut = BitSplitLut::new(1.0 / 32.0);
+        for q in i8::MIN..=i8::MAX {
+            let m = ((q as i32) >> 4) as f32;
+            let l = ((q as i32) & 0xF) as f32;
+            let a = F16::from_f32((16.0 / 32.0 * m).exp());
+            let b = F16::from_f32((l / 32.0).exp());
+            assert_eq!(lut.exp(q).to_bits(), a.mul(b).to_bits(), "q={q}");
+        }
+    }
+
+    #[test]
+    fn consmax_applies_constant() {
+        let lut = BitSplitLut::paper();
+        let c = F16::from_f32(0.01);
+        for q in [-128i8, -1, 0, 1, 127] {
+            let want = lut.exp(q).mul(c);
+            assert_eq!(lut.consmax(q, c).to_bits(), want.to_bits());
+        }
+    }
+
+    #[test]
+    fn capacity_is_512_bits() {
+        assert_eq!(BitSplitLut::CAPACITY_BITS, 512);
+    }
+
+    #[test]
+    fn monotone_on_the_grid() {
+        // exp is monotone; the LUT path must preserve ordering despite
+        // fp16 rounding (adjacent codes differ by e^(1/16) ≈ 6.4%, far
+        // above fp16 resolution)
+        let lut = BitSplitLut::paper();
+        let mut prev = lut.exp(-128).to_f32();
+        for q in -127i16..=127 {
+            let cur = lut.exp(q as i8).to_f32();
+            assert!(cur > prev, "q={q}");
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn reduction_unit_splits_correctly() {
+        for &q in &[-32768i16, -257, -256, -255, -1, 0, 1, 255, 256, 32767] {
+            let (hi, lo) = ReductionUnit::split(q);
+            assert_eq!(256 * hi + lo as i32, q as i32, "q={q}");
+            assert!(lo < 256);
+        }
+    }
+
+    #[test]
+    fn reduction_unit_accuracy() {
+        let ru = ReductionUnit::new(1.0 / 256.0);
+        for q in (-2048i16..2048).step_by(7) {
+            let got = ru.exp16(q).to_f32() as f64;
+            let want = (q as f64 / 256.0).exp();
+            let rel = (got - want).abs() / want;
+            assert!(rel < 2e-3, "q={q} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn table_bits_stable() {
+        let (m1, l1) = BitSplitLut::paper().table_bits();
+        let (m2, l2) = BitSplitLut::paper().table_bits();
+        assert_eq!(m1, m2);
+        assert_eq!(l1, l2);
+        // known entry: index 8 is m=0 -> exp(0) = 1.0 = 0x3C00
+        assert_eq!(m1[8], 0x3C00);
+        assert_eq!(l1[0], 0x3C00);
+    }
+}

@@ -1,0 +1,114 @@
+//! Quantization + the bit-exact software model of the bitwidth-split
+//! ConSmax hardware unit (paper §IV-A).
+//!
+//! This is the Rust twin of `python/compile/kernels/lut.py`/`ref.py`; the
+//! two are pinned to identical output *bits* by the golden vectors in
+//! `artifacts/golden.json` (see `rust/tests/quant_cross_validation.rs`).
+//! The serving coordinator uses it to post-process INT8 score streams the
+//! way the real accelerator would, and the hw substrate uses its table
+//! sizes for area accounting.
+
+pub mod lut;
+
+pub use lut::{BitSplitLut, ReductionUnit};
+
+use crate::util::fp16::F16;
+
+/// Symmetric INT8 quantizer with a power-of-two scale (hardware-friendly:
+/// dequantization is an exponent shift).
+#[derive(Debug, Clone, Copy)]
+pub struct Int8Quantizer {
+    pub scale: f32,
+}
+
+impl Int8Quantizer {
+    pub fn new(scale: f32) -> Int8Quantizer {
+        assert!(scale > 0.0);
+        Int8Quantizer { scale }
+    }
+
+    /// The paper's operating point: scores in [-8, 8) at 1/16 resolution.
+    pub fn paper() -> Int8Quantizer {
+        Int8Quantizer::new(1.0 / 16.0)
+    }
+
+    /// Round-to-nearest (ties away from zero, like `f32::round`), saturating.
+    pub fn quantize(&self, x: f32) -> i8 {
+        let q = (x / self.scale).round();
+        q.clamp(-128.0, 127.0) as i8
+    }
+
+    pub fn dequantize(&self, q: i8) -> f32 {
+        q as f32 * self.scale
+    }
+
+    pub fn quantize_slice(&self, xs: &[f32]) -> Vec<i8> {
+        xs.iter().map(|&x| self.quantize(x)).collect()
+    }
+
+    /// Max absolute dequantization error for in-range inputs.
+    pub fn max_error(&self) -> f32 {
+        self.scale / 2.0
+    }
+
+    /// Pick the scale that covers `max_abs` with full code range,
+    /// rounded to a power of two (hardware shift-dequant).
+    pub fn fit(max_abs: f32) -> Int8Quantizer {
+        let raw = max_abs / 127.0;
+        let exp = raw.log2().ceil();
+        Int8Quantizer::new(exp.exp2())
+    }
+}
+
+/// The merged inference constant C = exp(-beta)/gamma (paper Eq. 3; see
+/// `ref.py` for the sign-typo note), rounded to the fp16 the multiplier
+/// consumes.
+pub fn merge_beta_gamma(beta: f32, gamma: f32) -> F16 {
+    F16::from_f32((-beta).exp() / gamma)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_roundtrip_error_bounded() {
+        let q = Int8Quantizer::paper();
+        for i in 0..1000 {
+            let x = -7.9 + 15.8 * (i as f32 / 999.0);
+            let err = (q.dequantize(q.quantize(x)) - x).abs();
+            assert!(err <= q.max_error() + 1e-6, "x={x} err={err}");
+        }
+    }
+
+    #[test]
+    fn quantize_saturates() {
+        let q = Int8Quantizer::paper();
+        assert_eq!(q.quantize(1e9), 127);
+        assert_eq!(q.quantize(-1e9), -128);
+    }
+
+    #[test]
+    fn exact_codes_roundtrip() {
+        let q = Int8Quantizer::paper();
+        for code in -128i16..=127 {
+            let code = code as i8;
+            assert_eq!(q.quantize(q.dequantize(code)), code);
+        }
+    }
+
+    #[test]
+    fn fit_covers_range_with_pow2_scale() {
+        let q = Int8Quantizer::fit(10.0);
+        assert!(q.scale.log2().fract() == 0.0, "scale {}", q.scale);
+        assert_eq!(q.quantize(10.0).unsigned_abs() as i32 as f32 * q.scale >= 9.0, true);
+        assert!(q.quantize(10.0) < 127 || q.quantize(10.0) == 127);
+    }
+
+    #[test]
+    fn merge_matches_f32_math() {
+        let c = merge_beta_gamma(1.5, 100.0);
+        let want = F16::from_f32((-1.5f32).exp() / 100.0);
+        assert_eq!(c.to_bits(), want.to_bits());
+    }
+}

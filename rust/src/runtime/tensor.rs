@@ -1,0 +1,317 @@
+//! Host-side tensors: the marshalling boundary between the coordinator
+//! and PJRT literals. Deliberately minimal — a dtype tag, a shape, and a
+//! flat byte buffer — so the hot loop can move data without reshaping or
+//! copy amplification.
+
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, Literal};
+
+use crate::util::fp16::F16;
+
+/// Supported element types (the subset the AOT artifacts use).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    F16,
+    Bf16,
+    I32,
+    I8,
+    U8,
+}
+
+impl DType {
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::F16 | DType::Bf16 => 2,
+            DType::I8 | DType::U8 => 1,
+        }
+    }
+
+    /// Parse the numpy-style dtype names the manifest uses.
+    pub fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "float32" => DType::F32,
+            "float16" => DType::F16,
+            "bfloat16" => DType::Bf16,
+            "int32" => DType::I32,
+            "int8" => DType::I8,
+            "uint8" => DType::U8,
+            other => bail!("unsupported dtype {other:?}"),
+        })
+    }
+
+    pub fn to_element_type(self) -> ElementType {
+        match self {
+            DType::F32 => ElementType::F32,
+            DType::F16 => ElementType::F16,
+            DType::Bf16 => ElementType::Bf16,
+            DType::I32 => ElementType::S32,
+            DType::I8 => ElementType::S8,
+            DType::U8 => ElementType::U8,
+        }
+    }
+
+    pub fn from_element_type(ty: ElementType) -> Result<DType> {
+        Ok(match ty {
+            ElementType::F32 => DType::F32,
+            ElementType::F16 => DType::F16,
+            ElementType::Bf16 => DType::Bf16,
+            ElementType::S32 => DType::I32,
+            ElementType::S8 => DType::I8,
+            ElementType::U8 => DType::U8,
+            other => bail!("unsupported element type {other:?}"),
+        })
+    }
+}
+
+/// A host tensor: flat little-endian bytes + shape + dtype.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl HostTensor {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    // ----- constructors ---------------------------------------------------
+
+    pub fn from_f32(values: &[f32], shape: &[usize]) -> HostTensor {
+        assert_eq!(values.len(), shape.iter().product::<usize>());
+        HostTensor {
+            dtype: DType::F32,
+            shape: shape.to_vec(),
+            data: bulk_bytes(values),
+        }
+    }
+
+    pub fn from_i32(values: &[i32], shape: &[usize]) -> HostTensor {
+        assert_eq!(values.len(), shape.iter().product::<usize>());
+        HostTensor {
+            dtype: DType::I32,
+            shape: shape.to_vec(),
+            data: bulk_bytes(values),
+        }
+    }
+
+    pub fn from_i8(values: &[i8], shape: &[usize]) -> HostTensor {
+        assert_eq!(values.len(), shape.iter().product::<usize>());
+        HostTensor {
+            dtype: DType::I8,
+            shape: shape.to_vec(),
+            data: values.iter().map(|&v| v as u8).collect(),
+        }
+    }
+
+    pub fn from_f16_bits(bits: &[u16], shape: &[usize]) -> HostTensor {
+        assert_eq!(bits.len(), shape.iter().product::<usize>());
+        let mut data = Vec::with_capacity(bits.len() * 2);
+        for b in bits {
+            data.extend_from_slice(&b.to_le_bytes());
+        }
+        HostTensor { dtype: DType::F16, shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar_f32(v: f32) -> HostTensor {
+        HostTensor::from_f32(&[v], &[])
+    }
+
+    pub fn scalar_i32(v: i32) -> HostTensor {
+        HostTensor::from_i32(&[v], &[])
+    }
+
+    pub fn zeros(dtype: DType, shape: &[usize]) -> HostTensor {
+        let n: usize = shape.iter().product();
+        HostTensor { dtype, shape: shape.to_vec(), data: vec![0; n * dtype.size()] }
+    }
+
+    // ----- views ------------------------------------------------------------
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            bail!("tensor is {:?}, not F32", self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != DType::I32 {
+            bail!("tensor is {:?}, not I32", self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_f16_bits(&self) -> Result<Vec<u16>> {
+        if self.dtype != DType::F16 {
+            bail!("tensor is {:?}, not F16", self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(2)
+            .map(|c| u16::from_le_bytes([c[0], c[1]]))
+            .collect())
+    }
+
+    /// f16 tensor widened to f32 values.
+    pub fn f16_to_f32(&self) -> Result<Vec<f32>> {
+        Ok(self
+            .as_f16_bits()?
+            .into_iter()
+            .map(|b| F16::from_bits(b).to_f32())
+            .collect())
+    }
+
+    pub fn scalar_as_f32(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        if v.len() != 1 {
+            bail!("expected scalar, got {} elements", v.len());
+        }
+        Ok(v[0])
+    }
+
+    // ----- PJRT marshalling -------------------------------------------------
+
+    pub fn to_literal(&self) -> Result<Literal> {
+        Literal::create_from_shape_and_untyped_data(
+            self.dtype.to_element_type(),
+            &self.shape,
+            &self.data,
+        )
+        .context("creating literal")
+    }
+
+    pub fn from_literal(lit: &Literal) -> Result<HostTensor> {
+        let ty = lit.ty().context("literal type")?;
+        let dtype = DType::from_element_type(ty)?;
+        let shape = lit.array_shape().context("literal shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+
+        // The crate's typed copies can't express 2-byte floats (its F16 /
+        // Bf16 marker types are zero-sized — copying "through" them would
+        // scribble past a dangling Vec pointer). Widening f16→f32 is exact,
+        // so narrow dtypes are read via a convert() and re-rounded: the
+        // original bits are recovered exactly.
+        let data: Vec<u8> = match ty {
+            // 4-byte scalars: bulk-reinterpret the typed vec (this host is
+            // little-endian; HostTensor bytes are defined little-endian).
+            // ~5x faster than per-element to_le_bytes on big tensors.
+            xla::ElementType::F32 => bulk_bytes(&lit.to_vec::<f32>()?),
+            xla::ElementType::S32 => bulk_bytes(&lit.to_vec::<i32>()?),
+            xla::ElementType::U8 => lit.to_vec::<u8>()?,
+            xla::ElementType::S8 => {
+                lit.to_vec::<i8>()?.into_iter().map(|v| v as u8).collect()
+            }
+            xla::ElementType::F16 => {
+                let wide = lit.convert(xla::PrimitiveType::F32)?;
+                let vals = wide.to_vec::<f32>()?;
+                let mut out = Vec::with_capacity(vals.len() * 2);
+                for v in vals {
+                    out.extend_from_slice(&F16::from_f32(v).to_bits().to_le_bytes());
+                }
+                out
+            }
+            xla::ElementType::Bf16 => {
+                let wide = lit.convert(xla::PrimitiveType::F32)?;
+                let vals = wide.to_vec::<f32>()?;
+                let mut out = Vec::with_capacity(vals.len() * 2);
+                for v in vals {
+                    out.extend_from_slice(
+                        &crate::util::fp16::Bf16::from_f32(v).to_bits().to_le_bytes(),
+                    );
+                }
+                out
+            }
+            other => bail!("unsupported element type {other:?}"),
+        };
+        Ok(HostTensor { dtype, shape: dims, data })
+    }
+}
+
+/// Reinterpret a plain-old-data vec as little-endian bytes (no-op copy on
+/// little-endian hosts, which this crate targets; a compile-time check
+/// guards the assumption).
+fn bulk_bytes<T: Copy>(vals: &[T]) -> Vec<u8> {
+    #[cfg(target_endian = "big")]
+    compile_error!("HostTensor bytes are little-endian; add byte swaps");
+    let len = std::mem::size_of_val(vals);
+    let mut out = vec![0u8; len];
+    // SAFETY: T is a POD scalar (f32/i32), u8 has alignment 1, and the
+    // byte length matches exactly.
+    unsafe {
+        std::ptr::copy_nonoverlapping(
+            vals.as_ptr() as *const u8,
+            out.as_mut_ptr(),
+            len,
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip_construction() {
+        let t = HostTensor::from_f32(&[1.0, -2.5, 3.25, 0.0], &[2, 2]);
+        assert_eq!(t.elems(), 4);
+        assert_eq!(t.as_f32().unwrap(), vec![1.0, -2.5, 3.25, 0.0]);
+    }
+
+    #[test]
+    fn i32_roundtrip_construction() {
+        let t = HostTensor::from_i32(&[-1, 2, i32::MAX], &[3]);
+        assert_eq!(t.as_i32().unwrap(), vec![-1, 2, i32::MAX]);
+    }
+
+    #[test]
+    fn scalar_helpers() {
+        assert_eq!(HostTensor::scalar_f32(4.5).scalar_as_f32().unwrap(), 4.5);
+        let s = HostTensor::scalar_i32(-3);
+        assert_eq!(s.shape, Vec::<usize>::new());
+        assert_eq!(s.as_i32().unwrap(), vec![-3]);
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("float32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("int8").unwrap(), DType::I8);
+        assert!(DType::parse("complex64").is_err());
+    }
+
+    #[test]
+    fn wrong_view_errors() {
+        let t = HostTensor::from_f32(&[1.0], &[1]);
+        assert!(t.as_i32().is_err());
+    }
+
+    #[test]
+    fn zeros_sized_correctly() {
+        let t = HostTensor::zeros(DType::F16, &[3, 5]);
+        assert_eq!(t.data.len(), 30);
+        assert_eq!(t.as_f16_bits().unwrap(), vec![0u16; 15]);
+    }
+
+    #[test]
+    fn f16_bits_roundtrip() {
+        let bits = vec![0x3C00u16, 0xC000, 0x0000];
+        let t = HostTensor::from_f16_bits(&bits, &[3]);
+        assert_eq!(t.as_f16_bits().unwrap(), bits);
+        assert_eq!(t.f16_to_f32().unwrap(), vec![1.0, -2.0, 0.0]);
+    }
+
+    // Literal marshalling tests live in rust/tests/runtime_integration.rs
+    // (they need the PJRT shared library loaded).
+}

@@ -1,0 +1,192 @@
+//! Accelerator-level integration (paper §IV-B, Fig 4b): combine the
+//! cycle-accurate pipeline schedule with the synthesis estimator's power
+//! figures to get **end-to-end attention latency and energy per token**
+//! for a whole model configuration — the number a deployment actually
+//! cares about, and the quantitative form of the paper's "integrate
+//! ConSmax hardware to transformer accelerator" argument.
+//!
+//! Energy model: normalizer energy = unit power × busy time; tensor-core
+//! energy = MACs × energy/MAC (identical across designs — the matmuls
+//! don't change); idle leakage charged for stall cycles, which is where
+//! the token-pipeline's serialization hurts twice.
+
+use crate::hw::designs::{consmax_unit, softermax_unit, softmax_unit, Precision};
+use crate::hw::synth::Synthesizer;
+use crate::hw::tech::{EdaFlow, TechNode, TechProfile};
+use crate::sim::pipeline::{simulate, NormKind, Schedule, Workload};
+
+/// A model-level attention configuration (per layer, per head).
+#[derive(Debug, Clone, Copy)]
+pub struct AttentionConfig {
+    pub n_layer: usize,
+    pub n_head: usize,
+    pub head_dim: usize,
+    pub seq: usize,
+}
+
+impl AttentionConfig {
+    /// The paper's GPT benchmark (6L/6H/384 → head_dim 64, ctx 256).
+    pub fn paper_gpt() -> AttentionConfig {
+        AttentionConfig { n_layer: 6, n_head: 6, head_dim: 64, seq: 256 }
+    }
+
+    /// GPT-2 small (12L/12H/768) at 1K context.
+    pub fn gpt2_small_1k() -> AttentionConfig {
+        AttentionConfig { n_layer: 12, n_head: 12, head_dim: 64, seq: 1024 }
+    }
+}
+
+/// End-to-end figures for one (design, schedule) at one corner.
+#[derive(Debug, Clone)]
+pub struct AccelReport {
+    pub design: String,
+    /// Latency of one generated token through all layers/heads (µs).
+    pub token_latency_us: f64,
+    /// Normalizer energy per generated token (nJ).
+    pub norm_energy_nj: f64,
+    /// Tensor-core (QK+PV) energy per token (nJ) — design-independent.
+    pub tensorcore_energy_nj: f64,
+    /// Normalizer leakage burned during stalls (nJ).
+    pub stall_leakage_nj: f64,
+    pub utilization: f64,
+}
+
+/// MAC energy at the corner (pJ): an 8-bit MAC in the tensor core.
+fn mac_energy_pj(profile: &TechProfile) -> f64 {
+    0.025 * profile.energy_scale
+}
+
+/// Evaluate one normalizer design integrated into the accelerator.
+pub fn evaluate(
+    cfg: &AttentionConfig,
+    norm: NormKind,
+    node: TechNode,
+    flow: EdaFlow,
+    freq_mhz: f64,
+) -> AccelReport {
+    let profile = TechProfile::new(node, flow);
+    let synth = Synthesizer::new(profile);
+    let (design, schedule) = match norm {
+        NormKind::ConSmax => (consmax_unit(Precision::Int8), Schedule::ElementWise),
+        NormKind::Softermax => (softermax_unit(cfg.seq), Schedule::TokenPipeline),
+        NormKind::Softmax | NormKind::PartialSoftmax { .. } => {
+            (softmax_unit(cfg.seq), Schedule::TokenPipeline)
+        }
+    };
+    let rep = synth.synthesize(&design);
+    let f = freq_mhz.min(rep.fmax_mhz);
+
+    // one head's generation-stage schedule; heads run sequentially on the
+    // (single) pipeline per layer — per-token work scales linearly
+    let w = Workload {
+        tokens: 1,
+        seq: cfg.seq,
+        head_dim: cfg.head_dim,
+        qk_lanes: cfg.head_dim,
+        pv_lanes: cfg.head_dim,
+        norm_latency: 4,
+    };
+    let sim = simulate(&w, norm, schedule);
+    let units = (cfg.n_layer * cfg.n_head) as f64;
+
+    let cycle_s = 1e-6 / f; // seconds per cycle at f MHz
+    let token_latency_us = sim.total_cycles as f64 * units * cycle_s * 1e6;
+
+    // normalizer dynamic energy: elements processed × energy/elem
+    let elems = (cfg.seq) as f64 * units;
+    let norm_dyn_nj = elems * rep.energy_pj_per_elem_nominal * 1e-3;
+    // leakage during the whole schedule (busy or not)
+    let norm_leak_nj =
+        rep.leakage_mw_nominal * (sim.total_cycles as f64 * units * cycle_s) * 1e6
+            * 1e-3;
+    // stall share of that leakage
+    let stall_frac = 1.0
+        - sim.norm_unit.busy_cycles as f64 / sim.total_cycles.max(1) as f64;
+
+    // tensor cores: QK + PV MACs per token = 2 * seq * head_dim per head
+    let macs = 2.0 * cfg.seq as f64 * cfg.head_dim as f64 * units;
+    let tc_nj = macs * mac_energy_pj(&synth.profile) * 1e-3;
+
+    AccelReport {
+        design: norm.name(),
+        token_latency_us,
+        norm_energy_nj: norm_dyn_nj + norm_leak_nj,
+        tensorcore_energy_nj: tc_nj,
+        stall_leakage_nj: norm_leak_nj * stall_frac,
+        utilization: sim.utilization(),
+    }
+}
+
+/// The three designs side by side at a corner.
+pub fn compare_designs(
+    cfg: &AttentionConfig,
+    node: TechNode,
+    flow: EdaFlow,
+    freq_mhz: f64,
+) -> Vec<AccelReport> {
+    [NormKind::Softmax, NormKind::Softermax, NormKind::ConSmax]
+        .into_iter()
+        .map(|n| evaluate(cfg, n, node, flow, freq_mhz))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn consmax_wins_latency_and_energy() {
+        let cfg = AttentionConfig::paper_gpt();
+        let reports =
+            compare_designs(&cfg, TechNode::Fin16, EdaFlow::Proprietary, 500.0);
+        let (sm, so, cs) = (&reports[0], &reports[1], &reports[2]);
+        assert!(cs.token_latency_us < so.token_latency_us);
+        assert!(so.token_latency_us < sm.token_latency_us);
+        assert!(cs.norm_energy_nj < sm.norm_energy_nj);
+        assert!(cs.utilization > sm.utilization);
+    }
+
+    #[test]
+    fn tensorcore_energy_is_design_independent() {
+        let cfg = AttentionConfig::paper_gpt();
+        let reports =
+            compare_designs(&cfg, TechNode::Fin16, EdaFlow::Proprietary, 500.0);
+        assert_eq!(reports[0].tensorcore_energy_nj, reports[1].tensorcore_energy_nj);
+        assert_eq!(reports[1].tensorcore_energy_nj, reports[2].tensorcore_energy_nj);
+    }
+
+    #[test]
+    fn normalizer_share_shrinks_for_consmax() {
+        // the paper's framing: softmax is a disproportionate share of
+        // attention cost; ConSmax pushes it into the noise
+        let cfg = AttentionConfig::gpt2_small_1k();
+        let reports =
+            compare_designs(&cfg, TechNode::Fin16, EdaFlow::Proprietary, 500.0);
+        let share = |r: &AccelReport| {
+            r.norm_energy_nj / (r.norm_energy_nj + r.tensorcore_energy_nj)
+        };
+        assert!(share(&reports[2]) < 0.15, "consmax share {}", share(&reports[2]));
+        assert!(share(&reports[0]) > share(&reports[2]));
+    }
+
+    #[test]
+    fn latency_scales_with_model_size() {
+        let small = AttentionConfig::paper_gpt();
+        let big = AttentionConfig::gpt2_small_1k();
+        let a = evaluate(&small, NormKind::ConSmax, TechNode::Fin16,
+                         EdaFlow::Proprietary, 500.0);
+        let b = evaluate(&big, NormKind::ConSmax, TechNode::Fin16,
+                         EdaFlow::Proprietary, 500.0);
+        assert!(b.token_latency_us > 3.0 * a.token_latency_us);
+    }
+
+    #[test]
+    fn stall_leakage_negligible_for_consmax() {
+        let cfg = AttentionConfig::paper_gpt();
+        let cs = evaluate(&cfg, NormKind::ConSmax, TechNode::Fin16,
+                          EdaFlow::Proprietary, 500.0);
+        let sm = evaluate(&cfg, NormKind::Softmax, TechNode::Fin16,
+                          EdaFlow::Proprietary, 500.0);
+        assert!(cs.stall_leakage_nj < sm.stall_leakage_nj);
+    }
+}

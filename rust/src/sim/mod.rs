@@ -1,0 +1,23 @@
+//! Cycle-accurate simulator of the attention accelerator of Fig 2 /
+//! Fig 4(b): a QK module, a score-normalization module and a PV module
+//! connected by double buffers.
+//!
+//! Two schedules are modelled:
+//!
+//! * **Token pipeline** (Fig 2, SpAtten/ELSA-style): the normalizer owns a
+//!   whole token's score vector; PV for token *t* cannot start until the
+//!   normalizer finishes token *t*. Across tokens the three modules overlap.
+//! * **Element-wise pipeline** (Fig 4b, ConSmax only): normalized elements
+//!   stream straight into PV; no per-token barrier exists because ConSmax
+//!   needs no max/sum.
+//!
+//! The simulator is exact at cycle granularity: module service times are
+//! deterministic, so the event-driven schedule it computes is identical to
+//! a per-cycle RTL-level simulation of the same dataflow (asserted by the
+//! conservation properties in `rust/tests/properties.rs`).
+
+pub mod accelerator;
+pub mod pipeline;
+
+pub use accelerator::{compare_designs, evaluate, AccelReport, AttentionConfig};
+pub use pipeline::{simulate, NormKind, Schedule, SimResult, Workload};

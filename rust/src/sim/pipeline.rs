@@ -1,0 +1,483 @@
+//! The attention-pipeline model.
+//!
+//! Units of time are clock cycles. Per score element, the QK module needs
+//! `ceil(head_dim / qk_lanes)` cycles (dot product of a d-wide query row
+//! with one key vector) and the PV module `ceil(head_dim / pv_lanes)`
+//! cycles (rank-1 update of the d-wide output accumulator). The
+//! normalizer's behaviour is what distinguishes the designs:
+//!
+//! * `Softmax`: running max tracks arrivals (free), but exp/sum needs the
+//!   *final* max, so a second full pass over the buffered vector runs
+//!   after the last score arrives; emission (with the divide) follows the
+//!   pass at 1 element/cycle.
+//! * `Softermax`: online base-2 renormalization folds the sum pass into
+//!   arrival (multiplying the running sum by 2^(m_old−m_new)), so emission
+//!   starts right after the last score arrives (reciprocal ready); still a
+//!   per-token barrier.
+//! * `PartialSoftmax{chunks}`: FlashAttention-style — each chunk is
+//!   softmaxed locally as it completes, but emission still waits for the
+//!   global synchronization at the end (local sums/maxes merged, then a
+//!   rescale pass at 1 elem/cycle).
+//! * `ConSmax`: pure streaming — each score is normalized `lat` cycles
+//!   after it arrives, no barrier at all.
+
+/// Normalizer behaviour in the pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NormKind {
+    Softmax,
+    Softermax,
+    PartialSoftmax { chunks: usize },
+    ConSmax,
+}
+
+impl NormKind {
+    pub fn name(self) -> String {
+        match self {
+            NormKind::Softmax => "Softmax".into(),
+            NormKind::Softermax => "Softermax".into(),
+            NormKind::PartialSoftmax { chunks } => format!("PartialSoftmax/{chunks}"),
+            NormKind::ConSmax => "ConSmax".into(),
+        }
+    }
+
+    /// Whether the normalizer permits the element-wise schedule.
+    pub fn is_streaming(self) -> bool {
+        matches!(self, NormKind::ConSmax)
+    }
+}
+
+/// Dataflow schedule of the accelerator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Schedule {
+    /// Coarse-grained: modules hand off whole tokens (Fig 2).
+    TokenPipeline,
+    /// Fine-grained: normalized elements stream into PV (Fig 4b).
+    /// Requires a streaming normalizer (ConSmax).
+    ElementWise,
+}
+
+/// Workload description.
+#[derive(Debug, Clone, Copy)]
+pub struct Workload {
+    /// Tokens to process (1 = generation step; >1 = summarization).
+    pub tokens: usize,
+    /// Score-vector length per token (context size).
+    pub seq: usize,
+    /// Head dimension (dot-product length).
+    pub head_dim: usize,
+    /// MAC lanes in the QK tensor core.
+    pub qk_lanes: usize,
+    /// MAC lanes in the PV tensor core.
+    pub pv_lanes: usize,
+    /// Normalizer pipeline latency (fill cycles from input to output).
+    pub norm_latency: u64,
+}
+
+impl Workload {
+    /// The paper's evaluation point: 256-token context, head_dim 64
+    /// (GPT-2 small heads), matched 64-lane tensor cores.
+    pub fn paper_generation(seq: usize) -> Workload {
+        Workload {
+            tokens: 1,
+            seq,
+            head_dim: 64,
+            qk_lanes: 64,
+            pv_lanes: 64,
+            norm_latency: 4,
+        }
+    }
+
+    pub fn summarization(tokens: usize, seq: usize) -> Workload {
+        Workload { tokens, ..Workload::paper_generation(seq) }
+    }
+
+    pub fn qk_cycles_per_elem(&self) -> u64 {
+        self.head_dim.div_ceil(self.qk_lanes) as u64
+    }
+
+    pub fn pv_cycles_per_elem(&self) -> u64 {
+        self.head_dim.div_ceil(self.pv_lanes) as u64
+    }
+}
+
+/// Busy-interval bookkeeping for one module.
+#[derive(Debug, Clone, Default)]
+pub struct ModuleStats {
+    pub busy_cycles: u64,
+    /// (start, end) segments, merged, for timeline rendering.
+    pub segments: Vec<(u64, u64)>,
+}
+
+impl ModuleStats {
+    fn add(&mut self, start: u64, end: u64) {
+        debug_assert!(end >= start);
+        self.busy_cycles += end - start;
+        match self.segments.last_mut() {
+            Some(last) if last.1 == start => last.1 = end,
+            _ => self.segments.push((start, end)),
+        }
+    }
+}
+
+/// Simulation output.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub norm: NormKind,
+    pub schedule: Schedule,
+    pub total_cycles: u64,
+    pub qk: ModuleStats,
+    pub norm_unit: ModuleStats,
+    pub pv: ModuleStats,
+}
+
+impl SimResult {
+    /// Mean hardware utilization across the three modules.
+    pub fn utilization(&self) -> f64 {
+        let busy = (self.qk.busy_cycles + self.norm_unit.busy_cycles + self.pv.busy_cycles) as f64;
+        busy / (3.0 * self.total_cycles as f64)
+    }
+
+    pub fn speedup_over(&self, other: &SimResult) -> f64 {
+        other.total_cycles as f64 / self.total_cycles as f64
+    }
+}
+
+/// Run the pipeline simulation.
+///
+/// Panics if `ElementWise` is requested for a non-streaming normalizer —
+/// that hardware cannot exist (the max/sum barrier is semantic, not a
+/// scheduling choice), and the type-level guard documents the paper's
+/// core argument.
+pub fn simulate(w: &Workload, norm: NormKind, schedule: Schedule) -> SimResult {
+    if schedule == Schedule::ElementWise {
+        assert!(
+            norm.is_streaming(),
+            "{} requires a max/sum barrier; the element-wise schedule is \
+             only realizable for ConSmax (paper §IV-B)",
+            norm.name()
+        );
+    }
+    let qk_cpe = w.qk_cycles_per_elem();
+    let pv_cpe = w.pv_cycles_per_elem();
+
+    let mut qk = ModuleStats::default();
+    let mut norm_unit = ModuleStats::default();
+    let mut pv = ModuleStats::default();
+
+    // Module-free timestamps.
+    let mut qk_free: u64 = 0;
+    let mut pv_free: u64 = 0;
+    let mut norm_free: u64 = 0;
+    let mut last_pv_end: u64 = 0;
+
+    for _tok in 0..w.tokens {
+        // ---- QK: produce seq score elements back to back --------------
+        let mut arrivals = Vec::with_capacity(w.seq);
+        let mut t = qk_free;
+        for _ in 0..w.seq {
+            let start = t;
+            let end = start + qk_cpe;
+            qk.add(start, end);
+            arrivals.push(end);
+            t = end;
+        }
+        qk_free = t;
+
+        // ---- Normalizer: per-design emission times --------------------
+        let last_arrival = *arrivals.last().unwrap();
+        let mut emissions = Vec::with_capacity(w.seq);
+        match norm {
+            NormKind::ConSmax => {
+                // streaming: each element normalized `lat` after arrival,
+                // II = 1 through the unit
+                let mut prev_end = norm_free;
+                for &a in &arrivals {
+                    let start = a.max(prev_end);
+                    let end = start + 1;
+                    norm_unit.add(start, end);
+                    emissions.push(end + w.norm_latency);
+                    prev_end = end;
+                }
+                norm_free = prev_end;
+            }
+            NormKind::Softermax => {
+                // online pass tracks arrivals (unit busy as elements
+                // arrive); emission pass starts after the last arrival
+                // (+ reciprocal latency), 1 elem/cycle.
+                let mut prev_end = norm_free;
+                for &a in &arrivals {
+                    let start = a.max(prev_end);
+                    let end = start + 1;
+                    norm_unit.add(start, end);
+                    prev_end = end;
+                }
+                let emit_start = prev_end.max(last_arrival) + w.norm_latency;
+                for i in 0..w.seq as u64 {
+                    norm_unit.add(emit_start + i, emit_start + i + 1);
+                    emissions.push(emit_start + i + 1);
+                }
+                norm_free = emit_start + w.seq as u64;
+            }
+            NormKind::Softmax => {
+                // running max during arrival (busy), THEN a full exp/sum
+                // pass over the buffered vector, THEN the divide/emit pass.
+                let mut prev_end = norm_free;
+                for &a in &arrivals {
+                    let start = a.max(prev_end);
+                    let end = start + 1;
+                    norm_unit.add(start, end);
+                    prev_end = end;
+                }
+                let sum_start = prev_end.max(last_arrival);
+                let sum_end = sum_start + w.seq as u64; // exp+accumulate pass
+                norm_unit.add(sum_start, sum_end);
+                let emit_start = sum_end + w.norm_latency;
+                for i in 0..w.seq as u64 {
+                    norm_unit.add(emit_start + i, emit_start + i + 1);
+                    emissions.push(emit_start + i + 1);
+                }
+                norm_free = emit_start + w.seq as u64;
+            }
+            NormKind::PartialSoftmax { chunks } => {
+                // each chunk локally softmaxed when its last element
+                // arrives (chunk-sized pass), then a global rescale pass
+                // after ALL chunks complete (the synchronization overhead
+                // FlashDecoding++ measures at ~20%).
+                let chunks = chunks.max(1).min(w.seq);
+                let chunk_len = w.seq / chunks;
+                let mut local_done: u64 = norm_free;
+                for c in 0..chunks {
+                    let lo = c * chunk_len;
+                    let hi = if c + 1 == chunks { w.seq } else { lo + chunk_len };
+                    let chunk_last = arrivals[hi - 1];
+                    let start = chunk_last.max(local_done);
+                    let end = start + (hi - lo) as u64; // local exp/sum pass
+                    norm_unit.add(start, end);
+                    local_done = end;
+                }
+                // global merge of maxes/sums: ~chunks cycles, then rescale
+                let merge_end = local_done + chunks as u64;
+                norm_unit.add(local_done, merge_end);
+                let emit_start = merge_end + w.norm_latency;
+                for i in 0..w.seq as u64 {
+                    norm_unit.add(emit_start + i, emit_start + i + 1);
+                    emissions.push(emit_start + i + 1);
+                }
+                norm_free = emit_start + w.seq as u64;
+            }
+        }
+
+        // ---- PV: consume probability elements --------------------------
+        match schedule {
+            Schedule::ElementWise => {
+                let mut prev = pv_free;
+                for &e in &emissions {
+                    let start = e.max(prev);
+                    let end = start + pv_cpe;
+                    pv.add(start, end);
+                    prev = end;
+                }
+                pv_free = prev;
+            }
+            Schedule::TokenPipeline => {
+                // PV waits for the whole normalized token (double-buffer
+                // handoff), then streams it.
+                let token_ready = *emissions.last().unwrap();
+                let mut prev = pv_free.max(token_ready);
+                for _ in 0..w.seq {
+                    let start = prev;
+                    let end = start + pv_cpe;
+                    pv.add(start, end);
+                    prev = end;
+                }
+                pv_free = prev;
+            }
+        }
+        last_pv_end = pv_free;
+    }
+
+    SimResult {
+        norm,
+        schedule,
+        total_cycles: last_pv_end,
+        qk,
+        norm_unit,
+        pv,
+    }
+}
+
+/// Fig 5 headline: generation-stage time saving of ConSmax element-wise
+/// over Softmax token-pipeline at a given context size.
+pub fn fig5_time_saving(seq: usize) -> (SimResult, SimResult, f64) {
+    let w = Workload::paper_generation(seq);
+    let base = simulate(&w, NormKind::Softmax, Schedule::TokenPipeline);
+    let cons = simulate(&w, NormKind::ConSmax, Schedule::ElementWise);
+    let saving = 1.0 - cons.total_cycles as f64 / base.total_cycles as f64;
+    (base, cons, saving)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen(seq: usize) -> Workload {
+        Workload::paper_generation(seq)
+    }
+
+    #[test]
+    fn consmax_elementwise_beats_softmax_token_pipeline() {
+        let (base, cons, saving) = fig5_time_saving(256);
+        assert!(cons.total_cycles < base.total_cycles);
+        // structure: softmax serializes QK(seq) + sum pass(seq) + emit(seq)
+        // + PV(seq) ≈ 4*seq; consmax overlaps everything ≈ seq. Expect
+        // >= 50% saving.
+        assert!(saving > 0.5, "saving {saving}");
+    }
+
+    #[test]
+    fn consmax_generation_total_near_streaming_bound() {
+        let w = gen(256);
+        let r = simulate(&w, NormKind::ConSmax, Schedule::ElementWise);
+        // lower bound: seq elements through the slowest stage + fill
+        let bound = 256 * w.qk_cycles_per_elem().max(w.pv_cycles_per_elem());
+        assert!(r.total_cycles < bound + 64, "{} vs {bound}", r.total_cycles);
+    }
+
+    #[test]
+    fn softmax_generation_serializes() {
+        let w = gen(256);
+        let r = simulate(&w, NormKind::Softmax, Schedule::TokenPipeline);
+        // must pay at least arrival + sum pass + emit + PV stream
+        assert!(r.total_cycles >= 4 * 256);
+    }
+
+    #[test]
+    #[should_panic(expected = "element-wise schedule")]
+    fn elementwise_softmax_is_impossible() {
+        simulate(&gen(64), NormKind::Softmax, Schedule::ElementWise);
+    }
+
+    #[test]
+    #[should_panic(expected = "element-wise schedule")]
+    fn elementwise_partial_softmax_is_impossible() {
+        simulate(
+            &gen(64),
+            NormKind::PartialSoftmax { chunks: 4 },
+            Schedule::ElementWise,
+        );
+    }
+
+    #[test]
+    fn work_conservation_qk_pv() {
+        // QK and PV busy cycles are schedule-invariant (same math done).
+        for norm in [NormKind::Softmax, NormKind::Softermax, NormKind::ConSmax] {
+            let w = Workload::summarization(8, 128);
+            let r = simulate(&w, norm, Schedule::TokenPipeline);
+            let expect_qk = 8 * 128 * w.qk_cycles_per_elem();
+            let expect_pv = 8 * 128 * w.pv_cycles_per_elem();
+            assert_eq!(r.qk.busy_cycles, expect_qk, "{:?}", norm);
+            assert_eq!(r.pv.busy_cycles, expect_pv, "{:?}", norm);
+        }
+    }
+
+    #[test]
+    fn softermax_cheaper_than_softmax_dearer_than_consmax() {
+        let w = gen(512);
+        let sm = simulate(&w, NormKind::Softmax, Schedule::TokenPipeline).total_cycles;
+        let so = simulate(&w, NormKind::Softermax, Schedule::TokenPipeline).total_cycles;
+        let cs = simulate(&w, NormKind::ConSmax, Schedule::ElementWise).total_cycles;
+        assert!(cs < so && so < sm, "cs={cs} so={so} sm={sm}");
+    }
+
+    #[test]
+    fn partial_softmax_sync_cost_matches_flashdecoding_claim() {
+        // paper §III-B: partial-softmax synchronization accounts for
+        // ~18.8% of attention latency at 1024 tokens. In our pipeline the
+        // synchronization is the global merge + rescale pass (seq +
+        // chunks cycles); as a share of end-to-end latency it should land
+        // in the 15–45% band, and partial softmax must be strictly slower
+        // than the online (softermax-style) single-barrier design.
+        let w = gen(1024);
+        let ps = simulate(&w, NormKind::PartialSoftmax { chunks: 8 }, Schedule::TokenPipeline);
+        let so = simulate(&w, NormKind::Softermax, Schedule::TokenPipeline);
+        assert!(ps.total_cycles > so.total_cycles);
+        let sync_cycles = (w.seq + 8) as f64;
+        let share = sync_cycles / ps.total_cycles as f64;
+        assert!((0.15..0.45).contains(&share), "sync share {share}");
+    }
+
+    #[test]
+    fn utilization_consmax_near_one_softmax_low_in_generation() {
+        let w = gen(1024);
+        let cs = simulate(&w, NormKind::ConSmax, Schedule::ElementWise);
+        let sm = simulate(&w, NormKind::Softmax, Schedule::TokenPipeline);
+        // Fig 5's underutilization story (norm unit occupancy differs by
+        // design so compare QK+PV duty):
+        let duty = |r: &SimResult| {
+            (r.qk.busy_cycles + r.pv.busy_cycles) as f64 / (2.0 * r.total_cycles as f64)
+        };
+        assert!(duty(&cs) > 0.9, "consmax duty {}", duty(&cs));
+        assert!(duty(&sm) < 0.4, "softmax duty {}", duty(&sm));
+    }
+
+    #[test]
+    fn summarization_token_pipeline_overlaps_tokens() {
+        // with many tokens, the token pipeline amortizes the barrier:
+        // throughput per token must improve vs a single token
+        let one = simulate(&gen(256), NormKind::Softmax, Schedule::TokenPipeline);
+        let many = simulate(
+            &Workload::summarization(16, 256),
+            NormKind::Softmax,
+            Schedule::TokenPipeline,
+        );
+        let per_tok_one = one.total_cycles as f64;
+        let per_tok_many = many.total_cycles as f64 / 16.0;
+        // the norm unit is the serial bottleneck (3 passes/token through
+        // one unit), so the amortization is modest but must be real
+        assert!(per_tok_many < per_tok_one * 0.95, "{per_tok_many} vs {per_tok_one}");
+        // and the QK module's duty cycle must rise with pipelining
+        let duty = |r: &SimResult| r.qk.busy_cycles as f64 / r.total_cycles as f64;
+        assert!(duty(&many) > 1.25 * duty(&one), "{} vs {}", duty(&many), duty(&one));
+    }
+
+    #[test]
+    fn longer_context_widens_the_gap() {
+        // the paper's motivation: softmax overhead grows with context
+        let s = |seq| {
+            let (_, _, saving) = fig5_time_saving(seq);
+            saving
+        };
+        assert!(s(4096) >= s(256) - 1e-9);
+    }
+
+    #[test]
+    fn segments_are_ordered_and_disjoint() {
+        let w = Workload::summarization(4, 64);
+        for norm in [NormKind::Softmax, NormKind::Softermax, NormKind::ConSmax] {
+            let r = simulate(&w, norm, Schedule::TokenPipeline);
+            for m in [&r.qk, &r.norm_unit, &r.pv] {
+                for win in m.segments.windows(2) {
+                    assert!(win[0].1 <= win[1].0, "{:?}", win);
+                }
+                let seg_sum: u64 = m.segments.iter().map(|(a, b)| b - a).sum();
+                assert_eq!(seg_sum, m.busy_cycles);
+            }
+        }
+    }
+
+    #[test]
+    fn mismatched_lanes_respected() {
+        let w = Workload {
+            tokens: 1,
+            seq: 128,
+            head_dim: 64,
+            qk_lanes: 16, // 4 cycles per score
+            pv_lanes: 64, // 1 cycle per element
+            norm_latency: 4,
+        };
+        let r = simulate(&w, NormKind::ConSmax, Schedule::ElementWise);
+        // QK is the bottleneck: total ≈ 128 * 4
+        assert!(r.total_cycles >= 512);
+        assert!(r.total_cycles < 512 + 32);
+    }
+}

@@ -1,0 +1,252 @@
+//! Micro-benchmark harness (replaces `criterion` — unavailable offline).
+//!
+//! Used by the `harness = false` bench targets in `rust/benches/`.
+//! Methodology: warmup, then timed batches sized to a target duration,
+//! reporting median / mean / p95 with outlier-robust statistics. Results
+//! can be emitted as text and machine-readable JSON lines for
+//! EXPERIMENTS.md bookkeeping.
+
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+/// One benchmark's collected statistics (nanoseconds per iteration).
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: u64,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Stats {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.median_ns * 1e-9)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs([
+            ("name".into(), Json::from(self.name.as_str())),
+            ("iters".into(), Json::from(self.iters as f64)),
+            ("median_ns".into(), Json::from(self.median_ns)),
+            ("mean_ns".into(), Json::from(self.mean_ns)),
+            ("p95_ns".into(), Json::from(self.p95_ns)),
+            ("min_ns".into(), Json::from(self.min_ns)),
+        ])
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Bench runner with criterion-like ergonomics.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_samples: usize,
+    results: Vec<Stats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(900),
+            min_samples: 12,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick profile for expensive end-to-end benches.
+    pub fn coarse() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(400),
+            min_samples: 5,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, preventing the result from being optimized away.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Stats {
+        // Warmup + estimate cost of one call.
+        let wstart = Instant::now();
+        let mut calls = 0u64;
+        while wstart.elapsed() < self.warmup || calls == 0 {
+            std::hint::black_box(f());
+            calls += 1;
+            if calls > 1_000_000 {
+                break;
+            }
+        }
+        let per_call = self.warmup.as_nanos() as f64 / calls as f64;
+
+        // Choose batch size so one sample is ~ measure/min_samples.
+        let target_sample_ns =
+            (self.measure.as_nanos() as f64 / self.min_samples as f64).max(1.0);
+        let batch = ((target_sample_ns / per_call.max(1.0)) as u64).max(1);
+
+        let mut samples: Vec<f64> = Vec::new();
+        let mstart = Instant::now();
+        let mut total_iters = 0u64;
+        while mstart.elapsed() < self.measure || samples.len() < self.min_samples
+        {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                std::hint::black_box(f());
+            }
+            let dt = t0.elapsed().as_nanos() as f64 / batch as f64;
+            samples.push(dt);
+            total_iters += batch;
+            if samples.len() > 10_000 {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = samples[samples.len() / 2];
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let p95 = samples[((samples.len() as f64 * 0.95) as usize)
+            .min(samples.len() - 1)];
+        let min = samples[0];
+        let stats = Stats {
+            name: name.to_string(),
+            iters: total_iters,
+            median_ns: median,
+            mean_ns: mean,
+            p95_ns: p95,
+            min_ns: min,
+        };
+        println!(
+            "{name:<48} {:>12}/iter  (mean {}, p95 {}, {} iters)",
+            fmt_ns(stats.median_ns),
+            fmt_ns(stats.mean_ns),
+            fmt_ns(stats.p95_ns),
+            total_iters,
+        );
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+
+    /// JSON-lines dump for post-processing.
+    pub fn dump_json(&self) -> String {
+        self.results
+            .iter()
+            .map(|s| s.to_json().to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+/// Print a markdown-style table: used by the paper-table benches so the
+/// bench output *is* the reproduced table.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n## {title}\n");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        let mut line = String::from("|");
+        for (i, c) in cells.iter().enumerate() {
+            line.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+        }
+        line
+    };
+    println!(
+        "{}",
+        fmt_row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    );
+    let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+    println!("{}", fmt_row(&sep));
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            min_samples: 3,
+            results: vec![],
+        };
+        let s = b.bench("noop-ish", || std::hint::black_box(1 + 1)).clone();
+        assert!(s.median_ns > 0.0);
+        assert!(s.min_ns <= s.median_ns);
+        assert!(s.median_ns <= s.p95_ns * 1.001);
+        assert!(s.iters > 0);
+    }
+
+    #[test]
+    fn slower_function_measures_slower() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(30),
+            min_samples: 3,
+            results: vec![],
+        };
+        let fast = b.bench("fast", || std::hint::black_box(0u64)).median_ns;
+        let slow = b
+            .bench("slow", || {
+                let mut acc = 0u64;
+                for i in 0..5_000u64 {
+                    acc = acc.wrapping_add(std::hint::black_box(i * i));
+                }
+                acc
+            })
+            .median_ns;
+        assert!(slow > fast * 5.0, "fast={fast} slow={slow}");
+    }
+
+    #[test]
+    fn json_dump_parses() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(2),
+            measure: Duration::from_millis(5),
+            min_samples: 2,
+            results: vec![],
+        };
+        b.bench("x", || 1);
+        let line = b.dump_json();
+        let v = crate::util::json::Json::parse(&line).unwrap();
+        assert_eq!(v.get("name").as_str(), Some("x"));
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

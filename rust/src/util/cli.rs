@@ -1,0 +1,251 @@
+//! Tiny declarative CLI parser (replaces `clap`): subcommands, `--flag`,
+//! `--key value` / `--key=value`, typed accessors with defaults, and
+//! generated `--help` text.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand, named options and positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option --{0}")]
+    UnknownOption(String),
+    #[error("option --{0} expects a value")]
+    MissingValue(String),
+    #[error("invalid value for --{key}: {value:?} ({expected})")]
+    BadValue {
+        key: String,
+        value: String,
+        expected: &'static str,
+    },
+}
+
+/// Option/flag specification used for validation and help output.
+#[derive(Debug, Clone)]
+pub struct Spec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+impl Spec {
+    pub fn opt(name: &'static str, help: &'static str) -> Spec {
+        Spec { name, help, takes_value: true, default: None }
+    }
+    pub fn opt_default(
+        name: &'static str,
+        default: &'static str,
+        help: &'static str,
+    ) -> Spec {
+        Spec { name, help, takes_value: true, default: Some(default) }
+    }
+    pub fn flag(name: &'static str, help: &'static str) -> Spec {
+        Spec { name, help, takes_value: false, default: None }
+    }
+}
+
+impl Args {
+    /// Parse `argv[1..]` against a spec list. The first non-option token
+    /// is the subcommand; later bare tokens are positionals.
+    pub fn parse(
+        argv: impl IntoIterator<Item = String>,
+        specs: &[Spec],
+    ) -> Result<Args, CliError> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let spec = specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| CliError::UnknownOption(key.clone()))?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| CliError::MissingValue(key.clone()))?,
+                    };
+                    out.opts.insert(key, val);
+                } else {
+                    out.flags.push(key);
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        // fill defaults
+        for s in specs {
+            if let Some(d) = s.default {
+                out.opts.entry(s.name.to_string()).or_insert_with(|| d.into());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(String::as_str)
+    }
+
+    pub fn get_string(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::BadValue {
+                key: name.into(),
+                value: v.into(),
+                expected: "unsigned integer",
+            }),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::BadValue {
+                key: name.into(),
+                value: v.into(),
+                expected: "number",
+            }),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::BadValue {
+                key: name.into(),
+                value: v.into(),
+                expected: "unsigned integer",
+            }),
+        }
+    }
+}
+
+/// Render a help screen for a command with subcommands and options.
+pub fn render_help(
+    bin: &str,
+    about: &str,
+    subcommands: &[(&str, &str)],
+    specs: &[Spec],
+) -> String {
+    let mut s = format!("{bin} — {about}\n\nUSAGE:\n  {bin} <command> [options]\n");
+    if !subcommands.is_empty() {
+        s.push_str("\nCOMMANDS:\n");
+        for (name, help) in subcommands {
+            s.push_str(&format!("  {name:<16} {help}\n"));
+        }
+    }
+    if !specs.is_empty() {
+        s.push_str("\nOPTIONS:\n");
+        for spec in specs {
+            let mut left = format!("--{}", spec.name);
+            if spec.takes_value {
+                left.push_str(" <v>");
+            }
+            let def = spec
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  {left:<24} {}{def}\n", spec.help));
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<Spec> {
+        vec![
+            Spec::opt("steps", "number of steps"),
+            Spec::opt_default("config", "tiny", "model config"),
+            Spec::flag("verbose", "noisy output"),
+        ]
+    }
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string()), &specs()).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["train", "--steps", "100", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 100);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse(&["train", "--steps=42"]);
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 42);
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        let a = parse(&["train"]);
+        assert_eq!(a.get("config"), Some("tiny"));
+        assert_eq!(a.get_usize("steps", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn positionals() {
+        let a = parse(&["run", "alpha", "beta"]);
+        assert_eq!(a.positional, vec!["alpha", "beta"]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let e = Args::parse(
+            ["--nope".to_string()].into_iter(),
+            &specs(),
+        );
+        assert!(matches!(e, Err(CliError::UnknownOption(_))));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        let e = Args::parse(["--steps".to_string()].into_iter(), &specs());
+        assert!(matches!(e, Err(CliError::MissingValue(_))));
+    }
+
+    #[test]
+    fn bad_value_typed() {
+        let a = parse(&["train", "--steps", "xyz"]);
+        assert!(matches!(
+            a.get_usize("steps", 0),
+            Err(CliError::BadValue { .. })
+        ));
+    }
+
+    #[test]
+    fn help_renders() {
+        let h = render_help("consmax", "repro", &[("train", "t")], &specs());
+        assert!(h.contains("--config"));
+        assert!(h.contains("[default: tiny]"));
+        assert!(h.contains("train"));
+    }
+}

@@ -1,0 +1,261 @@
+//! IEEE 754 binary16 software float (replaces the `half` crate).
+//!
+//! The hardware model (`quant::lut`) must reproduce the paper's FP16
+//! datapath bit-for-bit, so conversions implement round-to-nearest-even
+//! exactly. Products of two binary16 values are exact in f32 (11-bit
+//! significands -> 22-bit product < 24), so `mul` = convert → f32 multiply
+//! → RNE convert is the correctly-rounded binary16 multiply, matching both
+//! the hardware multiplier and numpy's float16 semantics.
+
+/// IEEE 754 binary16 value, stored as its bit pattern.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct F16(pub u16);
+
+impl F16 {
+    pub const ZERO: F16 = F16(0);
+    pub const ONE: F16 = F16(0x3C00);
+    pub const INFINITY: F16 = F16(0x7C00);
+    pub const NEG_INFINITY: F16 = F16(0xFC00);
+    pub const MAX: F16 = F16(0x7BFF); // 65504
+
+    pub fn from_bits(bits: u16) -> F16 {
+        F16(bits)
+    }
+
+    pub fn to_bits(self) -> u16 {
+        self.0
+    }
+
+    /// Convert from f32 with round-to-nearest-even (the hardware rounding).
+    pub fn from_f32(x: f32) -> F16 {
+        let bits = x.to_bits();
+        let sign = ((bits >> 16) & 0x8000) as u16;
+        let exp = ((bits >> 23) & 0xFF) as i32;
+        let man = bits & 0x007F_FFFF;
+
+        if exp == 0xFF {
+            // Inf / NaN
+            return if man == 0 {
+                F16(sign | 0x7C00)
+            } else {
+                F16(sign | 0x7E00) // quiet NaN
+            };
+        }
+
+        // unbiased exponent
+        let e = exp - 127;
+        if e > 15 {
+            // overflow -> infinity
+            return F16(sign | 0x7C00);
+        }
+        if e >= -14 {
+            // normal range: 10-bit mantissa, RNE on the dropped 13 bits
+            let mant = man >> 13;
+            let rest = man & 0x1FFF;
+            let halfway = 0x1000;
+            let mut h = ((e + 15) as u16) << 10 | mant as u16;
+            if rest > halfway || (rest == halfway && (h & 1) == 1) {
+                h += 1; // carries propagate into the exponent correctly
+            }
+            return F16(sign | h);
+        }
+        if e >= -25 {
+            // subnormal: shift the implicit-1 mantissa right
+            let full = 0x0080_0000 | man; // 24-bit significand
+            let shift = (-14 - e) + 13;
+            let mant = full >> shift;
+            let rest = full & ((1u32 << shift) - 1);
+            let halfway = 1u32 << (shift - 1);
+            let mut h = mant as u16;
+            if rest > halfway || (rest == halfway && (h & 1) == 1) {
+                h += 1;
+            }
+            return F16(sign | h);
+        }
+        // underflow to signed zero
+        F16(sign)
+    }
+
+    /// Exact widening conversion to f32.
+    pub fn to_f32(self) -> f32 {
+        let sign = ((self.0 & 0x8000) as u32) << 16;
+        let exp = ((self.0 >> 10) & 0x1F) as u32;
+        let man = (self.0 & 0x3FF) as u32;
+        let bits = match (exp, man) {
+            (0, 0) => sign,
+            (0, m) => {
+                // subnormal: value = m * 2^-24 = 1.x * 2^(p-24), p = msb pos
+                let p = 31 - m.leading_zeros(); // 0..9
+                let e = p + 103; // (p - 24) + 127
+                let mant = (m << (23 - p)) & 0x007F_FFFF;
+                sign | (e << 23) | mant
+            }
+            (0x1F, 0) => sign | 0x7F80_0000,
+            (0x1F, m) => sign | 0x7F80_0000 | (m << 13),
+            (e, m) => sign | ((e + 127 - 15) << 23) | (m << 13),
+        };
+        f32::from_bits(bits)
+    }
+
+    /// Correctly-rounded binary16 multiply (see module docs).
+    pub fn mul(self, rhs: F16) -> F16 {
+        F16::from_f32(self.to_f32() * rhs.to_f32())
+    }
+
+    /// Correctly-rounded binary16 add (exact in f32, single rounding).
+    pub fn add(self, rhs: F16) -> F16 {
+        F16::from_f32(self.to_f32() + rhs.to_f32())
+    }
+
+    pub fn is_nan(self) -> bool {
+        (self.0 & 0x7C00) == 0x7C00 && (self.0 & 0x3FF) != 0
+    }
+
+    pub fn is_infinite(self) -> bool {
+        (self.0 & 0x7FFF) == 0x7C00
+    }
+
+    pub fn is_finite(self) -> bool {
+        (self.0 & 0x7C00) != 0x7C00
+    }
+}
+
+/// bfloat16 (truncated f32 with RNE), used by the mixed-precision tables.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Bf16(pub u16);
+
+impl Bf16 {
+    pub fn from_f32(x: f32) -> Bf16 {
+        let bits = x.to_bits();
+        if x.is_nan() {
+            return Bf16(((bits >> 16) as u16) | 0x0040); // keep quiet
+        }
+        let round_bit = 0x8000u32;
+        let lower = bits & 0xFFFF;
+        let mut hi = (bits >> 16) as u16;
+        if lower > round_bit || (lower == round_bit && (hi & 1) == 1) {
+            hi = hi.wrapping_add(1);
+        }
+        Bf16(hi)
+    }
+
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+
+    pub fn to_bits(self) -> u16 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_constants() {
+        assert_eq!(F16::from_f32(1.0).to_bits(), 0x3C00);
+        assert_eq!(F16::from_f32(-2.0).to_bits(), 0xC000);
+        assert_eq!(F16::from_f32(0.5).to_bits(), 0x3800);
+        assert_eq!(F16::from_f32(65504.0).to_bits(), 0x7BFF);
+        assert_eq!(F16::from_f32(0.0).to_bits(), 0x0000);
+        assert_eq!(F16::from_f32(-0.0).to_bits(), 0x8000);
+    }
+
+    #[test]
+    fn overflow_to_inf() {
+        assert_eq!(F16::from_f32(65520.0).to_bits(), 0x7C00);
+        assert_eq!(F16::from_f32(1e30).to_bits(), 0x7C00);
+        assert_eq!(F16::from_f32(-1e30).to_bits(), 0xFC00);
+    }
+
+    #[test]
+    fn subnormals() {
+        // smallest positive subnormal: 2^-24
+        let tiny = 2.0_f32.powi(-24);
+        assert_eq!(F16::from_f32(tiny).to_bits(), 0x0001);
+        assert_eq!(F16(0x0001).to_f32(), tiny);
+        // largest subnormal
+        let big_sub = 1023.0 * 2.0_f32.powi(-24);
+        assert_eq!(F16::from_f32(big_sub).to_bits(), 0x03FF);
+        assert_eq!(F16(0x03FF).to_f32(), big_sub);
+    }
+
+    #[test]
+    fn underflow_to_zero() {
+        assert_eq!(F16::from_f32(1e-12).to_bits(), 0x0000);
+        assert_eq!(F16::from_f32(-1e-12).to_bits(), 0x8000);
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and 1+2^-10 -> ties to
+        // even mantissa (1.0)
+        let x = 1.0 + 2.0_f32.powi(-11);
+        assert_eq!(F16::from_f32(x).to_bits(), 0x3C00);
+        // 1 + 3*2^-11 is halfway between 1+2^-10 and 1+2^-9 -> rounds to
+        // even (1 + 2^-9 has even mantissa 0b10)
+        let y = 1.0 + 3.0 * 2.0_f32.powi(-11);
+        assert_eq!(F16::from_f32(y).to_bits(), 0x3C02);
+    }
+
+    #[test]
+    fn rounding_carry_into_exponent() {
+        // just below 2.0: 1.9999999 rounds up to 2.0
+        assert_eq!(F16::from_f32(1.999_999_9).to_bits(), 0x4000);
+    }
+
+    #[test]
+    fn roundtrip_all_finite_f16() {
+        // EXHAUSTIVE: every finite f16 must roundtrip exactly through f32
+        for bits in 0..=0xFFFFu16 {
+            let h = F16(bits);
+            if h.is_nan() {
+                continue;
+            }
+            let rt = F16::from_f32(h.to_f32());
+            assert_eq!(rt.to_bits(), bits, "bits {bits:#06x}");
+        }
+    }
+
+    #[test]
+    fn nan_propagates() {
+        assert!(F16::from_f32(f32::NAN).is_nan());
+        assert!(F16(0x7E00).to_f32().is_nan());
+    }
+
+    #[test]
+    fn inf_conversions() {
+        assert_eq!(F16::from_f32(f32::INFINITY), F16::INFINITY);
+        assert_eq!(F16::INFINITY.to_f32(), f32::INFINITY);
+        assert_eq!(F16::NEG_INFINITY.to_f32(), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn mul_matches_exhaustive_sample() {
+        // spot-check the exactness argument on a structured grid
+        for a in (0..=0x7BFF_u16).step_by(97) {
+            for b in (0..=0x7BFF_u16).step_by(1013) {
+                let x = F16(a);
+                let y = F16(b);
+                if !x.is_finite() || !y.is_finite() {
+                    continue;
+                }
+                let got = x.mul(y);
+                // reference: f64 product rounded once to f16
+                let want = F16::from_f32((x.to_f32() as f64 * y.to_f32() as f64) as f32);
+                assert_eq!(got.to_bits(), want.to_bits(), "{a:#x} * {b:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_roundtrip_and_rounding() {
+        assert_eq!(Bf16::from_f32(1.0).to_bits(), 0x3F80);
+        // RNE at the bf16 boundary
+        let x = f32::from_bits(0x3F80_8000); // halfway
+        assert_eq!(Bf16::from_f32(x).to_bits(), 0x3F80); // ties to even
+        let y = f32::from_bits(0x3F81_8000);
+        assert_eq!(Bf16::from_f32(y).to_bits(), 0x3F82);
+    }
+}

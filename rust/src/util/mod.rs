@@ -1,0 +1,13 @@
+//! Infrastructure substrates built in-repo.
+//!
+//! The offline crate mirror only carries the `xla` dependency closure, so
+//! the usual ecosystem crates (serde, clap, rand, criterion, proptest,
+//! half) are replaced by the small, fully-tested implementations here.
+//! Each module documents the subset of behaviour it guarantees.
+
+pub mod bench;
+pub mod cli;
+pub mod fp16;
+pub mod json;
+pub mod proptest;
+pub mod rng;

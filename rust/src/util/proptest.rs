@@ -1,0 +1,236 @@
+//! Mini property-testing framework (replaces `proptest` — unavailable
+//! offline).
+//!
+//! Properties are closures over a [`Gen`] handle; the runner executes N
+//! seeded cases and, on failure, retries with the same seed while halving
+//! integer sizes to report a *smaller* witness (bounded greedy shrinking).
+//!
+//! ```ignore
+//! proptest!(|g| {
+//!     let v = g.vec_f64(0..100, -1.0, 1.0);
+//!     prop_assert!(v.len() < 100);
+//! });
+//! ```
+
+use crate::util::rng::Pcg32;
+
+/// Value generator handed to properties; wraps a deterministic PRNG plus
+/// a size budget the shrinker reduces.
+pub struct Gen {
+    rng: Pcg32,
+    /// Size multiplier in (0, 1]: shrinking lowers it to prefer smaller
+    /// structures while replaying the same seed.
+    pub size: f64,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: f64) -> Gen {
+        Gen { rng: Pcg32::seeded(seed), size }
+    }
+
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(hi > lo);
+        let span = ((hi - lo) as f64 * self.size).max(1.0) as u64;
+        self.rng.range_u64(lo, lo + span.min(hi - lo).max(1))
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.u64(lo as u64, hi as u64) as usize
+    }
+
+    pub fn i64(&mut self, lo: i64, hi: i64) -> i64 {
+        lo + self.u64(0, (hi - lo) as u64) as i64
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, lo + (hi - lo) * self.size)
+    }
+
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        self.f64(lo as f64, hi as f64) as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+
+    pub fn normal_f32(&mut self) -> f32 {
+        self.rng.normal() as f32
+    }
+
+    pub fn vec_f32(&mut self, len_lo: usize, len_hi: usize, lo: f32, hi: f32) -> Vec<f32> {
+        let n = self.usize(len_lo, len_hi.max(len_lo + 1));
+        (0..n).map(|_| self.f32(lo, hi)).collect()
+    }
+
+    pub fn vec_u8(&mut self, len_lo: usize, len_hi: usize) -> Vec<u8> {
+        let n = self.usize(len_lo, len_hi.max(len_lo + 1));
+        (0..n).map(|_| self.rng.next_u32() as u8).collect()
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize(0, xs.len())]
+    }
+
+    pub fn rng(&mut self) -> &mut Pcg32 {
+        &mut self.rng
+    }
+}
+
+/// Outcome of one property case.
+pub type CaseResult = Result<(), String>;
+
+/// Run `cases` seeded property cases; panic with the failing seed and the
+/// smallest failing size found.
+pub fn run_property(
+    name: &str,
+    cases: u64,
+    mut prop: impl FnMut(&mut Gen) -> CaseResult,
+) {
+    let base_seed = 0xC0DE_5EED ^ fxhash(name);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case);
+        let mut g = Gen::new(seed, 1.0);
+        if let Err(msg) = prop(&mut g) {
+            // greedy shrink: replay same seed with smaller size budgets
+            let mut best = (1.0, msg);
+            let mut size = 0.5;
+            while size > 0.01 {
+                let mut g2 = Gen::new(seed, size);
+                if let Err(m2) = prop(&mut g2) {
+                    best = (size, m2);
+                    size *= 0.5;
+                } else {
+                    break;
+                }
+            }
+            panic!(
+                "property '{name}' failed (seed={seed:#x}, case={case}, \
+                 shrunk size={:.3}): {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Assert inside a property, returning Err instead of panicking so the
+/// shrinker can drive.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!(
+                "assertion failed: {} ({}:{})",
+                stringify!($cond),
+                file!(),
+                line!()
+            ));
+        }
+    };
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+/// Assert approximate equality with relative tolerance.
+#[macro_export]
+macro_rules! prop_assert_close {
+    ($a:expr, $b:expr, $rtol:expr) => {{
+        let (a, b) = ($a as f64, $b as f64);
+        let denom = a.abs().max(b.abs()).max(1e-300);
+        if !((a - b).abs() / denom <= $rtol || (a - b).abs() < 1e-12) {
+            return Err(format!(
+                "not close: {a} vs {b} (rtol {}) at {}:{}",
+                $rtol,
+                file!(),
+                line!()
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        run_property("tautology", 50, |g| {
+            let x = g.u64(0, 100);
+            prop_assert!(x < 100);
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'falsifiable' failed")]
+    fn failing_property_panics_with_seed() {
+        run_property("falsifiable", 50, |g| {
+            let x = g.u64(0, 100);
+            prop_assert!(x < 2, "x={x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let collect = || {
+            let mut out = Vec::new();
+            run_property("det", 5, |g| {
+                out.push(g.u64(0, 1000));
+                Ok(())
+            });
+            out
+        };
+        // note: closure capture means we rebuild; just check stability
+        assert_eq!(collect(), collect());
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        let mut g = Gen::new(42, 1.0);
+        for _ in 0..1000 {
+            let v = g.i64(-5, 5);
+            assert!((-5..5).contains(&v));
+            let f = g.f64(2.0, 3.0);
+            assert!((2.0..3.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn shrink_reduces_size() {
+        // property fails only for big values; the reported shrink size
+        // must be < 1.0 (we can't capture panic message easily, so check
+        // the Gen mechanics directly)
+        let mut big = Gen::new(7, 1.0);
+        let mut small = Gen::new(7, 0.05);
+        let vb = big.usize(0, 1000);
+        let vs = small.usize(0, 1000);
+        assert!(vs <= vb.max(50), "shrunk {vs} vs {vb}");
+    }
+
+    #[test]
+    fn close_macro_works() {
+        fn check() -> CaseResult {
+            prop_assert_close!(1.0, 1.0 + 1e-9, 1e-6);
+            Ok(())
+        }
+        assert!(check().is_ok());
+        fn check_fail() -> CaseResult {
+            prop_assert_close!(1.0, 2.0, 1e-6);
+            Ok(())
+        }
+        assert!(check_fail().is_err());
+    }
+}

@@ -1,0 +1,317 @@
+//! Property-based tests over the substrates' invariants, driven by the
+//! in-repo mini-proptest (`util::proptest`). These are the "invariant"
+//! layer of the test pyramid: each property runs dozens of randomized
+//! cases and shrinks failures to a smaller witness.
+
+use consmax::quant::{BitSplitLut, Int8Quantizer, ReductionUnit};
+use consmax::sim::{simulate, NormKind, Schedule, Workload};
+use consmax::util::fp16::F16;
+use consmax::util::json::Json;
+use consmax::util::proptest::{run_property, Gen};
+use consmax::{prop_assert, prop_assert_close};
+
+// ---------------------------------------------------------------------------
+// fp16 softfloat
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_f16_roundtrip_through_f32_is_identity() {
+    run_property("f16 roundtrip", 300, |g: &mut Gen| {
+        let bits = g.u64(0, 0x10000) as u16;
+        let h = F16::from_bits(bits);
+        if h.is_nan() {
+            return Ok(());
+        }
+        let rt = F16::from_f32(h.to_f32());
+        prop_assert!(rt.to_bits() == bits, "bits {bits:#06x} -> {:#06x}", rt.to_bits());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_f16_conversion_is_monotone() {
+    run_property("f16 monotone", 300, |g: &mut Gen| {
+        let a = g.f32(-60000.0, 60000.0);
+        let b = g.f32(-60000.0, 60000.0);
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        let fl = F16::from_f32(lo).to_f32();
+        let fh = F16::from_f32(hi).to_f32();
+        prop_assert!(fl <= fh, "{lo} -> {fl}, {hi} -> {fh}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_f16_mul_commutes() {
+    run_property("f16 mul commutes", 300, |g: &mut Gen| {
+        let a = F16::from_f32(g.f32(-100.0, 100.0));
+        let b = F16::from_f32(g.f32(-100.0, 100.0));
+        prop_assert!(a.mul(b).to_bits() == b.mul(a).to_bits());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_f16_mul_one_is_identity() {
+    run_property("f16 mul identity", 200, |g: &mut Gen| {
+        let a = F16::from_f32(g.f32(-1000.0, 1000.0));
+        prop_assert!(a.mul(F16::ONE).to_bits() == a.to_bits());
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// quantizer + LUT datapath
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_quantizer_error_bounded_in_range() {
+    run_property("quantizer error bound", 300, |g: &mut Gen| {
+        let scale = *g.choose(&[1.0f32 / 8.0, 1.0 / 16.0, 1.0 / 32.0]);
+        let q = Int8Quantizer::new(scale);
+        let lim = 127.0 * scale;
+        let x = g.f32(-lim, lim);
+        let err = (q.dequantize(q.quantize(x)) - x).abs();
+        prop_assert!(err <= scale / 2.0 + 1e-6, "x={x} err={err}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lut_split_identity() {
+    // Eq. 4: q == 16*m + l for the signed nibble split, any q
+    run_property("lut split identity", 256, |g: &mut Gen| {
+        let q = g.i64(-128, 128) as i8;
+        let (mi, li) = BitSplitLut::split(q);
+        prop_assert!(16 * (mi as i32 - 8) + li as i32 == q as i32);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lut_exp_close_to_true_exp() {
+    run_property("lut exp accuracy", 300, |g: &mut Gen| {
+        let scale = *g.choose(&[1.0f32 / 16.0, 1.0 / 32.0]);
+        let lut = BitSplitLut::new(scale);
+        let q = g.i64(-128, 128) as i8;
+        let got = lut.exp(q).to_f32() as f64;
+        let want = (q as f64 * scale as f64).exp();
+        prop_assert_close!(got, want, 2e-3);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_consmax_scales_linearly_in_c() {
+    // ConSmax(q, 2c) ≈ 2 * ConSmax(q, c): the unit is linear in the
+    // merged constant (up to fp16 rounding)
+    run_property("consmax linear in C", 200, |g: &mut Gen| {
+        let lut = BitSplitLut::paper();
+        let q = g.i64(-64, 64) as i8; // keep products well inside fp16
+        let c = g.f32(1e-3, 0.1);
+        let a = lut.consmax(q, F16::from_f32(c)).to_f32() as f64;
+        let b = lut.consmax(q, F16::from_f32(2.0 * c)).to_f32() as f64;
+        prop_assert_close!(2.0 * a, b, 5e-3);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_reduction_unit_consistent_with_8bit_unit() {
+    // an INT16 code that is a pure high-byte multiple must match the
+    // 8-bit unit at 256x the scale
+    run_property("reduction vs 8-bit", 200, |g: &mut Gen| {
+        let scale = 1.0f32 / 256.0;
+        let ru = ReductionUnit::new(scale);
+        let hi = g.i64(-8, 8) as i16; // small so fp16 stays finite
+        let q16 = hi * 256;
+        let got = ru.exp16(q16).to_f32() as f64;
+        let want = (q16 as f64 * scale as f64).exp();
+        prop_assert_close!(got, want, 2e-3);
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// pipeline simulator conservation laws
+// ---------------------------------------------------------------------------
+
+fn random_workload(g: &mut Gen) -> Workload {
+    Workload {
+        tokens: g.usize(1, 6),
+        seq: *g.choose(&[32usize, 64, 128, 256]),
+        head_dim: *g.choose(&[16usize, 64]),
+        qk_lanes: *g.choose(&[16usize, 64]),
+        pv_lanes: *g.choose(&[16usize, 64]),
+        norm_latency: g.u64(1, 8),
+    }
+}
+
+#[test]
+fn prop_sim_work_conservation() {
+    // QK and PV busy cycles depend only on the workload, never on the
+    // normalizer or schedule
+    run_property("sim work conservation", 120, |g: &mut Gen| {
+        let w = random_workload(g);
+        let expect_qk = (w.tokens * w.seq) as u64 * w.qk_cycles_per_elem();
+        let expect_pv = (w.tokens * w.seq) as u64 * w.pv_cycles_per_elem();
+        for norm in [NormKind::Softmax, NormKind::Softermax, NormKind::ConSmax] {
+            let r = simulate(&w, norm, Schedule::TokenPipeline);
+            prop_assert!(r.qk.busy_cycles == expect_qk, "{norm:?} qk");
+            prop_assert!(r.pv.busy_cycles == expect_pv, "{norm:?} pv");
+        }
+        let r = simulate(&w, NormKind::ConSmax, Schedule::ElementWise);
+        prop_assert!(r.qk.busy_cycles == expect_qk);
+        prop_assert!(r.pv.busy_cycles == expect_pv);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sim_elementwise_never_slower() {
+    run_property("elementwise <= token pipeline", 120, |g: &mut Gen| {
+        let w = random_workload(g);
+        let ew = simulate(&w, NormKind::ConSmax, Schedule::ElementWise);
+        let tp = simulate(&w, NormKind::ConSmax, Schedule::TokenPipeline);
+        prop_assert!(
+            ew.total_cycles <= tp.total_cycles,
+            "ew {} > tp {}",
+            ew.total_cycles,
+            tp.total_cycles
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sim_consmax_dominates_baselines() {
+    run_property("consmax fastest", 120, |g: &mut Gen| {
+        let w = random_workload(g);
+        let cs = simulate(&w, NormKind::ConSmax, Schedule::ElementWise).total_cycles;
+        for norm in [
+            NormKind::Softmax,
+            NormKind::Softermax,
+            NormKind::PartialSoftmax { chunks: 4 },
+        ] {
+            let other = simulate(&w, norm, Schedule::TokenPipeline).total_cycles;
+            prop_assert!(cs <= other, "{norm:?}: {cs} > {other}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sim_busy_segments_within_makespan() {
+    run_property("segments within makespan", 120, |g: &mut Gen| {
+        let w = random_workload(g);
+        for (norm, sched) in [
+            (NormKind::Softmax, Schedule::TokenPipeline),
+            (NormKind::ConSmax, Schedule::ElementWise),
+        ] {
+            let r = simulate(&w, norm, sched);
+            for m in [&r.qk, &r.norm_unit, &r.pv] {
+                for &(s, e) in &m.segments {
+                    prop_assert!(s <= e && e <= r.total_cycles);
+                }
+                let sum: u64 = m.segments.iter().map(|(a, b)| b - a).sum();
+                prop_assert!(sum == m.busy_cycles);
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sim_total_monotone_in_tokens() {
+    run_property("more tokens, more cycles", 80, |g: &mut Gen| {
+        let mut w = random_workload(g);
+        w.tokens = g.usize(1, 4);
+        let a = simulate(&w, NormKind::Softmax, Schedule::TokenPipeline).total_cycles;
+        let mut w2 = w;
+        w2.tokens = w.tokens + 1;
+        let b = simulate(&w2, NormKind::Softmax, Schedule::TokenPipeline).total_cycles;
+        prop_assert!(b > a);
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// JSON round-trip
+// ---------------------------------------------------------------------------
+
+fn random_json(g: &mut Gen, depth: usize) -> Json {
+    if depth == 0 {
+        return match g.usize(0, 4) {
+            0 => Json::Null,
+            1 => Json::Bool(g.bool()),
+            2 => Json::Num((g.f64(-1e6, 1e6) * 100.0).round() / 100.0),
+            _ => Json::Str(
+                String::from_utf8(
+                    g.vec_u8(0, 12).iter().map(|b| b % 94 + 32).collect(),
+                )
+                .unwrap(),
+            ),
+        };
+    }
+    match g.usize(0, 6) {
+        0 => Json::Arr((0..g.usize(0, 4)).map(|_| random_json(g, depth - 1)).collect()),
+        1 => Json::from_pairs(
+            (0..g.usize(0, 4))
+                .map(|i| (format!("k{i}"), random_json(g, depth - 1))),
+        ),
+        _ => random_json(g, 0),
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    run_property("json roundtrip", 300, |g: &mut Gen| {
+        let v = random_json(g, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text)
+            .map_err(|e| format!("reparse failed on {text:?}: {e}"))?;
+        prop_assert!(back == v, "{text}");
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// hw estimator invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_hw_area_monotone_in_seq() {
+    use consmax::hw::{softermax_unit, softmax_unit, EdaFlow, Synthesizer, TechNode, TechProfile};
+    run_property("hw area monotone in seq", 60, |g: &mut Gen| {
+        let s = Synthesizer::new(TechProfile::new(TechNode::Fin16, EdaFlow::Proprietary));
+        let a = g.usize(32, 2048);
+        let b = a + g.usize(1, 2048);
+        prop_assert!(
+            s.synthesize(&softermax_unit(a)).area_mm2
+                <= s.synthesize(&softermax_unit(b)).area_mm2
+        );
+        prop_assert!(
+            s.synthesize(&softmax_unit(a)).area_mm2
+                <= s.synthesize(&softmax_unit(b)).area_mm2
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hw_energy_curve_has_interior_minimum() {
+    use consmax::hw::{consmax_unit, EdaFlow, Precision, Synthesizer, TechNode, TechProfile};
+    run_property("hw U-curve", 20, |g: &mut Gen| {
+        let flow = if g.bool() { EdaFlow::Proprietary } else { EdaFlow::OpenSource };
+        let s = Synthesizer::new(TechProfile::new(TechNode::Fin16, flow));
+        let rep = s.synthesize(&consmax_unit(Precision::Int8));
+        let sweep = s.energy_sweep(&rep, 60);
+        let min = sweep
+            .iter()
+            .map(|p| p.energy_pj_per_elem)
+            .fold(f64::INFINITY, f64::min);
+        prop_assert!(min < sweep[0].energy_pj_per_elem);
+        prop_assert!(min < sweep.last().unwrap().energy_pj_per_elem);
+        Ok(())
+    });
+}
