@@ -1,0 +1,32 @@
+# Repo-level targets. `make artifacts` is the command every "run `make
+# artifacts`" message in the Rust crate refers to: it lowers the JAX entry
+# points to HLO text + manifest + golden vectors for the PJRT backend.
+# The default Rust build needs none of this (see rust/README.md).
+
+.PHONY: artifacts build test bench fmt clippy python-test clean-artifacts
+
+ARTIFACTS_DIR ?= ../rust/artifacts
+
+artifacts:
+	cd python && python -m compile.aot --out $(ARTIFACTS_DIR)
+
+build:
+	cd rust && cargo build --release
+
+test:
+	cd rust && cargo test -q
+
+bench:
+	cd rust && cargo bench
+
+fmt:
+	cd rust && cargo fmt --check
+
+clippy:
+	cd rust && cargo clippy -- -D warnings
+
+python-test:
+	cd python && python -m pytest tests -q
+
+clean-artifacts:
+	rm -rf rust/artifacts

@@ -49,6 +49,74 @@ impl ModelConfig {
             .with_context(|| format!("unknown param {name}"))
     }
 
+    /// Construct a model configuration without a manifest, mirroring the
+    /// named presets in `python/compile/model.py` (`TINY` / `PAPER`) and
+    /// its `param_order` / parameter shapes exactly. This is what the
+    /// native backend runs on when no `artifacts/` directory exists; when
+    /// a manifest IS present the two sources agree by construction (both
+    /// derive from the same python presets) and the manifest wins.
+    pub fn builtin(config: &str, normalizer: &str) -> Result<ModelConfig> {
+        match normalizer {
+            "softmax" | "consmax" | "softermax" => {}
+            other => bail!("unknown normalizer {other:?} (softmax|consmax|softermax)"),
+        }
+        let (vocab, ctx, n_layer, n_head, n_embd, train_batch, total_steps) =
+            match config {
+                "tiny" => (256usize, 64usize, 2usize, 2usize, 64usize, 4usize, 200usize),
+                "paper" => (256, 256, 6, 6, 384, 8, 2000),
+                other => bail!("unknown builtin config {other:?} (tiny|paper)"),
+            };
+        let (l, h, d) = (n_layer, n_head, n_embd);
+        let param_order: Vec<String> = [
+            "wte", "wpe", "ln1_g", "ln1_b", "attn_qkv_w", "attn_qkv_b",
+            "attn_proj_w", "attn_proj_b", "beta", "gamma", "ln2_g", "ln2_b",
+            "mlp_fc_w", "mlp_fc_b", "mlp_proj_w", "mlp_proj_b", "lnf_g",
+            "lnf_b",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let shapes: Vec<(&str, Vec<usize>)> = vec![
+            ("wte", vec![vocab, d]),
+            ("wpe", vec![ctx, d]),
+            ("ln1_g", vec![l, d]),
+            ("ln1_b", vec![l, d]),
+            ("attn_qkv_w", vec![l, d, 3 * d]),
+            ("attn_qkv_b", vec![l, 3 * d]),
+            ("attn_proj_w", vec![l, d, d]),
+            ("attn_proj_b", vec![l, d]),
+            ("beta", vec![l, h]),
+            ("gamma", vec![l, h]),
+            ("ln2_g", vec![l, d]),
+            ("ln2_b", vec![l, d]),
+            ("mlp_fc_w", vec![l, d, 4 * d]),
+            ("mlp_fc_b", vec![l, 4 * d]),
+            ("mlp_proj_w", vec![l, 4 * d, d]),
+            ("mlp_proj_b", vec![l, d]),
+            ("lnf_g", vec![d]),
+            ("lnf_b", vec![d]),
+        ];
+        let param_shapes: BTreeMap<String, Vec<usize>> = shapes
+            .into_iter()
+            .map(|(n, s)| (n.to_string(), s))
+            .collect();
+        Ok(ModelConfig {
+            key: format!("{config}_{normalizer}"),
+            vocab,
+            ctx,
+            n_layer,
+            n_head,
+            n_embd,
+            normalizer: normalizer.to_string(),
+            beta_init: 2.5,
+            gamma_init: 100.0,
+            total_steps,
+            train_batch,
+            param_order,
+            param_shapes,
+        })
+    }
+
     fn from_json(key: &str, v: &Json) -> Result<ModelConfig> {
         let req_usize = |k: &str| -> Result<usize> {
             v.get(k)
@@ -302,5 +370,33 @@ mod tests {
     fn run_config_key() {
         let rc = RunConfig::default();
         assert_eq!(rc.model_key(), "tiny_consmax");
+    }
+
+    #[test]
+    fn builtin_tiny_matches_python_preset() {
+        let c = ModelConfig::builtin("tiny", "consmax").unwrap();
+        assert_eq!(c.key, "tiny_consmax");
+        assert_eq!((c.vocab, c.ctx, c.n_layer, c.n_head, c.n_embd), (256, 64, 2, 2, 64));
+        assert_eq!(c.head_dim(), 32);
+        assert_eq!(c.param_order.len(), 18);
+        assert_eq!(c.shape_of("attn_qkv_w").unwrap(), &[2, 64, 192]);
+        assert_eq!(c.shape_of("beta").unwrap(), &[2, 2]);
+        assert_eq!(c.shape_of("lnf_g").unwrap(), &[64]);
+        // param count: same formula as the manifest-backed config
+        assert!(c.param_count() > 100_000, "{}", c.param_count());
+    }
+
+    #[test]
+    fn builtin_paper_is_the_6l_model() {
+        let c = ModelConfig::builtin("paper", "softmax").unwrap();
+        assert_eq!((c.n_layer, c.n_head, c.n_embd, c.ctx), (6, 6, 384, 256));
+        assert_eq!(c.train_batch, 8);
+        assert_eq!(c.shape_of("mlp_fc_w").unwrap(), &[6, 384, 1536]);
+    }
+
+    #[test]
+    fn builtin_rejects_unknowns() {
+        assert!(ModelConfig::builtin("huge", "consmax").is_err());
+        assert!(ModelConfig::builtin("tiny", "sparsemax").is_err());
     }
 }

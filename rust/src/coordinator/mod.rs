@@ -1,23 +1,29 @@
 //! Layer-3 coordinator: everything that runs at request time.
 //!
-//! * [`params`] — parameter/optimizer state + checkpoints.
-//! * [`trainer`] — the training loop over the AOT `train_step` (Fig 6/7).
-//! * [`sweep`] — β/γ initialization grid search (Fig 8).
-//! * [`server`] — batched KV-cached generation service.
+//! * [`params`] — parameter/optimizer state + checkpoints (all backends).
+//! * [`server`] — batched generation service over the pluggable
+//!   [`Generator`] (native recompute decode, or PJRT KV-cached decode).
+//! * [`trainer`] (`--features pjrt`) — the training loop over the AOT
+//!   `train_step` (Fig 6/7). Training needs autodiff, which only the
+//!   AOT path provides; evaluation/generation also run natively.
+//! * [`sweep`] (`--features pjrt`) — β/γ initialization grid (Fig 8).
 //!
 //! The paper's contribution lives at L1/L2 (the normalizer) and in the
-//! `hw`/`sim` substrates; this layer is the thin-but-real driver the
-//! system prompt's architecture calls for: CLI, process lifecycle,
-//! training/serving loops, metrics.
+//! `hw`/`sim` substrates; this layer is the thin-but-real driver: CLI,
+//! process lifecycle, training/serving loops, metrics.
 
 pub mod params;
 pub mod report;
 pub mod server;
+#[cfg(feature = "pjrt")]
 pub mod sweep;
+#[cfg(feature = "pjrt")]
 pub mod trainer;
 
 pub use params::ParamStore;
 pub use report::{report_compare, report_run};
 pub use server::{GenRequest, GenResponse, Generator, Server};
+#[cfg(feature = "pjrt")]
 pub use sweep::{best_point, sweep_init, SweepOptions, SweepPoint};
+#[cfg(feature = "pjrt")]
 pub use trainer::{TrainOptions, TrainReport, Trainer};

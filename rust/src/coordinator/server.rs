@@ -1,24 +1,42 @@
-//! Generation server: request queue → static batcher → KV-cached decode
-//! loop over the AOT `decode_b{N}` executables, with per-request latency
-//! accounting. This is the "LLM inference" face of the coordinator — the
-//! place where ConSmax's merged β/γ constants actually serve requests.
+//! Generation server: request queue → static batcher → batched decode
+//! loop, with per-request latency accounting. This is the "LLM inference"
+//! face of the coordinator — the place where ConSmax's merged β/γ
+//! constants actually serve requests.
 //!
-//! Batching policy is static (vLLM-v0-style): up to the largest exported
-//! decode batch size, prompts left-aligned by feeding them through the
-//! decode path position by position (prefill), shorter prompts padded
-//! with spaces. Responses return per-request generated text plus timing.
+//! The [`Generator`] is backend-pluggable (the multi-backend seam of
+//! DESIGN.md §4):
+//!
+//! * **native** — recompute decode over [`NativeModel`]; always
+//!   available, needs no artifacts. `consmax serve-demo --backend native`
+//!   runs end-to-end on a machine with nothing but this crate.
+//! * **pjrt** (`--features pjrt`) — KV-cached decode over the AOT
+//!   `decode_b{N}` executables, parameters uploaded to device buffers
+//!   once at construction.
+//!
+//! Batching policy is static (vLLM-v0-style): up to the backend's
+//! largest decode batch, prompts left-aligned by padding with spaces.
+//! Responses return per-request generated text plus timing.
 
 use std::collections::VecDeque;
+use std::marker::PhantomData;
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use anyhow::Result;
+#[cfg(feature = "pjrt")]
+use anyhow::{bail, Context};
 
 use crate::config::ModelConfig;
 use crate::coordinator::params::ParamStore;
 use crate::data::ByteTokenizer;
 use crate::metrics::LatencyRecorder;
+use crate::runtime::backend::NativeModel;
+#[cfg(feature = "pjrt")]
 use crate::runtime::{Engine, HostTensor};
 use crate::util::rng::Pcg32;
+
+/// Largest batch the native recompute decoder serves at once (a knob,
+/// not an export constraint like the PJRT decode artifacts).
+pub const NATIVE_MAX_BATCH: usize = 8;
 
 /// A generation request.
 #[derive(Debug, Clone)]
@@ -41,20 +59,33 @@ pub struct GenResponse {
     pub batch_size: usize,
 }
 
-/// Low-level batched generator over the decode artifacts.
+/// Backend-specific decode state.
+enum GenExec<'e> {
+    /// Recompute decode over the pure-Rust forward pass.
+    Native(Box<NativeModel>, PhantomData<&'e ()>),
+    /// KV-cached decode over the AOT `decode_b{N}` executables.
+    #[cfg(feature = "pjrt")]
+    Pjrt {
+        engine: &'e Engine,
+        /// Parameters cached as device buffers: uploaded once at
+        /// construction instead of on every decode step (§Perf: removes
+        /// the dominant per-step cost, a full-model host→device copy).
+        params: Vec<xla::PjRtBuffer>,
+        /// Decode batch sizes available in the manifest, descending.
+        batch_sizes: Vec<usize>,
+    },
+}
+
+/// Batched generator over a decode backend.
 pub struct Generator<'e> {
-    engine: &'e Engine,
     pub cfg: ModelConfig,
-    /// Parameters cached as device buffers: uploaded once at construction
-    /// instead of on every decode step (§Perf: removes the dominant
-    /// per-step cost, a full-model host->device copy).
-    params: Vec<xla::PjRtBuffer>,
-    /// Decode batch sizes available in the manifest, descending.
-    batch_sizes: Vec<usize>,
+    exec: GenExec<'e>,
     rng: Pcg32,
 }
 
 impl<'e> Generator<'e> {
+    /// PJRT-backed generator over an engine's decode artifacts.
+    #[cfg(feature = "pjrt")]
     pub fn new(engine: &'e Engine, store: &ParamStore, seed: u64) -> Result<Generator<'e>> {
         let cfg = engine.manifest.config(&store.config_key)?.clone();
         let params = store
@@ -75,21 +106,66 @@ impl<'e> Generator<'e> {
         if batch_sizes.is_empty() {
             bail!("no decode artifacts for {} (re-run `make artifacts`)", cfg.key);
         }
-        Ok(Generator { engine, cfg, params, batch_sizes, rng: Pcg32::seeded(seed) })
+        Ok(Generator {
+            cfg,
+            exec: GenExec::Pjrt { engine, params, batch_sizes },
+            rng: Pcg32::seeded(seed),
+        })
+    }
+
+    /// Native generator: pure-Rust decode, no artifacts required.
+    pub fn native(
+        cfg: &ModelConfig,
+        store: &ParamStore,
+        seed: u64,
+    ) -> Result<Generator<'static>> {
+        let model = NativeModel::from_params(cfg, &store.order, &store.params)?;
+        Ok(Generator {
+            cfg: cfg.clone(),
+            exec: GenExec::Native(Box::new(model), PhantomData),
+            rng: Pcg32::seeded(seed),
+        })
+    }
+
+    /// Which backend this generator decodes on ("native" / "pjrt").
+    pub fn backend_name(&self) -> &'static str {
+        match &self.exec {
+            GenExec::Native(..) => "native",
+            #[cfg(feature = "pjrt")]
+            GenExec::Pjrt { .. } => "pjrt",
+        }
     }
 
     pub fn max_batch(&self) -> usize {
-        self.batch_sizes[0]
+        match &self.exec {
+            GenExec::Native(..) => NATIVE_MAX_BATCH,
+            #[cfg(feature = "pjrt")]
+            GenExec::Pjrt { batch_sizes, .. } => batch_sizes[0],
+        }
     }
 
-    /// Smallest exported batch size that fits `n` requests.
-    fn pick_batch(&self, n: usize) -> usize {
-        *self
-            .batch_sizes
+    /// Encode prompts, clamp to the KV/ctx budget and left-pad with
+    /// spaces to a common length (shared by both decode backends).
+    fn encode_prompts(&self, prompts: &[String], max_new: usize) -> Vec<Vec<i32>> {
+        let tok = ByteTokenizer;
+        let budget = self.cfg.ctx.saturating_sub(max_new).max(1);
+        let mut encoded: Vec<Vec<i32>> = prompts
             .iter()
-            .filter(|&&b| b >= n)
-            .min()
-            .unwrap_or(&self.batch_sizes[0])
+            .map(|p| {
+                let mut t = tok.encode(p);
+                if t.len() > budget {
+                    t = t.split_off(t.len() - budget);
+                }
+                t
+            })
+            .collect();
+        let plen = encoded.iter().map(Vec::len).max().unwrap_or(1).max(1);
+        for t in &mut encoded {
+            while t.len() < plen {
+                t.insert(0, b' ' as i32);
+            }
+        }
+        encoded
     }
 
     /// Generate continuations for up to `max_batch()` prompts at once.
@@ -102,111 +178,125 @@ impl<'e> Generator<'e> {
         temperature: f32,
     ) -> Result<Vec<String>> {
         anyhow::ensure!(!prompts.is_empty(), "empty batch");
-        let b = self.pick_batch(prompts.len());
         anyhow::ensure!(
-            prompts.len() <= b,
-            "batch of {} exceeds max decode batch {b}",
-            prompts.len()
+            prompts.len() <= self.max_batch(),
+            "batch of {} exceeds max decode batch {}",
+            prompts.len(),
+            self.max_batch()
         );
-        let entry = format!("{}_decode_b{}", self.cfg.key, b);
-        let exe = self.engine.load(&entry)?;
+        let encoded = self.encode_prompts(prompts, max_new);
         let tok = ByteTokenizer;
-
-        // Left-pad prompts with spaces to a common length; clamp so that
-        // prompt + generation fits the KV cache (ctx).
-        let budget = self.cfg.ctx.saturating_sub(max_new).max(1);
-        let mut encoded: Vec<Vec<i32>> = prompts
-            .iter()
-            .map(|p| {
-                let mut t = tok.encode(p);
-                if t.len() > budget {
-                    t = t.split_off(t.len() - budget);
-                }
-                t
-            })
-            .collect();
-        let plen = encoded.iter().map(Vec::len).max().unwrap();
-        for t in &mut encoded {
-            while t.len() < plen {
-                t.insert(0, b' ' as i32);
-            }
-        }
-        // rows beyond the real prompts replicate row 0 (ignored outputs)
-        while encoded.len() < b {
-            encoded.push(encoded[0].clone());
-        }
-
-        // KV caches start zeroed (device-resident; re-uploaded per step
-        // because the output tuple only materializes on the host)
-        let cache_shape = vec![
-            self.cfg.n_layer,
-            b,
-            self.cfg.n_head,
-            self.cfg.ctx,
-            self.cfg.head_dim(),
-        ];
-        let mut kc = self.engine.upload(&HostTensor::zeros(
-            crate::runtime::DType::F32,
-            &cache_shape,
-        ))?;
-        let mut vc = self.engine.upload(&HostTensor::zeros(
-            crate::runtime::DType::F32,
-            &cache_shape,
-        ))?;
-
-        let steps = plen + max_new - 1;
-        let mut generated: Vec<Vec<i32>> = vec![Vec::new(); prompts.len()];
-        let mut last_tokens: Vec<i32> = encoded.iter().map(|t| t[0]).collect();
-
-        for pos in 0..=steps {
-            if pos >= self.cfg.ctx {
-                break;
-            }
-            let toks: Vec<i32> = (0..b)
-                .map(|r| {
-                    if pos < plen {
-                        encoded[r][pos]
-                    } else {
-                        last_tokens[r]
-                    }
-                })
-                .collect();
-            let tok_buf = self
-                .engine
-                .upload(&HostTensor::from_i32(&toks, &[b]))?;
-            let pos_buf = self
-                .engine
-                .upload(&HostTensor::scalar_i32(pos as i32))?;
-            let inputs: Vec<&xla::PjRtBuffer> = self
-                .params
-                .iter()
-                .chain([&kc, &vc, &pos_buf, &tok_buf])
-                .collect();
-            let mut outs =
-                self.engine.execute_buffer_refs(&entry, &exe, &inputs)?;
-            vc = self.engine.upload_literal(&outs.pop().context("vc")?)?;
-            kc = self.engine.upload_literal(&outs.pop().context("kc")?)?;
-            let logits_t = HostTensor::from_literal(&outs.pop().context("logits")?)?;
-            let logits = logits_t.as_f32()?;
-            let vocab = self.cfg.vocab;
-
-            if pos + 1 >= plen {
-                // sample the next token per row
-                for r in 0..prompts.len() {
-                    let row = &logits[r * vocab..(r + 1) * vocab];
-                    let next = if temperature <= 0.0 {
-                        argmax(row)
-                    } else {
-                        sample_temperature(row, temperature, &mut self.rng)
-                    };
-                    last_tokens[r] = next as i32;
-                    if generated[r].len() < max_new {
+        match &mut self.exec {
+            GenExec::Native(model, _) => {
+                let mut seqs = encoded;
+                let mut generated: Vec<Vec<i32>> = vec![Vec::new(); prompts.len()];
+                for _ in 0..max_new {
+                    let logits = model.next_logits(&seqs)?;
+                    let vocab = self.cfg.vocab;
+                    for (r, seq) in seqs.iter_mut().enumerate() {
+                        let row = &logits[r * vocab..(r + 1) * vocab];
+                        let next = if temperature <= 0.0 {
+                            argmax(row)
+                        } else {
+                            sample_temperature(row, temperature, &mut self.rng)
+                        };
+                        seq.push(next as i32);
                         generated[r].push(next as i32);
                     }
                 }
+                Ok(generated.iter().map(|g| tok.decode(g)).collect())
+            }
+            #[cfg(feature = "pjrt")]
+            GenExec::Pjrt { engine, params, batch_sizes } => {
+                // smallest exported batch size that fits the request count
+                let b = *batch_sizes
+                    .iter()
+                    .filter(|&&bs| bs >= prompts.len())
+                    .min()
+                    .unwrap_or(&batch_sizes[0]);
+                let entry = format!("{}_decode_b{}", self.cfg.key, b);
+                let exe = engine.load(&entry)?;
+
+                // rows beyond the real prompts replicate row 0 (outputs
+                // ignored)
+                let mut encoded = encoded;
+                let plen = encoded[0].len();
+                while encoded.len() < b {
+                    encoded.push(encoded[0].clone());
+                }
+
+                // KV caches start zeroed (device-resident; re-uploaded per
+                // step because the output tuple only materializes on host)
+                let cache_shape = vec![
+                    self.cfg.n_layer,
+                    b,
+                    self.cfg.n_head,
+                    self.cfg.ctx,
+                    self.cfg.head_dim(),
+                ];
+                let mut kc = engine.upload(&HostTensor::zeros(
+                    crate::runtime::DType::F32,
+                    &cache_shape,
+                ))?;
+                let mut vc = engine.upload(&HostTensor::zeros(
+                    crate::runtime::DType::F32,
+                    &cache_shape,
+                ))?;
+
+                let steps = plen + max_new - 1;
+                let mut generated: Vec<Vec<i32>> = vec![Vec::new(); prompts.len()];
+                let mut last_tokens: Vec<i32> =
+                    encoded.iter().map(|t| t[0]).collect();
+
+                for pos in 0..=steps {
+                    if pos >= self.cfg.ctx {
+                        break;
+                    }
+                    let toks: Vec<i32> = (0..b)
+                        .map(|r| {
+                            if pos < plen {
+                                encoded[r][pos]
+                            } else {
+                                last_tokens[r]
+                            }
+                        })
+                        .collect();
+                    let tok_buf =
+                        engine.upload(&HostTensor::from_i32(&toks, &[b]))?;
+                    let pos_buf =
+                        engine.upload(&HostTensor::scalar_i32(pos as i32))?;
+                    let inputs: Vec<&xla::PjRtBuffer> = params
+                        .iter()
+                        .chain([&kc, &vc, &pos_buf, &tok_buf])
+                        .collect();
+                    let mut outs =
+                        engine.execute_buffer_refs(&entry, &exe, &inputs)?;
+                    vc = engine.upload_literal(&outs.pop().context("vc")?)?;
+                    kc = engine.upload_literal(&outs.pop().context("kc")?)?;
+                    let logits_t =
+                        HostTensor::from_literal(&outs.pop().context("logits")?)?;
+                    let logits = logits_t.as_f32()?;
+                    let vocab = self.cfg.vocab;
+
+                    if pos + 1 >= plen {
+                        // sample the next token per row
+                        for r in 0..prompts.len() {
+                            let row = &logits[r * vocab..(r + 1) * vocab];
+                            let next = if temperature <= 0.0 {
+                                argmax(row)
+                            } else {
+                                sample_temperature(row, temperature, &mut self.rng)
+                            };
+                            last_tokens[r] = next as i32;
+                            if generated[r].len() < max_new {
+                                generated[r].push(next as i32);
+                            }
+                        }
+                    }
+                }
+                Ok(generated.iter().map(|g| tok.decode(g)).collect())
             }
         }
-        Ok(generated.iter().map(|g| tok.decode(g)).collect())
     }
 }
 
@@ -339,5 +429,62 @@ mod tests {
         for c in counts {
             assert!(c > 300, "{counts:?}");
         }
+    }
+
+    fn native_generator() -> Generator<'static> {
+        let cfg = ModelConfig::builtin("tiny", "consmax").unwrap();
+        let store = ParamStore::init(&cfg, 5).unwrap();
+        Generator::native(&cfg, &store, 0).unwrap()
+    }
+
+    #[test]
+    fn native_greedy_generation_is_deterministic() {
+        let mut g1 = native_generator();
+        let mut g2 = native_generator();
+        let a = g1.generate_batch(&["hello ".into()], 8, 0.0).unwrap();
+        let b = g2.generate_batch(&["hello ".into()], 8, 0.0).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a[0].len(), 8);
+        assert_eq!(g1.backend_name(), "native");
+    }
+
+    #[test]
+    fn native_generation_respects_context_budget() {
+        let mut g = native_generator();
+        let long = "x".repeat(g.cfg.ctx * 2);
+        let out = g.generate_batch(&[long], 6, 0.0).unwrap();
+        assert_eq!(out[0].len(), 6);
+    }
+
+    #[test]
+    fn native_server_serves_all_requests() {
+        let mut server = Server::new(native_generator());
+        for id in 0..3 {
+            server.submit(GenRequest {
+                id,
+                prompt: format!("prompt {id} "),
+                max_new_tokens: 4,
+                temperature: 0.0,
+            });
+        }
+        let responses = server.run_to_completion().unwrap();
+        assert_eq!(responses.len(), 3);
+        assert_eq!(server.pending(), 0);
+        let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2]);
+        for r in &responses {
+            assert_eq!(r.new_tokens, 4);
+            assert!(r.latency_ms > 0.0);
+        }
+        assert_eq!(server.latencies.len(), 3);
+    }
+
+    #[test]
+    fn oversize_batch_rejected() {
+        let mut g = native_generator();
+        let prompts: Vec<String> =
+            (0..NATIVE_MAX_BATCH + 1).map(|i| format!("p{i}")).collect();
+        assert!(g.generate_batch(&prompts, 2, 0.0).is_err());
     }
 }

@@ -1,7 +1,8 @@
-//! β/γ initialization sweep (paper Fig 8): train short runs over a grid
-//! of initial values and report validation loss, selecting the best
-//! combination — the paper's "hyperparameter tuning during warm-up
-//! iterations" procedure (§III-A).
+//! β/γ initialization sweep (paper Fig 8, `--features pjrt`): train short
+//! runs over a grid of initial values and report validation loss,
+//! selecting the best combination — the paper's "hyperparameter tuning
+//! during warm-up iterations" procedure (§III-A). Rides on [`Trainer`],
+//! so it shares the trainer's PJRT requirement.
 
 use anyhow::Result;
 

@@ -1,6 +1,14 @@
-//! Training orchestrator: owns the parameter state, feeds the AOT
-//! `train_step` executable, and records the metrics the paper's software
-//! evaluation plots (Fig 6 loss/perplexity curves, Fig 7 β/γ traces).
+//! Training orchestrator (`--features pjrt`): owns the parameter state,
+//! feeds the AOT `train_step` executable, and records the metrics the
+//! paper's software evaluation plots (Fig 6 loss/perplexity curves,
+//! Fig 7 β/γ traces).
+//!
+//! This module is the one coordinator component pinned to the PJRT
+//! backend: the fused fwd+bwd+AdamW step exists only as an AOT artifact
+//! (the native backend is forward-only — see
+//! `runtime::backend::NativeModel`). Evaluation of a trained checkpoint
+//! does not need this module; `consmax eval --backend native` scores
+//! checkpoints through the native forward pass.
 //!
 //! The hot loop keeps params + moments as PJRT literals: the train-step
 //! outputs of step *t* are the inputs of step *t+1* without a host

@@ -16,12 +16,20 @@
 //!   (synthesis estimator for Table I / Figs 9–10, cycle-accurate
 //!   attention-pipeline simulator for Fig 5).
 //!
-//! Python never runs on the request path: `make artifacts` lowers the JAX
-//! entry points to `artifacts/*.hlo.txt`, and [`runtime`] loads and
-//! executes them through PJRT (`xla` crate).
+//! Execution is backend-pluggable ([`runtime::Backend`], DESIGN.md §4):
 //!
-//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! * the **native** backend re-implements the L1 kernels (and a
+//!   forward-only GPT) in pure Rust, so evaluation, generation, serving,
+//!   the hardware report and the pipeline simulation all run from a bare
+//!   checkout — no Python, no PJRT, no artifacts;
+//! * the **pjrt** backend (`--features pjrt`) executes the AOT artifacts:
+//!   `make artifacts` lowers the JAX entry points to
+//!   `artifacts/*.hlo.txt`, and [`runtime::Engine`] loads and executes
+//!   them through PJRT (`xla` crate). Training (fused fwd+bwd+AdamW)
+//!   lives only here.
+//!
+//! See `DESIGN.md` for the experiment index and backend-selection matrix,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
 
 pub mod config;
 pub mod coordinator;

@@ -1,28 +1,38 @@
 //! `consmax` — the coordinator CLI.
 //!
 //! ```text
-//! consmax train        train a GPT variant via the AOT train-step
-//! consmax compare      Fig 6: train softmax vs consmax on identical data
+//! consmax train        train a GPT variant via the AOT train-step (pjrt)
+//! consmax compare      Fig 6: train softmax vs consmax on identical data (pjrt)
 //! consmax eval         validation loss/perplexity of a checkpoint
-//! consmax sweep-init   Fig 8: β/γ initialization grid
+//! consmax sweep-init   Fig 8: β/γ initialization grid (pjrt)
 //! consmax generate     sample text from a checkpoint
 //! consmax serve-demo   batched generation service + latency stats
 //! consmax hw-report    Table I + savings ratios (synthesis estimator)
 //! consmax sim          Fig 5: pipeline schedules, utilization, savings
-//! consmax info         artifact manifest + platform summary
+//! consmax info         backend, op and model-config summary
 //! ```
+//!
+//! Backend selection (`--backend native|pjrt|auto`): `sim`, `hw-report`,
+//! `eval`, `generate`, `serve-demo` and `info` run end-to-end on the
+//! pure-Rust native backend — no Python, no PJRT, no `artifacts/`.
+//! Training subcommands need the AOT train step (`--features pjrt` +
+//! `make artifacts`).
 
 use std::path::PathBuf;
 
 use anyhow::{bail, Result};
 
+use consmax::config::ModelConfig;
+#[cfg(feature = "pjrt")]
 use consmax::coordinator::{
-    best_point, sweep_init, GenRequest, Generator, ParamStore, Server,
-    SweepOptions, TrainOptions, Trainer,
+    best_point, sweep_init, SweepOptions, TrainOptions, Trainer,
 };
-use consmax::data::{BatchSampler, Corpus};
+use consmax::coordinator::{GenRequest, Generator, ParamStore, Server};
+use consmax::data::{BatchSampler, ByteTokenizer, Corpus};
 use consmax::hw::{savings, table1, EdaFlow};
 use consmax::metrics::perplexity;
+use consmax::runtime::backend::{create_backend, Backend, BackendChoice, NativeModel};
+#[cfg(feature = "pjrt")]
 use consmax::runtime::Engine;
 use consmax::sim::{simulate, NormKind, Schedule, Workload};
 use consmax::util::bench::print_table;
@@ -31,7 +41,8 @@ use consmax::util::rng::Pcg32;
 
 fn specs() -> Vec<Spec> {
     vec![
-        Spec::opt_default("artifacts", "artifacts", "artifacts directory"),
+        Spec::opt_default("backend", "auto", "execution backend (native|pjrt|auto)"),
+        Spec::opt_default("artifacts", "artifacts", "artifacts directory (pjrt)"),
         Spec::opt_default("config", "tiny", "model config (tiny|paper)"),
         Spec::opt_default("normalizer", "consmax", "softmax|consmax|softermax"),
         Spec::opt_default("steps", "100", "training steps"),
@@ -53,7 +64,7 @@ fn specs() -> Vec<Spec> {
         Spec::opt_default("flow", "proprietary", "hw: proprietary|opensource"),
         Spec::opt_default("warmup-steps", "30", "sweep: steps per grid point"),
         Spec::flag("no-trace-params", "disable beta/gamma series logging"),
-        Spec::flag("quant", "eval: use the INT8 hardware normalizer path"),
+        Spec::flag("quant", "eval: use the INT8 hardware normalizer path (pjrt)"),
         Spec::opt("beta0", "train: pin all beta inits to this value (Fig 8 winner)"),
         Spec::opt("gamma0", "train: pin all gamma inits to this value"),
         Spec::flag("help", "show help"),
@@ -76,15 +87,15 @@ fn main() {
                 "consmax",
                 "ConSmax paper reproduction coordinator",
                 &[
-                    ("train", "train a GPT variant via the AOT train-step"),
-                    ("compare", "Fig 6: softmax vs consmax on identical data"),
+                    ("train", "train a GPT variant via the AOT train-step (pjrt)"),
+                    ("compare", "Fig 6: softmax vs consmax on identical data (pjrt)"),
                     ("eval", "validation loss of a checkpoint"),
-                    ("sweep-init", "Fig 8: beta/gamma initialization grid"),
+                    ("sweep-init", "Fig 8: beta/gamma initialization grid (pjrt)"),
                     ("generate", "sample text from a checkpoint"),
                     ("serve-demo", "batched generation + latency stats"),
                     ("hw-report", "Table I + savings ratios"),
                     ("sim", "Fig 5 pipeline simulation"),
-                    ("info", "artifact manifest summary"),
+                    ("info", "backend, op and model-config summary"),
                 ],
                 &specs()
             )
@@ -138,6 +149,49 @@ fn load_corpus(args: &Args) -> Result<Corpus> {
     })
 }
 
+/// Should this invocation run on the PJRT engine? `auto` picks PJRT only
+/// when it is compiled in AND artifacts exist, so a bare checkout always
+/// lands on the native backend.
+fn wants_pjrt(args: &Args) -> Result<bool> {
+    match BackendChoice::parse(&args.get_string("backend", "auto"))? {
+        BackendChoice::Native => Ok(false),
+        BackendChoice::Pjrt => Ok(true),
+        BackendChoice::Auto => Ok(consmax::runtime::backend::pjrt_available(
+            std::path::Path::new(&args.get_string("artifacts", "artifacts")),
+        )),
+    }
+}
+
+#[cfg_attr(feature = "pjrt", allow(dead_code))]
+fn pjrt_unavailable(what: &str) -> anyhow::Error {
+    anyhow::anyhow!(
+        "{what} requires the PJRT backend: rebuild with `cargo build \
+         --features pjrt`, run `make artifacts`, or pass --backend native \
+         (see rust/README.md)"
+    )
+}
+
+/// Build the (builtin) model config + parameter store for native runs.
+fn native_model_setup(args: &Args) -> Result<(ModelConfig, ParamStore)> {
+    let cfg = ModelConfig::builtin(
+        &args.get_string("config", "tiny"),
+        &args.get_string("normalizer", "consmax"),
+    )?;
+    let seed = args.get_u64("seed", 0)?;
+    let store = match args.get("checkpoint") {
+        Some(p) if std::path::Path::new(p).exists() => {
+            ParamStore::load(std::path::Path::new(p), &cfg)?
+        }
+        Some(p) => bail!("checkpoint {p:?} not found"),
+        None => {
+            log::warn!("no checkpoint: using randomly initialized weights");
+            ParamStore::init(&cfg, seed)?
+        }
+    };
+    Ok((cfg, store))
+}
+
+#[cfg(feature = "pjrt")]
 fn build_trainer<'e>(
     engine: &'e Engine,
     args: &Args,
@@ -148,7 +202,7 @@ fn build_trainer<'e>(
     let seed = args.get_u64("seed", 0)?;
     let corpus = load_corpus(args)?;
     let (train_text, val_text) = corpus.split();
-    let tok = consmax::data::ByteTokenizer;
+    let tok = ByteTokenizer;
     let train =
         BatchSampler::new(tok.encode(train_text), cfg.train_batch, cfg.ctx, seed);
     let val =
@@ -176,6 +230,7 @@ fn build_trainer<'e>(
     Trainer::new(engine, &key, store, train, Some(val))
 }
 
+#[cfg(feature = "pjrt")]
 fn train_opts(args: &Args) -> Result<TrainOptions> {
     Ok(TrainOptions {
         steps: args.get_usize("steps", 100)?,
@@ -187,7 +242,17 @@ fn train_opts(args: &Args) -> Result<TrainOptions> {
     })
 }
 
-fn run(cmd: &str, args: &Args) -> Result<()> {
+// ---------------------------------------------------------------------------
+// training-family subcommands (AOT train step -> pjrt only)
+// ---------------------------------------------------------------------------
+
+#[cfg(not(feature = "pjrt"))]
+fn run_train_family(cmd: &str, _args: &Args) -> Result<()> {
+    Err(pjrt_unavailable(&format!("`consmax {cmd}` (AOT train step)")))
+}
+
+#[cfg(feature = "pjrt")]
+fn run_train_family(cmd: &str, args: &Args) -> Result<()> {
     match cmd {
         "train" => {
             let engine = Engine::new(args.get_string("artifacts", "artifacts"))?;
@@ -245,19 +310,6 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             );
             Ok(())
         }
-        "eval" => {
-            let engine = Engine::new(args.get_string("artifacts", "artifacts"))?;
-            let normalizer = args.get_string("normalizer", "consmax");
-            let mut tr = build_trainer(&engine, args, &normalizer)?;
-            let loss = if args.has_flag("quant") {
-                tr.evaluate_quantized(8)?
-            } else {
-                tr.evaluate(8)?
-            };
-            let tag = if args.has_flag("quant") { " (INT8 hw normalizer)" } else { "" };
-            println!("val loss {loss:.4}  ppl {:.2}{tag}", perplexity(loss));
-            Ok(())
-        }
         "sweep-init" => {
             let engine = Engine::new(args.get_string("artifacts", "artifacts"))?;
             let key = format!(
@@ -268,7 +320,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             let cfg = engine.manifest.config(&key)?.clone();
             let corpus = load_corpus(args)?;
             let (train_text, val_text) = corpus.split();
-            let tok = consmax::data::ByteTokenizer;
+            let tok = ByteTokenizer;
             let opts = SweepOptions {
                 warmup_steps: args.get_usize("warmup-steps", 30)?,
                 seed: args.get_u64("seed", 0)?,
@@ -306,68 +358,256 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             }
             Ok(())
         }
-        "generate" => {
-            let engine = Engine::new(args.get_string("artifacts", "artifacts"))?;
-            let normalizer = args.get_string("normalizer", "consmax");
-            let key = format!("{}_{normalizer}", args.get_string("config", "tiny"));
-            let cfg = engine.manifest.config(&key)?.clone();
-            let store = match args.get("checkpoint") {
-                Some(p) => ParamStore::load(std::path::Path::new(p), &cfg)?,
-                None => {
-                    log::warn!("no checkpoint: generating from random weights");
-                    ParamStore::init(&cfg, args.get_u64("seed", 0)?)?
-                }
-            };
-            let mut g = Generator::new(&engine, &store, args.get_u64("seed", 0)?)?;
-            let prompt = args.get_string("prompt", "The attention ");
-            let out = g.generate_batch(
-                &[prompt.clone()],
-                args.get_usize("max-new", 64)?,
-                args.get_f64("temperature", 0.0)? as f32,
-            )?;
-            println!("{prompt}{}", out[0]);
-            Ok(())
+        other => bail!("unknown training subcommand {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// backend-pluggable subcommands
+// ---------------------------------------------------------------------------
+
+fn run_eval(args: &Args) -> Result<()> {
+    if wants_pjrt(args)? {
+        return run_eval_pjrt(args);
+    }
+    if args.has_flag("quant") {
+        bail!(
+            "--quant scores through the AOT INT8 normalizer path; \
+             it needs the pjrt backend (see EXPERIMENTS.md)"
+        );
+    }
+    let (cfg, store) = native_model_setup(args)?;
+    let model = NativeModel::from_params(&cfg, &store.order, &store.params)?;
+    let corpus = load_corpus(args)?;
+    let (_, val_text) = corpus.split();
+    let tok = ByteTokenizer;
+    let val =
+        BatchSampler::new(tok.encode(val_text), cfg.train_batch, cfg.ctx, 0);
+    let batches = val.eval_batches(8);
+    anyhow::ensure!(!batches.is_empty(), "validation stream too small");
+    let mut total = 0.0;
+    for (x, y) in &batches {
+        total += model.loss(x, y, cfg.train_batch, cfg.ctx)?;
+    }
+    let loss = total / batches.len() as f64;
+    println!(
+        "val loss {loss:.4}  ppl {:.2} (native backend)",
+        perplexity(loss)
+    );
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn run_eval_pjrt(_args: &Args) -> Result<()> {
+    Err(pjrt_unavailable("`consmax eval --backend pjrt`"))
+}
+
+#[cfg(feature = "pjrt")]
+fn run_eval_pjrt(args: &Args) -> Result<()> {
+    let engine = Engine::new(args.get_string("artifacts", "artifacts"))?;
+    let normalizer = args.get_string("normalizer", "consmax");
+    let mut tr = build_trainer(&engine, args, &normalizer)?;
+    let loss = if args.has_flag("quant") {
+        tr.evaluate_quantized(8)?
+    } else {
+        tr.evaluate(8)?
+    };
+    let tag = if args.has_flag("quant") { " (INT8 hw normalizer)" } else { "" };
+    println!("val loss {loss:.4}  ppl {:.2}{tag}", perplexity(loss));
+    Ok(())
+}
+
+fn run_generate(args: &Args) -> Result<()> {
+    if wants_pjrt(args)? {
+        return run_generate_pjrt(args);
+    }
+    let (cfg, store) = native_model_setup(args)?;
+    let mut g = Generator::native(&cfg, &store, args.get_u64("seed", 0)?)?;
+    let prompt = args.get_string("prompt", "The attention ");
+    let out = g.generate_batch(
+        &[prompt.clone()],
+        args.get_usize("max-new", 64)?,
+        args.get_f64("temperature", 0.0)? as f32,
+    )?;
+    println!("{prompt}{}", out[0]);
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn run_generate_pjrt(_args: &Args) -> Result<()> {
+    Err(pjrt_unavailable("`consmax generate --backend pjrt`"))
+}
+
+#[cfg(feature = "pjrt")]
+fn run_generate_pjrt(args: &Args) -> Result<()> {
+    let engine = Engine::new(args.get_string("artifacts", "artifacts"))?;
+    let normalizer = args.get_string("normalizer", "consmax");
+    let key = format!("{}_{normalizer}", args.get_string("config", "tiny"));
+    let cfg = engine.manifest.config(&key)?.clone();
+    let store = match args.get("checkpoint") {
+        Some(p) => ParamStore::load(std::path::Path::new(p), &cfg)?,
+        None => {
+            log::warn!("no checkpoint: generating from random weights");
+            ParamStore::init(&cfg, args.get_u64("seed", 0)?)?
         }
-        "serve-demo" => {
-            let engine = Engine::new(args.get_string("artifacts", "artifacts"))?;
-            let normalizer = args.get_string("normalizer", "consmax");
-            let key = format!("{}_{normalizer}", args.get_string("config", "tiny"));
-            let cfg = engine.manifest.config(&key)?.clone();
-            let store = match args.get("checkpoint") {
-                Some(p) => ParamStore::load(std::path::Path::new(p), &cfg)?,
-                None => ParamStore::init(&cfg, args.get_u64("seed", 0)?)?,
-            };
-            let gen = Generator::new(&engine, &store, 1)?;
-            let mut server = Server::new(gen);
-            let n = args.get_usize("requests", 16)?;
-            let max_new = args.get_usize("max-new", 32)?;
-            let mut rng = Pcg32::seeded(args.get_u64("seed", 0)?);
-            let prompts = [
-                "The transformer ", "Attention lets ", "Hardware that ",
-                "During training ", "A lookup table ", "Long contexts ",
-            ];
-            for id in 0..n as u64 {
-                server.submit(GenRequest {
-                    id,
-                    prompt: prompts[rng.below(prompts.len() as u64) as usize].into(),
-                    max_new_tokens: max_new,
-                    temperature: 0.8,
-                });
-            }
-            let t0 = std::time::Instant::now();
-            let responses = server.run_to_completion()?;
-            let wall = t0.elapsed().as_secs_f64();
+    };
+    let mut g = Generator::new(&engine, &store, args.get_u64("seed", 0)?)?;
+    let prompt = args.get_string("prompt", "The attention ");
+    let out = g.generate_batch(
+        &[prompt.clone()],
+        args.get_usize("max-new", 64)?,
+        args.get_f64("temperature", 0.0)? as f32,
+    )?;
+    println!("{prompt}{}", out[0]);
+    Ok(())
+}
+
+fn serve_demo_over(mut server: Server<'_>, args: &Args) -> Result<()> {
+    let n = args.get_usize("requests", 16)?;
+    let max_new = args.get_usize("max-new", 32)?;
+    let mut rng = Pcg32::seeded(args.get_u64("seed", 0)?);
+    let prompts = [
+        "The transformer ", "Attention lets ", "Hardware that ",
+        "During training ", "A lookup table ", "Long contexts ",
+    ];
+    for id in 0..n as u64 {
+        server.submit(GenRequest {
+            id,
+            prompt: prompts[rng.below(prompts.len() as u64) as usize].into(),
+            max_new_tokens: max_new,
+            temperature: 0.8,
+        });
+    }
+    let t0 = std::time::Instant::now();
+    let responses = server.run_to_completion()?;
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "served {} requests in {wall:.2}s ({:.1} tok/s) on the {} backend; \
+         latency p50 {:.0} ms p95 {:.0} ms (batch sizes up to {})",
+        responses.len(),
+        server.tokens_out as f64 / wall,
+        server.generator.backend_name(),
+        server.latencies.percentile(50.0).unwrap_or(0.0) / 1e3,
+        server.latencies.percentile(95.0).unwrap_or(0.0) / 1e3,
+        server.generator.max_batch(),
+    );
+    Ok(())
+}
+
+fn run_serve_demo(args: &Args) -> Result<()> {
+    if wants_pjrt(args)? {
+        return run_serve_demo_pjrt(args);
+    }
+    let (cfg, store) = native_model_setup(args)?;
+    let gen = Generator::native(&cfg, &store, 1)?;
+    serve_demo_over(Server::new(gen), args)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn run_serve_demo_pjrt(_args: &Args) -> Result<()> {
+    Err(pjrt_unavailable("`consmax serve-demo --backend pjrt`"))
+}
+
+#[cfg(feature = "pjrt")]
+fn run_serve_demo_pjrt(args: &Args) -> Result<()> {
+    let engine = Engine::new(args.get_string("artifacts", "artifacts"))?;
+    let normalizer = args.get_string("normalizer", "consmax");
+    let key = format!("{}_{normalizer}", args.get_string("config", "tiny"));
+    let cfg = engine.manifest.config(&key)?.clone();
+    let store = match args.get("checkpoint") {
+        Some(p) => ParamStore::load(std::path::Path::new(p), &cfg)?,
+        None => ParamStore::init(&cfg, args.get_u64("seed", 0)?)?,
+    };
+    let gen = Generator::new(&engine, &store, 1)?;
+    serve_demo_over(Server::new(gen), args)
+}
+
+fn run_info(args: &Args) -> Result<()> {
+    let artifacts = args.get_string("artifacts", "artifacts");
+    if wants_pjrt(args)? {
+        return run_info_pjrt(args);
+    }
+    let backend = create_backend(
+        BackendChoice::Native,
+        std::path::Path::new(&artifacts),
+    )?;
+    println!("backend: {} — {}", backend.name(), backend.platform());
+    println!("ops:");
+    for op in backend.ops() {
+        println!("  {op}");
+    }
+    println!("builtin configs (no artifacts needed):");
+    for config in ["tiny", "paper"] {
+        for norm in ["consmax", "softmax", "softermax"] {
+            let cfg = ModelConfig::builtin(config, norm)?;
             println!(
-                "served {} requests in {wall:.2}s ({:.1} tok/s); \
-                 latency p50 {:.0} ms p95 {:.0} ms (batch sizes up to {})",
-                responses.len(),
-                server.tokens_out as f64 / wall,
-                server.latencies.percentile(50.0).unwrap_or(0.0) / 1e3,
-                server.latencies.percentile(95.0).unwrap_or(0.0) / 1e3,
-                server.generator.max_batch(),
+                "  {}: {}L/{}H/{}d ctx {} vocab {} ({} params)",
+                cfg.key,
+                cfg.n_layer,
+                cfg.n_head,
+                cfg.n_embd,
+                cfg.ctx,
+                cfg.vocab,
+                cfg.param_count()
             );
-            Ok(())
         }
+    }
+    if !cfg!(feature = "pjrt") {
+        println!("\npjrt engine not compiled (build with --features pjrt)");
+    } else if std::path::Path::new(&artifacts).join("manifest.json").exists() {
+        println!(
+            "\npjrt engine compiled in; artifacts present at {artifacts:?} \
+             (use --backend pjrt)"
+        );
+    } else {
+        println!(
+            "\npjrt engine compiled in; no artifacts at {artifacts:?} \
+             (run `make artifacts`)"
+        );
+    }
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn run_info_pjrt(_args: &Args) -> Result<()> {
+    Err(pjrt_unavailable("`consmax info --backend pjrt`"))
+}
+
+#[cfg(feature = "pjrt")]
+fn run_info_pjrt(args: &Args) -> Result<()> {
+    let engine = Engine::new(args.get_string("artifacts", "artifacts"))?;
+    println!("backend: pjrt — platform {}", engine.platform());
+    println!("configs:");
+    for (key, cfg) in &engine.manifest.configs {
+        println!(
+            "  {key}: {}L/{}H/{}d ctx {} vocab {} ({} params)",
+            cfg.n_layer, cfg.n_head, cfg.n_embd, cfg.ctx, cfg.vocab,
+            cfg.param_count()
+        );
+    }
+    println!("entries:");
+    for (name, e) in &engine.manifest.entries {
+        println!(
+            "  {name}: {} in / {} out - {}",
+            e.inputs.len(),
+            e.outputs.len(),
+            e.doc
+        );
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// dispatch
+// ---------------------------------------------------------------------------
+
+fn run(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "train" | "compare" | "sweep-init" => run_train_family(cmd, args),
+        "eval" => run_eval(args),
+        "generate" => run_generate(args),
+        "serve-demo" => run_serve_demo(args),
+        "info" => run_info(args),
         "hw-report" => {
             let flow = match args.get("flow").unwrap_or("proprietary") {
                 "proprietary" => EdaFlow::Proprietary,
@@ -529,28 +769,6 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                   "stall-leak nJ", "util"],
                 &rows,
             );
-            Ok(())
-        }
-        "info" => {
-            let engine = Engine::new(args.get_string("artifacts", "artifacts"))?;
-            println!("platform: {}", engine.platform());
-            println!("configs:");
-            for (key, cfg) in &engine.manifest.configs {
-                println!(
-                    "  {key}: {}L/{}H/{}d ctx {} vocab {} ({} params)",
-                    cfg.n_layer, cfg.n_head, cfg.n_embd, cfg.ctx, cfg.vocab,
-                    cfg.param_count()
-                );
-            }
-            println!("entries:");
-            for (name, e) in &engine.manifest.entries {
-                println!(
-                    "  {name}: {} in / {} out - {}",
-                    e.inputs.len(),
-                    e.outputs.len(),
-                    e.doc
-                );
-            }
             Ok(())
         }
         other => bail!("unknown command {other:?}; run with --help"),

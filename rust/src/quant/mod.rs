@@ -2,8 +2,10 @@
 //! ConSmax hardware unit (paper §IV-A).
 //!
 //! This is the Rust twin of `python/compile/kernels/lut.py`/`ref.py`; the
-//! two are pinned to identical output *bits* by the golden vectors in
-//! `artifacts/golden.json` (see `rust/tests/quant_cross_validation.rs`).
+//! two are pinned to identical output *bits* by the golden vectors
+//! checked in at `rust/tests/golden/golden.json` (regenerated into
+//! `artifacts/golden.json` by `make artifacts`; see
+//! `rust/tests/quant_cross_validation.rs`).
 //! The serving coordinator uses it to post-process INT8 score streams the
 //! way the real accelerator would, and the hw substrate uses its table
 //! sizes for area accounting.

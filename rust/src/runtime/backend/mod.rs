@@ -1,0 +1,154 @@
+//! The pluggable execution backend seam.
+//!
+//! A [`Backend`] executes *named ops* over [`HostTensor`]s. Op names and
+//! I/O contracts follow the AOT artifact entries so the two backends are
+//! drop-in interchangeable (DESIGN.md §4):
+//!
+//! | op               | inputs                         | outputs          |
+//! |------------------|--------------------------------|------------------|
+//! | `op_consmax`     | scores f32, C f32 (same shape) | probs f32        |
+//! | `op_softmax`     | scores f32                     | probs f32        |
+//! | `op_softermax`   | scores f32                     | probs f32        |
+//! | `op_lut_consmax` | codes i8, C f32 (same shape)   | probs f16        |
+//! | `op_consmax_pv`  | scores f32 (q,k), C f32, V f32 | context f32 (q,d)|
+//!
+//! Normalizers reduce (or, for ConSmax, *don't* reduce — the paper's
+//! point) over the last axis.
+//!
+//! [`NativeBackend`] is always available; the PJRT [`Engine`] joins in
+//! under `--features pjrt` and is selected through [`create_backend`].
+//!
+//! [`Engine`]: crate::runtime::Engine
+
+pub mod model;
+pub mod native;
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::HostTensor;
+
+pub use model::NativeModel;
+pub use native::NativeBackend;
+
+/// An execution backend: runs named ops over host tensors.
+pub trait Backend {
+    /// Short identifier ("native" / "pjrt").
+    fn name(&self) -> &'static str;
+
+    /// Human-readable platform description.
+    fn platform(&self) -> String;
+
+    /// Whether `op` is available on this backend.
+    fn supports(&self, op: &str) -> bool;
+
+    /// All ops this backend can execute.
+    fn ops(&self) -> Vec<String>;
+
+    /// Execute one op; returns its outputs.
+    fn execute(&self, op: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>>;
+}
+
+/// CLI-facing backend selection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendChoice {
+    /// Pure-Rust kernels; always available.
+    Native,
+    /// PJRT over AOT artifacts; needs `--features pjrt` + `make artifacts`.
+    Pjrt,
+    /// Pjrt when compiled in *and* artifacts exist, otherwise native.
+    Auto,
+}
+
+impl BackendChoice {
+    pub fn parse(s: &str) -> Result<BackendChoice> {
+        Ok(match s {
+            "native" => BackendChoice::Native,
+            "pjrt" => BackendChoice::Pjrt,
+            "auto" => BackendChoice::Auto,
+            other => bail!("unknown backend {other:?} (native|pjrt|auto)"),
+        })
+    }
+}
+
+/// Instantiate the selected backend.
+///
+/// `artifacts_dir` is only consulted for the PJRT engine; the native
+/// backend needs no on-disk state at all.
+pub fn create_backend(
+    choice: BackendChoice,
+    artifacts_dir: &Path,
+) -> Result<Box<dyn Backend>> {
+    match choice {
+        BackendChoice::Native => Ok(Box::new(NativeBackend::new())),
+        BackendChoice::Pjrt => pjrt_backend(artifacts_dir),
+        BackendChoice::Auto => {
+            if pjrt_available(artifacts_dir) {
+                pjrt_backend(artifacts_dir)
+            } else {
+                Ok(Box::new(NativeBackend::new()))
+            }
+        }
+    }
+}
+
+/// Whether the PJRT engine is compiled in AND its artifacts exist.
+pub fn pjrt_available(artifacts_dir: &Path) -> bool {
+    cfg!(feature = "pjrt") && artifacts_dir.join("manifest.json").exists()
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_backend(artifacts_dir: &Path) -> Result<Box<dyn Backend>> {
+    Ok(Box::new(crate::runtime::Engine::new(artifacts_dir)?))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_backend(_artifacts_dir: &Path) -> Result<Box<dyn Backend>> {
+    bail!(
+        "this binary was built without the `pjrt` feature; rebuild with \
+         `cargo build --features pjrt` (and run `make artifacts`) or use \
+         --backend native"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn choice_parses() {
+        assert_eq!(BackendChoice::parse("native").unwrap(), BackendChoice::Native);
+        assert_eq!(BackendChoice::parse("pjrt").unwrap(), BackendChoice::Pjrt);
+        assert_eq!(BackendChoice::parse("auto").unwrap(), BackendChoice::Auto);
+        assert!(BackendChoice::parse("tpu").is_err());
+    }
+
+    #[test]
+    fn auto_without_artifacts_is_native() {
+        let b = create_backend(
+            BackendChoice::Auto,
+            Path::new("/nonexistent/artifacts"),
+        )
+        .unwrap();
+        assert_eq!(b.name(), "native");
+    }
+
+    #[test]
+    fn native_always_available() {
+        let b = create_backend(BackendChoice::Native, Path::new("unused")).unwrap();
+        assert!(b.supports("op_consmax"));
+        assert!(!b.supports("op_unknown"));
+        assert!(b.ops().contains(&"op_softmax".to_string()));
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_choice_errors_without_feature() {
+        let err = create_backend(BackendChoice::Pjrt, Path::new("artifacts"))
+            .err()
+            .unwrap()
+            .to_string();
+        assert!(err.contains("pjrt"), "{err}");
+    }
+}

@@ -1,0 +1,418 @@
+//! Pure-Rust GPT forward pass over the paper's benchmark architecture
+//! (python/compile/model.py §Forward), used by the native backend for
+//! evaluation, generation and serving when no PJRT artifacts exist.
+//!
+//! Semantics mirror the JAX model exactly: pre-LN blocks, causal
+//! attention with the configured score normalizer (softmax | consmax |
+//! softermax), tanh-approximate GELU, tied LM head. ConSmax runs in its
+//! *training* form `exp(s - β)/γ` with per-(layer, head) scalars — the
+//! same probabilities the inference form `C·exp(s)` produces once β/γ are
+//! merged (asserted in `native.rs` tests).
+//!
+//! This is a forward-only model (no autodiff): training still goes
+//! through the AOT `train_step` under `--features pjrt`. For the paper's
+//! model sizes (tiny 2L/64d, paper 6L/384d) a recompute-per-token decode
+//! is fast enough to serve the demo workloads, and it keeps the native
+//! path free of KV-cache state.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::config::ModelConfig;
+use crate::runtime::backend::native;
+use crate::runtime::HostTensor;
+
+/// A model with host-resident f32 parameters, ready for forward passes.
+pub struct NativeModel {
+    pub cfg: ModelConfig,
+    params: BTreeMap<String, Vec<f32>>,
+}
+
+impl NativeModel {
+    /// Build from a parameter list in canonical order (e.g. a
+    /// `ParamStore`'s `order`/`params` pair).
+    pub fn from_params(
+        cfg: &ModelConfig,
+        order: &[String],
+        tensors: &[HostTensor],
+    ) -> Result<NativeModel> {
+        ensure!(
+            order.len() == tensors.len(),
+            "param order ({}) / tensor ({}) length mismatch",
+            order.len(),
+            tensors.len()
+        );
+        match cfg.normalizer.as_str() {
+            "softmax" | "consmax" | "softermax" => {}
+            other => bail!("native model: unknown normalizer {other:?}"),
+        }
+        let mut params = BTreeMap::new();
+        for (name, t) in order.iter().zip(tensors) {
+            let want: usize = cfg.shape_of(name)?.iter().product();
+            ensure!(
+                t.elems() == want,
+                "param {name}: {} elements, config wants {want}",
+                t.elems()
+            );
+            params.insert(name.clone(), t.as_f32()?);
+        }
+        for required in [
+            "wte", "wpe", "ln1_g", "ln1_b", "attn_qkv_w", "attn_qkv_b",
+            "attn_proj_w", "attn_proj_b", "ln2_g", "ln2_b", "mlp_fc_w",
+            "mlp_fc_b", "mlp_proj_w", "mlp_proj_b", "lnf_g", "lnf_b",
+        ] {
+            ensure!(params.contains_key(required), "missing param {required}");
+        }
+        if cfg.normalizer == "consmax" {
+            ensure!(
+                params.contains_key("beta") && params.contains_key("gamma"),
+                "consmax model needs beta/gamma params"
+            );
+        }
+        Ok(NativeModel { cfg: cfg.clone(), params })
+    }
+
+    fn p(&self, name: &str) -> &[f32] {
+        // presence validated in from_params
+        self.params.get(name).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Per-layer slice of a stacked parameter (leading axis = layer).
+    fn layer<'a>(&'a self, name: &str, l: usize, per: usize) -> &'a [f32] {
+        &self.p(name)[l * per..(l + 1) * per]
+    }
+
+    /// Token ids (b, t) row-major → logits (b, t, vocab) row-major.
+    pub fn forward(&self, tokens: &[i32], b: usize, t: usize) -> Result<Vec<f32>> {
+        let cfg = &self.cfg;
+        let (d, h, hd, v) = (cfg.n_embd, cfg.n_head, cfg.head_dim(), cfg.vocab);
+        ensure!(tokens.len() == b * t, "token buffer is not (b={b}, t={t})");
+        ensure!(t >= 1 && t <= cfg.ctx, "sequence length {t} vs ctx {}", cfg.ctx);
+        for &tok in tokens {
+            ensure!(
+                (0..v as i32).contains(&tok),
+                "token id {tok} outside vocab {v}"
+            );
+        }
+
+        let wte = self.p("wte");
+        let wpe = self.p("wpe");
+        let rows = b * t;
+        let mut x = vec![0.0f32; rows * d];
+        for r in 0..b {
+            for i in 0..t {
+                let tok = tokens[r * t + i] as usize;
+                let out = &mut x[(r * t + i) * d..(r * t + i + 1) * d];
+                let te = &wte[tok * d..(tok + 1) * d];
+                let pe = &wpe[i * d..(i + 1) * d];
+                for ((o, &a), &p) in out.iter_mut().zip(te).zip(pe) {
+                    *o = a + p;
+                }
+            }
+        }
+
+        let scale = 1.0 / (hd as f32).sqrt();
+        for l in 0..cfg.n_layer {
+            // ---- attention block (pre-LN) -----------------------------
+            let xn = layer_norm(
+                &x,
+                self.layer("ln1_g", l, d),
+                self.layer("ln1_b", l, d),
+                d,
+            );
+            let qkv = affine(
+                &xn,
+                self.layer("attn_qkv_w", l, d * 3 * d),
+                self.layer("attn_qkv_b", l, 3 * d),
+                rows,
+                d,
+                3 * d,
+            );
+            let beta = if self.params.contains_key("beta") {
+                self.layer("beta", l, h)
+            } else {
+                &[]
+            };
+            let gamma = if self.params.contains_key("gamma") {
+                self.layer("gamma", l, h)
+            } else {
+                &[]
+            };
+
+            let mut y = vec![0.0f32; rows * d];
+            for r in 0..b {
+                for hh in 0..h {
+                    for i in 0..t {
+                        let qoff = (r * t + i) * 3 * d + hh * hd;
+                        // causal scores over keys j <= i; omitting j > i is
+                        // the -inf mask (exp(-inf) = 0 in every normalizer)
+                        let mut srow = Vec::with_capacity(i + 1);
+                        for j in 0..=i {
+                            let koff = (r * t + j) * 3 * d + d + hh * hd;
+                            let mut acc = 0.0f32;
+                            for e in 0..hd {
+                                acc += qkv[qoff + e] * qkv[koff + e];
+                            }
+                            srow.push(acc * scale);
+                        }
+                        let probs = match cfg.normalizer.as_str() {
+                            "consmax" => {
+                                native::consmax_train(&srow, beta[hh], gamma[hh])
+                            }
+                            "softermax" => {
+                                native::softermax_rows(&srow, srow.len())
+                            }
+                            _ => native::softmax_rows(&srow, srow.len()),
+                        };
+                        let ooff = (r * t + i) * d + hh * hd;
+                        for (j, &pj) in probs.iter().enumerate() {
+                            let voff = (r * t + j) * 3 * d + 2 * d + hh * hd;
+                            for e in 0..hd {
+                                y[ooff + e] += pj * qkv[voff + e];
+                            }
+                        }
+                    }
+                }
+            }
+            let proj = affine(
+                &y,
+                self.layer("attn_proj_w", l, d * d),
+                self.layer("attn_proj_b", l, d),
+                rows,
+                d,
+                d,
+            );
+            for (xv, pv) in x.iter_mut().zip(&proj) {
+                *xv += pv;
+            }
+
+            // ---- MLP block (pre-LN) -----------------------------------
+            let xn2 = layer_norm(
+                &x,
+                self.layer("ln2_g", l, d),
+                self.layer("ln2_b", l, d),
+                d,
+            );
+            let mut hid = affine(
+                &xn2,
+                self.layer("mlp_fc_w", l, d * 4 * d),
+                self.layer("mlp_fc_b", l, 4 * d),
+                rows,
+                d,
+                4 * d,
+            );
+            for hv in hid.iter_mut() {
+                *hv = gelu(*hv);
+            }
+            let mo = affine(
+                &hid,
+                self.layer("mlp_proj_w", l, 4 * d * d),
+                self.layer("mlp_proj_b", l, d),
+                rows,
+                4 * d,
+                d,
+            );
+            for (xv, mv) in x.iter_mut().zip(&mo) {
+                *xv += mv;
+            }
+        }
+
+        let xf = layer_norm(&x, self.p("lnf_g"), self.p("lnf_b"), d);
+        // tied LM head: logits = xf @ wte^T
+        let mut logits = vec![0.0f32; rows * v];
+        for r in 0..rows {
+            let xr = &xf[r * d..(r + 1) * d];
+            let lr = &mut logits[r * v..(r + 1) * v];
+            for (vv, o) in lr.iter_mut().enumerate() {
+                let wr = &wte[vv * d..(vv + 1) * d];
+                let mut acc = 0.0f32;
+                for e in 0..d {
+                    acc += xr[e] * wr[e];
+                }
+                *o = acc;
+            }
+        }
+        Ok(logits)
+    }
+
+    /// Mean next-token cross-entropy over a flat (b, t) batch, matching
+    /// the JAX `loss_fn` (log-softmax over the tied head).
+    pub fn loss(&self, x: &[i32], y: &[i32], b: usize, t: usize) -> Result<f64> {
+        ensure!(x.len() == y.len(), "x/y length mismatch");
+        let logits = self.forward(x, b, t)?;
+        let v = self.cfg.vocab;
+        let mut total = 0.0f64;
+        for (pos, &target) in y.iter().enumerate() {
+            ensure!(
+                (0..v as i32).contains(&target),
+                "target id {target} outside vocab {v}"
+            );
+            let row = &logits[pos * v..(pos + 1) * v];
+            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let lse = m + row.iter().map(|&l| (l - m).exp()).sum::<f32>().ln();
+            total += (lse - row[target as usize]) as f64;
+        }
+        Ok(total / y.len() as f64)
+    }
+
+    /// Next-token logits (b, vocab) for equal-length token sequences,
+    /// recomputing the forward pass over a ctx-bounded trailing window —
+    /// the native decode step.
+    pub fn next_logits(&self, seqs: &[Vec<i32>]) -> Result<Vec<f32>> {
+        ensure!(!seqs.is_empty(), "empty decode batch");
+        let len = seqs[0].len();
+        ensure!(len >= 1, "empty sequences");
+        ensure!(
+            seqs.iter().all(|s| s.len() == len),
+            "decode batch rows must share a length"
+        );
+        let b = seqs.len();
+        let w = len.min(self.cfg.ctx);
+        let mut toks = Vec::with_capacity(b * w);
+        for s in seqs {
+            toks.extend_from_slice(&s[len - w..]);
+        }
+        let logits = self.forward(&toks, b, w)?;
+        let v = self.cfg.vocab;
+        let mut out = Vec::with_capacity(b * v);
+        for r in 0..b {
+            let base = (r * w + (w - 1)) * v;
+            out.extend_from_slice(&logits[base..base + v]);
+        }
+        Ok(out)
+    }
+}
+
+fn layer_norm(x: &[f32], g: &[f32], b: &[f32], d: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; x.len()];
+    for (row_in, row_out) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
+        let mu = row_in.iter().sum::<f32>() / d as f32;
+        let var =
+            row_in.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        for ((o, &v), (&gg, &bb)) in
+            row_out.iter_mut().zip(row_in).zip(g.iter().zip(b))
+        {
+            *o = (v - mu) * inv * gg + bb;
+        }
+    }
+    out
+}
+
+fn affine(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    rows: usize,
+    din: usize,
+    dout: usize,
+) -> Vec<f32> {
+    let mut out = native::matmul(x, w, rows, din, dout);
+    for row in out.chunks_exact_mut(dout) {
+        for (o, &bv) in row.iter_mut().zip(bias) {
+            *o += bv;
+        }
+    }
+    out
+}
+
+/// Tanh-approximate GELU, matching `jax.nn.gelu` (approximate=True).
+fn gelu(x: f32) -> f32 {
+    const SQRT_2_OVER_PI: f32 = 0.797_884_56;
+    0.5 * x * (1.0 + (SQRT_2_OVER_PI * (x + 0.044715 * x * x * x)).tanh())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn tiny_model(normalizer: &str) -> NativeModel {
+        let cfg = ModelConfig::builtin("tiny", normalizer).unwrap();
+        let mut rng = Pcg32::seeded(7);
+        let mut tensors = Vec::new();
+        for name in cfg.param_order.clone() {
+            let shape = cfg.shape_of(&name).unwrap().to_vec();
+            let n: usize = shape.iter().product();
+            let vals: Vec<f32> = match name.as_str() {
+                "ln1_g" | "ln2_g" | "lnf_g" => vec![1.0; n],
+                "beta" => vec![1.5; n],
+                "gamma" => vec![100.0; n],
+                _ if name.ends_with("_b") => vec![0.0; n],
+                _ => rng.normal_vec_f32(n, 0.0, 0.02),
+            };
+            tensors.push(HostTensor::from_f32(&vals, &shape));
+        }
+        NativeModel::from_params(&cfg, &cfg.param_order, &tensors).unwrap()
+    }
+
+    #[test]
+    fn forward_shapes_and_finiteness() {
+        for norm in ["consmax", "softmax", "softermax"] {
+            let m = tiny_model(norm);
+            let toks: Vec<i32> = (0..2 * 8).map(|i| (i * 13) % 256).collect();
+            let logits = m.forward(&toks, 2, 8).unwrap();
+            assert_eq!(logits.len(), 2 * 8 * 256, "{norm}");
+            assert!(logits.iter().all(|v| v.is_finite()), "{norm}");
+        }
+    }
+
+    #[test]
+    fn untrained_loss_near_uniform() {
+        // near-random weights => loss close to ln(256) = 5.545
+        let m = tiny_model("consmax");
+        let x: Vec<i32> = (0..2 * 32).map(|i| (i * 7) % 256).collect();
+        let y: Vec<i32> = (0..2 * 32).map(|i| (i * 7 + 1) % 256).collect();
+        let loss = m.loss(&x, &y, 2, 32).unwrap();
+        assert!((4.5..6.5).contains(&loss), "loss {loss}");
+    }
+
+    #[test]
+    fn forward_is_deterministic() {
+        let m = tiny_model("consmax");
+        let toks: Vec<i32> = (0..16).map(|i| (i * 31) % 256).collect();
+        assert_eq!(m.forward(&toks, 1, 16).unwrap(), m.forward(&toks, 1, 16).unwrap());
+    }
+
+    #[test]
+    fn causality_prefix_logits_stable() {
+        // logits at position i must not depend on tokens after i
+        let m = tiny_model("consmax");
+        let mut a: Vec<i32> = (0..12).map(|i| (i * 11) % 256).collect();
+        let la = m.forward(&a, 1, 12).unwrap();
+        a[11] = (a[11] + 17) % 256; // change only the last token
+        let lb = m.forward(&a, 1, 12).unwrap();
+        let v = m.cfg.vocab;
+        // positions 0..10 identical; position 11 differs
+        assert_eq!(&la[..11 * v], &lb[..11 * v]);
+        assert_ne!(&la[11 * v..], &lb[11 * v..]);
+    }
+
+    #[test]
+    fn next_logits_matches_forward_tail() {
+        let m = tiny_model("softmax");
+        let seq: Vec<i32> = (0..10).map(|i| (i * 3) % 256).collect();
+        let full = m.forward(&seq, 1, 10).unwrap();
+        let v = m.cfg.vocab;
+        let nl = m.next_logits(&[seq]).unwrap();
+        assert_eq!(nl, full[9 * v..].to_vec());
+    }
+
+    #[test]
+    fn window_clamps_to_ctx() {
+        let m = tiny_model("consmax");
+        let long: Vec<i32> = (0..200).map(|i| i % 256).collect();
+        let nl = m.next_logits(&[long]).unwrap();
+        assert_eq!(nl.len(), m.cfg.vocab);
+        assert!(nl.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn rejects_bad_tokens() {
+        let m = tiny_model("consmax");
+        assert!(m.forward(&[300], 1, 1).is_err());
+        assert!(m.forward(&[-1], 1, 1).is_err());
+        assert!(m.forward(&[0; 4], 2, 3).is_err()); // wrong element count
+    }
+}

@@ -1,0 +1,327 @@
+//! Pure-Rust f32 kernels for the paper's score normalizers and the
+//! bitwidth-split LUT datapath — the Rust twin of
+//! `python/compile/kernels/` (consmax.py / ref.py / lut.py).
+//!
+//! ConSmax is the only normalizer here with **no reduction over the score
+//! axis** — `out[i] = C[i] * exp(s[i])` touches one element at a time —
+//! which is exactly why it exists as a streaming kernel on hardware
+//! (Fig 4b) and why the native implementation is a single elementwise
+//! loop. The softmax/softermax baselines need the whole row (max + sum)
+//! before any output; their native forms reduce per row, mirroring the
+//! whole-row `BlockSpec` of the Pallas baselines.
+//!
+//! The LUT op reuses [`BitSplitLut`], so the native backend and the
+//! bit-exact hardware model can be cross-validated by construction
+//! (`rust/tests/native_backend.rs`).
+
+use anyhow::{bail, ensure, Result};
+
+use crate::quant::BitSplitLut;
+use crate::runtime::backend::Backend;
+use crate::runtime::{DType, HostTensor};
+use crate::util::fp16::F16;
+
+/// The always-available pure-Rust backend.
+#[derive(Debug, Default, Clone)]
+pub struct NativeBackend;
+
+const OPS: &[&str] = &[
+    "op_consmax",
+    "op_softmax",
+    "op_softermax",
+    "op_lut_consmax",
+    "op_consmax_pv",
+];
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        NativeBackend
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn platform(&self) -> String {
+        "native (pure-Rust f32 kernels)".to_string()
+    }
+
+    fn supports(&self, op: &str) -> bool {
+        OPS.contains(&op)
+    }
+
+    fn ops(&self) -> Vec<String> {
+        OPS.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn execute(&self, op: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        match op {
+            "op_consmax" => {
+                let [s, c] = two(op, inputs)?;
+                ensure!(s.shape == c.shape, "{op}: score/C shape mismatch");
+                let out = consmax(&s.as_f32()?, &c.as_f32()?);
+                Ok(vec![HostTensor::from_f32(&out, &s.shape)])
+            }
+            "op_softmax" => {
+                let s = one(op, inputs)?;
+                let out = softmax_rows(&s.as_f32()?, last_axis(s)?);
+                Ok(vec![HostTensor::from_f32(&out, &s.shape)])
+            }
+            "op_softermax" => {
+                let s = one(op, inputs)?;
+                let out = softermax_rows(&s.as_f32()?, last_axis(s)?);
+                Ok(vec![HostTensor::from_f32(&out, &s.shape)])
+            }
+            "op_lut_consmax" => {
+                let [q, c] = two(op, inputs)?;
+                ensure!(q.dtype == DType::I8, "{op}: codes must be int8");
+                ensure!(q.shape == c.shape, "{op}: code/C shape mismatch");
+                let codes: Vec<i8> =
+                    q.data.iter().map(|&b| b as i8).collect();
+                let bits = lut_consmax_bits(&codes, &c.as_f32()?);
+                Ok(vec![HostTensor::from_f16_bits(&bits, &q.shape)])
+            }
+            "op_consmax_pv" => {
+                let [s, c, v] = three(op, inputs)?;
+                ensure!(s.shape == c.shape, "{op}: score/C shape mismatch");
+                ensure!(
+                    s.shape.len() == 2 && v.shape.len() == 2,
+                    "{op}: expects 2-D scores and values"
+                );
+                let (tq, tk) = (s.shape[0], s.shape[1]);
+                ensure!(
+                    v.shape[0] == tk,
+                    "{op}: V rows {} != score cols {tk}",
+                    v.shape[0]
+                );
+                let d = v.shape[1];
+                let probs = consmax(&s.as_f32()?, &c.as_f32()?);
+                let out = matmul(&probs, &v.as_f32()?, tq, tk, d);
+                Ok(vec![HostTensor::from_f32(&out, &[tq, d])])
+            }
+            other => bail!("native backend has no op {other:?}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// kernels (free functions so `NativeModel` and tests reuse them directly)
+// ---------------------------------------------------------------------------
+
+/// ConSmax inference form (paper Eq. 3): `out[i] = C[i] * exp(s[i])`.
+/// No max, no sum, no second pass — each element is independent.
+pub fn consmax(s: &[f32], c: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(s.len(), c.len());
+    s.iter().zip(c).map(|(&x, &cc)| cc * x.exp()).collect()
+}
+
+/// ConSmax training form (paper Eq. 2): `exp(s - beta) / gamma` with
+/// scalar per-call β/γ (per attention head in the model).
+pub fn consmax_train(s: &[f32], beta: f32, gamma: f32) -> Vec<f32> {
+    s.iter().map(|&x| (x - beta).exp() / gamma).collect()
+}
+
+/// Numerically-stable softmax over rows of length `row`.
+pub fn softmax_rows(s: &[f32], row: usize) -> Vec<f32> {
+    reduce_rows(s, row, f32::exp)
+}
+
+/// Softermax (base-2 softmax) over rows of length `row`.
+pub fn softermax_rows(s: &[f32], row: usize) -> Vec<f32> {
+    reduce_rows(s, row, f32::exp2)
+}
+
+fn reduce_rows(s: &[f32], row: usize, e: fn(f32) -> f32) -> Vec<f32> {
+    assert!(row > 0 && s.len() % row == 0, "bad row length {row}");
+    let mut out = Vec::with_capacity(s.len());
+    for chunk in s.chunks_exact(row) {
+        let m = chunk.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let exps: Vec<f32> = chunk.iter().map(|&x| e(x - m)).collect();
+        let sum: f32 = exps.iter().sum();
+        out.extend(exps.iter().map(|&x| x / sum));
+    }
+    out
+}
+
+/// The INT8 hardware datapath: bitwidth-split LUT exponential × C, all in
+/// fp16 (bit pattern output), at the paper's operating point (scale 1/16).
+pub fn lut_consmax_bits(q: &[i8], c: &[f32]) -> Vec<u16> {
+    debug_assert_eq!(q.len(), c.len());
+    let lut = BitSplitLut::paper();
+    q.iter()
+        .zip(c)
+        .map(|(&code, &cc)| lut.consmax(code, F16::from_f32(cc)).to_bits())
+        .collect()
+}
+
+/// Naive row-major matmul: `a (m,k) @ b (k,n) -> (m,n)`.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+fn one<'a>(op: &str, inputs: &'a [HostTensor]) -> Result<&'a HostTensor> {
+    ensure!(inputs.len() == 1, "{op}: expected 1 inputs, got {}", inputs.len());
+    Ok(&inputs[0])
+}
+
+fn two<'a>(op: &str, inputs: &'a [HostTensor]) -> Result<[&'a HostTensor; 2]> {
+    ensure!(inputs.len() == 2, "{op}: expected 2 inputs, got {}", inputs.len());
+    Ok([&inputs[0], &inputs[1]])
+}
+
+fn three<'a>(op: &str, inputs: &'a [HostTensor]) -> Result<[&'a HostTensor; 3]> {
+    ensure!(inputs.len() == 3, "{op}: expected 3 inputs, got {}", inputs.len());
+    Ok([&inputs[0], &inputs[1], &inputs[2]])
+}
+
+fn last_axis(t: &HostTensor) -> Result<usize> {
+    match t.shape.last() {
+        Some(&n) if n > 0 => Ok(n),
+        _ => bail!("normalizer needs a non-empty last axis, got {:?}", t.shape),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::merge_beta_gamma;
+
+    #[test]
+    fn consmax_is_elementwise() {
+        // permuting inputs permutes outputs identically — no cross-element
+        // coupling (the paper's synchronization-freeness, testable!)
+        let s = vec![0.5f32, -1.0, 2.0, 0.0];
+        let c = vec![0.01f32; 4];
+        let a = consmax(&s, &c);
+        let s_rev: Vec<f32> = s.iter().rev().cloned().collect();
+        let b = consmax(&s_rev, &c);
+        let b_rev: Vec<f32> = b.iter().rev().cloned().collect();
+        assert_eq!(a, b_rev);
+    }
+
+    #[test]
+    fn consmax_forms_agree() {
+        // Eq. 2 == Eq. 3 with C = exp(-beta)/gamma (in f32)
+        let (beta, gamma) = (1.5f32, 100.0f32);
+        let c = (-beta).exp() / gamma;
+        let s = vec![-2.0f32, 0.0, 1.0, 3.5];
+        let train = consmax_train(&s, beta, gamma);
+        let infer = consmax(&s, &vec![c; s.len()]);
+        for (a, b) in train.iter().zip(&infer) {
+            assert!((a - b).abs() <= 1e-6 * a.abs().max(1e-3), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn softmax_rows_normalize() {
+        let s = vec![1.0f32, 2.0, 3.0, -1.0, 0.0, 1.0];
+        let p = softmax_rows(&s, 3);
+        for row in p.chunks(3) {
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-6, "{sum}");
+            assert!(row.windows(2).all(|w| w[0] < w[1])); // monotone inputs
+        }
+    }
+
+    #[test]
+    fn softermax_is_base2() {
+        let s = vec![0.0f32, 1.0]; // 2^0=1, 2^1=2 -> 1/3, 2/3
+        let p = softermax_rows(&s, 2);
+        assert!((p[0] - 1.0 / 3.0).abs() < 1e-6);
+        assert!((p[1] - 2.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn masked_neg_inf_scores_vanish_under_consmax() {
+        let s = vec![f32::NEG_INFINITY, 0.0];
+        let p = consmax(&s, &[0.01, 0.01]);
+        assert_eq!(p[0], 0.0);
+        assert!(p[1] > 0.0);
+    }
+
+    #[test]
+    fn lut_op_matches_bit_exact_model() {
+        let lut = BitSplitLut::paper();
+        let c = merge_beta_gamma(1.5, 100.0);
+        let codes: Vec<i8> = (-128i16..=127).map(|q| q as i8).collect();
+        let cs = vec![c.to_f32(); codes.len()];
+        let bits = lut_consmax_bits(&codes, &cs);
+        for (q, b) in codes.iter().zip(&bits) {
+            assert_eq!(*b, lut.consmax(*q, c).to_bits(), "q={q}");
+        }
+    }
+
+    #[test]
+    fn backend_execute_roundtrip() {
+        let be = NativeBackend::new();
+        let s = HostTensor::from_f32(&[0.0, 1.0, -1.0, 0.5], &[2, 2]);
+        let c = HostTensor::from_f32(&[0.01; 4], &[2, 2]);
+        let out = be.execute("op_consmax", &[s.clone(), c]).unwrap();
+        assert_eq!(out[0].shape, vec![2, 2]);
+        let vals = out[0].as_f32().unwrap();
+        assert!((vals[0] - 0.01).abs() < 1e-7);
+
+        let sm = be.execute("op_softmax", &[s]).unwrap();
+        let rows = sm[0].as_f32().unwrap();
+        assert!((rows[0] + rows[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn backend_rejects_bad_arity_and_shapes() {
+        let be = NativeBackend::new();
+        let s = HostTensor::from_f32(&[0.0; 4], &[2, 2]);
+        assert!(be.execute("op_consmax", std::slice::from_ref(&s)).is_err());
+        let c = HostTensor::from_f32(&[0.0; 2], &[2]);
+        assert!(be.execute("op_consmax", &[s, c]).is_err());
+    }
+
+    #[test]
+    fn pv_fusion_matches_two_step() {
+        let be = NativeBackend::new();
+        let (tq, tk, d) = (3usize, 4usize, 2usize);
+        let s: Vec<f32> = (0..tq * tk).map(|i| (i as f32) * 0.1 - 0.5).collect();
+        let c = vec![0.02f32; tq * tk];
+        let v: Vec<f32> = (0..tk * d).map(|i| i as f32 * 0.25).collect();
+        let fused = be
+            .execute(
+                "op_consmax_pv",
+                &[
+                    HostTensor::from_f32(&s, &[tq, tk]),
+                    HostTensor::from_f32(&c, &[tq, tk]),
+                    HostTensor::from_f32(&v, &[tk, d]),
+                ],
+            )
+            .unwrap();
+        let probs = consmax(&s, &c);
+        let want = matmul(&probs, &v, tq, tk, d);
+        let got = fused[0].as_f32().unwrap();
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = vec![1.0f32, 2.0, 3.0, 4.0]; // 2x2
+        let id = vec![1.0f32, 0.0, 0.0, 1.0];
+        assert_eq!(matmul(&a, &id, 2, 2, 2), a);
+    }
+}

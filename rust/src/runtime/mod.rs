@@ -1,223 +1,35 @@
-//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) and
-//! executes them on the CPU PJRT client from the Rust hot path.
+//! Execution runtime: host tensors plus a pluggable [`Backend`] seam.
 //!
-//! Interchange format is **HLO text**: jax ≥ 0.5 serializes protos with
-//! 64-bit instruction ids that xla_extension 0.5.1 rejects, while the text
-//! parser reassigns ids (see `python/compile/aot.py` and DESIGN.md §3).
+//! Two backends implement the same op-level contract (DESIGN.md §4 has
+//! the selection matrix):
 //!
-//! The [`Engine`] owns one `PjRtClient` and an executable cache keyed by
-//! entry name; executables compile lazily on first use and are reused for
-//! the life of the process. All entry points were lowered with
-//! `return_tuple=True`, so every execution returns a single tuple literal
-//! that is decomposed into per-output [`HostTensor`]s.
+//! * [`backend::NativeBackend`] — pure-Rust f32 kernels for the ConSmax /
+//!   Softmax / Softermax normalizers and the bitwidth-split LUT datapath,
+//!   mirroring `python/compile/kernels/`. Always compiled; needs no
+//!   Python, no PJRT and no `artifacts/` directory. This is what CI and
+//!   the default build run.
+//! * [`Engine`] (`--features pjrt`) — loads the AOT artifacts
+//!   (`artifacts/*.hlo.txt`, produced by `make artifacts`, i.e.
+//!   `python -m compile.aot` — see the repo `Makefile` and
+//!   `rust/README.md`) and executes them on the CPU PJRT client. The
+//!   interchange format is **HLO text**: jax ≥ 0.5 serializes protos with
+//!   64-bit instruction ids that xla_extension 0.5.1 rejects, while the
+//!   text parser reassigns ids (see `python/compile/aot.py` and
+//!   DESIGN.md §3).
+//!
+//! The coordinator layers (trainer/server/CLI) talk to whichever backend
+//! is selected; training requires the AOT `train_step` and therefore the
+//! `pjrt` feature, while evaluation, generation and serving also run on
+//! the native backend.
 
+pub mod backend;
 pub mod tensor;
 
-use std::collections::BTreeMap;
-use std::path::Path;
-use std::sync::Mutex;
-use std::time::Instant;
+#[cfg(feature = "pjrt")]
+pub mod engine;
 
-use anyhow::{bail, Context, Result};
+#[cfg(feature = "pjrt")]
+pub use engine::Engine;
 
-use crate::config::{EntrySpec, Manifest};
+pub use backend::{create_backend, Backend, BackendChoice, NativeBackend};
 pub use tensor::{DType, HostTensor};
-
-/// Compiled-executable cache + PJRT client + manifest.
-pub struct Engine {
-    client: xla::PjRtClient,
-    pub manifest: Manifest,
-    cache: Mutex<BTreeMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
-    /// Cumulative compile time, for the perf logs.
-    pub compile_ms: Mutex<f64>,
-}
-
-impl Engine {
-    /// Create a CPU engine over an artifacts directory.
-    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Engine> {
-        let manifest = Manifest::load(&artifacts_dir)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Engine {
-            client,
-            manifest,
-            cache: Mutex::new(BTreeMap::new()),
-            compile_ms: Mutex::new(0.0),
-        })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile (or fetch from cache) an entry point.
-    pub fn load(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.lock().unwrap().get(name) {
-            return Ok(exe.clone());
-        }
-        let spec = self.manifest.entry(name)?;
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            spec.file.to_str().context("non-utf8 path")?,
-        )
-        .with_context(|| format!("parsing {}", spec.file.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {name}"))?;
-        let dt = t0.elapsed().as_secs_f64() * 1e3;
-        *self.compile_ms.lock().unwrap() += dt;
-        log::info!("compiled {name} in {dt:.0} ms");
-        let arc = std::sync::Arc::new(exe);
-        self.cache.lock().unwrap().insert(name.to_string(), arc.clone());
-        Ok(arc)
-    }
-
-    /// Validate inputs against the manifest spec (shape + dtype).
-    fn check_inputs(&self, spec: &EntrySpec, inputs: &[HostTensor]) -> Result<()> {
-        if inputs.len() != spec.inputs.len() {
-            bail!(
-                "{}: expected {} inputs, got {}",
-                spec.name,
-                spec.inputs.len(),
-                inputs.len()
-            );
-        }
-        for (i, (t, s)) in inputs.iter().zip(&spec.inputs).enumerate() {
-            if t.shape != s.shape {
-                bail!(
-                    "{} input {i}: shape {:?} != manifest {:?}",
-                    spec.name,
-                    t.shape,
-                    s.shape
-                );
-            }
-            let want = DType::parse(&s.dtype)?;
-            if t.dtype != want {
-                bail!(
-                    "{} input {i}: dtype {:?} != manifest {:?}",
-                    spec.name,
-                    t.dtype,
-                    want
-                );
-            }
-        }
-        Ok(())
-    }
-
-    /// Execute an entry point with host tensors; returns the decomposed
-    /// tuple outputs as host tensors. This is the general path; the
-    /// training loop uses [`Engine::execute_literals`] to avoid
-    /// re-marshalling unchanged inputs.
-    pub fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
-        let spec = self.manifest.entry(name)?.clone();
-        self.check_inputs(&spec, inputs)?;
-        let lits: Vec<xla::Literal> = inputs
-            .iter()
-            .map(HostTensor::to_literal)
-            .collect::<Result<_>>()?;
-        let outs = self.execute_literals(name, &lits)?;
-        outs.iter().map(HostTensor::from_literal).collect()
-    }
-
-    /// Execute with pre-marshalled literals, returning raw output literals
-    /// (tuple already decomposed). The training hot loop keeps its state as
-    /// literals across steps so params never bounce through `HostTensor`.
-    pub fn execute_literals(
-        &self,
-        name: &str,
-        inputs: &[xla::Literal],
-    ) -> Result<Vec<xla::Literal>> {
-        let exe = self.load(name)?;
-        let refs: Vec<&xla::Literal> = inputs.iter().collect();
-        self.execute_literal_refs(name, &exe, &refs)
-    }
-
-    /// Like [`Engine::execute_literals`] but borrowing inputs, so state
-    /// literals can be threaded across steps without cloning.
-    ///
-    /// NOTE: this deliberately avoids `PjRtLoadedExecutable::execute`
-    /// (literal inputs): the crate's C wrapper `release()`s every input
-    /// device buffer it creates and never frees them, leaking the full
-    /// input footprint per call (~130 MB/step for the paper train step —
-    /// observed OOM after ~260 steps). Instead we create the device
-    /// buffers ourselves and call `execute_b`; the Rust-owned
-    /// `PjRtBuffer`s drop (and free) after the call.
-    pub fn execute_literal_refs(
-        &self,
-        name: &str,
-        exe: &xla::PjRtLoadedExecutable,
-        inputs: &[&xla::Literal],
-    ) -> Result<Vec<xla::Literal>> {
-        let in_buffers: Vec<xla::PjRtBuffer> = inputs
-            .iter()
-            .map(|lit| self.client.buffer_from_host_literal(None, lit))
-            .collect::<std::result::Result<_, _>>()
-            .with_context(|| format!("uploading inputs for {name}"))?;
-        self.execute_buffer_refs(name, exe, &in_buffers.iter().collect::<Vec<_>>())
-    }
-
-    /// Upload a host tensor to a device buffer once (for inputs reused
-    /// across many executions — e.g. model parameters in the serving
-    /// loop, which would otherwise be re-uploaded on every decode step).
-    ///
-    /// Uses `BufferFromHostBuffer` with `kImmutableOnlyDuringCall`
-    /// semantics — the copy completes before this returns. (Do NOT swap
-    /// in `buffer_from_host_literal` here: that PJRT path is async and
-    /// requires the source literal to outlive the transfer, which a
-    /// caller-temporary violates — observed as corrupted-size aborts.)
-    pub fn upload(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
-        let buf = match t.dtype {
-            DType::F32 => self
-                .client
-                .buffer_from_host_buffer(&t.as_f32()?, &t.shape, None),
-            DType::I32 => self
-                .client
-                .buffer_from_host_buffer(&t.as_i32()?, &t.shape, None),
-            DType::U8 => self
-                .client
-                .buffer_from_host_buffer(&t.data, &t.shape, None),
-            other => anyhow::bail!("upload: unsupported dtype {other:?}"),
-        };
-        buf.context("uploading buffer")
-    }
-
-    /// Upload a literal by round-tripping through [`HostTensor`] (used to
-    /// re-pin execution outputs device-side; see [`Engine::upload`] for
-    /// why the literal cannot be handed to PJRT directly).
-    pub fn upload_literal(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
-        self.upload(&HostTensor::from_literal(lit)?)
-    }
-
-    /// Execute with caller-managed device buffers (the fully-amortized
-    /// hot path: no per-call uploads at all for cached inputs).
-    pub fn execute_buffer_refs(
-        &self,
-        name: &str,
-        exe: &xla::PjRtLoadedExecutable,
-        inputs: &[&xla::PjRtBuffer],
-    ) -> Result<Vec<xla::Literal>> {
-        let result = exe
-            .execute_b::<&xla::PjRtBuffer>(inputs)
-            .with_context(|| format!("executing {name}"))?;
-        let buffer = result
-            .into_iter()
-            .next()
-            .and_then(|mut v| if v.is_empty() { None } else { Some(v.remove(0)) })
-            .with_context(|| format!("{name}: empty result"))?;
-        let tuple = buffer
-            .to_literal_sync()
-            .with_context(|| format!("{name}: fetching result"))?;
-        tuple
-            .to_tuple()
-            .with_context(|| format!("{name}: decomposing result tuple"))
-    }
-
-    /// Number of loaded (compiled) executables.
-    pub fn loaded_count(&self) -> usize {
-        self.cache.lock().unwrap().len()
-    }
-}
-
-// Engine tests require libxla_extension.so and built artifacts; they live
-// in rust/tests/runtime_integration.rs so `cargo test --lib` stays fast.

@@ -1,9 +1,15 @@
-//! Host-side tensors: the marshalling boundary between the coordinator
-//! and PJRT literals. Deliberately minimal — a dtype tag, a shape, and a
-//! flat byte buffer — so the hot loop can move data without reshaping or
-//! copy amplification.
+//! Host-side tensors: the common currency of every backend. Deliberately
+//! minimal — a dtype tag, a shape, and a flat byte buffer — so the hot
+//! loop can move data without reshaping or copy amplification.
+//!
+//! The native backend reads/writes these directly; under
+//! `--features pjrt` the literal-marshalling methods at the bottom bridge
+//! to PJRT.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+#[cfg(feature = "pjrt")]
 use xla::{ElementType, Literal};
 
 use crate::util::fp16::F16;
@@ -41,6 +47,7 @@ impl DType {
         })
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn to_element_type(self) -> ElementType {
         match self {
             DType::F32 => ElementType::F32,
@@ -52,6 +59,7 @@ impl DType {
         }
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn from_element_type(ty: ElementType) -> Result<DType> {
         Ok(match ty {
             ElementType::F32 => DType::F32,
@@ -181,8 +189,9 @@ impl HostTensor {
         Ok(v[0])
     }
 
-    // ----- PJRT marshalling -------------------------------------------------
+    // ----- PJRT marshalling (pjrt feature only) -----------------------------
 
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<Literal> {
         Literal::create_from_shape_and_untyped_data(
             self.dtype.to_element_type(),
@@ -192,6 +201,7 @@ impl HostTensor {
         .context("creating literal")
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn from_literal(lit: &Literal) -> Result<HostTensor> {
         let ty = lit.ty().context("literal type")?;
         let dtype = DType::from_element_type(ty)?;

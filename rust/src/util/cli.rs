@@ -13,19 +13,32 @@ pub struct Args {
     pub positional: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown option --{0}")]
     UnknownOption(String),
-    #[error("option --{0} expects a value")]
     MissingValue(String),
-    #[error("invalid value for --{key}: {value:?} ({expected})")]
     BadValue {
         key: String,
         value: String,
         expected: &'static str,
     },
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::UnknownOption(name) => write!(f, "unknown option --{name}"),
+            CliError::MissingValue(name) => {
+                write!(f, "option --{name} expects a value")
+            }
+            CliError::BadValue { key, value, expected } => {
+                write!(f, "invalid value for --{key}: {value:?} ({expected})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 /// Option/flag specification used for validation and help output.
 #[derive(Debug, Clone)]

@@ -23,12 +23,19 @@ pub enum Json {
 }
 
 /// Parse error with byte offset for diagnostics.
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {pos}: {msg}")]
+#[derive(Debug)]
 pub struct ParseError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 impl Json {
     // ----- constructors ---------------------------------------------------
@@ -143,6 +150,7 @@ impl Json {
     // ----- serialization ----------------------------------------------------
 
     /// Compact serialization (no whitespace).
+    #[allow(clippy::inherent_to_string_shadow_display)]
     pub fn to_string(&self) -> String {
         let mut s = String::new();
         self.write(&mut s);

@@ -1,0 +1,241 @@
+//! Native-backend cross-validation against the checked-in golden vectors
+//! (`rust/tests/golden/golden.json`, generated from the python oracle
+//! `python/compile/kernels/ref.py`) and against the bit-exact LUT model
+//! in `quant/lut.rs`. This is the triangle the tentpole requires:
+//!
+//!   python oracle == checked-in goldens        (by construction)
+//!   NativeBackend == goldens                   (float ops, rtol)
+//!   NativeBackend == quant::BitSplitLut        (hardware path, bit-exact)
+//!
+//! plus end-to-end smoke over the native model: evaluation loss and
+//! deterministic generation with zero artifacts on disk.
+
+use consmax::config::ModelConfig;
+use consmax::coordinator::{Generator, ParamStore};
+use consmax::quant::{merge_beta_gamma, BitSplitLut, Int8Quantizer};
+use consmax::runtime::backend::{Backend, NativeBackend};
+use consmax::runtime::{DType, HostTensor};
+use consmax::util::json::Json;
+
+fn golden() -> Json {
+    let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden/golden.json");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()));
+    Json::parse(&text).expect("parse golden.json")
+}
+
+fn f32_vec(v: &Json) -> Vec<f32> {
+    v.to_f64_vec().unwrap().iter().map(|&x| x as f32).collect()
+}
+
+fn assert_close(got: &[f32], want: &[f64], rtol: f64, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let g = *g as f64;
+        let denom = g.abs().max(w.abs()).max(1e-30);
+        assert!(
+            (g - w).abs() / denom <= rtol || (g - w).abs() < 1e-7,
+            "{what}[{i}]: {g} vs {w}"
+        );
+    }
+}
+
+#[test]
+fn native_consmax_matches_python_golden() {
+    let g = golden();
+    let gc = g.get("consmax");
+    let s = f32_vec(gc.get("s"));
+    let c = gc.get("c").as_f64().unwrap() as f32;
+    let want = gc.get("out").to_f64_vec().unwrap();
+
+    let be = NativeBackend::new();
+    let out = be
+        .execute(
+            "op_consmax",
+            &[
+                HostTensor::from_f32(&s, &[4, 8]),
+                HostTensor::from_f32(&vec![c; s.len()], &[4, 8]),
+            ],
+        )
+        .expect("op_consmax");
+    assert_close(&out[0].as_f32().unwrap(), &want, 1e-5, "op_consmax");
+}
+
+#[test]
+fn native_softmax_matches_python_golden() {
+    let g = golden();
+    let gs = g.get("softmax");
+    let s = f32_vec(gs.get("s"));
+    let want = gs.get("out").to_f64_vec().unwrap();
+    let be = NativeBackend::new();
+    let out = be
+        .execute("op_softmax", &[HostTensor::from_f32(&s, &[4, 8])])
+        .expect("op_softmax");
+    assert_close(&out[0].as_f32().unwrap(), &want, 1e-5, "op_softmax");
+}
+
+#[test]
+fn native_softermax_matches_python_golden() {
+    let g = golden();
+    let gs = g.get("softermax");
+    let s = f32_vec(gs.get("s"));
+    let want = gs.get("out").to_f64_vec().unwrap();
+    let be = NativeBackend::new();
+    let out = be
+        .execute("op_softermax", &[HostTensor::from_f32(&s, &[4, 8])])
+        .expect("op_softermax");
+    assert_close(&out[0].as_f32().unwrap(), &want, 1e-5, "op_softermax");
+}
+
+#[test]
+fn native_lut_op_bit_exact_on_full_grid() {
+    // all 256 INT8 codes with C=1.0: the op output must equal the python
+    // golden bits AND the quant::BitSplitLut model bits exactly
+    let g = golden();
+    let lut_g = g.get("lut_exp_s16");
+    let q: Vec<i8> = lut_g
+        .get("q")
+        .to_f64_vec()
+        .unwrap()
+        .iter()
+        .map(|&v| v as i8)
+        .collect();
+    let want_bits: Vec<u16> = lut_g
+        .get("out_bits")
+        .to_f64_vec()
+        .unwrap()
+        .iter()
+        .map(|&v| v as u16)
+        .collect();
+
+    let be = NativeBackend::new();
+    let q_t = HostTensor::from_i8(&q, &[256]);
+    let c_t = HostTensor::from_f32(&vec![1.0f32; 256], &[256]);
+    let out = be.execute("op_lut_consmax", &[q_t, c_t]).expect("lut op");
+    assert_eq!(out[0].dtype, DType::F16);
+    let bits = out[0].as_f16_bits().unwrap();
+    assert_eq!(bits, want_bits, "backend vs python golden");
+
+    let model = BitSplitLut::paper();
+    for (code, b) in q.iter().zip(&bits) {
+        assert_eq!(
+            *b,
+            model
+                .consmax(*code, consmax::util::fp16::F16::from_f32(1.0))
+                .to_bits(),
+            "code {code}"
+        );
+    }
+}
+
+#[test]
+fn native_consmax_vs_quantized_hw_path_within_lut_error() {
+    // acceptance criterion: NativeBackend ConSmax must match the
+    // quant/lut.rs bit-exact model on the golden vectors to within LUT
+    // quantization error (score quantization + fp16 rounding).
+    let g = golden();
+    let gc = g.get("consmax");
+    let s = f32_vec(gc.get("s"));
+    let beta = gc.get("beta").as_f64().unwrap() as f32;
+    let gamma = gc.get("gamma").as_f64().unwrap() as f32;
+
+    let be = NativeBackend::new();
+    let c = merge_beta_gamma(beta, gamma);
+    let float_out = be
+        .execute(
+            "op_consmax",
+            &[
+                HostTensor::from_f32(&s, &[4, 8]),
+                HostTensor::from_f32(&vec![c.to_f32(); s.len()], &[4, 8]),
+            ],
+        )
+        .unwrap()[0]
+        .as_f32()
+        .unwrap();
+
+    let quant = Int8Quantizer::paper();
+    let lut = BitSplitLut::paper();
+    for (x, w) in s.iter().zip(&float_out) {
+        let hw = lut.consmax(quant.quantize(*x), c).to_f32() as f64;
+        let w = *w as f64;
+        // error budget: score quantization (±scale/2 in the exponent) +
+        // fp16 rounding of the tiny products (~2%)
+        let tol = w * ((quant.scale as f64 / 2.0).exp() - 1.0) + w * 0.02 + 1e-6;
+        assert!((hw - w).abs() <= tol, "x={x}: hw {hw} vs native {w} (tol {tol})");
+    }
+}
+
+#[test]
+fn backend_trait_is_object_safe_and_uniform() {
+    let be: Box<dyn Backend> = Box::new(NativeBackend::new());
+    assert_eq!(be.name(), "native");
+    assert!(be.supports("op_consmax"));
+    assert!(!be.supports("tiny_consmax_train_step"));
+    let s = HostTensor::from_f32(&[0.0, 1.0], &[1, 2]);
+    let c = HostTensor::from_f32(&[0.5, 0.5], &[1, 2]);
+    let out = be.execute("op_consmax", &[s, c]).unwrap();
+    let vals = out[0].as_f32().unwrap();
+    assert!((vals[0] - 0.5).abs() < 1e-6);
+    assert!((vals[1] - 0.5 * std::f32::consts::E).abs() < 1e-5);
+}
+
+// ---------------------------------------------------------------------------
+// end-to-end native model paths (zero artifacts on disk)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn native_eval_loss_is_near_uniform_for_random_weights() {
+    use consmax::data::{BatchSampler, ByteTokenizer, Corpus};
+    use consmax::runtime::backend::NativeModel;
+
+    let cfg = ModelConfig::builtin("tiny", "consmax").unwrap();
+    let store = ParamStore::init(&cfg, 2).unwrap();
+    let model = NativeModel::from_params(&cfg, &store.order, &store.params).unwrap();
+    let corpus = Corpus::tiny();
+    let (_, val_text) = corpus.split();
+    let tok = ByteTokenizer;
+    let sampler = BatchSampler::new(tok.encode(val_text), cfg.train_batch, cfg.ctx, 0);
+    let batches = sampler.eval_batches(2);
+    assert!(!batches.is_empty());
+    let mut total = 0.0;
+    for (x, y) in &batches {
+        total += model.loss(x, y, cfg.train_batch, cfg.ctx).unwrap();
+    }
+    let loss = total / batches.len() as f64;
+    // untrained byte model: near ln(256) = 5.545
+    assert!((4.5..6.5).contains(&loss), "{loss}");
+}
+
+#[test]
+fn native_generation_deterministic_and_checkpoint_stable() {
+    let cfg = ModelConfig::builtin("tiny", "consmax").unwrap();
+    let store = ParamStore::init(&cfg, 5).unwrap();
+
+    let mut g1 = Generator::native(&cfg, &store, 0).unwrap();
+    let mut g2 = Generator::native(&cfg, &store, 99).unwrap(); // rng unused at T=0
+    let a = g1.generate_batch(&["hello ".into()], 12, 0.0).unwrap();
+    let b = g2.generate_batch(&["hello ".into()], 12, 0.0).unwrap();
+    assert_eq!(a, b);
+    assert_eq!(a[0].len(), 12);
+
+    // checkpoint round-trip produces the same continuation
+    let dir = std::env::temp_dir().join("consmax_native_backend_test");
+    let ckpt = dir.join("native.ckpt");
+    store.save(&ckpt).unwrap();
+    let reloaded = ParamStore::load(&ckpt, &cfg).unwrap();
+    let mut g3 = Generator::native(&cfg, &reloaded, 0).unwrap();
+    let c = g3.generate_batch(&["hello ".into()], 12, 0.0).unwrap();
+    assert_eq!(a, c);
+}
+
+#[test]
+fn softmax_and_softermax_variants_generate_natively() {
+    for norm in ["softmax", "softermax"] {
+        let cfg = ModelConfig::builtin("tiny", norm).unwrap();
+        let store = ParamStore::init(&cfg, 3).unwrap();
+        let mut g = Generator::native(&cfg, &store, 0).unwrap();
+        let out = g.generate_batch(&["abc ".into()], 6, 0.0).unwrap();
+        assert_eq!(out[0].len(), 6, "{norm}");
+    }
+}

@@ -1,0 +1,290 @@
+//! Stub of the `xla` (xla-rs) API surface used by `consmax`'s PJRT
+//! engine (`--features pjrt`).
+//!
+//! Purpose: the build environment has no network and no
+//! `libxla_extension`, but the engine, trainer and server code should
+//! still *type-check* under `--features pjrt` so the AOT path cannot rot.
+//! This crate mirrors the exact subset of xla-rs types and signatures the
+//! repo calls. Host-side [`Literal`] storage is real (create / ty /
+//! shape / to_vec round-trip); everything touching the PJRT runtime
+//! ([`PjRtClient::cpu`], compilation, buffers) returns a descriptive
+//! [`Error`].
+//!
+//! To execute artifacts for real, replace this directory with a checkout
+//! of `LaurentMazare/xla-rs` (the package is also named `xla`) and set
+//! `XLA_EXTENSION_DIR`; no source change in `consmax` is needed.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error` (std-error so `anyhow` can wrap it).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn stub_err(what: &str) -> Error {
+    Error(format!(
+        "{what}: the vendored `xla` stub has no PJRT runtime; replace \
+         rust/vendor/xla with a real xla-rs checkout to execute artifacts \
+         (see rust/README.md §PJRT)"
+    ))
+}
+
+/// Element types of the artifact tensors (subset of xla-rs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S32,
+    S64,
+    U8,
+    U32,
+    F16,
+    Bf16,
+    F32,
+    F64,
+}
+
+/// Primitive types for `Literal::convert` (subset of xla-rs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrimitiveType {
+    F16,
+    Bf16,
+    F32,
+    F64,
+    S32,
+}
+
+/// Plain-old-data element types a [`Literal`] can expose as a typed vec.
+pub trait NativeType: Copy {
+    const ELEMENT_TYPE: ElementType;
+    fn from_le(bytes: &[u8]) -> Self;
+    fn write_le(self, out: &mut Vec<u8>);
+}
+
+macro_rules! native {
+    ($ty:ty, $et:expr) => {
+        impl NativeType for $ty {
+            const ELEMENT_TYPE: ElementType = $et;
+            fn from_le(bytes: &[u8]) -> Self {
+                let mut buf = [0u8; std::mem::size_of::<$ty>()];
+                buf.copy_from_slice(bytes);
+                <$ty>::from_le_bytes(buf)
+            }
+            fn write_le(self, out: &mut Vec<u8>) {
+                out.extend_from_slice(&self.to_le_bytes());
+            }
+        }
+    };
+}
+
+native!(f32, ElementType::F32);
+native!(f64, ElementType::F64);
+native!(i32, ElementType::S32);
+native!(i8, ElementType::S8);
+native!(u8, ElementType::U8);
+
+fn element_size(ty: ElementType) -> usize {
+    match ty {
+        ElementType::Pred | ElementType::S8 | ElementType::U8 => 1,
+        ElementType::F16 | ElementType::Bf16 => 2,
+        ElementType::S32 | ElementType::U32 | ElementType::F32 => 4,
+        ElementType::S64 | ElementType::F64 => 8,
+    }
+}
+
+/// Array shape of a literal: dims as i64, like xla-rs.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Host-side literal with real storage (dtype + shape + little-endian
+/// bytes), so marshalling code round-trips even on the stub.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<i64>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let elems: usize = dims.iter().product();
+        if data.len() != elems * element_size(ty) {
+            return Err(Error(format!(
+                "literal data length {} != {} elements of {ty:?}",
+                data.len(),
+                elems
+            )));
+        }
+        Ok(Literal {
+            ty,
+            dims: dims.iter().map(|&d| d as i64).collect(),
+            data: data.to_vec(),
+        })
+    }
+
+    pub fn ty(&self) -> Result<ElementType> {
+        Ok(self.ty)
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.ty != T::ELEMENT_TYPE {
+            return Err(Error(format!(
+                "literal is {:?}, requested {:?}",
+                self.ty,
+                T::ELEMENT_TYPE
+            )));
+        }
+        let size = element_size(self.ty);
+        Ok(self.data.chunks_exact(size).map(T::from_le).collect())
+    }
+
+    /// Dtype conversion requires the real XLA runtime.
+    pub fn convert(&self, to: PrimitiveType) -> Result<Literal> {
+        Err(stub_err(&format!("Literal::convert({to:?})")))
+    }
+
+    /// Tuple decomposition requires the real XLA runtime (stub literals
+    /// are always arrays).
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(stub_err("Literal::to_tuple"))
+    }
+}
+
+/// Parsed HLO module (opaque; real parsing needs xla_extension).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(stub_err(&format!("HloModuleProto::from_text_file({path:?})")))
+    }
+}
+
+/// An XLA computation built from a module proto.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// Device handle (never constructed by the stub).
+pub struct PjRtDevice(());
+
+/// Device buffer (never constructed by the stub).
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(stub_err("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable (never constructed by the stub).
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(stub_err("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// PJRT client. `cpu()` fails on the stub with a pointer at the docs.
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(stub_err("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(stub_err("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<&PjRtDevice>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Err(stub_err("PjRtClient::buffer_from_host_literal"))
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<&PjRtDevice>,
+    ) -> Result<PjRtBuffer> {
+        Err(stub_err("PjRtClient::buffer_from_host_buffer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let vals = [1.0f32, -2.5, 3.25];
+        let mut bytes = Vec::new();
+        for v in vals {
+            v.write_le(&mut bytes);
+        }
+        let lit = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[3],
+            &bytes,
+        )
+        .unwrap();
+        assert_eq!(lit.ty().unwrap(), ElementType::F32);
+        assert_eq!(lit.array_shape().unwrap().dims(), &[3]);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vals);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn runtime_entry_points_error_helpfully() {
+        let err = PjRtClient::cpu().err().unwrap().to_string();
+        assert!(err.contains("stub"), "{err}");
+        assert!(err.contains("README"), "{err}");
+    }
+
+    #[test]
+    fn length_mismatch_rejected() {
+        assert!(Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[2],
+            &[0u8; 4]
+        )
+        .is_err());
+    }
+}
