@@ -2,14 +2,22 @@
 //! with Poisson arrivals and latency/throughput reporting — the
 //! coordinator's "inference service" face.
 //!
-//! Run: `cargo run --release --example serve -- [requests] [max_new] [ckpt]`
-//! Uses runs/tiny_consmax.ckpt if present (train one with
-//! `consmax train --config tiny --steps 150 --checkpoint runs/tiny_consmax.ckpt`),
-//! otherwise serves from random weights (still exercises the full path).
+//! Runs on the **native KV-cached decode engine**, so it works from a
+//! bare checkout: no Python, no PJRT, no artifacts. (The PJRT serving
+//! path is reachable through `consmax serve-demo --backend pjrt`.)
+//!
+//! Run: `cargo run --release --example serve -- [requests] [max_new] [ckpt] [decode]`
+//! where `decode` is `kv` (default) or `recompute` (the O(T²) oracle,
+//! kept for A/B latency comparisons — see `cargo bench --bench
+//! decode_bench` for the measured gap). Uses runs/tiny_consmax.ckpt if
+//! present, otherwise serves from random weights (still exercises the
+//! full path).
 
 use anyhow::Result;
-use consmax::coordinator::{GenRequest, Generator, ParamStore, Server};
-use consmax::runtime::Engine;
+use consmax::config::ModelConfig;
+use consmax::coordinator::{
+    DecodeMode, GenRequest, Generator, ParamStore, Server,
+};
 use consmax::util::rng::Pcg32;
 
 fn main() -> Result<()> {
@@ -20,9 +28,9 @@ fn main() -> Result<()> {
         .get(3)
         .cloned()
         .unwrap_or_else(|| "runs/tiny_consmax.ckpt".into());
+    let mode = DecodeMode::parse(args.get(4).map(String::as_str).unwrap_or("kv"))?;
 
-    let engine = Engine::new("artifacts")?;
-    let cfg = engine.manifest.config("tiny_consmax")?.clone();
+    let cfg = ModelConfig::builtin("tiny", "consmax")?;
     let store = if std::path::Path::new(&ckpt).exists() {
         println!("loading checkpoint {ckpt}");
         ParamStore::load(std::path::Path::new(&ckpt), &cfg)?
@@ -31,16 +39,17 @@ fn main() -> Result<()> {
         ParamStore::init(&cfg, 0)?
     };
 
-    let generator = Generator::new(&engine, &store, 7)?;
+    let generator = Generator::native_with(&cfg, &store, 7, mode)?;
     println!(
-        "model {}: ctx {}, decode batches up to {}\n",
+        "model {}: ctx {}, {} decode, batches up to {}\n",
         cfg.key,
         cfg.ctx,
+        generator.decode_name(),
         generator.max_batch()
     );
     let mut server = Server::new(generator);
 
-    // Poisson arrival schedule (randomized prompt mix)
+    // Poisson arrival schedule (randomized prompt mix and budgets)
     let mut rng = Pcg32::seeded(0);
     let prompts = [
         "The transformer architecture ",
@@ -58,7 +67,9 @@ fn main() -> Result<()> {
             id,
             prompt: prompts[rng.below(prompts.len() as u64) as usize].into(),
             max_new_tokens: max_new,
-            temperature: 0.8,
+            // mixed sampling policies in one batch: the server keeps
+            // each request's own temperature
+            temperature: if id % 3 == 0 { 0.0 } else { 0.8 },
         }));
     }
 
@@ -78,8 +89,8 @@ fn main() -> Result<()> {
         }
         for r in server.run_once()? {
             println!(
-                "[{:7.1} ms] req {:2} (batch {}): {:?}",
-                r.latency_ms, r.id, r.batch_size, r.text
+                "[{:7.1} ms] req {:2} (batch {}, {} prompt toks): {:?}",
+                r.latency_ms, r.id, r.batch_size, r.prompt_tokens, r.text
             );
             responses.push(r);
         }

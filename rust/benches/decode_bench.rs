@@ -1,0 +1,114 @@
+//! Decode-engine throughput: KV-cached incremental decode vs the
+//! recompute oracle, at ctx-length prompts, batch 1/4/8 — the serving
+//! latency lever of the KV-engine PR (EXPERIMENTS.md §Decode
+//! throughput).
+//!
+//! Run: `cargo bench --bench decode_bench` (no artifacts, no Python).
+//! Emits machine-readable results to `BENCH_decode.json` in the working
+//! directory and exits non-zero if the KV engine fails to clear a 5×
+//! tokens/s speedup over recompute — CI smoke-runs this so the artifact
+//! and the speedup claim cannot rot.
+
+use consmax::config::ModelConfig;
+use consmax::coordinator::{DecodeMode, Generator, ParamStore};
+use consmax::util::bench::{print_table, Bencher};
+use consmax::util::json::Json;
+
+/// Tokens generated per request; prompts fill the rest of ctx.
+const MAX_NEW: usize = 16;
+/// The speedup floor the KV engine must clear (acceptance criterion).
+const MIN_SPEEDUP: f64 = 5.0;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ModelConfig::builtin("tiny", "consmax")?;
+    let store = ParamStore::init(&cfg, 0)?;
+
+    // ctx-length prompt: encode_prompts clamps it to ctx - MAX_NEW, so
+    // every request enters decode with a full KV budget
+    let prompt: String = "The constant softmax replaces the row reduction "
+        .chars()
+        .cycle()
+        .take(cfg.ctx * 2)
+        .collect();
+
+    let mut b = Bencher::coarse();
+    b.min_samples = 3;
+
+    let mut rows = Vec::new();
+    let mut cases = Vec::new();
+    let mut all_clear = true;
+    for batch in [1usize, 4, 8] {
+        let prompts = vec![prompt.clone(); batch];
+        let items = (batch * MAX_NEW) as f64;
+
+        let mut rc =
+            Generator::native_with(&cfg, &store, 0, DecodeMode::Recompute)?;
+        let name = format!("decode recompute b{batch} ({MAX_NEW} new)");
+        let rc_stats = b
+            .bench(&name, || rc.generate_batch(&prompts, MAX_NEW, 0.0).unwrap())
+            .clone();
+        let rc_toks = rc_stats.throughput(items);
+
+        let mut kv = Generator::native_with(&cfg, &store, 0, DecodeMode::Kv)?;
+        let name = format!("decode kv b{batch} ({MAX_NEW} new)");
+        let kv_stats = b
+            .bench(&name, || kv.generate_batch(&prompts, MAX_NEW, 0.0).unwrap())
+            .clone();
+        let kv_toks = kv_stats.throughput(items);
+
+        let speedup = kv_toks / rc_toks;
+        all_clear &= speedup >= MIN_SPEEDUP;
+        rows.push(vec![
+            format!("{batch}"),
+            format!("{rc_toks:.0}"),
+            format!("{kv_toks:.0}"),
+            format!("{speedup:.1}x"),
+        ]);
+        cases.push(Json::from_pairs([
+            ("batch".to_string(), Json::from(batch)),
+            ("recompute_tok_s".to_string(), Json::from(rc_toks)),
+            ("kv_tok_s".to_string(), Json::from(kv_toks)),
+            ("speedup".to_string(), Json::from(speedup)),
+            (
+                "recompute_median_ns".to_string(),
+                Json::from(rc_stats.median_ns),
+            ),
+            ("kv_median_ns".to_string(), Json::from(kv_stats.median_ns)),
+        ]));
+    }
+
+    print_table(
+        &format!(
+            "Decode throughput, {} (ctx {}, prompt {} toks, {} new)",
+            cfg.key,
+            cfg.ctx,
+            cfg.ctx - MAX_NEW,
+            MAX_NEW
+        ),
+        &["batch", "recompute tok/s", "kv tok/s", "speedup"],
+        &rows,
+    );
+
+    let doc = Json::from_pairs([
+        ("bench".to_string(), Json::from("decode")),
+        ("config".to_string(), Json::from(cfg.key.as_str())),
+        ("normalizer".to_string(), Json::from(cfg.normalizer.as_str())),
+        ("ctx".to_string(), Json::from(cfg.ctx)),
+        ("prompt_tokens".to_string(), Json::from(cfg.ctx - MAX_NEW)),
+        ("max_new".to_string(), Json::from(MAX_NEW)),
+        ("min_speedup_required".to_string(), Json::from(MIN_SPEEDUP)),
+        ("cases".to_string(), Json::Arr(cases)),
+    ]);
+    std::fs::write("BENCH_decode.json", doc.to_string())?;
+    b.save_json(std::path::Path::new("BENCH_decode_raw.jsonl"))?;
+    println!("\nwrote BENCH_decode.json (+ BENCH_decode_raw.jsonl)");
+
+    if !all_clear {
+        eprintln!(
+            "FAIL: KV decode did not clear the {MIN_SPEEDUP}x speedup floor \
+             over recompute (see table above)"
+        );
+        std::process::exit(1);
+    }
+    Ok(())
+}

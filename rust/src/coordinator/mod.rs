@@ -2,7 +2,8 @@
 //!
 //! * [`params`] — parameter/optimizer state + checkpoints (all backends).
 //! * [`server`] — batched generation service over the pluggable
-//!   [`Generator`] (native recompute decode, or PJRT KV-cached decode).
+//!   [`Generator`] (native KV-cached decode with a recompute oracle
+//!   escape hatch, or PJRT KV-cached decode).
 //! * [`trainer`] (`--features pjrt`) — the training loop over the AOT
 //!   `train_step` (Fig 6/7). Training needs autodiff, which only the
 //!   AOT path provides; evaluation/generation also run natively.
@@ -22,7 +23,9 @@ pub mod trainer;
 
 pub use params::ParamStore;
 pub use report::{report_compare, report_run};
-pub use server::{GenRequest, GenResponse, Generator, Server};
+pub use server::{
+    DecodeMode, GenOutput, GenRequest, GenResponse, Generator, Server,
+};
 #[cfg(feature = "pjrt")]
 pub use sweep::{best_point, sweep_init, SweepOptions, SweepPoint};
 #[cfg(feature = "pjrt")]

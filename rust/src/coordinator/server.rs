@@ -6,37 +6,71 @@
 //! The [`Generator`] is backend-pluggable (the multi-backend seam of
 //! DESIGN.md §4):
 //!
-//! * **native** — recompute decode over [`NativeModel`]; always
-//!   available, needs no artifacts. `consmax serve-demo --backend native`
-//!   runs end-to-end on a machine with nothing but this crate.
+//! * **native** — KV-cached incremental decode over a
+//!   [`DecodeSession`] (one O(T) step per token); always available,
+//!   needs no artifacts. `consmax serve-demo --backend native` runs
+//!   end-to-end on a machine with nothing but this crate. The O(T²)
+//!   recompute decoder is kept as the reference oracle and reachable
+//!   with `--decode recompute` ([`DecodeMode`]).
 //! * **pjrt** (`--features pjrt`) — KV-cached decode over the AOT
 //!   `decode_b{N}` executables, parameters uploaded to device buffers
 //!   once at construction.
 //!
-//! Batching policy is static (vLLM-v0-style): up to the backend's
-//! largest decode batch, prompts left-aligned by padding with spaces.
-//! Responses return per-request generated text plus timing.
+//! Batching policy is static (vLLM-v0-style) up to the backend's largest
+//! decode batch. Native batches are **ragged**: each row prefills at its
+//! own prompt length and is masked to its own cached positions, so a
+//! short prompt next to a long one decodes exactly as it would alone
+//! (no left-padding, no pad pollution). Requests keep their own
+//! temperature and `max_new_tokens`; accounting is in token space.
 
 use std::collections::VecDeque;
 use std::marker::PhantomData;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 #[cfg(feature = "pjrt")]
-use anyhow::{bail, Context};
+use anyhow::Context;
 
 use crate::config::ModelConfig;
 use crate::coordinator::params::ParamStore;
 use crate::data::ByteTokenizer;
 use crate::metrics::LatencyRecorder;
-use crate::runtime::backend::NativeModel;
+use crate::runtime::backend::{DecodeSession, NativeModel};
 #[cfg(feature = "pjrt")]
 use crate::runtime::{Engine, HostTensor};
 use crate::util::rng::Pcg32;
 
-/// Largest batch the native recompute decoder serves at once (a knob,
-/// not an export constraint like the PJRT decode artifacts).
+/// Largest batch the native decode engine serves at once (a knob, not
+/// an export constraint like the PJRT decode artifacts).
 pub const NATIVE_MAX_BATCH: usize = 8;
+
+/// Which native decode engine drives generation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecodeMode {
+    /// KV-cached incremental decode (the default): prefill once, then
+    /// one O(T) `decode_step` per token.
+    Kv,
+    /// Recompute the ctx-bounded window every step (O(T²) per token) —
+    /// the reference oracle, kept as an escape hatch and test anchor.
+    Recompute,
+}
+
+impl DecodeMode {
+    pub fn parse(s: &str) -> Result<DecodeMode> {
+        Ok(match s {
+            "kv" => DecodeMode::Kv,
+            "recompute" => DecodeMode::Recompute,
+            other => bail!("unknown decode mode {other:?} (kv|recompute)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DecodeMode::Kv => "kv",
+            DecodeMode::Recompute => "recompute",
+        }
+    }
+}
 
 /// A generation request.
 #[derive(Debug, Clone)]
@@ -53,16 +87,33 @@ pub struct GenRequest {
 pub struct GenResponse {
     pub id: u64,
     pub text: String,
+    /// Post-clamp encoded prompt length (tokens actually attended).
     pub prompt_tokens: usize,
+    /// Generated tokens (== `text` in bytes for the byte tokenizer,
+    /// but counted in token space, never `chars()`).
     pub new_tokens: usize,
     pub latency_ms: f64,
     pub batch_size: usize,
 }
 
+/// One batch's generation output, in token space.
+pub struct GenOutput {
+    /// Newly generated token ids per row (exactly `max_new[r]` each).
+    pub tokens: Vec<Vec<i32>>,
+    /// The same tokens decoded to text per row.
+    pub texts: Vec<String>,
+    /// Post-clamp encoded prompt length per row.
+    pub prompt_tokens: Vec<usize>,
+}
+
 /// Backend-specific decode state.
 enum GenExec<'e> {
-    /// Recompute decode over the pure-Rust forward pass.
-    Native(Box<NativeModel>, PhantomData<&'e ()>),
+    /// Native decode over the pure-Rust model (KV-cached or recompute).
+    Native {
+        model: Box<NativeModel>,
+        mode: DecodeMode,
+        _lt: PhantomData<&'e ()>,
+    },
     /// KV-cached decode over the AOT `decode_b{N}` executables.
     #[cfg(feature = "pjrt")]
     Pjrt {
@@ -113,16 +164,30 @@ impl<'e> Generator<'e> {
         })
     }
 
-    /// Native generator: pure-Rust decode, no artifacts required.
+    /// Native generator with the default KV-cached decode engine.
     pub fn native(
         cfg: &ModelConfig,
         store: &ParamStore,
         seed: u64,
     ) -> Result<Generator<'static>> {
+        Generator::native_with(cfg, store, seed, DecodeMode::Kv)
+    }
+
+    /// Native generator with an explicit decode engine (`--decode`).
+    pub fn native_with(
+        cfg: &ModelConfig,
+        store: &ParamStore,
+        seed: u64,
+        mode: DecodeMode,
+    ) -> Result<Generator<'static>> {
         let model = NativeModel::from_params(cfg, &store.order, &store.params)?;
         Ok(Generator {
             cfg: cfg.clone(),
-            exec: GenExec::Native(Box::new(model), PhantomData),
+            exec: GenExec::Native {
+                model: Box::new(model),
+                mode,
+                _lt: PhantomData,
+            },
             rng: Pcg32::seeded(seed),
         })
     }
@@ -130,98 +195,194 @@ impl<'e> Generator<'e> {
     /// Which backend this generator decodes on ("native" / "pjrt").
     pub fn backend_name(&self) -> &'static str {
         match &self.exec {
-            GenExec::Native(..) => "native",
+            GenExec::Native { .. } => "native",
             #[cfg(feature = "pjrt")]
             GenExec::Pjrt { .. } => "pjrt",
         }
     }
 
+    /// Which decode engine runs under the backend ("kv" / "recompute").
+    pub fn decode_name(&self) -> &'static str {
+        match &self.exec {
+            GenExec::Native { mode, .. } => mode.name(),
+            #[cfg(feature = "pjrt")]
+            GenExec::Pjrt { .. } => "kv",
+        }
+    }
+
     pub fn max_batch(&self) -> usize {
         match &self.exec {
-            GenExec::Native(..) => NATIVE_MAX_BATCH,
+            GenExec::Native { .. } => NATIVE_MAX_BATCH,
             #[cfg(feature = "pjrt")]
             GenExec::Pjrt { batch_sizes, .. } => batch_sizes[0],
         }
     }
 
-    /// Encode prompts, clamp to the KV/ctx budget and left-pad with
-    /// spaces to a common length (shared by both decode backends).
-    fn encode_prompts(&self, prompts: &[String], max_new: usize) -> Vec<Vec<i32>> {
+    /// Encode prompts in token space, clamping each row to its own
+    /// KV/ctx budget (`ctx - max_new[r]`). Rows stay **ragged** — no
+    /// padding; per-row lengths are respected by the decode engines.
+    /// Returns the rows plus each row's post-clamp token count (what
+    /// accounting must report, not the prompt's byte length). An empty
+    /// prompt is seeded with a single space so decoding has a position
+    /// to condition on.
+    fn encode_prompts(
+        &self,
+        prompts: &[String],
+        max_new: &[usize],
+    ) -> (Vec<Vec<i32>>, Vec<usize>) {
         let tok = ByteTokenizer;
-        let budget = self.cfg.ctx.saturating_sub(max_new).max(1);
-        let mut encoded: Vec<Vec<i32>> = prompts
-            .iter()
-            .map(|p| {
-                let mut t = tok.encode(p);
-                if t.len() > budget {
-                    t = t.split_off(t.len() - budget);
-                }
-                t
-            })
-            .collect();
-        let plen = encoded.iter().map(Vec::len).max().unwrap_or(1).max(1);
-        for t in &mut encoded {
-            while t.len() < plen {
-                t.insert(0, b' ' as i32);
+        let mut encoded = Vec::with_capacity(prompts.len());
+        let mut prompt_tokens = Vec::with_capacity(prompts.len());
+        for (p, &mn) in prompts.iter().zip(max_new) {
+            let budget = self.cfg.ctx.saturating_sub(mn).max(1);
+            let mut t = tok.encode(p);
+            if t.len() > budget {
+                t = t.split_off(t.len() - budget);
             }
+            if t.is_empty() {
+                t.push(b' ' as i32);
+            }
+            prompt_tokens.push(t.len());
+            encoded.push(t);
         }
-        encoded
+        (encoded, prompt_tokens)
     }
 
-    /// Generate continuations for up to `max_batch()` prompts at once.
-    /// All prompts are processed in lock-step; the returned strings
-    /// contain only the newly generated text.
+    /// Generate continuations for up to `max_batch()` prompts at once,
+    /// one shared `max_new`/temperature (convenience wrapper over
+    /// [`Generator::generate_batch_ext`]). The returned strings contain
+    /// only the newly generated text.
     pub fn generate_batch(
         &mut self,
         prompts: &[String],
         max_new: usize,
         temperature: f32,
     ) -> Result<Vec<String>> {
+        let out = self.generate_batch_ext(
+            prompts,
+            &vec![max_new; prompts.len()],
+            &vec![temperature; prompts.len()],
+        )?;
+        Ok(out.texts)
+    }
+
+    /// Generate continuations with **per-row** token budgets and
+    /// temperatures — the serving entry point. Row `r` receives exactly
+    /// `max_new[r]` tokens sampled at `temperature[r]`; accounting in
+    /// the returned [`GenOutput`] is entirely in token space.
+    pub fn generate_batch_ext(
+        &mut self,
+        prompts: &[String],
+        max_new: &[usize],
+        temperature: &[f32],
+    ) -> Result<GenOutput> {
         anyhow::ensure!(!prompts.is_empty(), "empty batch");
+        anyhow::ensure!(
+            prompts.len() == max_new.len() && prompts.len() == temperature.len(),
+            "per-row max_new/temperature must match the prompt count"
+        );
         anyhow::ensure!(
             prompts.len() <= self.max_batch(),
             "batch of {} exceeds max decode batch {}",
             prompts.len(),
             self.max_batch()
         );
-        let encoded = self.encode_prompts(prompts, max_new);
+        #[cfg_attr(not(feature = "pjrt"), allow(unused_mut))]
+        let (encoded, mut prompt_tokens) = self.encode_prompts(prompts, max_new);
         let tok = ByteTokenizer;
+        let b = prompts.len();
+        let vocab = self.cfg.vocab;
+        let mut generated: Vec<Vec<i32>> = vec![Vec::new(); b];
         match &mut self.exec {
-            GenExec::Native(model, _) => {
-                let mut seqs = encoded;
-                let mut generated: Vec<Vec<i32>> = vec![Vec::new(); prompts.len()];
-                for _ in 0..max_new {
-                    let logits = model.next_logits(&seqs)?;
-                    let vocab = self.cfg.vocab;
-                    for (r, seq) in seqs.iter_mut().enumerate() {
+            GenExec::Native { model, mode, .. } => match *mode {
+                DecodeMode::Kv => {
+                    let mut sess = DecodeSession::new(&self.cfg, b);
+                    let logits = model.prefill(&mut sess, &encoded)?;
+                    let mut last = vec![0i32; b];
+                    for r in 0..b {
+                        if max_new[r] == 0 {
+                            continue;
+                        }
                         let row = &logits[r * vocab..(r + 1) * vocab];
-                        let next = if temperature <= 0.0 {
-                            argmax(row)
-                        } else {
-                            sample_temperature(row, temperature, &mut self.rng)
-                        };
-                        seq.push(next as i32);
-                        generated[r].push(next as i32);
+                        let next = pick_token(row, temperature[r], &mut self.rng);
+                        generated[r].push(next);
+                        last[r] = next;
+                    }
+                    loop {
+                        let active: Vec<bool> =
+                            (0..b).map(|r| generated[r].len() < max_new[r]).collect();
+                        if !active.iter().any(|&a| a) {
+                            break;
+                        }
+                        let logits =
+                            model.decode_step_active(&mut sess, &last, &active)?;
+                        for r in 0..b {
+                            if !active[r] {
+                                continue;
+                            }
+                            let row = &logits[r * vocab..(r + 1) * vocab];
+                            let next =
+                                pick_token(row, temperature[r], &mut self.rng);
+                            generated[r].push(next);
+                            last[r] = next;
+                        }
                     }
                 }
-                Ok(generated.iter().map(|g| tok.decode(g)).collect())
-            }
+                DecodeMode::Recompute => {
+                    // the oracle path: rows decode independently, so a
+                    // ragged batch needs no padding here either
+                    for r in 0..b {
+                        let mut seq = encoded[r].clone();
+                        for _ in 0..max_new[r] {
+                            let logits =
+                                model.next_logits(std::slice::from_ref(&seq))?;
+                            let next =
+                                pick_token(&logits, temperature[r], &mut self.rng);
+                            seq.push(next);
+                            generated[r].push(next);
+                        }
+                    }
+                }
+            },
             #[cfg(feature = "pjrt")]
             GenExec::Pjrt { engine, params, batch_sizes } => {
                 // smallest exported batch size that fits the request count
-                let b = *batch_sizes
+                let bq = *batch_sizes
                     .iter()
-                    .filter(|&&bs| bs >= prompts.len())
+                    .filter(|&&bs| bs >= b)
                     .min()
                     .unwrap_or(&batch_sizes[0]);
-                let entry = format!("{}_decode_b{}", self.cfg.key, b);
+                let entry = format!("{}_decode_b{}", self.cfg.key, bq);
                 let exe = engine.load(&entry)?;
 
-                // rows beyond the real prompts replicate row 0 (outputs
-                // ignored)
+                // the AOT decode step is lock-step, so the deepest
+                // generation budget in the batch defines the shared
+                // prompt window: without this re-clamp, a long prompt
+                // (clamped only by its own small max_new) would push
+                // plen + max_new_cap past ctx and silently truncate the
+                // high-budget rows
+                let max_new_cap = max_new.iter().copied().max().unwrap_or(0);
+                let cap_budget =
+                    self.cfg.ctx.saturating_sub(max_new_cap).max(1);
                 let mut encoded = encoded;
-                let plen = encoded[0].len();
-                while encoded.len() < b {
+                for (t, pt) in encoded.iter_mut().zip(prompt_tokens.iter_mut())
+                {
+                    if t.len() > cap_budget {
+                        *t = t.split_off(t.len() - cap_budget);
+                        *pt = t.len();
+                    }
+                }
+
+                // left-pad to a common length (per-row masking is a
+                // native-engine feature); rows beyond the real prompts
+                // replicate row 0 (outputs ignored)
+                let plen = encoded.iter().map(Vec::len).max().unwrap_or(1).max(1);
+                for t in encoded.iter_mut() {
+                    while t.len() < plen {
+                        t.insert(0, b' ' as i32);
+                    }
+                }
+                while encoded.len() < bq {
                     encoded.push(encoded[0].clone());
                 }
 
@@ -229,7 +390,7 @@ impl<'e> Generator<'e> {
                 // step because the output tuple only materializes on host)
                 let cache_shape = vec![
                     self.cfg.n_layer,
-                    b,
+                    bq,
                     self.cfg.n_head,
                     self.cfg.ctx,
                     self.cfg.head_dim(),
@@ -243,8 +404,9 @@ impl<'e> Generator<'e> {
                     &cache_shape,
                 ))?;
 
-                let steps = plen + max_new - 1;
-                let mut generated: Vec<Vec<i32>> = vec![Vec::new(); prompts.len()];
+                // plen <= ctx - max_new_cap, so every row completes its
+                // budget before the ctx guard below can fire
+                let steps = plen + max_new_cap.max(1) - 1;
                 let mut last_tokens: Vec<i32> =
                     encoded.iter().map(|t| t[0]).collect();
 
@@ -252,7 +414,7 @@ impl<'e> Generator<'e> {
                     if pos >= self.cfg.ctx {
                         break;
                     }
-                    let toks: Vec<i32> = (0..b)
+                    let toks: Vec<i32> = (0..bq)
                         .map(|r| {
                             if pos < plen {
                                 encoded[r][pos]
@@ -262,7 +424,7 @@ impl<'e> Generator<'e> {
                         })
                         .collect();
                     let tok_buf =
-                        engine.upload(&HostTensor::from_i32(&toks, &[b]))?;
+                        engine.upload(&HostTensor::from_i32(&toks, &[bq]))?;
                     let pos_buf =
                         engine.upload(&HostTensor::scalar_i32(pos as i32))?;
                     let inputs: Vec<&xla::PjRtBuffer> = params
@@ -276,27 +438,28 @@ impl<'e> Generator<'e> {
                     let logits_t =
                         HostTensor::from_literal(&outs.pop().context("logits")?)?;
                     let logits = logits_t.as_f32()?;
-                    let vocab = self.cfg.vocab;
 
                     if pos + 1 >= plen {
-                        // sample the next token per row
-                        for r in 0..prompts.len() {
+                        // sample the next token per row, at that row's
+                        // own temperature, up to its own budget
+                        for r in 0..b {
                             let row = &logits[r * vocab..(r + 1) * vocab];
-                            let next = if temperature <= 0.0 {
-                                argmax(row)
-                            } else {
-                                sample_temperature(row, temperature, &mut self.rng)
-                            };
-                            last_tokens[r] = next as i32;
-                            if generated[r].len() < max_new {
-                                generated[r].push(next as i32);
+                            let next =
+                                pick_token(row, temperature[r], &mut self.rng);
+                            last_tokens[r] = next;
+                            if generated[r].len() < max_new[r] {
+                                generated[r].push(next);
                             }
                         }
                     }
                 }
-                Ok(generated.iter().map(|g| tok.decode(g)).collect())
             }
         }
+        Ok(GenOutput {
+            texts: generated.iter().map(|g| tok.decode(g)).collect(),
+            tokens: generated,
+            prompt_tokens,
+        })
     }
 }
 
@@ -317,6 +480,15 @@ fn sample_temperature(logits: &[f32], temp: f32, rng: &mut Pcg32) -> usize {
         .map(|&l| (((l - m) / temp) as f64).exp())
         .collect();
     rng.weighted(&weights)
+}
+
+/// Sample one token: greedy at `temperature <= 0`, else softmax-tempered.
+fn pick_token(row: &[f32], temperature: f32, rng: &mut Pcg32) -> i32 {
+    if temperature <= 0.0 {
+        argmax(row) as i32
+    } else {
+        sample_temperature(row, temperature, rng) as i32
+    }
 }
 
 /// Static-batching server over a [`Generator`].
@@ -349,6 +521,10 @@ impl<'e> Server<'e> {
 
     /// Serve one batch from the queue (up to the largest decode batch);
     /// returns the completed responses. No-op on an empty queue.
+    ///
+    /// Every request keeps its own temperature and `max_new_tokens`;
+    /// accounting is in token space (`new_tokens` counts generated
+    /// tokens, `prompt_tokens` the post-clamp encoded prompt length).
     pub fn run_once(&mut self) -> Result<Vec<GenResponse>> {
         if self.queue.is_empty() {
             return Ok(Vec::new());
@@ -356,27 +532,29 @@ impl<'e> Server<'e> {
         let b = self.generator.max_batch().min(self.queue.len());
         let batch: Vec<GenRequest> = (0..b).map(|_| self.queue.pop_front().unwrap()).collect();
         let prompts: Vec<String> = batch.iter().map(|r| r.prompt.clone()).collect();
-        let max_new = batch.iter().map(|r| r.max_new_tokens).max().unwrap().max(1);
-        let temp = batch[0].temperature;
+        let max_new: Vec<usize> = batch.iter().map(|r| r.max_new_tokens).collect();
+        let temps: Vec<f32> = batch.iter().map(|r| r.temperature).collect();
 
         let t0 = Instant::now();
-        let texts = self.generator.generate_batch(&prompts, max_new, temp)?;
+        let gen = self.generator.generate_batch_ext(&prompts, &max_new, &temps)?;
         let dt_ms = t0.elapsed().as_secs_f64() * 1e3;
 
         let mut out = Vec::with_capacity(b);
-        for (req, text) in batch.into_iter().zip(texts) {
-            let clipped: String = text
-                .chars()
-                .take(req.max_new_tokens)
-                .collect();
+        let rows = batch
+            .into_iter()
+            .zip(gen.texts)
+            .zip(gen.tokens)
+            .zip(gen.prompt_tokens);
+        for (((req, text), toks), prompt_tokens) in rows {
+            let new_tokens = toks.len();
             self.latencies.record_us(dt_ms * 1e3);
             self.completed += 1;
-            self.tokens_out += clipped.len() as u64;
+            self.tokens_out += new_tokens as u64;
             out.push(GenResponse {
                 id: req.id,
-                prompt_tokens: req.prompt.len(),
-                new_tokens: clipped.len(),
-                text: clipped,
+                text,
+                prompt_tokens,
+                new_tokens,
                 latency_ms: dt_ms,
                 batch_size: b,
             });
@@ -431,10 +609,27 @@ mod tests {
         }
     }
 
+    #[test]
+    fn decode_mode_parses() {
+        assert_eq!(DecodeMode::parse("kv").unwrap(), DecodeMode::Kv);
+        assert_eq!(
+            DecodeMode::parse("recompute").unwrap(),
+            DecodeMode::Recompute
+        );
+        assert!(DecodeMode::parse("flash").is_err());
+        assert_eq!(DecodeMode::Kv.name(), "kv");
+    }
+
     fn native_generator() -> Generator<'static> {
         let cfg = ModelConfig::builtin("tiny", "consmax").unwrap();
         let store = ParamStore::init(&cfg, 5).unwrap();
         Generator::native(&cfg, &store, 0).unwrap()
+    }
+
+    fn recompute_generator() -> Generator<'static> {
+        let cfg = ModelConfig::builtin("tiny", "consmax").unwrap();
+        let store = ParamStore::init(&cfg, 5).unwrap();
+        Generator::native_with(&cfg, &store, 0, DecodeMode::Recompute).unwrap()
     }
 
     #[test]
@@ -446,6 +641,17 @@ mod tests {
         assert_eq!(a, b);
         assert_eq!(a[0].len(), 8);
         assert_eq!(g1.backend_name(), "native");
+        assert_eq!(g1.decode_name(), "kv");
+    }
+
+    #[test]
+    fn kv_and_recompute_greedy_agree() {
+        let mut kv = native_generator();
+        let mut rc = recompute_generator();
+        let a = kv.generate_batch(&["hello ".into()], 10, 0.0).unwrap();
+        let b = rc.generate_batch(&["hello ".into()], 10, 0.0).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(rc.decode_name(), "recompute");
     }
 
     #[test]
@@ -454,6 +660,22 @@ mod tests {
         let long = "x".repeat(g.cfg.ctx * 2);
         let out = g.generate_batch(&[long], 6, 0.0).unwrap();
         assert_eq!(out[0].len(), 6);
+    }
+
+    #[test]
+    fn prompt_tokens_report_post_clamp_length() {
+        let mut g = native_generator();
+        // multi-byte UTF-8: 5 chars but 7 bytes => 7 byte-tokens
+        let out = g
+            .generate_batch_ext(&["héllö".into()], &[3], &[0.0])
+            .unwrap();
+        assert_eq!(out.prompt_tokens, vec![7]);
+        assert_eq!(out.tokens[0].len(), 3);
+
+        // over-long prompt clamps to ctx - max_new
+        let long = "y".repeat(g.cfg.ctx * 3);
+        let out = g.generate_batch_ext(&[long], &[4], &[0.0]).unwrap();
+        assert_eq!(out.prompt_tokens, vec![g.cfg.ctx - 4]);
     }
 
     #[test]
@@ -478,6 +700,25 @@ mod tests {
             assert!(r.latency_ms > 0.0);
         }
         assert_eq!(server.latencies.len(), 3);
+        assert_eq!(server.tokens_out, 12); // token-space accounting
+    }
+
+    #[test]
+    fn per_request_budgets_are_respected() {
+        let mut server = Server::new(native_generator());
+        for (id, max_new) in [(0u64, 2usize), (1, 7), (2, 4)] {
+            server.submit(GenRequest {
+                id,
+                prompt: "shared prompt ".into(),
+                max_new_tokens: max_new,
+                temperature: 0.0,
+            });
+        }
+        let mut responses = server.run_to_completion().unwrap();
+        responses.sort_by_key(|r| r.id);
+        let counts: Vec<usize> = responses.iter().map(|r| r.new_tokens).collect();
+        assert_eq!(counts, vec![2, 7, 4]);
+        assert_eq!(server.tokens_out, 13);
     }
 
     #[test]

@@ -27,7 +27,7 @@ use consmax::config::ModelConfig;
 use consmax::coordinator::{
     best_point, sweep_init, SweepOptions, TrainOptions, Trainer,
 };
-use consmax::coordinator::{GenRequest, Generator, ParamStore, Server};
+use consmax::coordinator::{DecodeMode, GenRequest, Generator, ParamStore, Server};
 use consmax::data::{BatchSampler, ByteTokenizer, Corpus};
 use consmax::hw::{savings, table1, EdaFlow};
 use consmax::metrics::perplexity;
@@ -42,6 +42,7 @@ use consmax::util::rng::Pcg32;
 fn specs() -> Vec<Spec> {
     vec![
         Spec::opt_default("backend", "auto", "execution backend (native|pjrt|auto)"),
+        Spec::opt_default("decode", "kv", "native decode engine (kv|recompute)"),
         Spec::opt_default("artifacts", "artifacts", "artifacts directory (pjrt)"),
         Spec::opt_default("config", "tiny", "model config (tiny|paper)"),
         Spec::opt_default("normalizer", "consmax", "softmax|consmax|softermax"),
@@ -422,7 +423,8 @@ fn run_generate(args: &Args) -> Result<()> {
         return run_generate_pjrt(args);
     }
     let (cfg, store) = native_model_setup(args)?;
-    let mut g = Generator::native(&cfg, &store, args.get_u64("seed", 0)?)?;
+    let mode = DecodeMode::parse(&args.get_string("decode", "kv"))?;
+    let mut g = Generator::native_with(&cfg, &store, args.get_u64("seed", 0)?, mode)?;
     let prompt = args.get_string("prompt", "The attention ");
     let out = g.generate_batch(
         &[prompt.clone()],
@@ -482,11 +484,12 @@ fn serve_demo_over(mut server: Server<'_>, args: &Args) -> Result<()> {
     let responses = server.run_to_completion()?;
     let wall = t0.elapsed().as_secs_f64();
     println!(
-        "served {} requests in {wall:.2}s ({:.1} tok/s) on the {} backend; \
-         latency p50 {:.0} ms p95 {:.0} ms (batch sizes up to {})",
+        "served {} requests in {wall:.2}s ({:.1} tok/s) on the {} backend \
+         ({} decode); latency p50 {:.0} ms p95 {:.0} ms (batch sizes up to {})",
         responses.len(),
         server.tokens_out as f64 / wall,
         server.generator.backend_name(),
+        server.generator.decode_name(),
         server.latencies.percentile(50.0).unwrap_or(0.0) / 1e3,
         server.latencies.percentile(95.0).unwrap_or(0.0) / 1e3,
         server.generator.max_batch(),
@@ -499,7 +502,8 @@ fn run_serve_demo(args: &Args) -> Result<()> {
         return run_serve_demo_pjrt(args);
     }
     let (cfg, store) = native_model_setup(args)?;
-    let gen = Generator::native(&cfg, &store, 1)?;
+    let mode = DecodeMode::parse(&args.get_string("decode", "kv"))?;
+    let gen = Generator::native_with(&cfg, &store, 1, mode)?;
     serve_demo_over(Server::new(gen), args)
 }
 

@@ -1,0 +1,164 @@
+//! Per-batch decode state for the native KV-cached decode engine.
+//!
+//! A [`DecodeSession`] holds per-layer K/V caches sized
+//! `[n_layer, b, n_head, ctx, head_dim]` plus the per-row bookkeeping
+//! that makes batched serving correct:
+//!
+//! * **per-row true lengths** — rows of a batch prefill at their own
+//!   prompt length and attend only to their own cached positions, so a
+//!   short prompt in a mixed batch is never polluted by padding (the
+//!   left-pad bug the recompute path had);
+//! * **token history ring** — the last `ctx` token ids per row. The
+//!   model's positional embeddings are *absolute* (`wpe[i]`, `i < ctx`),
+//!   so once a row fills its cache, evicting the oldest entry shifts
+//!   every remaining position: the cached K/V become stale and the row
+//!   is re-encoded over the shifted window (exactly the trailing-window
+//!   semantics of the recompute oracle `NativeModel::next_logits`). The
+//!   ring makes that re-encode self-contained. Within `ctx` — the whole
+//!   serving regime, since prompts are clamped to `ctx - max_new` — a
+//!   decode step is a single O(len) incremental pass per token.
+//!
+//! The session owns no parameters; [`NativeModel::prefill`] and
+//! [`NativeModel::decode_step`] drive it.
+//!
+//! [`NativeModel::prefill`]: super::NativeModel::prefill
+//! [`NativeModel::decode_step`]: super::NativeModel::decode_step
+
+use std::collections::VecDeque;
+
+use crate::config::ModelConfig;
+
+/// KV caches + per-row lengths for one decode batch.
+pub struct DecodeSession {
+    b: usize,
+    pub(crate) ctx: usize,
+    pub(crate) n_layer: usize,
+    pub(crate) n_head: usize,
+    pub(crate) head_dim: usize,
+    /// Cached keys, `[n_layer, b, n_head, ctx, head_dim]` row-major.
+    pub(crate) k: Vec<f32>,
+    /// Cached values, same layout as `k`.
+    pub(crate) v: Vec<f32>,
+    /// Valid cached positions per row (`<= ctx`).
+    len: Vec<usize>,
+    /// Last `ctx` token ids per row (window re-encode on eviction).
+    history: Vec<VecDeque<i32>>,
+}
+
+impl DecodeSession {
+    /// Fresh session for `b` rows of `cfg`'s geometry; caches zeroed,
+    /// every row empty until [`NativeModel::prefill`] fills it.
+    ///
+    /// [`NativeModel::prefill`]: super::NativeModel::prefill
+    pub fn new(cfg: &ModelConfig, b: usize) -> DecodeSession {
+        let elems = cfg.n_layer * b * cfg.n_head * cfg.ctx * cfg.head_dim();
+        DecodeSession {
+            b,
+            ctx: cfg.ctx,
+            n_layer: cfg.n_layer,
+            n_head: cfg.n_head,
+            head_dim: cfg.head_dim(),
+            k: vec![0.0; elems],
+            v: vec![0.0; elems],
+            len: vec![0; b],
+            history: (0..b).map(|_| VecDeque::with_capacity(cfg.ctx)).collect(),
+        }
+    }
+
+    /// Number of rows in the batch.
+    pub fn batch(&self) -> usize {
+        self.b
+    }
+
+    /// Valid cached positions for row `r`.
+    pub fn len_of(&self, r: usize) -> usize {
+        self.len[r]
+    }
+
+    /// Start offset of the `head_dim` run for (layer, row, head, slot).
+    pub(crate) fn kv_start(&self, l: usize, r: usize, h: usize, slot: usize) -> usize {
+        (((l * self.b + r) * self.n_head + h) * self.ctx + slot) * self.head_dim
+    }
+
+    pub(crate) fn set_len(&mut self, r: usize, len: usize) {
+        debug_assert!(len <= self.ctx);
+        self.len[r] = len;
+    }
+
+    /// Reset row `r` to a fresh window of tokens (history only; the
+    /// caches are overwritten by the subsequent captured forward).
+    pub(crate) fn reset_row(&mut self, r: usize, window: &[i32]) {
+        debug_assert!(window.len() <= self.ctx);
+        self.len[r] = 0;
+        self.history[r].clear();
+        self.history[r].extend(window.iter().copied());
+    }
+
+    /// Append a token to row `r`'s history ring, evicting the oldest
+    /// entry once the ring holds `ctx` tokens.
+    pub(crate) fn push_history(&mut self, r: usize, tok: i32) {
+        if self.history[r].len() == self.ctx {
+            self.history[r].pop_front();
+        }
+        self.history[r].push_back(tok);
+    }
+
+    /// Row `r`'s current token window, oldest first.
+    pub(crate) fn history_row(&self, r: usize) -> Vec<i32> {
+        self.history[r].iter().copied().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_session_geometry() {
+        let cfg = ModelConfig::builtin("tiny", "consmax").unwrap();
+        let s = DecodeSession::new(&cfg, 3);
+        assert_eq!(s.batch(), 3);
+        assert_eq!(
+            s.k.len(),
+            cfg.n_layer * 3 * cfg.n_head * cfg.ctx * cfg.head_dim()
+        );
+        assert_eq!(s.k.len(), s.v.len());
+        for r in 0..3 {
+            assert_eq!(s.len_of(r), 0);
+        }
+    }
+
+    #[test]
+    fn kv_start_is_dense_and_disjoint() {
+        let cfg = ModelConfig::builtin("tiny", "consmax").unwrap();
+        let s = DecodeSession::new(&cfg, 2);
+        let hd = cfg.head_dim();
+        let mut seen = std::collections::BTreeSet::new();
+        for l in 0..cfg.n_layer {
+            for r in 0..2 {
+                for h in 0..cfg.n_head {
+                    for slot in 0..cfg.ctx {
+                        let start = s.kv_start(l, r, h, slot);
+                        assert!(start + hd <= s.k.len());
+                        assert!(seen.insert(start), "overlap at {start}");
+                    }
+                }
+            }
+        }
+        assert_eq!(seen.len() * hd, s.k.len());
+    }
+
+    #[test]
+    fn history_ring_evicts_oldest() {
+        let cfg = ModelConfig::builtin("tiny", "consmax").unwrap();
+        let mut s = DecodeSession::new(&cfg, 1);
+        s.reset_row(0, &[1, 2, 3]);
+        for t in 4..=(cfg.ctx as i32 + 3) {
+            s.push_history(0, t);
+        }
+        let h = s.history_row(0);
+        assert_eq!(h.len(), cfg.ctx);
+        assert_eq!(h[0], 4); // 1, 2, 3 evicted
+        assert_eq!(*h.last().unwrap(), cfg.ctx as i32 + 3);
+    }
+}

@@ -18,8 +18,14 @@
 //! [`NativeBackend`] is always available; the PJRT [`Engine`] joins in
 //! under `--features pjrt` and is selected through [`create_backend`].
 //!
+//! Above the op level, [`NativeModel`] is the native GPT forward, and
+//! [`DecodeSession`] + `NativeModel::{prefill, decode_step}` form the
+//! KV-cached decode engine that serving runs on (DESIGN.md §Decode
+//! seam); `NativeModel::next_logits` stays as the recompute oracle.
+//!
 //! [`Engine`]: crate::runtime::Engine
 
+pub mod decode;
 pub mod model;
 pub mod native;
 
@@ -29,6 +35,7 @@ use anyhow::{bail, Result};
 
 use crate::runtime::HostTensor;
 
+pub use decode::DecodeSession;
 pub use model::NativeModel;
 pub use native::NativeBackend;
 

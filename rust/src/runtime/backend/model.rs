@@ -10,10 +10,21 @@
 //! merged (asserted in `native.rs` tests).
 //!
 //! This is a forward-only model (no autodiff): training still goes
-//! through the AOT `train_step` under `--features pjrt`. For the paper's
-//! model sizes (tiny 2L/64d, paper 6L/384d) a recompute-per-token decode
-//! is fast enough to serve the demo workloads, and it keeps the native
-//! path free of KV-cache state.
+//! through the AOT `train_step` under `--features pjrt`. Decoding has two
+//! faces:
+//!
+//! * [`NativeModel::next_logits`] — the **recompute oracle**: a full
+//!   forward over the ctx-bounded trailing window per step, O(T²) per
+//!   generated token. Kept as the reference the KV engine is tested
+//!   against (`rust/tests/decode_engine.rs`) and reachable in serving
+//!   via `--decode recompute`.
+//! * [`NativeModel::prefill`] + [`NativeModel::decode_step`] — the
+//!   **KV-cached engine** over a [`DecodeSession`]: one O(T) incremental
+//!   pass per token, per-row true lengths (no left-pad pollution), and —
+//!   because ConSmax has no row max/sum — a single fused
+//!   score→prob→PV accumulation per cached key in the consmax case.
+//!   Both paths produce bitwise-identical logits: they run the same
+//!   kernels over the same values in the same order.
 
 use std::collections::BTreeMap;
 
@@ -21,6 +32,7 @@ use anyhow::{bail, ensure, Result};
 
 use crate::config::ModelConfig;
 use crate::runtime::backend::native;
+use crate::runtime::backend::DecodeSession;
 use crate::runtime::HostTensor;
 
 /// A model with host-resident f32 parameters, ready for forward passes.
@@ -83,12 +95,53 @@ impl NativeModel {
         &self.p(name)[l * per..(l + 1) * per]
     }
 
+    /// Per-layer β scalars (empty for softmax/softermax models).
+    fn beta_row(&self, l: usize) -> &[f32] {
+        if self.params.contains_key("beta") {
+            self.layer("beta", l, self.cfg.n_head)
+        } else {
+            &[]
+        }
+    }
+
+    /// Per-layer γ scalars (empty for softmax/softermax models).
+    fn gamma_row(&self, l: usize) -> &[f32] {
+        if self.params.contains_key("gamma") {
+            self.layer("gamma", l, self.cfg.n_head)
+        } else {
+            &[]
+        }
+    }
+
     /// Token ids (b, t) row-major → logits (b, t, vocab) row-major.
     pub fn forward(&self, tokens: &[i32], b: usize, t: usize) -> Result<Vec<f32>> {
+        self.forward_impl(tokens, b, t, false, None)
+    }
+
+    /// The shared transformer trunk behind both decode faces.
+    ///
+    /// * `last_only` — emit logits for each row's final position only
+    ///   (b, vocab), skipping the (b, t, vocab) LM-head matmul that
+    ///   evaluation needs but decoding discards.
+    /// * `capture` — `(session, row)`: store every layer's K/V segments
+    ///   into the session's caches at slots `0..t` for that row (b must
+    ///   be 1). This is how `prefill` fills a `DecodeSession` with
+    ///   exactly the values a plain forward would compute.
+    fn forward_impl(
+        &self,
+        tokens: &[i32],
+        b: usize,
+        t: usize,
+        last_only: bool,
+        mut capture: Option<(&mut DecodeSession, usize)>,
+    ) -> Result<Vec<f32>> {
         let cfg = &self.cfg;
         let (d, h, hd, v) = (cfg.n_embd, cfg.n_head, cfg.head_dim(), cfg.vocab);
         ensure!(tokens.len() == b * t, "token buffer is not (b={b}, t={t})");
         ensure!(t >= 1 && t <= cfg.ctx, "sequence length {t} vs ctx {}", cfg.ctx);
+        if capture.is_some() {
+            ensure!(b == 1, "kv capture expects a single-row forward");
+        }
         for &tok in tokens {
             ensure!(
                 (0..v as i32).contains(&tok),
@@ -129,16 +182,20 @@ impl NativeModel {
                 d,
                 3 * d,
             );
-            let beta = if self.params.contains_key("beta") {
-                self.layer("beta", l, h)
-            } else {
-                &[]
-            };
-            let gamma = if self.params.contains_key("gamma") {
-                self.layer("gamma", l, h)
-            } else {
-                &[]
-            };
+            if let Some((sess, row)) = capture.as_mut() {
+                let row = *row;
+                for i in 0..t {
+                    for hh in 0..h {
+                        let kb = sess.kv_start(l, row, hh, i);
+                        let ko = i * 3 * d + d + hh * hd;
+                        sess.k[kb..kb + hd].copy_from_slice(&qkv[ko..ko + hd]);
+                        let vo = ko + d;
+                        sess.v[kb..kb + hd].copy_from_slice(&qkv[vo..vo + hd]);
+                    }
+                }
+            }
+            let beta = self.beta_row(l);
+            let gamma = self.gamma_row(l);
 
             let mut y = vec![0.0f32; rows * d];
             for r in 0..b {
@@ -220,17 +277,22 @@ impl NativeModel {
 
         let xf = layer_norm(&x, self.p("lnf_g"), self.p("lnf_b"), d);
         // tied LM head: logits = xf @ wte^T
-        let mut logits = vec![0.0f32; rows * v];
-        for r in 0..rows {
-            let xr = &xf[r * d..(r + 1) * d];
-            let lr = &mut logits[r * v..(r + 1) * v];
-            for (vv, o) in lr.iter_mut().enumerate() {
+        let src_rows: Vec<usize> = if last_only {
+            (0..b).map(|r| r * t + (t - 1)).collect()
+        } else {
+            (0..rows).collect()
+        };
+        let mut logits = vec![0.0f32; src_rows.len() * v];
+        for (o, &sr) in src_rows.iter().enumerate() {
+            let xr = &xf[sr * d..(sr + 1) * d];
+            let lr = &mut logits[o * v..(o + 1) * v];
+            for (vv, ov) in lr.iter_mut().enumerate() {
                 let wr = &wte[vv * d..(vv + 1) * d];
                 let mut acc = 0.0f32;
                 for e in 0..d {
                     acc += xr[e] * wr[e];
                 }
-                *o = acc;
+                *ov = acc;
             }
         }
         Ok(logits)
@@ -258,7 +320,7 @@ impl NativeModel {
 
     /// Next-token logits (b, vocab) for equal-length token sequences,
     /// recomputing the forward pass over a ctx-bounded trailing window —
-    /// the native decode step.
+    /// the **recompute oracle** the KV engine is validated against.
     pub fn next_logits(&self, seqs: &[Vec<i32>]) -> Result<Vec<f32>> {
         ensure!(!seqs.is_empty(), "empty decode batch");
         let len = seqs[0].len();
@@ -273,14 +335,263 @@ impl NativeModel {
         for s in seqs {
             toks.extend_from_slice(&s[len - w..]);
         }
-        let logits = self.forward(&toks, b, w)?;
+        // last_only: (b, vocab) — decoding never reads the interior rows
+        self.forward_impl(&toks, b, w, true, None)
+    }
+
+    fn check_session(&self, sess: &DecodeSession) -> Result<()> {
+        ensure!(
+            sess.ctx == self.cfg.ctx
+                && sess.n_layer == self.cfg.n_layer
+                && sess.n_head == self.cfg.n_head
+                && sess.head_dim == self.cfg.head_dim(),
+            "decode session geometry does not match model config {}",
+            self.cfg.key
+        );
+        Ok(())
+    }
+
+    /// Encode each row's prompt into the session (resetting it) and
+    /// return next-token logits (b, vocab). Rows may have **different
+    /// lengths** — each prefills at its own true length, so no padding
+    /// token is ever attended to. Prompts longer than `ctx` are clamped
+    /// to their trailing window, matching [`NativeModel::next_logits`].
+    pub fn prefill(
+        &self,
+        sess: &mut DecodeSession,
+        rows: &[Vec<i32>],
+    ) -> Result<Vec<f32>> {
+        ensure!(
+            rows.len() == sess.batch(),
+            "prefill: {} rows for a session of {}",
+            rows.len(),
+            sess.batch()
+        );
+        self.check_session(sess)?;
         let v = self.cfg.vocab;
-        let mut out = Vec::with_capacity(b * v);
-        for r in 0..b {
-            let base = (r * w + (w - 1)) * v;
-            out.extend_from_slice(&logits[base..base + v]);
+        let mut out = Vec::with_capacity(rows.len() * v);
+        for (r, seq) in rows.iter().enumerate() {
+            ensure!(!seq.is_empty(), "prefill: row {r} is empty");
+            let w = seq.len().min(self.cfg.ctx);
+            let window = &seq[seq.len() - w..];
+            sess.reset_row(r, window);
+            let logits = self.forward_impl(window, 1, w, true, Some((&mut *sess, r)))?;
+            sess.set_len(r, w);
+            out.extend_from_slice(&logits);
         }
         Ok(out)
+    }
+
+    /// Advance every row of the session by one token; returns next-token
+    /// logits (b, vocab).
+    pub fn decode_step(
+        &self,
+        sess: &mut DecodeSession,
+        tokens: &[i32],
+    ) -> Result<Vec<f32>> {
+        let active = vec![true; tokens.len()];
+        self.decode_step_active(sess, tokens, &active)
+    }
+
+    /// Advance the active rows of the session by one token each; returns
+    /// logits (b, vocab) with inactive rows zero-filled.
+    ///
+    /// The common case is one O(len) incremental pass per row. A row
+    /// whose cache is full (`len == ctx`) evicts its oldest token from
+    /// the history ring and re-encodes the shifted window — absolute
+    /// positional embeddings make the remaining cached K/V stale — which
+    /// is exactly the oracle's trailing-window recompute for that step.
+    pub fn decode_step_active(
+        &self,
+        sess: &mut DecodeSession,
+        tokens: &[i32],
+        active: &[bool],
+    ) -> Result<Vec<f32>> {
+        ensure!(
+            tokens.len() == sess.batch() && active.len() == sess.batch(),
+            "decode_step: {} tokens / {} active flags for a session of {}",
+            tokens.len(),
+            active.len(),
+            sess.batch()
+        );
+        self.check_session(sess)?;
+        let v = self.cfg.vocab;
+        let ctx = self.cfg.ctx;
+        let mut out = vec![0.0f32; sess.batch() * v];
+        for (r, (&tok, &is_active)) in tokens.iter().zip(active).enumerate() {
+            if !is_active {
+                continue;
+            }
+            ensure!(sess.len_of(r) > 0, "decode_step on row {r} before prefill");
+            ensure!(
+                (0..v as i32).contains(&tok),
+                "token id {tok} outside vocab {v}"
+            );
+            sess.push_history(r, tok);
+            let row_logits = if sess.len_of(r) == ctx {
+                // eviction: re-encode the shifted window from slot 0
+                let window = sess.history_row(r);
+                self.forward_impl(&window, 1, ctx, true, Some((&mut *sess, r)))?
+            } else {
+                self.decode_token(sess, r, tok)?
+            };
+            out[r * v..(r + 1) * v].copy_from_slice(&row_logits);
+        }
+        Ok(out)
+    }
+
+    /// One incremental decode pass for row `r`: append K/V for `tok` at
+    /// the next cache slot and attend over the row's cached positions.
+    /// Performs the same float ops in the same order as `forward_impl`,
+    /// so the logits are bitwise identical to a window recompute.
+    fn decode_token(
+        &self,
+        sess: &mut DecodeSession,
+        r: usize,
+        tok: i32,
+    ) -> Result<Vec<f32>> {
+        let cfg = &self.cfg;
+        let (d, h, hd, v) = (cfg.n_embd, cfg.n_head, cfg.head_dim(), cfg.vocab);
+        let pos = sess.len_of(r);
+        debug_assert!(pos < cfg.ctx);
+
+        let wte = self.p("wte");
+        let wpe = self.p("wpe");
+        let mut x = vec![0.0f32; d];
+        {
+            let te = &wte[tok as usize * d..(tok as usize + 1) * d];
+            let pe = &wpe[pos * d..(pos + 1) * d];
+            for ((o, &a), &p) in x.iter_mut().zip(te).zip(pe) {
+                *o = a + p;
+            }
+        }
+
+        let scale = 1.0 / (hd as f32).sqrt();
+        for l in 0..cfg.n_layer {
+            // ---- attention block (pre-LN) -----------------------------
+            let xn = layer_norm(
+                &x,
+                self.layer("ln1_g", l, d),
+                self.layer("ln1_b", l, d),
+                d,
+            );
+            let qkv = affine(
+                &xn,
+                self.layer("attn_qkv_w", l, d * 3 * d),
+                self.layer("attn_qkv_b", l, 3 * d),
+                1,
+                d,
+                3 * d,
+            );
+            // append this token's K/V at slot `pos`
+            for hh in 0..h {
+                let kb = sess.kv_start(l, r, hh, pos);
+                let ko = d + hh * hd;
+                sess.k[kb..kb + hd].copy_from_slice(&qkv[ko..ko + hd]);
+                let vo = ko + d;
+                sess.v[kb..kb + hd].copy_from_slice(&qkv[vo..vo + hd]);
+            }
+            let beta = self.beta_row(l);
+            let gamma = self.gamma_row(l);
+
+            let mut y = vec![0.0f32; d];
+            for hh in 0..h {
+                let q = &qkv[hh * hd..(hh + 1) * hd];
+                if cfg.normalizer == "consmax" {
+                    // ConSmax has no row max/sum (the paper's point), so
+                    // score → prob → PV fuses into one pass per cached
+                    // key, exactly like the `op_consmax_pv` kernel.
+                    let (bh, gh) = (beta[hh], gamma[hh]);
+                    for j in 0..=pos {
+                        let kb = sess.kv_start(l, r, hh, j);
+                        let mut acc = 0.0f32;
+                        for e in 0..hd {
+                            acc += q[e] * sess.k[kb + e];
+                        }
+                        let pj = (acc * scale - bh).exp() / gh;
+                        for e in 0..hd {
+                            y[hh * hd + e] += pj * sess.v[kb + e];
+                        }
+                    }
+                } else {
+                    // softmax/softermax reduce over the whole row first
+                    let mut srow = Vec::with_capacity(pos + 1);
+                    for j in 0..=pos {
+                        let kb = sess.kv_start(l, r, hh, j);
+                        let mut acc = 0.0f32;
+                        for e in 0..hd {
+                            acc += q[e] * sess.k[kb + e];
+                        }
+                        srow.push(acc * scale);
+                    }
+                    let probs = if cfg.normalizer == "softermax" {
+                        native::softermax_rows(&srow, srow.len())
+                    } else {
+                        native::softmax_rows(&srow, srow.len())
+                    };
+                    for (j, &pj) in probs.iter().enumerate() {
+                        let kb = sess.kv_start(l, r, hh, j);
+                        for e in 0..hd {
+                            y[hh * hd + e] += pj * sess.v[kb + e];
+                        }
+                    }
+                }
+            }
+            let proj = affine(
+                &y,
+                self.layer("attn_proj_w", l, d * d),
+                self.layer("attn_proj_b", l, d),
+                1,
+                d,
+                d,
+            );
+            for (xv, pv) in x.iter_mut().zip(&proj) {
+                *xv += pv;
+            }
+
+            // ---- MLP block (pre-LN) -----------------------------------
+            let xn2 = layer_norm(
+                &x,
+                self.layer("ln2_g", l, d),
+                self.layer("ln2_b", l, d),
+                d,
+            );
+            let mut hid = affine(
+                &xn2,
+                self.layer("mlp_fc_w", l, d * 4 * d),
+                self.layer("mlp_fc_b", l, 4 * d),
+                1,
+                d,
+                4 * d,
+            );
+            for hv in hid.iter_mut() {
+                *hv = gelu(*hv);
+            }
+            let mo = affine(
+                &hid,
+                self.layer("mlp_proj_w", l, 4 * d * d),
+                self.layer("mlp_proj_b", l, d),
+                1,
+                4 * d,
+                d,
+            );
+            for (xv, mv) in x.iter_mut().zip(&mo) {
+                *xv += mv;
+            }
+        }
+
+        let xf = layer_norm(&x, self.p("lnf_g"), self.p("lnf_b"), d);
+        let mut logits = vec![0.0f32; v];
+        for (vv, ov) in logits.iter_mut().enumerate() {
+            let wr = &wte[vv * d..(vv + 1) * d];
+            let mut acc = 0.0f32;
+            for e in 0..d {
+                acc += xf[e] * wr[e];
+            }
+            *ov = acc;
+        }
+        sess.set_len(r, pos + 1);
+        Ok(logits)
     }
 }
 
@@ -414,5 +725,63 @@ mod tests {
         assert!(m.forward(&[300], 1, 1).is_err());
         assert!(m.forward(&[-1], 1, 1).is_err());
         assert!(m.forward(&[0; 4], 2, 3).is_err()); // wrong element count
+    }
+
+    #[test]
+    fn prefill_matches_next_logits() {
+        for norm in ["consmax", "softmax", "softermax"] {
+            let m = tiny_model(norm);
+            let seq: Vec<i32> = (0..20).map(|i| (i * 5 + 3) % 256).collect();
+            let mut sess = DecodeSession::new(&m.cfg, 1);
+            let kv = m.prefill(&mut sess, &[seq.clone()]).unwrap();
+            let oracle = m.next_logits(&[seq]).unwrap();
+            assert_eq!(kv, oracle, "{norm}: prefill vs oracle");
+            assert_eq!(sess.len_of(0), 20);
+        }
+    }
+
+    #[test]
+    fn decode_step_extends_bitwise() {
+        // one incremental step == recompute over the extended sequence
+        for norm in ["consmax", "softmax", "softermax"] {
+            let m = tiny_model(norm);
+            let mut seq: Vec<i32> = (0..9).map(|i| (i * 7 + 1) % 256).collect();
+            let mut sess = DecodeSession::new(&m.cfg, 1);
+            m.prefill(&mut sess, &[seq.clone()]).unwrap();
+            let kv = m.decode_step(&mut sess, &[42]).unwrap();
+            seq.push(42);
+            let oracle = m.next_logits(&[seq]).unwrap();
+            assert_eq!(kv, oracle, "{norm}: decode_step vs oracle");
+        }
+    }
+
+    #[test]
+    fn decode_session_misuse_rejected() {
+        let m = tiny_model("consmax");
+        let mut sess = DecodeSession::new(&m.cfg, 2);
+        // decode before prefill
+        assert!(m.decode_step(&mut sess, &[1, 2]).is_err());
+        // batch-size mismatch
+        assert!(m.prefill(&mut sess, &[vec![1]]).is_err());
+        // empty row
+        assert!(m.prefill(&mut sess, &[vec![1], vec![]]).is_err());
+        // bad token id after a valid prefill
+        m.prefill(&mut sess, &[vec![1, 2], vec![3]]).unwrap();
+        assert!(m.decode_step(&mut sess, &[300, 0]).is_err());
+    }
+
+    #[test]
+    fn inactive_rows_hold_still() {
+        let m = tiny_model("consmax");
+        let mut sess = DecodeSession::new(&m.cfg, 2);
+        m.prefill(&mut sess, &[vec![5, 6, 7], vec![9, 9]]).unwrap();
+        let v = m.cfg.vocab;
+        let out = m
+            .decode_step_active(&mut sess, &[1, 1], &[true, false])
+            .unwrap();
+        assert_eq!(sess.len_of(0), 4);
+        assert_eq!(sess.len_of(1), 2); // untouched
+        assert!(out[v..].iter().all(|&x| x == 0.0)); // zero-filled row
+        assert!(out[..v].iter().any(|&x| x != 0.0));
     }
 }

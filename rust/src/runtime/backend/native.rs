@@ -138,6 +138,14 @@ fn reduce_rows(s: &[f32], row: usize, e: fn(f32) -> f32) -> Vec<f32> {
     let mut out = Vec::with_capacity(s.len());
     for chunk in s.chunks_exact(row) {
         let m = chunk.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        if m == f32::NEG_INFINITY {
+            // fully-masked row: every score is -inf, so `x - m` would be
+            // NaN. The masked-attention convention is an all-zero row
+            // (no key receives any weight), matching ConSmax where
+            // exp(-inf) = 0 element-wise.
+            out.resize(out.len() + row, 0.0);
+            continue;
+        }
         let exps: Vec<f32> = chunk.iter().map(|&x| e(x - m)).collect();
         let sum: f32 = exps.iter().sum();
         out.extend(exps.iter().map(|&x| x / sum));
@@ -247,6 +255,25 @@ mod tests {
         let p = softermax_rows(&s, 2);
         assert!((p[0] - 1.0 / 3.0).abs() < 1e-6);
         assert!((p[1] - 2.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fully_masked_rows_are_zero_not_nan() {
+        // all -inf scores used to produce NaN (x - m = -inf - -inf);
+        // a fully-masked row must come back all-zero instead
+        let ninf = f32::NEG_INFINITY;
+        let s = vec![ninf, ninf, ninf, 0.0, 1.0, ninf];
+        for (name, p) in [
+            ("softmax", softmax_rows(&s, 3)),
+            ("softermax", softermax_rows(&s, 3)),
+        ] {
+            assert!(p.iter().all(|x| x.is_finite()), "{name}: {p:?}");
+            assert_eq!(&p[..3], &[0.0, 0.0, 0.0], "{name}");
+            // the live row still normalizes, with the masked tail at 0
+            let live: f32 = p[3..].iter().sum();
+            assert!((live - 1.0).abs() < 1e-6, "{name}: {live}");
+            assert_eq!(p[5], 0.0, "{name}");
+        }
     }
 
     #[test]

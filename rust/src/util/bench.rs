@@ -156,6 +156,14 @@ impl Bencher {
             .collect::<Vec<_>>()
             .join("\n")
     }
+
+    /// Persist the JSON-lines dump, one `Stats` object per line — the
+    /// raw-timings companion a summarizing bench writes next to its
+    /// digest (e.g. `decode_bench`'s `BENCH_decode_raw.jsonl` beside
+    /// `BENCH_decode.json`).
+    pub fn save_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.dump_json())
+    }
 }
 
 /// Print a markdown-style table: used by the paper-table benches so the
@@ -240,6 +248,22 @@ mod tests {
         let line = b.dump_json();
         let v = crate::util::json::Json::parse(&line).unwrap();
         assert_eq!(v.get("name").as_str(), Some("x"));
+    }
+
+    #[test]
+    fn save_json_roundtrips_through_disk() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(2),
+            measure: Duration::from_millis(5),
+            min_samples: 2,
+            results: vec![],
+        };
+        b.bench("persisted", || 1);
+        let path = std::env::temp_dir().join("consmax_bench_save_json.jsonl");
+        b.save_json(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(v.get("name").as_str(), Some("persisted"));
     }
 
     #[test]

@@ -1,0 +1,277 @@
+//! KV-vs-recompute equivalence suite for the native decode engine, plus
+//! regression tests for the batched-serving bugs this PR fixed:
+//!
+//! * greedy KV decode is **token-identical** to the recompute oracle
+//!   (`NativeModel::next_logits`) and logit-identical within 1e-5, for
+//!   all three normalizers, including sequences past `ctx` (ring
+//!   eviction + window re-encode);
+//! * a prompt in a ragged batch decodes exactly as it would alone
+//!   (the left-pad pollution fix);
+//! * each request is sampled at its own temperature (not `batch[0]`'s);
+//! * accounting is in token space (`prompt_tokens` = post-clamp encoded
+//!   length, `new_tokens` = generated token count, not chars/bytes).
+
+use consmax::config::ModelConfig;
+use consmax::coordinator::{
+    DecodeMode, GenRequest, Generator, ParamStore, Server,
+};
+use consmax::runtime::backend::{DecodeSession, NativeModel};
+
+const NORMALIZERS: [&str; 3] = ["consmax", "softmax", "softermax"];
+
+fn tiny_model(norm: &str, seed: u64) -> NativeModel {
+    let cfg = ModelConfig::builtin("tiny", norm).unwrap();
+    let store = ParamStore::init(&cfg, seed).unwrap();
+    NativeModel::from_params(&cfg, &store.order, &store.params).unwrap()
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+fn assert_close(kv: &[f32], oracle: &[f32], what: &str) {
+    assert_eq!(kv.len(), oracle.len(), "{what}: length");
+    for (i, (a, b)) in kv.iter().zip(oracle).enumerate() {
+        let denom = a.abs().max(b.abs()).max(1.0);
+        assert!(
+            (a - b).abs() / denom <= 1e-5,
+            "{what}[{i}]: kv {a} vs oracle {b}"
+        );
+    }
+}
+
+/// Greedy-decode `steps` tokens with the KV engine while checking every
+/// step against the recompute oracle on the full growing sequence.
+fn check_greedy_equivalence(norm: &str, prompt_len: usize, steps: usize) {
+    let m = tiny_model(norm, 11);
+    let prompt: Vec<i32> =
+        (0..prompt_len).map(|i| ((i * 37 + 5) % 256) as i32).collect();
+
+    let mut sess = DecodeSession::new(&m.cfg, 1);
+    let mut kv_logits = m.prefill(&mut sess, &[prompt.clone()]).unwrap();
+    let mut seq = prompt;
+    let oracle = m.next_logits(std::slice::from_ref(&seq)).unwrap();
+    assert_close(&kv_logits, &oracle, &format!("{norm}: prefill"));
+
+    for step in 0..steps {
+        let next = argmax(&kv_logits) as i32;
+        // the oracle extends the full sequence and recomputes its
+        // ctx-bounded trailing window
+        seq.push(next);
+        let oracle = m.next_logits(std::slice::from_ref(&seq)).unwrap();
+        let oracle_next = argmax(&oracle) as i32;
+        // the KV engine takes one incremental (or eviction) step
+        kv_logits = m.decode_step(&mut sess, &[next]).unwrap();
+        assert_close(
+            &kv_logits,
+            &oracle,
+            &format!("{norm}: step {step} (seq len {})", seq.len()),
+        );
+        assert_eq!(
+            argmax(&kv_logits) as i32,
+            oracle_next,
+            "{norm}: greedy token diverged at step {step}"
+        );
+    }
+}
+
+#[test]
+fn kv_matches_recompute_within_ctx() {
+    for norm in NORMALIZERS {
+        // 16 prompt + 32 generated = 48 < ctx (64): pure incremental path
+        check_greedy_equivalence(norm, 16, 32);
+    }
+}
+
+#[test]
+fn kv_matches_recompute_past_ctx() {
+    for norm in NORMALIZERS {
+        // 58 prompt + 14 generated = 72 > ctx (64): crosses into ring
+        // eviction + window re-encode territory
+        check_greedy_equivalence(norm, 58, 14);
+    }
+}
+
+#[test]
+fn kv_matches_recompute_for_overlong_prompt() {
+    // prompt already longer than ctx: prefill must clamp to the
+    // trailing window exactly like the oracle
+    let m = tiny_model("consmax", 11);
+    let prompt: Vec<i32> = (0..100).map(|i| ((i * 13 + 1) % 256) as i32).collect();
+    let mut sess = DecodeSession::new(&m.cfg, 1);
+    let kv = m.prefill(&mut sess, &[prompt.clone()]).unwrap();
+    let oracle = m.next_logits(&[prompt]).unwrap();
+    assert_close(&kv, &oracle, "overlong prefill");
+    assert_eq!(sess.len_of(0), m.cfg.ctx);
+}
+
+#[test]
+fn batched_ragged_rows_match_solo_rows() {
+    // the left-pad pollution regression: short prompts in a mixed batch
+    // must produce byte-identical greedy continuations to running them
+    // alone (pre-fix, padding was attended to and corrupted the logits)
+    let cfg = ModelConfig::builtin("tiny", "consmax").unwrap();
+    let store = ParamStore::init(&cfg, 5).unwrap();
+    let prompts = [
+        "The transformer architecture ".to_string(),
+        "hi".to_string(),
+        "a much longer prompt about streaming attention normalizers "
+            .to_string(),
+    ];
+
+    let mut batched = Generator::native(&cfg, &store, 0).unwrap();
+    let batch_out = batched.generate_batch(&prompts, 12, 0.0).unwrap();
+
+    for (i, p) in prompts.iter().enumerate() {
+        let mut solo = Generator::native(&cfg, &store, 0).unwrap();
+        let solo_out = solo
+            .generate_batch(std::slice::from_ref(p), 12, 0.0)
+            .unwrap();
+        assert_eq!(
+            batch_out[i], solo_out[0],
+            "row {i} ({p:?}) diverged between batched and solo decode"
+        );
+    }
+}
+
+#[test]
+fn kv_and_recompute_generators_agree_on_batches() {
+    for norm in NORMALIZERS {
+        let cfg = ModelConfig::builtin("tiny", norm).unwrap();
+        let store = ParamStore::init(&cfg, 9).unwrap();
+        let prompts =
+            ["alpha ".to_string(), "the quick brown fox".to_string()];
+        let mut kv = Generator::native(&cfg, &store, 0).unwrap();
+        let mut rc =
+            Generator::native_with(&cfg, &store, 0, DecodeMode::Recompute)
+                .unwrap();
+        let a = kv.generate_batch(&prompts, 10, 0.0).unwrap();
+        let b = rc.generate_batch(&prompts, 10, 0.0).unwrap();
+        assert_eq!(a, b, "{norm}: kv vs recompute batch divergence");
+    }
+}
+
+#[test]
+fn per_request_temperature_is_respected() {
+    // pre-fix, Server::run_once applied batch[0].temperature to every
+    // row; a greedy request riding behind a hot one must stay greedy
+    let cfg = ModelConfig::builtin("tiny", "consmax").unwrap();
+    let store = ParamStore::init(&cfg, 5).unwrap();
+
+    let mut solo = Generator::native(&cfg, &store, 0).unwrap();
+    let greedy_ref =
+        solo.generate_batch(&["steady prompt ".into()], 10, 0.0).unwrap();
+
+    let mut server = Server::new(Generator::native(&cfg, &store, 123).unwrap());
+    server.submit(GenRequest {
+        id: 0,
+        prompt: "hot prompt ".into(),
+        max_new_tokens: 10,
+        temperature: 5.0, // near-uniform sampling
+    });
+    server.submit(GenRequest {
+        id: 1,
+        prompt: "steady prompt ".into(),
+        max_new_tokens: 10,
+        temperature: 0.0, // greedy
+    });
+    let mut responses = server.run_to_completion().unwrap();
+    responses.sort_by_key(|r| r.id);
+    assert_eq!(responses.len(), 2);
+    assert_eq!(responses[0].batch_size, 2, "requests must share one batch");
+    assert_eq!(
+        responses[1].text, greedy_ref[0],
+        "greedy request was not decoded greedily"
+    );
+}
+
+#[test]
+fn token_space_accounting() {
+    let cfg = ModelConfig::builtin("tiny", "consmax").unwrap();
+    let store = ParamStore::init(&cfg, 5).unwrap();
+    let mut server = Server::new(Generator::native(&cfg, &store, 0).unwrap());
+
+    // multi-byte prompt: 21 chars but 25 UTF-8 bytes => 25 byte-tokens
+    let prompt = "héllo wörld — ConSmax".to_string();
+    assert_eq!(prompt.chars().count(), 21);
+    let prompt_bytes = prompt.len();
+    assert!(prompt_bytes > prompt.chars().count());
+    server.submit(GenRequest {
+        id: 0,
+        prompt,
+        max_new_tokens: 5,
+        temperature: 0.0,
+    });
+    let r = &server.run_to_completion().unwrap()[0];
+    assert_eq!(
+        r.prompt_tokens, prompt_bytes,
+        "prompt_tokens must count tokens (encoded bytes), not chars"
+    );
+    assert_eq!(r.new_tokens, 5, "new_tokens must count tokens");
+    assert_eq!(server.tokens_out, 5);
+
+    // over-long prompt reports the post-clamp length, not the byte count
+    let long = "z".repeat(cfg.ctx * 4);
+    server.submit(GenRequest {
+        id: 1,
+        prompt: long,
+        max_new_tokens: 8,
+        temperature: 0.0,
+    });
+    let r = &server.run_to_completion().unwrap()[0];
+    assert_eq!(r.prompt_tokens, cfg.ctx - 8);
+    assert_eq!(r.new_tokens, 8);
+}
+
+#[test]
+fn batched_decode_matches_per_row_sessions() {
+    // a 3-row DecodeSession must behave as three independent 1-row
+    // sessions (per-row lengths, no cross-row pollution), logits included
+    let m = tiny_model("softermax", 4);
+    let rows = [
+        vec![10, 20, 30, 40, 50],
+        vec![7],
+        vec![1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11],
+    ];
+
+    let mut batch_sess = DecodeSession::new(&m.cfg, 3);
+    let mut batch_logits =
+        m.prefill(&mut batch_sess, &rows).unwrap();
+    let v = m.cfg.vocab;
+
+    let mut solo_sessions: Vec<DecodeSession> =
+        (0..3).map(|_| DecodeSession::new(&m.cfg, 1)).collect();
+    for (r, row) in rows.iter().enumerate() {
+        let solo = m
+            .prefill(&mut solo_sessions[r], std::slice::from_ref(row))
+            .unwrap();
+        assert_eq!(
+            batch_logits[r * v..(r + 1) * v],
+            solo[..],
+            "row {r} prefill"
+        );
+    }
+
+    for step in 0..6 {
+        let toks: Vec<i32> = (0..3)
+            .map(|r| argmax(&batch_logits[r * v..(r + 1) * v]) as i32)
+            .collect();
+        batch_logits = m.decode_step(&mut batch_sess, &toks).unwrap();
+        for r in 0..3 {
+            let solo = m
+                .decode_step(&mut solo_sessions[r], &toks[r..r + 1])
+                .unwrap();
+            assert_eq!(
+                batch_logits[r * v..(r + 1) * v],
+                solo[..],
+                "row {r} step {step}"
+            );
+        }
+    }
+}
