@@ -3,12 +3,23 @@
 # points to HLO text + manifest + golden vectors for the PJRT backend.
 # The default Rust build needs none of this (see rust/README.md).
 
-.PHONY: artifacts build test bench fmt clippy python-test clean-artifacts
+.PHONY: artifacts bench-artifacts build test bench fmt clippy python-test clean-artifacts
 
 ARTIFACTS_DIR ?= ../rust/artifacts
+BENCH_JSON_DIR ?= rust/artifacts/bench
 
-artifacts:
+artifacts: bench-artifacts
 	cd python && python -m compile.aot --out $(ARTIFACTS_DIR)
+
+# Run the native perf benches (no Python needed) and collect their
+# machine-readable results next to the AOT artifacts. Both benches
+# enforce hard floors (KV >= 5x recompute; tiled matmul >= 2x naive), so
+# this target is also a perf regression gate.
+bench-artifacts:
+	cd rust && cargo bench --bench decode_bench && cargo bench --bench forward_bench
+	mkdir -p $(BENCH_JSON_DIR)
+	cp rust/BENCH_decode.json rust/BENCH_forward.json $(BENCH_JSON_DIR)/
+	cp rust/BENCH_decode_raw.jsonl rust/BENCH_forward_raw.jsonl $(BENCH_JSON_DIR)/
 
 build:
 	cd rust && cargo build --release

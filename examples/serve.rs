@@ -6,22 +6,41 @@
 //! bare checkout: no Python, no PJRT, no artifacts. (The PJRT serving
 //! path is reachable through `consmax serve-demo --backend pjrt`.)
 //!
-//! Run: `cargo run --release --example serve -- [requests] [max_new] [ckpt] [decode]`
+//! Run: `cargo run --release --example serve -- [requests] [max_new] [ckpt] [decode] [threads]`
 //! where `decode` is `kv` (default) or `recompute` (the O(T²) oracle,
 //! kept for A/B latency comparisons — see `cargo bench --bench
-//! decode_bench` for the measured gap). Uses runs/tiny_consmax.ckpt if
-//! present, otherwise serves from random weights (still exercises the
-//! full path).
+//! decode_bench` for the measured gap) and `threads` sizes the native
+//! worker pool (default: `CONSMAX_THREADS` or all cores; batched rows
+//! decode in parallel). Uses runs/tiny_consmax.ckpt if present,
+//! otherwise serves from random weights (still exercises the full
+//! path). `--help` prints this usage.
 
 use anyhow::Result;
 use consmax::config::ModelConfig;
 use consmax::coordinator::{
     DecodeMode, GenRequest, Generator, ParamStore, Server,
 };
+use consmax::runtime::parallel;
 use consmax::util::rng::Pcg32;
+
+const USAGE: &str = "\
+usage: serve [requests] [max_new] [ckpt] [decode] [threads]
+
+  requests  number of Poisson-arrival requests        (default 24)
+  max_new   tokens generated per request              (default 24)
+  ckpt      checkpoint path                           (default runs/tiny_consmax.ckpt)
+  decode    kv | recompute                            (default kv)
+  threads   native worker-pool size; rows of a batch
+            decode in parallel                        (default: CONSMAX_THREADS
+                                                       env var, else all cores)
+";
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().collect();
+    if args.iter().any(|a| a == "--help" || a == "-h") {
+        print!("{USAGE}");
+        return Ok(());
+    }
     let n_requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(24);
     let max_new: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(24);
     let ckpt = args
@@ -29,6 +48,16 @@ fn main() -> Result<()> {
         .cloned()
         .unwrap_or_else(|| "runs/tiny_consmax.ckpt".into());
     let mode = DecodeMode::parse(args.get(4).map(String::as_str).unwrap_or("kv"))?;
+    if let Some(raw) = args.get(5) {
+        match raw.parse::<usize>() {
+            Ok(n) if n >= 1 => parallel::set_threads(n),
+            _ => {
+                eprintln!("error: threads must be an integer >= 1, got {raw:?}\n");
+                eprint!("{USAGE}");
+                std::process::exit(2);
+            }
+        }
+    }
 
     let cfg = ModelConfig::builtin("tiny", "consmax")?;
     let store = if std::path::Path::new(&ckpt).exists() {
@@ -41,11 +70,12 @@ fn main() -> Result<()> {
 
     let generator = Generator::native_with(&cfg, &store, 7, mode)?;
     println!(
-        "model {}: ctx {}, {} decode, batches up to {}\n",
+        "model {}: ctx {}, {} decode, batches up to {}, {} threads\n",
         cfg.key,
         cfg.ctx,
         generator.decode_name(),
-        generator.max_batch()
+        generator.max_batch(),
+        parallel::current_threads()
     );
     let mut server = Server::new(generator);
 

@@ -1,0 +1,264 @@
+//! Native compute-layer throughput: naive vs cache-blocked matmul
+//! GFLOP/s, and prefill / decode thread-scaling — the measurable claims
+//! of the parallel-compute PR (EXPERIMENTS.md §Forward & prefill
+//! throughput).
+//!
+//! Run: `cargo bench --bench forward_bench` (no artifacts, no Python).
+//! Emits machine-readable results to `BENCH_forward.json` (raw timings
+//! to `BENCH_forward_raw.jsonl`) and exits non-zero if the tiled kernel
+//! fails to clear **2× naive GFLOP/s at d ≥ 256** — measured
+//! single-threaded, so the floor grades the kernel, not the pool. CI
+//! smoke-runs this so the artifact and the speedup claim cannot rot.
+//! Thread-scaling numbers are reported, not gated: they depend on the
+//! host's core count (recorded in the JSON).
+//!
+//! The bench also asserts the determinism contract inline: prefill and
+//! decode logits at 4 threads must be bit-identical to 1 thread.
+
+use std::time::Instant;
+
+use consmax::config::ModelConfig;
+use consmax::coordinator::ParamStore;
+use consmax::runtime::backend::{native, DecodeSession, NativeModel};
+use consmax::runtime::parallel;
+use consmax::util::bench::{print_table, Bencher};
+use consmax::util::json::Json;
+use consmax::util::rng::Pcg32;
+
+/// The tiled kernel must beat the naive oracle by this factor at d≥256.
+const MIN_TILED_SPEEDUP: f64 = 2.0;
+/// Worker counts for the scaling sweep.
+const THREADS: [usize; 3] = [1, 2, 4];
+/// Decode steps per timed repetition.
+const DECODE_STEPS: usize = 32;
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bencher::coarse();
+    let mut rng = Pcg32::seeded(0);
+
+    // ---- naive vs tiled matmul ---------------------------------------
+    let mut matmul_rows = Vec::new();
+    let mut matmul_cases = Vec::new();
+    let mut floor_ok = true;
+    for d in [64usize, 256] {
+        let (m, k, n) = (d, d, d);
+        let a = rng.normal_vec_f32(m * k, 0.0, 1.0);
+        let bmat = rng.normal_vec_f32(k * n, 0.0, 1.0);
+        let bt = native::transpose(&bmat, k, n);
+        let flops = (2 * m * k * n) as f64;
+
+        parallel::set_threads(1);
+        let naive = b
+            .bench(&format!("matmul naive {d}x{d}x{d}"), || {
+                native::matmul(&a, &bmat, m, k, n)
+            })
+            .clone();
+        let tiled = b
+            .bench(&format!("matmul tiled {d}x{d}x{d} (1 thread)"), || {
+                native::matmul_bt(&a, &bt, m, k, n)
+            })
+            .clone();
+        parallel::set_threads(0); // default: all cores / CONSMAX_THREADS
+        let tiled_mt = b
+            .bench(&format!("matmul tiled {d}x{d}x{d} (all cores)"), || {
+                native::matmul_bt(&a, &bt, m, k, n)
+            })
+            .clone();
+
+        // ns per iter -> GFLOP/s is flops/ns
+        let naive_gflops = flops / naive.median_ns;
+        let tiled_gflops = flops / tiled.median_ns;
+        let tiled_mt_gflops = flops / tiled_mt.median_ns;
+        let speedup = tiled_gflops / naive_gflops;
+        if d >= 256 {
+            floor_ok &= speedup >= MIN_TILED_SPEEDUP;
+        }
+        matmul_rows.push(vec![
+            format!("{d}"),
+            format!("{naive_gflops:.2}"),
+            format!("{tiled_gflops:.2}"),
+            format!("{tiled_mt_gflops:.2}"),
+            format!("{speedup:.1}x"),
+        ]);
+        matmul_cases.push(Json::from_pairs([
+            ("d".to_string(), Json::from(d)),
+            ("naive_gflops".to_string(), Json::from(naive_gflops)),
+            ("tiled_gflops_1t".to_string(), Json::from(tiled_gflops)),
+            ("tiled_gflops_mt".to_string(), Json::from(tiled_mt_gflops)),
+            ("tiled_vs_naive_1t".to_string(), Json::from(speedup)),
+        ]));
+    }
+    print_table(
+        "Matmul kernels (GFLOP/s; floor: tiled >= 2x naive at d>=256)",
+        &["d", "naive", "tiled 1t", "tiled mt", "tiled/naive (1t)"],
+        &matmul_rows,
+    );
+
+    // ---- model + workloads -------------------------------------------
+    let cfg = ModelConfig::builtin("tiny", "consmax")?;
+    let store = ParamStore::init(&cfg, 0)?;
+    let model = NativeModel::from_params(&cfg, &store.order, &store.params)?;
+    let v = cfg.vocab;
+    let batch = 8usize;
+
+    // prefill workload: near-ctx prompts, the serving entry shape
+    let prompt_len = cfg.ctx - 16;
+    let prefill_rows: Vec<Vec<i32>> = (0..batch)
+        .map(|r| {
+            (0..prompt_len)
+                .map(|i| ((i * 31 + r * 7 + 1) % 256) as i32)
+                .collect()
+        })
+        .collect();
+    let mut sess = DecodeSession::new(&cfg, batch);
+
+    // the determinism contract, asserted on the real model
+    parallel::set_threads(1);
+    let serial_logits = model.prefill(&mut sess, &prefill_rows)?;
+    parallel::set_threads(4);
+    let threaded_logits = model.prefill(&mut sess, &prefill_rows)?;
+    assert_eq!(
+        serial_logits, threaded_logits,
+        "threaded prefill is not bit-identical to single-thread"
+    );
+
+    let mut prefill_rows_out = Vec::new();
+    let mut prefill_cases = Vec::new();
+    let mut prefill_tok_s = Vec::new();
+    for &nt in &THREADS {
+        parallel::set_threads(nt);
+        let stats = b
+            .bench(&format!("prefill b{batch} x {prompt_len} toks ({nt} thr)"), || {
+                model.prefill(&mut sess, &prefill_rows).unwrap()
+            })
+            .clone();
+        let tok_s = stats.throughput((batch * prompt_len) as f64);
+        prefill_tok_s.push(tok_s);
+        prefill_rows_out.push(vec![format!("{nt}"), format!("{tok_s:.0}")]);
+        prefill_cases.push(Json::from_pairs([
+            ("threads".to_string(), Json::from(nt)),
+            ("tok_s".to_string(), Json::from(tok_s)),
+        ]));
+    }
+    let prefill_scaling = prefill_tok_s.last().unwrap() / prefill_tok_s[0];
+    print_table(
+        &format!("Prefill thread scaling (b{batch}, {prompt_len}-token prompts)"),
+        &["threads", "tok/s"],
+        &prefill_rows_out,
+    );
+    println!("prefill scaling at 4 threads: {prefill_scaling:.2}x over 1 thread");
+
+    // ---- decode scaling ----------------------------------------------
+    // short prompts + a 32-step greedy decode loop per repetition; only
+    // the decode portion is timed (prefill excluded)
+    let short_rows: Vec<Vec<i32>> =
+        (0..batch).map(|r| vec![(r as i32) + 5; 16]).collect();
+
+    // bit-identity across thread counts on the decode path too
+    let decode_trace = |threads: usize,
+                        sess: &mut DecodeSession|
+     -> anyhow::Result<Vec<f32>> {
+        parallel::set_threads(threads);
+        let mut trace = model.prefill(sess, &short_rows)?;
+        let mut last: Vec<i32> =
+            (0..batch).map(|r| argmax(&trace[r * v..(r + 1) * v]) as i32).collect();
+        for _ in 0..8 {
+            let logits = model.decode_step(sess, &last)?;
+            for r in 0..batch {
+                last[r] = argmax(&logits[r * v..(r + 1) * v]) as i32;
+            }
+            trace.extend_from_slice(&logits);
+        }
+        Ok(trace)
+    };
+    let t1 = decode_trace(1, &mut sess)?;
+    let t4 = decode_trace(4, &mut sess)?;
+    assert_eq!(t1, t4, "threaded decode is not bit-identical to single-thread");
+
+    let mut decode_rows_out = Vec::new();
+    let mut decode_cases = Vec::new();
+    let mut decode_tok_s = Vec::new();
+    for &nt in &THREADS {
+        parallel::set_threads(nt);
+        let mut timed_ns = 0.0f64;
+        let mut tokens = 0usize;
+        for _ in 0..5 {
+            model.prefill(&mut sess, &short_rows)?;
+            let mut last = vec![7i32; batch];
+            let t0 = Instant::now();
+            for _ in 0..DECODE_STEPS {
+                let logits = model.decode_step(&mut sess, &last)?;
+                for r in 0..batch {
+                    last[r] = argmax(&logits[r * v..(r + 1) * v]) as i32;
+                }
+            }
+            timed_ns += t0.elapsed().as_nanos() as f64;
+            tokens += batch * DECODE_STEPS;
+        }
+        let tok_s = tokens as f64 / (timed_ns * 1e-9);
+        decode_tok_s.push(tok_s);
+        decode_rows_out.push(vec![format!("{nt}"), format!("{tok_s:.0}")]);
+        decode_cases.push(Json::from_pairs([
+            ("threads".to_string(), Json::from(nt)),
+            ("tok_s".to_string(), Json::from(tok_s)),
+        ]));
+    }
+    parallel::set_threads(0);
+    let decode_scaling = decode_tok_s.last().unwrap() / decode_tok_s[0];
+    print_table(
+        &format!("KV-decode thread scaling (b{batch}, {DECODE_STEPS} steps)"),
+        &["threads", "tok/s"],
+        &decode_rows_out,
+    );
+    println!("decode scaling at 4 threads: {decode_scaling:.2}x over 1 thread");
+
+    let host_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let doc = Json::from_pairs([
+        ("bench".to_string(), Json::from("forward")),
+        ("config".to_string(), Json::from(cfg.key.as_str())),
+        ("ctx".to_string(), Json::from(cfg.ctx)),
+        ("batch".to_string(), Json::from(batch)),
+        ("host_threads".to_string(), Json::from(host_threads)),
+        (
+            "min_tiled_speedup_required".to_string(),
+            Json::from(MIN_TILED_SPEEDUP),
+        ),
+        ("tiled_floor_ok".to_string(), Json::from(floor_ok)),
+        ("matmul".to_string(), Json::Arr(matmul_cases)),
+        ("prefill".to_string(), Json::Arr(prefill_cases)),
+        ("prefill_scaling_4t".to_string(), Json::from(prefill_scaling)),
+        ("decode".to_string(), Json::Arr(decode_cases)),
+        ("decode_scaling_4t".to_string(), Json::from(decode_scaling)),
+        ("threaded_bit_identical".to_string(), Json::from(true)),
+    ]);
+    std::fs::write("BENCH_forward.json", doc.to_string())?;
+    b.save_json(std::path::Path::new("BENCH_forward_raw.jsonl"))?;
+    println!("\nwrote BENCH_forward.json (+ BENCH_forward_raw.jsonl)");
+
+    if prefill_scaling < 1.5 {
+        println!(
+            "note: prefill scaling {prefill_scaling:.2}x < 1.5x at 4 threads \
+             (host has {host_threads} cores; not gated)"
+        );
+    }
+    if !floor_ok {
+        eprintln!(
+            "FAIL: tiled matmul did not clear the {MIN_TILED_SPEEDUP}x \
+             GFLOP/s floor over naive at d >= 256 (see table above)"
+        );
+        std::process::exit(1);
+    }
+    Ok(())
+}

@@ -9,9 +9,13 @@
 //! * **native** — KV-cached incremental decode over a
 //!   [`DecodeSession`] (one O(T) step per token); always available,
 //!   needs no artifacts. `consmax serve-demo --backend native` runs
-//!   end-to-end on a machine with nothing but this crate. The O(T²)
-//!   recompute decoder is kept as the reference oracle and reachable
-//!   with `--decode recompute` ([`DecodeMode`]).
+//!   end-to-end on a machine with nothing but this crate. Rows of a
+//!   batch decode **in parallel** across the worker pool
+//!   (`runtime::parallel`, sized by `--threads` / `CONSMAX_THREADS`)
+//!   with an allocation-free per-row compute path and identical
+//!   logits at any thread count. The O(T²) recompute decoder is kept
+//!   as the reference oracle and reachable with `--decode recompute`
+//!   ([`DecodeMode`]).
 //! * **pjrt** (`--features pjrt`) — KV-cached decode over the AOT
 //!   `decode_b{N}` executables, parameters uploaded to device buffers
 //!   once at construction.
@@ -41,8 +45,10 @@ use crate::runtime::{Engine, HostTensor};
 use crate::util::rng::Pcg32;
 
 /// Largest batch the native decode engine serves at once (a knob, not
-/// an export constraint like the PJRT decode artifacts).
-pub const NATIVE_MAX_BATCH: usize = 8;
+/// an export constraint like the PJRT decode artifacts). Sized for the
+/// threaded decode loop: rows are the unit of parallelism, so wider
+/// batches keep every worker busy.
+pub const NATIVE_MAX_BATCH: usize = 16;
 
 /// Which native decode engine drives generation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

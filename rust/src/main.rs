@@ -43,6 +43,7 @@ fn specs() -> Vec<Spec> {
     vec![
         Spec::opt_default("backend", "auto", "execution backend (native|pjrt|auto)"),
         Spec::opt_default("decode", "kv", "native decode engine (kv|recompute)"),
+        Spec::opt("threads", "native worker threads (default: CONSMAX_THREADS or all cores)"),
         Spec::opt_default("artifacts", "artifacts", "artifacts directory (pjrt)"),
         Spec::opt_default("config", "tiny", "model config (tiny|paper)"),
         Spec::opt_default("normalizer", "consmax", "softmax|consmax|softermax"),
@@ -81,6 +82,20 @@ fn main() {
             std::process::exit(2);
         }
     };
+    // install the worker-pool size before any backend work runs:
+    // --threads beats CONSMAX_THREADS beats available_parallelism
+    match args.get_opt_usize("threads") {
+        Ok(None) => {}
+        Ok(Some(0)) => {
+            eprintln!("error: --threads must be >= 1");
+            std::process::exit(2);
+        }
+        Ok(Some(n)) => consmax::runtime::parallel::set_threads(n),
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    }
     if args.has_flag("help") || args.subcommand.is_none() {
         print!(
             "{}",
@@ -485,11 +500,13 @@ fn serve_demo_over(mut server: Server<'_>, args: &Args) -> Result<()> {
     let wall = t0.elapsed().as_secs_f64();
     println!(
         "served {} requests in {wall:.2}s ({:.1} tok/s) on the {} backend \
-         ({} decode); latency p50 {:.0} ms p95 {:.0} ms (batch sizes up to {})",
+         ({} decode, {} threads); latency p50 {:.0} ms p95 {:.0} ms \
+         (batch sizes up to {})",
         responses.len(),
         server.tokens_out as f64 / wall,
         server.generator.backend_name(),
         server.generator.decode_name(),
+        consmax::runtime::parallel::current_threads(),
         server.latencies.percentile(50.0).unwrap_or(0.0) / 1e3,
         server.latencies.percentile(95.0).unwrap_or(0.0) / 1e3,
         server.generator.max_batch(),

@@ -1,8 +1,11 @@
 //! Per-batch decode state for the native KV-cached decode engine.
 //!
 //! A [`DecodeSession`] holds per-layer K/V caches sized
-//! `[n_layer, b, n_head, ctx, head_dim]` plus the per-row bookkeeping
-//! that makes batched serving correct:
+//! `[b, n_layer, n_head, ctx, head_dim]` — **batch-major**, so each
+//! row's entire cache is one contiguous run and a batch splits into
+//! disjoint [`RowMut`] views that decode in parallel across the worker
+//! pool (`runtime::parallel`) — plus the per-row bookkeeping that makes
+//! batched serving correct:
 //!
 //! * **per-row true lengths** — rows of a batch prefill at their own
 //!   prompt length and attend only to their own cached positions, so a
@@ -16,7 +19,16 @@
 //!   semantics of the recompute oracle `NativeModel::next_logits`). The
 //!   ring makes that re-encode self-contained. Within `ctx` — the whole
 //!   serving regime, since prompts are clamped to `ctx - max_new` — a
-//!   decode step is a single O(len) incremental pass per token.
+//!   decode step is a single O(len) incremental pass per token;
+//! * **per-row scratch arenas** ([`RowScratch`]) — every activation
+//!   buffer a decode step needs (embedding, LN, QKV, head outputs,
+//!   score row, MLP hidden), sized once at session creation. The
+//!   per-row compute path (`NativeModel::decode_token_into`) performs
+//!   **zero heap allocations per token**: it reads weights, writes the
+//!   row's cache slots and scratch, and emits logits straight into the
+//!   caller's output slice. (Per *step*, the engine still allocates
+//!   the returned `(b, vocab)` logits buffer and the O(b) row-view
+//!   list — output, not workspace.)
 //!
 //! The session owns no parameters; [`NativeModel::prefill`] and
 //! [`NativeModel::decode_step`] drive it.
@@ -28,6 +40,55 @@ use std::collections::VecDeque;
 
 use crate::config::ModelConfig;
 
+/// Offset of the `head_dim` run for (layer, head, slot) inside one
+/// row's `[n_layer, n_head, ctx, head_dim]` cache block.
+#[inline]
+pub(crate) fn kv_offset(
+    n_head: usize,
+    ctx: usize,
+    head_dim: usize,
+    l: usize,
+    h: usize,
+    slot: usize,
+) -> usize {
+    ((l * n_head + h) * ctx + slot) * head_dim
+}
+
+/// Pre-sized activation buffers for one row's incremental decode step.
+/// Allocated once per session row; reused every token.
+pub(crate) struct RowScratch {
+    /// Residual stream for the new token (`n_embd`).
+    pub x: Vec<f32>,
+    /// LayerNorm output, also reused for the final LN (`n_embd`).
+    pub xn: Vec<f32>,
+    /// Fused QKV projection of the new token (`3 * n_embd`).
+    pub qkv: Vec<f32>,
+    /// Concatenated attention head outputs (`n_embd`).
+    pub y: Vec<f32>,
+    /// Score row over cached positions (`ctx`; softmax/softermax only —
+    /// the ConSmax path streams and never materializes it).
+    pub srow: Vec<f32>,
+    /// MLP hidden activations (`4 * n_embd`).
+    pub hid: Vec<f32>,
+    /// Attention/MLP projection output (`n_embd`).
+    pub proj: Vec<f32>,
+}
+
+impl RowScratch {
+    fn new(cfg: &ModelConfig) -> RowScratch {
+        let d = cfg.n_embd;
+        RowScratch {
+            x: vec![0.0; d],
+            xn: vec![0.0; d],
+            qkv: vec![0.0; 3 * d],
+            y: vec![0.0; d],
+            srow: vec![0.0; cfg.ctx],
+            hid: vec![0.0; 4 * d],
+            proj: vec![0.0; d],
+        }
+    }
+}
+
 /// KV caches + per-row lengths for one decode batch.
 pub struct DecodeSession {
     b: usize,
@@ -35,14 +96,67 @@ pub struct DecodeSession {
     pub(crate) n_layer: usize,
     pub(crate) n_head: usize,
     pub(crate) head_dim: usize,
-    /// Cached keys, `[n_layer, b, n_head, ctx, head_dim]` row-major.
-    pub(crate) k: Vec<f32>,
+    /// Cached keys, `[b, n_layer, n_head, ctx, head_dim]` row-major.
+    k: Vec<f32>,
     /// Cached values, same layout as `k`.
-    pub(crate) v: Vec<f32>,
+    v: Vec<f32>,
     /// Valid cached positions per row (`<= ctx`).
     len: Vec<usize>,
     /// Last `ctx` token ids per row (window re-encode on eviction).
     history: Vec<VecDeque<i32>>,
+    /// Per-row activation arenas for the zero-alloc decode step.
+    scratch: Vec<RowScratch>,
+}
+
+/// Mutable view of one row of a [`DecodeSession`]: its contiguous K/V
+/// block, length, history ring and scratch arena. Rows are disjoint, so
+/// a batch of `RowMut`s decodes in parallel with no shared state.
+pub(crate) struct RowMut<'a> {
+    pub ctx: usize,
+    pub n_head: usize,
+    pub head_dim: usize,
+    /// This row's keys, `[n_layer, n_head, ctx, head_dim]` row-major.
+    pub k: &'a mut [f32],
+    /// This row's values, same layout as `k`.
+    pub v: &'a mut [f32],
+    /// Valid cached positions (`<= ctx`).
+    pub len: &'a mut usize,
+    /// Token window, oldest first.
+    pub history: &'a mut VecDeque<i32>,
+    /// The row's activation arena.
+    pub scratch: &'a mut RowScratch,
+}
+
+impl RowMut<'_> {
+    /// Start offset of the `head_dim` run for (layer, head, slot).
+    pub(crate) fn kv_start(&self, l: usize, h: usize, slot: usize) -> usize {
+        kv_offset(self.n_head, self.ctx, self.head_dim, l, h, slot)
+    }
+
+    /// Reset to a fresh window of tokens (history only; the caches are
+    /// overwritten by the subsequent captured forward).
+    pub(crate) fn reset(&mut self, window: &[i32]) {
+        debug_assert!(window.len() <= self.ctx);
+        *self.len = 0;
+        self.history.clear();
+        self.history.extend(window.iter().copied());
+    }
+
+    /// Append a token to the history ring, evicting the oldest entry
+    /// once the ring holds `ctx` tokens. Never reallocates: the ring is
+    /// built with `ctx` capacity.
+    pub(crate) fn push_history(&mut self, tok: i32) {
+        if self.history.len() == self.ctx {
+            self.history.pop_front();
+        }
+        self.history.push_back(tok);
+    }
+
+    /// The current token window, oldest first (eviction re-encode only
+    /// — the steady-state step never calls this).
+    pub(crate) fn history_vec(&self) -> Vec<i32> {
+        self.history.iter().copied().collect()
+    }
 }
 
 impl DecodeSession {
@@ -51,7 +165,7 @@ impl DecodeSession {
     ///
     /// [`NativeModel::prefill`]: super::NativeModel::prefill
     pub fn new(cfg: &ModelConfig, b: usize) -> DecodeSession {
-        let elems = cfg.n_layer * b * cfg.n_head * cfg.ctx * cfg.head_dim();
+        let elems = b * cfg.n_layer * cfg.n_head * cfg.ctx * cfg.head_dim();
         DecodeSession {
             b,
             ctx: cfg.ctx,
@@ -62,6 +176,7 @@ impl DecodeSession {
             v: vec![0.0; elems],
             len: vec![0; b],
             history: (0..b).map(|_| VecDeque::with_capacity(cfg.ctx)).collect(),
+            scratch: (0..b).map(|_| RowScratch::new(cfg)).collect(),
         }
     }
 
@@ -75,37 +190,32 @@ impl DecodeSession {
         self.len[r]
     }
 
-    /// Start offset of the `head_dim` run for (layer, row, head, slot).
-    pub(crate) fn kv_start(&self, l: usize, r: usize, h: usize, slot: usize) -> usize {
-        (((l * self.b + r) * self.n_head + h) * self.ctx + slot) * self.head_dim
-    }
-
-    pub(crate) fn set_len(&mut self, r: usize, len: usize) {
-        debug_assert!(len <= self.ctx);
-        self.len[r] = len;
-    }
-
-    /// Reset row `r` to a fresh window of tokens (history only; the
-    /// caches are overwritten by the subsequent captured forward).
-    pub(crate) fn reset_row(&mut self, r: usize, window: &[i32]) {
-        debug_assert!(window.len() <= self.ctx);
-        self.len[r] = 0;
-        self.history[r].clear();
-        self.history[r].extend(window.iter().copied());
-    }
-
-    /// Append a token to row `r`'s history ring, evicting the oldest
-    /// entry once the ring holds `ctx` tokens.
-    pub(crate) fn push_history(&mut self, r: usize, tok: i32) {
-        if self.history[r].len() == self.ctx {
-            self.history[r].pop_front();
+    /// Split the session into disjoint per-row mutable views — the unit
+    /// of parallelism for batched prefill and decode.
+    pub(crate) fn rows_mut(&mut self) -> Vec<RowMut<'_>> {
+        let per = self.n_layer * self.n_head * self.ctx * self.head_dim;
+        let (ctx, n_head, head_dim) = (self.ctx, self.n_head, self.head_dim);
+        let mut rows = Vec::with_capacity(self.b);
+        for ((((k, v), len), history), scratch) in self
+            .k
+            .chunks_mut(per)
+            .zip(self.v.chunks_mut(per))
+            .zip(self.len.iter_mut())
+            .zip(self.history.iter_mut())
+            .zip(self.scratch.iter_mut())
+        {
+            rows.push(RowMut {
+                ctx,
+                n_head,
+                head_dim,
+                k,
+                v,
+                len,
+                history,
+                scratch,
+            });
         }
-        self.history[r].push_back(tok);
-    }
-
-    /// Row `r`'s current token window, oldest first.
-    pub(crate) fn history_row(&self, r: usize) -> Vec<i32> {
-        self.history[r].iter().copied().collect()
+        rows
     }
 }
 
@@ -120,43 +230,74 @@ mod tests {
         assert_eq!(s.batch(), 3);
         assert_eq!(
             s.k.len(),
-            cfg.n_layer * 3 * cfg.n_head * cfg.ctx * cfg.head_dim()
+            3 * cfg.n_layer * cfg.n_head * cfg.ctx * cfg.head_dim()
         );
         assert_eq!(s.k.len(), s.v.len());
         for r in 0..3 {
             assert_eq!(s.len_of(r), 0);
         }
+        // scratch arenas pre-sized for the zero-alloc decode step
+        for sc in &s.scratch {
+            assert_eq!(sc.x.len(), cfg.n_embd);
+            assert_eq!(sc.qkv.len(), 3 * cfg.n_embd);
+            assert_eq!(sc.srow.len(), cfg.ctx);
+            assert_eq!(sc.hid.len(), 4 * cfg.n_embd);
+        }
     }
 
     #[test]
-    fn kv_start_is_dense_and_disjoint() {
+    fn row_views_are_contiguous_and_dense() {
         let cfg = ModelConfig::builtin("tiny", "consmax").unwrap();
-        let s = DecodeSession::new(&cfg, 2);
+        let mut s = DecodeSession::new(&cfg, 2);
         let hd = cfg.head_dim();
-        let mut seen = std::collections::BTreeSet::new();
-        for l in 0..cfg.n_layer {
-            for r in 0..2 {
+        let per = cfg.n_layer * cfg.n_head * cfg.ctx * hd;
+        let rows = s.rows_mut();
+        assert_eq!(rows.len(), 2);
+        for row in &rows {
+            assert_eq!(row.k.len(), per);
+            assert_eq!(row.v.len(), per);
+            // kv_start covers the row's block densely and disjointly
+            let mut seen = std::collections::BTreeSet::new();
+            for l in 0..cfg.n_layer {
                 for h in 0..cfg.n_head {
                     for slot in 0..cfg.ctx {
-                        let start = s.kv_start(l, r, h, slot);
-                        assert!(start + hd <= s.k.len());
+                        let start = row.kv_start(l, h, slot);
+                        assert!(start + hd <= per);
                         assert!(seen.insert(start), "overlap at {start}");
                     }
                 }
             }
+            assert_eq!(seen.len() * hd, per);
         }
-        assert_eq!(seen.len() * hd, s.k.len());
+    }
+
+    #[test]
+    fn row_writes_land_in_their_own_block() {
+        let cfg = ModelConfig::builtin("tiny", "consmax").unwrap();
+        let mut s = DecodeSession::new(&cfg, 2);
+        {
+            let mut rows = s.rows_mut();
+            rows[0].k[0] = 1.0;
+            let last = rows[1].k.len() - 1;
+            rows[1].k[last] = 2.0;
+            *rows[1].len = 5;
+        }
+        assert_eq!(s.k[0], 1.0);
+        assert_eq!(*s.k.last().unwrap(), 2.0);
+        assert_eq!(s.len_of(0), 0);
+        assert_eq!(s.len_of(1), 5);
     }
 
     #[test]
     fn history_ring_evicts_oldest() {
         let cfg = ModelConfig::builtin("tiny", "consmax").unwrap();
         let mut s = DecodeSession::new(&cfg, 1);
-        s.reset_row(0, &[1, 2, 3]);
+        let mut rows = s.rows_mut();
+        rows[0].reset(&[1, 2, 3]);
         for t in 4..=(cfg.ctx as i32 + 3) {
-            s.push_history(0, t);
+            rows[0].push_history(t);
         }
-        let h = s.history_row(0);
+        let h = rows[0].history_vec();
         assert_eq!(h.len(), cfg.ctx);
         assert_eq!(h[0], 4); // 1, 2, 3 evicted
         assert_eq!(*h.last().unwrap(), cfg.ctx as i32 + 3);

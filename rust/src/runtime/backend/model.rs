@@ -9,6 +9,18 @@
 //! same probabilities the inference form `C·exp(s)` produces once β/γ are
 //! merged (asserted in `native.rs` tests).
 //!
+//! The compute layer is parallel and cache-blocked (DESIGN.md
+//! §Parallel-compute seam): weight matrices are pre-transposed once at
+//! load so every matmul is a unit-stride [`native::matmul_bt_into`];
+//! attention fans out over (batch-row × head) tiles; prefill and decode
+//! fan out over batch rows; the LM head splits across vocab chunks. For
+//! **ConSmax** the attention inner loop streams score→C·exp→PV per key
+//! with no materialized probability row — the paper's reduction-freeness
+//! carried into software — while softmax/softermax must collect each
+//! score row before normalizing. Thread count never changes results:
+//! every output element is produced by one serial reduction in a fixed
+//! order (`rust/tests/parallel_equivalence.rs`).
+//!
 //! This is a forward-only model (no autodiff): training still goes
 //! through the AOT `train_step` under `--features pjrt`. Decoding has two
 //! faces:
@@ -20,25 +32,37 @@
 //!   via `--decode recompute`.
 //! * [`NativeModel::prefill`] + [`NativeModel::decode_step`] — the
 //!   **KV-cached engine** over a [`DecodeSession`]: one O(T) incremental
-//!   pass per token, per-row true lengths (no left-pad pollution), and —
-//!   because ConSmax has no row max/sum — a single fused
-//!   score→prob→PV accumulation per cached key in the consmax case.
-//!   Both paths produce bitwise-identical logits: they run the same
-//!   kernels over the same values in the same order.
+//!   pass per token against per-row scratch arenas (zero heap
+//!   allocations per steady-state token), per-row true lengths (no
+//!   left-pad pollution), rows decoded in parallel. Both paths produce
+//!   bitwise-identical logits: they run the same kernels over the same
+//!   values in the same order.
 
 use std::collections::BTreeMap;
 
 use anyhow::{bail, ensure, Result};
 
 use crate::config::ModelConfig;
+use crate::runtime::backend::decode::{kv_offset, RowMut};
 use crate::runtime::backend::native;
 use crate::runtime::backend::DecodeSession;
+use crate::runtime::parallel;
 use crate::runtime::HostTensor;
+
+/// The stacked per-layer weight matrices that get a pre-transposed twin
+/// at load time (their per-layer dims come from `n_embd`).
+const TRANSPOSED: [&str; 4] =
+    ["attn_qkv_w", "attn_proj_w", "mlp_fc_w", "mlp_proj_w"];
 
 /// A model with host-resident f32 parameters, ready for forward passes.
 pub struct NativeModel {
     pub cfg: ModelConfig,
     params: BTreeMap<String, Vec<f32>>,
+    /// The matrices in [`TRANSPOSED`], re-packed per layer as
+    /// `[l, dout, din]` so every matmul streams both operands with unit
+    /// stride ([`native::matmul_bt_into`]). These live *only* here —
+    /// the untransposed originals are dropped from `params` at load.
+    params_t: BTreeMap<String, Vec<f32>>,
 }
 
 impl NativeModel {
@@ -82,7 +106,37 @@ impl NativeModel {
                 "consmax model needs beta/gamma params"
             );
         }
-        Ok(NativeModel { cfg: cfg.clone(), params })
+
+        // Pre-transpose the four per-layer weight matrices once, so the
+        // hot loops never touch a strided operand. (`wte` needs no twin:
+        // the tied LM head wants it exactly as stored, `(vocab, d)`.)
+        let d = cfg.n_embd;
+        let dims = |name: &str| -> (usize, usize) {
+            match name {
+                "attn_qkv_w" => (d, 3 * d),
+                "attn_proj_w" => (d, d),
+                "mlp_fc_w" => (d, 4 * d),
+                _ => (4 * d, d), // mlp_proj_w
+            }
+        };
+        let mut params_t = BTreeMap::new();
+        for name in TRANSPOSED {
+            let (din, dout) = dims(name);
+            // move the original out: these four matrices are only ever
+            // read transposed, so keeping both copies would double the
+            // model's largest weights in memory
+            let src = params.remove(name).expect("validated above");
+            let mut packed = Vec::with_capacity(src.len());
+            for l in 0..cfg.n_layer {
+                packed.extend_from_slice(&native::transpose(
+                    &src[l * din * dout..(l + 1) * din * dout],
+                    din,
+                    dout,
+                ));
+            }
+            params_t.insert(name.to_string(), packed);
+        }
+        Ok(NativeModel { cfg: cfg.clone(), params, params_t })
     }
 
     fn p(&self, name: &str) -> &[f32] {
@@ -93,6 +147,12 @@ impl NativeModel {
     /// Per-layer slice of a stacked parameter (leading axis = layer).
     fn layer<'a>(&'a self, name: &str, l: usize, per: usize) -> &'a [f32] {
         &self.p(name)[l * per..(l + 1) * per]
+    }
+
+    /// Per-layer slice of a pre-transposed stacked weight.
+    fn layer_t<'a>(&'a self, name: &str, l: usize, per: usize) -> &'a [f32] {
+        let t = self.params_t.get(name).map(Vec::as_slice).unwrap_or(&[]);
+        &t[l * per..(l + 1) * per]
     }
 
     /// Per-layer β scalars (empty for softmax/softermax models).
@@ -123,17 +183,17 @@ impl NativeModel {
     /// * `last_only` — emit logits for each row's final position only
     ///   (b, vocab), skipping the (b, t, vocab) LM-head matmul that
     ///   evaluation needs but decoding discards.
-    /// * `capture` — `(session, row)`: store every layer's K/V segments
-    ///   into the session's caches at slots `0..t` for that row (b must
-    ///   be 1). This is how `prefill` fills a `DecodeSession` with
-    ///   exactly the values a plain forward would compute.
+    /// * `capture` — a session row view: store every layer's K/V
+    ///   segments into the row's cache at slots `0..t` (b must be 1).
+    ///   This is how `prefill` fills a `DecodeSession` with exactly the
+    ///   values a plain forward would compute.
     fn forward_impl(
         &self,
         tokens: &[i32],
         b: usize,
         t: usize,
         last_only: bool,
-        mut capture: Option<(&mut DecodeSession, usize)>,
+        mut capture: Option<&mut RowMut<'_>>,
     ) -> Result<Vec<f32>> {
         let cfg = &self.cfg;
         let (d, h, hd, v) = (cfg.n_embd, cfg.n_head, cfg.head_dim(), cfg.vocab);
@@ -165,6 +225,8 @@ impl NativeModel {
             }
         }
 
+        let is_consmax = cfg.normalizer == "consmax";
+        let is_softermax = cfg.normalizer == "softermax";
         let scale = 1.0 / (hd as f32).sqrt();
         for l in 0..cfg.n_layer {
             // ---- attention block (pre-LN) -----------------------------
@@ -174,71 +236,107 @@ impl NativeModel {
                 self.layer("ln1_b", l, d),
                 d,
             );
-            let qkv = affine(
+            let mut qkv = vec![0.0f32; rows * 3 * d];
+            affine_into(
                 &xn,
-                self.layer("attn_qkv_w", l, d * 3 * d),
+                self.layer_t("attn_qkv_w", l, d * 3 * d),
                 self.layer("attn_qkv_b", l, 3 * d),
                 rows,
                 d,
                 3 * d,
+                &mut qkv,
             );
-            if let Some((sess, row)) = capture.as_mut() {
-                let row = *row;
+            if let Some(row) = capture.as_deref_mut() {
                 for i in 0..t {
                     for hh in 0..h {
-                        let kb = sess.kv_start(l, row, hh, i);
+                        let kb = row.kv_start(l, hh, i);
                         let ko = i * 3 * d + d + hh * hd;
-                        sess.k[kb..kb + hd].copy_from_slice(&qkv[ko..ko + hd]);
+                        row.k[kb..kb + hd].copy_from_slice(&qkv[ko..ko + hd]);
                         let vo = ko + d;
-                        sess.v[kb..kb + hd].copy_from_slice(&qkv[vo..vo + hd]);
+                        row.v[kb..kb + hd].copy_from_slice(&qkv[vo..vo + hd]);
                     }
                 }
             }
             let beta = self.beta_row(l);
             let gamma = self.gamma_row(l);
 
-            let mut y = vec![0.0f32; rows * d];
-            for r in 0..b {
-                for hh in 0..h {
+            // Causal attention, parallel over (row, head) pairs: each
+            // pair owns one (t, head_dim) output tile. Omitting j > i is
+            // the -inf mask (exp(-inf) = 0 in every normalizer).
+            // ConSmax streams score→C·exp→PV per key — no probability
+            // row ever exists — while softmax/softermax collect the
+            // score row first because their normalizers reduce over it.
+            let mut yh = vec![0.0f32; b * h * t * hd];
+            {
+                let qkv = &qkv;
+                parallel::par_chunks_mut(&mut yh, t * hd, |pair, tile| {
+                    let (r, hh) = (pair / h, pair % h);
+                    let mut srow: Vec<f32> = Vec::new();
                     for i in 0..t {
                         let qoff = (r * t + i) * 3 * d + hh * hd;
-                        // causal scores over keys j <= i; omitting j > i is
-                        // the -inf mask (exp(-inf) = 0 in every normalizer)
-                        let mut srow = Vec::with_capacity(i + 1);
-                        for j in 0..=i {
-                            let koff = (r * t + j) * 3 * d + d + hh * hd;
-                            let mut acc = 0.0f32;
-                            for e in 0..hd {
-                                acc += qkv[qoff + e] * qkv[koff + e];
+                        let q = &qkv[qoff..qoff + hd];
+                        if is_consmax {
+                            let (bh, gh) = (beta[hh], gamma[hh]);
+                            for j in 0..=i {
+                                let koff = (r * t + j) * 3 * d + d + hh * hd;
+                                let sc =
+                                    native::dot(q, &qkv[koff..koff + hd]) * scale;
+                                let pj = (sc - bh).exp() / gh;
+                                let yrow = &mut tile[i * hd..(i + 1) * hd];
+                                let vrow = &qkv[koff + d..koff + d + hd];
+                                for (o, &vv) in yrow.iter_mut().zip(vrow) {
+                                    *o += pj * vv;
+                                }
                             }
-                            srow.push(acc * scale);
-                        }
-                        let probs = match cfg.normalizer.as_str() {
-                            "consmax" => {
-                                native::consmax_train(&srow, beta[hh], gamma[hh])
+                        } else {
+                            srow.clear();
+                            for j in 0..=i {
+                                let koff = (r * t + j) * 3 * d + d + hh * hd;
+                                srow.push(
+                                    native::dot(q, &qkv[koff..koff + hd]) * scale,
+                                );
                             }
-                            "softermax" => {
-                                native::softermax_rows(&srow, srow.len())
+                            if is_softermax {
+                                native::softermax_inplace(&mut srow);
+                            } else {
+                                native::softmax_inplace(&mut srow);
                             }
-                            _ => native::softmax_rows(&srow, srow.len()),
-                        };
-                        let ooff = (r * t + i) * d + hh * hd;
-                        for (j, &pj) in probs.iter().enumerate() {
-                            let voff = (r * t + j) * 3 * d + 2 * d + hh * hd;
-                            for e in 0..hd {
-                                y[ooff + e] += pj * qkv[voff + e];
+                            for (j, &pj) in srow.iter().enumerate() {
+                                let voff = (r * t + j) * 3 * d + 2 * d + hh * hd;
+                                let yrow = &mut tile[i * hd..(i + 1) * hd];
+                                let vrow = &qkv[voff..voff + hd];
+                                for (o, &vv) in yrow.iter_mut().zip(vrow) {
+                                    *o += pj * vv;
+                                }
                             }
                         }
                     }
+                });
+            }
+
+            // gather the head tiles back into the (rows, d) layout
+            let mut y = vec![0.0f32; rows * d];
+            for r in 0..b {
+                for hh in 0..h {
+                    let base = (r * h + hh) * t * hd;
+                    let tile = &yh[base..base + t * hd];
+                    for i in 0..t {
+                        let ooff = (r * t + i) * d + hh * hd;
+                        y[ooff..ooff + hd]
+                            .copy_from_slice(&tile[i * hd..(i + 1) * hd]);
+                    }
                 }
             }
-            let proj = affine(
+
+            let mut proj = vec![0.0f32; rows * d];
+            affine_into(
                 &y,
-                self.layer("attn_proj_w", l, d * d),
+                self.layer_t("attn_proj_w", l, d * d),
                 self.layer("attn_proj_b", l, d),
                 rows,
                 d,
                 d,
+                &mut proj,
             );
             for (xv, pv) in x.iter_mut().zip(&proj) {
                 *xv += pv;
@@ -251,24 +349,28 @@ impl NativeModel {
                 self.layer("ln2_b", l, d),
                 d,
             );
-            let mut hid = affine(
+            let mut hid = vec![0.0f32; rows * 4 * d];
+            affine_into(
                 &xn2,
-                self.layer("mlp_fc_w", l, d * 4 * d),
+                self.layer_t("mlp_fc_w", l, d * 4 * d),
                 self.layer("mlp_fc_b", l, 4 * d),
                 rows,
                 d,
                 4 * d,
+                &mut hid,
             );
             for hv in hid.iter_mut() {
                 *hv = gelu(*hv);
             }
-            let mo = affine(
+            let mut mo = vec![0.0f32; rows * d];
+            affine_into(
                 &hid,
-                self.layer("mlp_proj_w", l, 4 * d * d),
+                self.layer_t("mlp_proj_w", l, 4 * d * d),
                 self.layer("mlp_proj_b", l, d),
                 rows,
                 4 * d,
                 d,
+                &mut mo,
             );
             for (xv, mv) in x.iter_mut().zip(&mo) {
                 *xv += mv;
@@ -276,26 +378,23 @@ impl NativeModel {
         }
 
         let xf = layer_norm(&x, self.p("lnf_g"), self.p("lnf_b"), d);
-        // tied LM head: logits = xf @ wte^T
-        let src_rows: Vec<usize> = if last_only {
-            (0..b).map(|r| r * t + (t - 1)).collect()
-        } else {
-            (0..rows).collect()
-        };
-        let mut logits = vec![0.0f32; src_rows.len() * v];
-        for (o, &sr) in src_rows.iter().enumerate() {
-            let xr = &xf[sr * d..(sr + 1) * d];
-            let lr = &mut logits[o * v..(o + 1) * v];
-            for (vv, ov) in lr.iter_mut().enumerate() {
-                let wr = &wte[vv * d..(vv + 1) * d];
-                let mut acc = 0.0f32;
-                for e in 0..d {
-                    acc += xr[e] * wr[e];
-                }
-                *ov = acc;
+        // tied LM head: logits = xf @ wte^T — `wte` (vocab, d) is
+        // already the transposed operand `matmul_bt` wants; the kernel
+        // splits the work over rows, or vocab chunks when b == 1
+        if last_only {
+            let mut sel = vec![0.0f32; b * d];
+            for r in 0..b {
+                let sr = r * t + (t - 1);
+                sel[r * d..(r + 1) * d].copy_from_slice(&xf[sr * d..(sr + 1) * d]);
             }
+            let mut logits = vec![0.0f32; b * v];
+            native::matmul_bt_into(&sel, wte, b, d, v, &mut logits);
+            Ok(logits)
+        } else {
+            let mut logits = vec![0.0f32; rows * v];
+            native::matmul_bt_into(&xf, wte, rows, d, v, &mut logits);
+            Ok(logits)
         }
-        Ok(logits)
     }
 
     /// Mean next-token cross-entropy over a flat (b, t) batch, matching
@@ -354,8 +453,10 @@ impl NativeModel {
     /// Encode each row's prompt into the session (resetting it) and
     /// return next-token logits (b, vocab). Rows may have **different
     /// lengths** — each prefills at its own true length, so no padding
-    /// token is ever attended to. Prompts longer than `ctx` are clamped
-    /// to their trailing window, matching [`NativeModel::next_logits`].
+    /// token is ever attended to — and prefill **in parallel** (each row
+    /// is an independent captured forward). Prompts longer than `ctx`
+    /// are clamped to their trailing window, matching
+    /// [`NativeModel::next_logits`].
     pub fn prefill(
         &self,
         sess: &mut DecodeSession,
@@ -368,16 +469,45 @@ impl NativeModel {
             sess.batch()
         );
         self.check_session(sess)?;
-        let v = self.cfg.vocab;
-        let mut out = Vec::with_capacity(rows.len() * v);
         for (r, seq) in rows.iter().enumerate() {
             ensure!(!seq.is_empty(), "prefill: row {r} is empty");
-            let w = seq.len().min(self.cfg.ctx);
-            let window = &seq[seq.len() - w..];
-            sess.reset_row(r, window);
-            let logits = self.forward_impl(window, 1, w, true, Some((&mut *sess, r)))?;
-            sess.set_len(r, w);
-            out.extend_from_slice(&logits);
+        }
+        let v = self.cfg.vocab;
+        let ctx = self.cfg.ctx;
+        let mut out = vec![0.0f32; rows.len() * v];
+
+        struct Work<'a> {
+            row: RowMut<'a>,
+            logits: &'a mut [f32],
+            seq: &'a [i32],
+            err: Option<anyhow::Error>,
+        }
+        let mut items: Vec<Work<'_>> = sess
+            .rows_mut()
+            .into_iter()
+            .zip(out.chunks_mut(v))
+            .zip(rows)
+            .map(|((row, logits), seq)| Work {
+                row,
+                logits,
+                seq: seq.as_slice(),
+                err: None,
+            })
+            .collect();
+        parallel::par_items(&mut items, |_, it| {
+            let w = it.seq.len().min(ctx);
+            let window = &it.seq[it.seq.len() - w..];
+            it.row.reset(window);
+            match self.forward_impl(window, 1, w, true, Some(&mut it.row)) {
+                Ok(logits) => {
+                    it.logits.copy_from_slice(&logits);
+                    *it.row.len = w;
+                }
+                Err(e) => it.err = Some(e),
+            }
+        });
+        if let Some(e) = items.into_iter().find_map(|it| it.err) {
+            return Err(e);
         }
         Ok(out)
     }
@@ -393,12 +523,16 @@ impl NativeModel {
         self.decode_step_active(sess, tokens, &active)
     }
 
-    /// Advance the active rows of the session by one token each; returns
-    /// logits (b, vocab) with inactive rows zero-filled.
+    /// Advance the active rows of the session by one token each — **in
+    /// parallel** across rows; returns logits (b, vocab) with inactive
+    /// rows zero-filled.
     ///
-    /// The common case is one O(len) incremental pass per row. A row
-    /// whose cache is full (`len == ctx`) evicts its oldest token from
-    /// the history ring and re-encodes the shifted window — absolute
+    /// The common case is one O(len) incremental pass per row against
+    /// the row's scratch arena (no allocation in the per-row compute;
+    /// the step allocates only the returned logits buffer and the O(b)
+    /// row-view scaffolding). A row whose
+    /// cache is full (`len == ctx`) evicts its oldest token from the
+    /// history ring and re-encodes the shifted window — absolute
     /// positional embeddings make the remaining cached K/V stale — which
     /// is exactly the oracle's trailing-window recompute for that step.
     pub fn decode_step_active(
@@ -417,7 +551,8 @@ impl NativeModel {
         self.check_session(sess)?;
         let v = self.cfg.vocab;
         let ctx = self.cfg.ctx;
-        let mut out = vec![0.0f32; sess.batch() * v];
+        // validate everything up front so the parallel region can't
+        // leave a half-mutated batch behind a mid-batch error
         for (r, (&tok, &is_active)) in tokens.iter().zip(active).enumerate() {
             if !is_active {
                 continue;
@@ -427,176 +562,205 @@ impl NativeModel {
                 (0..v as i32).contains(&tok),
                 "token id {tok} outside vocab {v}"
             );
-            sess.push_history(r, tok);
-            let row_logits = if sess.len_of(r) == ctx {
+        }
+        let mut out = vec![0.0f32; sess.batch() * v];
+
+        struct Work<'a> {
+            row: RowMut<'a>,
+            logits: &'a mut [f32],
+            tok: i32,
+            err: Option<anyhow::Error>,
+        }
+        let mut items: Vec<Work<'_>> = Vec::new();
+        for (((row, logits), &tok), &is_active) in sess
+            .rows_mut()
+            .into_iter()
+            .zip(out.chunks_mut(v))
+            .zip(tokens)
+            .zip(active)
+        {
+            if is_active {
+                items.push(Work { row, logits, tok, err: None });
+            }
+        }
+        parallel::par_items(&mut items, |_, it| {
+            it.row.push_history(it.tok);
+            if *it.row.len == ctx {
                 // eviction: re-encode the shifted window from slot 0
-                let window = sess.history_row(r);
-                self.forward_impl(&window, 1, ctx, true, Some((&mut *sess, r)))?
+                let window = it.row.history_vec();
+                match self.forward_impl(&window, 1, ctx, true, Some(&mut it.row))
+                {
+                    Ok(logits) => it.logits.copy_from_slice(&logits),
+                    Err(e) => it.err = Some(e),
+                }
             } else {
-                self.decode_token(sess, r, tok)?
-            };
-            out[r * v..(r + 1) * v].copy_from_slice(&row_logits);
+                self.decode_token_into(&mut it.row, it.tok, &mut it.logits[..]);
+            }
+        });
+        if let Some(e) = items.into_iter().find_map(|it| it.err) {
+            return Err(e);
         }
         Ok(out)
     }
 
-    /// One incremental decode pass for row `r`: append K/V for `tok` at
-    /// the next cache slot and attend over the row's cached positions.
-    /// Performs the same float ops in the same order as `forward_impl`,
-    /// so the logits are bitwise identical to a window recompute.
-    fn decode_token(
-        &self,
-        sess: &mut DecodeSession,
-        r: usize,
-        tok: i32,
-    ) -> Result<Vec<f32>> {
+    /// One incremental decode pass for a session row: append K/V for
+    /// `tok` at the next cache slot and attend over the row's cached
+    /// positions, entirely against the row's pre-sized scratch arena —
+    /// no heap allocation anywhere on this path. Performs the same float
+    /// ops in the same order as `forward_impl`, so the logits are
+    /// bitwise identical to a window recompute.
+    fn decode_token_into(&self, row: &mut RowMut<'_>, tok: i32, out: &mut [f32]) {
         let cfg = &self.cfg;
         let (d, h, hd, v) = (cfg.n_embd, cfg.n_head, cfg.head_dim(), cfg.vocab);
-        let pos = sess.len_of(r);
-        debug_assert!(pos < cfg.ctx);
+        let ctx = cfg.ctx;
+        let pos = *row.len;
+        debug_assert!(pos < ctx);
+        debug_assert_eq!(out.len(), v);
 
         let wte = self.p("wte");
         let wpe = self.p("wpe");
-        let mut x = vec![0.0f32; d];
+        let is_consmax = cfg.normalizer == "consmax";
+        let is_softermax = cfg.normalizer == "softermax";
+        let scale = 1.0 / (hd as f32).sqrt();
+
+        let s = &mut *row.scratch;
         {
             let te = &wte[tok as usize * d..(tok as usize + 1) * d];
             let pe = &wpe[pos * d..(pos + 1) * d];
-            for ((o, &a), &p) in x.iter_mut().zip(te).zip(pe) {
+            for ((o, &a), &p) in s.x.iter_mut().zip(te).zip(pe) {
                 *o = a + p;
             }
         }
 
-        let scale = 1.0 / (hd as f32).sqrt();
         for l in 0..cfg.n_layer {
             // ---- attention block (pre-LN) -----------------------------
-            let xn = layer_norm(
-                &x,
+            layer_norm_into(
+                &s.x,
                 self.layer("ln1_g", l, d),
                 self.layer("ln1_b", l, d),
                 d,
+                &mut s.xn,
             );
-            let qkv = affine(
-                &xn,
-                self.layer("attn_qkv_w", l, d * 3 * d),
+            affine_into(
+                &s.xn,
+                self.layer_t("attn_qkv_w", l, d * 3 * d),
                 self.layer("attn_qkv_b", l, 3 * d),
                 1,
                 d,
                 3 * d,
+                &mut s.qkv,
             );
             // append this token's K/V at slot `pos`
             for hh in 0..h {
-                let kb = sess.kv_start(l, r, hh, pos);
+                let kb = kv_offset(h, ctx, hd, l, hh, pos);
                 let ko = d + hh * hd;
-                sess.k[kb..kb + hd].copy_from_slice(&qkv[ko..ko + hd]);
+                row.k[kb..kb + hd].copy_from_slice(&s.qkv[ko..ko + hd]);
                 let vo = ko + d;
-                sess.v[kb..kb + hd].copy_from_slice(&qkv[vo..vo + hd]);
+                row.v[kb..kb + hd].copy_from_slice(&s.qkv[vo..vo + hd]);
             }
             let beta = self.beta_row(l);
             let gamma = self.gamma_row(l);
 
-            let mut y = vec![0.0f32; d];
+            s.y.fill(0.0);
             for hh in 0..h {
-                let q = &qkv[hh * hd..(hh + 1) * hd];
-                if cfg.normalizer == "consmax" {
-                    // ConSmax has no row max/sum (the paper's point), so
-                    // score → prob → PV fuses into one pass per cached
-                    // key, exactly like the `op_consmax_pv` kernel.
+                let q = &s.qkv[hh * hd..(hh + 1) * hd];
+                if is_consmax {
+                    // ConSmax has no row max/sum (the paper's point):
+                    // score → C·exp → PV streams per cached key, exactly
+                    // the fused loop of the batched forward.
                     let (bh, gh) = (beta[hh], gamma[hh]);
                     for j in 0..=pos {
-                        let kb = sess.kv_start(l, r, hh, j);
-                        let mut acc = 0.0f32;
-                        for e in 0..hd {
-                            acc += q[e] * sess.k[kb + e];
-                        }
-                        let pj = (acc * scale - bh).exp() / gh;
-                        for e in 0..hd {
-                            y[hh * hd + e] += pj * sess.v[kb + e];
+                        let kb = kv_offset(h, ctx, hd, l, hh, j);
+                        let sc = native::dot(q, &row.k[kb..kb + hd]) * scale;
+                        let pj = (sc - bh).exp() / gh;
+                        let yrow = &mut s.y[hh * hd..(hh + 1) * hd];
+                        for (o, &vv) in yrow.iter_mut().zip(&row.v[kb..kb + hd]) {
+                            *o += pj * vv;
                         }
                     }
                 } else {
-                    // softmax/softermax reduce over the whole row first
-                    let mut srow = Vec::with_capacity(pos + 1);
+                    // softmax/softermax reduce over the whole row first,
+                    // into the row's scratch score buffer
                     for j in 0..=pos {
-                        let kb = sess.kv_start(l, r, hh, j);
-                        let mut acc = 0.0f32;
-                        for e in 0..hd {
-                            acc += q[e] * sess.k[kb + e];
-                        }
-                        srow.push(acc * scale);
+                        let kb = kv_offset(h, ctx, hd, l, hh, j);
+                        s.srow[j] = native::dot(q, &row.k[kb..kb + hd]) * scale;
                     }
-                    let probs = if cfg.normalizer == "softermax" {
-                        native::softermax_rows(&srow, srow.len())
+                    if is_softermax {
+                        native::softermax_inplace(&mut s.srow[..=pos]);
                     } else {
-                        native::softmax_rows(&srow, srow.len())
-                    };
-                    for (j, &pj) in probs.iter().enumerate() {
-                        let kb = sess.kv_start(l, r, hh, j);
-                        for e in 0..hd {
-                            y[hh * hd + e] += pj * sess.v[kb + e];
+                        native::softmax_inplace(&mut s.srow[..=pos]);
+                    }
+                    for j in 0..=pos {
+                        let pj = s.srow[j];
+                        let kb = kv_offset(h, ctx, hd, l, hh, j);
+                        let yrow = &mut s.y[hh * hd..(hh + 1) * hd];
+                        for (o, &vv) in yrow.iter_mut().zip(&row.v[kb..kb + hd]) {
+                            *o += pj * vv;
                         }
                     }
                 }
             }
-            let proj = affine(
-                &y,
-                self.layer("attn_proj_w", l, d * d),
+            affine_into(
+                &s.y,
+                self.layer_t("attn_proj_w", l, d * d),
                 self.layer("attn_proj_b", l, d),
                 1,
                 d,
                 d,
+                &mut s.proj,
             );
-            for (xv, pv) in x.iter_mut().zip(&proj) {
+            for (xv, pv) in s.x.iter_mut().zip(s.proj.iter()) {
                 *xv += pv;
             }
 
             // ---- MLP block (pre-LN) -----------------------------------
-            let xn2 = layer_norm(
-                &x,
+            layer_norm_into(
+                &s.x,
                 self.layer("ln2_g", l, d),
                 self.layer("ln2_b", l, d),
                 d,
+                &mut s.xn,
             );
-            let mut hid = affine(
-                &xn2,
-                self.layer("mlp_fc_w", l, d * 4 * d),
+            affine_into(
+                &s.xn,
+                self.layer_t("mlp_fc_w", l, d * 4 * d),
                 self.layer("mlp_fc_b", l, 4 * d),
                 1,
                 d,
                 4 * d,
+                &mut s.hid,
             );
-            for hv in hid.iter_mut() {
+            for hv in s.hid.iter_mut() {
                 *hv = gelu(*hv);
             }
-            let mo = affine(
-                &hid,
-                self.layer("mlp_proj_w", l, 4 * d * d),
+            affine_into(
+                &s.hid,
+                self.layer_t("mlp_proj_w", l, 4 * d * d),
                 self.layer("mlp_proj_b", l, d),
                 1,
                 4 * d,
                 d,
+                &mut s.proj,
             );
-            for (xv, mv) in x.iter_mut().zip(&mo) {
+            for (xv, mv) in s.x.iter_mut().zip(s.proj.iter()) {
                 *xv += mv;
             }
         }
 
-        let xf = layer_norm(&x, self.p("lnf_g"), self.p("lnf_b"), d);
-        let mut logits = vec![0.0f32; v];
-        for (vv, ov) in logits.iter_mut().enumerate() {
-            let wr = &wte[vv * d..(vv + 1) * d];
-            let mut acc = 0.0f32;
-            for e in 0..d {
-                acc += xf[e] * wr[e];
-            }
-            *ov = acc;
-        }
-        sess.set_len(r, pos + 1);
-        Ok(logits)
+        layer_norm_into(&s.x, self.p("lnf_g"), self.p("lnf_b"), d, &mut s.xn);
+        // vocab-chunked LM head straight into the caller's logits row
+        native::matmul_bt_into(&s.xn, wte, 1, d, v, out);
+        *row.len = pos + 1;
     }
 }
 
 fn layer_norm(x: &[f32], g: &[f32], b: &[f32], d: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; x.len()];
+    layer_norm_into(x, g, b, d, &mut out);
+    out
+}
+
+fn layer_norm_into(x: &[f32], g: &[f32], b: &[f32], d: usize, out: &mut [f32]) {
     for (row_in, row_out) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
         let mu = row_in.iter().sum::<f32>() / d as f32;
         let var =
@@ -608,24 +772,25 @@ fn layer_norm(x: &[f32], g: &[f32], b: &[f32], d: usize) -> Vec<f32> {
             *o = (v - mu) * inv * gg + bb;
         }
     }
-    out
 }
 
-fn affine(
+/// `out = x @ wt^T + bias` with `wt` pre-transposed to `(dout, din)`:
+/// the tiled parallel kernel plus a serial bias add.
+fn affine_into(
     x: &[f32],
-    w: &[f32],
+    wt: &[f32],
     bias: &[f32],
     rows: usize,
     din: usize,
     dout: usize,
-) -> Vec<f32> {
-    let mut out = native::matmul(x, w, rows, din, dout);
+    out: &mut [f32],
+) {
+    native::matmul_bt_into(x, wt, rows, din, dout, out);
     for row in out.chunks_exact_mut(dout) {
         for (o, &bv) in row.iter_mut().zip(bias) {
             *o += bv;
         }
     }
-    out
 }
 
 /// Tanh-approximate GELU, matching `jax.nn.gelu` (approximate=True).
@@ -639,8 +804,7 @@ mod tests {
     use super::*;
     use crate::util::rng::Pcg32;
 
-    fn tiny_model(normalizer: &str) -> NativeModel {
-        let cfg = ModelConfig::builtin("tiny", normalizer).unwrap();
+    fn tiny_tensors(cfg: &ModelConfig) -> Vec<HostTensor> {
         let mut rng = Pcg32::seeded(7);
         let mut tensors = Vec::new();
         for name in cfg.param_order.clone() {
@@ -655,6 +819,12 @@ mod tests {
             };
             tensors.push(HostTensor::from_f32(&vals, &shape));
         }
+        tensors
+    }
+
+    fn tiny_model(normalizer: &str) -> NativeModel {
+        let cfg = ModelConfig::builtin("tiny", normalizer).unwrap();
+        let tensors = tiny_tensors(&cfg);
         NativeModel::from_params(&cfg, &cfg.param_order, &tensors).unwrap()
     }
 
@@ -783,5 +953,31 @@ mod tests {
         assert_eq!(sess.len_of(1), 2); // untouched
         assert!(out[v..].iter().all(|&x| x == 0.0)); // zero-filled row
         assert!(out[..v].iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn transposed_weights_match_originals() {
+        // params_t really is the per-layer transpose of the input weights
+        // (the untransposed originals are dropped from the model at load)
+        let cfg = ModelConfig::builtin("tiny", "consmax").unwrap();
+        let tensors = tiny_tensors(&cfg);
+        let idx = cfg
+            .param_order
+            .iter()
+            .position(|n| n == "attn_qkv_w")
+            .unwrap();
+        let original = tensors[idx].as_f32().unwrap();
+        let m = NativeModel::from_params(&cfg, &cfg.param_order, &tensors).unwrap();
+        let d = cfg.n_embd;
+        let (din, dout) = (d, 3 * d);
+        for l in 0..cfg.n_layer {
+            let w = &original[l * din * dout..(l + 1) * din * dout];
+            let wt = m.layer_t("attn_qkv_w", l, din * dout);
+            for i in 0..din {
+                for j in 0..dout {
+                    assert_eq!(w[i * dout + j], wt[j * din + i], "l{l} ({i},{j})");
+                }
+            }
+        }
     }
 }

@@ -13,6 +13,15 @@
 //! The LUT op reuses [`BitSplitLut`], so the native backend and the
 //! bit-exact hardware model can be cross-validated by construction
 //! (`rust/tests/native_backend.rs`).
+//!
+//! Matrix kernels come in two tiers: [`matmul`] is the naive
+//! triple-loop **oracle** (single-threaded, unblocked, kept for tests
+//! and the op-level `op_consmax_pv`), while [`matmul_bt`] /
+//! [`matmul_bt_into`] are the production kernel — B pre-transposed so
+//! both operands stream with unit stride, an 8-accumulator unrolled
+//! [`dot`] inner loop, cache blocking over column tiles, and work
+//! fanned out over `runtime::parallel`. Thread-count never changes
+//! results: each output element is one serial [`dot`].
 
 use anyhow::{bail, ensure, Result};
 
@@ -133,22 +142,46 @@ pub fn softermax_rows(s: &[f32], row: usize) -> Vec<f32> {
     reduce_rows(s, row, f32::exp2)
 }
 
+/// In-place numerically-stable softmax over one score row.
+pub fn softmax_inplace(row: &mut [f32]) {
+    normalize_inplace(row, f32::exp);
+}
+
+/// In-place softermax (base-2 softmax) over one score row.
+pub fn softermax_inplace(row: &mut [f32]) {
+    normalize_inplace(row, f32::exp2);
+}
+
+/// The shared two-pass row reduction: max, then `e(x - m)` accumulating
+/// the sum in the same pass, then divide. Writes probabilities over the
+/// scores — no temporary buffer, and a fixed serial reduction order so
+/// results never depend on how callers partition rows across threads.
+fn normalize_inplace(row: &mut [f32], e: fn(f32) -> f32) {
+    let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    if m == f32::NEG_INFINITY {
+        // fully-masked row: every score is -inf, so `x - m` would be
+        // NaN. The masked-attention convention is an all-zero row
+        // (no key receives any weight), matching ConSmax where
+        // exp(-inf) = 0 element-wise.
+        row.fill(0.0);
+        return;
+    }
+    let mut sum = 0.0f32;
+    for x in row.iter_mut() {
+        *x = e(*x - m);
+        sum += *x;
+    }
+    for x in row.iter_mut() {
+        *x /= sum;
+    }
+}
+
 fn reduce_rows(s: &[f32], row: usize, e: fn(f32) -> f32) -> Vec<f32> {
     assert!(row > 0 && s.len() % row == 0, "bad row length {row}");
-    let mut out = Vec::with_capacity(s.len());
-    for chunk in s.chunks_exact(row) {
-        let m = chunk.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        if m == f32::NEG_INFINITY {
-            // fully-masked row: every score is -inf, so `x - m` would be
-            // NaN. The masked-attention convention is an all-zero row
-            // (no key receives any weight), matching ConSmax where
-            // exp(-inf) = 0 element-wise.
-            out.resize(out.len() + row, 0.0);
-            continue;
-        }
-        let exps: Vec<f32> = chunk.iter().map(|&x| e(x - m)).collect();
-        let sum: f32 = exps.iter().sum();
-        out.extend(exps.iter().map(|&x| x / sum));
+    // one output allocation; each row normalized in place within it
+    let mut out = s.to_vec();
+    for chunk in out.chunks_exact_mut(row) {
+        normalize_inplace(chunk, e);
     }
     out
 }
@@ -165,6 +198,13 @@ pub fn lut_consmax_bits(q: &[i8], c: &[f32]) -> Vec<u16> {
 }
 
 /// Naive row-major matmul: `a (m,k) @ b (k,n) -> (m,n)`.
+///
+/// Kept single-threaded and unblocked as the test oracle for
+/// [`matmul_bt`]. The inner loop is branch-free: the old
+/// `if av == 0.0 { continue; }` skip only paid off on the probs@V call
+/// (causal zeros), which the fused streaming PV path in the model now
+/// supersedes — and the branch defeated autovectorization everywhere
+/// else.
 pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
@@ -173,9 +213,6 @@ pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
         let arow = &a[i * k..(i + 1) * k];
         let orow = &mut out[i * n..(i + 1) * n];
         for (kk, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
             let brow = &b[kk * n..(kk + 1) * n];
             for (o, &bv) in orow.iter_mut().zip(brow) {
                 *o += av * bv;
@@ -183,6 +220,125 @@ pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
         }
     }
     out
+}
+
+/// Unrolled dot product with 8 independent accumulators, so LLVM can
+/// keep 8 FMA lanes in flight. The accumulation order is a pure
+/// function of the input length — every caller (batched forward,
+/// prefill capture, incremental decode, the LM head) sums the same
+/// values in the same order, which is what makes KV-decode logits
+/// bitwise identical to the recompute oracle's.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 8];
+    let a_whole = a.chunks_exact(8);
+    let b_whole = b.chunks_exact(8);
+    let a_rest = a_whole.remainder();
+    let b_rest = b_whole.remainder();
+    for (ca, cb) in a_whole.zip(b_whole) {
+        for (lane, (&x, &y)) in acc.iter_mut().zip(ca.iter().zip(cb)) {
+            *lane += x * y;
+        }
+    }
+    let mut s = ((acc[0] + acc[1]) + (acc[2] + acc[3]))
+        + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    for (&x, &y) in a_rest.iter().zip(b_rest) {
+        s += x * y;
+    }
+    s
+}
+
+/// Transpose a row-major `(rows, cols)` matrix into `(cols, rows)` —
+/// how `NativeModel` pre-packs its weight matrices once at load so
+/// every matmul runs over unit-stride rows of both operands.
+pub fn transpose(m: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    debug_assert_eq!(m.len(), rows * cols);
+    let mut out = vec![0.0f32; m.len()];
+    for r in 0..rows {
+        for c in 0..cols {
+            out[c * rows + r] = m[r * cols + c];
+        }
+    }
+    out
+}
+
+/// `a (m,k) @ bt^T -> (m,n)` where `bt` is B **pre-transposed** to
+/// `(n,k)` row-major: the cache-blocked, multi-accumulator production
+/// kernel. See [`matmul_bt_into`].
+pub fn matmul_bt(a: &[f32], bt: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    matmul_bt_into(a, bt, m, k, n, &mut out);
+    out
+}
+
+/// Multiply-accumulate count below which forking workers costs more
+/// than it saves. Scoped spawn+join runs tens of microseconds, so the
+/// bar is high enough that single-row decode-time matmuls at small
+/// model sizes stay serial while prefill/eval-sized calls fan out.
+const PAR_MIN_MACS: usize = 1 << 18;
+
+/// Output-column tile width: one tile of `bt` rows stays hot in cache
+/// while a block of `a` rows streams over it.
+const COL_TILE: usize = 32;
+
+/// [`matmul_bt`] into a caller-owned buffer (the zero-allocation decode
+/// hot path). Both operands are read with unit stride ([`dot`]), the
+/// output is cache-blocked over column tiles, and the work is
+/// partitioned across the worker pool — by output rows when there are
+/// several, by output columns for single-row (decode-time) calls. Every
+/// output element is one serial [`dot`], so results are bit-identical
+/// for every thread count.
+pub fn matmul_bt_into(
+    a: &[f32],
+    bt: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(bt.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    if out.is_empty() {
+        return;
+    }
+    let threads = crate::runtime::parallel::current_threads();
+    if threads <= 1 || m * k * n < PAR_MIN_MACS {
+        matmul_bt_block(a, bt, k, n, out);
+        return;
+    }
+    if m == 1 {
+        // one output row: partition its columns (the LM-head shape)
+        crate::runtime::parallel::par_row_blocks(out, 1, |j0, cols| {
+            for (jj, o) in cols.iter_mut().enumerate() {
+                let j = j0 + jj;
+                *o = dot(a, &bt[j * k..(j + 1) * k]);
+            }
+        });
+    } else {
+        crate::runtime::parallel::par_row_blocks(out, n, |i0, rows| {
+            let m_block = rows.len() / n;
+            matmul_bt_block(&a[i0 * k..(i0 + m_block) * k], bt, k, n, rows);
+        });
+    }
+}
+
+/// Serial cache-blocked core: out rows × column tiles of `bt`.
+fn matmul_bt_block(a: &[f32], bt: &[f32], k: usize, n: usize, out: &mut [f32]) {
+    let m = out.len() / n;
+    let mut jb = 0;
+    while jb < n {
+        let je = (jb + COL_TILE).min(n);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n + jb..i * n + je];
+            for (o, j) in orow.iter_mut().zip(jb..je) {
+                *o = dot(arow, &bt[j * k..(j + 1) * k]);
+            }
+        }
+        jb = je;
+    }
 }
 
 fn one<'a>(op: &str, inputs: &'a [HostTensor]) -> Result<&'a HostTensor> {
@@ -350,5 +506,70 @@ mod tests {
         let a = vec![1.0f32, 2.0, 3.0, 4.0]; // 2x2
         let id = vec![1.0f32, 0.0, 0.0, 1.0];
         assert_eq!(matmul(&a, &id, 2, 2, 2), a);
+        assert_eq!(matmul_bt(&a, &id, 2, 2, 2), a); // id^T == id
+    }
+
+    #[test]
+    fn dot_matches_serial_sum_closely() {
+        // lengths around the 8-lane boundary, incl. the remainder path
+        for len in [0usize, 1, 7, 8, 9, 31, 64, 100] {
+            let a: Vec<f32> = (0..len).map(|i| (i as f32) * 0.25 - 3.0).collect();
+            let b: Vec<f32> = (0..len).map(|i| 1.5 - (i as f32) * 0.125).collect();
+            let want: f64 = a
+                .iter()
+                .zip(&b)
+                .map(|(&x, &y)| (x as f64) * (y as f64))
+                .sum();
+            let got = dot(&a, &b) as f64;
+            assert!(
+                (got - want).abs() <= 1e-3 * want.abs().max(1.0),
+                "len {len}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrips() {
+        let m: Vec<f32> = (0..6).map(|i| i as f32).collect(); // 2x3
+        let t = transpose(&m, 2, 3); // 3x2
+        assert_eq!(t, vec![0.0, 3.0, 1.0, 4.0, 2.0, 5.0]);
+        assert_eq!(transpose(&t, 3, 2), m);
+    }
+
+    #[test]
+    fn tiled_matmul_matches_naive_oracle() {
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::seeded(3);
+        // odd sizes exercise column-tile and unroll remainders
+        for (m, k, n) in [(1usize, 64usize, 256usize), (5, 33, 70), (8, 64, 64)] {
+            let a = rng.normal_vec_f32(m * k, 0.0, 1.0);
+            let b = rng.normal_vec_f32(k * n, 0.0, 1.0);
+            let bt = transpose(&b, k, n);
+            let want = matmul(&a, &b, m, k, n);
+            let got = matmul_bt(&a, &bt, m, k, n);
+            assert_eq!(got.len(), want.len());
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                let denom = g.abs().max(w.abs()).max(1.0);
+                assert!(
+                    (g - w).abs() / denom <= 1e-5,
+                    "({m},{k},{n})[{i}]: {g} vs {w}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn inplace_normalizers_match_row_variants() {
+        let s = vec![0.3f32, -1.0, 2.5, 0.0, 4.0, -2.0];
+        for (rows, inplace) in [
+            (softmax_rows(&s, 3), softmax_inplace as fn(&mut [f32])),
+            (softermax_rows(&s, 3), softermax_inplace as fn(&mut [f32])),
+        ] {
+            let mut chunks = s.clone();
+            for chunk in chunks.chunks_exact_mut(3) {
+                inplace(chunk);
+            }
+            assert_eq!(rows, chunks); // bit-identical, not just close
+        }
     }
 }

@@ -21,8 +21,14 @@
 //! is selected; training requires the AOT `train_step` and therefore the
 //! `pjrt` feature, while evaluation, generation and serving also run on
 //! the native backend.
+//!
+//! [`parallel`] is the native compute layer's std-only worker pool
+//! (`--threads` / `CONSMAX_THREADS`); its determinism contract — thread
+//! count never changes results — is documented there and in DESIGN.md
+//! §Parallel-compute seam.
 
 pub mod backend;
+pub mod parallel;
 pub mod tensor;
 
 #[cfg(feature = "pjrt")]

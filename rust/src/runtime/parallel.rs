@@ -1,0 +1,263 @@
+//! Std-only data-parallel substrate for the native compute layer.
+//!
+//! ConSmax's pitch is that the normalizer is reduction-free, so the
+//! score→prob→PV stream parallelizes without synchronization (paper
+//! §III). This module is the crate's only parallelism primitive: a
+//! scoped fork-join pool built on `std::thread::scope` — no external
+//! deps, nothing vendored — that the native kernels
+//! (`runtime/backend/native.rs`) and the model/decode hot paths
+//! (`runtime/backend/{model,decode}.rs`) fan work out over.
+//!
+//! **Pool ownership.** There is no long-lived pool object: each `par_*`
+//! call forks scoped workers and joins them before returning, so
+//! borrowed inputs (`&[f32]` weights, `&mut [f32]` outputs) flow into
+//! workers without `Arc` or cloning. The calling thread runs the first
+//! block itself, so `N` configured threads means `N` busy cores, not
+//! `N + 1`. Nested `par_*` calls from inside a worker run serially (a
+//! thread-local guard), so composing a parallel outer loop (batch rows)
+//! with parallel inner kernels (matmuls) never over-subscribes.
+//!
+//! **Determinism contract.** Partitioning only decides *who* computes an
+//! element, never *how*: every output element is produced by exactly one
+//! worker running the exact serial code, and no reduction is ever split
+//! across workers. Results are therefore bit-identical for every thread
+//! count — pinned by `rust/tests/parallel_equivalence.rs` and the
+//! `CONSMAX_THREADS=1` CI leg.
+//!
+//! **Sizing.** `--threads N` on the CLI (via [`set_threads`]) wins over
+//! the `CONSMAX_THREADS` environment variable, which wins over
+//! `std::thread::available_parallelism`.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Runtime override installed by `--threads` (0 = unset).
+static OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+/// Process-wide default, resolved once from the environment.
+static DEFAULT: OnceLock<usize> = OnceLock::new();
+
+thread_local! {
+    /// Set inside pool workers so nested `par_*` calls run serially.
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Resets the calling thread's in-pool flag even on unwind.
+struct PoolGuard;
+
+impl Drop for PoolGuard {
+    fn drop(&mut self) {
+        IN_POOL.with(|c| c.set(false));
+    }
+}
+
+fn default_threads() -> usize {
+    *DEFAULT.get_or_init(|| {
+        std::env::var("CONSMAX_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1)
+            })
+    })
+}
+
+/// Install a process-wide worker count (the `--threads` knob). `0`
+/// restores the default (`CONSMAX_THREADS` / available parallelism).
+pub fn set_threads(n: usize) {
+    OVERRIDE.store(n, Ordering::SeqCst);
+}
+
+/// The worker count `par_*` calls will use from the calling thread.
+/// Always 1 inside a pool worker (nested parallelism serializes).
+pub fn current_threads() -> usize {
+    if IN_POOL.with(Cell::get) {
+        return 1;
+    }
+    match OVERRIDE.load(Ordering::SeqCst) {
+        0 => default_threads(),
+        n => n,
+    }
+}
+
+/// Split `data` into one contiguous block of whole rows per worker and
+/// run `f(first_row_index, block)` on each block in parallel. Blocks
+/// are balanced to within one row; with one thread (or one row) this is
+/// exactly a serial call `f(0, data)`.
+///
+/// `data.len()` must be a whole number of rows of `row_len` elements.
+pub fn par_row_blocks<T, F>(data: &mut [T], row_len: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(row_len > 0, "row_len must be positive");
+    assert_eq!(
+        data.len() % row_len,
+        0,
+        "data ({}) is not a whole number of rows of {row_len}",
+        data.len()
+    );
+    let n_rows = data.len() / row_len;
+    if n_rows == 0 {
+        return;
+    }
+    let threads = current_threads().min(n_rows);
+    if threads <= 1 {
+        f(0, data);
+        return;
+    }
+
+    // Carve the data into `threads` balanced runs of whole rows.
+    let base = n_rows / threads;
+    let extra = n_rows % threads;
+    let mut blocks: Vec<(usize, &mut [T])> = Vec::with_capacity(threads);
+    let mut rest = data;
+    let mut first_row = 0usize;
+    for t in 0..threads {
+        let rows = base + usize::from(t < extra);
+        let taken = std::mem::take(&mut rest);
+        let (head, tail) = taken.split_at_mut(rows * row_len);
+        rest = tail;
+        blocks.push((first_row, head));
+        first_row += rows;
+    }
+
+    let f = &f;
+    std::thread::scope(|scope| {
+        let mut blocks = blocks.into_iter();
+        let own = blocks.next().expect("threads >= 2 implies a first block");
+        for (start, block) in blocks {
+            scope.spawn(move || {
+                IN_POOL.with(|c| c.set(true));
+                f(start, block);
+            });
+        }
+        // The caller works too, flagged so nested calls stay serial.
+        IN_POOL.with(|c| c.set(true));
+        let _guard = PoolGuard;
+        f(own.0, own.1);
+    });
+}
+
+/// Run `f(chunk_index, chunk)` over consecutive `chunk_len`-element
+/// chunks of `data`, distributing chunks across workers in contiguous
+/// runs. `data.len()` must be a multiple of `chunk_len`.
+pub fn par_chunks_mut<T, F>(data: &mut [T], chunk_len: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    par_row_blocks(data, chunk_len, |first, block| {
+        for (i, chunk) in block.chunks_mut(chunk_len).enumerate() {
+            f(first + i, chunk);
+        }
+    });
+}
+
+/// Run `f(index, item)` over every item, distributing contiguous runs
+/// of items across workers.
+pub fn par_items<T, F>(items: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    par_row_blocks(items, 1, |first, block| {
+        for (i, item) in block.iter_mut().enumerate() {
+            f(first + i, item);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_row_visited_exactly_once() {
+        let mut data = vec![0u32; 12 * 3];
+        par_row_blocks(&mut data, 3, |first_row, block| {
+            for (i, row) in block.chunks_mut(3).enumerate() {
+                for v in row.iter_mut() {
+                    *v += 1 + (first_row + i) as u32;
+                }
+            }
+        });
+        for (i, row) in data.chunks(3).enumerate() {
+            assert!(row.iter().all(|&v| v == 1 + i as u32), "row {i}: {row:?}");
+        }
+    }
+
+    #[test]
+    fn chunk_indices_are_global() {
+        let mut data = vec![0usize; 40];
+        par_chunks_mut(&mut data, 4, |idx, chunk| {
+            for v in chunk.iter_mut() {
+                *v = idx;
+            }
+        });
+        for (i, chunk) in data.chunks(4).enumerate() {
+            assert!(chunk.iter().all(|&v| v == i), "chunk {i}: {chunk:?}");
+        }
+    }
+
+    #[test]
+    fn items_see_their_own_index() {
+        let mut items: Vec<(usize, usize)> = (0..17).map(|i| (i, 0)).collect();
+        par_items(&mut items, |idx, item| {
+            item.1 = idx;
+        });
+        assert!(items.iter().all(|&(a, b)| a == b), "{items:?}");
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs_are_fine() {
+        let mut empty: Vec<u8> = Vec::new();
+        par_row_blocks(&mut empty, 4, |_, _| panic!("no rows, no calls"));
+        let mut one = vec![7u8];
+        par_items(&mut one, |i, v| {
+            assert_eq!(i, 0);
+            *v += 1;
+        });
+        assert_eq!(one, vec![8]);
+    }
+
+    #[test]
+    fn override_env_and_nesting_rules() {
+        // The single test that touches the global override (other tests
+        // in this binary must not call set_threads, so no race).
+        set_threads(3);
+        assert_eq!(current_threads(), 3);
+
+        // Workers report one thread: nested parallelism serializes.
+        let mut seen = vec![0usize; 6];
+        par_items(&mut seen, |_, v| {
+            *v = current_threads();
+        });
+        assert!(seen.iter().all(|&v| v == 1), "{seen:?}");
+        // ...and the caller's flag is restored after the join.
+        assert_eq!(current_threads(), 3);
+
+        set_threads(0);
+        assert!(current_threads() >= 1);
+    }
+
+    #[test]
+    fn partition_is_invariant_to_worker_count() {
+        // The determinism contract at the primitive level: the same
+        // writes happen for any thread count.
+        let run = || {
+            let mut data = vec![0f32; 64];
+            par_chunks_mut(&mut data, 8, |idx, chunk| {
+                for (e, v) in chunk.iter_mut().enumerate() {
+                    *v = (idx * 8 + e) as f32 * 0.5;
+                }
+            });
+            data
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -133,6 +133,20 @@ impl Args {
         }
     }
 
+    /// Like [`Args::get_usize`] but with no default: `None` when the
+    /// option was not given at all (e.g. `--threads`, where absence
+    /// means "keep the environment's choice").
+    pub fn get_opt_usize(&self, name: &str) -> Result<Option<usize>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).map_err(|_| CliError::BadValue {
+                key: name.into(),
+                value: v.into(),
+                expected: "unsigned integer",
+            }),
+        }
+    }
+
     pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, CliError> {
         match self.get(name) {
             None => Ok(default),
@@ -250,6 +264,19 @@ mod tests {
         let a = parse(&["train", "--steps", "xyz"]);
         assert!(matches!(
             a.get_usize("steps", 0),
+            Err(CliError::BadValue { .. })
+        ));
+    }
+
+    #[test]
+    fn opt_usize_distinguishes_absent_from_bad() {
+        let a = parse(&["train", "--steps", "4"]);
+        assert_eq!(a.get_opt_usize("steps").unwrap(), Some(4));
+        let b = parse(&["train"]);
+        assert_eq!(b.get_opt_usize("steps").unwrap(), None);
+        let c = parse(&["train", "--steps", "zz"]);
+        assert!(matches!(
+            c.get_opt_usize("steps"),
             Err(CliError::BadValue { .. })
         ));
     }

@@ -1,0 +1,147 @@
+//! Threaded-vs-serial equivalence suite: the determinism contract of
+//! the parallel compute layer (DESIGN.md §Parallel-compute seam).
+//!
+//! Partitioning work across the pool must only decide *who* computes an
+//! element, never *how* — per-row reductions are fixed serial orders —
+//! so forward, prefill and decode logits must be **bit-identical** for
+//! every thread count, for all three normalizers, on ragged batches,
+//! through the eviction path, and under partial active masks. A
+//! CI matrix leg re-runs the whole test suite with `CONSMAX_THREADS=1`
+//! to pin the single-thread baseline itself.
+//!
+//! Tests in this binary serialize their `set_threads` toggling through
+//! one mutex (the knob is process-global); the assertions themselves
+//! would hold even without it, since results are thread-count-invariant.
+
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use consmax::config::ModelConfig;
+use consmax::coordinator::ParamStore;
+use consmax::prop_assert;
+use consmax::runtime::backend::{DecodeSession, NativeModel};
+use consmax::runtime::parallel;
+use consmax::util::proptest::{run_property, Gen};
+
+const NORMALIZERS: [&str; 3] = ["consmax", "softmax", "softermax"];
+
+fn lock() -> MutexGuard<'static, ()> {
+    static L: OnceLock<Mutex<()>> = OnceLock::new();
+    L.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+fn tiny_model(norm: &str, seed: u64) -> NativeModel {
+    let cfg = ModelConfig::builtin("tiny", norm).unwrap();
+    let store = ParamStore::init(&cfg, seed).unwrap();
+    NativeModel::from_params(&cfg, &store.order, &store.params).unwrap()
+}
+
+/// Run `f` once at 1 thread and once at `n`, restoring the default.
+fn at_threads<T>(n: usize, mut f: impl FnMut() -> T) -> (T, T) {
+    parallel::set_threads(1);
+    let serial = f();
+    parallel::set_threads(n);
+    let threaded = f();
+    parallel::set_threads(0);
+    (serial, threaded)
+}
+
+#[test]
+fn forward_is_thread_invariant() {
+    let _g = lock();
+    for norm in NORMALIZERS {
+        let m = tiny_model(norm, 3);
+        let toks: Vec<i32> =
+            (0..2 * 24).map(|i| ((i * 17 + 3) % 256) as i32).collect();
+        let (serial, threaded) =
+            at_threads(4, || m.forward(&toks, 2, 24).unwrap());
+        assert_eq!(
+            serial, threaded,
+            "{norm}: forward logits diverged across thread counts"
+        );
+    }
+}
+
+#[test]
+fn prefill_and_decode_are_thread_invariant() {
+    let _g = lock();
+    for norm in NORMALIZERS {
+        let m = tiny_model(norm, 5);
+        // ragged on purpose: mid-length, single-token, overlong (clamps
+        // to ctx, so its first decode step exercises ring eviction), and
+        // short
+        let rows: Vec<Vec<i32>> = vec![
+            (0..50).map(|i| ((i * 7 + 1) % 256) as i32).collect(),
+            vec![42],
+            (0..90).map(|i| ((i * 11 + 2) % 256) as i32).collect(),
+            (0..17).map(|i| ((i * 3 + 9) % 256) as i32).collect(),
+        ];
+        let active_masks = [
+            vec![true, true, true, true],
+            vec![true, false, true, false],
+            vec![false, true, false, true],
+            vec![true, true, true, true],
+        ];
+        let run = || {
+            let mut sess = DecodeSession::new(&m.cfg, rows.len());
+            let mut all = m.prefill(&mut sess, &rows).unwrap();
+            for (step, active) in active_masks.iter().enumerate() {
+                let toks: Vec<i32> = (0..rows.len())
+                    .map(|r| ((step * 13 + r * 31 + 7) % 256) as i32)
+                    .collect();
+                let logits =
+                    m.decode_step_active(&mut sess, &toks, active).unwrap();
+                all.extend_from_slice(&logits);
+            }
+            all
+        };
+        let (serial, threaded) = at_threads(4, run);
+        assert_eq!(
+            serial, threaded,
+            "{norm}: prefill/decode logits diverged across thread counts"
+        );
+    }
+}
+
+#[test]
+fn prop_ragged_batches_thread_invariant() {
+    let _g = lock();
+    run_property("ragged batches thread-invariant", 10, |g: &mut Gen| {
+        let norm = *g.choose(&NORMALIZERS);
+        let m = tiny_model(norm, g.u64(0, 1000));
+        let b = g.usize(1, 5);
+        let rows: Vec<Vec<i32>> = (0..b)
+            .map(|_| {
+                let len = g.usize(1, 80); // some rows overlong vs ctx 64
+                (0..len).map(|_| g.usize(0, 256) as i32).collect()
+            })
+            .collect();
+        let steps = g.usize(1, 4);
+        let toks_per_step: Vec<Vec<i32>> = (0..steps)
+            .map(|_| (0..b).map(|_| g.usize(0, 256) as i32).collect())
+            .collect();
+        let nthreads = g.usize(2, 7);
+
+        let run = || {
+            let mut sess = DecodeSession::new(&m.cfg, b);
+            let mut all = m.prefill(&mut sess, &rows).unwrap();
+            for toks in &toks_per_step {
+                all.extend_from_slice(
+                    &m.decode_step(&mut sess, toks).unwrap(),
+                );
+            }
+            all
+        };
+        parallel::set_threads(1);
+        let serial = run();
+        parallel::set_threads(nthreads);
+        let threaded = run();
+        parallel::set_threads(0);
+        prop_assert!(
+            serial == threaded,
+            "{norm}: b={b}, {nthreads} threads: logits diverged"
+        );
+        Ok(())
+    });
+}
