@@ -1,19 +1,26 @@
-//! Serving demo: batched KV-cached generation behind a request queue,
-//! with Poisson arrivals and latency/throughput reporting — the
-//! coordinator's "inference service" face.
+//! Serving demo: continuous-batching generation behind a request queue,
+//! with Poisson arrivals and honest per-request latency/throughput
+//! reporting — the coordinator's "inference service" face.
 //!
 //! Runs on the **native KV-cached decode engine**, so it works from a
 //! bare checkout: no Python, no PJRT, no artifacts. (The PJRT serving
 //! path is reachable through `consmax serve-demo --backend pjrt`.)
 //!
-//! Run: `cargo run --release --example serve -- [requests] [max_new] [ckpt] [decode] [threads]`
-//! where `decode` is `kv` (default) or `recompute` (the O(T²) oracle,
-//! kept for A/B latency comparisons — see `cargo bench --bench
-//! decode_bench` for the measured gap) and `threads` sizes the native
-//! worker pool (default: `CONSMAX_THREADS` or all cores; batched rows
-//! decode in parallel). Uses runs/tiny_consmax.ckpt if present,
-//! otherwise serves from random weights (still exercises the full
-//! path). `--help` prints this usage.
+//! Two schedulers (DESIGN.md §Serving seam):
+//!
+//! * `continuous` (default) — requests join a persistent decode-session
+//!   slot pool mid-flight and free their slot the step they finish; a
+//!   2-token request never waits for a 64-token neighbor, and reported
+//!   latency/TTFT are per request, not per batch.
+//! * `static` — the vLLM-v0-style reference batcher (pop a batch, drain
+//!   it); greedy outputs are identical, scheduling is not.
+//!
+//! Run: `cargo run --release --example serve -- [requests] [max_new] [ckpt] [decode] [threads] [sched]`
+//! where `decode` is `kv` (default) or `recompute` (the O(T²) oracle;
+//! forces the static scheduler) and `threads` sizes the native worker
+//! pool. Uses runs/tiny_consmax.ckpt if present, otherwise serves from
+//! random weights (still exercises the full path). `--help` prints this
+//! usage.
 
 use anyhow::Result;
 use consmax::config::ModelConfig;
@@ -24,15 +31,18 @@ use consmax::runtime::parallel;
 use consmax::util::rng::Pcg32;
 
 const USAGE: &str = "\
-usage: serve [requests] [max_new] [ckpt] [decode] [threads]
+usage: serve [requests] [max_new] [ckpt] [decode] [threads] [sched]
 
   requests  number of Poisson-arrival requests        (default 24)
-  max_new   tokens generated per request              (default 24)
+  max_new   token budget of the *long* requests; the
+            short ones get a quarter of it            (default 24)
   ckpt      checkpoint path                           (default runs/tiny_consmax.ckpt)
   decode    kv | recompute                            (default kv)
   threads   native worker-pool size; rows of a batch
             decode in parallel                        (default: CONSMAX_THREADS
                                                        env var, else all cores)
+  sched     continuous | static                       (default continuous;
+                                                       recompute forces static)
 ";
 
 fn main() -> Result<()> {
@@ -58,6 +68,19 @@ fn main() -> Result<()> {
             }
         }
     }
+    let sched = args.get(6).map(String::as_str).unwrap_or("continuous");
+    let continuous = match sched {
+        "continuous" => mode == DecodeMode::Kv,
+        "static" => false,
+        other => {
+            eprintln!("error: unknown scheduler {other:?}\n");
+            eprint!("{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if sched == "continuous" && !continuous {
+        println!("note: recompute decode has no persistent session; using the static scheduler");
+    }
 
     let cfg = ModelConfig::builtin("tiny", "consmax")?;
     let store = if std::path::Path::new(&ckpt).exists() {
@@ -70,16 +93,19 @@ fn main() -> Result<()> {
 
     let generator = Generator::native_with(&cfg, &store, 7, mode)?;
     println!(
-        "model {}: ctx {}, {} decode, batches up to {}, {} threads\n",
+        "model {}: ctx {}, {} decode, {} scheduler, slots up to {}, {} threads\n",
         cfg.key,
         cfg.ctx,
         generator.decode_name(),
+        if continuous { "continuous" } else { "static" },
         generator.max_batch(),
         parallel::current_threads()
     );
     let mut server = Server::new(generator);
 
-    // Poisson arrival schedule (randomized prompt mix and budgets)
+    // Poisson arrival schedule: randomized prompt mix and a short/long
+    // budget mix (3 short : 1 long) — the workload where static
+    // batching head-of-line blocks and continuous batching does not
     let mut rng = Pcg32::seeded(0);
     let prompts = [
         "The transformer architecture ",
@@ -96,31 +122,38 @@ fn main() -> Result<()> {
         schedule.push((t_arrive, GenRequest {
             id,
             prompt: prompts[rng.below(prompts.len() as u64) as usize].into(),
-            max_new_tokens: max_new,
+            max_new_tokens: if id % 4 == 0 { max_new } else { max_new / 4 + 1 },
             // mixed sampling policies in one batch: the server keeps
             // each request's own temperature
             temperature: if id % 3 == 0 { 0.0 } else { 0.8 },
+            stop: None,
         }));
     }
 
     let t0 = std::time::Instant::now();
     let mut responses = Vec::new();
     let mut next = 0;
-    // event loop: admit arrivals whose time has come, then serve a batch
+    // event loop: admit arrivals whose time has come, then advance the
+    // scheduler (one slot-pool tick, or one full static batch)
     while responses.len() < n_requests {
         let now = t0.elapsed().as_secs_f64();
         while next < schedule.len() && schedule[next].0 <= now {
             server.submit(schedule[next].1.clone());
             next += 1;
         }
-        if server.pending() == 0 {
+        let idle = server.pending() == 0
+            && (!continuous || server.in_flight() == 0);
+        if idle {
             std::thread::sleep(std::time::Duration::from_millis(1));
             continue;
         }
-        for r in server.run_once()? {
+        let completed = if continuous { server.step()? } else { server.run_once()? };
+        for r in completed {
             println!(
-                "[{:7.1} ms] req {:2} (batch {}, {} prompt toks): {:?}",
-                r.latency_ms, r.id, r.batch_size, r.prompt_tokens, r.text
+                "[lat {:7.1} ms, ttft {:6.1} ms] req {:2} ({} co-resident, \
+                 {} prompt toks, {} new): {:?}",
+                r.latency_ms, r.ttft_ms, r.id, r.batch_size, r.prompt_tokens,
+                r.new_tokens, r.text
             );
             responses.push(r);
         }
@@ -131,14 +164,20 @@ fn main() -> Result<()> {
     println!("requests:   {n_requests} in {wall:.2}s ({:.1} req/s)", n_requests as f64 / wall);
     println!("throughput: {:.1} tok/s", server.tokens_out as f64 / wall);
     println!(
-        "latency:    p50 {:.0} ms  p95 {:.0} ms  mean {:.0} ms",
+        "completion: p50 {:.0} ms  p95 {:.0} ms  mean {:.0} ms (per request, from submit)",
         server.latencies.percentile(50.0).unwrap() / 1e3,
         server.latencies.percentile(95.0).unwrap() / 1e3,
         server.latencies.mean().unwrap() / 1e3
     );
+    println!(
+        "TTFT:       p50 {:.0} ms  p99 {:.0} ms   TPOT: p50 {:.2} ms/tok",
+        server.ttft.percentile(50.0).unwrap() / 1e3,
+        server.ttft.percentile(99.0).unwrap() / 1e3,
+        server.tpot.percentile(50.0).unwrap_or(0.0) / 1e3
+    );
     let batched = responses.iter().filter(|r| r.batch_size > 1).count();
     println!(
-        "batching:   {batched}/{n_requests} responses served in batches >1"
+        "batching:   {batched}/{n_requests} responses shared the engine with a neighbor"
     );
     Ok(())
 }

@@ -1,0 +1,227 @@
+//! Scheduler shoot-out: continuous batching vs the static reference
+//! batcher, under a Poisson arrival mix of short and long generation
+//! budgets — the head-of-line-blocking workload of DESIGN.md §Serving
+//! seam (EXPERIMENTS.md §Continuous vs static serving).
+//!
+//! Run: `cargo bench --bench serve_bench` (native, no artifacts).
+//! Emits machine-readable results to `BENCH_serve.json` in the working
+//! directory and exits non-zero unless the continuous scheduler clears
+//! **≥ 1.5× static token throughput with a lower p99 TTFT** on the
+//! same arrival schedule — CI smoke-runs this so the artifact and the
+//! scheduling claim cannot rot.
+//!
+//! Both runs serve the identical schedule greedily, so they emit the
+//! identical tokens (the equivalence suite pins this per request);
+//! only the scheduling differs. The pool is capped at [`SLOTS`] rows
+//! so the comparison grades the scheduler, not the pool size.
+
+use std::time::{Duration, Instant};
+
+use consmax::config::ModelConfig;
+use consmax::coordinator::{GenRequest, Generator, ParamStore, Server};
+use consmax::metrics::LatencyRecorder;
+use consmax::util::bench::print_table;
+use consmax::util::json::Json;
+use consmax::util::rng::Pcg32;
+
+/// Requests per run (every 8th is long, the rest short).
+const N_REQUESTS: usize = 48;
+/// Token budget of the short requests.
+const SHORT_NEW: usize = 2;
+/// Token budget of the long requests (ctx 64 ⇒ prompts clamp to 8).
+const LONG_NEW: usize = 56;
+/// Serving slot-pool cap for both schedulers.
+const SLOTS: usize = 4;
+/// Offered load: mean inter-arrival seconds (saturating).
+const MEAN_ARRIVAL_S: f64 = 1e-3;
+/// The throughput floor continuous must clear (acceptance criterion).
+const MIN_SPEEDUP: f64 = 1.5;
+/// Measured runs per scheduler; the best-throughput run is reported.
+const RUNS: usize = 2;
+
+struct RunStats {
+    wall_s: f64,
+    tokens: u64,
+    tok_s: f64,
+    lat_p50_ms: f64,
+    lat_p99_ms: f64,
+    ttft_p50_ms: f64,
+    ttft_p99_ms: f64,
+    /// Median completion latency of the short/long requests separately:
+    /// per-request accounting makes these *differ* under one roof.
+    short_lat_p50_ms: f64,
+    long_lat_p50_ms: f64,
+}
+
+fn schedule(seed: u64) -> Vec<(f64, GenRequest)> {
+    let mut rng = Pcg32::seeded(seed);
+    let prompts = [
+        "The constant softmax replaces the row reduction ",
+        "Attention lets every token attend ",
+        "A small lookup table stores the exponent ",
+        "Long contexts make the normalizer the bottleneck ",
+    ];
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(N_REQUESTS);
+    for id in 0..N_REQUESTS as u64 {
+        t += rng.exponential(1.0 / MEAN_ARRIVAL_S);
+        out.push((t, GenRequest {
+            id,
+            prompt: prompts[rng.below(prompts.len() as u64) as usize].into(),
+            max_new_tokens: if id % 8 == 7 { LONG_NEW } else { SHORT_NEW },
+            temperature: 0.0, // greedy: both schedulers emit identical tokens
+            stop: None,
+        }));
+    }
+    out
+}
+
+fn run_schedule(
+    cfg: &ModelConfig,
+    store: &ParamStore,
+    sched: &[(f64, GenRequest)],
+    continuous: bool,
+) -> anyhow::Result<RunStats> {
+    let generator = Generator::native(cfg, store, 7)?;
+    let mut server = Server::new(generator);
+    server.set_max_batch(SLOTS)?;
+
+    let mut responses = Vec::with_capacity(sched.len());
+    let t0 = Instant::now();
+    let mut next = 0;
+    while responses.len() < sched.len() {
+        let now = t0.elapsed().as_secs_f64();
+        while next < sched.len() && sched[next].0 <= now {
+            server.submit(sched[next].1.clone());
+            next += 1;
+        }
+        let idle = server.pending() == 0
+            && (!continuous || server.in_flight() == 0);
+        if idle {
+            std::thread::sleep(Duration::from_micros(100));
+            continue;
+        }
+        let done = if continuous { server.step()? } else { server.run_once()? };
+        responses.extend(done);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    // short/long medians through the same nearest-rank percentile as
+    // every other number in the table
+    let mut short = LatencyRecorder::default();
+    let mut long = LatencyRecorder::default();
+    for r in &responses {
+        if r.new_tokens <= SHORT_NEW {
+            short.record_us(r.latency_ms * 1e3);
+        } else {
+            long.record_us(r.latency_ms * 1e3);
+        }
+    }
+    Ok(RunStats {
+        wall_s,
+        tokens: server.tokens_out,
+        tok_s: server.tokens_out as f64 / wall_s,
+        lat_p50_ms: server.latencies.percentile(50.0).unwrap_or(0.0) / 1e3,
+        lat_p99_ms: server.latencies.percentile(99.0).unwrap_or(0.0) / 1e3,
+        ttft_p50_ms: server.ttft.percentile(50.0).unwrap_or(0.0) / 1e3,
+        ttft_p99_ms: server.ttft.percentile(99.0).unwrap_or(0.0) / 1e3,
+        short_lat_p50_ms: short.percentile(50.0).unwrap_or(0.0) / 1e3,
+        long_lat_p50_ms: long.percentile(50.0).unwrap_or(0.0) / 1e3,
+    })
+}
+
+fn best(mut runs: Vec<RunStats>) -> RunStats {
+    runs.sort_by(|a, b| a.tok_s.partial_cmp(&b.tok_s).unwrap());
+    runs.pop().unwrap()
+}
+
+fn stats_json(s: &RunStats) -> Json {
+    Json::from_pairs([
+        ("wall_s".to_string(), Json::from(s.wall_s)),
+        ("tokens".to_string(), Json::from(s.tokens as f64)),
+        ("tok_s".to_string(), Json::from(s.tok_s)),
+        ("lat_p50_ms".to_string(), Json::from(s.lat_p50_ms)),
+        ("lat_p99_ms".to_string(), Json::from(s.lat_p99_ms)),
+        ("ttft_p50_ms".to_string(), Json::from(s.ttft_p50_ms)),
+        ("ttft_p99_ms".to_string(), Json::from(s.ttft_p99_ms)),
+        ("short_lat_p50_ms".to_string(), Json::from(s.short_lat_p50_ms)),
+        ("long_lat_p50_ms".to_string(), Json::from(s.long_lat_p50_ms)),
+    ])
+}
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ModelConfig::builtin("tiny", "consmax")?;
+    let store = ParamStore::init(&cfg, 0)?;
+    let sched = schedule(11);
+
+    // interleave static/continuous runs so machine noise hits both
+    let mut stat_runs = Vec::new();
+    let mut cont_runs = Vec::new();
+    for _ in 0..RUNS {
+        stat_runs.push(run_schedule(&cfg, &store, &sched, false)?);
+        cont_runs.push(run_schedule(&cfg, &store, &sched, true)?);
+    }
+    let stat = best(stat_runs);
+    let cont = best(cont_runs);
+    let speedup = cont.tok_s / stat.tok_s;
+    let ttft_ok = cont.ttft_p99_ms < stat.ttft_p99_ms;
+
+    let row = |name: &str, s: &RunStats| {
+        vec![
+            name.to_string(),
+            format!("{:.0}", s.tok_s),
+            format!("{:.0}", s.lat_p50_ms),
+            format!("{:.0}", s.lat_p99_ms),
+            format!("{:.0}", s.ttft_p50_ms),
+            format!("{:.0}", s.ttft_p99_ms),
+            format!("{:.0}/{:.0}", s.short_lat_p50_ms, s.long_lat_p50_ms),
+        ]
+    };
+    print_table(
+        &format!(
+            "Serving schedulers, {} ({} reqs, {}:{} short/long budget mix, \
+             {} slots, Poisson arrivals)",
+            cfg.key, N_REQUESTS, SHORT_NEW, LONG_NEW, SLOTS
+        ),
+        &["scheduler", "tok/s", "lat p50 ms", "lat p99 ms", "ttft p50 ms",
+          "ttft p99 ms", "short/long p50 ms"],
+        &[row("static", &stat), row("continuous", &cont)],
+    );
+    println!(
+        "\ncontinuous/static token throughput: {speedup:.2}x \
+         (floor {MIN_SPEEDUP}x); p99 TTFT {} ms vs {} ms",
+        cont.ttft_p99_ms.round(),
+        stat.ttft_p99_ms.round()
+    );
+
+    let doc = Json::from_pairs([
+        ("bench".to_string(), Json::from("serve")),
+        ("config".to_string(), Json::from(cfg.key.as_str())),
+        ("normalizer".to_string(), Json::from(cfg.normalizer.as_str())),
+        ("requests".to_string(), Json::from(N_REQUESTS)),
+        ("short_new".to_string(), Json::from(SHORT_NEW)),
+        ("long_new".to_string(), Json::from(LONG_NEW)),
+        ("slots".to_string(), Json::from(SLOTS)),
+        (
+            "threads".to_string(),
+            Json::from(consmax::runtime::parallel::current_threads()),
+        ),
+        ("static".to_string(), stats_json(&stat)),
+        ("continuous".to_string(), stats_json(&cont)),
+        ("speedup".to_string(), Json::from(speedup)),
+        ("min_speedup_required".to_string(), Json::from(MIN_SPEEDUP)),
+        ("ttft_p99_lower".to_string(), Json::from(ttft_ok)),
+    ]);
+    std::fs::write("BENCH_serve.json", doc.to_string())?;
+    println!("wrote BENCH_serve.json");
+
+    if speedup < MIN_SPEEDUP || !ttft_ok {
+        eprintln!(
+            "FAIL: continuous batching must clear {MIN_SPEEDUP}x static \
+             token throughput with lower p99 TTFT (got {speedup:.2}x, \
+             ttft_p99_lower={ttft_ok}) — see table above"
+        );
+        std::process::exit(1);
+    }
+    Ok(())
+}

@@ -1,5 +1,5 @@
-//! Generation server: request queue → static batcher → batched decode
-//! loop, with per-request latency accounting. This is the "LLM inference"
+//! Generation server: request queue → scheduler → batched decode loop,
+//! with per-request latency accounting. This is the "LLM inference"
 //! face of the coordinator — the place where ConSmax's merged β/γ
 //! constants actually serve requests.
 //!
@@ -20,18 +20,37 @@
 //!   `decode_b{N}` executables, parameters uploaded to device buffers
 //!   once at construction.
 //!
-//! Batching policy is static (vLLM-v0-style) up to the backend's largest
-//! decode batch. Native batches are **ragged**: each row prefills at its
-//! own prompt length and is masked to its own cached positions, so a
-//! short prompt next to a long one decodes exactly as it would alone
+//! Two schedulers drive the [`Server`] (DESIGN.md §Serving seam):
+//!
+//! * **continuous batching** ([`Server::step`] /
+//!   [`Server::run_continuous`], native KV only) — a *persistent*
+//!   [`DecodeSession`] slot pool. Requests join a free row mid-flight
+//!   (per-row prefill via [`NativeModel::prefill_rows`]), finished rows
+//!   free their slot the same step they complete
+//!   ([`DecodeSession::reset_row`]), and every tick runs one
+//!   `decode_step_active` across whatever mix of in-flight rows exists.
+//!   No request ever waits for a co-batched neighbor's budget, and
+//!   latency accounting is per request: completion time from
+//!   submission, TTFT, and TPOT, never a batch's wall time.
+//! * **static batching** ([`Server::run_once`] /
+//!   [`Server::run_to_completion`]) — the vLLM-v0-style reference
+//!   oracle: pop up to the slot cap, drain the batch to completion.
+//!   Kept because its greedy per-request outputs are provably identical
+//!   to the continuous scheduler's (`rust/tests/continuous_batching.rs`)
+//!   and because the PJRT decode artifacts are lock-step.
+//!
+//! Batches are **ragged** on the native engine: each row prefills at
+//! its own prompt length and is masked to its own cached positions, so
+//! a short prompt next to a long one decodes exactly as it would alone
 //! (no left-padding, no pad pollution). Requests keep their own
-//! temperature and `max_new_tokens`; accounting is in token space.
+//! temperature, `max_new_tokens` and optional stop token; accounting is
+//! in token space.
 
 use std::collections::VecDeque;
 use std::marker::PhantomData;
 use std::time::Instant;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 #[cfg(feature = "pjrt")]
 use anyhow::Context;
 
@@ -86,6 +105,10 @@ pub struct GenRequest {
     pub max_new_tokens: usize,
     /// 0.0 = greedy; otherwise softmax temperature sampling.
     pub temperature: f32,
+    /// Optional stop token: generation ends the step this id is
+    /// sampled (the stop token itself is not emitted). `None` = run to
+    /// `max_new_tokens`.
+    pub stop: Option<i32>,
 }
 
 /// A completed response.
@@ -93,12 +116,23 @@ pub struct GenRequest {
 pub struct GenResponse {
     pub id: u64,
     pub text: String,
+    /// The generated token ids (`text` is their byte-decoded form).
+    pub tokens: Vec<i32>,
     /// Post-clamp encoded prompt length (tokens actually attended).
     pub prompt_tokens: usize,
     /// Generated tokens (== `text` in bytes for the byte tokenizer,
     /// but counted in token space, never `chars()`).
     pub new_tokens: usize,
+    /// Per-request completion time in ms, measured from `submit` to
+    /// *this row* finishing — queue wait included, never a co-batched
+    /// neighbor's drain time.
     pub latency_ms: f64,
+    /// Time to first token in ms, from `submit`. Under static batching
+    /// this equals `latency_ms`: nothing streams before the batch
+    /// drains.
+    pub ttft_ms: f64,
+    /// Requests co-resident when this one completed (static batching:
+    /// the batch size it was served in).
     pub batch_size: usize,
 }
 
@@ -138,6 +172,11 @@ pub struct Generator<'e> {
     pub cfg: ModelConfig,
     exec: GenExec<'e>,
     rng: Pcg32,
+    /// Seed the generator was built with; the continuous scheduler
+    /// derives a per-request sampler stream from it (`seed` × request
+    /// id), so a sampled request's output never depends on which
+    /// neighbors happened to share its decode steps.
+    seed: u64,
 }
 
 impl<'e> Generator<'e> {
@@ -167,6 +206,7 @@ impl<'e> Generator<'e> {
             cfg,
             exec: GenExec::Pjrt { engine, params, batch_sizes },
             rng: Pcg32::seeded(seed),
+            seed,
         })
     }
 
@@ -195,6 +235,7 @@ impl<'e> Generator<'e> {
                 _lt: PhantomData,
             },
             rng: Pcg32::seeded(seed),
+            seed,
         })
     }
 
@@ -222,6 +263,14 @@ impl<'e> Generator<'e> {
             #[cfg(feature = "pjrt")]
             GenExec::Pjrt { batch_sizes, .. } => batch_sizes[0],
         }
+    }
+
+    /// Can this generator drive the continuous-batching scheduler?
+    /// Native KV only: the PJRT decode artifacts are lock-step over a
+    /// fixed batch, and the recompute oracle has no persistent session
+    /// for requests to join mid-flight.
+    pub fn supports_continuous(&self) -> bool {
+        matches!(&self.exec, GenExec::Native { mode: DecodeMode::Kv, .. })
     }
 
     /// Encode prompts in token space, clamping each row to its own
@@ -273,21 +322,22 @@ impl<'e> Generator<'e> {
     }
 
     /// Generate continuations with **per-row** token budgets and
-    /// temperatures — the serving entry point. Row `r` receives exactly
-    /// `max_new[r]` tokens sampled at `temperature[r]`; accounting in
-    /// the returned [`GenOutput`] is entirely in token space.
+    /// temperatures — the static-batch serving entry point. Row `r`
+    /// receives exactly `max_new[r]` tokens sampled at
+    /// `temperature[r]`; accounting in the returned [`GenOutput`] is
+    /// entirely in token space.
     pub fn generate_batch_ext(
         &mut self,
         prompts: &[String],
         max_new: &[usize],
         temperature: &[f32],
     ) -> Result<GenOutput> {
-        anyhow::ensure!(!prompts.is_empty(), "empty batch");
-        anyhow::ensure!(
+        ensure!(!prompts.is_empty(), "empty batch");
+        ensure!(
             prompts.len() == max_new.len() && prompts.len() == temperature.len(),
             "per-row max_new/temperature must match the prompt count"
         );
-        anyhow::ensure!(
+        ensure!(
             prompts.len() <= self.max_batch(),
             "batch of {} exceeds max decode batch {}",
             prompts.len(),
@@ -352,109 +402,120 @@ impl<'e> Generator<'e> {
             },
             #[cfg(feature = "pjrt")]
             GenExec::Pjrt { engine, params, batch_sizes } => {
-                // smallest exported batch size that fits the request count
-                let bq = *batch_sizes
-                    .iter()
-                    .filter(|&&bs| bs >= b)
-                    .min()
-                    .unwrap_or(&batch_sizes[0]);
-                let entry = format!("{}_decode_b{}", self.cfg.key, bq);
-                let exe = engine.load(&entry)?;
-
-                // the AOT decode step is lock-step, so the deepest
-                // generation budget in the batch defines the shared
-                // prompt window: without this re-clamp, a long prompt
-                // (clamped only by its own small max_new) would push
-                // plen + max_new_cap past ctx and silently truncate the
-                // high-budget rows
+                // a batch whose every budget is zero has nothing to
+                // decode: without this early exit the loop below would
+                // still run `plen` steps and sample into nothing (the
+                // native paths already skip their loops)
                 let max_new_cap = max_new.iter().copied().max().unwrap_or(0);
-                let cap_budget =
-                    self.cfg.ctx.saturating_sub(max_new_cap).max(1);
-                let mut encoded = encoded;
-                for (t, pt) in encoded.iter_mut().zip(prompt_tokens.iter_mut())
-                {
-                    if t.len() > cap_budget {
-                        *t = t.split_off(t.len() - cap_budget);
-                        *pt = t.len();
-                    }
-                }
-
-                // left-pad to a common length (per-row masking is a
-                // native-engine feature); rows beyond the real prompts
-                // replicate row 0 (outputs ignored)
-                let plen = encoded.iter().map(Vec::len).max().unwrap_or(1).max(1);
-                for t in encoded.iter_mut() {
-                    while t.len() < plen {
-                        t.insert(0, b' ' as i32);
-                    }
-                }
-                while encoded.len() < bq {
-                    encoded.push(encoded[0].clone());
-                }
-
-                // KV caches start zeroed (device-resident; re-uploaded per
-                // step because the output tuple only materializes on host)
-                let cache_shape = vec![
-                    self.cfg.n_layer,
-                    bq,
-                    self.cfg.n_head,
-                    self.cfg.ctx,
-                    self.cfg.head_dim(),
-                ];
-                let mut kc = engine.upload(&HostTensor::zeros(
-                    crate::runtime::DType::F32,
-                    &cache_shape,
-                ))?;
-                let mut vc = engine.upload(&HostTensor::zeros(
-                    crate::runtime::DType::F32,
-                    &cache_shape,
-                ))?;
-
-                // plen <= ctx - max_new_cap, so every row completes its
-                // budget before the ctx guard below can fire
-                let steps = plen + max_new_cap.max(1) - 1;
-                let mut last_tokens: Vec<i32> =
-                    encoded.iter().map(|t| t[0]).collect();
-
-                for pos in 0..=steps {
-                    if pos >= self.cfg.ctx {
-                        break;
-                    }
-                    let toks: Vec<i32> = (0..bq)
-                        .map(|r| {
-                            if pos < plen {
-                                encoded[r][pos]
-                            } else {
-                                last_tokens[r]
-                            }
-                        })
-                        .collect();
-                    let tok_buf =
-                        engine.upload(&HostTensor::from_i32(&toks, &[bq]))?;
-                    let pos_buf =
-                        engine.upload(&HostTensor::scalar_i32(pos as i32))?;
-                    let inputs: Vec<&xla::PjRtBuffer> = params
+                if max_new_cap > 0 {
+                    // smallest exported batch size that fits the request count
+                    let bq = *batch_sizes
                         .iter()
-                        .chain([&kc, &vc, &pos_buf, &tok_buf])
-                        .collect();
-                    let mut outs =
-                        engine.execute_buffer_refs(&entry, &exe, &inputs)?;
-                    vc = engine.upload_literal(&outs.pop().context("vc")?)?;
-                    kc = engine.upload_literal(&outs.pop().context("kc")?)?;
-                    let logits_t =
-                        HostTensor::from_literal(&outs.pop().context("logits")?)?;
-                    let logits = logits_t.as_f32()?;
+                        .filter(|&&bs| bs >= b)
+                        .min()
+                        .unwrap_or(&batch_sizes[0]);
+                    let entry = format!("{}_decode_b{}", self.cfg.key, bq);
+                    let exe = engine.load(&entry)?;
 
-                    if pos + 1 >= plen {
-                        // sample the next token per row, at that row's
-                        // own temperature, up to its own budget
-                        for r in 0..b {
-                            let row = &logits[r * vocab..(r + 1) * vocab];
-                            let next =
-                                pick_token(row, temperature[r], &mut self.rng);
-                            last_tokens[r] = next;
-                            if generated[r].len() < max_new[r] {
-                                generated[r].push(next);
+                    // the AOT decode step is lock-step, so the deepest
+                    // generation budget in the batch defines the shared
+                    // prompt window: without this re-clamp, a long prompt
+                    // (clamped only by its own small max_new) would push
+                    // plen + max_new_cap past ctx and silently truncate the
+                    // high-budget rows
+                    let cap_budget =
+                        self.cfg.ctx.saturating_sub(max_new_cap).max(1);
+                    let mut encoded = encoded;
+                    for (t, pt) in encoded.iter_mut().zip(prompt_tokens.iter_mut())
+                    {
+                        if t.len() > cap_budget {
+                            *t = t.split_off(t.len() - cap_budget);
+                            *pt = t.len();
+                        }
+                    }
+
+                    // left-pad to a common length (per-row masking is a
+                    // native-engine feature); rows beyond the real prompts
+                    // replicate row 0 (outputs ignored)
+                    let plen =
+                        encoded.iter().map(Vec::len).max().unwrap_or(1).max(1);
+                    for t in encoded.iter_mut() {
+                        while t.len() < plen {
+                            t.insert(0, b' ' as i32);
+                        }
+                    }
+                    while encoded.len() < bq {
+                        encoded.push(encoded[0].clone());
+                    }
+
+                    // KV caches start zeroed (device-resident; re-uploaded per
+                    // step because the output tuple only materializes on host)
+                    let cache_shape = vec![
+                        self.cfg.n_layer,
+                        bq,
+                        self.cfg.n_head,
+                        self.cfg.ctx,
+                        self.cfg.head_dim(),
+                    ];
+                    let mut kc = engine.upload(&HostTensor::zeros(
+                        crate::runtime::DType::F32,
+                        &cache_shape,
+                    ))?;
+                    let mut vc = engine.upload(&HostTensor::zeros(
+                        crate::runtime::DType::F32,
+                        &cache_shape,
+                    ))?;
+
+                    // plen <= ctx - max_new_cap, so every row completes its
+                    // budget before the ctx guard below can fire
+                    let steps = plen + max_new_cap - 1;
+                    let mut last_tokens: Vec<i32> =
+                        encoded.iter().map(|t| t[0]).collect();
+
+                    for pos in 0..=steps {
+                        if pos >= self.cfg.ctx {
+                            break;
+                        }
+                        let toks: Vec<i32> = (0..bq)
+                            .map(|r| {
+                                if pos < plen {
+                                    encoded[r][pos]
+                                } else {
+                                    last_tokens[r]
+                                }
+                            })
+                            .collect();
+                        let tok_buf =
+                            engine.upload(&HostTensor::from_i32(&toks, &[bq]))?;
+                        let pos_buf =
+                            engine.upload(&HostTensor::scalar_i32(pos as i32))?;
+                        let inputs: Vec<&xla::PjRtBuffer> = params
+                            .iter()
+                            .chain([&kc, &vc, &pos_buf, &tok_buf])
+                            .collect();
+                        let mut outs =
+                            engine.execute_buffer_refs(&entry, &exe, &inputs)?;
+                        vc = engine.upload_literal(&outs.pop().context("vc")?)?;
+                        kc = engine.upload_literal(&outs.pop().context("kc")?)?;
+                        let logits_t = HostTensor::from_literal(
+                            &outs.pop().context("logits")?,
+                        )?;
+                        let logits = logits_t.as_f32()?;
+
+                        if pos + 1 >= plen {
+                            // sample the next token per row, at that row's
+                            // own temperature, up to its own budget
+                            for r in 0..b {
+                                let row = &logits[r * vocab..(r + 1) * vocab];
+                                let next = pick_token(
+                                    row,
+                                    temperature[r],
+                                    &mut self.rng,
+                                );
+                                last_tokens[r] = next;
+                                if generated[r].len() < max_new[r] {
+                                    generated[r].push(next);
+                                }
                             }
                         }
                     }
@@ -472,7 +533,9 @@ impl<'e> Generator<'e> {
 fn argmax(xs: &[f32]) -> usize {
     let mut best = 0;
     for (i, &v) in xs.iter().enumerate() {
-        if v > xs[best] {
+        // NaN never wins a comparison, so a NaN incumbent must be
+        // displaced explicitly or a row like [NaN, inf] would return 0
+        if xs[best].is_nan() || v > xs[best] {
             best = i;
         }
     }
@@ -480,11 +543,35 @@ fn argmax(xs: &[f32]) -> usize {
 }
 
 fn sample_temperature(logits: &[f32], temp: f32, rng: &mut Pcg32) -> usize {
-    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    // Degenerate rows used to kill the whole server: Pcg32::weighted
+    // asserts positive mass, so a logit row that is all non-finite (or
+    // one whose weights under/overflow at extreme temperatures) was a
+    // panic, not a bad sample. Fall back to greedy argmax instead.
+    if logits.iter().any(|&l| l == f32::INFINITY) {
+        return argmax(logits); // +inf spike: it wins outright
+    }
+    let m = logits
+        .iter()
+        .cloned()
+        .filter(|v| v.is_finite())
+        .fold(f32::NEG_INFINITY, f32::max);
+    if !m.is_finite() {
+        return argmax(logits); // no finite logit anywhere in the row
+    }
     let weights: Vec<f64> = logits
         .iter()
-        .map(|&l| (((l - m) / temp) as f64).exp())
+        .map(|&l| {
+            if l.is_finite() {
+                (((l - m) / temp) as f64).exp()
+            } else {
+                0.0 // -inf / NaN entries carry no mass
+            }
+        })
         .collect();
+    let total: f64 = weights.iter().sum();
+    if !total.is_finite() || total <= 0.0 {
+        return argmax(logits);
+    }
     rng.weighted(&weights)
 }
 
@@ -497,78 +584,437 @@ fn pick_token(row: &[f32], temperature: f32, rng: &mut Pcg32) -> i32 {
     }
 }
 
-/// Static-batching server over a [`Generator`].
+/// A queued request plus its arrival time (latency accounting starts
+/// at `submit`, so queue wait is part of every reported latency).
+struct Pending {
+    req: GenRequest,
+    submitted: Instant,
+}
+
+/// One occupied row of the continuous-batching slot pool.
+struct Slot {
+    req: GenRequest,
+    submitted: Instant,
+    /// Encoded (post-clamp) prompt, kept for the join-step prefill.
+    prompt: Vec<i32>,
+    prompt_tokens: usize,
+    first_token_at: Option<Instant>,
+    generated: Vec<i32>,
+    last: i32,
+    done: bool,
+    /// Per-request sampler stream (seeded from the generator seed and
+    /// the request id): sampled output is independent of co-batched
+    /// neighbors, exactly like greedy output.
+    rng: Pcg32,
+}
+
+impl Slot {
+    /// Account one sampled token: stop-token and budget checks.
+    fn feed(&mut self, tok: i32, now: Instant) {
+        if self.first_token_at.is_none() {
+            self.first_token_at = Some(now);
+        }
+        if self.req.stop == Some(tok) {
+            self.done = true; // stop token itself is not emitted
+            return;
+        }
+        self.generated.push(tok);
+        self.last = tok;
+        if self.generated.len() >= self.req.max_new_tokens {
+            self.done = true;
+        }
+    }
+}
+
+/// Persistent continuous-batching state: one `DecodeSession` whose rows
+/// are serving slots. `slots[i] == None` ⇔ row `i` is free.
+struct ContState {
+    sess: DecodeSession,
+    slots: Vec<Option<Slot>>,
+}
+
+/// What a scheduler hands to `Server::finish` when a request completes.
+struct Done {
+    id: u64,
+    tokens: Vec<i32>,
+    /// Precomputed `decode(tokens)`, when the caller already has it
+    /// (`None` ⇒ `finish` decodes).
+    text: Option<String>,
+    prompt_tokens: usize,
+    submitted: Instant,
+    first_token_at: Option<Instant>,
+    batch_size: usize,
+}
+
+/// Request-queue server over a [`Generator`], with two schedulers: the
+/// continuous-batching slot pool ([`Server::step`]) and the static
+/// reference batcher ([`Server::run_once`]). See the module docs for
+/// when each applies.
 pub struct Server<'e> {
     pub generator: Generator<'e>,
-    queue: VecDeque<GenRequest>,
+    queue: VecDeque<Pending>,
+    /// Serving slot cap: `min(backend max batch, set_max_batch(..))`.
+    max_batch: usize,
+    /// Per-request completion latency from `submit` (µs).
     pub latencies: LatencyRecorder,
+    /// Per-request time to first token from `submit` (µs).
+    pub ttft: LatencyRecorder,
+    /// Per-request time per output token during decode (µs/token).
+    pub tpot: LatencyRecorder,
     pub completed: u64,
     pub tokens_out: u64,
+    cont: Option<ContState>,
 }
 
 impl<'e> Server<'e> {
     pub fn new(generator: Generator<'e>) -> Server<'e> {
+        let max_batch = generator.max_batch();
         Server {
             generator,
             queue: VecDeque::new(),
+            max_batch,
             latencies: LatencyRecorder::default(),
+            ttft: LatencyRecorder::default(),
+            tpot: LatencyRecorder::default(),
             completed: 0,
             tokens_out: 0,
+            cont: None,
         }
     }
 
     pub fn submit(&mut self, req: GenRequest) {
-        self.queue.push_back(req);
+        self.queue.push_back(Pending { req, submitted: Instant::now() });
     }
 
     pub fn pending(&self) -> usize {
         self.queue.len()
     }
 
-    /// Serve one batch from the queue (up to the largest decode batch);
-    /// returns the completed responses. No-op on an empty queue.
+    /// Requests currently resident in the continuous slot pool.
+    pub fn in_flight(&self) -> usize {
+        self.cont
+            .as_ref()
+            .map_or(0, |c| c.slots.iter().filter(|s| s.is_some()).count())
+    }
+
+    /// Cap the serving batch (slot-pool size) below the backend's
+    /// maximum — the knob `serve_bench` uses to grade both schedulers
+    /// at one pool size. Rejected while requests are in flight; resets
+    /// the (empty) continuous pool so the next step rebuilds it.
+    pub fn set_max_batch(&mut self, n: usize) -> Result<()> {
+        ensure!(
+            self.in_flight() == 0,
+            "set_max_batch while {} requests are in flight",
+            self.in_flight()
+        );
+        self.max_batch = n.clamp(1, self.generator.max_batch());
+        self.cont = None;
+        Ok(())
+    }
+
+    /// Seal one request: build its response and record the per-request
+    /// metrics (completion latency from `submit`, TTFT, TPOT).
+    fn finish(&mut self, done: Done) -> GenResponse {
+        let Done {
+            id,
+            tokens,
+            text,
+            prompt_tokens,
+            submitted,
+            first_token_at,
+            batch_size,
+        } = done;
+        let now = Instant::now();
+        let latency_ms = now.duration_since(submitted).as_secs_f64() * 1e3;
+        let ttft_ms = first_token_at
+            .map(|t| t.duration_since(submitted).as_secs_f64() * 1e3)
+            .unwrap_or(latency_ms);
+        let new_tokens = tokens.len();
+        self.latencies.record_us(latency_ms * 1e3);
+        self.ttft.record_us(ttft_ms * 1e3);
+        // TPOT = decode-phase inter-token time: (completion - first
+        // token) spans new_tokens - 1 decode steps, so a ≥2-token
+        // request is needed for the ratio to mean anything. Recorded
+        // only when the first token's time is known (continuous
+        // scheduler); the static path records its own batch-wall rate.
+        if first_token_at.is_some() && new_tokens > 1 {
+            self.tpot
+                .record_us((latency_ms - ttft_ms) * 1e3 / (new_tokens - 1) as f64);
+        }
+        self.completed += 1;
+        self.tokens_out += new_tokens as u64;
+        GenResponse {
+            id,
+            text: text.unwrap_or_else(|| ByteTokenizer.decode(&tokens)),
+            new_tokens,
+            tokens,
+            prompt_tokens,
+            latency_ms,
+            ttft_ms,
+            batch_size,
+        }
+    }
+
+    /// One tick of the **continuous-batching** scheduler (native KV
+    /// engine only): admit queued requests into free slots (per-row
+    /// prefill into the persistent session), advance every in-flight
+    /// row by one token, and harvest finished rows — their slots free
+    /// this same step, so the next tick's admissions take them.
+    /// Returns the requests that completed this tick.
+    pub fn step(&mut self) -> Result<Vec<GenResponse>> {
+        ensure!(
+            self.generator.supports_continuous(),
+            "continuous batching needs the native KV decode engine \
+             (this generator is {} / {}); use run_once/run_to_completion",
+            self.generator.backend_name(),
+            self.generator.decode_name()
+        );
+        if self.cont.is_none() {
+            self.cont = Some(ContState {
+                sess: DecodeSession::new(&self.generator.cfg, self.max_batch),
+                slots: (0..self.max_batch).map(|_| None).collect(),
+            });
+        }
+        let vocab = self.generator.cfg.vocab;
+        let mut out = Vec::new();
+
+        // -- admission: requests join free rows mid-flight ---------------
+        let mut joins: Vec<usize> = Vec::new();
+        while let Some(zero_budget) =
+            self.queue.front().map(|p| p.req.max_new_tokens == 0)
+        {
+            if zero_budget {
+                // nothing to decode: complete immediately, no slot taken
+                let p = self.queue.pop_front().unwrap();
+                let (_, ptoks) = self
+                    .generator
+                    .encode_prompts(std::slice::from_ref(&p.req.prompt), &[0]);
+                let resp = self.finish(Done {
+                    id: p.req.id,
+                    tokens: Vec::new(),
+                    text: Some(String::new()),
+                    prompt_tokens: ptoks[0],
+                    submitted: p.submitted,
+                    first_token_at: None,
+                    batch_size: 1,
+                });
+                out.push(resp);
+                continue;
+            }
+            let cont = self.cont.as_mut().unwrap();
+            let Some(slot_idx) = cont.slots.iter().position(Option::is_none)
+            else {
+                break; // pool full; the queue waits for the next tick
+            };
+            let p = self.queue.pop_front().unwrap();
+            let (mut enc, ptoks) = self.generator.encode_prompts(
+                std::slice::from_ref(&p.req.prompt),
+                &[p.req.max_new_tokens],
+            );
+            let rng = Pcg32::new(self.generator.seed, p.req.id);
+            cont.slots[slot_idx] = Some(Slot {
+                prompt: enc.pop().unwrap(),
+                prompt_tokens: ptoks[0],
+                req: p.req,
+                submitted: p.submitted,
+                first_token_at: None,
+                generated: Vec::new(),
+                last: 0,
+                done: false,
+                rng,
+            });
+            joins.push(slot_idx);
+        }
+
+        // -- prefill the joiners (parallel across joining rows) and
+        //    sample their first token from the prefill logits ------------
+        if !joins.is_empty() {
+            let cont = self.cont.as_mut().unwrap();
+            let mut pairs: Vec<(usize, &[i32])> =
+                Vec::with_capacity(joins.len());
+            for &i in &joins {
+                pairs.push((
+                    i,
+                    cont.slots[i].as_ref().unwrap().prompt.as_slice(),
+                ));
+            }
+            let logits = match &self.generator.exec {
+                GenExec::Native { model, .. } => {
+                    model.prefill_rows(&mut cont.sess, &pairs)?
+                }
+                #[cfg(feature = "pjrt")]
+                GenExec::Pjrt { .. } => {
+                    unreachable!("guarded by supports_continuous")
+                }
+            };
+            let now = Instant::now();
+            for (j, &slot_idx) in joins.iter().enumerate() {
+                let slot = cont.slots[slot_idx].as_mut().unwrap();
+                let row = &logits[j * vocab..(j + 1) * vocab];
+                let tok = pick_token(row, slot.req.temperature, &mut slot.rng);
+                slot.feed(tok, now);
+            }
+        }
+
+        // -- one decode step across whatever mix of in-flight rows exists
+        {
+            let cont = self.cont.as_mut().unwrap();
+            let b = cont.slots.len();
+            let mut active = vec![false; b];
+            let mut last = vec![0i32; b];
+            for (i, s) in cont.slots.iter().enumerate() {
+                if let Some(s) = s {
+                    if !s.done {
+                        active[i] = true;
+                        last[i] = s.last;
+                    }
+                }
+            }
+            if active.iter().any(|&a| a) {
+                let logits = match &self.generator.exec {
+                    GenExec::Native { model, .. } => {
+                        model.decode_step_active(&mut cont.sess, &last, &active)?
+                    }
+                    #[cfg(feature = "pjrt")]
+                    GenExec::Pjrt { .. } => {
+                        unreachable!("guarded by supports_continuous")
+                    }
+                };
+                let now = Instant::now();
+                for i in 0..b {
+                    if !active[i] {
+                        continue;
+                    }
+                    let slot = cont.slots[i].as_mut().unwrap();
+                    let row = &logits[i * vocab..(i + 1) * vocab];
+                    let tok =
+                        pick_token(row, slot.req.temperature, &mut slot.rng);
+                    slot.feed(tok, now);
+                }
+            }
+        }
+
+        // -- harvest: finished rows free their slot this same step -------
+        let occupancy = self.in_flight();
+        let mut finished: Vec<Slot> = Vec::new();
+        {
+            let cont = self.cont.as_mut().unwrap();
+            for i in 0..cont.slots.len() {
+                if matches!(&cont.slots[i], Some(s) if s.done) {
+                    finished.push(cont.slots[i].take().unwrap());
+                    cont.sess.reset_row(i);
+                }
+            }
+        }
+        for slot in finished {
+            let resp = self.finish(Done {
+                id: slot.req.id,
+                tokens: slot.generated,
+                text: None,
+                prompt_tokens: slot.prompt_tokens,
+                submitted: slot.submitted,
+                first_token_at: slot.first_token_at,
+                batch_size: occupancy,
+            });
+            out.push(resp);
+        }
+        Ok(out)
+    }
+
+    /// Drain the queue and the in-flight pool with the continuous
+    /// scheduler (arrival-free convenience wrapper; real-time callers
+    /// drive [`Server::step`] from their own event loop so arrivals can
+    /// join mid-flight).
+    pub fn run_continuous(&mut self) -> Result<Vec<GenResponse>> {
+        let mut all = Vec::new();
+        while self.pending() > 0 || self.in_flight() > 0 {
+            all.extend(self.step()?);
+        }
+        Ok(all)
+    }
+
+    /// Serve one **static** batch from the queue (up to the slot cap),
+    /// draining it to completion; returns the completed responses.
+    /// No-op on an empty queue. This is the vLLM-v0-style reference
+    /// scheduler: a 2-token request co-batched with a 64-token one
+    /// waits for the whole drain, which is exactly the head-of-line
+    /// blocking [`Server::step`] removes — kept because its greedy
+    /// per-request outputs are provably identical to the continuous
+    /// scheduler's, and because the PJRT backend is lock-step.
     ///
-    /// Every request keeps its own temperature and `max_new_tokens`;
-    /// accounting is in token space (`new_tokens` counts generated
-    /// tokens, `prompt_tokens` the post-clamp encoded prompt length).
+    /// Every request keeps its own temperature, `max_new_tokens` and
+    /// stop token; accounting is in token space and per request
+    /// (`latency_ms` runs from that request's `submit` to the batch
+    /// completing — queue wait included).
     pub fn run_once(&mut self) -> Result<Vec<GenResponse>> {
         if self.queue.is_empty() {
             return Ok(Vec::new());
         }
-        let b = self.generator.max_batch().min(self.queue.len());
-        let batch: Vec<GenRequest> = (0..b).map(|_| self.queue.pop_front().unwrap()).collect();
-        let prompts: Vec<String> = batch.iter().map(|r| r.prompt.clone()).collect();
-        let max_new: Vec<usize> = batch.iter().map(|r| r.max_new_tokens).collect();
-        let temps: Vec<f32> = batch.iter().map(|r| r.temperature).collect();
+        // requests resident in the continuous pool would be silently
+        // stranded (they complete only through step()): refuse to mix
+        ensure!(
+            self.in_flight() == 0,
+            "run_once while {} requests are in flight on the continuous \
+             scheduler; drain them with step()/run_continuous() first",
+            self.in_flight()
+        );
+        let b = self.max_batch.min(self.queue.len());
+        let batch: Vec<Pending> =
+            (0..b).map(|_| self.queue.pop_front().unwrap()).collect();
+        let prompts: Vec<String> =
+            batch.iter().map(|p| p.req.prompt.clone()).collect();
+        let max_new: Vec<usize> =
+            batch.iter().map(|p| p.req.max_new_tokens).collect();
+        let temps: Vec<f32> = batch.iter().map(|p| p.req.temperature).collect();
 
         let t0 = Instant::now();
         let gen = self.generator.generate_batch_ext(&prompts, &max_new, &temps)?;
         let dt_ms = t0.elapsed().as_secs_f64() * 1e3;
 
         let mut out = Vec::with_capacity(b);
+        // the batch emitted one token per row per sampling step, so the
+        // honest static TPOT is wall time over the *steps the batch
+        // ran* (the deepest row), not over any single row's own count —
+        // a 2-token row next to a 64-token one experienced the same
+        // per-token cadence as its neighbor
+        let steps = gen.tokens.iter().map(Vec::len).max().unwrap_or(0);
         let rows = batch
             .into_iter()
-            .zip(gen.texts)
             .zip(gen.tokens)
+            .zip(gen.texts)
             .zip(gen.prompt_tokens);
-        for (((req, text), toks), prompt_tokens) in rows {
-            let new_tokens = toks.len();
-            self.latencies.record_us(dt_ms * 1e3);
-            self.completed += 1;
-            self.tokens_out += new_tokens as u64;
-            out.push(GenResponse {
-                id: req.id,
-                text,
+        for (((p, mut toks), row_text), prompt_tokens) in rows {
+            if !toks.is_empty() {
+                self.tpot.record_us(dt_ms * 1e3 / steps as f64);
+            }
+            let mut text = Some(row_text);
+            // optional stop token: truncate at its first occurrence —
+            // the same sequence the continuous scheduler stops at (it
+            // just never generates the tail in the first place)
+            if let Some(stop) = p.req.stop {
+                if let Some(cut) = toks.iter().position(|&t| t == stop) {
+                    toks.truncate(cut);
+                    // the byte decode is lossy, so the pre-truncation
+                    // string cannot simply be sliced — recompute
+                    text = None;
+                }
+            }
+            let resp = self.finish(Done {
+                id: p.req.id,
+                tokens: toks,
+                text, // truncation dropped it; finish re-decodes then
                 prompt_tokens,
-                new_tokens,
-                latency_ms: dt_ms,
+                submitted: p.submitted,
+                // static batching streams nothing early: TTFT = latency
+                first_token_at: None,
                 batch_size: b,
             });
+            out.push(resp);
         }
         Ok(out)
     }
 
-    /// Drain the whole queue.
+    /// Drain the whole queue with the static scheduler.
     pub fn run_to_completion(&mut self) -> Result<Vec<GenResponse>> {
         let mut all = Vec::new();
         while !self.queue.is_empty() {
@@ -616,6 +1062,29 @@ mod tests {
     }
 
     #[test]
+    fn degenerate_logit_rows_fall_back_to_greedy() {
+        // pre-fix, each of these panicked inside Pcg32::weighted
+        // ("weights must have positive mass") and took the server down
+        let mut rng = Pcg32::seeded(2);
+        assert_eq!(pick_token(&[f32::NEG_INFINITY; 4], 0.7, &mut rng), 0);
+        let t = pick_token(&[f32::NAN; 4], 0.7, &mut rng);
+        assert!((0..4).contains(&(t as usize)));
+        // +inf spike: greedy fallback picks the spike deterministically,
+        // even past a NaN incumbent at index 0
+        assert_eq!(pick_token(&[0.0, f32::INFINITY, 0.0], 1.0, &mut rng), 1);
+        assert_eq!(pick_token(&[f32::NAN, f32::INFINITY], 1.0, &mut rng), 1);
+        // tiny temperature: every non-max weight underflows to zero but
+        // the max keeps unit mass — sampling must stay on the argmax
+        assert_eq!(pick_token(&[0.0, 100.0, -50.0], 1e-30, &mut rng), 1);
+        // mixed row: -inf entries carry no mass, finite ones still sample
+        for _ in 0..50 {
+            let t =
+                pick_token(&[f32::NEG_INFINITY, 3.0, f32::NEG_INFINITY], 0.8, &mut rng);
+            assert_eq!(t, 1);
+        }
+    }
+
+    #[test]
     fn decode_mode_parses() {
         assert_eq!(DecodeMode::parse("kv").unwrap(), DecodeMode::Kv);
         assert_eq!(
@@ -648,6 +1117,7 @@ mod tests {
         assert_eq!(a[0].len(), 8);
         assert_eq!(g1.backend_name(), "native");
         assert_eq!(g1.decode_name(), "kv");
+        assert!(g1.supports_continuous());
     }
 
     #[test]
@@ -658,6 +1128,7 @@ mod tests {
         let b = rc.generate_batch(&["hello ".into()], 10, 0.0).unwrap();
         assert_eq!(a, b);
         assert_eq!(rc.decode_name(), "recompute");
+        assert!(!rc.supports_continuous());
     }
 
     #[test]
@@ -693,6 +1164,7 @@ mod tests {
                 prompt: format!("prompt {id} "),
                 max_new_tokens: 4,
                 temperature: 0.0,
+                stop: None,
             });
         }
         let responses = server.run_to_completion().unwrap();
@@ -704,8 +1176,10 @@ mod tests {
         for r in &responses {
             assert_eq!(r.new_tokens, 4);
             assert!(r.latency_ms > 0.0);
+            assert!(r.ttft_ms > 0.0 && r.ttft_ms <= r.latency_ms);
         }
         assert_eq!(server.latencies.len(), 3);
+        assert_eq!(server.ttft.len(), 3);
         assert_eq!(server.tokens_out, 12); // token-space accounting
     }
 
@@ -718,6 +1192,7 @@ mod tests {
                 prompt: "shared prompt ".into(),
                 max_new_tokens: max_new,
                 temperature: 0.0,
+                stop: None,
             });
         }
         let mut responses = server.run_to_completion().unwrap();
@@ -725,6 +1200,71 @@ mod tests {
         let counts: Vec<usize> = responses.iter().map(|r| r.new_tokens).collect();
         assert_eq!(counts, vec![2, 7, 4]);
         assert_eq!(server.tokens_out, 13);
+    }
+
+    #[test]
+    fn continuous_scheduler_serves_the_queue() {
+        // smoke-level: the full equivalence suite lives in
+        // rust/tests/continuous_batching.rs
+        let mut server = Server::new(native_generator());
+        for id in 0..5 {
+            server.submit(GenRequest {
+                id,
+                prompt: format!("req {id} "),
+                max_new_tokens: 2 + id as usize,
+                temperature: 0.0,
+                stop: None,
+            });
+        }
+        let responses = server.run_continuous().unwrap();
+        assert_eq!(responses.len(), 5);
+        assert_eq!(server.pending(), 0);
+        assert_eq!(server.in_flight(), 0);
+        assert_eq!(server.tokens_out, (2 + 3 + 4 + 5 + 6) as u64);
+        for r in &responses {
+            assert_eq!(r.new_tokens, 2 + r.id as usize);
+            assert_eq!(r.tokens.len(), r.new_tokens);
+            assert!(r.ttft_ms <= r.latency_ms);
+        }
+    }
+
+    #[test]
+    fn continuous_rejected_off_the_kv_engine() {
+        let mut server = Server::new(recompute_generator());
+        server.submit(GenRequest {
+            id: 0,
+            prompt: "p".into(),
+            max_new_tokens: 2,
+            temperature: 0.0,
+            stop: None,
+        });
+        assert!(server.step().is_err());
+        // the static oracle still serves it
+        let responses = server.run_to_completion().unwrap();
+        assert_eq!(responses.len(), 1);
+    }
+
+    #[test]
+    fn set_max_batch_caps_both_schedulers() {
+        let mut server = Server::new(native_generator());
+        server.set_max_batch(2).unwrap();
+        for id in 0..5 {
+            server.submit(GenRequest {
+                id,
+                prompt: "x ".into(),
+                max_new_tokens: 2,
+                temperature: 0.0,
+                stop: None,
+            });
+        }
+        let first = server.run_once().unwrap();
+        assert_eq!(first.len(), 2);
+        assert!(first.iter().all(|r| r.batch_size == 2));
+        let rest = server.run_continuous().unwrap();
+        assert_eq!(rest.len(), 3);
+        assert!(rest.iter().all(|r| r.batch_size <= 2));
+        // live pool blocks resizing; empty pool allows it
+        assert!(server.set_max_batch(4).is_ok());
     }
 
     #[test]

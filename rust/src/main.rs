@@ -59,6 +59,12 @@ fn specs() -> Vec<Spec> {
         Spec::opt_default("max-new", "64", "tokens to generate"),
         Spec::opt_default("temperature", "0", "sampling temperature (0=greedy)"),
         Spec::opt_default("requests", "16", "serve-demo request count"),
+        Spec::opt_default(
+            "sched",
+            "continuous",
+            "serve-demo scheduler (continuous|static); continuous needs \
+             the native KV engine and falls back to static elsewhere",
+        ),
         Spec::opt_default("seq", "256", "sim/hw: context length"),
         Spec::opt_default("tokens", "1", "sim: tokens to process"),
         Spec::opt_default("norm", "consmax", "sim: normalizer"),
@@ -482,6 +488,18 @@ fn run_generate_pjrt(args: &Args) -> Result<()> {
 fn serve_demo_over(mut server: Server<'_>, args: &Args) -> Result<()> {
     let n = args.get_usize("requests", 16)?;
     let max_new = args.get_usize("max-new", 32)?;
+    let continuous = match args.get_string("sched", "continuous").as_str() {
+        "continuous" if server.generator.supports_continuous() => true,
+        "continuous" => {
+            log::warn!(
+                "continuous batching needs the native KV engine; \
+                 falling back to the static scheduler"
+            );
+            false
+        }
+        "static" => false,
+        other => bail!("unknown scheduler {other:?} (continuous|static)"),
+    };
     let mut rng = Pcg32::seeded(args.get_u64("seed", 0)?);
     let prompts = [
         "The transformer ", "Attention lets ", "Hardware that ",
@@ -491,25 +509,39 @@ fn serve_demo_over(mut server: Server<'_>, args: &Args) -> Result<()> {
         server.submit(GenRequest {
             id,
             prompt: prompts[rng.below(prompts.len() as u64) as usize].into(),
-            max_new_tokens: max_new,
+            // short/long budget mix: this is the workload where the
+            // schedulers actually differ (head-of-line blocking)
+            max_new_tokens: if id % 4 == 0 { max_new } else { max_new / 4 + 1 },
             temperature: 0.8,
+            stop: None,
         });
     }
     let t0 = std::time::Instant::now();
-    let responses = server.run_to_completion()?;
+    let responses = if continuous {
+        server.run_continuous()?
+    } else {
+        server.run_to_completion()?
+    };
     let wall = t0.elapsed().as_secs_f64();
     println!(
         "served {} requests in {wall:.2}s ({:.1} tok/s) on the {} backend \
-         ({} decode, {} threads); latency p50 {:.0} ms p95 {:.0} ms \
-         (batch sizes up to {})",
+         ({} decode, {} scheduler, {} threads, batch slots {})",
         responses.len(),
         server.tokens_out as f64 / wall,
         server.generator.backend_name(),
         server.generator.decode_name(),
+        if continuous { "continuous" } else { "static" },
         consmax::runtime::parallel::current_threads(),
+        server.generator.max_batch(),
+    );
+    println!(
+        "per-request completion p50 {:.0} ms p95 {:.0} ms | TTFT p50 {:.0} ms \
+         p99 {:.0} ms | TPOT p50 {:.2} ms/tok",
         server.latencies.percentile(50.0).unwrap_or(0.0) / 1e3,
         server.latencies.percentile(95.0).unwrap_or(0.0) / 1e3,
-        server.generator.max_batch(),
+        server.ttft.percentile(50.0).unwrap_or(0.0) / 1e3,
+        server.ttft.percentile(99.0).unwrap_or(0.0) / 1e3,
+        server.tpot.percentile(50.0).unwrap_or(0.0) / 1e3,
     );
     Ok(())
 }

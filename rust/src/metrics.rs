@@ -108,6 +108,11 @@ impl Metrics {
 #[derive(Debug, Default, Clone)]
 pub struct LatencyRecorder {
     samples_us: Vec<f64>,
+    /// Lazily maintained ascending view of `samples_us`. A percentile
+    /// query used to clone and sort the full sample vec on every call
+    /// (O(n log n) per percentile, per report); now the sort runs at
+    /// most once per batch of new records and repeat queries are O(1).
+    sorted: std::cell::RefCell<Vec<f64>>,
 }
 
 impl LatencyRecorder {
@@ -127,8 +132,13 @@ impl LatencyRecorder {
         if self.samples_us.is_empty() {
             return None;
         }
-        let mut s = self.samples_us.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut s = self.sorted.borrow_mut();
+        if s.len() != self.samples_us.len() {
+            // samples arrived since the last query: rebuild the view
+            s.clear();
+            s.extend_from_slice(&self.samples_us);
+            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        }
         // nearest-rank method: idx = ceil(p/100 * N) - 1
         let rank = ((p / 100.0) * s.len() as f64).ceil() as isize - 1;
         let idx = rank.max(0) as usize;
@@ -188,6 +198,23 @@ mod tests {
         assert_eq!(l.percentile(99.0), Some(99.0));
         assert_eq!(l.percentile(0.0), Some(1.0));
         assert!((l.mean().unwrap() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_cache_tracks_new_samples() {
+        // the sorted view is a cache: records landing after a query must
+        // invalidate it, and query order must not affect results
+        let mut l = LatencyRecorder::default();
+        l.record_us(10.0);
+        assert_eq!(l.percentile(50.0), Some(10.0));
+        l.record_us(5.0);
+        l.record_us(1.0);
+        assert_eq!(l.percentile(0.0), Some(1.0));
+        assert_eq!(l.percentile(100.0), Some(10.0));
+        l.record_us(20.0);
+        assert_eq!(l.percentile(100.0), Some(20.0));
+        assert_eq!(l.percentile(50.0), Some(5.0));
+        assert_eq!(l.len(), 4);
     }
 
     #[test]

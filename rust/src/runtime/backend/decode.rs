@@ -190,6 +190,20 @@ impl DecodeSession {
         self.len[r]
     }
 
+    /// Clear one row back to the empty state (length zero, empty
+    /// history) without touching any other row — the slot-lifecycle
+    /// seam of the continuous-batching scheduler: a finished request
+    /// frees its slot in O(1), and the next
+    /// [`NativeModel::prefill_rows`] overwrites the row's cache in
+    /// place. Per-row KV blocks are disjoint (batch-major layout), so
+    /// in-flight neighbors never observe the reset.
+    ///
+    /// [`NativeModel::prefill_rows`]: super::NativeModel::prefill_rows
+    pub fn reset_row(&mut self, r: usize) {
+        self.len[r] = 0;
+        self.history[r].clear();
+    }
+
     /// Split the session into disjoint per-row mutable views — the unit
     /// of parallelism for batched prefill and decode.
     pub(crate) fn rows_mut(&mut self) -> Vec<RowMut<'_>> {
@@ -286,6 +300,25 @@ mod tests {
         assert_eq!(*s.k.last().unwrap(), 2.0);
         assert_eq!(s.len_of(0), 0);
         assert_eq!(s.len_of(1), 5);
+    }
+
+    #[test]
+    fn reset_row_clears_only_that_row() {
+        let cfg = ModelConfig::builtin("tiny", "consmax").unwrap();
+        let mut s = DecodeSession::new(&cfg, 2);
+        {
+            let mut rows = s.rows_mut();
+            rows[0].reset(&[1, 2, 3]);
+            *rows[0].len = 3;
+            rows[1].reset(&[7, 8]);
+            *rows[1].len = 2;
+        }
+        s.reset_row(0);
+        assert_eq!(s.len_of(0), 0);
+        assert!(s.history[0].is_empty());
+        // the neighboring in-flight row is untouched
+        assert_eq!(s.len_of(1), 2);
+        assert_eq!(s.history[1].iter().copied().collect::<Vec<_>>(), vec![7, 8]);
     }
 
     #[test]

@@ -468,13 +468,38 @@ impl NativeModel {
             rows.len(),
             sess.batch()
         );
+        let pairs: Vec<(usize, &[i32])> = rows
+            .iter()
+            .enumerate()
+            .map(|(r, seq)| (r, seq.as_slice()))
+            .collect();
+        self.prefill_rows(sess, &pairs)
+    }
+
+    /// Encode prompts into a **subset** of the session's rows — the
+    /// join seam of the continuous-batching scheduler. Each `(slot,
+    /// prompt)` pair resets that row and prefills it at its own length
+    /// (in parallel across joiners), while every other row's cache,
+    /// length and history stay untouched, so requests join a live
+    /// session mid-flight without disturbing in-flight neighbors.
+    /// Returns next-token logits `(pairs.len(), vocab)` in input order.
+    pub fn prefill_rows(
+        &self,
+        sess: &mut DecodeSession,
+        pairs: &[(usize, &[i32])],
+    ) -> Result<Vec<f32>> {
         self.check_session(sess)?;
-        for (r, seq) in rows.iter().enumerate() {
-            ensure!(!seq.is_empty(), "prefill: row {r} is empty");
+        for &(slot, seq) in pairs {
+            ensure!(
+                slot < sess.batch(),
+                "prefill_rows: slot {slot} out of range for a session of {}",
+                sess.batch()
+            );
+            ensure!(!seq.is_empty(), "prefill_rows: slot {slot} got an empty prompt");
         }
         let v = self.cfg.vocab;
         let ctx = self.cfg.ctx;
-        let mut out = vec![0.0f32; rows.len() * v];
+        let mut out = vec![0.0f32; pairs.len() * v];
 
         struct Work<'a> {
             row: RowMut<'a>,
@@ -482,18 +507,16 @@ impl NativeModel {
             seq: &'a [i32],
             err: Option<anyhow::Error>,
         }
-        let mut items: Vec<Work<'_>> = sess
-            .rows_mut()
-            .into_iter()
-            .zip(out.chunks_mut(v))
-            .zip(rows)
-            .map(|((row, logits), seq)| Work {
-                row,
-                logits,
-                seq: seq.as_slice(),
-                err: None,
-            })
-            .collect();
+        let mut views: Vec<Option<RowMut<'_>>> =
+            sess.rows_mut().into_iter().map(Some).collect();
+        let mut items: Vec<Work<'_>> = Vec::with_capacity(pairs.len());
+        for (&(slot, seq), logits) in pairs.iter().zip(out.chunks_mut(v)) {
+            let row = match views[slot].take() {
+                Some(row) => row,
+                None => bail!("prefill_rows: duplicate slot {slot}"),
+            };
+            items.push(Work { row, logits, seq, err: None });
+        }
         parallel::par_items(&mut items, |_, it| {
             let w = it.seq.len().min(ctx);
             let window = &it.seq[it.seq.len() - w..];
@@ -923,6 +946,67 @@ mod tests {
             let oracle = m.next_logits(&[seq]).unwrap();
             assert_eq!(kv, oracle, "{norm}: decode_step vs oracle");
         }
+    }
+
+    #[test]
+    fn prefill_rows_joins_without_disturbing_neighbors() {
+        // prefill rows {0, 2} of a live 3-row session while row 1 is
+        // mid-flight: joiner logits match a fresh solo prefill and the
+        // in-flight row's state is untouched
+        let m = tiny_model("consmax");
+        let mut sess = DecodeSession::new(&m.cfg, 3);
+        let resident: Vec<i32> = (0..12).map(|i| (i * 3 + 2) % 256).collect();
+        m.prefill(
+            &mut sess,
+            &[vec![1, 2], resident.clone(), vec![3, 4]],
+        )
+        .unwrap();
+        m.decode_step_active(&mut sess, &[0, 9, 0], &[false, true, false])
+            .unwrap();
+        let len_mid = sess.len_of(1);
+
+        let a: Vec<i32> = (0..7).map(|i| (i * 11 + 5) % 256).collect();
+        let b: Vec<i32> = (0..15).map(|i| (i * 13 + 1) % 256).collect();
+        let joined = m
+            .prefill_rows(
+                &mut sess,
+                &[(2, a.as_slice()), (0, b.as_slice())],
+            )
+            .unwrap();
+        let v = m.cfg.vocab;
+        assert_eq!(joined.len(), 2 * v);
+        assert_eq!(sess.len_of(2), 7);
+        assert_eq!(sess.len_of(0), 15);
+        assert_eq!(sess.len_of(1), len_mid, "in-flight row disturbed");
+
+        let mut solo = DecodeSession::new(&m.cfg, 1);
+        let ora = m.prefill(&mut solo, &[a]).unwrap();
+        assert_eq!(&joined[..v], ora.as_slice(), "slot 2 vs solo prefill");
+        let orb = m.prefill(&mut solo, &[b]).unwrap();
+        assert_eq!(&joined[v..], orb.as_slice(), "slot 0 vs solo prefill");
+
+        // the mid-flight row still decodes as if nothing happened
+        let step = m
+            .decode_step_active(&mut sess, &[0, 17, 0], &[false, true, false])
+            .unwrap();
+        assert!(step[v..2 * v].iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn prefill_rows_rejects_bad_slots() {
+        let m = tiny_model("consmax");
+        let mut sess = DecodeSession::new(&m.cfg, 2);
+        let seq = [1i32, 2, 3];
+        // out-of-range slot
+        assert!(m.prefill_rows(&mut sess, &[(2, seq.as_slice())]).is_err());
+        // duplicate slot
+        assert!(m
+            .prefill_rows(&mut sess, &[(0, seq.as_slice()), (0, seq.as_slice())])
+            .is_err());
+        // empty prompt
+        assert!(m.prefill_rows(&mut sess, &[(0, [].as_slice())]).is_err());
+        // empty join set is a no-op
+        assert_eq!(m.prefill_rows(&mut sess, &[]).unwrap().len(), 0);
     }
 
     #[test]

@@ -1,0 +1,280 @@
+//! Scheduler-equivalence suite: the continuous-batching slot pool must
+//! emit **bit-identical greedy tokens per request** to the static
+//! reference batcher, no matter which neighbors share its decode steps
+//! or when it joined the pool (DESIGN.md §Serving seam).
+//!
+//! Why this holds: per-row KV blocks are disjoint and every row attends
+//! only to its own cached positions, so a row's logits are a function
+//! of its own tokens alone — prefill-into-a-live-session
+//! (`NativeModel::prefill_rows`) and `decode_step_active` over an
+//! arbitrary active mask perform the same float ops in the same order
+//! as a solo run. The suite also pins the *accounting* fix: under the
+//! continuous scheduler, `latency_ms` is per-row completion time (a
+//! 2-token request co-resident with a 48-token one reports a smaller
+//! latency), never the batch's wall time.
+
+use consmax::config::ModelConfig;
+use consmax::coordinator::{
+    DecodeMode, GenRequest, GenResponse, Generator, ParamStore, Server,
+};
+use consmax::prop_assert;
+use consmax::util::proptest::{run_property, Gen};
+
+fn setup() -> (ModelConfig, ParamStore) {
+    let cfg = ModelConfig::builtin("tiny", "consmax").unwrap();
+    let store = ParamStore::init(&cfg, 5).unwrap();
+    (cfg, store)
+}
+
+/// Greedy single-request reference: the static oracle at batch 1.
+fn oracle_tokens(
+    cfg: &ModelConfig,
+    store: &ParamStore,
+    prompt: &str,
+    max_new: usize,
+) -> Vec<i32> {
+    let mut g = Generator::native(cfg, store, 0).unwrap();
+    g.generate_batch_ext(&[prompt.to_string()], &[max_new], &[0.0])
+        .unwrap()
+        .tokens
+        .remove(0)
+}
+
+fn greedy_req(id: u64, prompt: &str, max_new: usize) -> GenRequest {
+    GenRequest {
+        id,
+        prompt: prompt.into(),
+        max_new_tokens: max_new,
+        temperature: 0.0,
+        stop: None,
+    }
+}
+
+fn by_id(mut responses: Vec<GenResponse>) -> Vec<GenResponse> {
+    responses.sort_by_key(|r| r.id);
+    responses
+}
+
+#[test]
+fn continuous_matches_static_oracle_per_request() {
+    // mixed prompts and budgets co-resident in one pool: every request
+    // decodes exactly as it would alone
+    let (cfg, store) = setup();
+    let reqs = [
+        ("The constant softmax ", 9usize),
+        ("Attention ", 1),
+        ("x", 6),
+        ("", 4), // empty prompt seeds a single space, same as the oracle
+        ("A much longer prompt that spans a few more byte tokens ", 12),
+        ("tail ", 3),
+    ];
+    let mut server = Server::new(Generator::native(&cfg, &store, 0).unwrap());
+    for (id, (prompt, max_new)) in reqs.iter().enumerate() {
+        server.submit(greedy_req(id as u64, prompt, *max_new));
+    }
+    let responses = by_id(server.run_continuous().unwrap());
+    assert_eq!(responses.len(), reqs.len());
+    for (r, (prompt, max_new)) in responses.iter().zip(&reqs) {
+        let want = oracle_tokens(&cfg, &store, prompt, *max_new);
+        assert_eq!(
+            r.tokens, want,
+            "req {} diverged from the solo static oracle",
+            r.id
+        );
+        assert_eq!(r.new_tokens, *max_new);
+    }
+}
+
+#[test]
+fn mid_flight_joins_do_not_disturb_residents() {
+    // join while neighbors are mid-decode, leave before they finish:
+    // ragged prompts, mixed budgets, staggered submission
+    let (cfg, store) = setup();
+    let mut server = Server::new(Generator::native(&cfg, &store, 0).unwrap());
+    server.submit(greedy_req(0, "long resident request ", 16));
+    server.submit(greedy_req(1, "short ", 2));
+    // a few ticks: req 1 completes and frees its slot mid-flight
+    let mut responses = Vec::new();
+    for _ in 0..4 {
+        responses.extend(server.step().unwrap());
+    }
+    // late joiners take the freed slot while req 0 is still decoding
+    server.submit(greedy_req(2, "late joiner A ", 5));
+    server.submit(greedy_req(3, "late joiner B", 8));
+    responses.extend(server.run_continuous().unwrap());
+
+    let responses = by_id(responses);
+    assert_eq!(responses.len(), 4);
+    let cases = [
+        ("long resident request ", 16usize),
+        ("short ", 2),
+        ("late joiner A ", 5),
+        ("late joiner B", 8),
+    ];
+    for (r, (prompt, max_new)) in responses.iter().zip(&cases) {
+        let want = oracle_tokens(&cfg, &store, prompt, *max_new);
+        assert_eq!(r.tokens, want, "req {} diverged", r.id);
+    }
+}
+
+#[test]
+fn join_leave_proptest_ragged_prompts_mixed_budgets() {
+    // randomized join/leave churn: random prompts (incl. over-ctx ones
+    // that clamp), random budgets (incl. zero), random step interleave
+    // — every request must match its solo oracle bit-for-bit
+    let (cfg, store) = setup();
+    run_property("continuous == static oracle under churn", 6, |g: &mut Gen| {
+        let n = g.usize(3, 9);
+        let mut reqs: Vec<(String, usize)> = Vec::new();
+        for _ in 0..n {
+            let plen = g.usize(0, 90); // ctx is 64: some prompts clamp
+            let prompt: String = (0..plen)
+                .map(|_| (b'a' + (g.usize(0, 26) as u8)) as char)
+                .collect();
+            let max_new = g.usize(0, 8);
+            reqs.push((prompt, max_new));
+        }
+        let mut server =
+            Server::new(Generator::native(&cfg, &store, 0).unwrap());
+        let split = g.usize(0, n + 1);
+        for (id, (prompt, max_new)) in reqs.iter().take(split).enumerate() {
+            server.submit(greedy_req(id as u64, prompt, *max_new));
+        }
+        let mut responses = Vec::new();
+        for _ in 0..g.usize(0, 5) {
+            responses.extend(server.step().unwrap());
+        }
+        for (id, (prompt, max_new)) in
+            reqs.iter().enumerate().skip(split)
+        {
+            server.submit(greedy_req(id as u64, prompt, *max_new));
+        }
+        responses.extend(server.run_continuous().unwrap());
+        prop_assert!(
+            responses.len() == reqs.len(),
+            "served {} of {} requests",
+            responses.len(),
+            reqs.len()
+        );
+        let responses = {
+            let mut r = responses;
+            r.sort_by_key(|x| x.id);
+            r
+        };
+        for (r, (prompt, max_new)) in responses.iter().zip(&reqs) {
+            let want = oracle_tokens(&cfg, &store, prompt, *max_new);
+            prop_assert!(
+                r.tokens == want,
+                "req {} (prompt {:?}, max_new {}) diverged: {:?} vs {:?}",
+                r.id,
+                prompt,
+                max_new,
+                r.tokens,
+                want
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn slots_are_reused_past_the_pool_size() {
+    // more requests than slots: finished rows free their slot the step
+    // they complete, and the queue streams through the pool
+    let (cfg, store) = setup();
+    let mut server = Server::new(Generator::native(&cfg, &store, 0).unwrap());
+    server.set_max_batch(3).unwrap();
+    let n = 11u64;
+    for id in 0..n {
+        server.submit(greedy_req(id, "recycled slot ", 2 + (id % 3) as usize));
+    }
+    let responses = by_id(server.run_continuous().unwrap());
+    assert_eq!(responses.len(), n as usize);
+    assert_eq!(server.in_flight(), 0);
+    assert!(responses.iter().all(|r| r.batch_size <= 3));
+    for r in &responses {
+        let want =
+            oracle_tokens(&cfg, &store, "recycled slot ", 2 + (r.id % 3) as usize);
+        assert_eq!(r.tokens, want, "req {} diverged", r.id);
+    }
+}
+
+#[test]
+fn stop_token_ends_generation_early_on_both_schedulers() {
+    let (cfg, store) = setup();
+    let full = oracle_tokens(&cfg, &store, "stop after three ", 16);
+    let stop = full[3];
+    // the stop token must not appear earlier (pick the first occurrence)
+    let cut = full.iter().position(|&t| t == stop).unwrap();
+    let want = &full[..cut];
+
+    let mut req = greedy_req(0, "stop after three ", 16);
+    req.stop = Some(stop);
+
+    let mut cont = Server::new(Generator::native(&cfg, &store, 0).unwrap());
+    cont.submit(req.clone());
+    let r = by_id(cont.run_continuous().unwrap()).remove(0);
+    assert_eq!(r.tokens, want, "continuous: stop token not honored");
+    assert_eq!(r.new_tokens, cut);
+    assert_eq!(cont.tokens_out, cut as u64);
+
+    let mut stat = Server::new(Generator::native(&cfg, &store, 0).unwrap());
+    stat.submit(req);
+    let r = stat.run_to_completion().unwrap().remove(0);
+    assert_eq!(r.tokens, want, "static: stop token not honored");
+    assert_eq!(r.new_tokens, cut);
+}
+
+#[test]
+fn zero_budget_requests_complete_immediately() {
+    let (cfg, store) = setup();
+    let mut server = Server::new(Generator::native(&cfg, &store, 0).unwrap());
+    server.submit(greedy_req(0, "no tokens please", 0));
+    server.submit(greedy_req(1, "some tokens ", 3));
+    let responses = by_id(server.run_continuous().unwrap());
+    assert_eq!(responses.len(), 2);
+    assert_eq!(responses[0].new_tokens, 0);
+    assert_eq!(responses[0].text, "");
+    assert!(responses[0].prompt_tokens > 0);
+    assert_eq!(responses[1].new_tokens, 3);
+    assert_eq!(server.tokens_out, 3);
+}
+
+#[test]
+fn latency_is_per_row_completion_not_batch_wall() {
+    // a 2-token request co-resident with a 48-token one must report a
+    // (much) smaller completion latency — pre-fix, every row of a batch
+    // reported the same batch wall time
+    let (cfg, store) = setup();
+    let mut server = Server::new(Generator::native(&cfg, &store, 0).unwrap());
+    server.submit(greedy_req(0, "short one ", 2));
+    server.submit(greedy_req(1, "long one ", 48));
+    let responses = by_id(server.run_continuous().unwrap());
+    let (short, long) = (&responses[0], &responses[1]);
+    assert_eq!(short.new_tokens, 2);
+    assert_eq!(long.new_tokens, 48);
+    assert!(
+        short.latency_ms < long.latency_ms,
+        "per-request latency lost: short {} ms vs long {} ms",
+        short.latency_ms,
+        long.latency_ms
+    );
+    for r in [short, long] {
+        assert!(r.ttft_ms > 0.0);
+        assert!(r.ttft_ms <= r.latency_ms);
+    }
+    // TTFT recorder saw both requests; TPOT only the token-emitting ones
+    assert_eq!(server.ttft.len(), 2);
+    assert_eq!(server.tpot.len(), 2);
+}
+
+#[test]
+fn recompute_oracle_cannot_run_continuous() {
+    let (cfg, store) = setup();
+    let gen =
+        Generator::native_with(&cfg, &store, 0, DecodeMode::Recompute).unwrap();
+    let mut server = Server::new(gen);
+    server.submit(greedy_req(0, "p ", 2));
+    assert!(server.step().is_err());
+    assert_eq!(server.run_to_completion().unwrap().len(), 1);
+}

@@ -174,12 +174,14 @@ fn per_request_temperature_is_respected() {
         prompt: "hot prompt ".into(),
         max_new_tokens: 10,
         temperature: 5.0, // near-uniform sampling
+        stop: None,
     });
     server.submit(GenRequest {
         id: 1,
         prompt: "steady prompt ".into(),
         max_new_tokens: 10,
         temperature: 0.0, // greedy
+        stop: None,
     });
     let mut responses = server.run_to_completion().unwrap();
     responses.sort_by_key(|r| r.id);
@@ -207,6 +209,7 @@ fn token_space_accounting() {
         prompt,
         max_new_tokens: 5,
         temperature: 0.0,
+        stop: None,
     });
     let r = &server.run_to_completion().unwrap()[0];
     assert_eq!(
@@ -223,6 +226,7 @@ fn token_space_accounting() {
         prompt: long,
         max_new_tokens: 8,
         temperature: 0.0,
+        stop: None,
     });
     let r = &server.run_to_completion().unwrap()[0];
     assert_eq!(r.prompt_tokens, cfg.ctx - 8);

@@ -213,6 +213,7 @@ fn server_serves_all_requests() {
             prompt: format!("prompt {id} "),
             max_new_tokens: 6,
             temperature: 0.0,
+            stop: None,
         });
     }
     let responses = server.run_to_completion().expect("serve");
