@@ -15,15 +15,18 @@
 //! * `static` — the vLLM-v0-style reference batcher (pop a batch, drain
 //!   it); greedy outputs are identical, scheduling is not.
 //!
-//! Run: `cargo run --release --example serve -- [requests] [max_new] [ckpt] [decode] [threads] [sched]`
+//! Run: `cargo run --release --example serve -- [requests] [max_new] [ckpt] [decode] [threads] [sched] [kv_mem_mb] [kv_dtype] [max_batch]`
 //! where `decode` is `kv` (default) or `recompute` (the O(T²) oracle;
 //! forces the static scheduler) and `threads` sizes the native worker
+//! pool. `kv_mem_mb`/`kv_dtype` switch the continuous scheduler onto
+//! the paged KV-cache pool (block tables, prefix sharing, byte-budget
+//! admission — DESIGN.md §KV-memory seam); `max_batch` caps the slot
 //! pool. Uses runs/tiny_consmax.ckpt if present, otherwise serves from
 //! random weights (still exercises the full path). `--help` prints this
 //! usage.
 
 use anyhow::Result;
-use consmax::config::ModelConfig;
+use consmax::config::{KvCacheConfig, KvDtype, ModelConfig};
 use consmax::coordinator::{
     DecodeMode, GenRequest, Generator, ParamStore, Server,
 };
@@ -31,18 +34,23 @@ use consmax::runtime::parallel;
 use consmax::util::rng::Pcg32;
 
 const USAGE: &str = "\
-usage: serve [requests] [max_new] [ckpt] [decode] [threads] [sched]
+usage: serve [requests] [max_new] [ckpt] [decode] [threads] [sched] [kv_mem_mb] [kv_dtype] [max_batch]
 
-  requests  number of Poisson-arrival requests        (default 24)
-  max_new   token budget of the *long* requests; the
-            short ones get a quarter of it            (default 24)
-  ckpt      checkpoint path                           (default runs/tiny_consmax.ckpt)
-  decode    kv | recompute                            (default kv)
-  threads   native worker-pool size; rows of a batch
-            decode in parallel                        (default: CONSMAX_THREADS
-                                                       env var, else all cores)
-  sched     continuous | static                       (default continuous;
-                                                       recompute forces static)
+  requests   number of Poisson-arrival requests        (default 24)
+  max_new    token budget of the *long* requests; the
+             short ones get a quarter of it            (default 24)
+  ckpt       checkpoint path                           (default runs/tiny_consmax.ckpt)
+  decode     kv | recompute                            (default kv)
+  threads    native worker-pool size; rows of a batch
+             decode in parallel                        (default: CONSMAX_THREADS
+                                                        env var, else all cores)
+  sched      continuous | static                       (default continuous;
+                                                        recompute forces static)
+  kv_mem_mb  paged KV byte budget in MiB; 0 = paged
+             without a cap; '-' = dense layout         (default '-')
+  kv_dtype   f32 | f16 | bf16 KV storage (paged only)  (default f32)
+  max_batch  serving slot cap; paged pools may raise
+             it past the dense engine cap              (default: engine max)
 ";
 
 fn main() -> Result<()> {
@@ -91,9 +99,34 @@ fn main() -> Result<()> {
         ParamStore::init(&cfg, 0)?
     };
 
+    // optional paged-KV knobs: [kv_mem_mb] [kv_dtype] [max_batch]
+    let kv = match args.get(7).map(String::as_str) {
+        None | Some("-") => match args.get(8) {
+            // a dtype alone still opts into paging (budgetless pool)
+            Some(d) if d != "-" => Some(KvCacheConfig {
+                dtype: KvDtype::parse(d)?,
+                ..KvCacheConfig::default()
+            }),
+            _ => None,
+        },
+        Some(raw) => {
+            let mb: usize = raw.parse().map_err(|_| {
+                anyhow::anyhow!("kv_mem_mb must be an integer or '-', got {raw:?}")
+            })?;
+            let mut kv = KvCacheConfig::default();
+            if let Some(d) = args.get(8).filter(|d| d.as_str() != "-") {
+                kv.dtype = KvDtype::parse(d)?;
+            }
+            if mb > 0 {
+                kv = kv.with_mem_mb(mb);
+            }
+            Some(kv)
+        }
+    };
+
     let generator = Generator::native_with(&cfg, &store, 7, mode)?;
     println!(
-        "model {}: ctx {}, {} decode, {} scheduler, slots up to {}, {} threads\n",
+        "model {}: ctx {}, {} decode, {} scheduler, slots up to {}, {} threads",
         cfg.key,
         cfg.ctx,
         generator.decode_name(),
@@ -102,6 +135,31 @@ fn main() -> Result<()> {
         parallel::current_threads()
     );
     let mut server = Server::new(generator);
+    if let Some(kv) = kv {
+        if continuous {
+            server.set_kv_config(Some(kv))?;
+            println!(
+                "paged KV pool: dtype {}, {} tokens/block{}",
+                kv.dtype.name(),
+                kv.block_tokens,
+                kv.mem_bytes
+                    .map(|b| format!(", budget {} MiB", b / (1024 * 1024)))
+                    .unwrap_or_default()
+            );
+        } else {
+            println!(
+                "note: kv knobs back the continuous scheduler's paged \
+                 pool; this static run keeps the dense KV layout"
+            );
+        }
+    }
+    if let Some(raw) = args.get(9) {
+        let mb: usize = raw
+            .parse()
+            .map_err(|_| anyhow::anyhow!("max_batch must be an integer"))?;
+        server.set_max_batch(mb)?;
+    }
+    println!();
 
     // Poisson arrival schedule: randomized prompt mix and a short/long
     // budget mix (3 short : 1 long) — the workload where static
@@ -179,5 +237,12 @@ fn main() -> Result<()> {
     println!(
         "batching:   {batched}/{n_requests} responses shared the engine with a neighbor"
     );
+    let st = server.stats();
+    if st.kv_paged {
+        println!(
+            "paged KV:   {} blocks x {} tokens, {} free at drain, {} preemption(s)",
+            st.kv_total_blocks, st.kv_block_tokens, st.kv_free_blocks, st.preemptions
+        );
+    }
     Ok(())
 }

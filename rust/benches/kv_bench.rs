@@ -1,0 +1,226 @@
+//! KV-memory scaling: resident concurrency at a **fixed byte budget**,
+//! dense f32 per-row caches vs the paged pool with fp16 storage
+//! (EXPERIMENTS.md §KV memory scaling, DESIGN.md §KV-memory seam).
+//!
+//! Run: `cargo bench --bench kv_bench` (native, no artifacts). One
+//! saturating greedy workload (every request submitted up front) is
+//! served three ways under the same KV byte budget:
+//!
+//! * **dense f32** — the budget buys `budget / dense_row_bytes` whole
+//!   rows; the slot pool is capped there (the pre-paging memory model:
+//!   every slot pre-reserves a full `ctx` row);
+//! * **paged f32** — same bytes as a block pool: short rows stop
+//!   wasting the tail of their reservation;
+//! * **paged f16** — half the bytes per token on top.
+//!
+//! Emits `BENCH_kv.json` and exits non-zero unless paged-f16 holds
+//! **≥ 2× the dense resident concurrency** at the same budget, at
+//! tokens/s no worse than [`TOKS_FLOOR`]× dense (equal within noise —
+//! the correctness suites pin paged-f32 bitwise to dense, and fp16 to
+//! the documented tolerance). CI smoke-runs this so the artifact and
+//! the memory-scaling claim cannot rot.
+
+use std::time::Instant;
+
+use consmax::config::{KvCacheConfig, KvDtype, ModelConfig};
+use consmax::coordinator::{GenRequest, Generator, ParamStore, Server};
+use consmax::util::bench::print_table;
+use consmax::util::json::Json;
+
+/// Saturating request count (all submitted before the first step).
+const N_REQUESTS: usize = 32;
+/// Prompt length in byte-tokens (clamp-free: < ctx - MAX_NEW).
+const PROMPT_TOKENS: usize = 30;
+/// Greedy tokens generated per request.
+const MAX_NEW: usize = 8;
+/// Budget in dense rows: the dense baseline serves exactly this many
+/// co-resident requests, and the paged pools get the same bytes.
+const DENSE_ROWS: usize = 4;
+/// Paged block size in tokens.
+const BLOCK_TOKENS: usize = 16;
+/// Residency floor: paged-f16 must hold at least this multiple of the
+/// dense baseline's peak co-resident requests (acceptance criterion).
+const RESIDENCY_FLOOR: f64 = 2.0;
+/// Throughput guard: paged-f16 tok/s must stay within noise of dense.
+const TOKS_FLOOR: f64 = 0.6;
+
+struct RunStats {
+    label: String,
+    peak_resident: usize,
+    tok_s: f64,
+    wall_s: f64,
+    tokens: u64,
+    preemptions: u64,
+    kv_blocks: usize,
+    kv_shared_peak: usize,
+}
+
+fn workload() -> Vec<GenRequest> {
+    let prompt: String = "the paged kv cache block pool "
+        .chars()
+        .cycle()
+        .take(PROMPT_TOKENS)
+        .collect();
+    (0..N_REQUESTS as u64)
+        .map(|id| GenRequest {
+            id,
+            prompt: prompt.clone(),
+            max_new_tokens: MAX_NEW,
+            temperature: 0.0,
+            stop: None,
+        })
+        .collect()
+}
+
+fn run(
+    cfg: &ModelConfig,
+    store: &ParamStore,
+    label: &str,
+    kv: Option<KvCacheConfig>,
+    slots: usize,
+) -> anyhow::Result<RunStats> {
+    let mut server = Server::new(Generator::native(cfg, store, 7)?);
+    server.set_kv_config(kv)?;
+    server.set_max_batch(slots)?;
+    for req in workload() {
+        server.submit(req);
+    }
+    let mut peak = 0usize;
+    let mut shared_peak = 0usize;
+    let t0 = Instant::now();
+    while server.pending() > 0 || server.in_flight() > 0 {
+        server.step()?;
+        peak = peak.max(server.in_flight());
+        let st = server.stats();
+        shared_peak = shared_peak.max(st.kv_shared_blocks);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let st = server.stats();
+    Ok(RunStats {
+        label: label.to_string(),
+        peak_resident: peak,
+        tok_s: server.tokens_out as f64 / wall_s,
+        wall_s,
+        tokens: server.tokens_out,
+        preemptions: st.preemptions,
+        kv_blocks: st.kv_total_blocks,
+        kv_shared_peak: shared_peak,
+    })
+}
+
+fn stats_json(s: &RunStats) -> Json {
+    Json::from_pairs([
+        ("peak_resident".to_string(), Json::from(s.peak_resident)),
+        ("tok_s".to_string(), Json::from(s.tok_s)),
+        ("wall_s".to_string(), Json::from(s.wall_s)),
+        ("tokens".to_string(), Json::from(s.tokens as f64)),
+        ("preemptions".to_string(), Json::from(s.preemptions as f64)),
+        ("kv_blocks".to_string(), Json::from(s.kv_blocks)),
+        ("kv_shared_peak".to_string(), Json::from(s.kv_shared_peak)),
+    ])
+}
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ModelConfig::builtin("tiny", "consmax")?;
+    let store = ParamStore::init(&cfg, 0)?;
+
+    // one dense row's K+V bytes: the unit the budget is expressed in
+    let dense_row_bytes =
+        2 * cfg.n_layer * cfg.n_head * cfg.ctx * cfg.head_dim() * 4;
+    let budget = DENSE_ROWS * dense_row_bytes;
+
+    let paged = |dtype: KvDtype| KvCacheConfig {
+        dtype,
+        block_tokens: BLOCK_TOKENS,
+        mem_bytes: Some(budget),
+    };
+
+    let dense = run(&cfg, &store, "dense f32", None, DENSE_ROWS)?;
+    let paged32 = run(
+        &cfg,
+        &store,
+        "paged f32",
+        Some(paged(KvDtype::F32)),
+        N_REQUESTS,
+    )?;
+    let paged16 = run(
+        &cfg,
+        &store,
+        "paged f16",
+        Some(paged(KvDtype::F16)),
+        N_REQUESTS,
+    )?;
+
+    let residency_ratio = paged16.peak_resident as f64 / dense.peak_resident as f64;
+    let toks_ratio = paged16.tok_s / dense.tok_s;
+
+    let row = |s: &RunStats| {
+        vec![
+            s.label.clone(),
+            format!("{}", s.peak_resident),
+            format!("{:.0}", s.tok_s),
+            format!("{}", s.kv_blocks),
+            format!("{}", s.kv_shared_peak),
+            format!("{}", s.preemptions),
+        ]
+    };
+    print_table(
+        &format!(
+            "KV memory scaling, {} ({} reqs of {}+{} tokens, budget = {} \
+             dense rows = {} KiB)",
+            cfg.key,
+            N_REQUESTS,
+            PROMPT_TOKENS,
+            MAX_NEW,
+            DENSE_ROWS,
+            budget / 1024
+        ),
+        &["layout", "peak resident", "tok/s", "blocks", "shared peak",
+          "preempts"],
+        &[row(&dense), row(&paged32), row(&paged16)],
+    );
+    println!(
+        "\npaged-f16/dense resident concurrency at fixed memory: \
+         {residency_ratio:.2}x (floor {RESIDENCY_FLOOR}x); tok/s ratio \
+         {toks_ratio:.2} (floor {TOKS_FLOOR})"
+    );
+
+    let doc = Json::from_pairs([
+        ("bench".to_string(), Json::from("kv")),
+        ("config".to_string(), Json::from(cfg.key.as_str())),
+        ("normalizer".to_string(), Json::from(cfg.normalizer.as_str())),
+        ("requests".to_string(), Json::from(N_REQUESTS)),
+        ("prompt_tokens".to_string(), Json::from(PROMPT_TOKENS)),
+        ("max_new".to_string(), Json::from(MAX_NEW)),
+        ("budget_bytes".to_string(), Json::from(budget)),
+        ("dense_row_bytes".to_string(), Json::from(dense_row_bytes)),
+        ("block_tokens".to_string(), Json::from(BLOCK_TOKENS)),
+        (
+            "threads".to_string(),
+            Json::from(consmax::runtime::parallel::current_threads()),
+        ),
+        ("dense".to_string(), stats_json(&dense)),
+        ("paged_f32".to_string(), stats_json(&paged32)),
+        ("paged_f16".to_string(), stats_json(&paged16)),
+        ("residency_ratio".to_string(), Json::from(residency_ratio)),
+        (
+            "min_residency_required".to_string(),
+            Json::from(RESIDENCY_FLOOR),
+        ),
+        ("toks_ratio".to_string(), Json::from(toks_ratio)),
+        ("min_toks_ratio_required".to_string(), Json::from(TOKS_FLOOR)),
+    ]);
+    std::fs::write("BENCH_kv.json", doc.to_string())?;
+    println!("wrote BENCH_kv.json");
+
+    if residency_ratio < RESIDENCY_FLOOR || toks_ratio < TOKS_FLOOR {
+        eprintln!(
+            "FAIL: fp16 paging must hold >= {RESIDENCY_FLOOR}x dense \
+             resident requests at fixed memory without dropping below \
+             {TOKS_FLOOR}x dense tok/s (got {residency_ratio:.2}x, \
+             {toks_ratio:.2}) — see table above"
+        );
+        std::process::exit(1);
+    }
+    Ok(())
+}

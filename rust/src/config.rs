@@ -8,7 +8,95 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+use crate::util::fp16::{Bf16, F16};
 use crate::util::json::Json;
+
+/// Storage precision of the paged KV cache (DESIGN.md §KV-memory seam).
+///
+/// ConSmax's merged `C·exp(S)` form needs no row-max search, so reduced
+/// precision K/V feed the score→exp→PV stream directly; `F16`/`Bf16`
+/// halve resident KV bytes per token. `F32` is the bit-exact oracle
+/// precision (a paged f32 session decodes bitwise identically to the
+/// dense layout).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvDtype {
+    F32,
+    F16,
+    Bf16,
+}
+
+impl KvDtype {
+    pub fn parse(s: &str) -> Result<KvDtype> {
+        Ok(match s {
+            "f32" | "fp32" => KvDtype::F32,
+            "f16" | "fp16" | "half" => KvDtype::F16,
+            "bf16" | "bfloat16" => KvDtype::Bf16,
+            other => bail!("unknown kv dtype {other:?} (f32|f16|bf16)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KvDtype::F32 => "f32",
+            KvDtype::F16 => "f16",
+            KvDtype::Bf16 => "bf16",
+        }
+    }
+
+    pub fn bytes_per_elem(self) -> usize {
+        match self {
+            KvDtype::F32 => 4,
+            KvDtype::F16 | KvDtype::Bf16 => 2,
+        }
+    }
+
+    /// Encode→decode round trip of one value: what a reader of the KV
+    /// store will observe after `x` is written at this precision. For
+    /// `F32` this is the identity (bit-preserving).
+    pub fn roundtrip(self, x: f32) -> f32 {
+        match self {
+            KvDtype::F32 => x,
+            KvDtype::F16 => F16::from_f32(x).to_f32(),
+            KvDtype::Bf16 => Bf16::from_f32(x).to_f32(),
+        }
+    }
+}
+
+/// CLI-facing paged-KV knobs (`--kv-mem-mb`, `--kv-dtype`, `--kv-block`).
+/// Handed to [`DecodeSession::new_paged`]; `mem_bytes == None` sizes the
+/// pool to hold every session row at full context (paging without a
+/// budget cap — still enables prefix sharing and reduced precision).
+///
+/// [`DecodeSession::new_paged`]: crate::runtime::backend::DecodeSession::new_paged
+#[derive(Debug, Clone, Copy)]
+pub struct KvCacheConfig {
+    pub dtype: KvDtype,
+    /// Tokens per block/page (clamped to `ctx` at pool construction).
+    pub block_tokens: usize,
+    /// Byte budget for the whole K+V block pool.
+    pub mem_bytes: Option<usize>,
+}
+
+impl Default for KvCacheConfig {
+    fn default() -> Self {
+        KvCacheConfig { dtype: KvDtype::F32, block_tokens: 16, mem_bytes: None }
+    }
+}
+
+impl KvCacheConfig {
+    /// Set the byte budget from the CLI's MiB knob.
+    pub fn with_mem_mb(mut self, mb: usize) -> KvCacheConfig {
+        self.mem_bytes = Some(mb * 1024 * 1024);
+        self
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.block_tokens == 0 {
+            bail!("kv block_tokens must be >= 1");
+        }
+        Ok(())
+    }
+}
 
 /// One (config, normalizer) pair from the manifest, e.g. `paper_consmax`.
 #[derive(Debug, Clone)]
@@ -398,5 +486,36 @@ mod tests {
     fn builtin_rejects_unknowns() {
         assert!(ModelConfig::builtin("huge", "consmax").is_err());
         assert!(ModelConfig::builtin("tiny", "sparsemax").is_err());
+    }
+
+    #[test]
+    fn kv_dtype_parses_and_roundtrips() {
+        assert_eq!(KvDtype::parse("f32").unwrap(), KvDtype::F32);
+        assert_eq!(KvDtype::parse("fp16").unwrap(), KvDtype::F16);
+        assert_eq!(KvDtype::parse("bf16").unwrap(), KvDtype::Bf16);
+        assert!(KvDtype::parse("int4").is_err());
+        assert_eq!(KvDtype::F32.bytes_per_elem(), 4);
+        assert_eq!(KvDtype::F16.bytes_per_elem(), 2);
+        // f32 round trip is the identity, bit for bit
+        let x = 0.1234567f32;
+        assert_eq!(KvDtype::F32.roundtrip(x).to_bits(), x.to_bits());
+        // f16/bf16 round trips are idempotent (storage-stable)
+        for d in [KvDtype::F16, KvDtype::Bf16] {
+            let once = d.roundtrip(x);
+            assert_eq!(d.roundtrip(once).to_bits(), once.to_bits(), "{d:?}");
+        }
+    }
+
+    #[test]
+    fn kv_cache_config_knobs() {
+        let kv = KvCacheConfig::default();
+        assert_eq!(kv.dtype, KvDtype::F32);
+        assert_eq!(kv.block_tokens, 16);
+        assert!(kv.mem_bytes.is_none());
+        assert!(kv.validate().is_ok());
+        let kv = kv.with_mem_mb(3);
+        assert_eq!(kv.mem_bytes, Some(3 * 1024 * 1024));
+        let bad = KvCacheConfig { block_tokens: 0, ..KvCacheConfig::default() };
+        assert!(bad.validate().is_err());
     }
 }

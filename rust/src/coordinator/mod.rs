@@ -24,7 +24,8 @@ pub mod trainer;
 pub use params::ParamStore;
 pub use report::{report_compare, report_run};
 pub use server::{
-    DecodeMode, GenOutput, GenRequest, GenResponse, Generator, Server,
+    DecodeMode, GenOutput, GenRequest, GenResponse, Generator, ServeStats,
+    Server,
 };
 #[cfg(feature = "pjrt")]
 pub use sweep::{best_point, sweep_init, SweepOptions, SweepPoint};

@@ -45,6 +45,15 @@
 //! (no left-padding, no pad pollution). Requests keep their own
 //! temperature, `max_new_tokens` and optional stop token; accounting is
 //! in token space.
+//!
+//! With [`Server::set_kv_config`] the continuous pool runs over the
+//! **paged KV-cache subsystem** (DESIGN.md §KV-memory seam): slots
+//! become cheap row handles over a shared block pool, capacity is the
+//! pool's byte budget (admission by free blocks), requests are
+//! whole-request preempted-and-requeued under memory pressure (replay
+//! is output-identical thanks to per-request sampler streams), and
+//! identical prompt prefixes share refcounted copy-on-write blocks.
+//! [`Server::stats`] exposes the occupancy/sharing/preemption gauges.
 
 use std::collections::VecDeque;
 use std::marker::PhantomData;
@@ -54,7 +63,7 @@ use anyhow::{bail, ensure, Result};
 #[cfg(feature = "pjrt")]
 use anyhow::Context;
 
-use crate::config::ModelConfig;
+use crate::config::{KvCacheConfig, ModelConfig};
 use crate::coordinator::params::ParamStore;
 use crate::data::ByteTokenizer;
 use crate::metrics::LatencyRecorder;
@@ -63,11 +72,20 @@ use crate::runtime::backend::{DecodeSession, NativeModel};
 use crate::runtime::{Engine, HostTensor};
 use crate::util::rng::Pcg32;
 
-/// Largest batch the native decode engine serves at once (a knob, not
-/// an export constraint like the PJRT decode artifacts). Sized for the
-/// threaded decode loop: rows are the unit of parallelism, so wider
-/// batches keep every worker busy.
+/// Largest batch the native decode engine serves at once **on the
+/// dense KV layout** (a knob, not an export constraint like the PJRT
+/// decode artifacts). Sized for the threaded decode loop: rows are the
+/// unit of parallelism, so wider batches keep every worker busy.
+///
+/// With a paged pool ([`Server::set_kv_config`]) this constant stops
+/// being the capacity limit: slots are cheap row *handles* and the real
+/// bound is the pool's byte budget (`--kv-mem-mb`) — admission is by
+/// free blocks, with whole-request preemption under pressure.
 pub const NATIVE_MAX_BATCH: usize = 16;
+
+/// Hard ceiling on paged slot-pool size (a sanity bound on per-row
+/// scratch, far above any budget a paged pool can serve at once).
+pub const MAX_PAGED_SLOTS: usize = 256;
 
 /// Which native decode engine drives generation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -604,8 +622,12 @@ struct Slot {
     done: bool,
     /// Per-request sampler stream (seeded from the generator seed and
     /// the request id): sampled output is independent of co-batched
-    /// neighbors, exactly like greedy output.
+    /// neighbors, exactly like greedy output. This is also what makes
+    /// paged preempt-and-requeue output-preserving: a restarted request
+    /// re-derives the same stream and regenerates the same tokens.
     rng: Pcg32,
+    /// Monotone admission counter: preemption evicts the youngest.
+    join_seq: u64,
 }
 
 impl Slot {
@@ -663,7 +685,32 @@ pub struct Server<'e> {
     pub tpot: LatencyRecorder,
     pub completed: u64,
     pub tokens_out: u64,
+    /// Whole-request preemptions under paged memory pressure (each one
+    /// re-queued at the front and replayed deterministically).
+    pub preemptions: u64,
     cont: Option<ContState>,
+    /// Paged-KV configuration for the continuous slot pool (None =
+    /// dense per-row caches, the original layout).
+    kv: Option<KvCacheConfig>,
+    next_join_seq: u64,
+}
+
+/// One snapshot of the server's serving gauges (`Server::stats`):
+/// queue/pool occupancy plus the paged-KV block gauges (zero when the
+/// pool is dense).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServeStats {
+    pub pending: usize,
+    pub in_flight: usize,
+    pub completed: u64,
+    pub tokens_out: u64,
+    pub preemptions: u64,
+    pub kv_paged: bool,
+    pub kv_total_blocks: usize,
+    pub kv_free_blocks: usize,
+    /// Blocks referenced by more than one row (prefix sharing at work).
+    pub kv_shared_blocks: usize,
+    pub kv_block_tokens: usize,
 }
 
 impl<'e> Server<'e> {
@@ -678,7 +725,10 @@ impl<'e> Server<'e> {
             tpot: LatencyRecorder::default(),
             completed: 0,
             tokens_out: 0,
+            preemptions: 0,
             cont: None,
+            kv: None,
+            next_join_seq: 0,
         }
     }
 
@@ -697,19 +747,80 @@ impl<'e> Server<'e> {
             .map_or(0, |c| c.slots.iter().filter(|s| s.is_some()).count())
     }
 
-    /// Cap the serving batch (slot-pool size) below the backend's
-    /// maximum — the knob `serve_bench` uses to grade both schedulers
-    /// at one pool size. Rejected while requests are in flight; resets
-    /// the (empty) continuous pool so the next step rebuilds it.
+    /// Cap the serving batch (slot-pool size) — the knob `serve_bench`
+    /// uses to grade both schedulers at one pool size. On the dense
+    /// layout this clamps to the backend's maximum; with a paged pool
+    /// slots are cheap handles whose real bound is the byte budget, so
+    /// the cap may exceed [`NATIVE_MAX_BATCH`] (up to
+    /// [`MAX_PAGED_SLOTS`]). Rejected while requests are in flight;
+    /// resets the (empty) continuous pool so the next step rebuilds it.
     pub fn set_max_batch(&mut self, n: usize) -> Result<()> {
         ensure!(
             self.in_flight() == 0,
             "set_max_batch while {} requests are in flight",
             self.in_flight()
         );
-        self.max_batch = n.clamp(1, self.generator.max_batch());
+        let cap = if self.kv.is_some() {
+            MAX_PAGED_SLOTS
+        } else {
+            self.generator.max_batch()
+        };
+        self.max_batch = n.clamp(1, cap);
         self.cont = None;
         Ok(())
+    }
+
+    /// Switch the continuous slot pool onto the paged KV-cache
+    /// subsystem (block tables + byte budget + prefix sharing; see
+    /// DESIGN.md §KV-memory seam), or back to dense with `None`.
+    /// Rejected while requests are in flight. Native KV engine only —
+    /// enforced when the pool is built in [`Server::step`].
+    pub fn set_kv_config(&mut self, kv: Option<KvCacheConfig>) -> Result<()> {
+        ensure!(
+            self.in_flight() == 0,
+            "set_kv_config while {} requests are in flight",
+            self.in_flight()
+        );
+        if let Some(kv) = &kv {
+            kv.validate()?;
+        }
+        self.kv = kv;
+        // the dense slot cap may not apply anymore (and vice versa)
+        self.max_batch = self.max_batch.clamp(
+            1,
+            if self.kv.is_some() {
+                MAX_PAGED_SLOTS
+            } else {
+                self.generator.max_batch()
+            },
+        );
+        self.cont = None;
+        Ok(())
+    }
+
+    /// The active paged-KV configuration, if any.
+    pub fn kv_config(&self) -> Option<&KvCacheConfig> {
+        self.kv.as_ref()
+    }
+
+    /// Serving gauges: queue/pool occupancy and paged-KV block usage.
+    pub fn stats(&self) -> ServeStats {
+        let mut st = ServeStats {
+            pending: self.pending(),
+            in_flight: self.in_flight(),
+            completed: self.completed,
+            tokens_out: self.tokens_out,
+            preemptions: self.preemptions,
+            ..ServeStats::default()
+        };
+        if let Some(kv) = self.cont.as_ref().and_then(|c| c.sess.kv_stats()) {
+            st.kv_paged = true;
+            st.kv_total_blocks = kv.total_blocks;
+            st.kv_free_blocks = kv.free_blocks;
+            st.kv_shared_blocks = kv.shared_blocks;
+            st.kv_block_tokens = kv.block_tokens;
+        }
+        st
     }
 
     /// Seal one request: build its response and record the per-request
@@ -770,8 +881,14 @@ impl<'e> Server<'e> {
             self.generator.decode_name()
         );
         if self.cont.is_none() {
+            let sess = match &self.kv {
+                Some(kv) => {
+                    DecodeSession::new_paged(&self.generator.cfg, self.max_batch, kv)?
+                }
+                None => DecodeSession::new(&self.generator.cfg, self.max_batch),
+            };
             self.cont = Some(ContState {
-                sess: DecodeSession::new(&self.generator.cfg, self.max_batch),
+                sess,
                 slots: (0..self.max_batch).map(|_| None).collect(),
             });
         }
@@ -779,21 +896,34 @@ impl<'e> Server<'e> {
         let mut out = Vec::new();
 
         // -- admission: requests join free rows mid-flight ---------------
+        // Paged pools admit **by free blocks**: a joiner must fit its
+        // whole-lifetime worst case (clamped prompt + budget - 1 cached
+        // positions, at most one full row), and this tick's earlier
+        // joiners hold reservations until their prefill lands.
         let mut joins: Vec<usize> = Vec::new();
-        while let Some(zero_budget) =
-            self.queue.front().map(|p| p.req.max_new_tokens == 0)
-        {
-            if zero_budget {
-                // nothing to decode: complete immediately, no slot taken
+        let mut reserved_blocks = 0usize;
+        loop {
+            let (max_new, prompt_bytes) = match self.queue.front() {
+                Some(p) => (p.req.max_new_tokens, p.req.prompt.len()),
+                None => break,
+            };
+            if max_new == 0 || prompt_bytes == 0 {
+                // nothing to decode (zero budget), or nothing to attend
+                // to (prompt clamps to empty): complete immediately, no
+                // slot taken
                 let p = self.queue.pop_front().unwrap();
-                let (_, ptoks) = self
-                    .generator
-                    .encode_prompts(std::slice::from_ref(&p.req.prompt), &[0]);
+                let prompt_tokens = if p.req.prompt.is_empty() {
+                    0
+                } else {
+                    self.generator
+                        .encode_prompts(std::slice::from_ref(&p.req.prompt), &[0])
+                        .1[0]
+                };
                 let resp = self.finish(Done {
                     id: p.req.id,
                     tokens: Vec::new(),
                     text: Some(String::new()),
-                    prompt_tokens: ptoks[0],
+                    prompt_tokens,
                     submitted: p.submitted,
                     first_token_at: None,
                     batch_size: 1,
@@ -801,17 +931,40 @@ impl<'e> Server<'e> {
                 out.push(resp);
                 continue;
             }
-            let cont = self.cont.as_mut().unwrap();
+            let cont = self.cont.as_ref().unwrap();
             let Some(slot_idx) = cont.slots.iter().position(Option::is_none)
             else {
                 break; // pool full; the queue waits for the next tick
             };
+            if let Some(free) = cont.sess.kv_free_blocks() {
+                // reserve the request's worst-case growth: its cache
+                // peaks at clamped-prompt + budget - 1 positions
+                // (ctx-capped), which never exceeds one full row — so a
+                // lone request always fits and admission can never
+                // live-lock. The byte tokenizer maps one byte to one
+                // token, so the clamped prompt length is known without
+                // encoding (no per-tick tokenize while blocked). The
+                // reservation is tick-local; cross-tick overcommit is
+                // what the preemption pass below resolves.
+                let budget =
+                    self.generator.cfg.ctx.saturating_sub(max_new).max(1);
+                let ptoks = prompt_bytes.min(budget);
+                let worst = ptoks + max_new.saturating_sub(1);
+                let need = cont.sess.kv_blocks_for(worst).unwrap_or(0);
+                if free < reserved_blocks + need {
+                    break; // budget exhausted; wait (or preempt below)
+                }
+                reserved_blocks += need;
+            }
             let p = self.queue.pop_front().unwrap();
             let (mut enc, ptoks) = self.generator.encode_prompts(
                 std::slice::from_ref(&p.req.prompt),
                 &[p.req.max_new_tokens],
             );
             let rng = Pcg32::new(self.generator.seed, p.req.id);
+            self.next_join_seq += 1;
+            let join_seq = self.next_join_seq;
+            let cont = self.cont.as_mut().unwrap();
             cont.slots[slot_idx] = Some(Slot {
                 prompt: enc.pop().unwrap(),
                 prompt_tokens: ptoks[0],
@@ -822,6 +975,7 @@ impl<'e> Server<'e> {
                 last: 0,
                 done: false,
                 rng,
+                join_seq,
             });
             joins.push(slot_idx);
         }
@@ -853,6 +1007,63 @@ impl<'e> Server<'e> {
                 let row = &logits[j * vocab..(j + 1) * vocab];
                 let tok = pick_token(row, slot.req.temperature, &mut slot.rng);
                 slot.feed(tok, now);
+            }
+        }
+
+        // -- paged memory pressure: whole-request preempt-and-requeue ----
+        // The decode step below never allocation-fails: while the pool
+        // cannot cover the step's worst-case block demand, the youngest
+        // resident request is evicted, its blocks are freed, and the
+        // request goes back to the *front* of the queue. Per-request
+        // sampler streams make the replay emit identical tokens, so
+        // preemption is invisible in outputs — only in latency.
+        if self.cont.as_ref().unwrap().sess.is_paged() {
+            loop {
+                let cont = self.cont.as_ref().unwrap();
+                let active: Vec<bool> = cont
+                    .slots
+                    .iter()
+                    .map(|s| matches!(s, Some(s) if !s.done))
+                    .collect();
+                let demand = cont.sess.paged_step_demand(&active);
+                if cont.sess.kv_free_blocks().unwrap_or(0) >= demand {
+                    break;
+                }
+                // victim = youngest still-decoding resident, as long as
+                // at least one other decoding row survives; rows that
+                // finished this tick (harvested below) are evicted only
+                // as a last resort — their completed tokens would be
+                // thrown away and deterministically recomputed.
+                let (mut live, mut done): (Option<(usize, u64)>, Option<(usize, u64)>) =
+                    (None, None);
+                let mut live_count = 0usize;
+                for (i, s) in cont.slots.iter().enumerate() {
+                    let Some(s) = s else { continue };
+                    let best = if s.done { &mut done } else { &mut live };
+                    if !s.done {
+                        live_count += 1;
+                    }
+                    if best.map_or(true, |(_, seq)| s.join_seq > seq) {
+                        *best = Some((i, s.join_seq));
+                    }
+                }
+                let victim = if live_count > 1 {
+                    live.map(|(i, _)| i)
+                } else {
+                    done.map(|(i, _)| i)
+                };
+                let Some(victim) = victim else {
+                    bail!(
+                        "kv pool cannot cover a single request's step; \
+                         raise --kv-mem-mb or shrink --kv-block"
+                    );
+                };
+                let cont = self.cont.as_mut().unwrap();
+                let slot = cont.slots[victim].take().unwrap();
+                cont.sess.reset_row(victim);
+                self.preemptions += 1;
+                self.queue
+                    .push_front(Pending { req: slot.req, submitted: slot.submitted });
             }
         }
 
@@ -958,9 +1169,34 @@ impl<'e> Server<'e> {
              scheduler; drain them with step()/run_continuous() first",
             self.in_flight()
         );
-        let b = self.max_batch.min(self.queue.len());
-        let batch: Vec<Pending> =
-            (0..b).map(|_| self.queue.pop_front().unwrap()).collect();
+        // empty prompts (nothing to attend to after clamping) complete
+        // immediately and never occupy a batch slot — mirroring the
+        // continuous scheduler's admission path, so the two schedulers
+        // stay response-equivalent on degenerate requests
+        let mut out = Vec::new();
+        let cap = self.max_batch.min(self.generator.max_batch());
+        let mut batch: Vec<Pending> = Vec::new();
+        while batch.len() < cap {
+            let Some(p) = self.queue.pop_front() else { break };
+            if p.req.prompt.is_empty() {
+                let resp = self.finish(Done {
+                    id: p.req.id,
+                    tokens: Vec::new(),
+                    text: Some(String::new()),
+                    prompt_tokens: 0,
+                    submitted: p.submitted,
+                    first_token_at: None,
+                    batch_size: 1,
+                });
+                out.push(resp);
+                continue;
+            }
+            batch.push(p);
+        }
+        if batch.is_empty() {
+            return Ok(out);
+        }
+        let b = batch.len();
         let prompts: Vec<String> =
             batch.iter().map(|p| p.req.prompt.clone()).collect();
         let max_new: Vec<usize> =
@@ -971,7 +1207,7 @@ impl<'e> Server<'e> {
         let gen = self.generator.generate_batch_ext(&prompts, &max_new, &temps)?;
         let dt_ms = t0.elapsed().as_secs_f64() * 1e3;
 
-        let mut out = Vec::with_capacity(b);
+        out.reserve(b);
         // the batch emitted one token per row per sampling step, so the
         // honest static TPOT is wall time over the *steps the batch
         // ran* (the deepest row), not over any single row's own count —
@@ -1273,5 +1509,113 @@ mod tests {
         let prompts: Vec<String> =
             (0..NATIVE_MAX_BATCH + 1).map(|i| format!("p{i}")).collect();
         assert!(g.generate_batch(&prompts, 2, 0.0).is_err());
+    }
+
+    fn degenerate_reqs() -> Vec<GenRequest> {
+        vec![
+            GenRequest {
+                id: 0,
+                prompt: String::new(), // clamps to empty: complete-and-skip
+                max_new_tokens: 5,
+                temperature: 0.0,
+                stop: None,
+            },
+            GenRequest {
+                id: 1,
+                prompt: "real ".into(),
+                max_new_tokens: 3,
+                temperature: 0.0,
+                stop: None,
+            },
+        ]
+    }
+
+    #[test]
+    fn empty_prompts_complete_and_skip_on_both_schedulers() {
+        for continuous in [true, false] {
+            let mut server = Server::new(native_generator());
+            for req in degenerate_reqs() {
+                server.submit(req);
+            }
+            let mut rs = if continuous {
+                server.run_continuous().unwrap()
+            } else {
+                server.run_to_completion().unwrap()
+            };
+            rs.sort_by_key(|r| r.id);
+            assert_eq!(rs.len(), 2, "continuous={continuous}");
+            assert_eq!(rs[0].new_tokens, 0, "continuous={continuous}");
+            assert_eq!(rs[0].text, "");
+            assert_eq!(rs[0].prompt_tokens, 0);
+            assert_eq!(rs[1].new_tokens, 3, "continuous={continuous}");
+            assert_eq!(server.tokens_out, 3);
+        }
+    }
+
+    #[test]
+    fn paged_pool_serves_and_reports_stats() {
+        use crate::config::KvCacheConfig;
+        let mut server = Server::new(native_generator());
+        server
+            .set_kv_config(Some(KvCacheConfig {
+                block_tokens: 8,
+                ..KvCacheConfig::default()
+            }))
+            .unwrap();
+        server.set_max_batch(4).unwrap();
+        for id in 0..6u64 {
+            server.submit(GenRequest {
+                id,
+                prompt: "one shared prefix prompt ".into(),
+                max_new_tokens: 3,
+                temperature: 0.0,
+                stop: None,
+            });
+        }
+        let rs = server.run_continuous().unwrap();
+        assert_eq!(rs.len(), 6);
+        for r in &rs {
+            assert_eq!(r.new_tokens, 3);
+        }
+        let st = server.stats();
+        assert!(st.kv_paged);
+        assert!(st.kv_total_blocks > 0);
+        assert_eq!(st.kv_block_tokens, 8);
+        // every row finished: all block references returned to the pool
+        assert_eq!(st.kv_free_blocks, st.kv_total_blocks);
+        assert_eq!(st.in_flight, 0);
+        assert_eq!(st.completed, 6);
+    }
+
+    #[test]
+    fn kv_config_rejected_mid_flight_and_paged_slots_exceed_dense_cap() {
+        use crate::config::KvCacheConfig;
+        let mut server = Server::new(native_generator());
+        // paged pools may raise the slot cap past the dense engine max
+        server.set_kv_config(Some(KvCacheConfig::default())).unwrap();
+        server.set_max_batch(NATIVE_MAX_BATCH * 2).unwrap();
+        server.submit(GenRequest {
+            id: 0,
+            prompt: "p ".into(),
+            max_new_tokens: 4,
+            temperature: 0.0,
+            stop: None,
+        });
+        server.step().unwrap();
+        assert_eq!(server.in_flight(), 1);
+        assert!(server.set_kv_config(None).is_err());
+        server.run_continuous().unwrap();
+        assert!(server.set_kv_config(None).is_ok());
+        // back on dense: the cap clamps to the engine max again
+        server.set_max_batch(NATIVE_MAX_BATCH * 2).unwrap();
+        server.submit(GenRequest {
+            id: 1,
+            prompt: "q ".into(),
+            max_new_tokens: 2,
+            temperature: 0.0,
+            stop: None,
+        });
+        let rs = server.run_continuous().unwrap();
+        assert_eq!(rs.len(), 1);
     }
 }

@@ -22,7 +22,7 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Result};
 
-use consmax::config::ModelConfig;
+use consmax::config::{KvCacheConfig, KvDtype, ModelConfig};
 #[cfg(feature = "pjrt")]
 use consmax::coordinator::{
     best_point, sweep_init, SweepOptions, TrainOptions, Trainer,
@@ -64,6 +64,26 @@ fn specs() -> Vec<Spec> {
             "continuous",
             "serve-demo scheduler (continuous|static); continuous needs \
              the native KV engine and falls back to static elsewhere",
+        ),
+        Spec::opt(
+            "max-batch",
+            "serve-demo: serving slot cap (default: backend max; paged \
+             pools may raise it past the dense engine cap)",
+        ),
+        Spec::opt(
+            "kv-mem-mb",
+            "serve-demo: paged KV-cache byte budget in MiB — the real \
+             capacity limit of the continuous scheduler (implies paging)",
+        ),
+        Spec::opt(
+            "kv-dtype",
+            "serve-demo: paged KV storage precision, f32|f16|bf16 \
+             (implies paging; f16/bf16 halve resident KV bytes)",
+        ),
+        Spec::opt(
+            "kv-block",
+            "serve-demo: paged KV block size in tokens (default 16; \
+             implies paging)",
         ),
         Spec::opt_default("seq", "256", "sim/hw: context length"),
         Spec::opt_default("tokens", "1", "sim: tokens to process"),
@@ -485,6 +505,29 @@ fn run_generate_pjrt(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Build the paged-KV configuration from `--kv-mem-mb` / `--kv-dtype` /
+/// `--kv-block`. Any one of them opts the continuous scheduler into the
+/// paged block pool; none keeps the dense per-row layout.
+fn kv_config_from_args(args: &Args) -> Result<Option<KvCacheConfig>> {
+    let mem_mb = args.get_opt_usize("kv-mem-mb")?;
+    let dtype = args.get("kv-dtype");
+    let block = args.get_opt_usize("kv-block")?;
+    if mem_mb.is_none() && dtype.is_none() && block.is_none() {
+        return Ok(None);
+    }
+    let mut kv = KvCacheConfig::default();
+    if let Some(d) = dtype {
+        kv.dtype = KvDtype::parse(d)?;
+    }
+    if let Some(b) = block {
+        kv.block_tokens = b;
+    }
+    if let Some(mb) = mem_mb {
+        kv = kv.with_mem_mb(mb);
+    }
+    Ok(Some(kv))
+}
+
 fn serve_demo_over(mut server: Server<'_>, args: &Args) -> Result<()> {
     let n = args.get_usize("requests", 16)?;
     let max_new = args.get_usize("max-new", 32)?;
@@ -500,6 +543,30 @@ fn serve_demo_over(mut server: Server<'_>, args: &Args) -> Result<()> {
         "static" => false,
         other => bail!("unknown scheduler {other:?} (continuous|static)"),
     };
+    if let Some(kv) = kv_config_from_args(args)? {
+        // the paged pool backs the continuous slot pool only; applying
+        // it to a static run would silently measure the dense layout
+        if continuous {
+            server.set_kv_config(Some(kv))?;
+            log::info!(
+                "paged KV pool: dtype {}, {} tokens/block{}",
+                kv.dtype.name(),
+                kv.block_tokens,
+                kv.mem_bytes
+                    .map(|b| format!(", budget {} MiB", b / (1024 * 1024)))
+                    .unwrap_or_default()
+            );
+        } else {
+            log::warn!(
+                "--kv-mem-mb/--kv-dtype/--kv-block configure the \
+                 continuous scheduler's paged pool; this static run \
+                 keeps the dense KV layout"
+            );
+        }
+    }
+    if let Some(mb) = args.get_opt_usize("max-batch")? {
+        server.set_max_batch(mb)?;
+    }
     let mut rng = Pcg32::seeded(args.get_u64("seed", 0)?);
     let prompts = [
         "The transformer ", "Attention lets ", "Hardware that ",
@@ -543,6 +610,17 @@ fn serve_demo_over(mut server: Server<'_>, args: &Args) -> Result<()> {
         server.ttft.percentile(99.0).unwrap_or(0.0) / 1e3,
         server.tpot.percentile(50.0).unwrap_or(0.0) / 1e3,
     );
+    let st = server.stats();
+    if st.kv_paged {
+        println!(
+            "paged KV pool: {} blocks x {} tokens ({} free at drain), \
+             {} preemption(s)",
+            st.kv_total_blocks,
+            st.kv_block_tokens,
+            st.kv_free_blocks,
+            st.preemptions,
+        );
+    }
     Ok(())
 }
 

@@ -1,34 +1,41 @@
 //! Per-batch decode state for the native KV-cached decode engine.
 //!
-//! A [`DecodeSession`] holds per-layer K/V caches sized
-//! `[b, n_layer, n_head, ctx, head_dim]` — **batch-major**, so each
-//! row's entire cache is one contiguous run and a batch splits into
-//! disjoint [`RowMut`] views that decode in parallel across the worker
-//! pool (`runtime::parallel`) — plus the per-row bookkeeping that makes
-//! batched serving correct:
+//! A [`DecodeSession`] holds per-row K/V caches behind one of two
+//! backings plus the per-row bookkeeping that makes batched serving
+//! correct:
+//!
+//! * **dense** ([`DecodeSession::new`]) — the original layout: one
+//!   contiguous `[n_layer, n_head, ctx, head_dim]` f32 slab per row,
+//!   batch-major, split into disjoint [`RowMut`] views that decode in
+//!   parallel. Preserved bit-identical as the oracle the paged layout
+//!   is tested against.
+//! * **paged** ([`DecodeSession::new_paged`]) — rows map their cached
+//!   positions through *block tables* into a shared [`KvPool`]
+//!   (`runtime/backend/kvcache.rs`): fixed-size pages, pluggable
+//!   f32/f16/bf16 storage, refcounted copy-on-write prefix sharing, and
+//!   a byte budget that replaces any fixed slot constant as the real
+//!   serving capacity limit (DESIGN.md §KV-memory seam).
+//!
+//! Shared per-row bookkeeping (both backings):
 //!
 //! * **per-row true lengths** — rows of a batch prefill at their own
 //!   prompt length and attend only to their own cached positions, so a
-//!   short prompt in a mixed batch is never polluted by padding (the
-//!   left-pad bug the recompute path had);
+//!   short prompt in a mixed batch is never polluted by padding;
 //! * **token history ring** — the last `ctx` token ids per row. The
 //!   model's positional embeddings are *absolute* (`wpe[i]`, `i < ctx`),
 //!   so once a row fills its cache, evicting the oldest entry shifts
 //!   every remaining position: the cached K/V become stale and the row
 //!   is re-encoded over the shifted window (exactly the trailing-window
-//!   semantics of the recompute oracle `NativeModel::next_logits`). The
-//!   ring makes that re-encode self-contained. Within `ctx` — the whole
-//!   serving regime, since prompts are clamped to `ctx - max_new` — a
-//!   decode step is a single O(len) incremental pass per token;
+//!   semantics of the recompute oracle `NativeModel::next_logits`).
+//!   Within `ctx` — the whole serving regime, since prompts are clamped
+//!   to `ctx - max_new` — a decode step is a single O(len) incremental
+//!   pass per token;
 //! * **per-row scratch arenas** ([`RowScratch`]) — every activation
-//!   buffer a decode step needs (embedding, LN, QKV, head outputs,
-//!   score row, MLP hidden), sized once at session creation. The
-//!   per-row compute path (`NativeModel::decode_token_into`) performs
-//!   **zero heap allocations per token**: it reads weights, writes the
-//!   row's cache slots and scratch, and emits logits straight into the
-//!   caller's output slice. (Per *step*, the engine still allocates
-//!   the returned `(b, vocab)` logits buffer and the O(b) row-view
-//!   list — output, not workspace.)
+//!   buffer a decode step needs, sized once at session creation. The
+//!   per-row compute path performs **zero heap allocations per token**.
+//!   Paged rows additionally carry per-block gather/dequant buffers and
+//!   a one-token K/V staging area, so the parallel decode phase only
+//!   *reads* the shared pool; encoded writes commit serially afterwards.
 //!
 //! The session owns no parameters; [`NativeModel::prefill`] and
 //! [`NativeModel::decode_step`] drive it.
@@ -38,20 +45,43 @@
 
 use std::collections::VecDeque;
 
-use crate::config::ModelConfig;
+use anyhow::Result;
+
+use crate::config::{KvCacheConfig, ModelConfig};
+use crate::runtime::backend::kvcache::{KvPool, KvStats};
 
 /// Offset of the `head_dim` run for (layer, head, slot) inside one
-/// row's `[n_layer, n_head, ctx, head_dim]` cache block.
+/// row's `[n_layer, n_head, slots, head_dim]` cache block.
 #[inline]
 pub(crate) fn kv_offset(
     n_head: usize,
-    ctx: usize,
+    slots: usize,
     head_dim: usize,
     l: usize,
     h: usize,
     slot: usize,
 ) -> usize {
-    ((l * n_head + h) * ctx + slot) * head_dim
+    ((l * n_head + h) * slots + slot) * head_dim
+}
+
+/// A writable `[n_layer, n_head, slots, head_dim]` K/V target for the
+/// trunk's capture pass: either a dense row's cache slab (`slots ==
+/// ctx`) or a transient prefill buffer (`slots == window length`) that
+/// is encoded into pool blocks afterwards.
+pub(crate) struct KvCapture<'a> {
+    pub n_head: usize,
+    pub head_dim: usize,
+    /// Slot stride of the target buffer.
+    pub slots: usize,
+    pub k: &'a mut [f32],
+    pub v: &'a mut [f32],
+}
+
+impl KvCapture<'_> {
+    /// Start offset of the `head_dim` run for (layer, head, slot).
+    pub(crate) fn kv_start(&self, l: usize, h: usize, slot: usize) -> usize {
+        kv_offset(self.n_head, self.slots, self.head_dim, l, h, slot)
+    }
 }
 
 /// Pre-sized activation buffers for one row's incremental decode step.
@@ -72,11 +102,25 @@ pub(crate) struct RowScratch {
     pub hid: Vec<f32>,
     /// Attention/MLP projection output (`n_embd`).
     pub proj: Vec<f32>,
+    /// Paged rows only: the new token's K, every (layer, head) lane,
+    /// `[n_layer * n_head, head_dim]`, already round-tripped through the
+    /// pool dtype so attention reads see exactly what later steps will
+    /// read back from storage.
+    pub staged_k: Vec<f32>,
+    /// Paged rows only: staged V, same layout as `staged_k`.
+    pub staged_v: Vec<f32>,
+    /// Paged rows only: per-(layer, head) gather/dequant buffer for
+    /// cached keys, `[ctx, head_dim]`.
+    pub kgath: Vec<f32>,
+    /// Paged rows only: gathered values, same layout as `kgath`.
+    pub vgath: Vec<f32>,
 }
 
 impl RowScratch {
-    fn new(cfg: &ModelConfig) -> RowScratch {
+    fn new(cfg: &ModelConfig, paged: bool) -> RowScratch {
         let d = cfg.n_embd;
+        let lanes = if paged { cfg.n_layer * cfg.n_head * cfg.head_dim() } else { 0 };
+        let gath = if paged { cfg.ctx * cfg.head_dim() } else { 0 };
         RowScratch {
             x: vec![0.0; d],
             xn: vec![0.0; d],
@@ -85,8 +129,21 @@ impl RowScratch {
             srow: vec![0.0; cfg.ctx],
             hid: vec![0.0; 4 * d],
             proj: vec![0.0; d],
+            staged_k: vec![0.0; lanes],
+            staged_v: vec![0.0; lanes],
+            kgath: vec![0.0; gath],
+            vgath: vec![0.0; gath],
         }
     }
+}
+
+/// Which memory model backs the session's K/V.
+enum KvBacking {
+    /// One dense f32 `[n_layer, n_head, ctx, head_dim]` slab per row,
+    /// batch-major (`[b, ...]` overall) — the bit-exact oracle layout.
+    Dense { k: Vec<f32>, v: Vec<f32> },
+    /// Shared block pool + one block table per row.
+    Paged { pool: KvPool, tables: Vec<Vec<u32>> },
 }
 
 /// KV caches + per-row lengths for one decode batch.
@@ -96,10 +153,7 @@ pub struct DecodeSession {
     pub(crate) n_layer: usize,
     pub(crate) n_head: usize,
     pub(crate) head_dim: usize,
-    /// Cached keys, `[b, n_layer, n_head, ctx, head_dim]` row-major.
-    k: Vec<f32>,
-    /// Cached values, same layout as `k`.
-    v: Vec<f32>,
+    store: KvBacking,
     /// Valid cached positions per row (`<= ctx`).
     len: Vec<usize>,
     /// Last `ctx` token ids per row (window re-encode on eviction).
@@ -108,9 +162,12 @@ pub struct DecodeSession {
     scratch: Vec<RowScratch>,
 }
 
-/// Mutable view of one row of a [`DecodeSession`]: its contiguous K/V
-/// block, length, history ring and scratch arena. Rows are disjoint, so
-/// a batch of `RowMut`s decodes in parallel with no shared state.
+/// Mutable view of one **dense** row of a [`DecodeSession`]: its
+/// contiguous K/V block, length, history ring and scratch arena. Rows
+/// are disjoint, so a batch of `RowMut`s decodes in parallel with no
+/// shared state. (Paged rows go through [`PagedParts`] instead: the
+/// pool is shared, so the parallel phase reads it immutably and commits
+/// writes serially.)
 pub(crate) struct RowMut<'a> {
     pub ctx: usize,
     pub n_head: usize,
@@ -131,6 +188,17 @@ impl RowMut<'_> {
     /// Start offset of the `head_dim` run for (layer, head, slot).
     pub(crate) fn kv_start(&self, l: usize, h: usize, slot: usize) -> usize {
         kv_offset(self.n_head, self.ctx, self.head_dim, l, h, slot)
+    }
+
+    /// A capture view over this row's cache slab (prefill / re-encode).
+    pub(crate) fn capture(&mut self) -> KvCapture<'_> {
+        KvCapture {
+            n_head: self.n_head,
+            head_dim: self.head_dim,
+            slots: self.ctx,
+            k: &mut *self.k,
+            v: &mut *self.v,
+        }
     }
 
     /// Reset to a fresh window of tokens (history only; the caches are
@@ -159,9 +227,21 @@ impl RowMut<'_> {
     }
 }
 
+/// Split borrows of a **paged** session's fields, so the engine can
+/// sequence its phases (serial block allocation → parallel compute over
+/// a shared `&KvPool` → serial encoded commit) without fighting the
+/// borrow checker.
+pub(crate) struct PagedParts<'a> {
+    pub pool: &'a mut KvPool,
+    pub tables: &'a mut [Vec<u32>],
+    pub len: &'a mut [usize],
+    pub history: &'a mut [VecDeque<i32>],
+    pub scratch: &'a mut [RowScratch],
+}
+
 impl DecodeSession {
-    /// Fresh session for `b` rows of `cfg`'s geometry; caches zeroed,
-    /// every row empty until [`NativeModel::prefill`] fills it.
+    /// Fresh **dense** session for `b` rows of `cfg`'s geometry; caches
+    /// zeroed, every row empty until [`NativeModel::prefill`] fills it.
     ///
     /// [`NativeModel::prefill`]: super::NativeModel::prefill
     pub fn new(cfg: &ModelConfig, b: usize) -> DecodeSession {
@@ -172,12 +252,37 @@ impl DecodeSession {
             n_layer: cfg.n_layer,
             n_head: cfg.n_head,
             head_dim: cfg.head_dim(),
-            k: vec![0.0; elems],
-            v: vec![0.0; elems],
+            store: KvBacking::Dense { k: vec![0.0; elems], v: vec![0.0; elems] },
             len: vec![0; b],
             history: (0..b).map(|_| VecDeque::with_capacity(cfg.ctx)).collect(),
-            scratch: (0..b).map(|_| RowScratch::new(cfg)).collect(),
+            scratch: (0..b).map(|_| RowScratch::new(cfg, false)).collect(),
         }
+    }
+
+    /// Fresh **paged** session: `b` row slots over a shared block pool
+    /// sized by `kv` (dtype, block size, byte budget — see
+    /// [`KvCacheConfig`]). Row capacity is bounded by the pool, not by
+    /// `b`: a row only holds the blocks its cached tokens need.
+    pub fn new_paged(
+        cfg: &ModelConfig,
+        b: usize,
+        kv: &KvCacheConfig,
+    ) -> Result<DecodeSession> {
+        let pool = KvPool::new(cfg, kv, b)?;
+        Ok(DecodeSession {
+            b,
+            ctx: cfg.ctx,
+            n_layer: cfg.n_layer,
+            n_head: cfg.n_head,
+            head_dim: cfg.head_dim(),
+            store: KvBacking::Paged {
+                pool,
+                tables: (0..b).map(|_| Vec::new()).collect(),
+            },
+            len: vec![0; b],
+            history: (0..b).map(|_| VecDeque::with_capacity(cfg.ctx)).collect(),
+            scratch: (0..b).map(|_| RowScratch::new(cfg, true)).collect(),
+        })
     }
 
     /// Number of rows in the batch.
@@ -190,30 +295,132 @@ impl DecodeSession {
         self.len[r]
     }
 
+    /// Whether this session runs over the paged block pool.
+    pub fn is_paged(&self) -> bool {
+        matches!(self.store, KvBacking::Paged { .. })
+    }
+
+    /// Pool occupancy gauges (None for dense sessions).
+    pub fn kv_stats(&self) -> Option<KvStats> {
+        match &self.store {
+            KvBacking::Paged { pool, .. } => Some(pool.stats()),
+            KvBacking::Dense { .. } => None,
+        }
+    }
+
+    /// Free blocks in the paged pool (None for dense sessions).
+    pub fn kv_free_blocks(&self) -> Option<usize> {
+        match &self.store {
+            KvBacking::Paged { pool, .. } => Some(pool.free_blocks()),
+            KvBacking::Dense { .. } => None,
+        }
+    }
+
+    /// Blocks `tokens` cached positions occupy (None for dense).
+    pub fn kv_blocks_for(&self, tokens: usize) -> Option<usize> {
+        match &self.store {
+            KvBacking::Paged { pool, .. } => {
+                Some(pool.blocks_for(tokens.clamp(1, self.ctx)))
+            }
+            KvBacking::Dense { .. } => None,
+        }
+    }
+
+    /// Worst-case fresh blocks the next `decode_step_active` over
+    /// `active` needs: one per row crossing into a new block, plus the
+    /// CoW moves of rows about to window-re-encode. The scheduler
+    /// preempts until `kv_free_blocks() >= paged_step_demand(..)`,
+    /// which makes the step itself infallible on memory. Always 0 for
+    /// dense sessions.
+    ///
+    /// Re-encode accounting is per *block*, not per row: a block with
+    /// `n` references held by `k` re-encoding rows costs `k` fresh
+    /// blocks while an outside holder keeps it alive, but only `k - 1`
+    /// when the re-encoders are its only holders — the last one
+    /// overwrites in place. Counting per row instead would double-bill
+    /// co-evicting sharers and trigger spurious preemptions.
+    pub fn paged_step_demand(&self, active: &[bool]) -> usize {
+        let KvBacking::Paged { pool, tables } = &self.store else {
+            return 0;
+        };
+        let bt = pool.block_tokens();
+        let mut need = 0;
+        // shared block -> number of re-encoding rows referencing it
+        let mut evicting_refs: std::collections::HashMap<u32, usize> =
+            std::collections::HashMap::new();
+        for (r, &a) in active.iter().enumerate().take(self.b) {
+            if !a {
+                continue;
+            }
+            let len = self.len[r];
+            if len == self.ctx {
+                for &blk in &tables[r] {
+                    if pool.is_shared(blk) {
+                        *evicting_refs.entry(blk).or_insert(0) += 1;
+                    }
+                }
+            } else if len == tables[r].len() * bt {
+                need += 1;
+            } else if pool.is_shared(tables[r][len / bt]) {
+                // defensive: a mid-block write target is never shared
+                // today (only *full* blocks enter the prefix registry,
+                // and a row's partial tail block is its own), but the
+                // engine's CoW resolve for that case must stay budgeted
+                // so the step remains infallible if that ever changes
+                need += 1;
+            }
+        }
+        for (blk, k) in evicting_refs {
+            need += k.min(pool.refcount(blk) as usize - 1);
+        }
+        need
+    }
+
     /// Clear one row back to the empty state (length zero, empty
     /// history) without touching any other row — the slot-lifecycle
     /// seam of the continuous-batching scheduler: a finished request
-    /// frees its slot in O(1), and the next
-    /// [`NativeModel::prefill_rows`] overwrites the row's cache in
-    /// place. Per-row KV blocks are disjoint (batch-major layout), so
-    /// in-flight neighbors never observe the reset.
+    /// frees its slot (and, when paged, returns its block references to
+    /// the pool) in O(blocks), and the next
+    /// [`NativeModel::prefill_rows`] overwrites the row in place.
     ///
     /// [`NativeModel::prefill_rows`]: super::NativeModel::prefill_rows
     pub fn reset_row(&mut self, r: usize) {
         self.len[r] = 0;
         self.history[r].clear();
+        if let KvBacking::Paged { pool, tables } = &mut self.store {
+            for blk in tables[r].drain(..) {
+                pool.release(blk);
+            }
+        }
+    }
+
+    /// Split borrows for the paged engine phases (None for dense).
+    pub(crate) fn paged_parts(&mut self) -> Option<PagedParts<'_>> {
+        match &mut self.store {
+            KvBacking::Paged { pool, tables } => Some(PagedParts {
+                pool,
+                tables,
+                len: &mut self.len,
+                history: &mut self.history,
+                scratch: &mut self.scratch,
+            }),
+            KvBacking::Dense { .. } => None,
+        }
     }
 
     /// Split the session into disjoint per-row mutable views — the unit
-    /// of parallelism for batched prefill and decode.
+    /// of parallelism for **dense** batched prefill and decode. Paged
+    /// sessions never take this path (their rows share the pool).
     pub(crate) fn rows_mut(&mut self) -> Vec<RowMut<'_>> {
         let per = self.n_layer * self.n_head * self.ctx * self.head_dim;
         let (ctx, n_head, head_dim) = (self.ctx, self.n_head, self.head_dim);
+        let KvBacking::Dense { k, v } = &mut self.store else {
+            unreachable!("rows_mut on a paged session");
+        };
         let mut rows = Vec::with_capacity(self.b);
-        for ((((k, v), len), history), scratch) in self
-            .k
+        for ((((k, v), len), history), scratch) in k
             .chunks_mut(per)
-            .zip(self.v.chunks_mut(per))
+            .zip(v.chunks_mut(per))
             .zip(self.len.iter_mut())
             .zip(self.history.iter_mut())
             .zip(self.scratch.iter_mut())
@@ -231,22 +438,33 @@ impl DecodeSession {
         }
         rows
     }
+
+    #[cfg(test)]
+    fn dense_kv(&self) -> (&[f32], &[f32]) {
+        match &self.store {
+            KvBacking::Dense { k, v } => (k, v),
+            KvBacking::Paged { .. } => panic!("dense_kv on a paged session"),
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::KvDtype;
 
     #[test]
     fn fresh_session_geometry() {
         let cfg = ModelConfig::builtin("tiny", "consmax").unwrap();
         let s = DecodeSession::new(&cfg, 3);
         assert_eq!(s.batch(), 3);
+        assert!(!s.is_paged());
+        let (k, v) = s.dense_kv();
         assert_eq!(
-            s.k.len(),
+            k.len(),
             3 * cfg.n_layer * cfg.n_head * cfg.ctx * cfg.head_dim()
         );
-        assert_eq!(s.k.len(), s.v.len());
+        assert_eq!(k.len(), v.len());
         for r in 0..3 {
             assert_eq!(s.len_of(r), 0);
         }
@@ -256,7 +474,33 @@ mod tests {
             assert_eq!(sc.qkv.len(), 3 * cfg.n_embd);
             assert_eq!(sc.srow.len(), cfg.ctx);
             assert_eq!(sc.hid.len(), 4 * cfg.n_embd);
+            // dense rows carry no paged buffers
+            assert!(sc.staged_k.is_empty() && sc.kgath.is_empty());
         }
+    }
+
+    #[test]
+    fn fresh_paged_session_geometry() {
+        let cfg = ModelConfig::builtin("tiny", "consmax").unwrap();
+        let kv = KvCacheConfig { block_tokens: 16, ..KvCacheConfig::default() };
+        let s = DecodeSession::new_paged(&cfg, 3, &kv).unwrap();
+        assert!(s.is_paged());
+        let st = s.kv_stats().unwrap();
+        // budgetless pool: 3 rows * (64 / 16) blocks, all free
+        assert_eq!(st.total_blocks, 12);
+        assert_eq!(st.free_blocks, 12);
+        assert_eq!(st.shared_blocks, 0);
+        assert_eq!(st.dtype, KvDtype::F32);
+        assert_eq!(s.kv_blocks_for(17), Some(2));
+        for sc in &s.scratch {
+            assert_eq!(
+                sc.staged_k.len(),
+                cfg.n_layer * cfg.n_head * cfg.head_dim()
+            );
+            assert_eq!(sc.kgath.len(), cfg.ctx * cfg.head_dim());
+        }
+        // no rows cached yet: a step over an all-empty active mask...
+        assert_eq!(s.paged_step_demand(&[false, false, false]), 0);
     }
 
     #[test]
@@ -296,8 +540,9 @@ mod tests {
             rows[1].k[last] = 2.0;
             *rows[1].len = 5;
         }
-        assert_eq!(s.k[0], 1.0);
-        assert_eq!(*s.k.last().unwrap(), 2.0);
+        let (k, _) = s.dense_kv();
+        assert_eq!(k[0], 1.0);
+        assert_eq!(*k.last().unwrap(), 2.0);
         assert_eq!(s.len_of(0), 0);
         assert_eq!(s.len_of(1), 5);
     }
@@ -319,6 +564,28 @@ mod tests {
         // the neighboring in-flight row is untouched
         assert_eq!(s.len_of(1), 2);
         assert_eq!(s.history[1].iter().copied().collect::<Vec<_>>(), vec![7, 8]);
+    }
+
+    #[test]
+    fn paged_reset_row_releases_blocks() {
+        let cfg = ModelConfig::builtin("tiny", "consmax").unwrap();
+        let kv = KvCacheConfig::default();
+        let mut s = DecodeSession::new_paged(&cfg, 2, &kv).unwrap();
+        {
+            let parts = s.paged_parts().unwrap();
+            let blk = parts.pool.alloc().unwrap();
+            parts.tables[0].push(blk);
+            parts.len[0] = 3;
+            parts.history[0].extend([1, 2, 3]);
+        }
+        assert_eq!(s.kv_stats().unwrap().used_blocks, 1);
+        s.reset_row(0);
+        assert_eq!(s.len_of(0), 0);
+        assert_eq!(s.kv_stats().unwrap().used_blocks, 0);
+        assert_eq!(
+            s.kv_free_blocks().unwrap(),
+            s.kv_stats().unwrap().total_blocks
+        );
     }
 
     #[test]

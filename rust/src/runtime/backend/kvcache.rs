@@ -1,0 +1,706 @@
+//! Paged, mixed-precision KV-cache block pool (DESIGN.md §KV-memory
+//! seam).
+//!
+//! A [`KvPool`] owns a fixed arena of `BLOCK_TOKENS`-sized pages shared
+//! by every row of a paged [`DecodeSession`]. Each row maps its cached
+//! positions through a *block table* (`Vec<u32>` of block ids), so the
+//! real serving capacity limit is the pool's **byte budget**
+//! (`--kv-mem-mb`), not a fixed slot constant: short requests hold few
+//! blocks, long requests hold many, and admission is by free blocks.
+//!
+//! Three properties make it the memory seam of the serving path:
+//!
+//! * **pluggable precision** — K/V are stored as f32, IEEE binary16 or
+//!   bfloat16 (`util/fp16` codecs) and dequantized per block inside the
+//!   fused attention inner loops. ConSmax's merged `C·exp(S)` form has
+//!   no row-max search, so reduced-precision scores feed the exp stream
+//!   directly — the software analogue of Hyft/SOLE's low-precision
+//!   softmax datapaths (PAPERS.md). The f32 path is bit-preserving, so
+//!   a paged-f32 session is *exactly* the dense oracle.
+//! * **refcounted copy-on-write sharing** — full blocks are registered
+//!   under a chain hash of the token prefix they encode; a new prompt
+//!   whose leading full blocks hash-match an existing prefix retains
+//!   those blocks instead of recomputing them (identical prefixes are
+//!   prefilled once and shared across rows). Writers privatize shared
+//!   blocks before mutating ([`KvPool::make_private`]).
+//! * **budget admission** — the pool hands out blocks until the budget
+//!   is exhausted; the scheduler admits by [`KvPool::free_blocks`] and
+//!   preempts-and-requeues whole requests under pressure (server.rs).
+//!
+//! Block layout: each block stores `[n_layer, n_head, block_tokens,
+//! head_dim]` for K and the same for V, so one (layer, head) tile of a
+//! block is a contiguous `[block_tokens, head_dim]` run — the unit the
+//! attention kernels gather/dequantize per step.
+//!
+//! Content hashes are 64-bit FNV-1a chains over token ids from position
+//! 0 (K/V at position *i* depend on **all** tokens ≤ *i* through
+//! attention, so the chain hash is exactly the content key). Collisions
+//! are possible in principle and accepted at this scale, like vLLM's
+//! hash-based prefix cache.
+//!
+//! [`DecodeSession`]: super::DecodeSession
+
+use std::collections::HashMap;
+
+use anyhow::{ensure, Result};
+
+use crate::config::{KvCacheConfig, KvDtype, ModelConfig};
+use crate::util::fp16::{Bf16, F16};
+
+/// Seed for the first link of a [`chain_hash`] chain (FNV-1a offset).
+pub const HASH_SEED: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Extend a token-prefix chain hash over `tokens` (FNV-1a over the
+/// little-endian bytes of each id). `chain_hash(chain_hash(S, a), b) ==
+/// chain_hash(S, a ++ b)`, so per-block hashes compose.
+pub fn chain_hash(prev: u64, tokens: &[i32]) -> u64 {
+    let mut h = prev;
+    for &t in tokens {
+        for b in (t as u32).to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+    h
+}
+
+/// Typed storage behind one of the pool's two arenas (K or V).
+enum Arena {
+    F32(Vec<f32>),
+    /// binary16 or bfloat16 bit patterns, per the pool's dtype.
+    U16(Vec<u16>),
+}
+
+impl Arena {
+    fn read(&self, dtype: KvDtype, start: usize, dst: &mut [f32]) {
+        match self {
+            Arena::F32(data) => {
+                dst.copy_from_slice(&data[start..start + dst.len()]);
+            }
+            Arena::U16(data) => match dtype {
+                KvDtype::F16 => {
+                    for (o, &bits) in
+                        dst.iter_mut().zip(&data[start..start + dst.len()])
+                    {
+                        *o = F16::from_bits(bits).to_f32();
+                    }
+                }
+                _ => {
+                    for (o, &bits) in
+                        dst.iter_mut().zip(&data[start..start + dst.len()])
+                    {
+                        *o = Bf16(bits).to_f32();
+                    }
+                }
+            },
+        }
+    }
+
+    fn write(&mut self, dtype: KvDtype, start: usize, src: &[f32]) {
+        match self {
+            Arena::F32(data) => {
+                data[start..start + src.len()].copy_from_slice(src);
+            }
+            Arena::U16(data) => match dtype {
+                KvDtype::F16 => {
+                    for (o, &x) in
+                        data[start..start + src.len()].iter_mut().zip(src)
+                    {
+                        *o = F16::from_f32(x).to_bits();
+                    }
+                }
+                _ => {
+                    for (o, &x) in
+                        data[start..start + src.len()].iter_mut().zip(src)
+                    {
+                        *o = Bf16::from_f32(x).to_bits();
+                    }
+                }
+            },
+        }
+    }
+
+    /// Copy one block's contents onto another (CoW clone). Blocks never
+    /// overlap, so `copy_within` is a straight memmove with no temp.
+    fn copy_block(&mut self, src: usize, dst: usize, stride: usize) {
+        match self {
+            Arena::F32(data) => data.copy_within(src..src + stride, dst),
+            Arena::U16(data) => data.copy_within(src..src + stride, dst),
+        }
+    }
+}
+
+/// Occupancy snapshot for gauges (`Server::stats`, benches).
+#[derive(Debug, Clone, Copy)]
+pub struct KvStats {
+    pub total_blocks: usize,
+    pub free_blocks: usize,
+    pub used_blocks: usize,
+    /// Blocks referenced by more than one row (prefix sharing at work).
+    pub shared_blocks: usize,
+    pub block_tokens: usize,
+    /// Bytes one block occupies across the K and V arenas.
+    pub block_bytes: usize,
+    pub dtype: KvDtype,
+}
+
+/// The shared block pool: typed K/V arenas + refcounts + free list +
+/// the content-hash registry behind prefix sharing.
+pub struct KvPool {
+    dtype: KvDtype,
+    block_tokens: usize,
+    ctx: usize,
+    n_layer: usize,
+    n_head: usize,
+    head_dim: usize,
+    /// Elements per block in each arena:
+    /// `n_layer * n_head * block_tokens * head_dim`.
+    stride: usize,
+    k: Arena,
+    v: Arena,
+    refcnt: Vec<u32>,
+    /// Free block ids (stack; popping yields ascending ids from fresh).
+    free: Vec<u32>,
+    /// Content hash a block is registered under (None = unregistered).
+    hash_of: Vec<Option<u64>>,
+    by_hash: HashMap<u64, u32>,
+}
+
+impl KvPool {
+    /// Build a pool for `cfg`'s geometry. With a byte budget the block
+    /// count is `budget / block_bytes` (must fit at least one full
+    /// `ctx`-token row); without one, the pool holds `rows` full rows —
+    /// paging (and sharing) without a memory cap.
+    pub fn new(cfg: &ModelConfig, kv: &KvCacheConfig, rows: usize) -> Result<KvPool> {
+        kv.validate()?;
+        let bt = kv.block_tokens.min(cfg.ctx).max(1);
+        let stride = cfg.n_layer * cfg.n_head * bt * cfg.head_dim();
+        let per_row = cfg.ctx.div_ceil(bt);
+        let block_bytes = 2 * stride * kv.dtype.bytes_per_elem();
+        let blocks = match kv.mem_bytes {
+            Some(bytes) => bytes / block_bytes,
+            None => rows.max(1) * per_row,
+        };
+        ensure!(
+            blocks >= per_row,
+            "kv budget too small: {blocks} block(s) of {block_bytes} bytes \
+             cannot hold one full {}-token row ({per_row} blocks; raise \
+             --kv-mem-mb or shrink --kv-block)",
+            cfg.ctx
+        );
+        let elems = blocks * stride;
+        let (k, v) = match kv.dtype {
+            KvDtype::F32 => {
+                (Arena::F32(vec![0.0; elems]), Arena::F32(vec![0.0; elems]))
+            }
+            _ => (Arena::U16(vec![0; elems]), Arena::U16(vec![0; elems])),
+        };
+        Ok(KvPool {
+            dtype: kv.dtype,
+            block_tokens: bt,
+            ctx: cfg.ctx,
+            n_layer: cfg.n_layer,
+            n_head: cfg.n_head,
+            head_dim: cfg.head_dim(),
+            stride,
+            k,
+            v,
+            refcnt: vec![0; blocks],
+            free: (0..blocks as u32).rev().collect(),
+            hash_of: vec![None; blocks],
+            by_hash: HashMap::new(),
+        })
+    }
+
+    pub fn dtype(&self) -> KvDtype {
+        self.dtype
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    /// Blocks needed to hold `tokens` cached positions.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens)
+    }
+
+    /// Blocks one full `ctx`-token row occupies.
+    pub fn blocks_per_row(&self) -> usize {
+        self.blocks_for(self.ctx)
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.refcnt.len()
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.total_blocks() - self.free_blocks()
+    }
+
+    pub fn shared_blocks(&self) -> usize {
+        self.refcnt.iter().filter(|&&c| c > 1).count()
+    }
+
+    pub fn is_shared(&self, blk: u32) -> bool {
+        self.refcnt[blk as usize] > 1
+    }
+
+    pub fn stats(&self) -> KvStats {
+        KvStats {
+            total_blocks: self.total_blocks(),
+            free_blocks: self.free_blocks(),
+            used_blocks: self.used_blocks(),
+            shared_blocks: self.shared_blocks(),
+            block_tokens: self.block_tokens,
+            block_bytes: 2 * self.stride * self.dtype.bytes_per_elem(),
+            dtype: self.dtype,
+        }
+    }
+
+    /// Take a free block (refcount 1, unregistered). `None` = budget
+    /// exhausted: the caller preempts or rejects.
+    pub fn alloc(&mut self) -> Option<u32> {
+        let blk = self.free.pop()?;
+        debug_assert_eq!(self.refcnt[blk as usize], 0);
+        debug_assert!(self.hash_of[blk as usize].is_none());
+        self.refcnt[blk as usize] = 1;
+        Some(blk)
+    }
+
+    /// Add a reference (a row sharing the block via its table).
+    pub fn retain(&mut self, blk: u32) {
+        debug_assert!(self.refcnt[blk as usize] > 0, "retain of a free block");
+        self.refcnt[blk as usize] += 1;
+    }
+
+    /// Drop a reference; the last drop unregisters the block and
+    /// returns it to the free list.
+    pub fn release(&mut self, blk: u32) {
+        let i = blk as usize;
+        debug_assert!(self.refcnt[i] > 0, "release of a free block");
+        self.refcnt[i] -= 1;
+        if self.refcnt[i] == 0 {
+            if let Some(h) = self.hash_of[i].take() {
+                // only remove the registry entry if it still points here
+                if self.by_hash.get(&h) == Some(&blk) {
+                    self.by_hash.remove(&h);
+                }
+            }
+            self.free.push(blk);
+        }
+    }
+
+    /// Look up a full block by prefix content hash.
+    pub fn lookup(&self, hash: u64) -> Option<u32> {
+        self.by_hash.get(&hash).copied()
+    }
+
+    /// Register a live block under a content hash so later prompts can
+    /// share it. First writer wins; re-registration is a no-op.
+    pub fn register(&mut self, blk: u32, hash: u64) {
+        let i = blk as usize;
+        debug_assert!(self.refcnt[i] > 0, "register of a free block");
+        if self.hash_of[i].is_some() || self.by_hash.contains_key(&hash) {
+            return;
+        }
+        self.hash_of[i] = Some(hash);
+        self.by_hash.insert(hash, blk);
+    }
+
+    /// Drop a block's registry entry (its content is about to change —
+    /// window re-encode overwrites rows in place).
+    pub fn unregister(&mut self, blk: u32) {
+        let i = blk as usize;
+        if let Some(h) = self.hash_of[i].take() {
+            if self.by_hash.get(&h) == Some(&blk) {
+                self.by_hash.remove(&h);
+            }
+        }
+    }
+
+    /// Copy-on-write: a privately owned handle to `blk`'s contents.
+    /// Unshared blocks are returned as-is; shared ones are cloned into a
+    /// fresh block (refcount 1, unregistered) and the caller's reference
+    /// to the original is dropped. `None` = no free block for the clone.
+    pub fn make_private(&mut self, blk: u32) -> Option<u32> {
+        if self.refcnt[blk as usize] <= 1 {
+            return Some(blk);
+        }
+        let fresh = self.alloc()?;
+        let (src, dst) = (blk as usize * self.stride, fresh as usize * self.stride);
+        self.k.copy_block(src, dst, self.stride);
+        self.v.copy_block(src, dst, self.stride);
+        // drop the caller's reference to the shared original (refcnt > 1,
+        // so this never frees it)
+        self.refcnt[blk as usize] -= 1;
+        Some(fresh)
+    }
+
+    /// [`KvPool::make_private`] for a block the caller is about to
+    /// **fully overwrite** (window re-encode): same ownership move, no
+    /// content copy.
+    pub fn rehome(&mut self, blk: u32) -> Option<u32> {
+        if self.refcnt[blk as usize] <= 1 {
+            return Some(blk);
+        }
+        let fresh = self.alloc()?;
+        self.refcnt[blk as usize] -= 1;
+        Some(fresh)
+    }
+
+    /// Live references to a block (0 = free).
+    pub fn refcount(&self, blk: u32) -> u32 {
+        self.refcnt[blk as usize]
+    }
+
+    /// Element offset of `(l, h, t)`'s head-dim run inside a block.
+    #[inline]
+    fn off(&self, l: usize, h: usize, t: usize) -> usize {
+        ((l * self.n_head + h) * self.block_tokens + t) * self.head_dim
+    }
+
+    /// Dequantize `n` consecutive key slots of `(blk, l, h)` starting at
+    /// in-block slot `t0` into `dst` (`n * head_dim` f32). For f32 pools
+    /// this is a bit-preserving copy.
+    pub fn read_k(&self, blk: u32, l: usize, h: usize, t0: usize, n: usize, dst: &mut [f32]) {
+        debug_assert_eq!(dst.len(), n * self.head_dim);
+        let start = blk as usize * self.stride + self.off(l, h, t0);
+        self.k.read(self.dtype, start, dst);
+    }
+
+    /// [`KvPool::read_k`] for the value arena.
+    pub fn read_v(&self, blk: u32, l: usize, h: usize, t0: usize, n: usize, dst: &mut [f32]) {
+        debug_assert_eq!(dst.len(), n * self.head_dim);
+        let start = blk as usize * self.stride + self.off(l, h, t0);
+        self.v.read(self.dtype, start, dst);
+    }
+
+    /// Encode one token's K/V across every (layer, head) into in-block
+    /// slot `t`. `k_all`/`v_all` are `[n_layer * n_head, head_dim]`.
+    pub fn write_token(&mut self, blk: u32, t: usize, k_all: &[f32], v_all: &[f32]) {
+        debug_assert!(t < self.block_tokens);
+        debug_assert_eq!(k_all.len(), self.n_layer * self.n_head * self.head_dim);
+        debug_assert_eq!(k_all.len(), v_all.len());
+        let hd = self.head_dim;
+        let base = blk as usize * self.stride;
+        for l in 0..self.n_layer {
+            for h in 0..self.n_head {
+                let src = (l * self.n_head + h) * hd;
+                let dst = base + self.off(l, h, t);
+                self.k.write(self.dtype, dst, &k_all[src..src + hd]);
+                self.v.write(self.dtype, dst, &v_all[src..src + hd]);
+            }
+        }
+    }
+
+    /// Encode a whole captured window into a row's block table.
+    /// `k`/`v` are `[n_layer, n_head, w, head_dim]` (a prefill capture
+    /// buffer); slots `0..w` of the table's blocks are overwritten.
+    pub fn write_capture(&mut self, table: &[u32], w: usize, k: &[f32], v: &[f32]) {
+        debug_assert_eq!(k.len(), self.n_layer * self.n_head * w * self.head_dim);
+        debug_assert_eq!(k.len(), v.len());
+        debug_assert!(table.len() * self.block_tokens >= w);
+        let hd = self.head_dim;
+        for (bi, &blk) in table.iter().enumerate() {
+            let t0 = bi * self.block_tokens;
+            if t0 >= w {
+                break;
+            }
+            let n = (w - t0).min(self.block_tokens);
+            let base = blk as usize * self.stride;
+            for l in 0..self.n_layer {
+                for h in 0..self.n_head {
+                    let src = ((l * self.n_head + h) * w + t0) * hd;
+                    let dst = base + self.off(l, h, 0);
+                    self.k.write(self.dtype, dst, &k[src..src + n * hd]);
+                    self.v.write(self.dtype, dst, &v[src..src + n * hd]);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest::{run_property, Gen};
+
+    fn pool(dtype: KvDtype, block_tokens: usize, blocks: usize) -> KvPool {
+        let cfg = ModelConfig::builtin("tiny", "consmax").unwrap();
+        let kv = KvCacheConfig {
+            dtype,
+            block_tokens,
+            // budget expressed exactly in blocks
+            mem_bytes: Some(
+                blocks * 2 * cfg.n_layer * cfg.n_head * block_tokens
+                    * cfg.head_dim()
+                    * dtype.bytes_per_elem(),
+            ),
+        };
+        KvPool::new(&cfg, &kv, 1).unwrap()
+    }
+
+    #[test]
+    fn chain_hash_composes() {
+        let a = [1, 2, 3];
+        let b = [4, 5];
+        let whole = chain_hash(HASH_SEED, &[1, 2, 3, 4, 5]);
+        let split = chain_hash(chain_hash(HASH_SEED, &a), &b);
+        assert_eq!(whole, split);
+        assert_ne!(whole, chain_hash(HASH_SEED, &[1, 2, 3, 4, 6]));
+        // order matters
+        assert_ne!(
+            chain_hash(HASH_SEED, &[1, 2]),
+            chain_hash(HASH_SEED, &[2, 1])
+        );
+    }
+
+    #[test]
+    fn pool_geometry_and_budget() {
+        let cfg = ModelConfig::builtin("tiny", "consmax").unwrap();
+        let p = pool(KvDtype::F32, 16, 8);
+        assert_eq!(p.total_blocks(), 8);
+        assert_eq!(p.free_blocks(), 8);
+        assert_eq!(p.blocks_per_row(), 4); // ctx 64 / 16
+        assert_eq!(p.blocks_for(1), 1);
+        assert_eq!(p.blocks_for(16), 1);
+        assert_eq!(p.blocks_for(17), 2);
+        // fp16 blocks are half the bytes of f32 blocks
+        let s32 = pool(KvDtype::F32, 16, 4).stats();
+        let s16 = pool(KvDtype::F16, 16, 4).stats();
+        assert_eq!(s32.block_bytes, 2 * s16.block_bytes);
+        // a budget below one full row is rejected
+        let kv = KvCacheConfig {
+            dtype: KvDtype::F32,
+            block_tokens: 16,
+            mem_bytes: Some(1024),
+        };
+        assert!(KvPool::new(&cfg, &kv, 1).is_err());
+        // block_tokens larger than ctx clamps to one block per row
+        let p = pool(KvDtype::F32, 64, 2);
+        assert_eq!(p.blocks_per_row(), 1);
+    }
+
+    #[test]
+    fn alloc_release_refcounts() {
+        let mut p = pool(KvDtype::F32, 16, 4);
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        assert_ne!(a, b);
+        assert_eq!(p.free_blocks(), 2);
+        p.retain(a);
+        assert!(p.is_shared(a));
+        assert_eq!(p.shared_blocks(), 1);
+        p.release(a);
+        assert!(!p.is_shared(a));
+        assert_eq!(p.free_blocks(), 2); // still one ref left
+        p.release(a);
+        p.release(b);
+        assert_eq!(p.free_blocks(), 4);
+        // pool drains fully, then refuses further allocs
+        let all: Vec<u32> = (0..4).map(|_| p.alloc().unwrap()).collect();
+        assert!(p.alloc().is_none());
+        for blk in all {
+            p.release(blk);
+        }
+        assert_eq!(p.free_blocks(), 4);
+    }
+
+    #[test]
+    fn register_lookup_and_release_unregisters() {
+        let mut p = pool(KvDtype::F32, 16, 4);
+        let a = p.alloc().unwrap();
+        let h = chain_hash(HASH_SEED, &[7, 8, 9]);
+        assert!(p.lookup(h).is_none());
+        p.register(a, h);
+        assert_eq!(p.lookup(h), Some(a));
+        // first writer wins
+        let b = p.alloc().unwrap();
+        p.register(b, h);
+        assert_eq!(p.lookup(h), Some(a));
+        p.release(a);
+        assert!(p.lookup(h).is_none(), "free block left in the registry");
+        p.release(b);
+    }
+
+    #[test]
+    fn write_read_roundtrip_per_dtype() {
+        for dtype in [KvDtype::F32, KvDtype::F16, KvDtype::Bf16] {
+            let mut p = pool(dtype, 4, 16);
+            let hd = p.head_dim;
+            let lanes = p.n_layer * p.n_head;
+            let blk = p.alloc().unwrap();
+            let k_all: Vec<f32> =
+                (0..lanes * hd).map(|i| (i as f32) * 0.01 - 1.0).collect();
+            let v_all: Vec<f32> =
+                (0..lanes * hd).map(|i| 2.0 - (i as f32) * 0.02).collect();
+            p.write_token(blk, 3, &k_all, &v_all);
+            let mut kk = vec![0.0f32; hd];
+            let mut vv = vec![0.0f32; hd];
+            for l in 0..p.n_layer {
+                for h in 0..p.n_head {
+                    p.read_k(blk, l, h, 3, 1, &mut kk);
+                    p.read_v(blk, l, h, 3, 1, &mut vv);
+                    let src = (l * p.n_head + h) * hd;
+                    for i in 0..hd {
+                        let want_k = dtype.roundtrip(k_all[src + i]);
+                        let want_v = dtype.roundtrip(v_all[src + i]);
+                        assert_eq!(kk[i].to_bits(), want_k.to_bits());
+                        assert_eq!(vv[i].to_bits(), want_v.to_bits());
+                    }
+                }
+            }
+            p.release(blk);
+        }
+    }
+
+    #[test]
+    fn make_private_clones_shared_blocks_only() {
+        let mut p = pool(KvDtype::F32, 4, 16);
+        let a = p.alloc().unwrap();
+        let lanes = p.n_layer * p.n_head * p.head_dim;
+        let k_all: Vec<f32> = (0..lanes).map(|i| i as f32).collect();
+        p.write_token(a, 0, &k_all, &k_all);
+        // unshared: identity
+        assert_eq!(p.make_private(a), Some(a));
+        // shared: fresh copy, original keeps the other reference
+        p.retain(a);
+        let b = p.make_private(a).unwrap();
+        assert_ne!(a, b);
+        assert_eq!(p.refcount(a), 1);
+        assert_eq!(p.refcount(b), 1);
+        let mut got = vec![0.0f32; p.head_dim];
+        p.read_k(b, 0, 0, 0, 1, &mut got);
+        assert_eq!(&got[..], &k_all[..p.head_dim], "clone must carry contents");
+        p.release(a);
+        p.release(b);
+        assert_eq!(p.free_blocks(), p.total_blocks());
+    }
+
+    #[test]
+    fn rehome_moves_ownership_without_copying() {
+        let mut p = pool(KvDtype::F32, 16, 4);
+        let a = p.alloc().unwrap();
+        // unshared: identity (and the registry entry survives)
+        assert_eq!(p.rehome(a), Some(a));
+        p.retain(a);
+        let b = p.rehome(a).unwrap();
+        assert_ne!(a, b);
+        assert_eq!(p.refcount(a), 1);
+        assert_eq!(p.refcount(b), 1);
+        p.release(a);
+        p.release(b);
+        assert_eq!(p.free_blocks(), p.total_blocks());
+    }
+
+    /// Satellite property: arbitrary alloc / retain / release /
+    /// make_private / register churn never leaks blocks, never aliases
+    /// unshared handles, and always drains back to an empty pool.
+    #[test]
+    fn allocator_property_never_leaks_or_aliases() {
+        run_property("kv pool churn", 24, |g: &mut Gen| {
+            let blocks = g.usize(4, 12);
+            let mut p = pool(KvDtype::F16, 16, blocks.max(4));
+            let total = p.total_blocks();
+            // rows: lists of (block, expected unique tag written)
+            let mut live: Vec<u32> = Vec::new();
+            let lanes = p.n_layer * p.n_head * p.head_dim;
+            let mut tag = 0f32;
+            for _ in 0..g.usize(10, 60) {
+                match g.usize(0, 4) {
+                    0 => {
+                        if let Some(b) = p.alloc() {
+                            // stamp fresh blocks with a unique tag
+                            tag += 1.0;
+                            let buf = vec![tag; lanes];
+                            p.write_token(b, 0, &buf, &buf);
+                            live.push(b);
+                        }
+                    }
+                    1 => {
+                        if !live.is_empty() {
+                            let i = g.usize(0, live.len());
+                            let b = live[i];
+                            p.retain(b);
+                            live.push(b);
+                        }
+                    }
+                    2 => {
+                        if !live.is_empty() {
+                            let i = g.usize(0, live.len());
+                            let b = live.swap_remove(i);
+                            p.release(b);
+                        }
+                    }
+                    _ => {
+                        if !live.is_empty() {
+                            let i = g.usize(0, live.len());
+                            let b = live[i];
+                            if let Some(nb) = p.make_private(b) {
+                                if nb != b {
+                                    // clone carries the original bytes
+                                    let mut got = vec![0.0f32; p.head_dim];
+                                    let mut want = vec![0.0f32; p.head_dim];
+                                    p.read_k(nb, 0, 0, 0, 1, &mut got);
+                                    p.read_k(b, 0, 0, 0, 1, &mut want);
+                                    prop_assert!(
+                                        got == want,
+                                        "CoW clone lost contents"
+                                    );
+                                }
+                                live[i] = nb;
+                            }
+                        }
+                    }
+                }
+                // conservation: free + live handles' blocks == total
+                let held: std::collections::BTreeSet<u32> =
+                    live.iter().copied().collect();
+                prop_assert!(
+                    p.free_blocks() + held.len() == total,
+                    "leak: {} free + {} held != {} total",
+                    p.free_blocks(),
+                    held.len(),
+                    total
+                );
+                // refcount of every held block == number of handles
+                for &b in &held {
+                    let handles =
+                        live.iter().filter(|&&x| x == b).count() as u32;
+                    prop_assert!(
+                        p.refcount(b) == handles,
+                        "block {b}: refcount {} vs {} handles",
+                        p.refcount(b),
+                        handles
+                    );
+                }
+                // unshared handles never alias each other
+                let unshared: Vec<u32> = held
+                    .iter()
+                    .copied()
+                    .filter(|&b| !p.is_shared(b))
+                    .collect();
+                let uniq: std::collections::BTreeSet<u32> =
+                    unshared.iter().copied().collect();
+                prop_assert!(uniq.len() == unshared.len(), "aliased blocks");
+            }
+            // drop every handle: the pool must return to empty
+            for b in live.drain(..) {
+                p.release(b);
+            }
+            prop_assert!(
+                p.free_blocks() == total,
+                "pool did not drain: {} of {}",
+                p.free_blocks(),
+                total
+            );
+            prop_assert!(p.shared_blocks() == 0);
+            Ok(())
+        });
+    }
+}

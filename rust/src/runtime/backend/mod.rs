@@ -26,6 +26,7 @@
 //! [`Engine`]: crate::runtime::Engine
 
 pub mod decode;
+pub mod kvcache;
 pub mod model;
 pub mod native;
 
@@ -36,6 +37,7 @@ use anyhow::{bail, Result};
 use crate::runtime::HostTensor;
 
 pub use decode::DecodeSession;
+pub use kvcache::{KvPool, KvStats};
 pub use model::NativeModel;
 pub use native::NativeBackend;
 

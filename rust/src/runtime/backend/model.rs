@@ -43,7 +43,10 @@ use std::collections::BTreeMap;
 use anyhow::{bail, ensure, Result};
 
 use crate::config::ModelConfig;
-use crate::runtime::backend::decode::{kv_offset, RowMut};
+use crate::runtime::backend::decode::{
+    kv_offset, KvCapture, PagedParts, RowMut, RowScratch,
+};
+use crate::runtime::backend::kvcache::{chain_hash, KvPool, HASH_SEED};
 use crate::runtime::backend::native;
 use crate::runtime::backend::DecodeSession;
 use crate::runtime::parallel;
@@ -183,17 +186,18 @@ impl NativeModel {
     /// * `last_only` — emit logits for each row's final position only
     ///   (b, vocab), skipping the (b, t, vocab) LM-head matmul that
     ///   evaluation needs but decoding discards.
-    /// * `capture` — a session row view: store every layer's K/V
-    ///   segments into the row's cache at slots `0..t` (b must be 1).
-    ///   This is how `prefill` fills a `DecodeSession` with exactly the
-    ///   values a plain forward would compute.
+    /// * `capture` — a writable K/V target: store every layer's K/V
+    ///   segments at slots `0..t` (b must be 1). This is how `prefill`
+    ///   fills a dense `DecodeSession` row — or a transient buffer the
+    ///   paged path encodes into pool blocks — with exactly the values
+    ///   a plain forward would compute.
     fn forward_impl(
         &self,
         tokens: &[i32],
         b: usize,
         t: usize,
         last_only: bool,
-        mut capture: Option<&mut RowMut<'_>>,
+        mut capture: Option<&mut KvCapture<'_>>,
     ) -> Result<Vec<f32>> {
         let cfg = &self.cfg;
         let (d, h, hd, v) = (cfg.n_embd, cfg.n_head, cfg.head_dim(), cfg.vocab);
@@ -246,14 +250,15 @@ impl NativeModel {
                 3 * d,
                 &mut qkv,
             );
-            if let Some(row) = capture.as_deref_mut() {
+            if let Some(cap) = capture.as_deref_mut() {
+                debug_assert!(t <= cap.slots);
                 for i in 0..t {
                     for hh in 0..h {
-                        let kb = row.kv_start(l, hh, i);
+                        let kb = cap.kv_start(l, hh, i);
                         let ko = i * 3 * d + d + hh * hd;
-                        row.k[kb..kb + hd].copy_from_slice(&qkv[ko..ko + hd]);
+                        cap.k[kb..kb + hd].copy_from_slice(&qkv[ko..ko + hd]);
                         let vo = ko + d;
-                        row.v[kb..kb + hd].copy_from_slice(&qkv[vo..vo + hd]);
+                        cap.v[kb..kb + hd].copy_from_slice(&qkv[vo..vo + hd]);
                     }
                 }
             }
@@ -489,6 +494,8 @@ impl NativeModel {
         pairs: &[(usize, &[i32])],
     ) -> Result<Vec<f32>> {
         self.check_session(sess)?;
+        let v = self.cfg.vocab;
+        let mut seen = vec![false; sess.batch()];
         for &(slot, seq) in pairs {
             ensure!(
                 slot < sess.batch(),
@@ -496,8 +503,18 @@ impl NativeModel {
                 sess.batch()
             );
             ensure!(!seq.is_empty(), "prefill_rows: slot {slot} got an empty prompt");
+            ensure!(!seen[slot], "prefill_rows: duplicate slot {slot}");
+            seen[slot] = true;
+            for &tok in seq {
+                ensure!(
+                    (0..v as i32).contains(&tok),
+                    "token id {tok} outside vocab {v}"
+                );
+            }
         }
-        let v = self.cfg.vocab;
+        if sess.is_paged() {
+            return self.prefill_rows_paged(sess, pairs);
+        }
         let ctx = self.cfg.ctx;
         let mut out = vec![0.0f32; pairs.len() * v];
 
@@ -521,7 +538,11 @@ impl NativeModel {
             let w = it.seq.len().min(ctx);
             let window = &it.seq[it.seq.len() - w..];
             it.row.reset(window);
-            match self.forward_impl(window, 1, w, true, Some(&mut it.row)) {
+            let res = {
+                let mut cap = it.row.capture();
+                self.forward_impl(window, 1, w, true, Some(&mut cap))
+            };
+            match res {
                 Ok(logits) => {
                     it.logits.copy_from_slice(&logits);
                     *it.row.len = w;
@@ -586,6 +607,9 @@ impl NativeModel {
                 "token id {tok} outside vocab {v}"
             );
         }
+        if sess.is_paged() {
+            return self.decode_step_active_paged(sess, tokens, active);
+        }
         let mut out = vec![0.0f32; sess.batch() * v];
 
         struct Work<'a> {
@@ -611,8 +635,11 @@ impl NativeModel {
             if *it.row.len == ctx {
                 // eviction: re-encode the shifted window from slot 0
                 let window = it.row.history_vec();
-                match self.forward_impl(&window, 1, ctx, true, Some(&mut it.row))
-                {
+                let res = {
+                    let mut cap = it.row.capture();
+                    self.forward_impl(&window, 1, ctx, true, Some(&mut cap))
+                };
+                match res {
                     Ok(logits) => it.logits.copy_from_slice(&logits),
                     Err(e) => it.err = Some(e),
                 }
@@ -687,40 +714,43 @@ impl NativeModel {
             s.y.fill(0.0);
             for hh in 0..h {
                 let q = &s.qkv[hh * hd..(hh + 1) * hd];
+                // a dense row's (l, hh) slots are one contiguous
+                // [ctx, hd] run, so the shared attention-tail kernels
+                // (also the paged path's post-gather kernels) stream it
+                // directly — same float ops, same order as ever
+                let base = kv_offset(h, ctx, hd, l, hh, 0);
+                let span = (pos + 1) * hd;
+                let kreg = &row.k[base..base + span];
+                let vreg = &row.v[base..base + span];
                 if is_consmax {
                     // ConSmax has no row max/sum (the paper's point):
                     // score → C·exp → PV streams per cached key, exactly
                     // the fused loop of the batched forward.
-                    let (bh, gh) = (beta[hh], gamma[hh]);
-                    for j in 0..=pos {
-                        let kb = kv_offset(h, ctx, hd, l, hh, j);
-                        let sc = native::dot(q, &row.k[kb..kb + hd]) * scale;
-                        let pj = (sc - bh).exp() / gh;
-                        let yrow = &mut s.y[hh * hd..(hh + 1) * hd];
-                        for (o, &vv) in yrow.iter_mut().zip(&row.v[kb..kb + hd]) {
-                            *o += pj * vv;
-                        }
-                    }
+                    native::attend_consmax(
+                        q,
+                        kreg,
+                        vreg,
+                        hd,
+                        scale,
+                        beta[hh],
+                        gamma[hh],
+                        &mut s.y[hh * hd..(hh + 1) * hd],
+                    );
                 } else {
                     // softmax/softermax reduce over the whole row first,
                     // into the row's scratch score buffer
-                    for j in 0..=pos {
-                        let kb = kv_offset(h, ctx, hd, l, hh, j);
-                        s.srow[j] = native::dot(q, &row.k[kb..kb + hd]) * scale;
-                    }
+                    native::attend_scores(q, kreg, hd, scale, &mut s.srow[..=pos]);
                     if is_softermax {
                         native::softermax_inplace(&mut s.srow[..=pos]);
                     } else {
                         native::softmax_inplace(&mut s.srow[..=pos]);
                     }
-                    for j in 0..=pos {
-                        let pj = s.srow[j];
-                        let kb = kv_offset(h, ctx, hd, l, hh, j);
-                        let yrow = &mut s.y[hh * hd..(hh + 1) * hd];
-                        for (o, &vv) in yrow.iter_mut().zip(&row.v[kb..kb + hd]) {
-                            *o += pj * vv;
-                        }
-                    }
+                    native::attend_pv(
+                        &s.srow[..=pos],
+                        vreg,
+                        hd,
+                        &mut s.y[hh * hd..(hh + 1) * hd],
+                    );
                 }
             }
             affine_into(
@@ -774,6 +804,564 @@ impl NativeModel {
         // vocab-chunked LM head straight into the caller's logits row
         native::matmul_bt_into(&s.xn, wte, 1, d, v, out);
         *row.len = pos + 1;
+    }
+
+    // -----------------------------------------------------------------
+    // paged engine (DESIGN.md §KV-memory seam)
+    //
+    // The paged twins of prefill/decode keep the public API unchanged —
+    // `prefill_rows` / `decode_step_active` dispatch on the session's
+    // backing — and are pinned bitwise-identical to the dense oracle at
+    // f32 storage (`rust/tests/kvcache_paged.rs`).
+    // -----------------------------------------------------------------
+
+    /// Paged twin of [`NativeModel::prefill_rows`]. Rows prefill
+    /// serially (each captured forward still fans out internally), so a
+    /// prompt's full blocks — registered under their prefix chain hash
+    /// as they fill — are immediately shareable by the *next* row of
+    /// the same call: identical prefixes are prefilled once.
+    fn prefill_rows_paged(
+        &self,
+        sess: &mut DecodeSession,
+        pairs: &[(usize, &[i32])],
+    ) -> Result<Vec<f32>> {
+        let v = self.cfg.vocab;
+        let ctx = self.cfg.ctx;
+        let mut out = vec![0.0f32; pairs.len() * v];
+        for (&(slot, seq), logits) in pairs.iter().zip(out.chunks_mut(v)) {
+            let w = seq.len().min(ctx);
+            let window = &seq[seq.len() - w..];
+            self.prefill_row_paged(sess, slot, window, logits)?;
+        }
+        Ok(out)
+    }
+
+    /// Prefill one paged row over `window` (1..=ctx tokens): retain
+    /// hash-matched full prefix blocks (refcounted sharing), then either
+    /// capture-forward the whole window (cold) or extend the shared
+    /// prefix token-by-token through the incremental kernel (warm) —
+    /// extension is bitwise the recompute forward, so both paths emit
+    /// the exact dense-prefill logits at f32 storage.
+    fn prefill_row_paged(
+        &self,
+        sess: &mut DecodeSession,
+        slot: usize,
+        window: &[i32],
+        out: &mut [f32],
+    ) -> Result<()> {
+        let w = window.len();
+        debug_assert!(w >= 1 && w <= self.cfg.ctx);
+        sess.reset_row(slot);
+
+        let parts = sess.paged_parts().expect("paged prefill on a dense session");
+        let PagedParts { pool, tables, len, history, scratch } = parts;
+        let bt = pool.block_tokens();
+
+        history[slot].clear();
+        history[slot].extend(window.iter().copied());
+
+        // chain hash at every full-block boundary of the window: K/V at
+        // position i depend on all tokens <= i, so the chained prefix
+        // hash is exactly a full block's content key
+        let full = w / bt;
+        let mut hashes = Vec::with_capacity(full);
+        let mut h = HASH_SEED;
+        for chunk in window.chunks_exact(bt) {
+            h = chain_hash(h, chunk);
+            hashes.push(h);
+        }
+        debug_assert_eq!(hashes.len(), full);
+
+        // longest run of already-resident prefix blocks; always leave
+        // at least one window token to compute so prefill emits logits
+        let cap = if w % bt == 0 { full.saturating_sub(1) } else { full };
+        let table = &mut tables[slot];
+        for &hsh in hashes.iter().take(cap) {
+            match pool.lookup(hsh) {
+                Some(blk) => {
+                    pool.retain(blk);
+                    table.push(blk);
+                }
+                None => break,
+            }
+        }
+        let shared = table.len() * bt;
+
+        if shared == 0 {
+            // cold path: one captured batch forward over the window,
+            // encoded into freshly allocated blocks afterwards
+            let hd = self.cfg.head_dim();
+            let elems = self.cfg.n_layer * self.cfg.n_head * w * hd;
+            let mut tk = vec![0.0f32; elems];
+            let mut tv = vec![0.0f32; elems];
+            let logits = {
+                let mut cap_buf = KvCapture {
+                    n_head: self.cfg.n_head,
+                    head_dim: hd,
+                    slots: w,
+                    k: &mut tk,
+                    v: &mut tv,
+                };
+                self.forward_impl(window, 1, w, true, Some(&mut cap_buf))?
+            };
+            out.copy_from_slice(&logits);
+            for _ in 0..pool.blocks_for(w) {
+                let Some(blk) = pool.alloc() else {
+                    bail!(
+                        "kv pool exhausted during prefill ({} free blocks); \
+                         the scheduler must admit by free blocks",
+                        pool.free_blocks()
+                    );
+                };
+                table.push(blk);
+            }
+            pool.write_capture(table, w, &tk, &tv);
+            for (i, &hsh) in hashes.iter().enumerate() {
+                pool.register(table[i], hsh);
+            }
+            len[slot] = w;
+        } else {
+            // warm path: the shared prefix is already cached; extend it
+            // one token at a time through the incremental kernel
+            len[slot] = shared;
+            for (off, &tok) in window[shared..].iter().enumerate() {
+                let pos = shared + off;
+                if pos == table.len() * bt {
+                    let Some(blk) = pool.alloc() else {
+                        bail!("kv pool exhausted during prefill");
+                    };
+                    table.push(blk);
+                }
+                // only the last window token's logits are the prefill
+                // output; earlier extension tokens skip the LM head
+                let want = if pos + 1 == w { Some(&mut *out) } else { None };
+                self.decode_token_paged(
+                    pool,
+                    table,
+                    &mut scratch[slot],
+                    tok,
+                    pos,
+                    want,
+                );
+                let sc = &scratch[slot];
+                pool.write_token(
+                    table[pos / bt],
+                    pos % bt,
+                    &sc.staged_k,
+                    &sc.staged_v,
+                );
+                len[slot] = pos + 1;
+                // a block that just filled becomes shareable
+                if (pos + 1) % bt == 0 {
+                    let bi = pos / bt;
+                    if bi < hashes.len() {
+                        pool.register(table[bi], hashes[bi]);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Paged twin of the dense step, in four phases: (1, serial) push
+    /// history and resolve each active row's write-target block —
+    /// allocate on a block boundary, CoW-privatize a shared target;
+    /// (2, serial) window re-encode for rows at `ctx`; (3, parallel)
+    /// one incremental pass per remaining row against the **read-only**
+    /// shared pool, staging each row's new K/V in its scratch;
+    /// (4, serial) encode the staged K/V into the pool and bump
+    /// lengths. The scheduler guarantees phase 1 cannot run out of
+    /// blocks by preempting until `paged_step_demand` fits.
+    fn decode_step_active_paged(
+        &self,
+        sess: &mut DecodeSession,
+        tokens: &[i32],
+        active: &[bool],
+    ) -> Result<Vec<f32>> {
+        let v = self.cfg.vocab;
+        let ctx = self.cfg.ctx;
+        let b = sess.batch();
+        let mut out = vec![0.0f32; b * v];
+
+        // -- phase 1 (serial): history + write-target resolution ------
+        let mut evict = vec![false; b];
+        let mut step = vec![false; b];
+        {
+            let parts =
+                sess.paged_parts().expect("paged step on a dense session");
+            let PagedParts { pool, tables, len, history, .. } = parts;
+            let bt = pool.block_tokens();
+            for r in 0..b {
+                if !active[r] {
+                    continue;
+                }
+                let hist = &mut history[r];
+                if hist.len() == ctx {
+                    hist.pop_front();
+                }
+                hist.push_back(tokens[r]);
+                if len[r] == ctx {
+                    evict[r] = true;
+                    continue;
+                }
+                let pos = len[r];
+                let table = &mut tables[r];
+                if pos == table.len() * bt {
+                    let Some(blk) = pool.alloc() else {
+                        bail!(
+                            "kv pool exhausted mid-step ({} free blocks); \
+                             the scheduler must preempt by \
+                             paged_step_demand first",
+                            pool.free_blocks()
+                        );
+                    };
+                    table.push(blk);
+                } else {
+                    let bi = pos / bt;
+                    if pool.is_shared(table[bi]) {
+                        let Some(blk) = pool.make_private(table[bi]) else {
+                            bail!("kv pool exhausted resolving copy-on-write");
+                        };
+                        table[bi] = blk;
+                    }
+                }
+                step[r] = true;
+            }
+        }
+
+        // -- phase 2 (serial): window re-encode for rows at ctx -------
+        for r in 0..b {
+            if evict[r] {
+                self.reencode_window_paged(
+                    sess,
+                    r,
+                    &mut out[r * v..(r + 1) * v],
+                )?;
+            }
+        }
+
+        // -- phase 3 (parallel): incremental pass, pool read-only -----
+        {
+            let parts =
+                sess.paged_parts().expect("paged step on a dense session");
+            let PagedParts { pool, tables, len, scratch, .. } = parts;
+            let pool: &KvPool = pool;
+            let tables: &[Vec<u32>] = tables;
+            struct Work<'a> {
+                table: &'a [u32],
+                scratch: &'a mut RowScratch,
+                logits: &'a mut [f32],
+                tok: i32,
+                pos: usize,
+            }
+            let mut items: Vec<Work<'_>> = Vec::new();
+            let mut logit_rows: Vec<Option<&mut [f32]>> =
+                out.chunks_mut(v).map(Some).collect();
+            for (r, sc) in scratch.iter_mut().enumerate() {
+                if !step[r] {
+                    continue;
+                }
+                items.push(Work {
+                    table: &tables[r],
+                    scratch: sc,
+                    logits: logit_rows[r].take().expect("one logits row"),
+                    tok: tokens[r],
+                    pos: len[r],
+                });
+            }
+            parallel::par_items(&mut items, |_, it| {
+                self.decode_token_paged(
+                    pool,
+                    it.table,
+                    it.scratch,
+                    it.tok,
+                    it.pos,
+                    Some(&mut *it.logits),
+                );
+            });
+        }
+
+        // -- phase 4 (serial): encode staged K/V, bump lengths --------
+        {
+            let parts =
+                sess.paged_parts().expect("paged step on a dense session");
+            let PagedParts { pool, tables, len, scratch, .. } = parts;
+            let bt = pool.block_tokens();
+            for r in 0..b {
+                if !step[r] {
+                    continue;
+                }
+                let pos = len[r];
+                let sc = &scratch[r];
+                pool.write_token(
+                    tables[r][pos / bt],
+                    pos % bt,
+                    &sc.staged_k,
+                    &sc.staged_v,
+                );
+                len[r] = pos + 1;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Window re-encode for a full paged row (the eviction path):
+    /// recompute the shifted window with a captured forward — exactly
+    /// the oracle's trailing-window recompute — then re-encode it over
+    /// the row's blocks, CoW-privatizing any still-shared block and
+    /// dropping stale registry entries before the in-place overwrite
+    /// (frees and re-acquires exactly the shared ones).
+    fn reencode_window_paged(
+        &self,
+        sess: &mut DecodeSession,
+        r: usize,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let ctx = self.cfg.ctx;
+        let hd = self.cfg.head_dim();
+        let window: Vec<i32> = {
+            let parts =
+                sess.paged_parts().expect("paged re-encode on a dense session");
+            parts.history[r].iter().copied().collect()
+        };
+        ensure!(window.len() == ctx, "re-encode window must span ctx");
+        let elems = self.cfg.n_layer * self.cfg.n_head * ctx * hd;
+        let mut tk = vec![0.0f32; elems];
+        let mut tv = vec![0.0f32; elems];
+        let logits = {
+            let mut cap = KvCapture {
+                n_head: self.cfg.n_head,
+                head_dim: hd,
+                slots: ctx,
+                k: &mut tk,
+                v: &mut tv,
+            };
+            self.forward_impl(&window, 1, ctx, true, Some(&mut cap))?
+        };
+        out.copy_from_slice(&logits);
+
+        let parts =
+            sess.paged_parts().expect("paged re-encode on a dense session");
+        let PagedParts { pool, tables, len, .. } = parts;
+        let table = &mut tables[r];
+        for slot in table.iter_mut() {
+            let blk = *slot;
+            if pool.is_shared(blk) {
+                // about to be fully overwritten: move ownership to a
+                // fresh block without copying the shared contents
+                let Some(fresh) = pool.rehome(blk) else {
+                    bail!("kv pool exhausted during window re-encode");
+                };
+                *slot = fresh;
+            } else {
+                // contents are about to change: drop the stale entry
+                pool.unregister(blk);
+            }
+        }
+        pool.write_capture(table, ctx, &tk, &tv);
+        len[r] = ctx;
+        Ok(())
+    }
+
+    /// One incremental decode pass for a paged row. The new token's K/V
+    /// are *staged* in the row's scratch — round-tripped through the
+    /// pool dtype so this step's attention reads exactly what later
+    /// steps will read back from storage — and the attention tail runs
+    /// a **gather/dequant-per-block inner loop**: each (layer, head)
+    /// tile of each table block is decoded once into the row's gather
+    /// buffers, then the same [`native::attend_consmax`] /
+    /// [`native::attend_scores`] / [`native::attend_pv`] kernels as the
+    /// dense path stream the contiguous region (f32 storage ⇒ bitwise
+    /// the dense logits). Reads the pool immutably — the parallel phase
+    /// shares it across rows; the caller commits the staged K/V.
+    ///
+    /// `out = None` skips the LM head (final LN + the d×vocab matmul,
+    /// the largest matmul of a decode step): warm prefill only needs
+    /// the cache writes for every window token but the last.
+    fn decode_token_paged(
+        &self,
+        pool: &KvPool,
+        table: &[u32],
+        scratch: &mut RowScratch,
+        tok: i32,
+        pos: usize,
+        out: Option<&mut [f32]>,
+    ) {
+        let cfg = &self.cfg;
+        let (d, h, hd, v) = (cfg.n_embd, cfg.n_head, cfg.head_dim(), cfg.vocab);
+        debug_assert!(pos < cfg.ctx);
+        debug_assert!(table.len() * pool.block_tokens() > pos);
+
+        let wte = self.p("wte");
+        let wpe = self.p("wpe");
+        let is_consmax = cfg.normalizer == "consmax";
+        let is_softermax = cfg.normalizer == "softermax";
+        let scale = 1.0 / (hd as f32).sqrt();
+        let bt = pool.block_tokens();
+        let dtype = pool.dtype();
+
+        let s = &mut *scratch;
+        {
+            let te = &wte[tok as usize * d..(tok as usize + 1) * d];
+            let pe = &wpe[pos * d..(pos + 1) * d];
+            for ((o, &a), &p) in s.x.iter_mut().zip(te).zip(pe) {
+                *o = a + p;
+            }
+        }
+
+        for l in 0..cfg.n_layer {
+            // ---- attention block (pre-LN) -----------------------------
+            layer_norm_into(
+                &s.x,
+                self.layer("ln1_g", l, d),
+                self.layer("ln1_b", l, d),
+                d,
+                &mut s.xn,
+            );
+            affine_into(
+                &s.xn,
+                self.layer_t("attn_qkv_w", l, d * 3 * d),
+                self.layer("attn_qkv_b", l, 3 * d),
+                1,
+                d,
+                3 * d,
+                &mut s.qkv,
+            );
+            // stage this token's K/V for every head, round-tripped
+            // through the storage dtype (f32: bit-identical)
+            for hh in 0..h {
+                let lane = (l * h + hh) * hd;
+                let ko = d + hh * hd;
+                let vo = ko + d;
+                for i in 0..hd {
+                    s.staged_k[lane + i] = dtype.roundtrip(s.qkv[ko + i]);
+                    s.staged_v[lane + i] = dtype.roundtrip(s.qkv[vo + i]);
+                }
+            }
+            let beta = self.beta_row(l);
+            let gamma = self.gamma_row(l);
+
+            s.y.fill(0.0);
+            for hh in 0..h {
+                // gather/dequant the cached (l, hh) tiles block by block
+                let mut t0 = 0usize;
+                for &blk in table {
+                    if t0 >= pos {
+                        break;
+                    }
+                    let n = (pos - t0).min(bt);
+                    pool.read_k(
+                        blk,
+                        l,
+                        hh,
+                        0,
+                        n,
+                        &mut s.kgath[t0 * hd..(t0 + n) * hd],
+                    );
+                    pool.read_v(
+                        blk,
+                        l,
+                        hh,
+                        0,
+                        n,
+                        &mut s.vgath[t0 * hd..(t0 + n) * hd],
+                    );
+                    t0 += n;
+                }
+                debug_assert_eq!(t0, pos);
+                // the new token's staged K/V occupy slot `pos`
+                let lane = (l * h + hh) * hd;
+                s.kgath[pos * hd..(pos + 1) * hd]
+                    .copy_from_slice(&s.staged_k[lane..lane + hd]);
+                s.vgath[pos * hd..(pos + 1) * hd]
+                    .copy_from_slice(&s.staged_v[lane..lane + hd]);
+
+                let q = &s.qkv[hh * hd..(hh + 1) * hd];
+                let span = (pos + 1) * hd;
+                if is_consmax {
+                    native::attend_consmax(
+                        q,
+                        &s.kgath[..span],
+                        &s.vgath[..span],
+                        hd,
+                        scale,
+                        beta[hh],
+                        gamma[hh],
+                        &mut s.y[hh * hd..(hh + 1) * hd],
+                    );
+                } else {
+                    native::attend_scores(
+                        q,
+                        &s.kgath[..span],
+                        hd,
+                        scale,
+                        &mut s.srow[..=pos],
+                    );
+                    if is_softermax {
+                        native::softermax_inplace(&mut s.srow[..=pos]);
+                    } else {
+                        native::softmax_inplace(&mut s.srow[..=pos]);
+                    }
+                    native::attend_pv(
+                        &s.srow[..=pos],
+                        &s.vgath[..span],
+                        hd,
+                        &mut s.y[hh * hd..(hh + 1) * hd],
+                    );
+                }
+            }
+            affine_into(
+                &s.y,
+                self.layer_t("attn_proj_w", l, d * d),
+                self.layer("attn_proj_b", l, d),
+                1,
+                d,
+                d,
+                &mut s.proj,
+            );
+            for (xv, pv) in s.x.iter_mut().zip(s.proj.iter()) {
+                *xv += pv;
+            }
+
+            // ---- MLP block (pre-LN) -----------------------------------
+            layer_norm_into(
+                &s.x,
+                self.layer("ln2_g", l, d),
+                self.layer("ln2_b", l, d),
+                d,
+                &mut s.xn,
+            );
+            affine_into(
+                &s.xn,
+                self.layer_t("mlp_fc_w", l, d * 4 * d),
+                self.layer("mlp_fc_b", l, 4 * d),
+                1,
+                d,
+                4 * d,
+                &mut s.hid,
+            );
+            for hv in s.hid.iter_mut() {
+                *hv = gelu(*hv);
+            }
+            affine_into(
+                &s.hid,
+                self.layer_t("mlp_proj_w", l, 4 * d * d),
+                self.layer("mlp_proj_b", l, d),
+                1,
+                4 * d,
+                d,
+                &mut s.proj,
+            );
+            for (xv, mv) in s.x.iter_mut().zip(s.proj.iter()) {
+                *xv += mv;
+            }
+        }
+
+        if let Some(out) = out {
+            debug_assert_eq!(out.len(), v);
+            layer_norm_into(&s.x, self.p("lnf_g"), self.p("lnf_b"), d, &mut s.xn);
+            native::matmul_bt_into(&s.xn, wte, 1, d, v, out);
+        }
     }
 }
 

@@ -249,6 +249,61 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     s
 }
 
+/// Fused ConSmax attention tail over a contiguous `[n, head_dim]` K/V
+/// region: for each cached key `j`, score → `C·exp` → PV-accumulate
+/// into `y` (`head_dim` floats) — no row max, no sum, no materialized
+/// probability row (the paper's reduction-freeness). Both the dense
+/// decode path and the paged path (after its per-block gather/dequant)
+/// run this exact loop, in the exact order, which is what keeps
+/// paged-f32 logits bitwise identical to the dense oracle's.
+#[allow(clippy::too_many_arguments)]
+pub fn attend_consmax(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    head_dim: usize,
+    scale: f32,
+    beta: f32,
+    gamma: f32,
+    y: &mut [f32],
+) {
+    debug_assert_eq!(k.len(), v.len());
+    debug_assert_eq!(k.len() % head_dim, 0);
+    let n = k.len() / head_dim;
+    for j in 0..n {
+        let krow = &k[j * head_dim..(j + 1) * head_dim];
+        let sc = dot(q, krow) * scale;
+        let pj = (sc - beta).exp() / gamma;
+        let vrow = &v[j * head_dim..(j + 1) * head_dim];
+        for (o, &vv) in y.iter_mut().zip(vrow) {
+            *o += pj * vv;
+        }
+    }
+}
+
+/// Score pass for the reducing normalizers: `srow[j] = (q · k_j) *
+/// scale` over a contiguous `[n, head_dim]` K region (`n ==
+/// srow.len()`). The caller normalizes (`softmax_inplace` /
+/// `softermax_inplace`) before [`attend_pv`].
+pub fn attend_scores(q: &[f32], k: &[f32], head_dim: usize, scale: f32, srow: &mut [f32]) {
+    debug_assert_eq!(k.len(), srow.len() * head_dim);
+    for (j, o) in srow.iter_mut().enumerate() {
+        *o = dot(q, &k[j * head_dim..(j + 1) * head_dim]) * scale;
+    }
+}
+
+/// PV accumulation: `y += Σ_j probs[j] · v_j` over a contiguous
+/// `[n, head_dim]` V region.
+pub fn attend_pv(probs: &[f32], v: &[f32], head_dim: usize, y: &mut [f32]) {
+    debug_assert_eq!(v.len(), probs.len() * head_dim);
+    for (j, &pj) in probs.iter().enumerate() {
+        let vrow = &v[j * head_dim..(j + 1) * head_dim];
+        for (o, &vv) in y.iter_mut().zip(vrow) {
+            *o += pj * vv;
+        }
+    }
+}
+
 /// Transpose a row-major `(rows, cols)` matrix into `(cols, rows)` —
 /// how `NativeModel` pre-packs its weight matrices once at load so
 /// every matmul runs over unit-stride rows of both operands.
@@ -555,6 +610,48 @@ mod tests {
                     "({m},{k},{n})[{i}]: {g} vs {w}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn attend_helpers_match_reference_loops() {
+        let (n, hd) = (5usize, 4usize);
+        let q: Vec<f32> = (0..hd).map(|i| 0.3 - 0.1 * i as f32).collect();
+        let k: Vec<f32> = (0..n * hd).map(|i| (i as f32) * 0.07 - 0.4).collect();
+        let v: Vec<f32> = (0..n * hd).map(|i| 1.0 - (i as f32) * 0.05).collect();
+        let (scale, beta, gamma) = (0.5f32, 1.5f32, 100.0f32);
+
+        // consmax: fused loop == scores -> C*exp -> PV, bit for bit
+        let mut srow = vec![0.0f32; n];
+        attend_scores(&q, &k, hd, scale, &mut srow);
+        let mut want = vec![0.0f32; hd];
+        for j in 0..n {
+            let pj = (srow[j] - beta).exp() / gamma;
+            for (o, &vv) in want.iter_mut().zip(&v[j * hd..(j + 1) * hd]) {
+                *o += pj * vv;
+            }
+        }
+        let mut got = vec![0.0f32; hd];
+        attend_consmax(&q, &k, &v, hd, scale, beta, gamma, &mut got);
+        assert_eq!(got, want);
+
+        // softmax: scores -> normalize -> PV matches the manual loop
+        let mut probs = srow.clone();
+        softmax_inplace(&mut probs);
+        let mut pv = vec![0.0f32; hd];
+        attend_pv(&probs, &v, hd, &mut pv);
+        let mut pv_want = vec![0.0f32; hd];
+        for (j, &pj) in probs.iter().enumerate() {
+            for (o, &vv) in pv_want.iter_mut().zip(&v[j * hd..(j + 1) * hd]) {
+                *o += pj * vv;
+            }
+        }
+        assert_eq!(pv, pv_want);
+        // accumulation: y starts non-zero and is added into
+        let mut acc = vec![1.0f32; hd];
+        attend_pv(&probs, &v, hd, &mut acc);
+        for (a, w) in acc.iter().zip(&pv_want) {
+            assert_eq!(*a, 1.0 + w);
         }
     }
 

@@ -258,4 +258,88 @@ mod tests {
         let y = f32::from_bits(0x3F81_8000);
         assert_eq!(Bf16::from_f32(y).to_bits(), 0x3F82);
     }
+
+    // The KV cache stores keys/values through these codecs
+    // (runtime/backend/kvcache.rs), so their corner cases are
+    // load-bearing for serving: ties, subnormals, overflow.
+
+    #[test]
+    fn f16_subnormal_ties_to_even() {
+        // 2^-25 is exactly halfway between 0 and the smallest subnormal
+        // 2^-24: RNE picks the even mantissa (zero)
+        assert_eq!(F16::from_f32(2.0_f32.powi(-25)).to_bits(), 0x0000);
+        assert_eq!(F16::from_f32(-(2.0_f32.powi(-25))).to_bits(), 0x8000);
+        // 3·2^-25 is halfway between subnormals 1 and 2: ties to 2 (even)
+        assert_eq!(F16::from_f32(3.0 * 2.0_f32.powi(-25)).to_bits(), 0x0002);
+        // just above the halfway point rounds up to mantissa 1
+        let above = f32::from_bits((2.0_f32.powi(-25)).to_bits() + 1);
+        assert_eq!(F16::from_f32(above).to_bits(), 0x0001);
+        // tie between subnormals 2 and 3 (5·2^-25): even mantissa 2
+        assert_eq!(F16::from_f32(5.0 * 2.0_f32.powi(-25)).to_bits(), 0x0002);
+    }
+
+    #[test]
+    fn f16_ties_round_to_even_in_normal_range() {
+        // f16 spacing at this scale is 2, so 2049 is the exact tie
+        // point between 2048 (mantissa 0, even) and 2050 (mantissa 1)
+        assert_eq!(F16::from_f32(2049.0).to_bits(), F16::from_f32(2048.0).to_bits());
+        // 2051 ties between 2050 and 2052: even mantissa wins (2052)
+        assert_eq!(F16::from_f32(2051.0).to_bits(), F16::from_f32(2052.0).to_bits());
+    }
+
+    #[test]
+    fn f16_overflow_boundary_to_inf() {
+        // 65504 is F16::MAX; the rounding boundary to inf is 65520
+        assert_eq!(F16::from_f32(65504.0), F16::MAX);
+        assert_eq!(F16::from_f32(65519.9), F16::MAX); // below the boundary
+        assert_eq!(F16::from_f32(65520.0), F16::INFINITY); // at it
+        assert_eq!(F16::from_f32(-65520.0), F16::NEG_INFINITY);
+        assert_eq!(F16::from_f32(f32::MAX), F16::INFINITY);
+        assert_eq!(F16::from_f32(f32::MIN), F16::NEG_INFINITY);
+    }
+
+    #[test]
+    fn bf16_overflow_to_inf() {
+        // bf16 shares f32's exponent range, so only *rounding* can
+        // overflow: f32::MAX (0x7F7F_FFFF) rounds up to +inf (0x7F80)
+        assert_eq!(Bf16::from_f32(f32::MAX).to_bits(), 0x7F80);
+        assert!(Bf16::from_f32(f32::MAX).to_f32().is_infinite());
+        assert_eq!(Bf16::from_f32(f32::MIN).to_bits(), 0xFF80);
+        assert!(Bf16::from_f32(f32::MIN).to_f32().is_infinite());
+        // infinities pass through exactly
+        assert_eq!(Bf16::from_f32(f32::INFINITY).to_bits(), 0x7F80);
+        assert_eq!(Bf16::from_f32(f32::NEG_INFINITY).to_bits(), 0xFF80);
+        // the largest f32 that does NOT round up stays finite
+        let below = f32::from_bits(0x7F7F_7FFF);
+        assert_eq!(Bf16::from_f32(below).to_bits(), 0x7F7F);
+        assert!(Bf16(0x7F7F).to_f32().is_finite());
+    }
+
+    #[test]
+    fn bf16_subnormal_roundtrips() {
+        // smallest positive bf16 subnormal: 2^-133 (f32 bits 0x0001_0000)
+        let tiny = f32::from_bits(0x0001_0000);
+        assert_eq!(Bf16::from_f32(tiny).to_bits(), 0x0001);
+        assert_eq!(Bf16(0x0001).to_f32().to_bits(), tiny.to_bits());
+        // largest bf16 subnormal: mantissa 0x7F at exponent 0
+        let big_sub = f32::from_bits(0x007F_0000);
+        assert_eq!(Bf16::from_f32(big_sub).to_bits(), 0x007F);
+        assert_eq!(Bf16(0x007F).to_f32().to_bits(), big_sub.to_bits());
+        // below the smallest subnormal's halfway point: flushes to zero
+        let sub_tiny = f32::from_bits(0x0000_7FFF);
+        assert_eq!(Bf16::from_f32(sub_tiny).to_bits(), 0x0000);
+    }
+
+    #[test]
+    fn bf16_roundtrip_all_finite_bit_patterns() {
+        // EXHAUSTIVE: every non-NaN bf16 round-trips exactly through f32
+        // (to_f32 is a shift; from_f32 of an exact value must not move)
+        for bits in 0..=0xFFFFu16 {
+            let b = Bf16(bits);
+            if b.to_f32().is_nan() {
+                continue;
+            }
+            assert_eq!(Bf16::from_f32(b.to_f32()).to_bits(), bits, "{bits:#06x}");
+        }
+    }
 }

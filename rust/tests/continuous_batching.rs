@@ -13,7 +13,7 @@
 //! 2-token request co-resident with a 48-token one reports a smaller
 //! latency), never the batch's wall time.
 
-use consmax::config::ModelConfig;
+use consmax::config::{KvCacheConfig, KvDtype, ModelConfig};
 use consmax::coordinator::{
     DecodeMode, GenRequest, GenResponse, Generator, ParamStore, Server,
 };
@@ -64,7 +64,7 @@ fn continuous_matches_static_oracle_per_request() {
         ("The constant softmax ", 9usize),
         ("Attention ", 1),
         ("x", 6),
-        ("", 4), // empty prompt seeds a single space, same as the oracle
+        ("", 4), // clamps to empty: completes with no tokens, no slot
         ("A much longer prompt that spans a few more byte tokens ", 12),
         ("tail ", 3),
     ];
@@ -75,13 +75,17 @@ fn continuous_matches_static_oracle_per_request() {
     let responses = by_id(server.run_continuous().unwrap());
     assert_eq!(responses.len(), reqs.len());
     for (r, (prompt, max_new)) in responses.iter().zip(&reqs) {
-        let want = oracle_tokens(&cfg, &store, prompt, *max_new);
+        let want = if prompt.is_empty() {
+            Vec::new()
+        } else {
+            oracle_tokens(&cfg, &store, prompt, *max_new)
+        };
         assert_eq!(
             r.tokens, want,
             "req {} diverged from the solo static oracle",
             r.id
         );
-        assert_eq!(r.new_tokens, *max_new);
+        assert_eq!(r.new_tokens, want.len());
     }
 }
 
@@ -120,61 +124,91 @@ fn mid_flight_joins_do_not_disturb_residents() {
 #[test]
 fn join_leave_proptest_ragged_prompts_mixed_budgets() {
     // randomized join/leave churn: random prompts (incl. over-ctx ones
-    // that clamp), random budgets (incl. zero), random step interleave
-    // — every request must match its solo oracle bit-for-bit
+    // that clamp and empty ones that complete-and-skip), random budgets
+    // (incl. zero), random step interleave — every request must match
+    // its solo oracle bit-for-bit. Exercised on the dense slot pool,
+    // the budgetless paged pool (prefix sharing live), and a
+    // tight-budget paged pool (preempt-and-requeue live): the memory
+    // model must never leak into outputs.
     let (cfg, store) = setup();
-    run_property("continuous == static oracle under churn", 6, |g: &mut Gen| {
-        let n = g.usize(3, 9);
-        let mut reqs: Vec<(String, usize)> = Vec::new();
-        for _ in 0..n {
-            let plen = g.usize(0, 90); // ctx is 64: some prompts clamp
-            let prompt: String = (0..plen)
-                .map(|_| (b'a' + (g.usize(0, 26) as u8)) as char)
-                .collect();
-            let max_new = g.usize(0, 8);
-            reqs.push((prompt, max_new));
-        }
-        let mut server =
-            Server::new(Generator::native(&cfg, &store, 0).unwrap());
-        let split = g.usize(0, n + 1);
-        for (id, (prompt, max_new)) in reqs.iter().take(split).enumerate() {
-            server.submit(greedy_req(id as u64, prompt, *max_new));
-        }
-        let mut responses = Vec::new();
-        for _ in 0..g.usize(0, 5) {
-            responses.extend(server.step().unwrap());
-        }
-        for (id, (prompt, max_new)) in
-            reqs.iter().enumerate().skip(split)
-        {
-            server.submit(greedy_req(id as u64, prompt, *max_new));
-        }
-        responses.extend(server.run_continuous().unwrap());
-        prop_assert!(
-            responses.len() == reqs.len(),
-            "served {} of {} requests",
-            responses.len(),
-            reqs.len()
-        );
-        let responses = {
-            let mut r = responses;
-            r.sort_by_key(|x| x.id);
-            r
-        };
-        for (r, (prompt, max_new)) in responses.iter().zip(&reqs) {
-            let want = oracle_tokens(&cfg, &store, prompt, *max_new);
+    let pools: [Option<KvCacheConfig>; 3] = [
+        None,
+        Some(KvCacheConfig {
+            dtype: KvDtype::F32,
+            block_tokens: 8,
+            mem_bytes: None,
+        }),
+        Some(KvCacheConfig {
+            dtype: KvDtype::F32,
+            block_tokens: 16,
+            // 9 blocks: pressure with a few co-resident rows
+            mem_bytes: Some(
+                9 * 2 * cfg.n_layer * cfg.n_head * 16 * cfg.head_dim() * 4,
+            ),
+        }),
+    ];
+    for (pi, kv) in pools.iter().enumerate() {
+        run_property("continuous == static oracle under churn", 6, |g: &mut Gen| {
+            let n = g.usize(3, 9);
+            let mut reqs: Vec<(String, usize)> = Vec::new();
+            for _ in 0..n {
+                let plen = g.usize(0, 90); // ctx is 64: some prompts clamp
+                let prompt: String = (0..plen)
+                    .map(|_| (b'a' + (g.usize(0, 26) as u8)) as char)
+                    .collect();
+                let max_new = g.usize(0, 8);
+                reqs.push((prompt, max_new));
+            }
+            let mut server =
+                Server::new(Generator::native(&cfg, &store, 0).unwrap());
+            if let Some(kv) = kv {
+                server.set_kv_config(Some(*kv)).unwrap();
+            }
+            let split = g.usize(0, n + 1);
+            for (id, (prompt, max_new)) in reqs.iter().take(split).enumerate() {
+                server.submit(greedy_req(id as u64, prompt, *max_new));
+            }
+            let mut responses = Vec::new();
+            for _ in 0..g.usize(0, 5) {
+                responses.extend(server.step().unwrap());
+            }
+            for (id, (prompt, max_new)) in
+                reqs.iter().enumerate().skip(split)
+            {
+                server.submit(greedy_req(id as u64, prompt, *max_new));
+            }
+            responses.extend(server.run_continuous().unwrap());
             prop_assert!(
-                r.tokens == want,
-                "req {} (prompt {:?}, max_new {}) diverged: {:?} vs {:?}",
-                r.id,
-                prompt,
-                max_new,
-                r.tokens,
-                want
+                responses.len() == reqs.len(),
+                "pool {pi}: served {} of {} requests",
+                responses.len(),
+                reqs.len()
             );
-        }
-        Ok(())
-    });
+            let responses = {
+                let mut r = responses;
+                r.sort_by_key(|x| x.id);
+                r
+            };
+            for (r, (prompt, max_new)) in responses.iter().zip(&reqs) {
+                let want = if prompt.is_empty() {
+                    Vec::new()
+                } else {
+                    oracle_tokens(&cfg, &store, prompt, *max_new)
+                };
+                prop_assert!(
+                    r.tokens == want,
+                    "pool {pi}: req {} (prompt {:?}, max_new {}) diverged: \
+                     {:?} vs {:?}",
+                    r.id,
+                    prompt,
+                    max_new,
+                    r.tokens,
+                    want
+                );
+            }
+            Ok(())
+        });
+    }
 }
 
 #[test]

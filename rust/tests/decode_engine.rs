@@ -11,7 +11,7 @@
 //! * accounting is in token space (`prompt_tokens` = post-clamp encoded
 //!   length, `new_tokens` = generated token count, not chars/bytes).
 
-use consmax::config::ModelConfig;
+use consmax::config::{KvCacheConfig, KvDtype, ModelConfig};
 use consmax::coordinator::{
     DecodeMode, GenRequest, Generator, ParamStore, Server,
 };
@@ -48,12 +48,29 @@ fn assert_close(kv: &[f32], oracle: &[f32], what: &str) {
 
 /// Greedy-decode `steps` tokens with the KV engine while checking every
 /// step against the recompute oracle on the full growing sequence.
-fn check_greedy_equivalence(norm: &str, prompt_len: usize, steps: usize) {
+/// `paged` swaps the dense per-row cache for the paged block pool —
+/// same public API, same oracle, so the whole equivalence suite runs on
+/// both memory models.
+fn check_greedy_equivalence_on(
+    norm: &str,
+    prompt_len: usize,
+    steps: usize,
+    paged: bool,
+) {
     let m = tiny_model(norm, 11);
     let prompt: Vec<i32> =
         (0..prompt_len).map(|i| ((i * 37 + 5) % 256) as i32).collect();
 
-    let mut sess = DecodeSession::new(&m.cfg, 1);
+    let mut sess = if paged {
+        let kv = KvCacheConfig {
+            dtype: KvDtype::F32,
+            block_tokens: 16,
+            mem_bytes: None,
+        };
+        DecodeSession::new_paged(&m.cfg, 1, &kv).unwrap()
+    } else {
+        DecodeSession::new(&m.cfg, 1)
+    };
     let mut kv_logits = m.prefill(&mut sess, &[prompt.clone()]).unwrap();
     let mut seq = prompt;
     let oracle = m.next_logits(std::slice::from_ref(&seq)).unwrap();
@@ -81,6 +98,10 @@ fn check_greedy_equivalence(norm: &str, prompt_len: usize, steps: usize) {
     }
 }
 
+fn check_greedy_equivalence(norm: &str, prompt_len: usize, steps: usize) {
+    check_greedy_equivalence_on(norm, prompt_len, steps, false);
+}
+
 #[test]
 fn kv_matches_recompute_within_ctx() {
     for norm in NORMALIZERS {
@@ -95,6 +116,17 @@ fn kv_matches_recompute_past_ctx() {
         // 58 prompt + 14 generated = 72 > ctx (64): crosses into ring
         // eviction + window re-encode territory
         check_greedy_equivalence(norm, 58, 14);
+    }
+}
+
+#[test]
+fn paged_f32_kv_matches_recompute_within_and_past_ctx() {
+    // the paged block pool behind the same DecodeSession API must pass
+    // the same oracle equivalence, incl. eviction (the bitwise
+    // paged-vs-dense suite lives in rust/tests/kvcache_paged.rs)
+    for norm in NORMALIZERS {
+        check_greedy_equivalence_on(norm, 16, 8, true);
+        check_greedy_equivalence_on(norm, 58, 10, true);
     }
 }
 

@@ -1,0 +1,331 @@
+//! Paged-KV equivalence + memory-behavior suite (DESIGN.md §KV-memory
+//! seam):
+//!
+//! * a **paged f32** session is *bitwise identical* to the dense oracle
+//!   — prefill, incremental decode, ring eviction + window re-encode —
+//!   for all three normalizers and for block sizes that do and don't
+//!   divide the context;
+//! * **fp16/bf16 KV** tracks the dense logits within the documented
+//!   tolerances (EXPERIMENTS.md §KV memory scaling);
+//! * **prefix sharing** really shares blocks (gauges move) and changes
+//!   no bits: a row riding a shared prefix emits the exact dense
+//!   logits, stays isolated after divergence (copy-on-write), and
+//!   survives eviction re-encode;
+//! * the pool **returns to empty** when rows reset, and a byte budget
+//!   below one full row is rejected;
+//! * the continuous scheduler over a small budget **preempts-and-
+//!   requeues whole requests** without changing any request's output.
+
+use consmax::config::{KvCacheConfig, KvDtype, ModelConfig};
+use consmax::coordinator::{GenRequest, Generator, ParamStore, Server};
+use consmax::runtime::backend::{DecodeSession, NativeModel};
+
+const NORMALIZERS: [&str; 3] = ["consmax", "softmax", "softermax"];
+
+/// Documented closeness bound for f16 KV storage vs the f32 oracle
+/// (relative, with a 1.0 absolute floor in the denominator).
+const F16_TOL: f32 = 2e-2;
+/// Same bound for bf16 (7-bit mantissa: coarser).
+const BF16_TOL: f32 = 1e-1;
+
+fn tiny_model(norm: &str, seed: u64) -> NativeModel {
+    let cfg = ModelConfig::builtin("tiny", norm).unwrap();
+    let store = ParamStore::init(&cfg, seed).unwrap();
+    NativeModel::from_params(&cfg, &store.order, &store.params).unwrap()
+}
+
+fn kv_cfg(dtype: KvDtype, block_tokens: usize) -> KvCacheConfig {
+    KvCacheConfig { dtype, block_tokens, mem_bytes: None }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let denom = x.abs().max(y.abs()).max(1.0);
+        assert!(
+            (x - y).abs() / denom <= tol,
+            "{what}[{i}]: paged {x} vs dense {y} (tol {tol})"
+        );
+    }
+}
+
+/// Drive a dense and a paged session through the same greedy decode
+/// (tokens picked from the dense logits, so the two stay aligned even
+/// at reduced precision) and compare logits each step.
+fn compare_greedy(
+    norm: &str,
+    dtype: KvDtype,
+    block_tokens: usize,
+    prompt_len: usize,
+    steps: usize,
+    tol: Option<f32>,
+) {
+    let m = tiny_model(norm, 11);
+    let prompt: Vec<i32> =
+        (0..prompt_len).map(|i| ((i * 37 + 5) % 256) as i32).collect();
+
+    let mut dense = DecodeSession::new(&m.cfg, 1);
+    let mut paged =
+        DecodeSession::new_paged(&m.cfg, 1, &kv_cfg(dtype, block_tokens))
+            .unwrap();
+    let mut dl = m.prefill(&mut dense, &[prompt.clone()]).unwrap();
+    let pl = m.prefill(&mut paged, &[prompt]).unwrap();
+    let tag = format!("{norm}/{dtype:?}/bt{block_tokens}");
+    match tol {
+        None => assert_eq!(dl, pl, "{tag}: prefill not bitwise"),
+        Some(t) => assert_close(&pl, &dl, t, &format!("{tag}: prefill")),
+    }
+    assert_eq!(paged.len_of(0), dense.len_of(0));
+
+    for step in 0..steps {
+        let next = argmax(&dl) as i32;
+        dl = m.decode_step(&mut dense, &[next]).unwrap();
+        let pl = m.decode_step(&mut paged, &[next]).unwrap();
+        match tol {
+            None => assert_eq!(dl, pl, "{tag}: step {step} not bitwise"),
+            Some(t) => {
+                assert_close(&pl, &dl, t, &format!("{tag}: step {step}"))
+            }
+        }
+    }
+}
+
+#[test]
+fn paged_f32_bitwise_matches_dense_within_ctx() {
+    for norm in NORMALIZERS {
+        // 16 prompt + 32 generated = 48 < ctx (64): incremental path,
+        // one divisor block size and one that straddles block edges
+        for bt in [16usize, 5] {
+            compare_greedy(norm, KvDtype::F32, bt, 16, 32, None);
+        }
+    }
+}
+
+#[test]
+fn paged_f32_bitwise_matches_dense_past_ctx() {
+    for norm in NORMALIZERS {
+        // 58 prompt + 14 generated crosses ring eviction + window
+        // re-encode; block size 16 divides ctx, 7 does not
+        for bt in [16usize, 7] {
+            compare_greedy(norm, KvDtype::F32, bt, 58, 14, None);
+        }
+    }
+}
+
+#[test]
+fn paged_f32_handles_overlong_prompt_and_tiny_blocks() {
+    // prompt longer than ctx clamps to the trailing window, same as the
+    // dense path; block size 1 is the worst-case table length
+    compare_greedy("consmax", KvDtype::F32, 1, 100, 6, None);
+    let m = tiny_model("consmax", 11);
+    let long: Vec<i32> = (0..100).map(|i| ((i * 13 + 1) % 256) as i32).collect();
+    let mut paged =
+        DecodeSession::new_paged(&m.cfg, 1, &kv_cfg(KvDtype::F32, 16)).unwrap();
+    let pl = m.prefill(&mut paged, &[long.clone()]).unwrap();
+    let oracle = m.next_logits(&[long]).unwrap();
+    assert_eq!(pl, oracle, "overlong paged prefill vs recompute oracle");
+    assert_eq!(paged.len_of(0), m.cfg.ctx);
+}
+
+#[test]
+fn reduced_precision_kv_stays_close_to_dense() {
+    for norm in NORMALIZERS {
+        compare_greedy(norm, KvDtype::F16, 16, 20, 12, Some(F16_TOL));
+        compare_greedy(norm, KvDtype::Bf16, 16, 20, 12, Some(BF16_TOL));
+    }
+    // and across an eviction re-encode
+    compare_greedy("consmax", KvDtype::F16, 16, 60, 8, Some(F16_TOL));
+}
+
+#[test]
+fn prefix_sharing_shares_blocks_and_changes_no_bits() {
+    let m = tiny_model("consmax", 5);
+    // 40 tokens at block 8 = 5 full blocks; the sharer may take at most
+    // 4 (one token must stay computable for logits)
+    let prompt: Vec<i32> = (0..40).map(|i| ((i * 7 + 3) % 256) as i32).collect();
+    let kv = kv_cfg(KvDtype::F32, 8);
+
+    let mut dense = DecodeSession::new(&m.cfg, 2);
+    let mut paged = DecodeSession::new_paged(&m.cfg, 2, &kv).unwrap();
+    let dl = m
+        .prefill(&mut dense, &[prompt.clone(), prompt.clone()])
+        .unwrap();
+    let pl = m
+        .prefill(&mut paged, &[prompt.clone(), prompt.clone()])
+        .unwrap();
+    assert_eq!(dl, pl, "shared-prefix prefill not bitwise");
+
+    let st = paged.kv_stats().unwrap();
+    assert_eq!(st.shared_blocks, 4, "prefix blocks not shared: {st:?}");
+    // row 0: 5 blocks; row 1: 4 shared + 1 fresh = 6 distinct in use
+    assert_eq!(st.used_blocks, 6, "{st:?}");
+
+    // rows diverge after the shared prefix; CoW keeps them isolated
+    let v = m.cfg.vocab;
+    let mut dl = dl;
+    for step in 0..10 {
+        let t0 = argmax(&dl[..v]) as i32;
+        let t1 = (argmax(&dl[v..]) as i32 + 1 + step) % 256; // diverge
+        dl = m.decode_step(&mut dense, &[t0, t1]).unwrap();
+        let pl = m.decode_step(&mut paged, &[t0, t1]).unwrap();
+        assert_eq!(dl, pl, "post-share step {step} not bitwise");
+    }
+
+    // drain: every reference returns, nothing stays shared
+    paged.reset_row(0);
+    paged.reset_row(1);
+    let st = paged.kv_stats().unwrap();
+    assert_eq!(st.free_blocks, st.total_blocks, "pool did not drain: {st:?}");
+    assert_eq!(st.shared_blocks, 0);
+}
+
+#[test]
+fn shared_rows_survive_eviction_reencode() {
+    // two rows share a full-ctx prompt (7 of 8 blocks shared), then
+    // decode past ctx: the re-encode privatizes the shared blocks and
+    // both rows keep emitting the exact dense logits
+    let m = tiny_model("softermax", 9);
+    let prompt: Vec<i32> =
+        (0..m.cfg.ctx).map(|i| ((i * 11 + 2) % 256) as i32).collect();
+    let kv = kv_cfg(KvDtype::F32, 8);
+
+    let mut dense = DecodeSession::new(&m.cfg, 2);
+    let mut paged = DecodeSession::new_paged(&m.cfg, 2, &kv).unwrap();
+    let mut dl = m
+        .prefill(&mut dense, &[prompt.clone(), prompt.clone()])
+        .unwrap();
+    let pl = m
+        .prefill(&mut paged, &[prompt.clone(), prompt.clone()])
+        .unwrap();
+    assert_eq!(dl, pl);
+    assert!(paged.kv_stats().unwrap().shared_blocks > 0);
+
+    let v = m.cfg.vocab;
+    for step in 0..5 {
+        let t0 = argmax(&dl[..v]) as i32;
+        let t1 = (t0 + 13) % 256;
+        dl = m.decode_step(&mut dense, &[t0, t1]).unwrap();
+        let pl = m.decode_step(&mut paged, &[t0, t1]).unwrap();
+        assert_eq!(dl, pl, "eviction step {step} not bitwise");
+    }
+    // divergent windows: nothing can stay shared after both re-encoded
+    assert_eq!(paged.kv_stats().unwrap().shared_blocks, 0);
+}
+
+#[test]
+fn budget_below_one_row_is_rejected() {
+    let cfg = ModelConfig::builtin("tiny", "consmax").unwrap();
+    let kv = KvCacheConfig {
+        dtype: KvDtype::F32,
+        block_tokens: 16,
+        mem_bytes: Some(1024), // far below one 64-token row
+    };
+    assert!(DecodeSession::new_paged(&cfg, 1, &kv).is_err());
+}
+
+/// Greedy single-request reference: the static oracle at batch 1.
+fn oracle_tokens(
+    cfg: &ModelConfig,
+    store: &ParamStore,
+    prompt: &str,
+    max_new: usize,
+) -> Vec<i32> {
+    let mut g = Generator::native(cfg, store, 0).unwrap();
+    g.generate_batch_ext(&[prompt.to_string()], &[max_new], &[0.0])
+        .unwrap()
+        .tokens
+        .remove(0)
+}
+
+#[test]
+fn paged_server_preempts_under_pressure_without_changing_outputs() {
+    let cfg = ModelConfig::builtin("tiny", "consmax").unwrap();
+    let store = ParamStore::init(&cfg, 5).unwrap();
+    // 6 f32 blocks of 16 tokens: room for one long row plus change.
+    // Requests grow to ~50 cached tokens (4 blocks) each, so two
+    // concurrent residents must collide and trigger preemption.
+    let block_bytes =
+        2 * cfg.n_layer * cfg.n_head * 16 * cfg.head_dim() * 4;
+    let kv = KvCacheConfig {
+        dtype: KvDtype::F32,
+        block_tokens: 16,
+        mem_bytes: Some(6 * block_bytes),
+    };
+    let mut server = Server::new(Generator::native(&cfg, &store, 0).unwrap());
+    server.set_kv_config(Some(kv)).unwrap();
+    server.set_max_batch(4).unwrap();
+
+    let prompt = "a twenty byte prompt"; // 20 tokens -> 2 blocks at join
+    for id in 0..4u64 {
+        server.submit(GenRequest {
+            id,
+            prompt: prompt.into(),
+            max_new_tokens: 30,
+            temperature: 0.0,
+            stop: None,
+        });
+    }
+    let mut responses = server.run_continuous().unwrap();
+    responses.sort_by_key(|r| r.id);
+    assert_eq!(responses.len(), 4);
+    let want = oracle_tokens(&cfg, &store, prompt, 30);
+    for r in &responses {
+        assert_eq!(
+            r.tokens, want,
+            "req {}: preemption changed the output",
+            r.id
+        );
+    }
+    let st = server.stats();
+    assert!(
+        st.preemptions > 0,
+        "budget of 6 blocks never preempted: {st:?}"
+    );
+    assert_eq!(st.kv_free_blocks, st.kv_total_blocks, "pool did not drain");
+}
+
+#[test]
+fn paged_server_without_budget_matches_oracle_on_a_mixed_queue() {
+    // budgetless paged pool (sharing + paging, no pressure): every
+    // request must match its solo static oracle bit for bit
+    let cfg = ModelConfig::builtin("tiny", "consmax").unwrap();
+    let store = ParamStore::init(&cfg, 5).unwrap();
+    let reqs = [
+        ("The constant softmax ", 9usize),
+        ("The constant softmax ", 4), // shares the full prefix
+        ("Attention ", 1),
+        ("x", 6),
+        ("A much longer prompt that spans a few more byte tokens ", 12),
+    ];
+    let mut server = Server::new(Generator::native(&cfg, &store, 0).unwrap());
+    server
+        .set_kv_config(Some(kv_cfg(KvDtype::F32, 8)))
+        .unwrap();
+    server.set_max_batch(3).unwrap();
+    for (id, (prompt, max_new)) in reqs.iter().enumerate() {
+        server.submit(GenRequest {
+            id: id as u64,
+            prompt: (*prompt).into(),
+            max_new_tokens: *max_new,
+            temperature: 0.0,
+            stop: None,
+        });
+    }
+    let mut responses = server.run_continuous().unwrap();
+    responses.sort_by_key(|r| r.id);
+    assert_eq!(responses.len(), reqs.len());
+    for (r, (prompt, max_new)) in responses.iter().zip(&reqs) {
+        let want = oracle_tokens(&cfg, &store, prompt, *max_new);
+        assert_eq!(r.tokens, want, "req {} diverged on the paged pool", r.id);
+    }
+}
