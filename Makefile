@@ -12,15 +12,16 @@ artifacts: bench-artifacts
 	cd python && python -m compile.aot --out $(ARTIFACTS_DIR)
 
 # Run the native perf benches (no Python needed) and collect their
-# machine-readable results next to the AOT artifacts. All four benches
+# machine-readable results next to the AOT artifacts. All five benches
 # enforce hard floors (KV >= 5x recompute; tiled matmul >= 2x naive;
-# continuous batching >= 1.5x static serving throughput; fp16 paging
-# >= 2x dense resident requests at fixed memory), so this target is
-# also a perf regression gate.
+# continuous batching >= 1.5x static serving throughput; fp16/int8
+# paging >= 2x/3.5x dense resident requests at fixed memory; int8
+# serving within 0.25 nats of f32 eval loss), so this target is also a
+# perf and accuracy regression gate.
 bench-artifacts:
-	cd rust && cargo bench --bench decode_bench && cargo bench --bench forward_bench && cargo bench --bench serve_bench && cargo bench --bench kv_bench
+	cd rust && cargo bench --bench decode_bench && cargo bench --bench forward_bench && cargo bench --bench serve_bench && cargo bench --bench kv_bench && cargo bench --bench quant_gate
 	mkdir -p $(BENCH_JSON_DIR)
-	cp rust/BENCH_decode.json rust/BENCH_forward.json rust/BENCH_serve.json rust/BENCH_kv.json $(BENCH_JSON_DIR)/
+	cp rust/BENCH_decode.json rust/BENCH_forward.json rust/BENCH_serve.json rust/BENCH_kv.json rust/BENCH_quant.json $(BENCH_JSON_DIR)/
 	cp rust/BENCH_decode_raw.jsonl rust/BENCH_forward_raw.jsonl $(BENCH_JSON_DIR)/
 
 build:

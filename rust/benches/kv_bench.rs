@@ -11,14 +11,17 @@
 //!   every slot pre-reserves a full `ctx` row);
 //! * **paged f32** — same bytes as a block pool: short rows stop
 //!   wasting the tail of their reservation;
-//! * **paged f16** — half the bytes per token on top.
+//! * **paged f16** — half the bytes per token on top;
+//! * **paged int8** — one byte per element plus per-vector scales
+//!   (`--kv-dtype int8`, DESIGN.md §Quantization seam).
 //!
 //! Emits `BENCH_kv.json` and exits non-zero unless paged-f16 holds
-//! **≥ 2× the dense resident concurrency** at the same budget, at
-//! tokens/s no worse than [`TOKS_FLOOR`]× dense (equal within noise —
-//! the correctness suites pin paged-f32 bitwise to dense, and fp16 to
-//! the documented tolerance). CI smoke-runs this so the artifact and
-//! the memory-scaling claim cannot rot.
+//! **≥ 2× the dense resident concurrency** at the same budget, paged
+//! int8 holds **≥ 3.5×**, each at tokens/s no worse than
+//! [`TOKS_FLOOR`]× dense (equal within noise — the correctness suites
+//! pin paged-f32 bitwise to dense, and fp16/bf16/int8 to their
+//! documented tolerances). CI smoke-runs this so the artifact and the
+//! memory-scaling claims cannot rot.
 
 use std::time::Instant;
 
@@ -41,7 +44,11 @@ const BLOCK_TOKENS: usize = 16;
 /// Residency floor: paged-f16 must hold at least this multiple of the
 /// dense baseline's peak co-resident requests (acceptance criterion).
 const RESIDENCY_FLOOR: f64 = 2.0;
-/// Throughput guard: paged-f16 tok/s must stay within noise of dense.
+/// Residency floor for paged int8: ~4× fewer payload bytes per token
+/// than f32 minus the per-vector scale overhead.
+const INT8_RESIDENCY_FLOOR: f64 = 3.5;
+/// Throughput guard: each paged layout's tok/s must stay within noise
+/// of dense.
 const TOKS_FLOOR: f64 = 0.6;
 
 struct RunStats {
@@ -150,9 +157,19 @@ fn main() -> anyhow::Result<()> {
         Some(paged(KvDtype::F16)),
         N_REQUESTS,
     )?;
+    let paged8 = run(
+        &cfg,
+        &store,
+        "paged int8",
+        Some(paged(KvDtype::Int8)),
+        N_REQUESTS,
+    )?;
 
     let residency_ratio = paged16.peak_resident as f64 / dense.peak_resident as f64;
     let toks_ratio = paged16.tok_s / dense.tok_s;
+    let i8_residency_ratio =
+        paged8.peak_resident as f64 / dense.peak_resident as f64;
+    let i8_toks_ratio = paged8.tok_s / dense.tok_s;
 
     let row = |s: &RunStats| {
         vec![
@@ -177,12 +194,17 @@ fn main() -> anyhow::Result<()> {
         ),
         &["layout", "peak resident", "tok/s", "blocks", "shared peak",
           "preempts"],
-        &[row(&dense), row(&paged32), row(&paged16)],
+        &[row(&dense), row(&paged32), row(&paged16), row(&paged8)],
     );
     println!(
         "\npaged-f16/dense resident concurrency at fixed memory: \
          {residency_ratio:.2}x (floor {RESIDENCY_FLOOR}x); tok/s ratio \
          {toks_ratio:.2} (floor {TOKS_FLOOR})"
+    );
+    println!(
+        "paged-int8/dense resident concurrency at fixed memory: \
+         {i8_residency_ratio:.2}x (floor {INT8_RESIDENCY_FLOOR}x); tok/s \
+         ratio {i8_toks_ratio:.2} (floor {TOKS_FLOOR})"
     );
 
     let doc = Json::from_pairs([
@@ -202,6 +224,7 @@ fn main() -> anyhow::Result<()> {
         ("dense".to_string(), stats_json(&dense)),
         ("paged_f32".to_string(), stats_json(&paged32)),
         ("paged_f16".to_string(), stats_json(&paged16)),
+        ("paged_int8".to_string(), stats_json(&paged8)),
         ("residency_ratio".to_string(), Json::from(residency_ratio)),
         (
             "min_residency_required".to_string(),
@@ -209,6 +232,15 @@ fn main() -> anyhow::Result<()> {
         ),
         ("toks_ratio".to_string(), Json::from(toks_ratio)),
         ("min_toks_ratio_required".to_string(), Json::from(TOKS_FLOOR)),
+        (
+            "int8_residency_ratio".to_string(),
+            Json::from(i8_residency_ratio),
+        ),
+        (
+            "min_int8_residency_required".to_string(),
+            Json::from(INT8_RESIDENCY_FLOOR),
+        ),
+        ("int8_toks_ratio".to_string(), Json::from(i8_toks_ratio)),
     ]);
     std::fs::write("BENCH_kv.json", doc.to_string())?;
     println!("wrote BENCH_kv.json");
@@ -219,6 +251,15 @@ fn main() -> anyhow::Result<()> {
              resident requests at fixed memory without dropping below \
              {TOKS_FLOOR}x dense tok/s (got {residency_ratio:.2}x, \
              {toks_ratio:.2}) — see table above"
+        );
+        std::process::exit(1);
+    }
+    if i8_residency_ratio < INT8_RESIDENCY_FLOOR || i8_toks_ratio < TOKS_FLOOR {
+        eprintln!(
+            "FAIL: int8 paging must hold >= {INT8_RESIDENCY_FLOOR}x dense \
+             resident requests at fixed memory without dropping below \
+             {TOKS_FLOOR}x dense tok/s (got {i8_residency_ratio:.2}x, \
+             {i8_toks_ratio:.2}) — see table above"
         );
         std::process::exit(1);
     }

@@ -1,0 +1,151 @@
+//! Int8 accuracy gate: the paper's "comparable accuracy" claim as a
+//! CI-enforced number (EXPERIMENTS.md §Quantized serving accuracy,
+//! DESIGN.md §Quantization seam).
+//!
+//! Run: `cargo bench --bench quant_gate` (native, no artifacts). For
+//! each normalizer the in-tree validation corpus is scored twice with
+//! the same weights — the f32 serving path, then the int8 path
+//! (per-channel int8 projections + LM head, and for ConSmax the
+//! bit-split LUT attention tail) — and the gate fails unless the loss
+//! moves by less than [`DELTA_GATE_NATS`] nats.
+//!
+//! Emits `BENCH_quant.json` and exits non-zero when any normalizer
+//! breaches the gate, so `make artifacts` / CI cannot ship a quantized
+//! serving path that silently lost accuracy.
+
+use consmax::config::{ModelConfig, QuantMode};
+use consmax::coordinator::ParamStore;
+use consmax::data::{ByteTokenizer, Corpus};
+use consmax::metrics::perplexity;
+use consmax::runtime::backend::NativeModel;
+use consmax::util::bench::print_table;
+use consmax::util::json::Json;
+
+/// Validation batches scored per normalizer (same count as `eval`).
+const EVAL_BATCHES: usize = 8;
+/// Accuracy gate: |int8 loss − f32 loss| must stay under this many
+/// nats. Per-channel pow2-scaled int8 weights carry ≤ scale/2 error per
+/// element and the LUT tail quantizes scores at the paper's 1/16
+/// resolution, so the drift on the in-tree corpus sits well under this
+/// bound; breaching it means the quantization seam regressed.
+const DELTA_GATE_NATS: f64 = 0.25;
+
+struct GateRow {
+    normalizer: &'static str,
+    f32_loss: f64,
+    int8_loss: f64,
+}
+
+impl GateRow {
+    fn delta(&self) -> f64 {
+        self.int8_loss - self.f32_loss
+    }
+}
+
+fn eval_loss(model: &NativeModel, cfg: &ModelConfig) -> anyhow::Result<f64> {
+    let corpus = Corpus::tiny();
+    let (_, val_text) = corpus.split();
+    let val = consmax::data::BatchSampler::new(
+        ByteTokenizer.encode(val_text),
+        cfg.train_batch,
+        cfg.ctx,
+        0,
+    );
+    let batches = val.eval_batches(EVAL_BATCHES);
+    anyhow::ensure!(!batches.is_empty(), "validation stream too small");
+    let mut total = 0.0;
+    for (x, y) in &batches {
+        total += model.loss(x, y, cfg.train_batch, cfg.ctx)?;
+    }
+    Ok(total / batches.len() as f64)
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut rows = Vec::new();
+    for normalizer in ["consmax", "softmax", "softermax"] {
+        let cfg = ModelConfig::builtin("tiny", normalizer)?;
+        let store = ParamStore::init(&cfg, 0)?;
+        let f32_model =
+            NativeModel::from_params(&cfg, &store.order, &store.params)?;
+        let int8_model = NativeModel::from_params_quant(
+            &cfg,
+            &store.order,
+            &store.params,
+            QuantMode::Int8,
+        )?;
+        rows.push(GateRow {
+            normalizer,
+            f32_loss: eval_loss(&f32_model, &cfg)?,
+            int8_loss: eval_loss(&int8_model, &cfg)?,
+        });
+    }
+
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.normalizer.to_string(),
+                format!("{:.4}", r.f32_loss),
+                format!("{:.4}", r.int8_loss),
+                format!("{:+.4}", r.delta()),
+                format!("{:.2}", perplexity(r.f32_loss)),
+                format!("{:.2}", perplexity(r.int8_loss)),
+            ]
+        })
+        .collect();
+    print_table(
+        &format!(
+            "Int8 accuracy gate, tiny configs ({EVAL_BATCHES} val batches, \
+             gate |delta| < {DELTA_GATE_NATS} nats)"
+        ),
+        &["normalizer", "f32 loss", "int8 loss", "delta", "f32 ppl",
+          "int8 ppl"],
+        &table,
+    );
+
+    let mut pairs = vec![
+        ("bench".to_string(), Json::from("quant")),
+        ("eval_batches".to_string(), Json::from(EVAL_BATCHES)),
+        ("delta_gate_nats".to_string(), Json::from(DELTA_GATE_NATS)),
+        (
+            "threads".to_string(),
+            Json::from(consmax::runtime::parallel::current_threads()),
+        ),
+    ];
+    for r in &rows {
+        pairs.push((
+            r.normalizer.to_string(),
+            Json::from_pairs([
+                ("f32_loss".to_string(), Json::from(r.f32_loss)),
+                ("int8_loss".to_string(), Json::from(r.int8_loss)),
+                ("delta_nats".to_string(), Json::from(r.delta())),
+                ("f32_ppl".to_string(), Json::from(perplexity(r.f32_loss))),
+                ("int8_ppl".to_string(), Json::from(perplexity(r.int8_loss))),
+            ]),
+        ));
+    }
+    let doc = Json::from_pairs(pairs);
+    std::fs::write("BENCH_quant.json", doc.to_string())?;
+    println!("\nwrote BENCH_quant.json");
+
+    let breaches: Vec<&GateRow> = rows
+        .iter()
+        .filter(|r| !(r.delta().abs() < DELTA_GATE_NATS))
+        .collect();
+    if !breaches.is_empty() {
+        for r in &breaches {
+            eprintln!(
+                "FAIL: {} int8-vs-f32 loss delta {:+.4} nats breaches the \
+                 {DELTA_GATE_NATS}-nat gate — the paper's 'comparable \
+                 accuracy' claim no longer holds on this path",
+                r.normalizer,
+                r.delta()
+            );
+        }
+        std::process::exit(1);
+    }
+    println!(
+        "PASS: every int8-vs-f32 loss delta within {DELTA_GATE_NATS} nats"
+    );
+    Ok(())
+}

@@ -11,18 +11,21 @@ use anyhow::{bail, Context, Result};
 use crate::util::fp16::{Bf16, F16};
 use crate::util::json::Json;
 
-/// Storage precision of the paged KV cache (DESIGN.md §KV-memory seam).
+/// Storage precision of the paged KV cache (DESIGN.md §KV-memory seam,
+/// §Quantization seam).
 ///
 /// ConSmax's merged `C·exp(S)` form needs no row-max search, so reduced
 /// precision K/V feed the score→exp→PV stream directly; `F16`/`Bf16`
-/// halve resident KV bytes per token. `F32` is the bit-exact oracle
-/// precision (a paged f32 session decodes bitwise identically to the
-/// dense layout).
+/// halve resident KV bytes per token and `Int8` quarters them (one i8
+/// code per element plus one f32 power-of-two scale per stored
+/// `head_dim` vector). `F32` is the bit-exact oracle precision (a paged
+/// f32 session decodes bitwise identically to the dense layout).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum KvDtype {
     F32,
     F16,
     Bf16,
+    Int8,
 }
 
 impl KvDtype {
@@ -31,7 +34,8 @@ impl KvDtype {
             "f32" | "fp32" => KvDtype::F32,
             "f16" | "fp16" | "half" => KvDtype::F16,
             "bf16" | "bfloat16" => KvDtype::Bf16,
-            other => bail!("unknown kv dtype {other:?} (f32|f16|bf16)"),
+            "int8" | "i8" => KvDtype::Int8,
+            other => bail!("unknown kv dtype {other:?} (f32|f16|bf16|int8)"),
         })
     }
 
@@ -40,6 +44,7 @@ impl KvDtype {
             KvDtype::F32 => "f32",
             KvDtype::F16 => "f16",
             KvDtype::Bf16 => "bf16",
+            KvDtype::Int8 => "int8",
         }
     }
 
@@ -47,18 +52,90 @@ impl KvDtype {
         match self {
             KvDtype::F32 => 4,
             KvDtype::F16 | KvDtype::Bf16 => 2,
+            KvDtype::Int8 => 1,
         }
     }
 
     /// Encode→decode round trip of one value: what a reader of the KV
     /// store will observe after `x` is written at this precision. For
-    /// `F32` this is the identity (bit-preserving).
+    /// `F32` this is the identity (bit-preserving). `Int8` is quantized
+    /// per stored `head_dim` vector (the scale depends on the whole
+    /// vector — see [`KvDtype::roundtrip_vec`]); the scalar form treats
+    /// `x` as a one-element vector.
     pub fn roundtrip(self, x: f32) -> f32 {
         match self {
             KvDtype::F32 => x,
             KvDtype::F16 => F16::from_f32(x).to_f32(),
             KvDtype::Bf16 => Bf16::from_f32(x).to_f32(),
+            KvDtype::Int8 => {
+                let mut v = [x];
+                self.roundtrip_vec(&mut v);
+                v[0]
+            }
         }
+    }
+
+    /// Encode→decode round trip of one stored `head_dim` vector in
+    /// place. Float dtypes round element-wise; `Int8` quantizes the
+    /// whole vector against a single power-of-two scale fitted to its
+    /// max-abs — the exact math `KvPool` applies at `write_token` /
+    /// `write_capture`. Power-of-two scales make the transform
+    /// idempotent: re-fitting already-roundtripped values reproduces
+    /// the same bits, so a decode step may stage through this helper
+    /// and commit the staged values to an int8 pool without drift.
+    pub fn roundtrip_vec(self, v: &mut [f32]) {
+        match self {
+            KvDtype::F32 => {}
+            KvDtype::F16 | KvDtype::Bf16 => {
+                for x in v.iter_mut() {
+                    *x = self.roundtrip(*x);
+                }
+            }
+            KvDtype::Int8 => {
+                let scale = crate::quant::kv_vec_scale(v);
+                for x in v.iter_mut() {
+                    *x = crate::quant::dequantize_i8(
+                        crate::quant::quantize_i8(*x, scale),
+                        scale,
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Serving-path quantization mode (`--quant`, DESIGN.md §Quantization
+/// seam). `Int8` swaps every projection matmul (and the tied LM head)
+/// onto per-output-channel symmetric int8 weights quantized once at
+/// model load, and — for ConSmax models — computes the C·exp attention
+/// tail through the bit-split LUT, bit-identical to
+/// [`BitSplitLut`](crate::quant::BitSplitLut) and the RTL simulator.
+/// `Off` keeps the f32 kernels as the oracle path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum QuantMode {
+    #[default]
+    Off,
+    Int8,
+}
+
+impl QuantMode {
+    pub fn parse(s: &str) -> Result<QuantMode> {
+        Ok(match s {
+            "off" | "none" | "f32" => QuantMode::Off,
+            "int8" | "i8" => QuantMode::Int8,
+            other => bail!("unknown quant mode {other:?} (off|int8)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            QuantMode::Off => "off",
+            QuantMode::Int8 => "int8",
+        }
+    }
+
+    pub fn is_int8(self) -> bool {
+        self == QuantMode::Int8
     }
 }
 
@@ -493,17 +570,51 @@ mod tests {
         assert_eq!(KvDtype::parse("f32").unwrap(), KvDtype::F32);
         assert_eq!(KvDtype::parse("fp16").unwrap(), KvDtype::F16);
         assert_eq!(KvDtype::parse("bf16").unwrap(), KvDtype::Bf16);
+        assert_eq!(KvDtype::parse("int8").unwrap(), KvDtype::Int8);
         assert!(KvDtype::parse("int4").is_err());
         assert_eq!(KvDtype::F32.bytes_per_elem(), 4);
         assert_eq!(KvDtype::F16.bytes_per_elem(), 2);
+        assert_eq!(KvDtype::Int8.bytes_per_elem(), 1);
         // f32 round trip is the identity, bit for bit
         let x = 0.1234567f32;
         assert_eq!(KvDtype::F32.roundtrip(x).to_bits(), x.to_bits());
-        // f16/bf16 round trips are idempotent (storage-stable)
-        for d in [KvDtype::F16, KvDtype::Bf16] {
+        // f16/bf16/int8 round trips are idempotent (storage-stable)
+        for d in [KvDtype::F16, KvDtype::Bf16, KvDtype::Int8] {
             let once = d.roundtrip(x);
             assert_eq!(d.roundtrip(once).to_bits(), once.to_bits(), "{d:?}");
         }
+    }
+
+    #[test]
+    fn int8_vector_roundtrip_is_idempotent_and_bounded() {
+        // per-vector quantization: one pow2 scale per head_dim vector,
+        // |x - roundtrip(x)| <= scale/2, and re-roundtripping the
+        // already-quantized vector reproduces the same bits (so paged
+        // decode staging == pool storage).
+        let mut v: Vec<f32> =
+            (0..32).map(|i| ((i as f32) - 11.5) * 0.37).collect();
+        let orig = v.clone();
+        KvDtype::Int8.roundtrip_vec(&mut v);
+        let scale = crate::quant::kv_vec_scale(&orig);
+        for (a, b) in orig.iter().zip(&v) {
+            assert!((a - b).abs() <= scale / 2.0 + 1e-12, "{a} vs {b}");
+        }
+        let once = v.clone();
+        KvDtype::Int8.roundtrip_vec(&mut v);
+        for (a, b) in once.iter().zip(&v) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn quant_mode_parses() {
+        assert_eq!(QuantMode::parse("off").unwrap(), QuantMode::Off);
+        assert_eq!(QuantMode::parse("int8").unwrap(), QuantMode::Int8);
+        assert!(QuantMode::parse("int4").is_err());
+        assert_eq!(QuantMode::default(), QuantMode::Off);
+        assert_eq!(QuantMode::Int8.name(), "int8");
+        assert!(QuantMode::Int8.is_int8());
+        assert!(!QuantMode::Off.is_int8());
     }
 
     #[test]

@@ -63,7 +63,7 @@ use anyhow::{bail, ensure, Result};
 #[cfg(feature = "pjrt")]
 use anyhow::Context;
 
-use crate::config::{KvCacheConfig, ModelConfig};
+use crate::config::{KvCacheConfig, ModelConfig, QuantMode};
 use crate::coordinator::params::ParamStore;
 use crate::data::ByteTokenizer;
 use crate::metrics::LatencyRecorder;
@@ -244,7 +244,27 @@ impl<'e> Generator<'e> {
         seed: u64,
         mode: DecodeMode,
     ) -> Result<Generator<'static>> {
-        let model = NativeModel::from_params(cfg, &store.order, &store.params)?;
+        Generator::native_quant(cfg, store, seed, mode, QuantMode::Off)
+    }
+
+    /// Native generator with an explicit decode engine and serving
+    /// quantization mode (`--decode` / `--quant`). Under
+    /// [`QuantMode::Int8`] the model quantizes its projection weights
+    /// and LM head per channel at load and routes the ConSmax attention
+    /// tail through the bit-split LUT (DESIGN.md §Quantization seam).
+    pub fn native_quant(
+        cfg: &ModelConfig,
+        store: &ParamStore,
+        seed: u64,
+        mode: DecodeMode,
+        quant: QuantMode,
+    ) -> Result<Generator<'static>> {
+        let model = NativeModel::from_params_quant(
+            cfg,
+            &store.order,
+            &store.params,
+            quant,
+        )?;
         Ok(Generator {
             cfg: cfg.clone(),
             exec: GenExec::Native {
@@ -272,6 +292,15 @@ impl<'e> Generator<'e> {
             GenExec::Native { mode, .. } => mode.name(),
             #[cfg(feature = "pjrt")]
             GenExec::Pjrt { .. } => "kv",
+        }
+    }
+
+    /// The serving quantization mode under the backend ("off" / "int8").
+    pub fn quant_name(&self) -> &'static str {
+        match &self.exec {
+            GenExec::Native { model, .. } => model.quant_mode().name(),
+            #[cfg(feature = "pjrt")]
+            GenExec::Pjrt { .. } => "off",
         }
     }
 

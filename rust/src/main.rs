@@ -22,7 +22,7 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Result};
 
-use consmax::config::{KvCacheConfig, KvDtype, ModelConfig};
+use consmax::config::{KvCacheConfig, KvDtype, ModelConfig, QuantMode};
 #[cfg(feature = "pjrt")]
 use consmax::coordinator::{
     best_point, sweep_init, SweepOptions, TrainOptions, Trainer,
@@ -77,8 +77,9 @@ fn specs() -> Vec<Spec> {
         ),
         Spec::opt(
             "kv-dtype",
-            "serve-demo: paged KV storage precision, f32|f16|bf16 \
-             (implies paging; f16/bf16 halve resident KV bytes)",
+            "serve-demo: paged KV storage precision, f32|f16|bf16|int8 \
+             (implies paging; f16/bf16 halve resident KV bytes, int8 \
+             quarters them plus per-vector scales)",
         ),
         Spec::opt(
             "kv-block",
@@ -92,7 +93,14 @@ fn specs() -> Vec<Spec> {
         Spec::opt_default("flow", "proprietary", "hw: proprietary|opensource"),
         Spec::opt_default("warmup-steps", "30", "sweep: steps per grid point"),
         Spec::flag("no-trace-params", "disable beta/gamma series logging"),
-        Spec::flag("quant", "eval: use the INT8 hardware normalizer path (pjrt)"),
+        Spec::opt_default(
+            "quant",
+            "off",
+            "serving quantization (off|int8): per-channel int8 weights + \
+             LUT ConSmax tail on native eval/generate/serve-demo (eval \
+             also reports the int8-vs-f32 loss delta); the AOT INT8 \
+             normalizer path on pjrt eval",
+        ),
         Spec::opt("beta0", "train: pin all beta inits to this value (Fig 8 winner)"),
         Spec::opt("gamma0", "train: pin all gamma inits to this value"),
         Spec::flag("help", "show help"),
@@ -412,14 +420,8 @@ fn run_eval(args: &Args) -> Result<()> {
     if wants_pjrt(args)? {
         return run_eval_pjrt(args);
     }
-    if args.has_flag("quant") {
-        bail!(
-            "--quant scores through the AOT INT8 normalizer path; \
-             it needs the pjrt backend (see EXPERIMENTS.md)"
-        );
-    }
+    let quant = QuantMode::parse(&args.get_string("quant", "off"))?;
     let (cfg, store) = native_model_setup(args)?;
-    let model = NativeModel::from_params(&cfg, &store.order, &store.params)?;
     let corpus = load_corpus(args)?;
     let (_, val_text) = corpus.split();
     let tok = ByteTokenizer;
@@ -427,15 +429,42 @@ fn run_eval(args: &Args) -> Result<()> {
         BatchSampler::new(tok.encode(val_text), cfg.train_batch, cfg.ctx, 0);
     let batches = val.eval_batches(8);
     anyhow::ensure!(!batches.is_empty(), "validation stream too small");
-    let mut total = 0.0;
-    for (x, y) in &batches {
-        total += model.loss(x, y, cfg.train_batch, cfg.ctx)?;
+    let eval_loss = |model: &NativeModel| -> Result<f64> {
+        let mut total = 0.0;
+        for (x, y) in &batches {
+            total += model.loss(x, y, cfg.train_batch, cfg.ctx)?;
+        }
+        Ok(total / batches.len() as f64)
+    };
+    let model = NativeModel::from_params(&cfg, &store.order, &store.params)?;
+    let loss = eval_loss(&model)?;
+    if quant.is_int8() {
+        // the same weights through the int8 serving path: per-channel
+        // int8 projections + the LUT ConSmax tail. The printed delta is
+        // the paper's "comparable accuracy" claim; benches/quant_gate.rs
+        // turns it into a CI-enforced bound.
+        let qmodel = NativeModel::from_params_quant(
+            &cfg,
+            &store.order,
+            &store.params,
+            quant,
+        )?;
+        let qloss = eval_loss(&qmodel)?;
+        println!(
+            "val loss {loss:.4}  ppl {:.2} (native, f32)",
+            perplexity(loss)
+        );
+        println!(
+            "val loss {qloss:.4}  ppl {:.2} (native, int8 weights + LUT tail)",
+            perplexity(qloss)
+        );
+        println!("int8-vs-f32 loss delta {:+.4} nats", qloss - loss);
+    } else {
+        println!(
+            "val loss {loss:.4}  ppl {:.2} (native backend)",
+            perplexity(loss)
+        );
     }
-    let loss = total / batches.len() as f64;
-    println!(
-        "val loss {loss:.4}  ppl {:.2} (native backend)",
-        perplexity(loss)
-    );
     Ok(())
 }
 
@@ -448,13 +477,14 @@ fn run_eval_pjrt(_args: &Args) -> Result<()> {
 fn run_eval_pjrt(args: &Args) -> Result<()> {
     let engine = Engine::new(args.get_string("artifacts", "artifacts"))?;
     let normalizer = args.get_string("normalizer", "consmax");
+    let quant = QuantMode::parse(&args.get_string("quant", "off"))?;
     let mut tr = build_trainer(&engine, args, &normalizer)?;
-    let loss = if args.has_flag("quant") {
+    let loss = if quant.is_int8() {
         tr.evaluate_quantized(8)?
     } else {
         tr.evaluate(8)?
     };
-    let tag = if args.has_flag("quant") { " (INT8 hw normalizer)" } else { "" };
+    let tag = if quant.is_int8() { " (INT8 hw normalizer)" } else { "" };
     println!("val loss {loss:.4}  ppl {:.2}{tag}", perplexity(loss));
     Ok(())
 }
@@ -465,7 +495,14 @@ fn run_generate(args: &Args) -> Result<()> {
     }
     let (cfg, store) = native_model_setup(args)?;
     let mode = DecodeMode::parse(&args.get_string("decode", "kv"))?;
-    let mut g = Generator::native_with(&cfg, &store, args.get_u64("seed", 0)?, mode)?;
+    let quant = QuantMode::parse(&args.get_string("quant", "off"))?;
+    let mut g = Generator::native_quant(
+        &cfg,
+        &store,
+        args.get_u64("seed", 0)?,
+        mode,
+        quant,
+    )?;
     let prompt = args.get_string("prompt", "The attention ");
     let out = g.generate_batch(
         &[prompt.clone()],
@@ -592,11 +629,12 @@ fn serve_demo_over(mut server: Server<'_>, args: &Args) -> Result<()> {
     let wall = t0.elapsed().as_secs_f64();
     println!(
         "served {} requests in {wall:.2}s ({:.1} tok/s) on the {} backend \
-         ({} decode, {} scheduler, {} threads, batch slots {})",
+         ({} decode, quant {}, {} scheduler, {} threads, batch slots {})",
         responses.len(),
         server.tokens_out as f64 / wall,
         server.generator.backend_name(),
         server.generator.decode_name(),
+        server.generator.quant_name(),
         if continuous { "continuous" } else { "static" },
         consmax::runtime::parallel::current_threads(),
         server.generator.max_batch(),
@@ -630,7 +668,8 @@ fn run_serve_demo(args: &Args) -> Result<()> {
     }
     let (cfg, store) = native_model_setup(args)?;
     let mode = DecodeMode::parse(&args.get_string("decode", "kv"))?;
-    let gen = Generator::native_with(&cfg, &store, 1, mode)?;
+    let quant = QuantMode::parse(&args.get_string("quant", "off"))?;
+    let gen = Generator::native_quant(&cfg, &store, 1, mode, quant)?;
     serve_demo_over(Server::new(gen), args)
 }
 

@@ -8,7 +8,11 @@
 //! `rust/tests/quant_cross_validation.rs`).
 //! The serving coordinator uses it to post-process INT8 score streams the
 //! way the real accelerator would, and the hw substrate uses its table
-//! sizes for area accounting.
+//! sizes for area accounting. Under `--quant int8` the native serving
+//! path also quantizes here: [`QuantizedMatrix`] holds the per-channel
+//! int8 projection weights and [`kv_vec_scale`]/[`quantize_i8`]/
+//! [`dequantize_i8`] define the per-vector int8 KV storage transform
+//! (DESIGN.md §Quantization seam).
 
 pub mod lut;
 
@@ -59,6 +63,107 @@ impl Int8Quantizer {
         let raw = max_abs / 127.0;
         let exp = raw.log2().ceil();
         Int8Quantizer::new(exp.exp2())
+    }
+
+    /// Total version of [`Int8Quantizer::fit`]: all-zero, non-finite,
+    /// and underflowing-to-zero inputs (`max_abs / 127` below the f32
+    /// subnormal range) fall back to a unit scale instead of panicking,
+    /// so a fitted scale is never zero, NaN, or infinite. For any
+    /// finite `max_abs` the fitted scale still satisfies
+    /// `max_abs <= 127 * scale` (no saturation on in-range inputs).
+    pub fn fit_safe(max_abs: f32) -> Int8Quantizer {
+        if max_abs.is_finite() && max_abs > 0.0 {
+            let scale = (max_abs / 127.0).log2().ceil().exp2();
+            if scale.is_finite() && scale > 0.0 {
+                return Int8Quantizer::new(scale);
+            }
+        }
+        Int8Quantizer::new(1.0)
+    }
+}
+
+/// Power-of-two scale for one stored KV `head_dim` vector: symmetric
+/// int8, fitted to the vector's max-abs via [`Int8Quantizer::fit_safe`]
+/// (all-zero vectors get a unit scale; NaN elements are ignored by the
+/// max-abs scan so the scale itself is always finite and positive).
+/// This is the single source of truth shared by `KvPool` block storage
+/// and the paged decode staging path — both must agree bit-for-bit.
+pub fn kv_vec_scale(v: &[f32]) -> f32 {
+    let mut max_abs = 0.0f32;
+    for &x in v {
+        // f32::max drops NaN operands, keeping the scan total
+        max_abs = max_abs.max(x.abs());
+    }
+    Int8Quantizer::fit_safe(max_abs).scale
+}
+
+/// Round-to-nearest saturating int8 encode at a fixed scale (the
+/// free-function twin of [`Int8Quantizer::quantize`] for callers that
+/// store raw scales, e.g. the paged KV pool).
+pub fn quantize_i8(x: f32, scale: f32) -> i8 {
+    (x / scale).round().clamp(-128.0, 127.0) as i8
+}
+
+/// Shift-dequantize one int8 code (exact in f32: `scale` is a power of
+/// two and `|q| <= 128`).
+pub fn dequantize_i8(q: i8, scale: f32) -> f32 {
+    q as f32 * scale
+}
+
+/// One weight matrix quantized per output channel for the int8 serving
+/// path (DESIGN.md §Quantization seam): `[dout, din]` row-major i8
+/// codes in the same layout as the f32 source (so the int8 matmul
+/// walks memory exactly like `native::matmul_bt_into`), plus one
+/// power-of-two scale per output-channel row. Built once at model load
+/// beside `params_t`; the f32 tensors are kept as the oracle.
+#[derive(Debug, Clone)]
+pub struct QuantizedMatrix {
+    pub data: Vec<i8>,
+    pub scales: Vec<f32>,
+    pub dout: usize,
+    pub din: usize,
+}
+
+impl QuantizedMatrix {
+    /// Quantize a `[dout, din]` row-major f32 matrix, one symmetric
+    /// power-of-two scale per output-channel row. All-zero rows get a
+    /// unit scale (codes are all zero anyway), so no scale is ever
+    /// zero, NaN, or infinite.
+    pub fn from_rows(w: &[f32], dout: usize, din: usize) -> QuantizedMatrix {
+        assert_eq!(w.len(), dout * din, "matrix shape mismatch");
+        let mut data = vec![0i8; w.len()];
+        let mut scales = vec![1.0f32; dout];
+        for r in 0..dout {
+            let row = &w[r * din..(r + 1) * din];
+            let mut max_abs = 0.0f32;
+            for &x in row {
+                max_abs = max_abs.max(x.abs());
+            }
+            let q = Int8Quantizer::fit_safe(max_abs);
+            scales[r] = q.scale;
+            for (dst, &x) in data[r * din..(r + 1) * din].iter_mut().zip(row) {
+                *dst = q.quantize(x);
+            }
+        }
+        QuantizedMatrix { data, scales, dout, din }
+    }
+
+    /// The i8 codes of output channel `r`.
+    pub fn row(&self, r: usize) -> &[i8] {
+        &self.data[r * self.din..(r + 1) * self.din]
+    }
+
+    /// Dequantize the whole matrix back to f32 (test/oracle helper).
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.data.len()];
+        for r in 0..self.dout {
+            let s = self.scales[r];
+            for c in 0..self.din {
+                out[r * self.din + c] =
+                    dequantize_i8(self.data[r * self.din + c], s);
+            }
+        }
+        out
     }
 }
 
@@ -112,5 +217,57 @@ mod tests {
         let c = merge_beta_gamma(1.5, 100.0);
         let want = F16::from_f32((-1.5f32).exp() / 100.0);
         assert_eq!(c.to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn fit_safe_never_yields_degenerate_scales() {
+        let cases = [0.0f32, 1e-44, 1e-30, 1.0, 127.0, 1e9, f32::MAX, f32::INFINITY, f32::NAN];
+        for max_abs in cases {
+            let q = Int8Quantizer::fit_safe(max_abs);
+            assert!(q.scale.is_finite() && q.scale > 0.0, "max_abs={max_abs}");
+            if max_abs.is_finite() && max_abs > 0.0 && q.scale != 1.0 {
+                assert!(max_abs <= 127.0 * q.scale, "max_abs={max_abs}");
+            }
+        }
+    }
+
+    #[test]
+    fn kv_vec_scale_handles_adversarial_vectors() {
+        // all-zero vector: unit scale, zero codes
+        assert_eq!(kv_vec_scale(&[0.0; 8]), 1.0);
+        // NaN elements are ignored by the max-abs scan
+        let s = kv_vec_scale(&[1.0, f32::NAN, -2.0]);
+        assert!(s.is_finite() && s > 0.0);
+        assert_eq!(s, kv_vec_scale(&[1.0, -2.0]));
+        // pow2 scale, error bound scale/2 on in-range values
+        let v = [0.3f32, -0.7, 0.01, 0.69];
+        let s = kv_vec_scale(&v);
+        assert_eq!(s.log2().fract(), 0.0);
+        for &x in &v {
+            let rt = dequantize_i8(quantize_i8(x, s), s);
+            assert!((rt - x).abs() <= s / 2.0, "{x} -> {rt} (scale {s})");
+        }
+    }
+
+    #[test]
+    fn quantized_matrix_per_channel_rows() {
+        // two output channels with very different ranges get their own
+        // scales; an all-zero channel gets the unit fallback
+        let w = [
+            10.0f32, -20.0, 5.0, //
+            0.01, -0.02, 0.005, //
+            0.0, 0.0, 0.0,
+        ];
+        let qm = QuantizedMatrix::from_rows(&w, 3, 3);
+        assert!(qm.scales[0] > qm.scales[1]);
+        assert_eq!(qm.scales[2], 1.0);
+        assert_eq!(qm.row(2), &[0, 0, 0]);
+        let dq = qm.dequantize();
+        for (r, scale) in qm.scales.iter().enumerate() {
+            for c in 0..3 {
+                let (a, b) = (w[r * 3 + c], dq[r * 3 + c]);
+                assert!((a - b).abs() <= scale / 2.0, "[{r},{c}] {a} vs {b}");
+            }
+        }
     }
 }

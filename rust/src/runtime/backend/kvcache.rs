@@ -10,13 +10,16 @@
 //!
 //! Three properties make it the memory seam of the serving path:
 //!
-//! * **pluggable precision** — K/V are stored as f32, IEEE binary16 or
-//!   bfloat16 (`util/fp16` codecs) and dequantized per block inside the
-//!   fused attention inner loops. ConSmax's merged `C·exp(S)` form has
-//!   no row-max search, so reduced-precision scores feed the exp stream
-//!   directly — the software analogue of Hyft/SOLE's low-precision
-//!   softmax datapaths (PAPERS.md). The f32 path is bit-preserving, so
-//!   a paged-f32 session is *exactly* the dense oracle.
+//! * **pluggable precision** — K/V are stored as f32, IEEE binary16,
+//!   bfloat16 (`util/fp16` codecs) or symmetric int8 (one power-of-two
+//!   `quant::kv_vec_scale` per stored `head_dim` vector, kept beside
+//!   the codes and counted in the block's budget bytes) and dequantized
+//!   per block inside the fused attention inner loops. ConSmax's merged
+//!   `C·exp(S)` form has no row-max search, so reduced-precision scores
+//!   feed the exp stream directly — the software analogue of Hyft/SOLE's
+//!   low-precision softmax datapaths (PAPERS.md). The f32 path is
+//!   bit-preserving, so a paged-f32 session is *exactly* the dense
+//!   oracle.
 //! * **refcounted copy-on-write sharing** — full blocks are registered
 //!   under a chain hash of the token prefix they encode; a new prompt
 //!   whose leading full blocks hash-match an existing prefix retains
@@ -45,6 +48,7 @@ use std::collections::HashMap;
 use anyhow::{ensure, Result};
 
 use crate::config::{KvCacheConfig, KvDtype, ModelConfig};
+use crate::quant;
 use crate::util::fp16::{Bf16, F16};
 
 /// Seed for the first link of a [`chain_hash`] chain (FNV-1a offset).
@@ -63,11 +67,29 @@ pub fn chain_hash(prev: u64, tokens: &[i32]) -> u64 {
     h
 }
 
+/// Bytes one block occupies across the K and V arenas. For `Int8`
+/// pools the per-vector f32 scales ride along with the codes, so they
+/// are counted here too — budget admission and the density gauges see
+/// the true footprint, not just the code bytes.
+fn block_bytes_of(stride: usize, head_dim: usize, dtype: KvDtype) -> usize {
+    let payload = 2 * stride * dtype.bytes_per_elem();
+    match dtype {
+        KvDtype::Int8 => {
+            payload + 2 * (stride / head_dim) * std::mem::size_of::<f32>()
+        }
+        _ => payload,
+    }
+}
+
 /// Typed storage behind one of the pool's two arenas (K or V).
 enum Arena {
     F32(Vec<f32>),
     /// binary16 or bfloat16 bit patterns, per the pool's dtype.
     U16(Vec<u16>),
+    /// symmetric int8 codes; the per-vector scales live beside the
+    /// arena in `KvPool::{k_scales, v_scales}` and are applied by the
+    /// pool's quantizing read/write paths, not here.
+    I8(Vec<i8>),
 }
 
 impl Arena {
@@ -92,6 +114,9 @@ impl Arena {
                     }
                 }
             },
+            Arena::I8(_) => {
+                unreachable!("int8 reads go through KvPool::read_i8")
+            }
         }
     }
 
@@ -116,6 +141,9 @@ impl Arena {
                     }
                 }
             },
+            Arena::I8(_) => {
+                unreachable!("int8 writes go through KvPool::write_i8")
+            }
         }
     }
 
@@ -125,6 +153,22 @@ impl Arena {
         match self {
             Arena::F32(data) => data.copy_within(src..src + stride, dst),
             Arena::U16(data) => data.copy_within(src..src + stride, dst),
+            Arena::I8(data) => data.copy_within(src..src + stride, dst),
+        }
+    }
+
+    /// The raw int8 codes (Int8 pools only).
+    fn i8(&self) -> &[i8] {
+        match self {
+            Arena::I8(data) => data,
+            _ => unreachable!("i8() on a float arena"),
+        }
+    }
+
+    fn i8_mut(&mut self) -> &mut [i8] {
+        match self {
+            Arena::I8(data) => data,
+            _ => unreachable!("i8_mut() on a float arena"),
         }
     }
 }
@@ -157,6 +201,13 @@ pub struct KvPool {
     stride: usize,
     k: Arena,
     v: Arena,
+    /// `Int8` pools only: one power-of-two scale per stored `head_dim`
+    /// vector of the matching arena, indexed `arena_offset / head_dim`
+    /// (i.e. `(block, layer, head, slot)` flattened). Empty for float
+    /// dtypes. CoW clones copy the block's scale range alongside its
+    /// codes ([`KvPool::make_private`]).
+    k_scales: Vec<f32>,
+    v_scales: Vec<f32>,
     refcnt: Vec<u32>,
     /// Free block ids (stack; popping yields ascending ids from fresh).
     free: Vec<u32>,
@@ -175,7 +226,7 @@ impl KvPool {
         let bt = kv.block_tokens.min(cfg.ctx).max(1);
         let stride = cfg.n_layer * cfg.n_head * bt * cfg.head_dim();
         let per_row = cfg.ctx.div_ceil(bt);
-        let block_bytes = 2 * stride * kv.dtype.bytes_per_elem();
+        let block_bytes = block_bytes_of(stride, cfg.head_dim(), kv.dtype);
         let blocks = match kv.mem_bytes {
             Some(bytes) => bytes / block_bytes,
             None => rows.max(1) * per_row,
@@ -192,7 +243,16 @@ impl KvPool {
             KvDtype::F32 => {
                 (Arena::F32(vec![0.0; elems]), Arena::F32(vec![0.0; elems]))
             }
-            _ => (Arena::U16(vec![0; elems]), Arena::U16(vec![0; elems])),
+            KvDtype::F16 | KvDtype::Bf16 => {
+                (Arena::U16(vec![0; elems]), Arena::U16(vec![0; elems]))
+            }
+            KvDtype::Int8 => {
+                (Arena::I8(vec![0; elems]), Arena::I8(vec![0; elems]))
+            }
+        };
+        let scale_slots = match kv.dtype {
+            KvDtype::Int8 => elems / cfg.head_dim(),
+            _ => 0,
         };
         Ok(KvPool {
             dtype: kv.dtype,
@@ -204,6 +264,8 @@ impl KvPool {
             stride,
             k,
             v,
+            k_scales: vec![1.0; scale_slots],
+            v_scales: vec![1.0; scale_slots],
             refcnt: vec![0; blocks],
             free: (0..blocks as u32).rev().collect(),
             hash_of: vec![None; blocks],
@@ -256,7 +318,7 @@ impl KvPool {
             used_blocks: self.used_blocks(),
             shared_blocks: self.shared_blocks(),
             block_tokens: self.block_tokens,
-            block_bytes: 2 * self.stride * self.dtype.bytes_per_elem(),
+            block_bytes: block_bytes_of(self.stride, self.head_dim, self.dtype),
             dtype: self.dtype,
         }
     }
@@ -334,6 +396,13 @@ impl KvPool {
         let (src, dst) = (blk as usize * self.stride, fresh as usize * self.stride);
         self.k.copy_block(src, dst, self.stride);
         self.v.copy_block(src, dst, self.stride);
+        if self.dtype == KvDtype::Int8 {
+            // the codes are meaningless without their per-vector scales
+            let spb = self.stride / self.head_dim;
+            let (ss, ds) = (blk as usize * spb, fresh as usize * spb);
+            self.k_scales.copy_within(ss..ss + spb, ds);
+            self.v_scales.copy_within(ss..ss + spb, ds);
+        }
         // drop the caller's reference to the shared original (refcnt > 1,
         // so this never frees it)
         self.refcnt[blk as usize] -= 1;
@@ -365,34 +434,65 @@ impl KvPool {
 
     /// Dequantize `n` consecutive key slots of `(blk, l, h)` starting at
     /// in-block slot `t0` into `dst` (`n * head_dim` f32). For f32 pools
-    /// this is a bit-preserving copy.
+    /// this is a bit-preserving copy; `Int8` pools dequantize each slot
+    /// vector with its own stored scale.
     pub fn read_k(&self, blk: u32, l: usize, h: usize, t0: usize, n: usize, dst: &mut [f32]) {
         debug_assert_eq!(dst.len(), n * self.head_dim);
         let start = blk as usize * self.stride + self.off(l, h, t0);
-        self.k.read(self.dtype, start, dst);
+        if self.dtype == KvDtype::Int8 {
+            read_i8(self.k.i8(), &self.k_scales, self.head_dim, start, dst);
+        } else {
+            self.k.read(self.dtype, start, dst);
+        }
     }
 
     /// [`KvPool::read_k`] for the value arena.
     pub fn read_v(&self, blk: u32, l: usize, h: usize, t0: usize, n: usize, dst: &mut [f32]) {
         debug_assert_eq!(dst.len(), n * self.head_dim);
         let start = blk as usize * self.stride + self.off(l, h, t0);
-        self.v.read(self.dtype, start, dst);
+        if self.dtype == KvDtype::Int8 {
+            read_i8(self.v.i8(), &self.v_scales, self.head_dim, start, dst);
+        } else {
+            self.v.read(self.dtype, start, dst);
+        }
     }
 
     /// Encode one token's K/V across every (layer, head) into in-block
     /// slot `t`. `k_all`/`v_all` are `[n_layer * n_head, head_dim]`.
+    /// For `Int8` pools each `head_dim` vector is quantized against a
+    /// fresh `quant::kv_vec_scale` — the same transform the paged
+    /// decode path stages through `KvDtype::roundtrip_vec`, so
+    /// committing staged (already-roundtripped) values is bit-stable.
     pub fn write_token(&mut self, blk: u32, t: usize, k_all: &[f32], v_all: &[f32]) {
         debug_assert!(t < self.block_tokens);
         debug_assert_eq!(k_all.len(), self.n_layer * self.n_head * self.head_dim);
         debug_assert_eq!(k_all.len(), v_all.len());
         let hd = self.head_dim;
         let base = blk as usize * self.stride;
+        let int8 = self.dtype == KvDtype::Int8;
         for l in 0..self.n_layer {
             for h in 0..self.n_head {
                 let src = (l * self.n_head + h) * hd;
                 let dst = base + self.off(l, h, t);
-                self.k.write(self.dtype, dst, &k_all[src..src + hd]);
-                self.v.write(self.dtype, dst, &v_all[src..src + hd]);
+                if int8 {
+                    write_i8(
+                        self.k.i8_mut(),
+                        &mut self.k_scales,
+                        hd,
+                        dst,
+                        &k_all[src..src + hd],
+                    );
+                    write_i8(
+                        self.v.i8_mut(),
+                        &mut self.v_scales,
+                        hd,
+                        dst,
+                        &v_all[src..src + hd],
+                    );
+                } else {
+                    self.k.write(self.dtype, dst, &k_all[src..src + hd]);
+                    self.v.write(self.dtype, dst, &v_all[src..src + hd]);
+                }
             }
         }
     }
@@ -412,14 +512,63 @@ impl KvPool {
             }
             let n = (w - t0).min(self.block_tokens);
             let base = blk as usize * self.stride;
+            let int8 = self.dtype == KvDtype::Int8;
             for l in 0..self.n_layer {
                 for h in 0..self.n_head {
                     let src = ((l * self.n_head + h) * w + t0) * hd;
                     let dst = base + self.off(l, h, 0);
-                    self.k.write(self.dtype, dst, &k[src..src + n * hd]);
-                    self.v.write(self.dtype, dst, &v[src..src + n * hd]);
+                    if int8 {
+                        write_i8(
+                            self.k.i8_mut(),
+                            &mut self.k_scales,
+                            hd,
+                            dst,
+                            &k[src..src + n * hd],
+                        );
+                        write_i8(
+                            self.v.i8_mut(),
+                            &mut self.v_scales,
+                            hd,
+                            dst,
+                            &v[src..src + n * hd],
+                        );
+                    } else {
+                        self.k.write(self.dtype, dst, &k[src..src + n * hd]);
+                        self.v.write(self.dtype, dst, &v[src..src + n * hd]);
+                    }
                 }
             }
+        }
+    }
+}
+
+/// Dequantize int8 codes starting at arena offset `start` into `dst`
+/// (`dst.len()` a multiple of `hd`), one stored scale per `head_dim`
+/// vector. `start` is always `head_dim`-aligned (every block offset is
+/// a whole number of vectors), so `start / hd + slot` indexes the
+/// scale of each consecutive slot.
+fn read_i8(codes: &[i8], scales: &[f32], hd: usize, start: usize, dst: &mut [f32]) {
+    debug_assert_eq!(start % hd, 0);
+    for (s, chunk) in dst.chunks_exact_mut(hd).enumerate() {
+        let base = start + s * hd;
+        let scale = scales[base / hd];
+        for (o, &q) in chunk.iter_mut().zip(&codes[base..base + hd]) {
+            *o = quant::dequantize_i8(q, scale);
+        }
+    }
+}
+
+/// Quantize `src` (a multiple of `hd` long) into the int8 arena at
+/// offset `start`, fitting one fresh power-of-two scale per `head_dim`
+/// vector and recording it in `scales` — the inverse of [`read_i8`].
+fn write_i8(codes: &mut [i8], scales: &mut [f32], hd: usize, start: usize, src: &[f32]) {
+    debug_assert_eq!(start % hd, 0);
+    for (s, vec) in src.chunks_exact(hd).enumerate() {
+        let base = start + s * hd;
+        let scale = quant::kv_vec_scale(vec);
+        scales[base / hd] = scale;
+        for (o, &x) in codes[base..base + hd].iter_mut().zip(vec) {
+            *o = quant::quantize_i8(x, scale);
         }
     }
 }
@@ -432,14 +581,14 @@ mod tests {
 
     fn pool(dtype: KvDtype, block_tokens: usize, blocks: usize) -> KvPool {
         let cfg = ModelConfig::builtin("tiny", "consmax").unwrap();
+        let stride =
+            cfg.n_layer * cfg.n_head * block_tokens * cfg.head_dim();
         let kv = KvCacheConfig {
             dtype,
             block_tokens,
-            // budget expressed exactly in blocks
+            // budget expressed exactly in blocks (incl. int8 scale bytes)
             mem_bytes: Some(
-                blocks * 2 * cfg.n_layer * cfg.n_head * block_tokens
-                    * cfg.head_dim()
-                    * dtype.bytes_per_elem(),
+                blocks * block_bytes_of(stride, cfg.head_dim(), dtype),
             ),
         };
         KvPool::new(&cfg, &kv, 1).unwrap()
@@ -530,7 +679,12 @@ mod tests {
 
     #[test]
     fn write_read_roundtrip_per_dtype() {
-        for dtype in [KvDtype::F32, KvDtype::F16, KvDtype::Bf16] {
+        // the storage transform of every dtype is `roundtrip_vec` over
+        // each (layer, head) vector — elementwise for the float dtypes,
+        // one shared pow2 scale per vector for int8
+        for dtype in
+            [KvDtype::F32, KvDtype::F16, KvDtype::Bf16, KvDtype::Int8]
+        {
             let mut p = pool(dtype, 4, 16);
             let hd = p.head_dim;
             let lanes = p.n_layer * p.n_head;
@@ -547,16 +701,66 @@ mod tests {
                     p.read_k(blk, l, h, 3, 1, &mut kk);
                     p.read_v(blk, l, h, 3, 1, &mut vv);
                     let src = (l * p.n_head + h) * hd;
+                    let mut want_k = k_all[src..src + hd].to_vec();
+                    let mut want_v = v_all[src..src + hd].to_vec();
+                    dtype.roundtrip_vec(&mut want_k);
+                    dtype.roundtrip_vec(&mut want_v);
                     for i in 0..hd {
-                        let want_k = dtype.roundtrip(k_all[src + i]);
-                        let want_v = dtype.roundtrip(v_all[src + i]);
-                        assert_eq!(kk[i].to_bits(), want_k.to_bits());
-                        assert_eq!(vv[i].to_bits(), want_v.to_bits());
+                        assert_eq!(kk[i].to_bits(), want_k[i].to_bits(), "{dtype:?}");
+                        assert_eq!(vv[i].to_bits(), want_v[i].to_bits(), "{dtype:?}");
                     }
                 }
             }
             p.release(blk);
         }
+    }
+
+    #[test]
+    fn int8_block_bytes_count_scales() {
+        // int8 blocks are codes + per-vector f32 scales; still well
+        // under half an f16 block at head_dim 32
+        let cfg = ModelConfig::builtin("tiny", "consmax").unwrap();
+        let s8 = pool(KvDtype::Int8, 16, 4).stats();
+        let s16 = pool(KvDtype::F16, 16, 4).stats();
+        let stride = cfg.n_layer * cfg.n_head * 16 * cfg.head_dim();
+        assert_eq!(
+            s8.block_bytes,
+            2 * stride + 2 * (stride / cfg.head_dim()) * 4
+        );
+        assert!(s8.block_bytes * 3 < s16.block_bytes * 2, "{s8:?} vs {s16:?}");
+    }
+
+    #[test]
+    fn int8_make_private_copies_scales_with_codes() {
+        let mut p = pool(KvDtype::Int8, 4, 16);
+        let a = p.alloc().unwrap();
+        let lanes = p.n_layer * p.n_head * p.head_dim;
+        // two very different magnitudes in different slots, so a lost
+        // scale copy would corrupt the dequantized values
+        let big: Vec<f32> = (0..lanes).map(|i| 40.0 + i as f32).collect();
+        let tiny: Vec<f32> = (0..lanes).map(|i| 0.001 * (i as f32 + 1.0)).collect();
+        p.write_token(a, 0, &big, &big);
+        p.write_token(a, 1, &tiny, &tiny);
+
+        p.retain(a);
+        let b = p.make_private(a).unwrap();
+        assert_ne!(a, b);
+        let hd = p.head_dim;
+        let (mut got, mut want) = (vec![0.0f32; hd], vec![0.0f32; hd]);
+        for l in 0..p.n_layer {
+            for h in 0..p.n_head {
+                for t in 0..2 {
+                    p.read_k(b, l, h, t, 1, &mut got);
+                    p.read_k(a, l, h, t, 1, &mut want);
+                    assert_eq!(got, want, "K clone diverged at ({l},{h},{t})");
+                    p.read_v(b, l, h, t, 1, &mut got);
+                    p.read_v(a, l, h, t, 1, &mut want);
+                    assert_eq!(got, want, "V clone diverged at ({l},{h},{t})");
+                }
+            }
+        }
+        p.release(a);
+        p.release(b);
     }
 
     #[test]

@@ -22,10 +22,17 @@
 //! [`dot`] inner loop, cache blocking over column tiles, and work
 //! fanned out over `runtime::parallel`. Thread-count never changes
 //! results: each output element is one serial [`dot`].
+//!
+//! The `--quant int8` serving path adds two twins (DESIGN.md
+//! §Quantization seam): [`matmul_bt_i8_into`] runs the same tiling
+//! over per-channel int8 weights with f32 accumulation, and
+//! [`attend_consmax_lut`] replaces the attention tail's `C·exp` with a
+//! bit-split-LUT table lookup whose probabilities are bit-identical to
+//! [`BitSplitLut`] / the RTL simulator.
 
 use anyhow::{bail, ensure, Result};
 
-use crate::quant::BitSplitLut;
+use crate::quant::{BitSplitLut, Int8Quantizer, QuantizedMatrix};
 use crate::runtime::backend::Backend;
 use crate::runtime::{DType, HostTensor};
 use crate::util::fp16::F16;
@@ -281,6 +288,40 @@ pub fn attend_consmax(
     }
 }
 
+/// Int8/LUT ConSmax attention tail (DESIGN.md §Quantization seam):
+/// the same fused loop as [`attend_consmax`], but the `C·exp` step
+/// runs through the bit-split LUT response `table` — one fp16
+/// probability per int8 score code, indexed `code as u8` exactly like
+/// `BitSplitLut::response_table` builds it — after quantizing each
+/// score onto `quant`'s grid (the paper's 1/16 operating point). Every
+/// probability is therefore bit-identical to
+/// `BitSplitLut::consmax(code, c)`, the same bits the RTL simulator
+/// streams out, before the f32 PV accumulation.
+#[allow(clippy::too_many_arguments)]
+pub fn attend_consmax_lut(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    head_dim: usize,
+    scale: f32,
+    quant: &Int8Quantizer,
+    table: &[F16; 256],
+    y: &mut [f32],
+) {
+    debug_assert_eq!(k.len(), v.len());
+    debug_assert_eq!(k.len() % head_dim, 0);
+    let n = k.len() / head_dim;
+    for j in 0..n {
+        let krow = &k[j * head_dim..(j + 1) * head_dim];
+        let code = quant.quantize(dot(q, krow) * scale);
+        let pj = table[code as u8 as usize].to_f32();
+        let vrow = &v[j * head_dim..(j + 1) * head_dim];
+        for (o, &vv) in y.iter_mut().zip(vrow) {
+            *o += pj * vv;
+        }
+    }
+}
+
 /// Score pass for the reducing normalizers: `srow[j] = (q · k_j) *
 /// scale` over a contiguous `[n, head_dim]` K region (`n ==
 /// srow.len()`). The caller normalizes (`softmax_inplace` /
@@ -390,6 +431,95 @@ fn matmul_bt_block(a: &[f32], bt: &[f32], k: usize, n: usize, out: &mut [f32]) {
             let orow = &mut out[i * n + jb..i * n + je];
             for (o, j) in orow.iter_mut().zip(jb..je) {
                 *o = dot(arow, &bt[j * k..(j + 1) * k]);
+            }
+        }
+        jb = je;
+    }
+}
+
+/// [`dot`] against int8 codes: each code is widened to f32 in the
+/// multiply; the per-channel scale is applied once by the caller,
+/// after the reduction. Same 8-lane layout and serial accumulation
+/// order as [`dot`], so int8 matmul results are thread-count
+/// invariant too.
+#[inline]
+pub fn dot_i8(a: &[f32], q: &[i8]) -> f32 {
+    debug_assert_eq!(a.len(), q.len());
+    let mut acc = [0.0f32; 8];
+    let a_whole = a.chunks_exact(8);
+    let q_whole = q.chunks_exact(8);
+    let a_rest = a_whole.remainder();
+    let q_rest = q_whole.remainder();
+    for (ca, cq) in a_whole.zip(q_whole) {
+        for (lane, (&x, &code)) in acc.iter_mut().zip(ca.iter().zip(cq)) {
+            *lane += x * code as f32;
+        }
+    }
+    let mut s = ((acc[0] + acc[1]) + (acc[2] + acc[3]))
+        + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    for (&x, &code) in a_rest.iter().zip(q_rest) {
+        s += x * code as f32;
+    }
+    s
+}
+
+/// [`matmul_bt_into`] against per-channel int8 weights:
+/// `a (m,k) @ qm^T -> (m,n)` where `qm` holds B pre-transposed to
+/// `(n,k)` row-major i8 codes with one power-of-two scale per output
+/// channel, so `out[i,j] = scales[j] * Σ_p a[i,p] · q[j,p]` with the
+/// reduction in f32 ([`dot_i8`]). Same cache blocking, parallel
+/// partitioning, and serial per-element order as the f32 production
+/// kernel — results are bit-identical at every thread count.
+pub fn matmul_bt_i8_into(
+    a: &[f32],
+    qm: &QuantizedMatrix,
+    m: usize,
+    out: &mut [f32],
+) {
+    let (k, n) = (qm.din, qm.dout);
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(out.len(), m * n);
+    if out.is_empty() {
+        return;
+    }
+    let threads = crate::runtime::parallel::current_threads();
+    if threads <= 1 || m * k * n < PAR_MIN_MACS {
+        matmul_bt_i8_block(a, qm, k, n, out);
+        return;
+    }
+    if m == 1 {
+        // one output row: partition its columns (the LM-head shape)
+        crate::runtime::parallel::par_row_blocks(out, 1, |j0, cols| {
+            for (jj, o) in cols.iter_mut().enumerate() {
+                let j = j0 + jj;
+                *o = qm.scales[j] * dot_i8(a, qm.row(j));
+            }
+        });
+    } else {
+        crate::runtime::parallel::par_row_blocks(out, n, |i0, rows| {
+            let m_block = rows.len() / n;
+            matmul_bt_i8_block(&a[i0 * k..(i0 + m_block) * k], qm, k, n, rows);
+        });
+    }
+}
+
+/// Serial cache-blocked core of [`matmul_bt_i8_into`].
+fn matmul_bt_i8_block(
+    a: &[f32],
+    qm: &QuantizedMatrix,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    let m = out.len() / n;
+    let mut jb = 0;
+    while jb < n {
+        let je = (jb + COL_TILE).min(n);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n + jb..i * n + je];
+            for (o, j) in orow.iter_mut().zip(jb..je) {
+                *o = qm.scales[j] * dot_i8(arow, qm.row(j));
             }
         }
         jb = je;
@@ -611,6 +741,75 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn int8_matmul_matches_dequantized_oracle() {
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::seeded(9);
+        // the same shape sweep as the f32 tiled kernel, against a
+        // float64 oracle over the dequantized codes
+        for (m, k, n) in [(1usize, 64usize, 256usize), (5, 33, 70), (8, 64, 64)] {
+            let a = rng.normal_vec_f32(m * k, 0.0, 1.0);
+            let w = rng.normal_vec_f32(n * k, 0.0, 0.05);
+            let qm = QuantizedMatrix::from_rows(&w, n, k);
+            let dq = qm.dequantize();
+            let mut got = vec![0.0f32; m * n];
+            matmul_bt_i8_into(&a, &qm, m, &mut got);
+            for i in 0..m {
+                for j in 0..n {
+                    let want: f64 = (0..k)
+                        .map(|p| a[i * k + p] as f64 * dq[j * k + p] as f64)
+                        .sum();
+                    let g = got[i * n + j] as f64;
+                    let denom = g.abs().max(want.abs()).max(1.0);
+                    assert!(
+                        (g - want).abs() / denom <= 1e-5,
+                        "({m},{k},{n})[{i},{j}]: {g} vs {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dot_i8_matches_widened_dot() {
+        // widening each code to f32 and running the f32 dot must agree
+        // bit-for-bit (same lane layout, same order)
+        for len in [0usize, 1, 7, 8, 9, 31, 64, 100] {
+            let a: Vec<f32> = (0..len).map(|i| (i as f32) * 0.25 - 3.0).collect();
+            let q: Vec<i8> = (0..len).map(|i| ((i * 37) % 255) as i8).collect();
+            let qf: Vec<f32> = q.iter().map(|&c| c as f32).collect();
+            assert_eq!(dot_i8(&a, &q).to_bits(), dot(&a, &qf).to_bits(), "len {len}");
+        }
+    }
+
+    #[test]
+    fn attend_consmax_lut_probs_are_lut_bits() {
+        // the LUT tail must accumulate exactly the fp16 probabilities
+        // BitSplitLut::consmax emits for the quantized scores
+        let (n, hd) = (6usize, 4usize);
+        let q: Vec<f32> = (0..hd).map(|i| 0.4 - 0.15 * i as f32).collect();
+        let k: Vec<f32> = (0..n * hd).map(|i| (i as f32) * 0.09 - 0.5).collect();
+        let v: Vec<f32> = (0..n * hd).map(|i| 1.0 - (i as f32) * 0.03).collect();
+        let scale = 0.5f32;
+        let quant = Int8Quantizer::paper();
+        let lut = BitSplitLut::paper();
+        let c = merge_beta_gamma(1.5, 100.0);
+        let table = lut.response_table(c);
+
+        let mut got = vec![0.0f32; hd];
+        attend_consmax_lut(&q, &k, &v, hd, scale, &quant, &table, &mut got);
+
+        let mut want = vec![0.0f32; hd];
+        for j in 0..n {
+            let code = quant.quantize(dot(&q, &k[j * hd..(j + 1) * hd]) * scale);
+            let pj = lut.consmax(code, c).to_f32();
+            for (o, &vv) in want.iter_mut().zip(&v[j * hd..(j + 1) * hd]) {
+                *o += pj * vv;
+            }
+        }
+        assert_eq!(got, want); // bit-identical, not just close
     }
 
     #[test]

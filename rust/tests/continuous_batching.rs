@@ -13,7 +13,7 @@
 //! 2-token request co-resident with a 48-token one reports a smaller
 //! latency), never the batch's wall time.
 
-use consmax::config::{KvCacheConfig, KvDtype, ModelConfig};
+use consmax::config::{KvCacheConfig, KvDtype, ModelConfig, QuantMode};
 use consmax::coordinator::{
     DecodeMode, GenRequest, GenResponse, Generator, ParamStore, Server,
 };
@@ -199,6 +199,116 @@ fn join_leave_proptest_ragged_prompts_mixed_budgets() {
                     r.tokens == want,
                     "pool {pi}: req {} (prompt {:?}, max_new {}) diverged: \
                      {:?} vs {:?}",
+                    r.id,
+                    prompt,
+                    max_new,
+                    r.tokens,
+                    want
+                );
+            }
+            Ok(())
+        });
+    }
+}
+
+/// Solo oracle for the fully quantized serving stack: int8 weights +
+/// LUT tail *and* int8 KV blocks need an oracle with the identical
+/// KV/quant config, because int8 KV storage is lossy — the dense-f32
+/// oracle pins a different function.
+fn int8_solo_tokens(
+    cfg: &ModelConfig,
+    store: &ParamStore,
+    kv: &KvCacheConfig,
+    prompt: &str,
+    max_new: usize,
+) -> Vec<i32> {
+    let gen =
+        Generator::native_quant(cfg, store, 0, DecodeMode::Kv, QuantMode::Int8)
+            .unwrap();
+    let mut server = Server::new(gen);
+    server.set_kv_config(Some(*kv)).unwrap();
+    server.set_max_batch(1).unwrap();
+    server.submit(greedy_req(0, prompt, max_new));
+    by_id(server.run_continuous().unwrap()).remove(0).tokens
+}
+
+#[test]
+fn int8_join_leave_proptest_matches_int8_solo_oracle() {
+    // the same churn property on the fully quantized stack
+    // (`--quant int8 --kv-dtype int8`): budgetless (prefix sharing
+    // live) and tight-budget (preempt-and-requeue live) int8 pools.
+    // Preemption re-encode re-quantizes the same activations, and pow2
+    // scales make that idempotent, so outputs must still be bitwise
+    // solo — scheduling may never leak into a quantized request either.
+    let (cfg, store) = setup();
+    let stride16 = cfg.n_layer * cfg.n_head * 16 * cfg.head_dim();
+    let int8_block_bytes = 2 * stride16 + 2 * (stride16 / cfg.head_dim()) * 4;
+    let pools: [KvCacheConfig; 2] = [
+        KvCacheConfig {
+            dtype: KvDtype::Int8,
+            block_tokens: 8,
+            mem_bytes: None,
+        },
+        KvCacheConfig {
+            dtype: KvDtype::Int8,
+            block_tokens: 16,
+            // 9 blocks: pressure with a few co-resident rows
+            mem_bytes: Some(9 * int8_block_bytes),
+        },
+    ];
+    for (pi, kv) in pools.iter().enumerate() {
+        run_property("int8 continuous == int8 solo under churn", 4, |g: &mut Gen| {
+            let n = g.usize(3, 8);
+            let mut reqs: Vec<(String, usize)> = Vec::new();
+            for _ in 0..n {
+                let plen = g.usize(0, 90); // ctx is 64: some prompts clamp
+                let prompt: String = (0..plen)
+                    .map(|_| (b'a' + (g.usize(0, 26) as u8)) as char)
+                    .collect();
+                let max_new = g.usize(0, 8);
+                reqs.push((prompt, max_new));
+            }
+            let gen = Generator::native_quant(
+                &cfg,
+                &store,
+                0,
+                DecodeMode::Kv,
+                QuantMode::Int8,
+            )
+            .unwrap();
+            let mut server = Server::new(gen);
+            server.set_kv_config(Some(*kv)).unwrap();
+            let split = g.usize(0, n + 1);
+            for (id, (prompt, max_new)) in reqs.iter().take(split).enumerate() {
+                server.submit(greedy_req(id as u64, prompt, *max_new));
+            }
+            let mut responses = Vec::new();
+            for _ in 0..g.usize(0, 5) {
+                responses.extend(server.step().unwrap());
+            }
+            for (id, (prompt, max_new)) in
+                reqs.iter().enumerate().skip(split)
+            {
+                server.submit(greedy_req(id as u64, prompt, *max_new));
+            }
+            responses.extend(server.run_continuous().unwrap());
+            prop_assert!(
+                responses.len() == reqs.len(),
+                "int8 pool {pi}: served {} of {} requests",
+                responses.len(),
+                reqs.len()
+            );
+            let responses = by_id(responses);
+            for (r, (prompt, max_new)) in responses.iter().zip(&reqs) {
+                let want = if prompt.is_empty() {
+                    Vec::new()
+                } else {
+                    int8_solo_tokens(&cfg, &store, kv, prompt, *max_new)
+                };
+                prop_assert!(
+                    r.tokens == want,
+                    "int8 pool {pi}: req {} (prompt {:?}, max_new {}) \
+                     diverged: {:?} vs {:?}",
                     r.id,
                     prompt,
                     max_new,

@@ -9,9 +9,13 @@
 //!   (the left-pad pollution fix);
 //! * each request is sampled at its own temperature (not `batch[0]`'s);
 //! * accounting is in token space (`prompt_tokens` = post-clamp encoded
-//!   length, `new_tokens` = generated token count, not chars/bytes).
+//!   length, `new_tokens` = generated token count, not chars/bytes);
+//! * the int8 serving path (`--quant int8`: per-channel int8
+//!   projections + LUT ConSmax tail) passes the same oracle suite —
+//!   quantization error is identical on both sides, so the f32
+//!   tolerances carry over unchanged.
 
-use consmax::config::{KvCacheConfig, KvDtype, ModelConfig};
+use consmax::config::{KvCacheConfig, KvDtype, ModelConfig, QuantMode};
 use consmax::coordinator::{
     DecodeMode, GenRequest, Generator, ParamStore, Server,
 };
@@ -20,9 +24,14 @@ use consmax::runtime::backend::{DecodeSession, NativeModel};
 const NORMALIZERS: [&str; 3] = ["consmax", "softmax", "softermax"];
 
 fn tiny_model(norm: &str, seed: u64) -> NativeModel {
+    tiny_model_quant(norm, seed, QuantMode::Off)
+}
+
+fn tiny_model_quant(norm: &str, seed: u64, quant: QuantMode) -> NativeModel {
     let cfg = ModelConfig::builtin("tiny", norm).unwrap();
     let store = ParamStore::init(&cfg, seed).unwrap();
-    NativeModel::from_params(&cfg, &store.order, &store.params).unwrap()
+    NativeModel::from_params_quant(&cfg, &store.order, &store.params, quant)
+        .unwrap()
 }
 
 fn argmax(xs: &[f32]) -> usize {
@@ -57,7 +66,22 @@ fn check_greedy_equivalence_on(
     steps: usize,
     paged: bool,
 ) {
-    let m = tiny_model(norm, 11);
+    check_greedy_equivalence_quant(norm, prompt_len, steps, paged, QuantMode::Off);
+}
+
+/// Same oracle loop, but the model (both the KV engine under test and
+/// the recompute oracle) may run the int8 serving path: the weight
+/// quantization error is identical on both sides, so the same 1e-5
+/// logit tolerance as f32 applies. Lossy int8 *KV storage* is pinned
+/// separately in `kvcache_paged.rs` under its documented `INT8_TOL`.
+fn check_greedy_equivalence_quant(
+    norm: &str,
+    prompt_len: usize,
+    steps: usize,
+    paged: bool,
+    quant: QuantMode,
+) {
+    let m = tiny_model_quant(norm, 11, quant);
     let prompt: Vec<i32> =
         (0..prompt_len).map(|i| ((i * 37 + 5) % 256) as i32).collect();
 
@@ -131,6 +155,26 @@ fn paged_f32_kv_matches_recompute_within_and_past_ctx() {
 }
 
 #[test]
+fn int8_kv_matches_recompute_within_and_past_ctx() {
+    // the int8 serving path (per-channel int8 projections + LM head,
+    // LUT ConSmax tail) through the same dense-KV-vs-recompute oracle,
+    // including ring eviction + window re-encode past ctx
+    for norm in NORMALIZERS {
+        check_greedy_equivalence_quant(norm, 16, 8, false, QuantMode::Int8);
+        check_greedy_equivalence_quant(norm, 58, 10, false, QuantMode::Int8);
+    }
+}
+
+#[test]
+fn int8_paged_kv_matches_recompute() {
+    // int8 weights over the paged pool with f32 block storage: paging
+    // must stay transparent to the quantized compute path too
+    for norm in NORMALIZERS {
+        check_greedy_equivalence_quant(norm, 16, 8, true, QuantMode::Int8);
+    }
+}
+
+#[test]
 fn kv_matches_recompute_for_overlong_prompt() {
     // prompt already longer than ctx: prefill must clamp to the
     // trailing window exactly like the oracle
@@ -186,6 +230,38 @@ fn kv_and_recompute_generators_agree_on_batches() {
         let a = kv.generate_batch(&prompts, 10, 0.0).unwrap();
         let b = rc.generate_batch(&prompts, 10, 0.0).unwrap();
         assert_eq!(a, b, "{norm}: kv vs recompute batch divergence");
+    }
+}
+
+#[test]
+fn int8_kv_and_recompute_generators_agree_on_batches() {
+    // both generators run the same int8 model, so greedy continuations
+    // must match exactly — the quantization error cancels across the
+    // oracle pair
+    for norm in NORMALIZERS {
+        let cfg = ModelConfig::builtin("tiny", norm).unwrap();
+        let store = ParamStore::init(&cfg, 9).unwrap();
+        let prompts =
+            ["alpha ".to_string(), "the quick brown fox".to_string()];
+        let mut kv = Generator::native_quant(
+            &cfg,
+            &store,
+            0,
+            DecodeMode::Kv,
+            QuantMode::Int8,
+        )
+        .unwrap();
+        let mut rc = Generator::native_quant(
+            &cfg,
+            &store,
+            0,
+            DecodeMode::Recompute,
+            QuantMode::Int8,
+        )
+        .unwrap();
+        let a = kv.generate_batch(&prompts, 10, 0.0).unwrap();
+        let b = rc.generate_batch(&prompts, 10, 0.0).unwrap();
+        assert_eq!(a, b, "{norm}: int8 kv vs recompute divergence");
     }
 }
 

@@ -1,0 +1,240 @@
+//! Property tests for the int8 quantization seam (DESIGN.md
+//! §Quantization seam): per-channel weight quantization via
+//! [`QuantizedMatrix`] and the per-vector KV storage transform
+//! ([`kv_vec_scale`] / [`quantize_i8`] / [`dequantize_i8`]), driven
+//! over random tensors with injected adversarial structure — all-zero
+//! channels, single outliers, subnormals, near-max magnitudes, and
+//! NaN/inf elements.
+//!
+//! The pinned contract:
+//! * every fitted scale is a finite positive power of two — never
+//!   NaN, inf, or zero — for **any** f32 input bits (the quantizer is
+//!   symmetric, so the zero-point is identically 0 by construction);
+//! * on finite activation-range inputs the roundtrip error stays
+//!   within the documented `scale / 2` bound and the output is finite;
+//! * quantize→dequantize is **idempotent in bits** on finite inputs:
+//!   re-quantizing a dequantized tensor reproduces it exactly, because
+//!   power-of-two scales make the rescale a pure exponent shift. This
+//!   is the property that lets the paged decode staging path
+//!   (`KvDtype::roundtrip_vec`) and the pool's `write_token`
+//!   re-quantization agree bit for bit.
+
+use consmax::config::KvDtype;
+use consmax::prop_assert;
+use consmax::quant::{
+    dequantize_i8, kv_vec_scale, quantize_i8, Int8Quantizer,
+    QuantizedMatrix,
+};
+use consmax::util::proptest::{run_property, Gen};
+
+/// Finite adversarial magnitudes: signed zeros, f32 subnormals, an
+/// activation-scale outlier, and near-max normals. `f32::MAX` itself is
+/// excluded — its fitted code dequantizes to `64 * 2^122`, which
+/// overflows f32 — and lives in [`WILD`], where only scale totality and
+/// NaN-freedom are asserted.
+const BOUNDED: [f32; 10] = [
+    0.0,
+    -0.0,
+    1e-42,
+    -1e-42,
+    1e-44,
+    f32::MIN_POSITIVE,
+    1e6,
+    -1e6,
+    1e30,
+    -1e30,
+];
+
+/// Everything, including the inputs a buggy fit would turn into a NaN,
+/// inf, or zero scale.
+const WILD: [f32; 8] = [
+    0.0,
+    f32::NAN,
+    f32::INFINITY,
+    f32::NEG_INFINITY,
+    f32::MAX,
+    -f32::MAX,
+    1e-44,
+    -1e9,
+];
+
+fn is_pow2(scale: f32) -> bool {
+    scale.is_finite() && scale > 0.0 && scale.log2().fract() == 0.0
+}
+
+/// Random vector with a few adversarial elements spliced in.
+fn gen_vec(g: &mut Gen, pool: &[f32]) -> Vec<f32> {
+    let mut v = g.vec_f32(1, 48, -1e4, 1e4);
+    for _ in 0..g.usize(0, 5) {
+        let i = g.usize(0, v.len());
+        v[i] = *g.choose(pool);
+    }
+    v
+}
+
+/// Random `[dout, din]` row-major matrix where each output channel may
+/// get adversarial structure: all-zero, single outlier, all-subnormal,
+/// or one element from `pool`.
+fn gen_matrix(g: &mut Gen, pool: &[f32]) -> (Vec<f32>, usize, usize) {
+    let dout = g.usize(1, 8);
+    let din = g.usize(1, 16);
+    let mut w = vec![0.0f32; dout * din];
+    for x in w.iter_mut() {
+        *x = g.f32(-50.0, 50.0);
+    }
+    for r in 0..dout {
+        let row = &mut w[r * din..(r + 1) * din];
+        match g.usize(0, 5) {
+            0 => row.fill(0.0),
+            1 => row[g.usize(0, din)] = 1e6,
+            2 => {
+                for x in row.iter_mut() {
+                    *x = *g.choose(&[1e-42f32, -1e-42, 1e-44]);
+                }
+            }
+            3 => row[g.usize(0, din)] = *g.choose(pool),
+            _ => {}
+        }
+    }
+    (w, dout, din)
+}
+
+#[test]
+fn kv_scale_is_total_and_pow2() {
+    run_property("kv scale total", 400, |g: &mut Gen| {
+        let v = gen_vec(g, &WILD);
+        let s = kv_vec_scale(&v);
+        prop_assert!(is_pow2(s), "scale {s:e} for {v:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn fit_safe_is_total_over_all_f32_bit_patterns() {
+    run_property("fit_safe total", 2000, |g: &mut Gen| {
+        let x = f32::from_bits(g.rng().next_u32());
+        let q = Int8Quantizer::fit_safe(x);
+        prop_assert!(is_pow2(q.scale), "x {x:e} -> scale {:e}", q.scale);
+        Ok(())
+    });
+}
+
+#[test]
+fn kv_roundtrip_error_is_bounded_on_finite_vectors() {
+    run_property("kv roundtrip bound", 400, |g: &mut Gen| {
+        let v = gen_vec(g, &BOUNDED);
+        let s = kv_vec_scale(&v);
+        for &x in &v {
+            let rt = dequantize_i8(quantize_i8(x, s), s);
+            prop_assert!(rt.is_finite(), "x {x:e} -> {rt:e} (scale {s:e})");
+            prop_assert!(
+                (rt - x).abs() <= 0.5 * s,
+                "x {x:e} -> {rt:e} err {:e} > scale/2 (scale {s:e})",
+                (rt - x).abs()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn kv_roundtrip_is_idempotent_in_bits() {
+    run_property("kv roundtrip idempotent", 300, |g: &mut Gen| {
+        let v = gen_vec(g, &BOUNDED);
+        let mut once = v.clone();
+        KvDtype::Int8.roundtrip_vec(&mut once);
+        let mut twice = once.clone();
+        KvDtype::Int8.roundtrip_vec(&mut twice);
+        for (i, (a, b)) in once.iter().zip(&twice).enumerate() {
+            prop_assert!(
+                a.to_bits() == b.to_bits(),
+                "[{i}] {a:e} re-quantized to {b:e} (input {v:?})"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn roundtrip_vec_matches_the_pool_storage_transform() {
+    // the paged decode staging path (KvDtype::roundtrip_vec) and the
+    // per-vector transform KvPool applies at write_token must be the
+    // same function, bit for bit — decode correctness rests on it
+    run_property("staging == storage transform", 300, |g: &mut Gen| {
+        let v = gen_vec(g, &BOUNDED);
+        let mut staged = v.clone();
+        KvDtype::Int8.roundtrip_vec(&mut staged);
+        let s = kv_vec_scale(&v);
+        for (i, (&x, &st)) in v.iter().zip(&staged).enumerate() {
+            let stored = dequantize_i8(quantize_i8(x, s), s);
+            prop_assert!(
+                st.to_bits() == stored.to_bits(),
+                "[{i}] staged {st:e} != stored {stored:e}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn weight_channels_quantize_independently_within_bound() {
+    run_property("weight channel bound", 200, |g: &mut Gen| {
+        let (w, dout, din) = gen_matrix(g, &BOUNDED);
+        let qm = QuantizedMatrix::from_rows(&w, dout, din);
+        let dq = qm.dequantize();
+        for r in 0..dout {
+            let s = qm.scales[r];
+            prop_assert!(is_pow2(s), "row {r} scale {s:e}");
+            for c in 0..din {
+                let (a, b) = (w[r * din + c], dq[r * din + c]);
+                prop_assert!(b.is_finite(), "[{r},{c}] {a:e} -> {b:e}");
+                prop_assert!(
+                    (a - b).abs() <= 0.5 * s,
+                    "[{r},{c}] {a:e} -> {b:e} (scale {s:e})"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn weight_quantization_is_idempotent_in_bits() {
+    run_property("weight quant idempotent", 150, |g: &mut Gen| {
+        let (w, dout, din) = gen_matrix(g, &BOUNDED);
+        let qm = QuantizedMatrix::from_rows(&w, dout, din);
+        let dq = qm.dequantize();
+        let qm2 = QuantizedMatrix::from_rows(&dq, dout, din);
+        let dq2 = qm2.dequantize();
+        for (i, (a, b)) in dq.iter().zip(&dq2).enumerate() {
+            prop_assert!(
+                a.to_bits() == b.to_bits(),
+                "[{i}] {a:e} re-quantized to {b:e}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn wild_inputs_never_corrupt_scales_or_produce_nan() {
+    run_property("wild inputs total", 300, |g: &mut Gen| {
+        let (w, dout, din) = gen_matrix(g, &WILD);
+        let qm = QuantizedMatrix::from_rows(&w, dout, din);
+        for (r, &s) in qm.scales.iter().enumerate() {
+            prop_assert!(is_pow2(s), "row {r} scale {s:e}");
+        }
+        // dequantized values are code * pow2-scale products: possibly
+        // saturated, never NaN
+        for (i, x) in qm.dequantize().iter().enumerate() {
+            prop_assert!(!x.is_nan(), "[{i}] NaN after weight roundtrip");
+        }
+        let v = gen_vec(g, &WILD);
+        let s = kv_vec_scale(&v);
+        for &x in &v {
+            let rt = dequantize_i8(quantize_i8(x, s), s);
+            prop_assert!(!rt.is_nan(), "x {x:e} -> NaN (scale {s:e})");
+        }
+        Ok(())
+    });
+}

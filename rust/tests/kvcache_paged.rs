@@ -7,6 +7,11 @@
 //!   divide the context;
 //! * **fp16/bf16 KV** tracks the dense logits within the documented
 //!   tolerances (EXPERIMENTS.md §KV memory scaling);
+//! * **int8 KV** (one byte per element + a per-vector power-of-two
+//!   scale) tracks dense within its own documented tolerance, and its
+//!   prefix-sharing/CoW paths are *bitwise* against an int8 solo
+//!   session with the identical pool config — sharing may never change
+//!   which codes a row reads;
 //! * **prefix sharing** really shares blocks (gauges move) and changes
 //!   no bits: a row riding a shared prefix emits the exact dense
 //!   logits, stays isolated after divergence (copy-on-write), and
@@ -27,6 +32,11 @@ const NORMALIZERS: [&str; 3] = ["consmax", "softmax", "softermax"];
 const F16_TOL: f32 = 2e-2;
 /// Same bound for bf16 (7-bit mantissa: coarser).
 const BF16_TOL: f32 = 1e-1;
+/// Same bound for int8 KV: symmetric per-vector quantization at a
+/// power-of-two scale carries ~1% relative error per stored element
+/// (max `scale/2` with `scale <= 2 * max_abs / 127`), coarser than
+/// bf16's 7-bit mantissa, so the logit bound is looser again.
+const INT8_TOL: f32 = 4e-1;
 
 fn tiny_model(norm: &str, seed: u64) -> NativeModel {
     let cfg = ModelConfig::builtin("tiny", norm).unwrap();
@@ -142,9 +152,15 @@ fn reduced_precision_kv_stays_close_to_dense() {
     for norm in NORMALIZERS {
         compare_greedy(norm, KvDtype::F16, 16, 20, 12, Some(F16_TOL));
         compare_greedy(norm, KvDtype::Bf16, 16, 20, 12, Some(BF16_TOL));
+        compare_greedy(norm, KvDtype::Int8, 16, 20, 12, Some(INT8_TOL));
     }
     // and across an eviction re-encode
     compare_greedy("consmax", KvDtype::F16, 16, 60, 8, Some(F16_TOL));
+    compare_greedy("consmax", KvDtype::Int8, 16, 60, 8, Some(INT8_TOL));
+    // block sizes that straddle block edges must quantize identically
+    // (scales are per head_dim vector, not per block, so geometry is
+    // irrelevant to the stored values)
+    compare_greedy("consmax", KvDtype::Int8, 5, 20, 8, Some(INT8_TOL));
 }
 
 #[test]
@@ -187,6 +203,70 @@ fn prefix_sharing_shares_blocks_and_changes_no_bits() {
     let st = paged.kv_stats().unwrap();
     assert_eq!(st.free_blocks, st.total_blocks, "pool did not drain: {st:?}");
     assert_eq!(st.shared_blocks, 0);
+}
+
+#[test]
+fn int8_prefix_sharing_is_bitwise_against_an_int8_solo_session() {
+    // the dense-f32 oracle can't pin lossy int8 storage, so the oracle
+    // here is a solo paged-int8 session with the identical pool config:
+    // sharing and copy-on-write must not change which codes a row reads
+    let m = tiny_model("consmax", 5);
+    let prompt: Vec<i32> =
+        (0..40).map(|i| ((i * 7 + 3) % 256) as i32).collect();
+    let kv = kv_cfg(KvDtype::Int8, 8);
+
+    let mut solo = DecodeSession::new_paged(&m.cfg, 1, &kv).unwrap();
+    let mut shared = DecodeSession::new_paged(&m.cfg, 2, &kv).unwrap();
+    let mut sl = m.prefill(&mut solo, &[prompt.clone()]).unwrap();
+    let mut pl = m
+        .prefill(&mut shared, &[prompt.clone(), prompt.clone()])
+        .unwrap();
+    let v = m.cfg.vocab;
+    assert_eq!(sl[..], pl[..v], "row 0 prefill not bitwise vs solo");
+    assert_eq!(sl[..], pl[v..], "row 1 prefill not bitwise vs solo");
+    assert!(
+        shared.kv_stats().unwrap().shared_blocks > 0,
+        "prefix not shared"
+    );
+
+    // row 0 follows the solo greedy stream; row 1 diverges, exercising
+    // copy-on-write (codes *and* scales) without touching row 0's bits
+    for step in 0..10 {
+        let t0 = argmax(&sl) as i32;
+        let t1 = (t0 + 1 + step as i32) % 256;
+        sl = m.decode_step(&mut solo, &[t0]).unwrap();
+        pl = m.decode_step(&mut shared, &[t0, t1]).unwrap();
+        assert_eq!(sl[..], pl[..v], "row 0 step {step} not bitwise vs solo");
+    }
+}
+
+#[test]
+fn int8_shared_rows_survive_eviction_reencode_bitwise_vs_solo() {
+    // full-ctx shared prompt decoded past ctx with int8 blocks: the
+    // eviction re-encode privatizes and re-quantizes every window, and
+    // the shared row must keep emitting exactly the solo session's bits
+    let m = tiny_model("consmax", 9);
+    let prompt: Vec<i32> =
+        (0..m.cfg.ctx).map(|i| ((i * 11 + 2) % 256) as i32).collect();
+    let kv = kv_cfg(KvDtype::Int8, 8);
+
+    let mut solo = DecodeSession::new_paged(&m.cfg, 1, &kv).unwrap();
+    let mut shared = DecodeSession::new_paged(&m.cfg, 2, &kv).unwrap();
+    let mut sl = m.prefill(&mut solo, &[prompt.clone()]).unwrap();
+    let mut pl = m
+        .prefill(&mut shared, &[prompt.clone(), prompt.clone()])
+        .unwrap();
+    let v = m.cfg.vocab;
+    assert_eq!(sl[..], pl[..v]);
+    assert!(shared.kv_stats().unwrap().shared_blocks > 0);
+
+    for step in 0..5 {
+        let t0 = argmax(&sl) as i32;
+        let t1 = (t0 + 13) % 256;
+        sl = m.decode_step(&mut solo, &[t0]).unwrap();
+        pl = m.decode_step(&mut shared, &[t0, t1]).unwrap();
+        assert_eq!(sl[..], pl[..v], "eviction step {step} not bitwise");
+    }
 }
 
 #[test]

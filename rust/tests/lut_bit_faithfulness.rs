@@ -1,0 +1,193 @@
+//! Exhaustive bit-faithfulness of the ConSmax LUT serving path
+//! (DESIGN.md §Quantization seam).
+//!
+//! The int8 serving tail computes `C·exp(s)` through the bit-split LUT,
+//! and the claim is *bit*-equality, not tolerance: for **every**
+//! representable bit-split input — all 256 int8 codes, not a spot-check
+//! golden vector — the response table the model serves from, the
+//! [`BitSplitLut`] reference, the 3-stage RTL pipeline model, and the
+//! [`native::attend_consmax_lut`] kernel must all emit identical fp16
+//! bit patterns. (The cross-*language* golden pins stay in
+//! `quant_cross_validation.rs`; this suite is the cross-*layer* sweep.)
+
+use consmax::hw::rtl::{ConsmaxUnitSim, SimInput};
+use consmax::quant::{merge_beta_gamma, BitSplitLut, Int8Quantizer};
+use consmax::runtime::backend::native;
+use consmax::util::fp16::F16;
+
+/// Power-of-two LUT scales worth sweeping: the paper's operating point
+/// plus one finer and one coarser grid.
+const SCALES: [f32; 3] = [1.0 / 16.0, 1.0 / 32.0, 1.0 / 8.0];
+
+/// Merged C = exp(-β)/γ constants spanning the regimes the models hit:
+/// the init point (β=2.5, γ=100), a trained-ish point, C == 1, a large
+/// C, and a tiny C near fp16 subnormals.
+fn c_values() -> Vec<F16> {
+    vec![
+        merge_beta_gamma(2.5, 100.0),
+        merge_beta_gamma(1.5, 100.0),
+        merge_beta_gamma(0.0, 1.0),
+        merge_beta_gamma(-2.0, 0.25),
+        merge_beta_gamma(8.0, 500.0),
+    ]
+}
+
+/// Every i8 code, in two's-complement table order (index = q as u8).
+fn all_codes() -> Vec<i8> {
+    (0..=255u8).map(|b| b as i8).collect()
+}
+
+#[test]
+fn response_table_matches_lut_for_every_code_and_c() {
+    // the serving path reads `response_table(c)`; the reference is the
+    // per-code LUT datapath exp(q)·C — all 256 entries, every C, every
+    // scale must agree bit-for-bit
+    for &scale in &SCALES {
+        let lut = BitSplitLut::new(scale);
+        for c in c_values() {
+            let table = lut.response_table(c);
+            for q in all_codes() {
+                assert_eq!(
+                    table[q as u8 as usize].to_bits(),
+                    lut.consmax(q, c).to_bits(),
+                    "scale {scale} c {} code {q}",
+                    c.to_f32()
+                );
+                assert_eq!(
+                    lut.consmax(q, c).to_bits(),
+                    lut.exp(q).mul(c).to_bits(),
+                    "scale {scale} c {} code {q}: consmax != exp*C",
+                    c.to_f32()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn rtl_pipeline_matches_lut_for_every_code() {
+    // the 3-stage hardware model must drain to exactly the LUT bits on
+    // the full input space, at every scale and C
+    for &scale in &SCALES {
+        let lut = BitSplitLut::new(scale);
+        for c in c_values() {
+            let codes = all_codes();
+            let mut sim = ConsmaxUnitSim::new(scale);
+            let probs = sim.run_stream(&codes, c);
+            assert_eq!(probs.len(), codes.len());
+            for (&q, p) in codes.iter().zip(&probs) {
+                assert_eq!(
+                    p.to_bits(),
+                    lut.consmax(q, c).to_bits(),
+                    "scale {scale} c {} code {q}",
+                    c.to_f32()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn rtl_pipeline_bubbles_do_not_corrupt_the_stream() {
+    // interleave bubbles between every valid input: the valid outputs
+    // must still be exactly the LUT bits, in order
+    let scale = 1.0 / 16.0;
+    let lut = BitSplitLut::new(scale);
+    let c = merge_beta_gamma(1.5, 100.0);
+    let mut sim = ConsmaxUnitSim::new(scale);
+    let mut got = Vec::new();
+    for q in all_codes() {
+        let o1 = sim.clock(SimInput { valid: true, score: q, c_const: c });
+        let o2 = sim.clock(SimInput::bubble());
+        for o in [o1, o2] {
+            if o.valid {
+                got.push(o.prob);
+            }
+        }
+    }
+    // drain the pipeline
+    for _ in 0..ConsmaxUnitSim::LATENCY {
+        let o = sim.clock(SimInput::bubble());
+        if o.valid {
+            got.push(o.prob);
+        }
+    }
+    let codes = all_codes();
+    assert_eq!(got.len(), codes.len());
+    for (&q, p) in codes.iter().zip(&got) {
+        assert_eq!(p.to_bits(), lut.consmax(q, c).to_bits(), "code {q}");
+    }
+}
+
+#[test]
+fn attend_consmax_lut_kernel_emits_table_bits_for_every_code() {
+    // the serving kernel end-to-end: head_dim 1, q = [1], unit scale and
+    // a unit V row make y exactly the probability, so each of the 256
+    // codes is recoverable bit-for-bit. Keys are exact dequantizations,
+    // which round-trip to their own code (exact_codes_roundtrip).
+    let lut = BitSplitLut::paper();
+    let quant = Int8Quantizer::paper();
+    let c = merge_beta_gamma(2.5, 100.0);
+    let table = lut.response_table(c);
+    for q in all_codes() {
+        let key = [quant.dequantize(q)];
+        let val = [1.0f32];
+        let mut y = [0.0f32];
+        native::attend_consmax_lut(
+            &[1.0f32],
+            &key,
+            &val,
+            1,
+            1.0,
+            &quant,
+            &table,
+            &mut y,
+        );
+        assert_eq!(
+            y[0].to_bits(),
+            table[q as u8 as usize].to_f32().to_bits(),
+            "code {q}"
+        );
+    }
+}
+
+#[test]
+fn saturation_routes_out_of_range_scores_to_the_rim_codes() {
+    // scores beyond the int8 grid must land exactly on the ±rim table
+    // entries — the serving path's clamp is part of the bit contract
+    let lut = BitSplitLut::paper();
+    let quant = Int8Quantizer::paper();
+    let c = merge_beta_gamma(1.5, 100.0);
+    let table = lut.response_table(c);
+    for (score, code) in [(1e9f32, 127i8), (-1e9, -128), (8.0, 127), (-8.5, -128)]
+    {
+        let mut y = [0.0f32];
+        native::attend_consmax_lut(
+            &[1.0f32],
+            &[score],
+            &[1.0f32],
+            1,
+            1.0,
+            &quant,
+            &table,
+            &mut y,
+        );
+        assert_eq!(
+            y[0].to_bits(),
+            table[code as u8 as usize].to_f32().to_bits(),
+            "score {score}"
+        );
+        assert_eq!(
+            table[code as u8 as usize].to_bits(),
+            lut.consmax(code, c).to_bits()
+        );
+    }
+}
+
+#[test]
+fn lut_rom_capacity_is_the_papers_512_bits() {
+    // the whole serving tail fits the paper's two 16-entry fp16 ROMs
+    assert_eq!(BitSplitLut::CAPACITY_BITS, 512);
+    let (msb, lsb) = BitSplitLut::paper().table_bits();
+    assert_eq!(msb.len() + lsb.len(), 32);
+}
