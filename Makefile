@@ -12,16 +12,17 @@ artifacts: bench-artifacts
 	cd python && python -m compile.aot --out $(ARTIFACTS_DIR)
 
 # Run the native perf benches (no Python needed) and collect their
-# machine-readable results next to the AOT artifacts. All five benches
+# machine-readable results next to the AOT artifacts. All six benches
 # enforce hard floors (KV >= 5x recompute; tiled matmul >= 2x naive;
 # continuous batching >= 1.5x static serving throughput; fp16/int8
 # paging >= 2x/3.5x dense resident requests at fixed memory; int8
-# serving within 0.25 nats of f32 eval loss), so this target is also a
-# perf and accuracy regression gate.
+# serving within 0.25 nats of f32 eval loss; native ConSmax-vs-softmax
+# training parity within 0.25 nats at a matched step budget), so this
+# target is also a perf and accuracy regression gate.
 bench-artifacts:
-	cd rust && cargo bench --bench decode_bench && cargo bench --bench forward_bench && cargo bench --bench serve_bench && cargo bench --bench kv_bench && cargo bench --bench quant_gate
+	cd rust && cargo bench --bench decode_bench && cargo bench --bench forward_bench && cargo bench --bench serve_bench && cargo bench --bench kv_bench && cargo bench --bench quant_gate && cargo bench --bench train_gate
 	mkdir -p $(BENCH_JSON_DIR)
-	cp rust/BENCH_decode.json rust/BENCH_forward.json rust/BENCH_serve.json rust/BENCH_kv.json rust/BENCH_quant.json $(BENCH_JSON_DIR)/
+	cp rust/BENCH_decode.json rust/BENCH_forward.json rust/BENCH_serve.json rust/BENCH_kv.json rust/BENCH_quant.json rust/BENCH_train.json $(BENCH_JSON_DIR)/
 	cp rust/BENCH_decode_raw.jsonl rust/BENCH_forward_raw.jsonl $(BENCH_JSON_DIR)/
 
 build:

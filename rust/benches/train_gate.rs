@@ -1,0 +1,159 @@
+//! Native training parity gate: the paper's Fig 6 claim — ConSmax
+//! trains to softmax-level loss — as a CI-enforced number
+//! (EXPERIMENTS.md §Native training, DESIGN.md §Training seam).
+//!
+//! Run: `cargo bench --bench train_gate` (native, no artifacts). Both
+//! normalizers train from the same seed on the same in-tree corpus for
+//! the same step budget through the native backward + AdamW stack,
+//! then score [`EVAL_BATCHES`] validation batches. The gate fails if
+//! either run failed to learn (final train loss not below initial) or
+//! if the ConSmax-vs-softmax eval-loss gap exceeds [`DELTA_GATE_NATS`].
+//!
+//! Emits `BENCH_train.json` and exits non-zero on a breach, so CI
+//! cannot ship a backward pass or optimizer change that silently
+//! breaks convergence parity.
+
+use consmax::config::ModelConfig;
+use consmax::coordinator::{NativeTrainer, ParamStore, TrainOptions};
+use consmax::data::{BatchSampler, ByteTokenizer, Corpus};
+use consmax::metrics::perplexity;
+use consmax::util::bench::print_table;
+use consmax::util::json::Json;
+
+/// Shared step budget. 60 steps of the tiny config put both curves
+/// well below their ln(256) ≈ 5.55 start while keeping the gate a
+/// sub-minute CI step; the parity claim is about matched budgets, not
+/// full convergence.
+const STEPS: usize = 60;
+/// Validation batches scored per normalizer (same count as `eval`).
+const EVAL_BATCHES: usize = 8;
+/// Parity gate: |consmax eval loss − softmax eval loss| must stay
+/// under this many nats after the same step budget. Measured gaps on
+/// the in-tree corpus sit well under 0.1 nats either way; 0.25 leaves
+/// room for seed-to-seed variance without letting a broken normalizer
+/// gradient through.
+const DELTA_GATE_NATS: f64 = 0.25;
+const SEED: u64 = 0;
+
+struct GateRow {
+    normalizer: &'static str,
+    initial_train_loss: f64,
+    final_train_loss: f64,
+    eval_loss: f64,
+}
+
+fn train_one(normalizer: &'static str) -> anyhow::Result<GateRow> {
+    let cfg = ModelConfig::builtin("tiny", normalizer)?;
+    let corpus = Corpus::tiny();
+    let (train_text, val_text) = corpus.split();
+    let tok = ByteTokenizer;
+    let train =
+        BatchSampler::new(tok.encode(train_text), cfg.train_batch, cfg.ctx, SEED);
+    let val =
+        BatchSampler::new(tok.encode(val_text), cfg.train_batch, cfg.ctx, SEED);
+    let store = ParamStore::init(&cfg, SEED)?;
+    let mut tr = NativeTrainer::new(cfg, store, train, Some(val));
+    let report = tr.train(&TrainOptions {
+        steps: STEPS,
+        log_every: 10,
+        eval_every: 0,
+        eval_batches: EVAL_BATCHES,
+        trace_params: false,
+        checkpoint: None,
+    })?;
+    let initial = tr
+        .metrics
+        .get("train_loss")
+        .and_then(|s| s.points.first().map(|&(_, v)| v))
+        .unwrap_or(f64::NAN);
+    Ok(GateRow {
+        normalizer,
+        initial_train_loss: initial,
+        final_train_loss: report.final_loss,
+        eval_loss: tr.evaluate(EVAL_BATCHES)?,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let rows = vec![train_one("softmax")?, train_one("consmax")?];
+
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.normalizer.to_string(),
+                format!("{:.4}", r.initial_train_loss),
+                format!("{:.4}", r.final_train_loss),
+                format!("{:.4}", r.eval_loss),
+                format!("{:.2}", perplexity(r.eval_loss)),
+            ]
+        })
+        .collect();
+    print_table(
+        &format!(
+            "Native training parity gate, tiny config ({STEPS} steps, \
+             {EVAL_BATCHES} val batches, gate |delta| < {DELTA_GATE_NATS} nats)"
+        ),
+        &["normalizer", "initial loss", "final loss", "eval loss", "eval ppl"],
+        &table,
+    );
+    let delta = rows[1].eval_loss - rows[0].eval_loss;
+    println!("\nConSmax-vs-softmax eval-loss delta: {delta:+.4} nats");
+
+    let mut pairs = vec![
+        ("bench".to_string(), Json::from("train")),
+        ("steps".to_string(), Json::from(STEPS)),
+        ("eval_batches".to_string(), Json::from(EVAL_BATCHES)),
+        ("delta_gate_nats".to_string(), Json::from(DELTA_GATE_NATS)),
+        ("delta_nats".to_string(), Json::from(delta)),
+        (
+            "threads".to_string(),
+            Json::from(consmax::runtime::parallel::current_threads()),
+        ),
+    ];
+    for r in &rows {
+        pairs.push((
+            r.normalizer.to_string(),
+            Json::from_pairs([
+                (
+                    "initial_train_loss".to_string(),
+                    Json::from(r.initial_train_loss),
+                ),
+                ("final_train_loss".to_string(), Json::from(r.final_train_loss)),
+                ("eval_loss".to_string(), Json::from(r.eval_loss)),
+                ("eval_ppl".to_string(), Json::from(perplexity(r.eval_loss))),
+            ]),
+        ));
+    }
+    let doc = Json::from_pairs(pairs);
+    std::fs::write("BENCH_train.json", doc.to_string())?;
+    println!("wrote BENCH_train.json");
+
+    let mut failed = false;
+    for r in &rows {
+        if !(r.final_train_loss < r.initial_train_loss) {
+            eprintln!(
+                "FAIL: {} did not learn (loss {:.4} -> {:.4} over {STEPS} \
+                 steps) — the native backward/optimizer stack is broken",
+                r.normalizer, r.initial_train_loss, r.final_train_loss
+            );
+            failed = true;
+        }
+    }
+    if !(delta.abs() < DELTA_GATE_NATS) {
+        eprintln!(
+            "FAIL: ConSmax-vs-softmax eval-loss delta {delta:+.4} nats \
+             breaches the {DELTA_GATE_NATS}-nat gate — Fig 6 convergence \
+             parity no longer holds on the native stack"
+        );
+        failed = true;
+    }
+    if failed {
+        std::process::exit(1);
+    }
+    println!(
+        "PASS: both normalizers learn and the eval-loss delta is within \
+         {DELTA_GATE_NATS} nats"
+    );
+    Ok(())
+}

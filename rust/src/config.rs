@@ -221,10 +221,9 @@ impl ModelConfig {
     /// a manifest IS present the two sources agree by construction (both
     /// derive from the same python presets) and the manifest wins.
     pub fn builtin(config: &str, normalizer: &str) -> Result<ModelConfig> {
-        match normalizer {
-            "softmax" | "consmax" | "softermax" => {}
-            other => bail!("unknown normalizer {other:?} (softmax|consmax|softermax)"),
-        }
+        // single source of truth for normalizer names: the Normalizer
+        // registry (DESIGN.md §Normalizer seam)
+        let norm = crate::runtime::backend::Normalizer::parse(normalizer)?;
         let (vocab, ctx, n_layer, n_head, n_embd, train_batch, total_steps) =
             match config {
                 "tiny" => (256usize, 64usize, 2usize, 2usize, 64usize, 4usize, 200usize),
@@ -232,7 +231,7 @@ impl ModelConfig {
                 other => bail!("unknown builtin config {other:?} (tiny|paper)"),
             };
         let (l, h, d) = (n_layer, n_head, n_embd);
-        let param_order: Vec<String> = [
+        let mut param_order: Vec<String> = [
             "wte", "wpe", "ln1_g", "ln1_b", "attn_qkv_w", "attn_qkv_b",
             "attn_proj_w", "attn_proj_b", "beta", "gamma", "ln2_g", "ln2_b",
             "mlp_fc_w", "mlp_fc_b", "mlp_proj_w", "mlp_proj_b", "lnf_g",
@@ -241,7 +240,7 @@ impl ModelConfig {
         .iter()
         .map(|s| s.to_string())
         .collect();
-        let shapes: Vec<(&str, Vec<usize>)> = vec![
+        let mut shapes: Vec<(&str, Vec<usize>)> = vec![
             ("wte", vec![vocab, d]),
             ("wpe", vec![ctx, d]),
             ("ln1_g", vec![l, d]),
@@ -261,6 +260,12 @@ impl ModelConfig {
             ("lnf_g", vec![d]),
             ("lnf_b", vec![d]),
         ];
+        // zoo members with extra learnables (e.g. ssmax's per-head
+        // scale) append them after the shared 18-tensor schema
+        for extra in norm.extra_params() {
+            param_order.push(extra.to_string());
+            shapes.push((extra, vec![l, h]));
+        }
         let param_shapes: BTreeMap<String, Vec<usize>> = shapes
             .into_iter()
             .map(|(n, s)| (n.to_string(), s))
@@ -563,6 +568,27 @@ mod tests {
     fn builtin_rejects_unknowns() {
         assert!(ModelConfig::builtin("huge", "consmax").is_err());
         assert!(ModelConfig::builtin("tiny", "sparsemax").is_err());
+    }
+
+    #[test]
+    fn builtin_accepts_the_full_normalizer_zoo() {
+        for norm in crate::runtime::backend::Normalizer::NAMES {
+            let c = ModelConfig::builtin("tiny", norm).unwrap();
+            assert_eq!(c.normalizer, norm);
+        }
+    }
+
+    #[test]
+    fn builtin_ssmax_appends_its_scale_param() {
+        let c = ModelConfig::builtin("tiny", "ssmax").unwrap();
+        assert_eq!(c.param_order.len(), 19);
+        assert_eq!(c.param_order.last().unwrap(), "ssmax_s");
+        assert_eq!(c.shape_of("ssmax_s").unwrap(), &[2, 2]);
+        // the shared 18-tensor schema is untouched for the rest of the zoo
+        for norm in ["softmax", "consmax", "softermax", "consmax-v2"] {
+            let c = ModelConfig::builtin("tiny", norm).unwrap();
+            assert_eq!(c.param_order.len(), 18, "{norm}");
+        }
     }
 
     #[test]

@@ -4,9 +4,10 @@
 //! * [`server`] — batched generation service over the pluggable
 //!   [`Generator`] (native KV-cached decode with a recompute oracle
 //!   escape hatch, or PJRT KV-cached decode).
-//! * [`trainer`] (`--features pjrt`) — the training loop over the AOT
-//!   `train_step` (Fig 6/7). Training needs autodiff, which only the
-//!   AOT path provides; evaluation/generation also run natively.
+//! * [`trainer`] — the training loops (Fig 6/7): the always-available
+//!   [`NativeTrainer`] over the hand-derived native backward + AdamW
+//!   (DESIGN.md §Training seam), and the PJRT [`Trainer`] over the AOT
+//!   fused `train_step` (`--features pjrt`).
 //! * [`sweep`] (`--features pjrt`) — β/γ initialization grid (Fig 8).
 //!
 //! The paper's contribution lives at L1/L2 (the normalizer) and in the
@@ -18,7 +19,6 @@ pub mod report;
 pub mod server;
 #[cfg(feature = "pjrt")]
 pub mod sweep;
-#[cfg(feature = "pjrt")]
 pub mod trainer;
 
 pub use params::ParamStore;
@@ -30,4 +30,5 @@ pub use server::{
 #[cfg(feature = "pjrt")]
 pub use sweep::{best_point, sweep_init, SweepOptions, SweepPoint};
 #[cfg(feature = "pjrt")]
-pub use trainer::{TrainOptions, TrainReport, Trainer};
+pub use trainer::Trainer;
+pub use trainer::{NativeTrainer, TrainOptions, TrainReport};

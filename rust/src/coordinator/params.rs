@@ -58,6 +58,10 @@ impl ParamStore {
                     .map(|_| rng.range_f64(0.5, cfg.beta_init.max(0.5001)) as f32)
                     .collect(),
                 "gamma" => vec![cfg.gamma_init as f32; n],
+                // ssmax's learnable per-head scale: s·ln(n) ≈ 1 at the
+                // tiny/paper context lengths, matching the paper's
+                // reported trained value s ≈ 0.43
+                "ssmax_s" => vec![0.43; n],
                 other => bail!("no init rule for param {other:?}"),
             };
             params.push(HostTensor::from_f32(&vals, &shape));
@@ -86,6 +90,19 @@ impl ParamStore {
 
     pub fn param_count(&self) -> usize {
         self.params.iter().map(HostTensor::elems).sum()
+    }
+
+    /// Overwrite every β/γ entry with fixed values (the `--beta0` /
+    /// `--gamma0` sweep knobs): pins the whole per-(layer, head) grid so
+    /// init-sensitivity runs start from a controlled point.
+    pub fn pin_beta_gamma(&mut self, beta0: f32, gamma0: f32) {
+        for (name, val) in [("beta", beta0), ("gamma", gamma0)] {
+            if let Some(i) = self.index_of(name) {
+                let shape = self.params[i].shape.clone();
+                let vals = vec![val; self.params[i].elems()];
+                self.params[i] = HostTensor::from_f32(&vals, &shape);
+            }
+        }
     }
 
     // ---- checkpointing -----------------------------------------------------

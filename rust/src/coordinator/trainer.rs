@@ -1,19 +1,24 @@
-//! Training orchestrator (`--features pjrt`): owns the parameter state,
-//! feeds the AOT `train_step` executable, and records the metrics the
-//! paper's software evaluation plots (Fig 6 loss/perplexity curves,
-//! Fig 7 β/γ traces).
+//! Training orchestrators: own the parameter state, run the train step,
+//! and record the metrics behind the paper's software evaluation plots
+//! (Fig 6 loss/perplexity curves, Fig 7 β/γ traces).
 //!
-//! This module is the one coordinator component pinned to the PJRT
-//! backend: the fused fwd+bwd+AdamW step exists only as an AOT artifact
-//! (the native backend is forward-only — see
-//! `runtime::backend::NativeModel`). Evaluation of a trained checkpoint
-//! does not need this module; `consmax eval --backend native` scores
-//! checkpoints through the native forward pass.
+//! Two interchangeable drivers share [`TrainOptions`], [`TrainReport`],
+//! and the metric naming scheme (DESIGN.md §Training seam):
 //!
-//! The hot loop keeps params + moments as PJRT literals: the train-step
-//! outputs of step *t* are the inputs of step *t+1* without a host
-//! round-trip; only the scalar loss (and, at log points, the tiny β/γ
-//! tensors) are copied back.
+//! * [`NativeTrainer`] — always available. Runs
+//!   `NativeModel::forward_train` + `backward` plus the python-faithful
+//!   [`adamw_step`] below (same β₁/β₂/ε, decay set, global-norm clip,
+//!   and warmup+cosine [`lr_at`] schedule as `python/compile/model.py`),
+//!   so `consmax train --backend native` reproduces Fig 6/7 from a bare
+//!   checkout — no PJRT, no artifacts.
+//! * [`Trainer`] (`--features pjrt`) — feeds the AOT fused
+//!   fwd+bwd+AdamW `train_step` executable, keeping params + moments as
+//!   PJRT literals across steps (only the scalar loss and, at log
+//!   points, the tiny β/γ tensors are copied back).
+//!
+//! The two trainers follow the same update rule; they differ in where
+//! the autodiff runs (hand-derived Rust kernels vs XLA), so their loss
+//! curves agree statistically, not bitwise.
 
 use std::path::PathBuf;
 use std::time::Instant;
@@ -24,7 +29,10 @@ use crate::config::ModelConfig;
 use crate::coordinator::params::ParamStore;
 use crate::data::BatchSampler;
 use crate::metrics::{perplexity, Metrics};
-use crate::runtime::{Engine, HostTensor};
+use crate::runtime::backend::NativeModel;
+use crate::runtime::HostTensor;
+#[cfg(feature = "pjrt")]
+use crate::runtime::Engine;
 
 /// Options for one training run.
 #[derive(Debug, Clone)]
@@ -62,6 +70,7 @@ pub struct TrainReport {
     pub steps_per_s: f64,
 }
 
+#[cfg(feature = "pjrt")]
 pub struct Trainer<'e> {
     pub engine: &'e Engine,
     pub cfg: ModelConfig,
@@ -71,6 +80,7 @@ pub struct Trainer<'e> {
     pub metrics: Metrics,
 }
 
+#[cfg(feature = "pjrt")]
 impl<'e> Trainer<'e> {
     pub fn new(
         engine: &'e Engine,
@@ -291,5 +301,283 @@ impl<'e> Trainer<'e> {
             total += HostTensor::from_literal(&outs[0])?.scalar_as_f32()? as f64;
         }
         Ok(total / batches.len() as f64)
+    }
+}
+
+// ---- native training (no PJRT) ---------------------------------------------
+
+/// AdamW hyperparameters shared with `python/compile/model.py`.
+const ADAM_B1: f64 = 0.9;
+const ADAM_B2: f64 = 0.95;
+const ADAM_EPS: f64 = 1e-8;
+const WEIGHT_DECAY: f64 = 0.1;
+const LR_MAX: f64 = 1e-3;
+const LR_MIN: f64 = 1e-4;
+
+/// Parameters that get weight decay (matrices; everything else — biases,
+/// LayerNorm gains, β/γ/ssmax_s — is decay-free, as in python).
+const DECAY_SET: [&str; 5] =
+    ["wte", "attn_qkv_w", "attn_proj_w", "mlp_fc_w", "mlp_proj_w"];
+
+/// Linear-warmup + cosine-decay learning rate, python-identical:
+/// warmup is `max(1, total/20)` steps ramping to `1e-3`, then cosine
+/// down to `1e-4` over the remainder.
+pub fn lr_at(step: u64, total_steps: usize) -> f64 {
+    let warmup = (total_steps / 20).max(1) as f64;
+    let s = step as f64;
+    if s < warmup {
+        LR_MAX * (s + 1.0) / warmup
+    } else {
+        let denom = (total_steps as f64 - warmup).max(1.0);
+        let prog = ((s - warmup) / denom).clamp(0.0, 1.0);
+        LR_MIN
+            + 0.5 * (LR_MAX - LR_MIN) * (1.0 + (std::f64::consts::PI * prog).cos())
+    }
+}
+
+/// One std-only AdamW update over the whole [`ParamStore`], faithful to
+/// the python reference step: global-norm clip to 1.0, bias-corrected
+/// moments, decoupled weight decay on [`DECAY_SET`] only. `grads` must
+/// hold one canonical-shape gradient per store entry (the shape
+/// [`NativeModel::backward`] returns). Returns the pre-clip global
+/// gradient norm.
+pub fn adamw_step(
+    store: &mut ParamStore,
+    grads: &std::collections::BTreeMap<String, Vec<f32>>,
+    cfg: &ModelConfig,
+    step: u64,
+) -> Result<f64> {
+    let mut sq = 0.0f64;
+    for name in &store.order {
+        let g = grads
+            .get(name)
+            .with_context(|| format!("missing gradient for {name}"))?;
+        for &v in g {
+            sq += (v as f64) * (v as f64);
+        }
+    }
+    let gnorm = sq.sqrt();
+    let clip = (1.0 / (gnorm + 1e-6)).min(1.0);
+    let lr = lr_at(step, cfg.total_steps);
+    let t = (step + 1) as i32;
+    let bc1 = 1.0 - ADAM_B1.powi(t);
+    let bc2 = 1.0 - ADAM_B2.powi(t);
+
+    for i in 0..store.order.len() {
+        let name = store.order[i].clone();
+        let wd = if DECAY_SET.contains(&name.as_str()) { WEIGHT_DECAY } else { 0.0 };
+        let g = &grads[&name];
+        let mut p = store.params[i].as_f32()?;
+        let mut m = store.m[i].as_f32()?;
+        let mut v = store.v[i].as_f32()?;
+        for j in 0..p.len() {
+            let gj = g[j] as f64 * clip;
+            let mj = ADAM_B1 * m[j] as f64 + (1.0 - ADAM_B1) * gj;
+            let vj = ADAM_B2 * v[j] as f64 + (1.0 - ADAM_B2) * gj * gj;
+            m[j] = mj as f32;
+            v[j] = vj as f32;
+            let mhat = mj / bc1;
+            let vhat = vj / bc2;
+            let upd = mhat / (vhat.sqrt() + ADAM_EPS) + wd * p[j] as f64;
+            p[j] = (p[j] as f64 - lr * upd) as f32;
+        }
+        let shape = store.params[i].shape.clone();
+        store.params[i] = HostTensor::from_f32(&p, &shape);
+        store.m[i] = HostTensor::from_f32(&m, &shape);
+        store.v[i] = HostTensor::from_f32(&v, &shape);
+    }
+    Ok(gnorm)
+}
+
+/// Pure-Rust training orchestrator: the same loop shape, metric names,
+/// and [`TrainOptions`]/[`TrainReport`] contract as the PJRT
+/// [`Trainer`], driven by the native tape + hand-derived backward
+/// (`runtime::backend::train`) and [`adamw_step`]. Always compiled in —
+/// `consmax train --backend native` works from a bare checkout.
+pub struct NativeTrainer {
+    pub cfg: ModelConfig,
+    pub store: ParamStore,
+    pub train_sampler: BatchSampler,
+    pub val_sampler: Option<BatchSampler>,
+    pub metrics: Metrics,
+}
+
+impl NativeTrainer {
+    pub fn new(
+        cfg: ModelConfig,
+        store: ParamStore,
+        train_sampler: BatchSampler,
+        val_sampler: Option<BatchSampler>,
+    ) -> NativeTrainer {
+        NativeTrainer {
+            cfg,
+            store,
+            train_sampler,
+            val_sampler,
+            metrics: Metrics::new(),
+        }
+    }
+
+    fn model(&self) -> Result<NativeModel> {
+        NativeModel::from_params(&self.cfg, &self.store.order, &self.store.params)
+    }
+
+    /// Run the training loop.
+    pub fn train(&mut self, opts: &TrainOptions) -> Result<TrainReport> {
+        let (b, t) = (self.cfg.train_batch, self.cfg.ctx);
+        let t0 = Instant::now();
+        let mut final_loss = f64::NAN;
+        let mut best_val = None::<f64>;
+        let start_step = self.store.step;
+
+        for local in 0..opts.steps {
+            let step = start_step + local as u64;
+            let (x, y) = self.train_sampler.sample();
+            let model = self.model()?;
+            let tape = model.forward_train(&x, &y, b, t)?;
+            let grads = model.backward(&tape, &x, &y)?;
+            let gnorm = adamw_step(&mut self.store, &grads, &self.cfg, step)?;
+            let loss = tape.loss;
+            final_loss = loss;
+
+            if !loss.is_finite() {
+                anyhow::bail!("loss diverged (NaN/Inf) at step {step}");
+            }
+
+            if local % opts.log_every == 0 || local + 1 == opts.steps {
+                self.metrics.log("train_loss", step, loss);
+                self.metrics.log("train_ppl", step, perplexity(loss));
+                self.metrics.log("grad_norm", step, gnorm);
+                if opts.trace_params {
+                    self.trace_learnables(step)?;
+                }
+                log::info!(
+                    "step {step}: loss {loss:.4} ppl {:.1} gnorm {gnorm:.2}",
+                    perplexity(loss)
+                );
+            }
+
+            if opts.eval_every > 0 && local > 0 && local % opts.eval_every == 0 {
+                let val = self.evaluate(opts.eval_batches)?;
+                self.metrics.log("val_loss", step, val);
+                self.metrics.log("val_ppl", step, perplexity(val));
+                best_val = Some(best_val.map_or(val, |bv: f64| bv.min(val)));
+            }
+        }
+        self.store.step = start_step + opts.steps as u64;
+
+        if let Some(path) = &opts.checkpoint {
+            self.store.save(path)?;
+        }
+
+        let wall = t0.elapsed().as_secs_f64();
+        Ok(TrainReport {
+            final_loss,
+            final_ppl: perplexity(final_loss),
+            best_val_loss: best_val,
+            steps: opts.steps,
+            wall_s: wall,
+            steps_per_s: opts.steps as f64 / wall,
+        })
+    }
+
+    /// Log per-(layer, head) normalizer learnables (Fig 7 traces): β/γ
+    /// plus ssmax's scale when the schema carries it. Same metric names
+    /// as the PJRT trainer (`beta_l{l}h{h}`, ...).
+    fn trace_learnables(&mut self, step: u64) -> Result<()> {
+        for name in ["beta", "gamma", "ssmax_s"] {
+            let Some(t) = self.store.get(name) else { continue };
+            let vals = t.as_f32()?;
+            let heads = self.cfg.n_head;
+            for (i, v) in vals.iter().enumerate() {
+                let (l, h) = (i / heads, i % heads);
+                self.metrics.log(&format!("{name}_l{l}h{h}"), step, *v as f64);
+            }
+        }
+        Ok(())
+    }
+
+    /// Mean validation loss over up to `max_batches` deterministic
+    /// batches through the native forward.
+    pub fn evaluate(&self, max_batches: usize) -> Result<f64> {
+        let sampler = self.val_sampler.as_ref().unwrap_or(&self.train_sampler);
+        let batches = sampler.eval_batches(max_batches);
+        anyhow::ensure!(!batches.is_empty(), "validation stream too small");
+        let model = self.model()?;
+        let (b, t) = (self.cfg.train_batch, self.cfg.ctx);
+        let mut total = 0.0;
+        for (x, y) in &batches {
+            total += model.loss(x, y, b, t)?;
+        }
+        Ok(total / batches.len() as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_matches_python_shape() {
+        // tiny preset: 200 steps -> 10 warmup steps
+        assert!((lr_at(0, 200) - 1e-4).abs() < 1e-12);
+        assert!((lr_at(9, 200) - 1e-3).abs() < 1e-12);
+        // cosine starts exactly at LR_MAX and ends at LR_MIN
+        assert!((lr_at(10, 200) - 1e-3).abs() < 1e-9);
+        assert!((lr_at(10_000, 200) - 1e-4).abs() < 1e-12);
+        // monotone decay after warmup
+        assert!(lr_at(50, 200) > lr_at(150, 200));
+    }
+
+    #[test]
+    fn adamw_zero_grad_only_decays_the_decay_set() {
+        let cfg = ModelConfig::builtin("tiny", "consmax").unwrap();
+        let mut store = ParamStore::init(&cfg, 0).unwrap();
+        let grads: std::collections::BTreeMap<String, Vec<f32>> = cfg
+            .param_order
+            .iter()
+            .map(|n| {
+                let sz: usize =
+                    cfg.shape_of(n).unwrap().iter().product();
+                (n.clone(), vec![0.0f32; sz])
+            })
+            .collect();
+        let before_beta = store.get("beta").unwrap().as_f32().unwrap();
+        let before_wte = store.get("wte").unwrap().as_f32().unwrap();
+        let gnorm = adamw_step(&mut store, &grads, &cfg, 0).unwrap();
+        assert_eq!(gnorm, 0.0);
+        // no decay on the normalizer learnables
+        assert_eq!(store.get("beta").unwrap().as_f32().unwrap(), before_beta);
+        // decoupled weight decay still shrinks the matrices
+        let after_wte = store.get("wte").unwrap().as_f32().unwrap();
+        let lr = lr_at(0, cfg.total_steps);
+        for (a, b) in before_wte.iter().zip(&after_wte) {
+            let want = (*a as f64 * (1.0 - lr * WEIGHT_DECAY)) as f32;
+            assert!((b - want).abs() <= 1e-7, "{a} -> {b}");
+        }
+    }
+
+    #[test]
+    fn adamw_moves_params_against_the_gradient() {
+        let cfg = ModelConfig::builtin("tiny", "consmax").unwrap();
+        let mut store = ParamStore::init(&cfg, 1).unwrap();
+        let mut grads: std::collections::BTreeMap<String, Vec<f32>> = cfg
+            .param_order
+            .iter()
+            .map(|n| {
+                let sz: usize =
+                    cfg.shape_of(n).unwrap().iter().product();
+                (n.clone(), vec![0.0f32; sz])
+            })
+            .collect();
+        // positive gradient on beta -> beta must decrease (no decay term)
+        grads.get_mut("beta").unwrap().fill(1.0);
+        let before = store.get("beta").unwrap().as_f32().unwrap();
+        let gnorm = adamw_step(&mut store, &grads, &cfg, 0).unwrap();
+        assert!(gnorm > 0.0);
+        let after = store.get("beta").unwrap().as_f32().unwrap();
+        for (b, a) in before.iter().zip(&after) {
+            assert!(a < b, "{b} -> {a}");
+        }
     }
 }

@@ -18,15 +18,16 @@
 //!
 //! Execution is backend-pluggable ([`runtime::Backend`], DESIGN.md §4):
 //!
-//! * the **native** backend re-implements the L1 kernels (and a
-//!   forward-only GPT) in pure Rust, so evaluation, generation, serving,
-//!   the hardware report and the pipeline simulation all run from a bare
-//!   checkout — no Python, no PJRT, no artifacts;
+//! * the **native** backend re-implements the L1 kernels (and a fully
+//!   differentiable GPT — forward, activation tape, backward) in pure
+//!   Rust, so training, evaluation, generation, serving, the hardware
+//!   report and the pipeline simulation all run from a bare checkout —
+//!   no Python, no PJRT, no artifacts (DESIGN.md §Training seam);
 //! * the **pjrt** backend (`--features pjrt`) executes the AOT artifacts:
 //!   `make artifacts` lowers the JAX entry points to
 //!   `artifacts/*.hlo.txt`, and [`runtime::Engine`] loads and executes
-//!   them through PJRT (`xla` crate). Training (fused fwd+bwd+AdamW)
-//!   lives only here.
+//!   them through PJRT (`xla` crate) — the fused single-dispatch
+//!   train/eval/decode steps, plus the Fig 8 init sweep.
 //!
 //! See `DESIGN.md` for the experiment index and backend-selection matrix,
 //! and `EXPERIMENTS.md` for paper-vs-measured results.

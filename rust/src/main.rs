@@ -1,8 +1,8 @@
 //! `consmax` — the coordinator CLI.
 //!
 //! ```text
-//! consmax train        train a GPT variant via the AOT train-step (pjrt)
-//! consmax compare      Fig 6: train softmax vs consmax on identical data (pjrt)
+//! consmax train        train a GPT variant (native backward, or AOT pjrt)
+//! consmax compare      Fig 6: train softmax vs consmax on identical data
 //! consmax eval         validation loss/perplexity of a checkpoint
 //! consmax sweep-init   Fig 8: β/γ initialization grid (pjrt)
 //! consmax generate     sample text from a checkpoint
@@ -12,11 +12,13 @@
 //! consmax info         backend, op and model-config summary
 //! ```
 //!
-//! Backend selection (`--backend native|pjrt|auto`): `sim`, `hw-report`,
-//! `eval`, `generate`, `serve-demo` and `info` run end-to-end on the
-//! pure-Rust native backend — no Python, no PJRT, no `artifacts/`.
-//! Training subcommands need the AOT train step (`--features pjrt` +
-//! `make artifacts`).
+//! Backend selection (`--backend native|pjrt|auto`): everything except
+//! `sweep-init` runs end-to-end on the pure-Rust native backend — no
+//! Python, no PJRT, no `artifacts/`. `consmax train --backend native`
+//! uses the hand-derived backward + AdamW in
+//! `runtime::backend::train` / `coordinator::trainer` (DESIGN.md
+//! §Training seam); `--backend pjrt` keeps the fused AOT train step
+//! (`--features pjrt` + `make artifacts`).
 
 use std::path::PathBuf;
 
@@ -24,14 +26,17 @@ use anyhow::{bail, Result};
 
 use consmax::config::{KvCacheConfig, KvDtype, ModelConfig, QuantMode};
 #[cfg(feature = "pjrt")]
+use consmax::coordinator::{best_point, sweep_init, SweepOptions, Trainer};
 use consmax::coordinator::{
-    best_point, sweep_init, SweepOptions, TrainOptions, Trainer,
+    DecodeMode, GenRequest, Generator, NativeTrainer, ParamStore, Server,
+    TrainOptions,
 };
-use consmax::coordinator::{DecodeMode, GenRequest, Generator, ParamStore, Server};
 use consmax::data::{BatchSampler, ByteTokenizer, Corpus};
 use consmax::hw::{savings, table1, EdaFlow};
 use consmax::metrics::perplexity;
-use consmax::runtime::backend::{create_backend, Backend, BackendChoice, NativeModel};
+use consmax::runtime::backend::{
+    create_backend, Backend, BackendChoice, NativeModel, Normalizer,
+};
 #[cfg(feature = "pjrt")]
 use consmax::runtime::Engine;
 use consmax::sim::{simulate, NormKind, Schedule, Workload};
@@ -46,7 +51,7 @@ fn specs() -> Vec<Spec> {
         Spec::opt("threads", "native worker threads (default: CONSMAX_THREADS or all cores)"),
         Spec::opt_default("artifacts", "artifacts", "artifacts directory (pjrt)"),
         Spec::opt_default("config", "tiny", "model config (tiny|paper)"),
-        Spec::opt_default("normalizer", "consmax", "softmax|consmax|softermax"),
+        Spec::opt_default("normalizer", "consmax", Normalizer::HELP),
         Spec::opt_default("steps", "100", "training steps"),
         Spec::opt_default("seed", "0", "RNG seed"),
         Spec::opt_default("corpus", "tiny", "tiny|synthetic|<path>"),
@@ -137,8 +142,8 @@ fn main() {
                 "consmax",
                 "ConSmax paper reproduction coordinator",
                 &[
-                    ("train", "train a GPT variant via the AOT train-step (pjrt)"),
-                    ("compare", "Fig 6: softmax vs consmax on identical data (pjrt)"),
+                    ("train", "train a GPT variant (native backward or AOT pjrt)"),
+                    ("compare", "Fig 6: softmax vs consmax on identical data"),
                     ("eval", "validation loss of a checkpoint"),
                     ("sweep-init", "Fig 8: beta/gamma initialization grid (pjrt)"),
                     ("generate", "sample text from a checkpoint"),
@@ -280,7 +285,6 @@ fn build_trainer<'e>(
     Trainer::new(engine, &key, store, train, Some(val))
 }
 
-#[cfg(feature = "pjrt")]
 fn train_opts(args: &Args) -> Result<TrainOptions> {
     Ok(TrainOptions {
         steps: args.get_usize("steps", 100)?,
@@ -293,16 +297,122 @@ fn train_opts(args: &Args) -> Result<TrainOptions> {
 }
 
 // ---------------------------------------------------------------------------
-// training-family subcommands (AOT train step -> pjrt only)
+// training-family subcommands (native backward everywhere; AOT on pjrt)
 // ---------------------------------------------------------------------------
 
+/// Build the native trainer: builtin config + in-tree corpus split +
+/// init-or-load parameter store. Mirrors the PJRT `build_trainer`.
+fn build_native_trainer(args: &Args, normalizer: &str) -> Result<NativeTrainer> {
+    let cfg = ModelConfig::builtin(&args.get_string("config", "tiny"), normalizer)?;
+    let seed = args.get_u64("seed", 0)?;
+    let corpus = load_corpus(args)?;
+    let (train_text, val_text) = corpus.split();
+    let tok = ByteTokenizer;
+    let train =
+        BatchSampler::new(tok.encode(train_text), cfg.train_batch, cfg.ctx, seed);
+    let val =
+        BatchSampler::new(tok.encode(val_text), cfg.train_batch, cfg.ctx, seed);
+    let mut store = match args.get("checkpoint") {
+        Some(p) if std::path::Path::new(p).exists() => {
+            ParamStore::load(std::path::Path::new(p), &cfg)?
+        }
+        _ => ParamStore::init(&cfg, seed)?,
+    };
+    if let (Some(b), Some(g)) = (args.get("beta0"), args.get("gamma0")) {
+        let b: f32 = b.parse().map_err(|_| anyhow::anyhow!("bad beta0"))?;
+        let g: f32 = g.parse().map_err(|_| anyhow::anyhow!("bad gamma0"))?;
+        store.pin_beta_gamma(b, g);
+        log::info!("pinned beta0={b} gamma0={g}");
+    }
+    log::info!(
+        "model {}: {} params, corpus {} ({} bytes)",
+        cfg.key,
+        store.param_count(),
+        corpus.name,
+        corpus.len_bytes()
+    );
+    Ok(NativeTrainer::new(cfg, store, train, Some(val)))
+}
+
+fn run_train_family(cmd: &str, args: &Args) -> Result<()> {
+    if wants_pjrt(args)? {
+        return run_train_family_pjrt(cmd, args);
+    }
+    match cmd {
+        "train" => {
+            let normalizer = args.get_string("normalizer", "consmax");
+            let mut tr = build_native_trainer(args, &normalizer)?;
+            let report = tr.train(&train_opts(args)?)?;
+            let out = PathBuf::from(args.get_string("out", "runs"))
+                .join(format!("{}_train.jsonl", tr.cfg.key));
+            tr.metrics.save(&out)?;
+            let first = tr
+                .metrics
+                .get("train_loss")
+                .and_then(|s| s.points.first().map(|&(_, v)| v))
+                .unwrap_or(report.final_loss);
+            println!(
+                "trained {} steps (native backward): loss {first:.4} -> {:.4} \
+                 ({}), ppl {:.1}, {:.2} steps/s; metrics -> {}",
+                report.steps,
+                report.final_loss,
+                if report.final_loss < first { "decreased" } else { "increased" },
+                report.final_ppl,
+                report.steps_per_s,
+                out.display()
+            );
+            Ok(())
+        }
+        "compare" => {
+            let mut rows = Vec::new();
+            for norm in ["softmax", "consmax"] {
+                let mut tr = build_native_trainer(args, norm)?;
+                let mut opts = train_opts(args)?;
+                opts.checkpoint = Some(
+                    PathBuf::from(args.get_string("out", "runs"))
+                        .join(format!("{}_compare.ckpt", tr.cfg.key)),
+                );
+                let report = tr.train(&opts)?;
+                let val = tr.evaluate(4)?;
+                let out = PathBuf::from(args.get_string("out", "runs"))
+                    .join(format!("{}_compare.jsonl", tr.cfg.key));
+                tr.metrics.save(&out)?;
+                rows.push(vec![
+                    norm.to_string(),
+                    format!("{:.4}", report.final_loss),
+                    format!("{:.1}", report.final_ppl),
+                    format!("{:.4}", val),
+                    format!("{:.1}", perplexity(val)),
+                ]);
+            }
+            print_table(
+                "Fig 6 reproduction: Softmax vs ConSmax (same data, same seed, \
+                 native backward)",
+                &["normalizer", "train loss", "train ppl", "val loss", "val ppl"],
+                &rows,
+            );
+            let sm: f64 = rows[0][3].parse().unwrap();
+            let cs: f64 = rows[1][3].parse().unwrap();
+            println!(
+                "\nConSmax val-loss gap vs Softmax: {:+.2}%",
+                (cs - sm) / sm * 100.0
+            );
+            Ok(())
+        }
+        // the warmup grid drives many short runs through the fused AOT
+        // step; it has no native leg yet
+        "sweep-init" => Err(pjrt_unavailable("`consmax sweep-init` (AOT warmup grid)")),
+        other => bail!("unknown training subcommand {other:?}"),
+    }
+}
+
 #[cfg(not(feature = "pjrt"))]
-fn run_train_family(cmd: &str, _args: &Args) -> Result<()> {
-    Err(pjrt_unavailable(&format!("`consmax {cmd}` (AOT train step)")))
+fn run_train_family_pjrt(cmd: &str, _args: &Args) -> Result<()> {
+    Err(pjrt_unavailable(&format!("`consmax {cmd} --backend pjrt`")))
 }
 
 #[cfg(feature = "pjrt")]
-fn run_train_family(cmd: &str, args: &Args) -> Result<()> {
+fn run_train_family_pjrt(cmd: &str, args: &Args) -> Result<()> {
     match cmd {
         "train" => {
             let engine = Engine::new(args.get_string("artifacts", "artifacts"))?;
@@ -708,7 +818,7 @@ fn run_info(args: &Args) -> Result<()> {
     }
     println!("builtin configs (no artifacts needed):");
     for config in ["tiny", "paper"] {
-        for norm in ["consmax", "softmax", "softermax"] {
+        for norm in Normalizer::NAMES {
             let cfg = ModelConfig::builtin(config, norm)?;
             println!(
                 "  {}: {}L/{}H/{}d ctx {} vocab {} ({} params)",

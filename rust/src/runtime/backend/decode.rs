@@ -95,8 +95,9 @@ pub(crate) struct RowScratch {
     pub qkv: Vec<f32>,
     /// Concatenated attention head outputs (`n_embd`).
     pub y: Vec<f32>,
-    /// Score row over cached positions (`ctx`; softmax/softermax only —
-    /// the ConSmax path streams and never materializes it).
+    /// Score row over cached positions (`ctx`; reducing normalizers —
+    /// softmax, softermax, ssmax — only: the streaming ConSmax family
+    /// never materializes it).
     pub srow: Vec<f32>,
     /// MLP hidden activations (`4 * n_embd`).
     pub hid: Vec<f32>,

@@ -22,6 +22,11 @@
 //! [`DecodeSession`] + `NativeModel::{prefill, decode_step}` form the
 //! KV-cached decode engine that serving runs on (DESIGN.md §Decode
 //! seam); `NativeModel::next_logits` stays as the recompute oracle.
+//! Score normalization itself is behind the [`Normalizer`] seam
+//! (DESIGN.md §Normalizer seam) — one enum resolved at model load that
+//! owns the forward kernels, parameter schema, and backward rule of
+//! every zoo member — and the `train` module builds the native
+//! differentiable training stack on top (DESIGN.md §Training seam).
 //!
 //! [`Engine`]: crate::runtime::Engine
 
@@ -29,6 +34,8 @@ pub mod decode;
 pub mod kvcache;
 pub mod model;
 pub mod native;
+pub mod normalizer;
+pub mod train;
 
 use std::path::Path;
 
@@ -40,6 +47,8 @@ pub use decode::DecodeSession;
 pub use kvcache::{KvPool, KvStats};
 pub use model::NativeModel;
 pub use native::NativeBackend;
+pub use normalizer::{HeadNorm, Normalizer};
+pub use train::TrainTape;
 
 /// An execution backend: runs named ops over host tensors.
 pub trait Backend {

@@ -3,11 +3,13 @@
 //! evaluation, generation and serving when no PJRT artifacts exist.
 //!
 //! Semantics mirror the JAX model exactly: pre-LN blocks, causal
-//! attention with the configured score normalizer (softmax | consmax |
-//! softermax), tanh-approximate GELU, tied LM head. ConSmax runs in its
-//! *training* form `exp(s - β)/γ` with per-(layer, head) scalars — the
-//! same probabilities the inference form `C·exp(s)` produces once β/γ are
-//! merged (asserted in `native.rs` tests).
+//! attention with the configured score normalizer (the [`Normalizer`]
+//! zoo: softmax | consmax | softermax | consmax-v2 | ssmax, resolved
+//! once at load — DESIGN.md §Normalizer seam), tanh-approximate GELU,
+//! tied LM head. ConSmax runs in its *training* form `exp(s - β)/γ`
+//! with per-(layer, head) scalars — the same probabilities the
+//! inference form `C·exp(s)` produces once β/γ are merged (asserted in
+//! `native.rs` tests).
 //!
 //! The compute layer is parallel and cache-blocked (DESIGN.md
 //! §Parallel-compute seam): weight matrices are pre-transposed once at
@@ -31,9 +33,11 @@
 //! Activations and accumulation stay f32 throughout, so thread count
 //! still never changes results.
 //!
-//! This is a forward-only model (no autodiff): training still goes
-//! through the AOT `train_step` under `--features pjrt`. Decoding has two
-//! faces:
+//! Forward is one face of the model: the native training stack
+//! (`runtime::backend::train`, DESIGN.md §Training seam) adds an
+//! activation-tape `forward_train` + `backward` over the same
+//! parameters, so `consmax train --backend native` reproduces Fig 6/7
+//! with no PJRT. Decoding has two faces:
 //!
 //! * [`NativeModel::next_logits`] — the **recompute oracle**: a full
 //!   forward over the ctx-bounded trailing window per step, O(T²) per
@@ -58,7 +62,8 @@ use crate::runtime::backend::decode::{
     kv_offset, KvCapture, PagedParts, RowMut, RowScratch,
 };
 use crate::runtime::backend::kvcache::{chain_hash, KvPool, HASH_SEED};
-use crate::runtime::backend::native;
+use crate::runtime::backend::native::{self, gelu, layer_norm, layer_norm_into};
+use crate::runtime::backend::normalizer::{HeadNorm, Normalizer};
 use crate::runtime::backend::DecodeSession;
 use crate::runtime::parallel;
 use crate::runtime::HostTensor;
@@ -72,7 +77,11 @@ const TRANSPOSED: [&str; 4] =
 /// A model with host-resident f32 parameters, ready for forward passes.
 pub struct NativeModel {
     pub cfg: ModelConfig,
-    params: BTreeMap<String, Vec<f32>>,
+    /// The score normalizer, resolved from `cfg.normalizer` exactly
+    /// once at load (DESIGN.md §Normalizer seam); every attention tail
+    /// and the trainer dispatch on this enum, never on the string.
+    pub(crate) norm: Normalizer,
+    pub(crate) params: BTreeMap<String, Vec<f32>>,
     /// The matrices in [`TRANSPOSED`], re-packed per layer as
     /// `[l, dout, din]` so every matmul streams both operands with unit
     /// stride ([`native::matmul_bt_into`]). These live *only* here —
@@ -122,10 +131,9 @@ impl NativeModel {
             order.len(),
             tensors.len()
         );
-        match cfg.normalizer.as_str() {
-            "softmax" | "consmax" | "softermax" => {}
-            other => bail!("native model: unknown normalizer {other:?}"),
-        }
+        // the single normalizer registry (DESIGN.md §Normalizer seam):
+        // config validation and model load resolve through the same parse
+        let norm = Normalizer::parse(&cfg.normalizer)?;
         let mut params = BTreeMap::new();
         for (name, t) in order.iter().zip(tensors) {
             let want: usize = cfg.shape_of(name)?.iter().product();
@@ -143,10 +151,11 @@ impl NativeModel {
         ] {
             ensure!(params.contains_key(required), "missing param {required}");
         }
-        if cfg.normalizer == "consmax" {
+        for required in norm.required_params() {
             ensure!(
-                params.contains_key("beta") && params.contains_key("gamma"),
-                "consmax model needs beta/gamma params"
+                params.contains_key(*required),
+                "{} model needs the {required:?} param",
+                norm.name()
             );
         }
 
@@ -210,7 +219,7 @@ impl NativeModel {
                 "wte".to_string(),
                 vec![QuantizedMatrix::from_rows(wte, cfg.vocab, cfg.n_embd)],
             );
-            if cfg.normalizer == "consmax" {
+            if norm == Normalizer::Consmax {
                 let lut = BitSplitLut::paper();
                 let beta = params.get("beta").expect("validated above");
                 let gamma = params.get("gamma").expect("validated above");
@@ -222,6 +231,7 @@ impl NativeModel {
         }
         Ok(NativeModel {
             cfg: cfg.clone(),
+            norm,
             params,
             params_t,
             quant,
@@ -231,24 +241,35 @@ impl NativeModel {
         })
     }
 
-    fn p(&self, name: &str) -> &[f32] {
+    pub(crate) fn p(&self, name: &str) -> &[f32] {
         // presence validated in from_params
         self.params.get(name).map(Vec::as_slice).unwrap_or(&[])
     }
 
     /// Per-layer slice of a stacked parameter (leading axis = layer).
-    fn layer<'a>(&'a self, name: &str, l: usize, per: usize) -> &'a [f32] {
+    pub(crate) fn layer<'a>(
+        &'a self,
+        name: &str,
+        l: usize,
+        per: usize,
+    ) -> &'a [f32] {
         &self.p(name)[l * per..(l + 1) * per]
     }
 
     /// Per-layer slice of a pre-transposed stacked weight.
-    fn layer_t<'a>(&'a self, name: &str, l: usize, per: usize) -> &'a [f32] {
+    pub(crate) fn layer_t<'a>(
+        &'a self,
+        name: &str,
+        l: usize,
+        per: usize,
+    ) -> &'a [f32] {
         let t = self.params_t.get(name).map(Vec::as_slice).unwrap_or(&[]);
         &t[l * per..(l + 1) * per]
     }
 
-    /// Per-layer β scalars (empty for softmax/softermax models).
-    fn beta_row(&self, l: usize) -> &[f32] {
+    /// Layer `l`'s per-(layer, head) β row — one scalar per head, *not*
+    /// per layer (empty when the normalizer doesn't own β/γ).
+    pub(crate) fn beta_row(&self, l: usize) -> &[f32] {
         if self.params.contains_key("beta") {
             self.layer("beta", l, self.cfg.n_head)
         } else {
@@ -256,13 +277,36 @@ impl NativeModel {
         }
     }
 
-    /// Per-layer γ scalars (empty for softmax/softermax models).
-    fn gamma_row(&self, l: usize) -> &[f32] {
+    /// Layer `l`'s per-(layer, head) γ row — one scalar per head, *not*
+    /// per layer (empty when the normalizer doesn't own β/γ).
+    pub(crate) fn gamma_row(&self, l: usize) -> &[f32] {
         if self.params.contains_key("gamma") {
             self.layer("gamma", l, self.cfg.n_head)
         } else {
             &[]
         }
+    }
+
+    /// Layer `l`'s per-(layer, head) SSMax scale row (empty unless the
+    /// model is `ssmax`).
+    pub(crate) fn ssmax_row(&self, l: usize) -> &[f32] {
+        if self.params.contains_key("ssmax_s") {
+            self.layer("ssmax_s", l, self.cfg.n_head)
+        } else {
+            &[]
+        }
+    }
+
+    /// Head `hh` of layer `l`'s resolved normalizer — the dispatch unit
+    /// every attention tail (and the trainer) shares.
+    pub(crate) fn head_norm(&self, l: usize, hh: usize) -> HeadNorm {
+        HeadNorm::from_rows(
+            self.norm,
+            self.beta_row(l),
+            self.gamma_row(l),
+            self.ssmax_row(l),
+            hh,
+        )
     }
 
     /// The serving quantization mode this model was loaded with.
@@ -286,7 +330,7 @@ impl NativeModel {
     /// way, and every output element is still one serial reduction, so
     /// thread count never changes results.
     #[allow(clippy::too_many_arguments)]
-    fn affine_layer(
+    pub(crate) fn affine_layer(
         &self,
         x: &[f32],
         w_name: &str,
@@ -319,7 +363,7 @@ impl NativeModel {
 
     /// Tied LM head (`logits = x @ wte^T`), int8-routed like the
     /// projections under `--quant int8`.
-    fn lm_head_into(&self, x: &[f32], rows: usize, out: &mut [f32]) {
+    pub(crate) fn lm_head_into(&self, x: &[f32], rows: usize, out: &mut [f32]) {
         if self.quant.is_int8() {
             native::matmul_bt_i8_into(x, &self.params_q["wte"][0], rows, out);
         } else {
@@ -387,8 +431,7 @@ impl NativeModel {
             }
         }
 
-        let is_consmax = cfg.normalizer == "consmax";
-        let is_softermax = cfg.normalizer == "softermax";
+        let norm = self.norm;
         let scale = 1.0 / (hd as f32).sqrt();
         for l in 0..cfg.n_layer {
             // ---- attention block (pre-LN) -----------------------------
@@ -423,11 +466,12 @@ impl NativeModel {
             }
             let beta = self.beta_row(l);
             let gamma = self.gamma_row(l);
+            let ssm = self.ssmax_row(l);
             // int8 serving: the ConSmax tail reads its probabilities out
             // of this layer's LUT response tables — the exact bits the
             // hardware unit emits — instead of the f32 training form
             let lut_row: Option<&[[F16; 256]]> =
-                if is_consmax && self.quant.is_int8() {
+                if norm == Normalizer::Consmax && self.quant.is_int8() {
                     Some(&self.consmax_tables[l * h..(l + 1) * h])
                 } else {
                     None
@@ -437,33 +481,34 @@ impl NativeModel {
             // Causal attention, parallel over (row, head) pairs: each
             // pair owns one (t, head_dim) output tile. Omitting j > i is
             // the -inf mask (exp(-inf) = 0 in every normalizer).
-            // ConSmax streams score→C·exp→PV per key — no probability
-            // row ever exists — while softmax/softermax collect the
-            // score row first because their normalizers reduce over it.
+            // The ConSmax family streams score→p→PV per key — no
+            // probability row ever exists — while the row-reducing
+            // normalizers collect each score row first.
             let mut yh = vec![0.0f32; b * h * t * hd];
             {
                 let qkv = &qkv;
                 parallel::par_chunks_mut(&mut yh, t * hd, |pair, tile| {
                     let (r, hh) = (pair / h, pair % h);
+                    let hn = HeadNorm::from_rows(norm, beta, gamma, ssm, hh);
                     let mut srow: Vec<f32> = Vec::new();
                     for i in 0..t {
                         let qoff = (r * t + i) * 3 * d + hh * hd;
                         let q = &qkv[qoff..qoff + hd];
-                        if is_consmax {
-                            let (bh, gh) = (beta[hh], gamma[hh]);
+                        if norm.is_streaming() {
                             let table = lut_row.map(|ts| &ts[hh]);
                             for j in 0..=i {
                                 let koff = (r * t + j) * 3 * d + d + hh * hd;
                                 let sc =
                                     native::dot(q, &qkv[koff..koff + hd]) * scale;
                                 // same per-key op order as the kernels
-                                // `attend_consmax` / `attend_consmax_lut`,
-                                // so decode and recompute stay bitwise
+                                // `attend_consmax` / `attend_consmax2` /
+                                // `attend_consmax_lut`, so decode and
+                                // recompute stay bitwise
                                 let pj = match table {
                                     Some(tab) => tab
                                         [squant.quantize(sc) as u8 as usize]
                                         .to_f32(),
-                                    None => (sc - bh).exp() / gh,
+                                    None => hn.stream_p(sc),
                                 };
                                 let yrow = &mut tile[i * hd..(i + 1) * hd];
                                 let vrow = &qkv[koff + d..koff + d + hd];
@@ -479,11 +524,7 @@ impl NativeModel {
                                     native::dot(q, &qkv[koff..koff + hd]) * scale,
                                 );
                             }
-                            if is_softermax {
-                                native::softermax_inplace(&mut srow);
-                            } else {
-                                native::softmax_inplace(&mut srow);
-                            }
+                            hn.normalize_row(&mut srow);
                             for (j, &pj) in srow.iter().enumerate() {
                                 let voff = (r * t + j) * 3 * d + 2 * d + hh * hd;
                                 let yrow = &mut tile[i * hd..(i + 1) * hd];
@@ -850,8 +891,6 @@ impl NativeModel {
 
         let wte = self.p("wte");
         let wpe = self.p("wpe");
-        let is_consmax = cfg.normalizer == "consmax";
-        let is_softermax = cfg.normalizer == "softermax";
         let scale = 1.0 / (hd as f32).sqrt();
 
         let s = &mut *row.scratch;
@@ -890,11 +929,9 @@ impl NativeModel {
                 let vo = ko + d;
                 row.v[kb..kb + hd].copy_from_slice(&s.qkv[vo..vo + hd]);
             }
-            let beta = self.beta_row(l);
-            let gamma = self.gamma_row(l);
-
             s.y.fill(0.0);
             for hh in 0..h {
+                let hn = self.head_norm(l, hh);
                 let q = &s.qkv[hh * hd..(hh + 1) * hd];
                 // a dense row's (l, hh) slots are one contiguous
                 // [ctx, hd] run, so the shared attention-tail kernels
@@ -904,13 +941,15 @@ impl NativeModel {
                 let span = (pos + 1) * hd;
                 let kreg = &row.k[base..base + span];
                 let vreg = &row.v[base..base + span];
-                if is_consmax {
-                    // ConSmax has no row max/sum (the paper's point):
-                    // score → C·exp → PV streams per cached key, exactly
-                    // the fused loop of the batched forward. Int8 mode
-                    // reads C·exp from the (l, hh) LUT response table —
-                    // the hardware unit's bits — instead.
-                    if self.quant.is_int8() {
+                let yh = &mut s.y[hh * hd..(hh + 1) * hd];
+                match self.norm {
+                    // The ConSmax family has no row max/sum (the
+                    // paper's point): score → p → PV streams per cached
+                    // key, exactly the fused loop of the batched
+                    // forward. Int8 consmax reads its probabilities
+                    // from the (l, hh) LUT response table — the
+                    // hardware unit's bits — instead.
+                    Normalizer::Consmax if self.quant.is_int8() => {
                         native::attend_consmax_lut(
                             q,
                             kreg,
@@ -919,35 +958,32 @@ impl NativeModel {
                             scale,
                             &self.score_quant,
                             self.consmax_table(l, hh),
-                            &mut s.y[hh * hd..(hh + 1) * hd],
+                            yh,
                         );
-                    } else {
+                    }
+                    Normalizer::Consmax => {
                         native::attend_consmax(
+                            q, kreg, vreg, hd, scale, hn.beta, hn.gamma, yh,
+                        );
+                    }
+                    Normalizer::ConsmaxV2 => {
+                        native::attend_consmax2(
+                            q, kreg, vreg, hd, scale, hn.beta, hn.gamma, yh,
+                        );
+                    }
+                    // the row-reducing normalizers collect the whole
+                    // score row first, into the row's scratch buffer
+                    _ => {
+                        native::attend_scores(
                             q,
                             kreg,
-                            vreg,
                             hd,
                             scale,
-                            beta[hh],
-                            gamma[hh],
-                            &mut s.y[hh * hd..(hh + 1) * hd],
+                            &mut s.srow[..=pos],
                         );
+                        hn.normalize_row(&mut s.srow[..=pos]);
+                        native::attend_pv(&s.srow[..=pos], vreg, hd, yh);
                     }
-                } else {
-                    // softmax/softermax reduce over the whole row first,
-                    // into the row's scratch score buffer
-                    native::attend_scores(q, kreg, hd, scale, &mut s.srow[..=pos]);
-                    if is_softermax {
-                        native::softermax_inplace(&mut s.srow[..=pos]);
-                    } else {
-                        native::softmax_inplace(&mut s.srow[..=pos]);
-                    }
-                    native::attend_pv(
-                        &s.srow[..=pos],
-                        vreg,
-                        hd,
-                        &mut s.y[hh * hd..(hh + 1) * hd],
-                    );
                 }
             }
             self.affine_layer(
@@ -1394,8 +1430,6 @@ impl NativeModel {
 
         let wte = self.p("wte");
         let wpe = self.p("wpe");
-        let is_consmax = cfg.normalizer == "consmax";
-        let is_softermax = cfg.normalizer == "softermax";
         let scale = 1.0 / (hd as f32).sqrt();
         let bt = pool.block_tokens();
         let dtype = pool.dtype();
@@ -1443,9 +1477,6 @@ impl NativeModel {
                 dtype.roundtrip_vec(&mut s.staged_k[lane..lane + hd]);
                 dtype.roundtrip_vec(&mut s.staged_v[lane..lane + hd]);
             }
-            let beta = self.beta_row(l);
-            let gamma = self.gamma_row(l);
-
             s.y.fill(0.0);
             for hh in 0..h {
                 // gather/dequant the cached (l, hh) tiles block by block
@@ -1481,10 +1512,12 @@ impl NativeModel {
                 s.vgath[pos * hd..(pos + 1) * hd]
                     .copy_from_slice(&s.staged_v[lane..lane + hd]);
 
+                let hn = self.head_norm(l, hh);
                 let q = &s.qkv[hh * hd..(hh + 1) * hd];
                 let span = (pos + 1) * hd;
-                if is_consmax {
-                    if self.quant.is_int8() {
+                let yh = &mut s.y[hh * hd..(hh + 1) * hd];
+                match self.norm {
+                    Normalizer::Consmax if self.quant.is_int8() => {
                         native::attend_consmax_lut(
                             q,
                             &s.kgath[..span],
@@ -1493,39 +1526,49 @@ impl NativeModel {
                             scale,
                             &self.score_quant,
                             self.consmax_table(l, hh),
-                            &mut s.y[hh * hd..(hh + 1) * hd],
+                            yh,
                         );
-                    } else {
+                    }
+                    Normalizer::Consmax => {
                         native::attend_consmax(
                             q,
                             &s.kgath[..span],
                             &s.vgath[..span],
                             hd,
                             scale,
-                            beta[hh],
-                            gamma[hh],
-                            &mut s.y[hh * hd..(hh + 1) * hd],
+                            hn.beta,
+                            hn.gamma,
+                            yh,
                         );
                     }
-                } else {
-                    native::attend_scores(
-                        q,
-                        &s.kgath[..span],
-                        hd,
-                        scale,
-                        &mut s.srow[..=pos],
-                    );
-                    if is_softermax {
-                        native::softermax_inplace(&mut s.srow[..=pos]);
-                    } else {
-                        native::softmax_inplace(&mut s.srow[..=pos]);
+                    Normalizer::ConsmaxV2 => {
+                        native::attend_consmax2(
+                            q,
+                            &s.kgath[..span],
+                            &s.vgath[..span],
+                            hd,
+                            scale,
+                            hn.beta,
+                            hn.gamma,
+                            yh,
+                        );
                     }
-                    native::attend_pv(
-                        &s.srow[..=pos],
-                        &s.vgath[..span],
-                        hd,
-                        &mut s.y[hh * hd..(hh + 1) * hd],
-                    );
+                    _ => {
+                        native::attend_scores(
+                            q,
+                            &s.kgath[..span],
+                            hd,
+                            scale,
+                            &mut s.srow[..=pos],
+                        );
+                        hn.normalize_row(&mut s.srow[..=pos]);
+                        native::attend_pv(
+                            &s.srow[..=pos],
+                            &s.vgath[..span],
+                            hd,
+                            yh,
+                        );
+                    }
                 }
             }
             self.affine_layer(
@@ -1586,36 +1629,13 @@ impl NativeModel {
     }
 }
 
-fn layer_norm(x: &[f32], g: &[f32], b: &[f32], d: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; x.len()];
-    layer_norm_into(x, g, b, d, &mut out);
-    out
-}
-
-fn layer_norm_into(x: &[f32], g: &[f32], b: &[f32], d: usize, out: &mut [f32]) {
-    for (row_in, row_out) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
-        let mu = row_in.iter().sum::<f32>() / d as f32;
-        let var =
-            row_in.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
-        let inv = 1.0 / (var + 1e-5).sqrt();
-        for ((o, &v), (&gg, &bb)) in
-            row_out.iter_mut().zip(row_in).zip(g.iter().zip(b))
-        {
-            *o = (v - mu) * inv * gg + bb;
-        }
-    }
-}
-
-/// Tanh-approximate GELU, matching `jax.nn.gelu` (approximate=True).
-fn gelu(x: f32) -> f32 {
-    const SQRT_2_OVER_PI: f32 = 0.797_884_56;
-    0.5 * x * (1.0 + (SQRT_2_OVER_PI * (x + 0.044715 * x * x * x)).tanh())
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::util::rng::Pcg32;
+
+    const NORMALIZERS: [&str; 5] =
+        ["consmax", "softmax", "softermax", "consmax-v2", "ssmax"];
 
     fn tiny_tensors(cfg: &ModelConfig) -> Vec<HostTensor> {
         let mut rng = Pcg32::seeded(7);
@@ -1627,6 +1647,7 @@ mod tests {
                 "ln1_g" | "ln2_g" | "lnf_g" => vec![1.0; n],
                 "beta" => vec![1.5; n],
                 "gamma" => vec![100.0; n],
+                "ssmax_s" => vec![0.43; n],
                 _ if name.ends_with("_b") => vec![0.0; n],
                 _ => rng.normal_vec_f32(n, 0.0, 0.02),
             };
@@ -1648,7 +1669,7 @@ mod tests {
 
     #[test]
     fn forward_shapes_and_finiteness() {
-        for norm in ["consmax", "softmax", "softermax"] {
+        for norm in NORMALIZERS {
             let m = tiny_model(norm);
             let toks: Vec<i32> = (0..2 * 8).map(|i| (i * 13) % 256).collect();
             let logits = m.forward(&toks, 2, 8).unwrap();
@@ -1717,7 +1738,7 @@ mod tests {
 
     #[test]
     fn prefill_matches_next_logits() {
-        for norm in ["consmax", "softmax", "softermax"] {
+        for norm in NORMALIZERS {
             let m = tiny_model(norm);
             let seq: Vec<i32> = (0..20).map(|i| (i * 5 + 3) % 256).collect();
             let mut sess = DecodeSession::new(&m.cfg, 1);
@@ -1731,7 +1752,7 @@ mod tests {
     #[test]
     fn decode_step_extends_bitwise() {
         // one incremental step == recompute over the extended sequence
-        for norm in ["consmax", "softmax", "softermax"] {
+        for norm in NORMALIZERS {
             let m = tiny_model(norm);
             let mut seq: Vec<i32> = (0..9).map(|i| (i * 7 + 1) % 256).collect();
             let mut sess = DecodeSession::new(&m.cfg, 1);
@@ -1836,7 +1857,7 @@ mod tests {
 
     #[test]
     fn int8_forward_finite_and_loss_near_uniform() {
-        for norm in ["consmax", "softmax", "softermax"] {
+        for norm in NORMALIZERS {
             let m = tiny_model_quant(norm, QuantMode::Int8);
             assert!(m.quant_mode().is_int8());
             let x: Vec<i32> = (0..2 * 32).map(|i| (i * 7) % 256).collect();
@@ -1855,7 +1876,7 @@ mod tests {
         // identical values — logits stay bitwise equal, exactly like
         // the f32 model (the int8 accuracy question lives in the eval
         // gate, not here)
-        for norm in ["consmax", "softmax", "softermax"] {
+        for norm in NORMALIZERS {
             let m = tiny_model_quant(norm, QuantMode::Int8);
             let mut seq: Vec<i32> = (0..9).map(|i| (i * 7 + 1) % 256).collect();
             let mut sess = DecodeSession::new(&m.cfg, 1);

@@ -29,6 +29,13 @@
 //! [`attend_consmax_lut`] replaces the attention tail's `C·exp` with a
 //! bit-split-LUT table lookup whose probabilities are bit-identical to
 //! [`BitSplitLut`] / the RTL simulator.
+//!
+//! The native training stack (DESIGN.md §Training seam) adds the
+//! backward tier: [`matmul_at_b_acc`] (the `dW = x^T @ dy` transpose),
+//! [`layer_norm_backward`], [`gelu_grad`], and the shared forward
+//! helpers [`layer_norm`] / [`gelu`] the model and the tape-building
+//! `forward_train` both call. Each normalizer's own backward rule lives
+//! with its enum in `runtime::backend::normalizer`.
 
 use anyhow::{bail, ensure, Result};
 
@@ -341,6 +348,158 @@ pub fn attend_pv(probs: &[f32], v: &[f32], head_dim: usize, y: &mut [f32]) {
         let vrow = &v[j * head_dim..(j + 1) * head_dim];
         for (o, &vv) in y.iter_mut().zip(vrow) {
             *o += pj * vv;
+        }
+    }
+}
+
+/// Fused ConSmax-v2 attention tail: the base-2 twin of
+/// [`attend_consmax`] — `p = 2^(s − β)/γ` per key (a shifter instead
+/// of `exp` in hardware), same fused score→p→PV stream in the same
+/// order, so the v2 decode engine inherits the dense/paged bitwise
+/// contract unchanged.
+#[allow(clippy::too_many_arguments)]
+pub fn attend_consmax2(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    head_dim: usize,
+    scale: f32,
+    beta: f32,
+    gamma: f32,
+    y: &mut [f32],
+) {
+    debug_assert_eq!(k.len(), v.len());
+    debug_assert_eq!(k.len() % head_dim, 0);
+    let n = k.len() / head_dim;
+    for j in 0..n {
+        let krow = &k[j * head_dim..(j + 1) * head_dim];
+        let sc = dot(q, krow) * scale;
+        let pj = (sc - beta).exp2() / gamma;
+        let vrow = &v[j * head_dim..(j + 1) * head_dim];
+        for (o, &vv) in y.iter_mut().zip(vrow) {
+            *o += pj * vv;
+        }
+    }
+}
+
+/// Tanh-approximate GELU, matching `jax.nn.gelu` (approximate=True).
+pub fn gelu(x: f32) -> f32 {
+    const SQRT_2_OVER_PI: f32 = 0.797_884_56;
+    0.5 * x * (1.0 + (SQRT_2_OVER_PI * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// `d gelu/dx` of the tanh approximation:
+/// `0.5(1 + tanh u) + 0.5 x (1 − tanh²u) · u'` with
+/// `u = √(2/π)(x + 0.044715 x³)`.
+pub fn gelu_grad(x: f32) -> f32 {
+    const SQRT_2_OVER_PI: f32 = 0.797_884_56;
+    let u = SQRT_2_OVER_PI * (x + 0.044715 * x * x * x);
+    let t = u.tanh();
+    let du = SQRT_2_OVER_PI * (1.0 + 3.0 * 0.044715 * x * x);
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * du
+}
+
+/// Row-wise LayerNorm (population variance, eps 1e-5) matching the JAX
+/// model; allocates the output.
+pub fn layer_norm(x: &[f32], g: &[f32], b: &[f32], d: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; x.len()];
+    layer_norm_into(x, g, b, d, &mut out);
+    out
+}
+
+/// [`layer_norm`] into a caller-owned buffer (the zero-allocation
+/// decode hot path).
+pub fn layer_norm_into(x: &[f32], g: &[f32], b: &[f32], d: usize, out: &mut [f32]) {
+    for (row_in, row_out) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
+        let mu = row_in.iter().sum::<f32>() / d as f32;
+        let var =
+            row_in.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        for ((o, &v), (&gg, &bb)) in
+            row_out.iter_mut().zip(row_in).zip(g.iter().zip(b))
+        {
+            *o = (v - mu) * inv * gg + bb;
+        }
+    }
+}
+
+/// Backward through [`layer_norm_into`]: recomputes each row's μ/inv
+/// from the saved *input* `x` (cheaper than taping them), writes
+/// `∂L/∂x` into `dx` and **accumulates** the gain/bias grads into
+/// `dg`/`db` (so stacked rows — and stacked layers — sum into one
+/// buffer). With `x̂ = (x − μ)·inv` and `dyg = dy ⊙ g`:
+/// `dx = inv · (dyg − mean(dyg) − x̂ · mean(dyg ⊙ x̂))`,
+/// `dg += Σ_rows dy ⊙ x̂`, `db += Σ_rows dy`.
+pub fn layer_norm_backward(
+    x: &[f32],
+    g: &[f32],
+    dy: &[f32],
+    d: usize,
+    dx: &mut [f32],
+    dg: &mut [f32],
+    db: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), dy.len());
+    debug_assert_eq!(x.len(), dx.len());
+    debug_assert_eq!(g.len(), d);
+    for ((row_x, row_dy), row_dx) in x
+        .chunks_exact(d)
+        .zip(dy.chunks_exact(d))
+        .zip(dx.chunks_exact_mut(d))
+    {
+        let mu = row_x.iter().sum::<f32>() / d as f32;
+        let var =
+            row_x.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        let mut m1 = 0.0f32; // mean(dy ⊙ g)
+        let mut m2 = 0.0f32; // mean(dy ⊙ g ⊙ x̂)
+        for ((&xv, &dyv), &gv) in row_x.iter().zip(row_dy).zip(g.iter()) {
+            let xh = (xv - mu) * inv;
+            let dyg = dyv * gv;
+            m1 += dyg;
+            m2 += dyg * xh;
+        }
+        m1 /= d as f32;
+        m2 /= d as f32;
+        for ((((o, &xv), &dyv), &gv), (dgv, dbv)) in row_dx
+            .iter_mut()
+            .zip(row_x)
+            .zip(row_dy)
+            .zip(g.iter())
+            .zip(dg.iter_mut().zip(db.iter_mut()))
+        {
+            let xh = (xv - mu) * inv;
+            *o = inv * (dyv * gv - m1 - xh * m2);
+            *dgv += dyv * xh;
+            *dbv += dyv;
+        }
+    }
+}
+
+/// `out += a^T @ b` with `a (k, m)` and `b (k, n)` row-major — the
+/// weight-gradient kernel (`dW = x^T @ dy`). The `kk`-outer loop order
+/// streams both operands and the output row with unit stride, and the
+/// accumulation lets stacked layers (and micro-batches) sum into one
+/// gradient buffer.
+pub fn matmul_at_b_acc(
+    a: &[f32],
+    b: &[f32],
+    k: usize,
+    m: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    for kk in 0..k {
+        let arow = &a[kk * m..(kk + 1) * m];
+        let brow = &b[kk * n..(kk + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
         }
     }
 }
@@ -851,6 +1010,103 @@ mod tests {
         attend_pv(&probs, &v, hd, &mut acc);
         for (a, w) in acc.iter().zip(&pv_want) {
             assert_eq!(*a, 1.0 + w);
+        }
+    }
+
+    #[test]
+    fn attend_consmax2_is_base2_twin() {
+        let (n, hd) = (5usize, 4usize);
+        let q: Vec<f32> = (0..hd).map(|i| 0.3 - 0.1 * i as f32).collect();
+        let k: Vec<f32> = (0..n * hd).map(|i| (i as f32) * 0.07 - 0.4).collect();
+        let v: Vec<f32> = (0..n * hd).map(|i| 1.0 - (i as f32) * 0.05).collect();
+        let (scale, beta, gamma) = (0.5f32, 1.5f32, 2.0f32);
+        let mut srow = vec![0.0f32; n];
+        attend_scores(&q, &k, hd, scale, &mut srow);
+        let mut want = vec![0.0f32; hd];
+        for j in 0..n {
+            let pj = (srow[j] - beta).exp2() / gamma;
+            for (o, &vv) in want.iter_mut().zip(&v[j * hd..(j + 1) * hd]) {
+                *o += pj * vv;
+            }
+        }
+        let mut got = vec![0.0f32; hd];
+        attend_consmax2(&q, &k, &v, hd, scale, beta, gamma, &mut got);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn gelu_grad_matches_finite_differences() {
+        let h = 1e-3f32;
+        for i in -40..=40 {
+            let x = i as f32 * 0.1;
+            let fd = (gelu(x + h) - gelu(x - h)) / (2.0 * h);
+            let an = gelu_grad(x);
+            assert!((fd - an).abs() <= 1e-3, "x {x}: fd {fd} vs an {an}");
+        }
+    }
+
+    #[test]
+    fn layer_norm_backward_matches_finite_differences() {
+        use crate::util::rng::Pcg32;
+        let (rows, d) = (3usize, 8usize);
+        let mut rng = Pcg32::seeded(5);
+        let x = rng.normal_vec_f32(rows * d, 0.0, 1.0);
+        let g = rng.normal_vec_f32(d, 1.0, 0.1);
+        let b = rng.normal_vec_f32(d, 0.0, 0.1);
+        let w = rng.normal_vec_f32(rows * d, 0.0, 1.0); // dL/dy weights
+        let loss = |x: &[f32], g: &[f32], b: &[f32]| -> f32 {
+            layer_norm(x, g, b, d).iter().zip(&w).map(|(&y, &wv)| y * wv).sum()
+        };
+        let mut dx = vec![0.0f32; rows * d];
+        let mut dg = vec![0.0f32; d];
+        let mut db = vec![0.0f32; d];
+        layer_norm_backward(&x, &g, &w, d, &mut dx, &mut dg, &mut db);
+        let h = 1e-2f32;
+        let check = |an: f32, fd: f32, what: &str| {
+            assert!(
+                (fd - an).abs() <= 1e-3 * fd.abs().max(1.0),
+                "{what}: fd {fd} vs an {an}"
+            );
+        };
+        for i in 0..rows * d {
+            let mut up = x.clone();
+            up[i] += h;
+            let mut dn = x.clone();
+            dn[i] -= h;
+            check(dx[i], (loss(&up, &g, &b) - loss(&dn, &g, &b)) / (2.0 * h), "dx");
+        }
+        for i in 0..d {
+            let mut up = g.clone();
+            up[i] += h;
+            let mut dn = g.clone();
+            dn[i] -= h;
+            check(dg[i], (loss(&x, &up, &b) - loss(&x, &dn, &b)) / (2.0 * h), "dg");
+            let mut bu = b.clone();
+            bu[i] += h;
+            let mut bd = b.clone();
+            bd[i] -= h;
+            check(db[i], (loss(&x, &g, &bu) - loss(&x, &g, &bd)) / (2.0 * h), "db");
+        }
+    }
+
+    #[test]
+    fn matmul_at_b_acc_matches_transposed_oracle() {
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::seeded(13);
+        for (k, m, n) in [(7usize, 3usize, 5usize), (16, 8, 8), (1, 4, 2)] {
+            let a = rng.normal_vec_f32(k * m, 0.0, 1.0);
+            let b = rng.normal_vec_f32(k * n, 0.0, 1.0);
+            let at = transpose(&a, k, m); // (m, k)
+            let want = matmul(&at, &b, m, k, n);
+            let mut got = vec![0.5f32; m * n]; // accumulation base
+            matmul_at_b_acc(&a, &b, k, m, n, &mut got);
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (g - 0.5 - w).abs() <= 1e-4 * w.abs().max(1.0),
+                    "({k},{m},{n})[{i}]: {} vs {w}",
+                    g - 0.5
+                );
+            }
         }
     }
 

@@ -1,0 +1,413 @@
+//! The **Normalizer seam** (DESIGN.md §Normalizer seam): every score
+//! normalizer the stack supports, resolved from its CLI/config name
+//! exactly once at model load. The enum owns what used to be scattered
+//! string matches and hand-threaded `is_consmax`/`is_softermax` flags:
+//!
+//! * the **name registry** ([`Normalizer::parse`] / [`Normalizer::NAMES`]) —
+//!   the single place `config.rs` and `model.rs` validate against, so a
+//!   zoo addition cannot drift between layers;
+//! * the **parameter schema** ([`Normalizer::extra_params`] /
+//!   [`Normalizer::required_params`]) — per-(layer, head) β/γ for the
+//!   ConSmax family, the learnable per-(layer, head) scale for SSMax;
+//! * the **forward form** — reduction-free streaming `score → p` for the
+//!   ConSmax family ([`HeadNorm::stream_p`], the paper's point: no row
+//!   max/sum barrier), row-reducing normalization for the rest
+//!   ([`HeadNorm::normalize_row`], which dispatches to the exact
+//!   [`native`] kernels the pre-seam code called, so logits stay
+//!   bitwise-identical);
+//! * the **backward rule** ([`HeadNorm::backward_row`]) — what makes the
+//!   native trainer inherit every zoo member for free. ConSmax's is the
+//!   paper's selling point: `∂p/∂s = p` (no softmax Jacobian), so
+//!   `ds = p ⊙ dp` plus two scalar reductions for β/γ.
+//!
+//! The zoo:
+//!
+//! | name         | row form                          | learnables        |
+//! |--------------|-----------------------------------|-------------------|
+//! | `softmax`    | `exp(s−m)/Σ`                      | —                 |
+//! | `softermax`  | `2^(s−m)/Σ` (base-2 softmax)      | —                 |
+//! | `consmax`    | `exp(s−β)/γ` (no reduction)       | β, γ per (l, h)   |
+//! | `consmax-v2` | `2^(s−β)/γ` (base-2 ConSmax)      | β, γ per (l, h)   |
+//! | `ssmax`      | `softmax(s·ln(n)·s_lh)` (n keys)  | s_lh per (l, h)   |
+//!
+//! `consmax-v2` is the per-head, exponent-base-2 variant (hardware
+//! shifters instead of `exp`; cf. the nanoGPT softmax-variations zoo) —
+//! the learnable schema matches ConSmax, only the base changes. `ssmax`
+//! is Scalable-Softmax: the score row is rescaled by `s_lh · ln(n)`
+//! before a standard softmax so attention does not flatten as the key
+//! count `n` grows; at `n = 1`, `ln(1) = 0` collapses the row to the
+//! single trivial probability, which is also what softmax emits.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::backend::native;
+
+// `ln 2`: the score-side Jacobian factor of every base-2 normalizer.
+use std::f32::consts::LN_2;
+
+/// A score normalizer, resolved from its name once at model load.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Normalizer {
+    /// Standard max-subtracted softmax.
+    Softmax,
+    /// Base-2 softmax (`2^x` row normalization).
+    Softermax,
+    /// The paper's learnable normalizer: `exp(s − β)/γ`, no reduction.
+    Consmax,
+    /// ConSmax with exponent base 2: `2^(s − β)/γ`, no reduction.
+    ConsmaxV2,
+    /// Scalable-Softmax: `softmax(s · s_lh · ln n)` over `n` keys.
+    Ssmax,
+}
+
+impl Normalizer {
+    /// Every accepted `--normalizer` name, in CLI/display order.
+    pub const NAMES: [&'static str; 5] =
+        ["softmax", "consmax", "softermax", "consmax-v2", "ssmax"];
+
+    /// The help string CLI surfaces print for `--normalizer`.
+    pub const HELP: &'static str =
+        "softmax|consmax|softermax|consmax-v2|ssmax";
+
+    /// The one registry lookup: name → normalizer. Every layer that
+    /// used to re-validate the string (config, model load) calls this.
+    pub fn parse(name: &str) -> Result<Normalizer> {
+        Ok(match name {
+            "softmax" => Normalizer::Softmax,
+            "softermax" => Normalizer::Softermax,
+            "consmax" => Normalizer::Consmax,
+            "consmax-v2" => Normalizer::ConsmaxV2,
+            "ssmax" => Normalizer::Ssmax,
+            other => {
+                bail!("unknown normalizer {other:?} ({})", Normalizer::HELP)
+            }
+        })
+    }
+
+    /// The canonical name (`parse` round-trips it).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Normalizer::Softmax => "softmax",
+            Normalizer::Softermax => "softermax",
+            Normalizer::Consmax => "consmax",
+            Normalizer::ConsmaxV2 => "consmax-v2",
+            Normalizer::Ssmax => "ssmax",
+        }
+    }
+
+    /// Whether the forward form streams score → p per key with no row
+    /// reduction (the ConSmax family) — these take the fused
+    /// score→p→PV attention tails; the rest collect a score row first.
+    pub fn is_streaming(&self) -> bool {
+        matches!(self, Normalizer::Consmax | Normalizer::ConsmaxV2)
+    }
+
+    /// Whether the normalizer owns per-(layer, head) β/γ parameters.
+    pub fn uses_beta_gamma(&self) -> bool {
+        matches!(self, Normalizer::Consmax | Normalizer::ConsmaxV2)
+    }
+
+    /// Whether the normalizer owns the per-(layer, head) SSMax scale.
+    pub fn uses_ssmax_scale(&self) -> bool {
+        matches!(self, Normalizer::Ssmax)
+    }
+
+    /// Parameters this normalizer appends to the canonical schema
+    /// beyond the β/γ rows every builtin config carries (python-preset
+    /// parity keeps β/γ in the order even for softmax models).
+    pub fn extra_params(&self) -> &'static [&'static str] {
+        match self {
+            Normalizer::Ssmax => &["ssmax_s"],
+            _ => &[],
+        }
+    }
+
+    /// Parameters that must be present at model load for this
+    /// normalizer's attention tail to run.
+    pub fn required_params(&self) -> &'static [&'static str] {
+        match self {
+            Normalizer::Consmax | Normalizer::ConsmaxV2 => &["beta", "gamma"],
+            Normalizer::Ssmax => &["ssmax_s"],
+            _ => &[],
+        }
+    }
+}
+
+/// Gradients of one attention row's loss w.r.t. the normalizer's own
+/// learnables (zero for the parameter-free kinds).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NormGrad {
+    pub dbeta: f32,
+    pub dgamma: f32,
+    pub dsscale: f32,
+}
+
+/// One (layer, head)'s normalizer, with its scalars resolved: the unit
+/// of dispatch at every attention tail (forward, decode, paged,
+/// training). Copy-cheap so parallel attention closures capture it by
+/// value.
+#[derive(Clone, Copy, Debug)]
+pub struct HeadNorm {
+    pub kind: Normalizer,
+    /// ConSmax-family β (0 for the rest).
+    pub beta: f32,
+    /// ConSmax-family γ (1 for the rest).
+    pub gamma: f32,
+    /// SSMax per-head scale (0 for the rest).
+    pub sscale: f32,
+}
+
+impl HeadNorm {
+    /// Resolve head `hh`'s scalars out of the model's per-layer rows
+    /// (empty slices for normalizers that don't own the parameter).
+    pub fn from_rows(
+        kind: Normalizer,
+        beta_row: &[f32],
+        gamma_row: &[f32],
+        ssm_row: &[f32],
+        hh: usize,
+    ) -> HeadNorm {
+        HeadNorm {
+            kind,
+            beta: beta_row.get(hh).copied().unwrap_or(0.0),
+            gamma: gamma_row.get(hh).copied().unwrap_or(1.0),
+            sscale: ssm_row.get(hh).copied().unwrap_or(0.0),
+        }
+    }
+
+    /// Streaming score → probability for the reduction-free kinds
+    /// (identical expression to the fused `attend_*` kernels, so the
+    /// batched forward and the decode engine stay bitwise-equal).
+    #[inline]
+    pub fn stream_p(&self, sc: f32) -> f32 {
+        match self.kind {
+            Normalizer::Consmax => (sc - self.beta).exp() / self.gamma,
+            Normalizer::ConsmaxV2 => (sc - self.beta).exp2() / self.gamma,
+            _ => unreachable!("stream_p on a row-reducing normalizer"),
+        }
+    }
+
+    /// In-place scores → probabilities over one attention row of
+    /// `row.len()` keys. Row-reducing kinds dispatch to the exact
+    /// pre-seam [`native`] kernels (bitwise-identical logits); the
+    /// streaming kinds map [`HeadNorm::stream_p`] so the trainer can
+    /// materialize every normalizer's probability row uniformly.
+    pub fn normalize_row(&self, row: &mut [f32]) {
+        match self.kind {
+            Normalizer::Softmax => native::softmax_inplace(row),
+            Normalizer::Softermax => native::softermax_inplace(row),
+            Normalizer::Ssmax => {
+                let c = self.sscale * (row.len() as f32).ln();
+                for s in row.iter_mut() {
+                    *s *= c;
+                }
+                native::softmax_inplace(row);
+            }
+            Normalizer::Consmax | Normalizer::ConsmaxV2 => {
+                for s in row.iter_mut() {
+                    *s = self.stream_p(*s);
+                }
+            }
+        }
+    }
+
+    /// Backward through one attention row: given the forward
+    /// probabilities `probs`, the upstream gradient `dprobs`, and (for
+    /// SSMax only) the raw pre-scale scores `raw`, write `∂L/∂score`
+    /// into `dscores` and return the normalizer's own parameter
+    /// gradients.
+    ///
+    /// With `dot = Σ_j p_j·dp_j`:
+    ///
+    /// * softmax       `ds_j = p_j (dp_j − dot)` (the softmax Jacobian)
+    /// * softermax     `ds_j = ln2 · p_j (dp_j − dot)`
+    /// * consmax       `ds_j = p_j dp_j`, `dβ = −dot`, `dγ = −dot/γ`
+    /// * consmax-v2    `ds_j = ln2 · p_j dp_j`, `dβ = −ln2·dot`,
+    ///   `dγ = −dot/γ`
+    /// * ssmax         `dz_j = p_j (dp_j − dot)` through the inner
+    ///   softmax over `z = c·raw`, then `ds_j = c·dz_j` and
+    ///   `ds_lh = ln(n) · Σ_j dz_j raw_j` through `c = s_lh·ln(n)`
+    ///
+    /// ConSmax's rule is the paper's training claim made concrete:
+    /// `∂p/∂s = p` — a diagonal Jacobian, no cross-key coupling.
+    pub fn backward_row(
+        &self,
+        probs: &[f32],
+        dprobs: &[f32],
+        raw: &[f32],
+        dscores: &mut [f32],
+    ) -> NormGrad {
+        debug_assert_eq!(probs.len(), dprobs.len());
+        debug_assert_eq!(probs.len(), dscores.len());
+        let dot: f32 = probs.iter().zip(dprobs).map(|(&p, &dp)| p * dp).sum();
+        let mut g = NormGrad::default();
+        match self.kind {
+            Normalizer::Softmax => {
+                for ((ds, &p), &dp) in
+                    dscores.iter_mut().zip(probs).zip(dprobs)
+                {
+                    *ds = p * (dp - dot);
+                }
+            }
+            Normalizer::Softermax => {
+                for ((ds, &p), &dp) in
+                    dscores.iter_mut().zip(probs).zip(dprobs)
+                {
+                    *ds = LN_2 * p * (dp - dot);
+                }
+            }
+            Normalizer::Consmax => {
+                for ((ds, &p), &dp) in
+                    dscores.iter_mut().zip(probs).zip(dprobs)
+                {
+                    *ds = p * dp;
+                }
+                g.dbeta = -dot;
+                g.dgamma = -dot / self.gamma;
+            }
+            Normalizer::ConsmaxV2 => {
+                for ((ds, &p), &dp) in
+                    dscores.iter_mut().zip(probs).zip(dprobs)
+                {
+                    *ds = LN_2 * p * dp;
+                }
+                g.dbeta = -LN_2 * dot;
+                g.dgamma = -dot / self.gamma;
+            }
+            Normalizer::Ssmax => {
+                debug_assert_eq!(probs.len(), raw.len());
+                let ln_n = (probs.len() as f32).ln();
+                let c = self.sscale * ln_n;
+                for (((ds, &p), &dp), &rw) in
+                    dscores.iter_mut().zip(probs).zip(dprobs).zip(raw)
+                {
+                    let dz = p * (dp - dot);
+                    *ds = c * dz;
+                    g.dsscale += dz * rw * ln_n;
+                }
+            }
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn parse_round_trips_every_name() {
+        for name in Normalizer::NAMES {
+            let n = Normalizer::parse(name).unwrap();
+            assert_eq!(n.name(), name);
+        }
+        assert!(Normalizer::parse("sparsemax").is_err());
+        assert!(Normalizer::parse("").is_err());
+    }
+
+    #[test]
+    fn schema_matches_kind() {
+        for name in Normalizer::NAMES {
+            let n = Normalizer::parse(name).unwrap();
+            assert_eq!(n.uses_beta_gamma(), n.is_streaming());
+            assert_eq!(
+                n.uses_ssmax_scale(),
+                n.extra_params().contains(&"ssmax_s")
+            );
+            for req in n.required_params() {
+                assert!(
+                    *req == "beta" || *req == "gamma" || *req == "ssmax_s"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ssmax_single_key_is_trivial() {
+        let hn = HeadNorm {
+            kind: Normalizer::Ssmax,
+            beta: 0.0,
+            gamma: 1.0,
+            sscale: 0.43,
+        };
+        let mut row = [3.7f32];
+        hn.normalize_row(&mut row);
+        assert_eq!(row[0], 1.0);
+    }
+
+    /// Central finite differences over `L = Σ w_j p_j(scores, θ)` pin
+    /// every backward rule against its own forward, per normalizer.
+    #[test]
+    fn backward_row_matches_finite_differences() {
+        let n = 6usize;
+        let h = 1e-2f32;
+        let mut rng = Pcg32::seeded(11);
+        for name in Normalizer::NAMES {
+            let kind = Normalizer::parse(name).unwrap();
+            // γ pinned near 1 so FD on small f32 probabilities stays
+            // well-conditioned; β/scale arbitrary
+            let hn = HeadNorm {
+                kind,
+                beta: 0.7,
+                gamma: 2.0,
+                sscale: 0.43,
+            };
+            let scores: Vec<f32> = rng.normal_vec_f32(n, 0.0, 1.0);
+            let w: Vec<f32> = rng.normal_vec_f32(n, 0.0, 1.0);
+            let loss = |hn: &HeadNorm, scores: &[f32]| -> f32 {
+                let mut row = scores.to_vec();
+                hn.normalize_row(&mut row);
+                row.iter().zip(&w).map(|(&p, &wj)| p * wj).sum()
+            };
+
+            // analytic gradient
+            let mut probs = scores.clone();
+            hn.normalize_row(&mut probs);
+            let mut ds = vec![0.0f32; n];
+            let g = hn.backward_row(&probs, &w, &scores, &mut ds);
+
+            for j in 0..n {
+                let mut up = scores.clone();
+                up[j] += h;
+                let mut dn = scores.clone();
+                dn[j] -= h;
+                let fd = (loss(&hn, &up) - loss(&hn, &dn)) / (2.0 * h);
+                assert!(
+                    (fd - ds[j]).abs() <= 1e-3 * fd.abs().max(1.0),
+                    "{name} ds[{j}]: fd {fd} vs an {}",
+                    ds[j]
+                );
+            }
+            let fd_scalar = |bump: &dyn Fn(&mut HeadNorm, f32)| -> f32 {
+                let mut a = hn;
+                bump(&mut a, h);
+                let mut b = hn;
+                bump(&mut b, -h);
+                (loss(&a, &scores) - loss(&b, &scores)) / (2.0 * h)
+            };
+            if kind.uses_beta_gamma() {
+                let fdb = fd_scalar(&|m, e| m.beta += e);
+                assert!(
+                    (fdb - g.dbeta).abs() <= 1e-3 * fdb.abs().max(1.0),
+                    "{name} dbeta: fd {fdb} vs an {}",
+                    g.dbeta
+                );
+                let fdg = fd_scalar(&|m, e| m.gamma += e);
+                assert!(
+                    (fdg - g.dgamma).abs() <= 1e-3 * fdg.abs().max(1.0),
+                    "{name} dgamma: fd {fdg} vs an {}",
+                    g.dgamma
+                );
+            }
+            if kind.uses_ssmax_scale() {
+                let fds = fd_scalar(&|m, e| m.sscale += e);
+                assert!(
+                    (fds - g.dsscale).abs() <= 1e-3 * fds.abs().max(1.0),
+                    "{name} dsscale: fd {fds} vs an {}",
+                    g.dsscale
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,692 @@
+//! Native differentiable training for [`NativeModel`] (DESIGN.md
+//! §Training seam): an explicit activation tape ([`TrainTape`]) built by
+//! [`NativeModel::forward_train`], and a hand-derived reverse pass
+//! ([`NativeModel::backward`]) producing gradients for **every**
+//! parameter — weights, embeddings, LayerNorm gains/biases, and each
+//! normalizer's own learnables (per-(layer, head) β/γ for the ConSmax
+//! family, the SSMax scale) through
+//! [`HeadNorm::backward_row`](crate::runtime::backend::normalizer::HeadNorm).
+//!
+//! The autodiff here is deliberately small and legible: five kernel
+//! transposes (matmul, LayerNorm, GELU, embedding gather,
+//! softmax-cross-entropy) plus one normalizer rule per zoo member.
+//! ConSmax's is the paper's training claim in one line — `∂p/∂s = p`,
+//! a diagonal Jacobian with no cross-key coupling — which is why the
+//! attention backward below has no per-row reduction on the ConSmax
+//! path either.
+//!
+//! Orientation note: the model stores its four projection matrices
+//! **pre-transposed** (`params_t`, `[l, dout, din]`), so the activation
+//! gradient `dx = dy @ W^T` is a *plain* row-major [`native::matmul`]
+//! against the stored tile — no transpose is ever materialized in the
+//! backward pass. Weight gradients come out in canonical `(din, dout)`
+//! orientation via [`native::matmul_at_b_acc`] (`dW = x^T @ dy`),
+//! matching the `ParamStore`/checkpoint layout the optimizer updates.
+//!
+//! Everything is f32 with fixed serial reduction orders; the pass is
+//! pinned by central-finite-difference gradcheck over every normalizer
+//! (`rust/tests/gradcheck.rs`) and the loss-decrease integration suite
+//! (`rust/tests/train_native.rs`).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::runtime::backend::model::NativeModel;
+use crate::runtime::backend::native;
+use crate::runtime::backend::normalizer::Normalizer;
+
+/// Per-layer saved activations (all row-major; `rows = b * t`).
+struct LayerTape {
+    /// Residual stream entering the layer (`rows, d`).
+    x_in: Vec<f32>,
+    /// ln1 output (`rows, d`).
+    xn1: Vec<f32>,
+    /// Fused QKV projection output (`rows, 3d`).
+    qkv: Vec<f32>,
+    /// Attention probabilities, `(b·h, t, t)` causal row-major — entry
+    /// `(r·h+hh)·t² + i·t + j` holds `p_ij` for `j ≤ i`, zero above the
+    /// diagonal. For the ConSmax family these are the *unnormalized*
+    /// streaming probabilities (no row sum exists — the paper's point).
+    probs: Vec<f32>,
+    /// Raw pre-scale attention scores, same layout as `probs` — taped
+    /// only for `ssmax`, whose backward needs them (empty otherwise).
+    raw: Vec<f32>,
+    /// Head-gathered attention output (`rows, d`).
+    att: Vec<f32>,
+    /// Residual stream after the attention projection (`rows, d`) —
+    /// the ln2 input.
+    x_mid: Vec<f32>,
+    /// ln2 output (`rows, d`).
+    xn2: Vec<f32>,
+    /// MLP fc output before GELU (`rows, 4d`).
+    hid_pre: Vec<f32>,
+    /// MLP fc output after GELU (`rows, 4d`).
+    hid_post: Vec<f32>,
+}
+
+/// The activation tape of one training forward: everything
+/// [`NativeModel::backward`] needs, and nothing it can cheaply
+/// recompute (LayerNorm μ/σ are re-derived from the saved inputs).
+pub struct TrainTape {
+    b: usize,
+    t: usize,
+    layers: Vec<LayerTape>,
+    /// Final residual stream (`rows, d`) — the lnf input.
+    xf_in: Vec<f32>,
+    /// lnf output feeding the tied LM head (`rows, d`).
+    xf: Vec<f32>,
+    /// LM-head logits (`rows, vocab`).
+    logits: Vec<f32>,
+    /// Mean next-token cross-entropy over all `(b, t)` positions.
+    pub loss: f64,
+}
+
+impl NativeModel {
+    /// Training forward over a flat `(b, t)` batch: same math as
+    /// [`NativeModel::forward`] (identical kernels and accumulation
+    /// order, so the taped loss is bit-equal to [`NativeModel::loss`]),
+    /// but every intermediate the reverse pass needs is saved on the
+    /// returned [`TrainTape`], including per-(row, head) attention
+    /// probability rows — materialized uniformly for all five
+    /// normalizers via `HeadNorm::normalize_row`.
+    pub fn forward_train(
+        &self,
+        x: &[i32],
+        y: &[i32],
+        b: usize,
+        t: usize,
+    ) -> Result<TrainTape> {
+        let cfg = &self.cfg;
+        let (d, h, hd, v) = (cfg.n_embd, cfg.n_head, cfg.head_dim(), cfg.vocab);
+        ensure!(
+            !self.quant_mode().is_int8(),
+            "native training runs on the f32 kernels (--quant off)"
+        );
+        ensure!(x.len() == b * t, "token buffer is not (b={b}, t={t})");
+        ensure!(y.len() == x.len(), "x/y length mismatch");
+        ensure!(t >= 1 && t <= cfg.ctx, "sequence length {t} vs ctx {}", cfg.ctx);
+        for &tok in x.iter().chain(y) {
+            ensure!(
+                (0..v as i32).contains(&tok),
+                "token id {tok} outside vocab {v}"
+            );
+        }
+
+        let wte = self.p("wte");
+        let wpe = self.p("wpe");
+        let rows = b * t;
+        let mut xs = vec![0.0f32; rows * d];
+        for r in 0..b {
+            for i in 0..t {
+                let tok = x[r * t + i] as usize;
+                let out = &mut xs[(r * t + i) * d..(r * t + i + 1) * d];
+                let te = &wte[tok * d..(tok + 1) * d];
+                let pe = &wpe[i * d..(i + 1) * d];
+                for ((o, &a), &p) in out.iter_mut().zip(te).zip(pe) {
+                    *o = a + p;
+                }
+            }
+        }
+
+        let taped_raw = self.norm == Normalizer::Ssmax;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut layers = Vec::with_capacity(cfg.n_layer);
+        for l in 0..cfg.n_layer {
+            let x_in = xs.clone();
+            let xn1 = native::layer_norm(
+                &xs,
+                self.layer("ln1_g", l, d),
+                self.layer("ln1_b", l, d),
+                d,
+            );
+            let mut qkv = vec![0.0f32; rows * 3 * d];
+            self.affine_layer(
+                &xn1,
+                "attn_qkv_w",
+                "attn_qkv_b",
+                l,
+                rows,
+                d,
+                3 * d,
+                &mut qkv,
+            );
+
+            // causal attention with the probability rows taped; per-key
+            // accumulation order matches the serving forward exactly
+            let mut probs = vec![0.0f32; b * h * t * t];
+            let mut raw =
+                if taped_raw { vec![0.0f32; b * h * t * t] } else { Vec::new() };
+            let mut att = vec![0.0f32; rows * d];
+            for r in 0..b {
+                for hh in 0..h {
+                    let hn = self.head_norm(l, hh);
+                    let tile = (r * h + hh) * t * t;
+                    for i in 0..t {
+                        let qoff = (r * t + i) * 3 * d + hh * hd;
+                        let q = &qkv[qoff..qoff + hd];
+                        let prow = &mut probs[tile + i * t..tile + i * t + i + 1];
+                        for (j, o) in prow.iter_mut().enumerate() {
+                            let koff = (r * t + j) * 3 * d + d + hh * hd;
+                            *o = native::dot(q, &qkv[koff..koff + hd]) * scale;
+                        }
+                        if taped_raw {
+                            raw[tile + i * t..tile + i * t + i + 1]
+                                .copy_from_slice(prow);
+                        }
+                        hn.normalize_row(prow);
+                        for j in 0..=i {
+                            let pj = probs[tile + i * t + j];
+                            let voff = (r * t + j) * 3 * d + 2 * d + hh * hd;
+                            let yrow = &mut att
+                                [(r * t + i) * d + hh * hd..(r * t + i) * d + (hh + 1) * hd];
+                            let vrow = &qkv[voff..voff + hd];
+                            for (o, &vv) in yrow.iter_mut().zip(vrow) {
+                                *o += pj * vv;
+                            }
+                        }
+                    }
+                }
+            }
+
+            let mut proj = vec![0.0f32; rows * d];
+            self.affine_layer(
+                &att,
+                "attn_proj_w",
+                "attn_proj_b",
+                l,
+                rows,
+                d,
+                d,
+                &mut proj,
+            );
+            for (xv, pv) in xs.iter_mut().zip(&proj) {
+                *xv += pv;
+            }
+            let x_mid = xs.clone();
+
+            let xn2 = native::layer_norm(
+                &xs,
+                self.layer("ln2_g", l, d),
+                self.layer("ln2_b", l, d),
+                d,
+            );
+            let mut hid_pre = vec![0.0f32; rows * 4 * d];
+            self.affine_layer(
+                &xn2,
+                "mlp_fc_w",
+                "mlp_fc_b",
+                l,
+                rows,
+                d,
+                4 * d,
+                &mut hid_pre,
+            );
+            let hid_post: Vec<f32> =
+                hid_pre.iter().map(|&hv| native::gelu(hv)).collect();
+            let mut mo = vec![0.0f32; rows * d];
+            self.affine_layer(
+                &hid_post,
+                "mlp_proj_w",
+                "mlp_proj_b",
+                l,
+                rows,
+                4 * d,
+                d,
+                &mut mo,
+            );
+            for (xv, mv) in xs.iter_mut().zip(&mo) {
+                *xv += mv;
+            }
+
+            layers.push(LayerTape {
+                x_in,
+                xn1,
+                qkv,
+                probs,
+                raw,
+                att,
+                x_mid,
+                xn2,
+                hid_pre,
+                hid_post,
+            });
+        }
+
+        let xf_in = xs.clone();
+        let xf = native::layer_norm(&xs, self.p("lnf_g"), self.p("lnf_b"), d);
+        let mut logits = vec![0.0f32; rows * v];
+        self.lm_head_into(&xf, rows, &mut logits);
+
+        let mut total = 0.0f64;
+        for (pos, &target) in y.iter().enumerate() {
+            let row = &logits[pos * v..(pos + 1) * v];
+            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let lse = m + row.iter().map(|&lg| (lg - m).exp()).sum::<f32>().ln();
+            total += (lse - row[target as usize]) as f64;
+        }
+        let loss = total / y.len() as f64;
+
+        Ok(TrainTape { b, t, layers, xf_in, xf, logits, loss })
+    }
+
+    /// Reverse pass over a [`TrainTape`]: gradients of the mean
+    /// cross-entropy w.r.t. every parameter, keyed by canonical name in
+    /// canonical (untransposed, layer-stacked) orientation — exactly
+    /// the `ParamStore` layout the AdamW step updates. β/γ grads are
+    /// always present (zero when the normalizer doesn't own them), so
+    /// the optimizer loop never special-cases the zoo.
+    pub fn backward(
+        &self,
+        tape: &TrainTape,
+        x: &[i32],
+        y: &[i32],
+    ) -> Result<BTreeMap<String, Vec<f32>>> {
+        let cfg = &self.cfg;
+        let (d, h, hd, v) = (cfg.n_embd, cfg.n_head, cfg.head_dim(), cfg.vocab);
+        let (b, t) = (tape.b, tape.t);
+        let rows = b * t;
+        ensure!(x.len() == rows && y.len() == rows, "tape/batch mismatch");
+        ensure!(tape.layers.len() == cfg.n_layer, "tape depth mismatch");
+
+        let mut grads: BTreeMap<String, Vec<f32>> = BTreeMap::new();
+        for name in &cfg.param_order {
+            let n: usize = cfg.shape_of(name)?.iter().product();
+            grads.insert(name.clone(), vec![0.0f32; n]);
+        }
+
+        // -- cross-entropy + LM head ---------------------------------
+        // dlogits = (softmax(logits) − onehot(y)) / N over all positions
+        let n_inv = 1.0f32 / rows as f32;
+        let mut dlogits = vec![0.0f32; rows * v];
+        for pos in 0..rows {
+            let row = &tape.logits[pos * v..(pos + 1) * v];
+            let drow = &mut dlogits[pos * v..(pos + 1) * v];
+            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0f32;
+            for (o, &lg) in drow.iter_mut().zip(row) {
+                *o = (lg - m).exp();
+                sum += *o;
+            }
+            for o in drow.iter_mut() {
+                *o = *o / sum * n_inv;
+            }
+            drow[y[pos] as usize] -= n_inv;
+        }
+
+        // tied head: logits = xf @ wte^T, so dxf = dlogits @ wte and
+        // the head's wte contribution is dlogits^T @ xf
+        let wte = self.p("wte");
+        let mut dx = native::matmul(&dlogits, wte, rows, v, d);
+        {
+            let dwte = grads.get_mut("wte").expect("schema");
+            native::matmul_at_b_acc(&dlogits, &tape.xf, rows, v, d, dwte);
+        }
+
+        // -- final LayerNorm -----------------------------------------
+        let mut dxf_in = vec![0.0f32; rows * d];
+        {
+            let [dg, db] = two_grads(&mut grads, "lnf_g", "lnf_b");
+            native::layer_norm_backward(
+                &tape.xf_in,
+                self.p("lnf_g"),
+                &dx,
+                d,
+                &mut dxf_in,
+                dg,
+                db,
+            );
+        }
+        dx = dxf_in;
+
+        // -- transformer blocks, reversed ----------------------------
+        let scale = 1.0 / (hd as f32).sqrt();
+        for l in (0..cfg.n_layer).rev() {
+            let tp = &tape.layers[l];
+
+            // MLP proj: x_out = x_mid + hid_post @ W + b. The stored
+            // tile is W^T, so dy @ W^T is a plain matmul against it.
+            let dmo = &dx; // (rows, d)
+            let dhid_post = native::matmul(
+                dmo,
+                self.layer_t("mlp_proj_w", l, 4 * d * d),
+                rows,
+                d,
+                4 * d,
+            );
+            accumulate_affine_grads(
+                &mut grads,
+                "mlp_proj_w",
+                "mlp_proj_b",
+                l,
+                &tp.hid_post,
+                dmo,
+                rows,
+                4 * d,
+                d,
+            );
+
+            // GELU
+            let dhid_pre: Vec<f32> = dhid_post
+                .iter()
+                .zip(&tp.hid_pre)
+                .map(|(&dv, &pre)| dv * native::gelu_grad(pre))
+                .collect();
+
+            // MLP fc
+            let dxn2 = native::matmul(
+                &dhid_pre,
+                self.layer_t("mlp_fc_w", l, d * 4 * d),
+                rows,
+                4 * d,
+                d,
+            );
+            accumulate_affine_grads(
+                &mut grads,
+                "mlp_fc_w",
+                "mlp_fc_b",
+                l,
+                &tp.xn2,
+                &dhid_pre,
+                rows,
+                d,
+                4 * d,
+            );
+
+            // ln2 (+ the residual stream around the MLP)
+            let mut dx_mid = vec![0.0f32; rows * d];
+            {
+                let [dg, db] = two_grads(&mut grads, "ln2_g", "ln2_b");
+                native::layer_norm_backward(
+                    &tp.x_mid,
+                    self.layer("ln2_g", l, d),
+                    &dxn2,
+                    d,
+                    &mut dx_mid,
+                    &mut dg[l * d..(l + 1) * d],
+                    &mut db[l * d..(l + 1) * d],
+                );
+            }
+            for (o, &r) in dx_mid.iter_mut().zip(dx.iter()) {
+                *o += r;
+            }
+
+            // attention projection
+            let datt = native::matmul(
+                &dx_mid,
+                self.layer_t("attn_proj_w", l, d * d),
+                rows,
+                d,
+                d,
+            );
+            accumulate_affine_grads(
+                &mut grads,
+                "attn_proj_w",
+                "attn_proj_b",
+                l,
+                &tp.att,
+                &dx_mid,
+                rows,
+                d,
+                d,
+            );
+
+            // attention core: probs/raw from the tape, normalizer rule
+            // from the seam, q/k/v grads written straight into dqkv
+            let mut dqkv = vec![0.0f32; rows * 3 * d];
+            let mut dprow = vec![0.0f32; t];
+            let mut dsrow = vec![0.0f32; t];
+            for r in 0..b {
+                for hh in 0..h {
+                    let hn = self.head_norm(l, hh);
+                    let tile = (r * h + hh) * t * t;
+                    for i in 0..t {
+                        let dy =
+                            &datt[(r * t + i) * d + hh * hd..(r * t + i) * d + (hh + 1) * hd];
+                        let prow = &tp.probs[tile + i * t..tile + i * t + i + 1];
+                        // dp_j = dy·v_j ; dv_j += p_ij · dy
+                        for (j, dp) in dprow[..=i].iter_mut().enumerate() {
+                            let voff = (r * t + j) * 3 * d + 2 * d + hh * hd;
+                            *dp = native::dot(dy, &tp.qkv[voff..voff + hd]);
+                            let dvrow = &mut dqkv[voff..voff + hd];
+                            let pj = prow[j];
+                            for (o, &dyv) in dvrow.iter_mut().zip(dy) {
+                                *o += pj * dyv;
+                            }
+                        }
+                        let rrow = if tp.raw.is_empty() {
+                            &[]
+                        } else {
+                            &tp.raw[tile + i * t..tile + i * t + i + 1]
+                        };
+                        let ng = hn.backward_row(
+                            prow,
+                            &dprow[..=i],
+                            rrow,
+                            &mut dsrow[..=i],
+                        );
+                        if hn.kind.uses_beta_gamma() {
+                            let gb = grads.get_mut("beta").expect("schema");
+                            gb[l * h + hh] += ng.dbeta;
+                            let gg = grads.get_mut("gamma").expect("schema");
+                            gg[l * h + hh] += ng.dgamma;
+                        }
+                        if hn.kind.uses_ssmax_scale() {
+                            let gs = grads.get_mut("ssmax_s").expect("schema");
+                            gs[l * h + hh] += ng.dsscale;
+                        }
+                        // dq_i += ds_j·scale·k_j ; dk_j += ds_j·scale·q_i
+                        let qoff = (r * t + i) * 3 * d + hh * hd;
+                        let q: Vec<f32> = tp.qkv[qoff..qoff + hd].to_vec();
+                        for (j, &ds) in dsrow[..=i].iter().enumerate() {
+                            let koff = (r * t + j) * 3 * d + d + hh * hd;
+                            let dsc = ds * scale;
+                            {
+                                let dqrow = &mut dqkv[qoff..qoff + hd];
+                                let krow = &tp.qkv[koff..koff + hd];
+                                for (o, &kv) in dqrow.iter_mut().zip(krow) {
+                                    *o += dsc * kv;
+                                }
+                            }
+                            let dkrow = &mut dqkv[koff..koff + hd];
+                            for (o, &qv) in dkrow.iter_mut().zip(&q) {
+                                *o += dsc * qv;
+                            }
+                        }
+                    }
+                }
+            }
+
+            // fused QKV projection
+            let dxn1 = native::matmul(
+                &dqkv,
+                self.layer_t("attn_qkv_w", l, d * 3 * d),
+                rows,
+                3 * d,
+                d,
+            );
+            accumulate_affine_grads(
+                &mut grads,
+                "attn_qkv_w",
+                "attn_qkv_b",
+                l,
+                &tp.xn1,
+                &dqkv,
+                rows,
+                d,
+                3 * d,
+            );
+
+            // ln1 (+ the residual stream around attention)
+            let mut dx_in = vec![0.0f32; rows * d];
+            {
+                let [dg, db] = two_grads(&mut grads, "ln1_g", "ln1_b");
+                native::layer_norm_backward(
+                    &tp.x_in,
+                    self.layer("ln1_g", l, d),
+                    &dxn1,
+                    d,
+                    &mut dx_in,
+                    &mut dg[l * d..(l + 1) * d],
+                    &mut db[l * d..(l + 1) * d],
+                );
+            }
+            for (o, &r) in dx_in.iter_mut().zip(&dx_mid) {
+                *o += r;
+            }
+            dx = dx_in;
+        }
+
+        // -- embeddings ----------------------------------------------
+        {
+            let dwte = grads.get_mut("wte").expect("schema");
+            for (pos, &tok) in x.iter().enumerate() {
+                let src = &dx[pos * d..(pos + 1) * d];
+                let dst = &mut dwte[tok as usize * d..(tok as usize + 1) * d];
+                for (o, &s) in dst.iter_mut().zip(src) {
+                    *o += s;
+                }
+            }
+        }
+        {
+            let dwpe = grads.get_mut("wpe").expect("schema");
+            for pos in 0..rows {
+                let i = pos % t;
+                let src = &dx[pos * d..(pos + 1) * d];
+                let dst = &mut dwpe[i * d..(i + 1) * d];
+                for (o, &s) in dst.iter_mut().zip(src) {
+                    *o += s;
+                }
+            }
+        }
+        Ok(grads)
+    }
+}
+
+/// Accumulate one layer's affine gradients in canonical orientation:
+/// `dW[l] += x^T @ dy` (`(din, dout)`) and `db[l] += Σ_rows dy`.
+#[allow(clippy::too_many_arguments)]
+fn accumulate_affine_grads(
+    grads: &mut BTreeMap<String, Vec<f32>>,
+    w_name: &str,
+    b_name: &str,
+    l: usize,
+    x: &[f32],
+    dy: &[f32],
+    rows: usize,
+    din: usize,
+    dout: usize,
+) {
+    {
+        let dw = grads.get_mut(w_name).expect("schema");
+        let per = din * dout;
+        native::matmul_at_b_acc(
+            x,
+            dy,
+            rows,
+            din,
+            dout,
+            &mut dw[l * per..(l + 1) * per],
+        );
+    }
+    let db = grads.get_mut(b_name).expect("schema");
+    let brow = &mut db[l * dout..(l + 1) * dout];
+    for drow in dy.chunks_exact(dout) {
+        for (o, &dv) in brow.iter_mut().zip(drow) {
+            *o += dv;
+        }
+    }
+}
+
+/// Disjoint mutable grad buffers for a gain/bias pair (the map holds
+/// each under its own key, so two `get_mut`s need a split borrow).
+fn two_grads<'a>(
+    grads: &'a mut BTreeMap<String, Vec<f32>>,
+    a: &str,
+    b: &str,
+) -> [&'a mut Vec<f32>; 2] {
+    debug_assert_ne!(a, b);
+    let mut ga: Option<&mut Vec<f32>> = None;
+    let mut gb: Option<&mut Vec<f32>> = None;
+    for (k, val) in grads.iter_mut() {
+        if k == a {
+            ga = Some(val);
+        } else if k == b {
+            gb = Some(val);
+        }
+    }
+    [ga.expect("schema"), gb.expect("schema")]
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::ModelConfig;
+    use crate::runtime::backend::NativeModel;
+    use crate::runtime::HostTensor;
+    use crate::util::rng::Pcg32;
+
+    fn tiny_model(normalizer: &str) -> NativeModel {
+        let cfg = ModelConfig::builtin("tiny", normalizer).unwrap();
+        let mut rng = Pcg32::seeded(7);
+        let mut tensors = Vec::new();
+        for name in cfg.param_order.clone() {
+            let shape = cfg.shape_of(&name).unwrap().to_vec();
+            let n: usize = shape.iter().product();
+            let vals: Vec<f32> = match name.as_str() {
+                "ln1_g" | "ln2_g" | "lnf_g" => vec![1.0; n],
+                "beta" => vec![1.5; n],
+                "gamma" => vec![100.0; n],
+                "ssmax_s" => vec![0.43; n],
+                _ if name.ends_with("_b") => vec![0.0; n],
+                _ => rng.normal_vec_f32(n, 0.0, 0.02),
+            };
+            tensors.push(HostTensor::from_f32(&vals, &shape));
+        }
+        NativeModel::from_params(&cfg, &cfg.param_order, &tensors).unwrap()
+    }
+
+    #[test]
+    fn forward_train_loss_matches_eval_loss() {
+        // the tape-building forward runs the same kernels in the same
+        // order as the serving forward — losses agree to f32 roundoff
+        for norm in ["consmax", "softmax", "softermax", "consmax-v2", "ssmax"] {
+            let m = tiny_model(norm);
+            let x: Vec<i32> = (0..2 * 16).map(|i| (i * 7) % 256).collect();
+            let y: Vec<i32> = (0..2 * 16).map(|i| (i * 7 + 1) % 256).collect();
+            let tape = m.forward_train(&x, &y, 2, 16).unwrap();
+            let eval = m.loss(&x, &y, 2, 16).unwrap();
+            assert!(
+                (tape.loss - eval).abs() < 1e-6,
+                "{norm}: {} vs {eval}",
+                tape.loss
+            );
+        }
+    }
+
+    #[test]
+    fn backward_produces_full_schema_and_finite_grads() {
+        for norm in ["consmax", "ssmax"] {
+            let m = tiny_model(norm);
+            let x: Vec<i32> = (0..2 * 8).map(|i| (i * 11) % 256).collect();
+            let y: Vec<i32> = (0..2 * 8).map(|i| (i * 11 + 1) % 256).collect();
+            let tape = m.forward_train(&x, &y, 2, 8).unwrap();
+            let grads = m.backward(&tape, &x, &y).unwrap();
+            assert_eq!(grads.len(), m.cfg.param_order.len(), "{norm}");
+            for (name, g) in &grads {
+                let want: usize =
+                    m.cfg.shape_of(name).unwrap().iter().product();
+                assert_eq!(g.len(), want, "{norm}/{name}");
+                assert!(
+                    g.iter().all(|v| v.is_finite()),
+                    "{norm}/{name}: non-finite grad"
+                );
+            }
+            // the learnable-normalizer grads actually flow
+            let key = if norm == "ssmax" { "ssmax_s" } else { "beta" };
+            assert!(
+                grads[key].iter().any(|&v| v != 0.0),
+                "{norm}: no gradient reached {key}"
+            );
+        }
+    }
+}

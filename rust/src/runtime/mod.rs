@@ -18,9 +18,10 @@
 //!   DESIGN.md §3).
 //!
 //! The coordinator layers (trainer/server/CLI) talk to whichever backend
-//! is selected; training requires the AOT `train_step` and therefore the
-//! `pjrt` feature, while evaluation, generation and serving also run on
-//! the native backend.
+//! is selected; training, evaluation, generation and serving all run on
+//! the native backend (`backend::train` supplies the activation tape +
+//! backward pass — DESIGN.md §Training seam), while the `pjrt` feature
+//! adds the fused AOT `train_step` and the Fig 8 init sweep.
 //!
 //! [`parallel`] is the native compute layer's std-only worker pool
 //! (`--threads` / `CONSMAX_THREADS`); its determinism contract — thread

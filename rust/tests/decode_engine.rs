@@ -3,8 +3,9 @@
 //!
 //! * greedy KV decode is **token-identical** to the recompute oracle
 //!   (`NativeModel::next_logits`) and logit-identical within 1e-5, for
-//!   all three normalizers, including sequences past `ctx` (ring
-//!   eviction + window re-encode);
+//!   the whole normalizer zoo (softmax, consmax, softermax, consmax-v2,
+//!   ssmax), including sequences past `ctx` (ring eviction + window
+//!   re-encode);
 //! * a prompt in a ragged batch decodes exactly as it would alone
 //!   (the left-pad pollution fix);
 //! * each request is sampled at its own temperature (not `batch[0]`'s);
@@ -21,7 +22,8 @@ use consmax::coordinator::{
 };
 use consmax::runtime::backend::{DecodeSession, NativeModel};
 
-const NORMALIZERS: [&str; 3] = ["consmax", "softmax", "softermax"];
+const NORMALIZERS: [&str; 5] =
+    ["consmax", "softmax", "softermax", "consmax-v2", "ssmax"];
 
 fn tiny_model(norm: &str, seed: u64) -> NativeModel {
     tiny_model_quant(norm, seed, QuantMode::Off)

@@ -3,8 +3,9 @@
 //!
 //! * a **paged f32** session is *bitwise identical* to the dense oracle
 //!   — prefill, incremental decode, ring eviction + window re-encode —
-//!   for all three normalizers and for block sizes that do and don't
-//!   divide the context;
+//!   for the whole normalizer zoo (softmax, consmax, softermax,
+//!   consmax-v2, ssmax) and for block sizes that do and don't divide
+//!   the context;
 //! * **fp16/bf16 KV** tracks the dense logits within the documented
 //!   tolerances (EXPERIMENTS.md §KV memory scaling);
 //! * **int8 KV** (one byte per element + a per-vector power-of-two
@@ -25,7 +26,8 @@ use consmax::config::{KvCacheConfig, KvDtype, ModelConfig};
 use consmax::coordinator::{GenRequest, Generator, ParamStore, Server};
 use consmax::runtime::backend::{DecodeSession, NativeModel};
 
-const NORMALIZERS: [&str; 3] = ["consmax", "softmax", "softermax"];
+const NORMALIZERS: [&str; 5] =
+    ["consmax", "softmax", "softermax", "consmax-v2", "ssmax"];
 
 /// Documented closeness bound for f16 KV storage vs the f32 oracle
 /// (relative, with a 1.0 absolute floor in the denominator).
