@@ -185,6 +185,7 @@ fn main() -> Result<()> {
             // each request's own temperature
             temperature: if id % 3 == 0 { 0.0 } else { 0.8 },
             stop: None,
+            deadline_ms: None,
         }));
     }
 

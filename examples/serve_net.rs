@@ -1,0 +1,231 @@
+//! Network-serving demo: the hardened TCP/HTTP front end exercised by
+//! real sockets — a well-behaved streaming client, a client that
+//! vanishes mid-stream, a malformed request, a stats probe, and a
+//! graceful drain — all in one process.
+//!
+//! The serve loop runs on the main thread (`serve_net::serve` owns the
+//! engine); a driver thread plays the clients against the ephemeral
+//! port and then requests the drain. Runs on the native KV-cached
+//! decode engine from a bare checkout: no Python, no PJRT, no
+//! artifacts, and no checkpoint needed (random weights still exercise
+//! the full path).
+//!
+//! Run: `cargo run --release --example serve_net -- [requests] [max_new]`
+//! (defaults 6 and 12). See `consmax serve-net --help` for the
+//! production CLI over the same stack.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+use consmax::config::ModelConfig;
+use consmax::coordinator::{EngineAdapter, Generator, ParamStore, Server};
+use consmax::runtime::serve_net::{self, FaultPlan, NetOptions};
+
+/// One scripted client: POST /generate, stream the NDJSON response.
+/// `hang_up_after` cuts the connection after that many token lines —
+/// the mid-stream-disconnect client. Returns (status, tokens seen,
+/// reached a terminal line).
+fn client(
+    addr: &str,
+    prompt: &str,
+    max_new: usize,
+    hang_up_after: Option<usize>,
+) -> Result<(u16, usize, bool)> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+    let body = format!(
+        "{{\"prompt\":\"{prompt}\",\"max_new\":{max_new}}}"
+    );
+    write!(
+        stream,
+        "POST /generate HTTP/1.1\r\nHost: demo\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )?;
+    stream.flush()?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .context("no status code")?;
+    // skip headers
+    loop {
+        let mut h = String::new();
+        if reader.read_line(&mut h)? == 0 || h.trim().is_empty() {
+            break;
+        }
+    }
+    if status != 200 {
+        return Ok((status, 0, false));
+    }
+    let mut tokens = 0usize;
+    let mut terminal = false;
+    loop {
+        let mut l = String::new();
+        if reader.read_line(&mut l)? == 0 {
+            break;
+        }
+        if l.contains("\"token\"") {
+            tokens += 1;
+            if hang_up_after.is_some_and(|n| tokens >= n) {
+                return Ok((status, tokens, false)); // vanish mid-stream
+            }
+        } else if l.contains("\"done\"")
+            || l.contains("\"timeout\"")
+            || l.contains("\"cancelled\"")
+        {
+            terminal = true;
+            break;
+        } // heartbeats ({"hb":1}) fall through
+    }
+    Ok((status, tokens, terminal))
+}
+
+/// A deliberately malformed request; returns the status line.
+fn malformed_client(addr: &str) -> Result<u16> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    write!(stream, "NONSENSE /nowhere HTTP/1.1\r\n\r\n")?;
+    stream.flush()?;
+    let mut line = String::new();
+    BufReader::new(stream).read_line(&mut line)?;
+    Ok(line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0))
+}
+
+fn stats_client(addr: &str) -> Result<String> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    write!(stream, "GET /stats HTTP/1.1\r\n\r\n")?;
+    stream.flush()?;
+    let mut reader = BufReader::new(stream);
+    let mut body = String::new();
+    loop {
+        let mut l = String::new();
+        if reader.read_line(&mut l)? == 0 {
+            break;
+        }
+        if l.trim_start().starts_with('{') {
+            body = l.trim().to_string();
+        }
+    }
+    Ok(body)
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let n_requests: usize =
+        args.get(1).and_then(|s| s.parse().ok()).unwrap_or(6);
+    let max_new: usize =
+        args.get(2).and_then(|s| s.parse().ok()).unwrap_or(12);
+
+    let cfg = ModelConfig::builtin("tiny", "consmax")?;
+    let ckpt = std::path::Path::new("runs/tiny_consmax.ckpt");
+    let store = if ckpt.exists() {
+        println!("loading checkpoint {}", ckpt.display());
+        ParamStore::load(ckpt, &cfg)?
+    } else {
+        println!("no checkpoint; serving random weights");
+        ParamStore::init(&cfg, 0)?
+    };
+    let generator = Generator::native(&cfg, &store, 7)?;
+    let server = Server::new(generator);
+    // bounded admission: shed past 32 queued; no default deadline
+    let mut engine = EngineAdapter::new(server, Some(32), None, None)?;
+
+    serve_net::reset_drain();
+    let listener = serve_net::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    println!("serving on http://{addr}\n");
+
+    // the clients run against the socket while serve() blocks below
+    let client_addr = addr.clone();
+    let driver = std::thread::spawn(move || -> Vec<String> {
+        let mut out = Vec::new();
+        let mut handles = Vec::new();
+        for i in 0..n_requests {
+            let a = client_addr.clone();
+            // client 1 hangs up mid-stream; the rest behave
+            let hang = (i == 1).then_some(2);
+            handles.push(std::thread::spawn(move || {
+                let prompt = format!("The attention mechanism {i} ");
+                (i, hang, client(&a, &prompt, max_new, hang))
+            }));
+        }
+        match malformed_client(&client_addr) {
+            Ok(code) => out.push(format!("malformed request -> {code}")),
+            Err(e) => out.push(format!("malformed request failed: {e:#}")),
+        }
+        for h in handles {
+            let (i, hang, res) = h.join().expect("client thread");
+            match res {
+                Ok((status, tokens, terminal)) => out.push(format!(
+                    "client {i}: status {status}, {tokens} token(s), {}",
+                    if terminal {
+                        "terminal line seen"
+                    } else if hang.is_some() {
+                        "hung up mid-stream"
+                    } else {
+                        "no terminal line"
+                    }
+                )),
+                Err(e) => out.push(format!("client {i} failed: {e:#}")),
+            }
+        }
+        match stats_client(&client_addr) {
+            Ok(body) => out.push(format!("stats: {body}")),
+            Err(e) => out.push(format!("stats probe failed: {e:#}")),
+        }
+        serve_net::request_drain();
+        out
+    });
+
+    let opts = NetOptions {
+        queue_cap: 32,
+        heartbeat_ms: 250,
+        drain_timeout_ms: 5_000,
+        ..NetOptions::default()
+    };
+    let report =
+        serve_net::serve(&mut engine, listener, &opts, &FaultPlan::default())?;
+
+    for line in driver.join().expect("driver thread") {
+        println!("{line}");
+    }
+    let server = engine.into_server();
+    println!(
+        "\ndrained ({}): admitted {} completed {} shed {} rejected {} \
+         disconnects {} slow-readers {} over {} ticks",
+        if report.drained_clean { "clean" } else { "forced" },
+        report.admitted,
+        report.completed,
+        report.shed,
+        report.rejected,
+        report.disconnects,
+        report.slow_readers,
+        report.ticks,
+    );
+    println!(
+        "terminal accounting: {} submitted == {} completed + {} shed + {} \
+         timed-out + {} cancelled",
+        server.submitted,
+        server.completed,
+        server.shed,
+        server.timed_out,
+        server.cancelled,
+    );
+    assert_eq!(
+        server.submitted,
+        server.completed + server.shed + server.timed_out + server.cancelled,
+        "terminal-state accounting must close"
+    );
+    Ok(())
+}

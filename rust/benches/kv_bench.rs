@@ -75,6 +75,7 @@ fn workload() -> Vec<GenRequest> {
             max_new_tokens: MAX_NEW,
             temperature: 0.0,
             stop: None,
+            deadline_ms: None,
         })
         .collect()
 }

@@ -14,11 +14,22 @@
 //! identical tokens (the equivalence suite pins this per request);
 //! only the scheduling differs. The pool is capped at [`SLOTS`] rows
 //! so the comparison grades the scheduler, not the pool size.
+//!
+//! A third **overload** leg (DESIGN.md §Serving-robustness seam) offers
+//! requests open-loop at [`OVERLOAD_FACTOR`]× the sustainable rate just
+//! measured, with bounded admission ([`OVERLOAD_QUEUE_CAP`] queued).
+//! The gate: the server must *shed* rather than queue unboundedly
+//! (`shed > 0`), every request must reach exactly one terminal state
+//! (`completed + shed == submitted` — zero silent drops), and p99 TTFT
+//! of the admitted requests must stay under
+//! [`OVERLOAD_TTFT_P99_LIMIT_MS`], the documented bound.
 
 use std::time::{Duration, Instant};
 
 use consmax::config::ModelConfig;
-use consmax::coordinator::{GenRequest, Generator, ParamStore, Server};
+use consmax::coordinator::{
+    Admission, GenRequest, Generator, ParamStore, Server,
+};
 use consmax::metrics::LatencyRecorder;
 use consmax::util::bench::print_table;
 use consmax::util::json::Json;
@@ -38,6 +49,15 @@ const MEAN_ARRIVAL_S: f64 = 1e-3;
 const MIN_SPEEDUP: f64 = 1.5;
 /// Measured runs per scheduler; the best-throughput run is reported.
 const RUNS: usize = 2;
+/// Overload leg: offered request rate as a multiple of the sustainable
+/// rate measured on the continuous run.
+const OVERLOAD_FACTOR: f64 = 2.0;
+/// Bounded admission during overload: shed past this queue depth.
+const OVERLOAD_QUEUE_CAP: usize = 8;
+/// Documented bound: p99 TTFT of *admitted* requests under overload.
+/// Bounded admission keeps the queue short, so time-to-first-token
+/// stays near the no-overload p99 instead of growing with backlog.
+const OVERLOAD_TTFT_P99_LIMIT_MS: f64 = 1500.0;
 
 struct RunStats {
     wall_s: f64,
@@ -71,6 +91,7 @@ fn schedule(seed: u64) -> Vec<(f64, GenRequest)> {
             max_new_tokens: if id % 8 == 7 { LONG_NEW } else { SHORT_NEW },
             temperature: 0.0, // greedy: both schedulers emit identical tokens
             stop: None,
+            deadline_ms: None,
         }));
     }
     out
@@ -127,6 +148,63 @@ fn run_schedule(
         ttft_p99_ms: server.ttft.percentile(99.0).unwrap_or(0.0) / 1e3,
         short_lat_p50_ms: short.percentile(50.0).unwrap_or(0.0) / 1e3,
         long_lat_p50_ms: long.percentile(50.0).unwrap_or(0.0) / 1e3,
+    })
+}
+
+struct OverloadStats {
+    offered_qps: f64,
+    wall_s: f64,
+    submitted: u64,
+    admitted: u64,
+    shed: u64,
+    completed: u64,
+    ttft_p99_ms: f64,
+}
+
+/// Offer the same request mix open-loop at `offered_qps` against a
+/// bounded queue; the server decides per arrival: admit or shed.
+fn run_overload(
+    cfg: &ModelConfig,
+    store: &ParamStore,
+    sched: &[(f64, GenRequest)],
+    offered_qps: f64,
+) -> anyhow::Result<OverloadStats> {
+    let generator = Generator::native(cfg, store, 7)?;
+    let mut server = Server::new(generator);
+    server.set_max_batch(SLOTS)?;
+    server.set_admission_limits(Some(OVERLOAD_QUEUE_CAP), None);
+
+    let gap_s = 1.0 / offered_qps;
+    let mut admitted = 0u64;
+    let t0 = Instant::now();
+    let mut next = 0usize;
+    loop {
+        let now = t0.elapsed().as_secs_f64();
+        while next < sched.len() && next as f64 * gap_s <= now {
+            match server.try_submit(sched[next].1.clone()) {
+                Admission::Admitted => admitted += 1,
+                Admission::Shed { .. } => {} // counted in server.shed
+            }
+            next += 1;
+        }
+        let idle = server.pending() == 0 && server.in_flight() == 0;
+        if idle && next >= sched.len() {
+            break; // every admitted request has completed
+        }
+        if idle {
+            std::thread::sleep(Duration::from_micros(100));
+            continue;
+        }
+        server.step()?;
+    }
+    Ok(OverloadStats {
+        offered_qps,
+        wall_s: t0.elapsed().as_secs_f64(),
+        submitted: server.submitted,
+        admitted,
+        shed: server.shed,
+        completed: server.completed,
+        ttft_p99_ms: server.ttft.percentile(99.0).unwrap_or(0.0) / 1e3,
     })
 }
 
@@ -194,6 +272,27 @@ fn main() -> anyhow::Result<()> {
         stat.ttft_p99_ms.round()
     );
 
+    // overload leg: 2x the sustainable request rate just measured,
+    // against a bounded queue — shed, don't queue unboundedly
+    let sustainable_qps = N_REQUESTS as f64 / cont.wall_s;
+    let over =
+        run_overload(&cfg, &store, &sched, OVERLOAD_FACTOR * sustainable_qps)?;
+    let no_silent_drops = over.completed + over.shed == over.submitted
+        && over.admitted == over.completed;
+    let overload_ok = over.shed > 0
+        && no_silent_drops
+        && over.ttft_p99_ms <= OVERLOAD_TTFT_P99_LIMIT_MS;
+    println!(
+        "overload @ {:.0} req/s ({OVERLOAD_FACTOR}x sustainable, queue cap \
+         {OVERLOAD_QUEUE_CAP}): {} offered = {} completed + {} shed; \
+         admitted p99 TTFT {:.0} ms (limit {OVERLOAD_TTFT_P99_LIMIT_MS} ms)",
+        over.offered_qps,
+        over.submitted,
+        over.completed,
+        over.shed,
+        over.ttft_p99_ms,
+    );
+
     let doc = Json::from_pairs([
         ("bench".to_string(), Json::from("serve")),
         ("config".to_string(), Json::from(cfg.key.as_str())),
@@ -211,6 +310,35 @@ fn main() -> anyhow::Result<()> {
         ("speedup".to_string(), Json::from(speedup)),
         ("min_speedup_required".to_string(), Json::from(MIN_SPEEDUP)),
         ("ttft_p99_lower".to_string(), Json::from(ttft_ok)),
+        (
+            "overload".to_string(),
+            Json::from_pairs([
+                ("factor".to_string(), Json::from(OVERLOAD_FACTOR)),
+                ("queue_cap".to_string(), Json::from(OVERLOAD_QUEUE_CAP)),
+                ("offered_qps".to_string(), Json::from(over.offered_qps)),
+                ("wall_s".to_string(), Json::from(over.wall_s)),
+                (
+                    "submitted".to_string(),
+                    Json::from(over.submitted as f64),
+                ),
+                ("admitted".to_string(), Json::from(over.admitted as f64)),
+                ("shed".to_string(), Json::from(over.shed as f64)),
+                (
+                    "completed".to_string(),
+                    Json::from(over.completed as f64),
+                ),
+                ("ttft_p99_ms".to_string(), Json::from(over.ttft_p99_ms)),
+                (
+                    "ttft_p99_limit_ms".to_string(),
+                    Json::from(OVERLOAD_TTFT_P99_LIMIT_MS),
+                ),
+                (
+                    "no_silent_drops".to_string(),
+                    Json::from(no_silent_drops),
+                ),
+            ]),
+        ),
+        ("overload_ok".to_string(), Json::from(overload_ok)),
     ]);
     std::fs::write("BENCH_serve.json", doc.to_string())?;
     println!("wrote BENCH_serve.json");
@@ -220,6 +348,22 @@ fn main() -> anyhow::Result<()> {
             "FAIL: continuous batching must clear {MIN_SPEEDUP}x static \
              token throughput with lower p99 TTFT (got {speedup:.2}x, \
              ttft_p99_lower={ttft_ok}) — see table above"
+        );
+        std::process::exit(1);
+    }
+    if !overload_ok {
+        eprintln!(
+            "FAIL: under {OVERLOAD_FACTOR}x overload the server must shed \
+             (shed={}, want >0), account for every request \
+             (completed {} + shed {} == submitted {}, admitted {} == \
+             completed), and keep admitted p99 TTFT <= \
+             {OVERLOAD_TTFT_P99_LIMIT_MS} ms (got {:.0} ms)",
+            over.shed,
+            over.completed,
+            over.shed,
+            over.submitted,
+            over.admitted,
+            over.ttft_p99_ms,
         );
         std::process::exit(1);
     }

@@ -14,6 +14,7 @@
 //! `hw`/`sim` substrates; this layer is the thin-but-real driver: CLI,
 //! process lifecycle, training/serving loops, metrics.
 
+pub mod net;
 pub mod params;
 pub mod report;
 pub mod server;
@@ -21,11 +22,12 @@ pub mod server;
 pub mod sweep;
 pub mod trainer;
 
+pub use net::EngineAdapter;
 pub use params::ParamStore;
 pub use report::{report_compare, report_run};
 pub use server::{
-    DecodeMode, GenOutput, GenRequest, GenResponse, Generator, ServeStats,
-    Server,
+    Admission, DecodeMode, GenOutput, GenRequest, GenResponse, Generator,
+    ServeEvent, ServeStats, Server,
 };
 #[cfg(feature = "pjrt")]
 pub use sweep::{best_point, sweep_init, SweepOptions, SweepPoint};

@@ -1,0 +1,140 @@
+//! Adapter gluing the coordinator's [`Server`] onto the runtime's
+//! [`ServeEngine`] seam (DESIGN.md §Serving-robustness seam).
+//!
+//! The network front end (`runtime::serve_net`) is layered *below* the
+//! coordinator and therefore defines its own request/event vocabulary;
+//! [`EngineAdapter`] translates: `NetRequest` → [`GenRequest`] (wiring
+//! the CLI's default deadline onto requests that carry none),
+//! [`ServeEvent`] → `NetEvent`, admission and cancellation straight
+//! through, and `GET /stats` onto [`Server::stats`] serialized with the
+//! vendored JSON writer.
+//!
+//! The adapter owns the event-capture toggle: constructing one switches
+//! the server to capture mode so every token/terminal event reaches the
+//! wire; in-process callers that never build an adapter keep paying
+//! nothing.
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::server::{
+    Admission, GenRequest, ServeEvent, Server,
+};
+use crate::runtime::serve_net::{
+    NetAdmission, NetEvent, NetRequest, ServeEngine,
+};
+use crate::util::json::Json;
+
+/// [`ServeEngine`] over a continuous-batching [`Server`].
+pub struct EngineAdapter<'e> {
+    server: Server<'e>,
+    /// Applied to requests that carry no deadline of their own
+    /// (`--deadline-ms`; `None` = no default deadline).
+    default_deadline_ms: Option<u64>,
+}
+
+impl<'e> EngineAdapter<'e> {
+    /// Wrap `server` for network serving: enables lifecycle-event
+    /// capture and installs the admission limits. Requires the
+    /// continuous scheduler (the static batcher has no mid-flight
+    /// cancellation to offer a network client).
+    pub fn new(
+        mut server: Server<'e>,
+        queue_cap: Option<usize>,
+        ttft_limit_ms: Option<f64>,
+        default_deadline_ms: Option<u64>,
+    ) -> Result<EngineAdapter<'e>> {
+        ensure!(
+            server.generator.supports_continuous(),
+            "network serving needs the continuous scheduler \
+             (native KV-cache decode); this generator cannot stream"
+        );
+        server.set_admission_limits(queue_cap, ttft_limit_ms);
+        server.set_event_capture(true);
+        Ok(EngineAdapter { server, default_deadline_ms })
+    }
+
+    /// The wrapped server (stats, KV gauges, recorders).
+    pub fn server(&self) -> &Server<'e> {
+        &self.server
+    }
+
+    /// Unwrap (drain-time inspection in tests and the CLI).
+    pub fn into_server(self) -> Server<'e> {
+        self.server
+    }
+}
+
+fn to_net_event(ev: ServeEvent) -> NetEvent {
+    match ev {
+        ServeEvent::Token { id, token } => NetEvent::Token { id, token },
+        ServeEvent::Completed(r) => NetEvent::Completed {
+            id: r.id,
+            text: r.text,
+            tokens: r.new_tokens,
+            latency_ms: r.latency_ms,
+        },
+        ServeEvent::TimedOut { id } => NetEvent::TimedOut { id },
+        ServeEvent::Cancelled { id } => NetEvent::Cancelled { id },
+    }
+}
+
+impl<'e> ServeEngine for EngineAdapter<'e> {
+    fn try_admit(&mut self, req: NetRequest) -> NetAdmission {
+        let mut gen =
+            GenRequest::greedy(req.id, req.prompt, req.max_new_tokens);
+        gen.temperature = req.temperature;
+        gen.deadline_ms = req.deadline_ms.or(self.default_deadline_ms);
+        match self.server.try_submit(gen) {
+            Admission::Admitted => NetAdmission::Admitted,
+            Admission::Shed { retry_after_ms } => {
+                NetAdmission::Shed { retry_after_ms }
+            }
+        }
+    }
+
+    fn cancel(&mut self, id: u64) -> bool {
+        self.server.cancel(id)
+    }
+
+    fn tick(&mut self) -> Result<Vec<NetEvent>> {
+        if self.has_work() {
+            self.server.step()?;
+        }
+        // cancellations/timeouts buffered between ticks flush here too
+        Ok(self
+            .server
+            .drain_events()
+            .into_iter()
+            .map(to_net_event)
+            .collect())
+    }
+
+    fn has_work(&self) -> bool {
+        self.server.pending() + self.server.in_flight() > 0
+    }
+
+    fn live_ids(&self) -> Vec<u64> {
+        self.server.live_ids()
+    }
+
+    fn stats_json(&self) -> String {
+        let s = self.server.stats();
+        let mut o = Json::obj();
+        o.set("pending", Json::from(s.pending));
+        o.set("in_flight", Json::from(s.in_flight));
+        o.set("submitted", Json::from(s.submitted as usize));
+        o.set("completed", Json::from(s.completed as usize));
+        o.set("tokens_out", Json::from(s.tokens_out as usize));
+        o.set("shed", Json::from(s.shed as usize));
+        o.set("timed_out", Json::from(s.timed_out as usize));
+        o.set("cancelled", Json::from(s.cancelled as usize));
+        o.set("panics_recovered", Json::from(s.panics_recovered as usize));
+        o.set("preemptions", Json::from(s.preemptions as usize));
+        o.set("kv_paged", Json::from(s.kv_paged));
+        o.set("kv_total_blocks", Json::from(s.kv_total_blocks));
+        o.set("kv_free_blocks", Json::from(s.kv_free_blocks));
+        o.set("kv_shared_blocks", Json::from(s.kv_shared_blocks));
+        o.set("kv_block_tokens", Json::from(s.kv_block_tokens));
+        o.to_string()
+    }
+}

@@ -124,16 +124,18 @@ impl ParamStore {
         }
         header.set("shapes", shapes);
 
-        let mut f = std::fs::File::create(path)
-            .with_context(|| format!("creating {}", path.display()))?;
-        f.write_all(header.to_string().as_bytes())?;
-        f.write_all(&[0u8])?;
-        for group in [&self.params, &self.m, &self.v] {
-            for t in group {
-                f.write_all(&t.data)?;
+        // Atomic (temp + rename): a `consmax train` killed mid-save must
+        // never leave a truncated checkpoint for `--resume` to load.
+        crate::util::atomicio::write_atomic(path, |f| {
+            f.write_all(header.to_string().as_bytes())?;
+            f.write_all(&[0u8])?;
+            for group in [&self.params, &self.m, &self.v] {
+                for t in group {
+                    f.write_all(&t.data)?;
+                }
             }
-        }
-        Ok(())
+            Ok(())
+        })
     }
 
     pub fn load(path: &Path, cfg: &ModelConfig) -> Result<ParamStore> {

@@ -55,7 +55,7 @@
 //! identical prompt prefixes share refcounted copy-on-write blocks.
 //! [`Server::stats`] exposes the occupancy/sharing/preemption gauges.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::marker::PhantomData;
 use std::time::Instant;
 
@@ -68,6 +68,7 @@ use crate::coordinator::params::ParamStore;
 use crate::data::ByteTokenizer;
 use crate::metrics::LatencyRecorder;
 use crate::runtime::backend::{DecodeSession, NativeModel};
+use crate::runtime::parallel;
 #[cfg(feature = "pjrt")]
 use crate::runtime::{Engine, HostTensor};
 use crate::util::rng::Pcg32;
@@ -127,6 +128,27 @@ pub struct GenRequest {
     /// sampled (the stop token itself is not emitted). `None` = run to
     /// `max_new_tokens`.
     pub stop: Option<i32>,
+    /// Optional deadline in ms from `submit`: once it lapses the
+    /// request is dropped by the continuous scheduler's deadline sweep
+    /// — from the queue if still waiting, or mid-flight with its slot
+    /// and paged KV blocks freed — and counted `timed_out`. `None` =
+    /// no deadline. (The static reference scheduler ignores deadlines;
+    /// they are a serving-robustness feature of [`Server::step`].)
+    pub deadline_ms: Option<u64>,
+}
+
+impl GenRequest {
+    /// Greedy, deadline-free request — the common test/bench shape.
+    pub fn greedy(id: u64, prompt: impl Into<String>, max_new_tokens: usize) -> GenRequest {
+        GenRequest {
+            id,
+            prompt: prompt.into(),
+            max_new_tokens,
+            temperature: 0.0,
+            stop: None,
+            deadline_ms: None,
+        }
+    }
 }
 
 /// A completed response.
@@ -631,6 +653,12 @@ fn pick_token(row: &[f32], temperature: f32, rng: &mut Pcg32) -> i32 {
     }
 }
 
+/// Whether `req`'s deadline (relative to its submit time) has lapsed.
+fn deadline_passed(req: &GenRequest, submitted: Instant, now: Instant) -> bool {
+    req.deadline_ms
+        .is_some_and(|d| now.duration_since(submitted).as_millis() as u64 >= d)
+}
+
 /// A queued request plus its arrival time (latency accounting starts
 /// at `submit`, so queue wait is part of every reported latency).
 struct Pending {
@@ -697,10 +725,62 @@ struct Done {
     batch_size: usize,
 }
 
+/// Admission verdict from [`Server::try_submit`] (bounded ingress).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    Admitted,
+    /// Load-shed: queue depth or estimated TTFT crossed the configured
+    /// limit. `retry_after_ms` is the backoff hint a front end should
+    /// surface (HTTP `Retry-After`). The request was **not** enqueued;
+    /// it is counted `submitted` and `shed`.
+    Shed { retry_after_ms: u64 },
+}
+
+/// Per-request lifecycle notification from the continuous scheduler,
+/// captured when [`Server::set_event_capture`] is on (the streaming
+/// front end's feed; off by default so in-process callers pay nothing).
+///
+/// After a preemption or a recovered worker panic a replayed request
+/// re-emits its `Token` events from the start; replay is
+/// output-identical (per-request sampler streams), so streaming
+/// consumers dedupe by position, not content.
+#[derive(Debug, Clone)]
+pub enum ServeEvent {
+    /// One newly generated token on an in-flight request.
+    Token { id: u64, token: i32 },
+    /// Terminal: the request completed and produced a response.
+    Completed(GenResponse),
+    /// Terminal: the deadline sweep dropped the request.
+    TimedOut { id: u64 },
+    /// Terminal: [`Server::cancel`] dropped the request.
+    Cancelled { id: u64 },
+}
+
+impl ServeEvent {
+    /// The request this event belongs to.
+    pub fn id(&self) -> u64 {
+        match self {
+            ServeEvent::Token { id, .. }
+            | ServeEvent::TimedOut { id }
+            | ServeEvent::Cancelled { id } => *id,
+            ServeEvent::Completed(r) => r.id,
+        }
+    }
+}
+
 /// Request-queue server over a [`Generator`], with two schedulers: the
 /// continuous-batching slot pool ([`Server::step`]) and the static
 /// reference batcher ([`Server::run_once`]). See the module docs for
 /// when each applies.
+///
+/// **Terminal-state accounting.** Every request that enters through
+/// [`Server::submit`] / [`Server::try_submit`] increments `submitted`
+/// and ends in exactly one of four terminal counters: `completed`
+/// (response produced), `shed` (bounced at admission), `timed_out`
+/// (deadline sweep), or `cancelled` ([`Server::cancel`]). The chaos
+/// suite (`rust/tests/chaos_serving.rs`) pins
+/// `completed + shed + timed_out + cancelled == submitted` across
+/// randomized churn with faults injected at every seam.
 pub struct Server<'e> {
     pub generator: Generator<'e>,
     queue: VecDeque<Pending>,
@@ -712,8 +792,20 @@ pub struct Server<'e> {
     pub ttft: LatencyRecorder,
     /// Per-request time per output token during decode (µs/token).
     pub tpot: LatencyRecorder,
+    /// Requests accepted by `submit` or judged by `try_submit` (shed
+    /// ones included: a shed is a terminal state, not a non-event).
+    pub submitted: u64,
     pub completed: u64,
     pub tokens_out: u64,
+    /// Requests bounced at admission (`try_submit` over the limits).
+    pub shed: u64,
+    /// Requests dropped by the deadline sweep.
+    pub timed_out: u64,
+    /// Requests dropped by [`Server::cancel`].
+    pub cancelled: u64,
+    /// Decode/prefill worker panics contained and recovered from (all
+    /// residents requeued, session rebuilt, outputs replay-identical).
+    pub panics_recovered: u64,
     /// Whole-request preemptions under paged memory pressure (each one
     /// re-queued at the front and replayed deterministically).
     pub preemptions: u64,
@@ -721,6 +813,18 @@ pub struct Server<'e> {
     /// Paged-KV configuration for the continuous slot pool (None =
     /// dense per-row caches, the original layout).
     kv: Option<KvCacheConfig>,
+    /// Bounded-ingress knobs (`set_admission_limits`): max queue depth
+    /// and max estimated TTFT before `try_submit` sheds.
+    queue_cap: Option<usize>,
+    ttft_limit_ms: Option<f64>,
+    /// Lifecycle event buffer; `None` = capture off (the default).
+    events: Option<Vec<ServeEvent>>,
+    /// Per-request token high-water mark (capture only): a preempted or
+    /// panic-recovered request replays its generation from scratch, and
+    /// replay is bit-identical, so re-fed positions at or below the
+    /// mark are suppressed — [`ServeEvent::Token`] is exactly-once per
+    /// token position. Entries drop at the request's terminal state.
+    token_watermark: HashMap<u64, usize>,
     next_join_seq: u64,
 }
 
@@ -731,8 +835,15 @@ pub struct Server<'e> {
 pub struct ServeStats {
     pub pending: usize,
     pub in_flight: usize,
+    /// All requests that entered admission (shed ones included); at
+    /// drain, `completed + shed + timed_out + cancelled == submitted`.
+    pub submitted: u64,
     pub completed: u64,
     pub tokens_out: u64,
+    pub shed: u64,
+    pub timed_out: u64,
+    pub cancelled: u64,
+    pub panics_recovered: u64,
     pub preemptions: u64,
     pub kv_paged: bool,
     pub kv_total_blocks: usize,
@@ -752,17 +863,194 @@ impl<'e> Server<'e> {
             latencies: LatencyRecorder::default(),
             ttft: LatencyRecorder::default(),
             tpot: LatencyRecorder::default(),
+            submitted: 0,
             completed: 0,
             tokens_out: 0,
+            shed: 0,
+            timed_out: 0,
+            cancelled: 0,
+            panics_recovered: 0,
             preemptions: 0,
             cont: None,
             kv: None,
+            queue_cap: None,
+            ttft_limit_ms: None,
+            events: None,
+            token_watermark: HashMap::new(),
             next_join_seq: 0,
         }
     }
 
+    /// Unconditional enqueue (the in-process path: benches, tests, the
+    /// demo drivers). Network front ends admit through [`try_submit`]
+    /// instead, which honors the bounded-ingress limits.
+    ///
+    /// [`try_submit`]: Server::try_submit
     pub fn submit(&mut self, req: GenRequest) {
+        self.submitted += 1;
         self.queue.push_back(Pending { req, submitted: Instant::now() });
+    }
+
+    /// Configure bounded ingress for [`Server::try_submit`]: shed once
+    /// the queue holds `queue_cap` requests, or once the estimated TTFT
+    /// of a new admission crosses `ttft_limit_ms`. `None` disables the
+    /// respective limit (the default: never shed).
+    pub fn set_admission_limits(
+        &mut self,
+        queue_cap: Option<usize>,
+        ttft_limit_ms: Option<f64>,
+    ) {
+        self.queue_cap = queue_cap;
+        self.ttft_limit_ms = ttft_limit_ms;
+    }
+
+    /// Coarse estimate of a new admission's TTFT in ms: the mean
+    /// observed TTFT scaled by how many queue "generations" (of
+    /// `max_batch` requests) are already waiting ahead of it. `None`
+    /// until a first TTFT sample exists (a cold server never sheds on
+    /// the estimate — it has no evidence of being slow).
+    pub fn estimated_ttft_ms(&self) -> Option<f64> {
+        if self.ttft.len() == 0 {
+            return None;
+        }
+        let waves = 1.0 + self.queue.len() as f64 / self.max_batch as f64;
+        Some(self.ttft.mean() / 1e3 * waves)
+    }
+
+    /// Bounded admission: enqueue the request unless a configured limit
+    /// ([`Server::set_admission_limits`]) says the server is overloaded,
+    /// in which case the request is **shed** — counted `submitted` +
+    /// `shed`, never enqueued — and the caller gets a Retry-After hint.
+    /// With no limits configured this is exactly [`Server::submit`].
+    pub fn try_submit(&mut self, req: GenRequest) -> Admission {
+        let over_depth =
+            self.queue_cap.is_some_and(|cap| self.queue.len() >= cap);
+        let over_ttft = match (self.ttft_limit_ms, self.estimated_ttft_ms()) {
+            (Some(limit), Some(est)) => est > limit,
+            _ => false,
+        };
+        if over_depth || over_ttft {
+            self.submitted += 1;
+            self.shed += 1;
+            // back off for about one queue drain; clamped to something
+            // a client can reasonably honor
+            let hint = self.estimated_ttft_ms().unwrap_or(100.0);
+            return Admission::Shed {
+                retry_after_ms: (hint.ceil() as u64).clamp(50, 10_000),
+            };
+        }
+        self.submit(req);
+        Admission::Admitted
+    }
+
+    /// Cancel a request wherever it currently lives: still queued (the
+    /// entry is removed) or resident in the continuous pool (the slot
+    /// and its paged KV blocks are freed mid-flight, exactly like the
+    /// harvest path). Returns whether the id was found; a found request
+    /// is counted `cancelled` — its terminal state — and emits a
+    /// [`ServeEvent::Cancelled`]. This is the client-disconnect path of
+    /// the network front end.
+    pub fn cancel(&mut self, id: u64) -> bool {
+        if let Some(pos) = self.queue.iter().position(|p| p.req.id == id) {
+            self.queue.remove(pos);
+            self.cancelled += 1;
+            self.token_watermark.remove(&id);
+            self.push_event(ServeEvent::Cancelled { id });
+            return true;
+        }
+        let mut hit = false;
+        if let Some(cont) = self.cont.as_mut() {
+            for i in 0..cont.slots.len() {
+                if matches!(&cont.slots[i], Some(s) if s.req.id == id) {
+                    cont.slots[i] = None;
+                    cont.sess.reset_row(i);
+                    hit = true;
+                    break;
+                }
+            }
+        }
+        if hit {
+            self.cancelled += 1;
+            self.token_watermark.remove(&id);
+            self.push_event(ServeEvent::Cancelled { id });
+        }
+        hit
+    }
+
+    /// Toggle lifecycle-event capture ([`ServeEvent`]); turning it on
+    /// (or off) resets the buffer. Off by default.
+    pub fn set_event_capture(&mut self, on: bool) {
+        self.events = if on { Some(Vec::new()) } else { None };
+        self.token_watermark.clear();
+    }
+
+    /// Take every event captured since the last drain (empty when
+    /// capture is off).
+    pub fn drain_events(&mut self) -> Vec<ServeEvent> {
+        self.events.as_mut().map(std::mem::take).unwrap_or_default()
+    }
+
+    fn push_event(&mut self, ev: ServeEvent) {
+        if let Some(buf) = self.events.as_mut() {
+            buf.push(ev);
+        }
+    }
+
+    /// Drop every request whose deadline lapsed: queued entries before
+    /// they ever take a slot, residents mid-flight with their row and
+    /// paged KV blocks freed (the same release path as harvest). Rows
+    /// that already finished generating this tick are left for harvest
+    /// — they completed inside their deadline. Runs at the top of every
+    /// [`Server::step`], beside the preemption pass.
+    fn sweep_deadlines(&mut self, now: Instant) {
+        let mut expired: Vec<u64> = Vec::new();
+        self.queue.retain(|p| {
+            let lapsed = deadline_passed(&p.req, p.submitted, now);
+            if lapsed {
+                expired.push(p.req.id);
+            }
+            !lapsed
+        });
+        if let Some(cont) = self.cont.as_mut() {
+            for i in 0..cont.slots.len() {
+                let lapsed = matches!(
+                    &cont.slots[i],
+                    Some(s) if !s.done && deadline_passed(&s.req, s.submitted, now)
+                );
+                if lapsed {
+                    let s = cont.slots[i].take().unwrap();
+                    cont.sess.reset_row(i);
+                    expired.push(s.req.id);
+                }
+            }
+        }
+        for id in expired {
+            self.timed_out += 1;
+            self.token_watermark.remove(&id);
+            self.push_event(ServeEvent::TimedOut { id });
+        }
+    }
+
+    /// Contain a worker panic that unwound out of a prefill/decode call
+    /// (surfaced as `Err` by `parallel::catch_panics`): every resident
+    /// goes back to the queue *front* in admission order, the torn
+    /// session is discarded (all paged blocks freed with it), and the
+    /// next step rebuilds the pool and replays — per-request sampler
+    /// streams make the replayed outputs bit-identical, exactly like
+    /// preemption. The step reports no completions; nothing is lost.
+    fn recover_from_panic(&mut self, err: anyhow::Error) {
+        log::warn!("contained worker panic; replaying residents: {err:#}");
+        self.panics_recovered += 1;
+        if let Some(mut cont) = self.cont.take() {
+            let mut residents: Vec<Slot> =
+                cont.slots.iter_mut().filter_map(Option::take).collect();
+            // youngest first, so the oldest ends up at the queue front
+            residents.sort_by_key(|s| std::cmp::Reverse(s.join_seq));
+            for s in residents {
+                self.queue
+                    .push_front(Pending { req: s.req, submitted: s.submitted });
+            }
+        }
     }
 
     pub fn pending(&self) -> usize {
@@ -774,6 +1062,17 @@ impl<'e> Server<'e> {
         self.cont
             .as_ref()
             .map_or(0, |c| c.slots.iter().filter(|s| s.is_some()).count())
+    }
+
+    /// Ids of every request still owed a terminal state — queued
+    /// entries first, then residents. The graceful-drain path uses
+    /// this to cancel whatever is left once the drain timeout lapses.
+    pub fn live_ids(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> = self.queue.iter().map(|p| p.req.id).collect();
+        if let Some(cont) = &self.cont {
+            ids.extend(cont.slots.iter().flatten().map(|s| s.req.id));
+        }
+        ids
     }
 
     /// Cap the serving batch (slot-pool size) — the knob `serve_bench`
@@ -811,7 +1110,13 @@ impl<'e> Server<'e> {
             self.in_flight()
         );
         if let Some(kv) = &kv {
-            kv.validate()?;
+            // full geometry validation, not just field sanity: a byte
+            // budget that cannot hold one context row would otherwise
+            // zero-progress bail on every step (see kvcache.rs)
+            crate::runtime::backend::kvcache::validate_budget(
+                &self.generator.cfg,
+                kv,
+            )?;
         }
         self.kv = kv;
         // the dense slot cap may not apply anymore (and vice versa)
@@ -837,8 +1142,13 @@ impl<'e> Server<'e> {
         let mut st = ServeStats {
             pending: self.pending(),
             in_flight: self.in_flight(),
+            submitted: self.submitted,
             completed: self.completed,
             tokens_out: self.tokens_out,
+            shed: self.shed,
+            timed_out: self.timed_out,
+            cancelled: self.cancelled,
+            panics_recovered: self.panics_recovered,
             preemptions: self.preemptions,
             ..ServeStats::default()
         };
@@ -883,7 +1193,7 @@ impl<'e> Server<'e> {
         }
         self.completed += 1;
         self.tokens_out += new_tokens as u64;
-        GenResponse {
+        let resp = GenResponse {
             id,
             text: text.unwrap_or_else(|| ByteTokenizer.decode(&tokens)),
             new_tokens,
@@ -892,7 +1202,12 @@ impl<'e> Server<'e> {
             latency_ms,
             ttft_ms,
             batch_size,
+        };
+        self.token_watermark.remove(&id);
+        if self.events.is_some() {
+            self.push_event(ServeEvent::Completed(resp.clone()));
         }
+        resp
     }
 
     /// One tick of the **continuous-batching** scheduler (native KV
@@ -923,6 +1238,12 @@ impl<'e> Server<'e> {
         }
         let vocab = self.generator.cfg.vocab;
         let mut out = Vec::new();
+
+        // -- deadline sweep: requests whose deadline lapsed reach their
+        //    terminal state (timed_out) before this tick admits or
+        //    decodes anything — queued entries vanish from the queue,
+        //    residents free their row and paged blocks mid-flight ------
+        self.sweep_deadlines(Instant::now());
 
         // -- admission: requests join free rows mid-flight ---------------
         // Paged pools admit **by free blocks**: a joiner must fit its
@@ -1021,13 +1342,22 @@ impl<'e> Server<'e> {
                     cont.slots[i].as_ref().unwrap().prompt.as_slice(),
                 ));
             }
-            let logits = match &self.generator.exec {
-                GenExec::Native { model, .. } => {
-                    model.prefill_rows(&mut cont.sess, &pairs)?
-                }
+            // a worker panic inside the batched prefill is contained:
+            // residents (joiners included) requeue and replay
+            let prefilled = match &self.generator.exec {
+                GenExec::Native { model, .. } => parallel::catch_panics(|| {
+                    model.prefill_rows(&mut cont.sess, &pairs)
+                }),
                 #[cfg(feature = "pjrt")]
                 GenExec::Pjrt { .. } => {
                     unreachable!("guarded by supports_continuous")
+                }
+            };
+            let logits = match prefilled {
+                Ok(r) => r?,
+                Err(panic) => {
+                    self.recover_from_panic(panic);
+                    return Ok(out);
                 }
             };
             let now = Instant::now();
@@ -1035,7 +1365,20 @@ impl<'e> Server<'e> {
                 let slot = cont.slots[slot_idx].as_mut().unwrap();
                 let row = &logits[j * vocab..(j + 1) * vocab];
                 let tok = pick_token(row, slot.req.temperature, &mut slot.rng);
+                let before = slot.generated.len();
                 slot.feed(tok, now);
+                if self.events.is_some() && slot.generated.len() > before {
+                    // exactly-once per position: replayed prefixes
+                    // (preemption / panic recovery) are suppressed
+                    let pos = slot.generated.len();
+                    let wm = self.token_watermark.entry(slot.req.id).or_insert(0);
+                    if pos > *wm {
+                        *wm = pos;
+                        if let Some(buf) = self.events.as_mut() {
+                            buf.push(ServeEvent::Token { id: slot.req.id, token: tok });
+                        }
+                    }
+                }
             }
         }
 
@@ -1111,13 +1454,22 @@ impl<'e> Server<'e> {
                 }
             }
             if active.iter().any(|&a| a) {
-                let logits = match &self.generator.exec {
-                    GenExec::Native { model, .. } => {
-                        model.decode_step_active(&mut cont.sess, &last, &active)?
-                    }
+                // worker panics are contained here too: the torn step's
+                // residents requeue and replay deterministically
+                let stepped = match &self.generator.exec {
+                    GenExec::Native { model, .. } => parallel::catch_panics(|| {
+                        model.decode_step_active(&mut cont.sess, &last, &active)
+                    }),
                     #[cfg(feature = "pjrt")]
                     GenExec::Pjrt { .. } => {
                         unreachable!("guarded by supports_continuous")
+                    }
+                };
+                let logits = match stepped {
+                    Ok(r) => r?,
+                    Err(panic) => {
+                        self.recover_from_panic(panic);
+                        return Ok(out);
                     }
                 };
                 let now = Instant::now();
@@ -1129,7 +1481,22 @@ impl<'e> Server<'e> {
                     let row = &logits[i * vocab..(i + 1) * vocab];
                     let tok =
                         pick_token(row, slot.req.temperature, &mut slot.rng);
+                    let before = slot.generated.len();
                     slot.feed(tok, now);
+                    if self.events.is_some() && slot.generated.len() > before {
+                        let pos = slot.generated.len();
+                        let wm =
+                            self.token_watermark.entry(slot.req.id).or_insert(0);
+                        if pos > *wm {
+                            *wm = pos;
+                            if let Some(buf) = self.events.as_mut() {
+                                buf.push(ServeEvent::Token {
+                                    id: slot.req.id,
+                                    token: tok,
+                                });
+                            }
+                        }
+                    }
                 }
             }
         }
@@ -1424,13 +1791,7 @@ mod tests {
     fn native_server_serves_all_requests() {
         let mut server = Server::new(native_generator());
         for id in 0..3 {
-            server.submit(GenRequest {
-                id,
-                prompt: format!("prompt {id} "),
-                max_new_tokens: 4,
-                temperature: 0.0,
-                stop: None,
-            });
+            server.submit(GenRequest::greedy(id, format!("prompt {id} "), 4));
         }
         let responses = server.run_to_completion().unwrap();
         assert_eq!(responses.len(), 3);
@@ -1452,13 +1813,7 @@ mod tests {
     fn per_request_budgets_are_respected() {
         let mut server = Server::new(native_generator());
         for (id, max_new) in [(0u64, 2usize), (1, 7), (2, 4)] {
-            server.submit(GenRequest {
-                id,
-                prompt: "shared prompt ".into(),
-                max_new_tokens: max_new,
-                temperature: 0.0,
-                stop: None,
-            });
+            server.submit(GenRequest::greedy(id, "shared prompt ", max_new));
         }
         let mut responses = server.run_to_completion().unwrap();
         responses.sort_by_key(|r| r.id);
@@ -1473,13 +1828,7 @@ mod tests {
         // rust/tests/continuous_batching.rs
         let mut server = Server::new(native_generator());
         for id in 0..5 {
-            server.submit(GenRequest {
-                id,
-                prompt: format!("req {id} "),
-                max_new_tokens: 2 + id as usize,
-                temperature: 0.0,
-                stop: None,
-            });
+            server.submit(GenRequest::greedy(id, format!("req {id} "), 2 + id as usize));
         }
         let responses = server.run_continuous().unwrap();
         assert_eq!(responses.len(), 5);
@@ -1496,13 +1845,7 @@ mod tests {
     #[test]
     fn continuous_rejected_off_the_kv_engine() {
         let mut server = Server::new(recompute_generator());
-        server.submit(GenRequest {
-            id: 0,
-            prompt: "p".into(),
-            max_new_tokens: 2,
-            temperature: 0.0,
-            stop: None,
-        });
+        server.submit(GenRequest::greedy(0, "p", 2));
         assert!(server.step().is_err());
         // the static oracle still serves it
         let responses = server.run_to_completion().unwrap();
@@ -1514,13 +1857,7 @@ mod tests {
         let mut server = Server::new(native_generator());
         server.set_max_batch(2).unwrap();
         for id in 0..5 {
-            server.submit(GenRequest {
-                id,
-                prompt: "x ".into(),
-                max_new_tokens: 2,
-                temperature: 0.0,
-                stop: None,
-            });
+            server.submit(GenRequest::greedy(id, "x ", 2));
         }
         let first = server.run_once().unwrap();
         assert_eq!(first.len(), 2);
@@ -1542,20 +1879,9 @@ mod tests {
 
     fn degenerate_reqs() -> Vec<GenRequest> {
         vec![
-            GenRequest {
-                id: 0,
-                prompt: String::new(), // clamps to empty: complete-and-skip
-                max_new_tokens: 5,
-                temperature: 0.0,
-                stop: None,
-            },
-            GenRequest {
-                id: 1,
-                prompt: "real ".into(),
-                max_new_tokens: 3,
-                temperature: 0.0,
-                stop: None,
-            },
+            // empty prompt clamps to empty: complete-and-skip
+            GenRequest::greedy(0, "", 5),
+            GenRequest::greedy(1, "real ", 3),
         ]
     }
 
@@ -1593,13 +1919,7 @@ mod tests {
             .unwrap();
         server.set_max_batch(4).unwrap();
         for id in 0..6u64 {
-            server.submit(GenRequest {
-                id,
-                prompt: "one shared prefix prompt ".into(),
-                max_new_tokens: 3,
-                temperature: 0.0,
-                stop: None,
-            });
+            server.submit(GenRequest::greedy(id, "one shared prefix prompt ", 3));
         }
         let rs = server.run_continuous().unwrap();
         assert_eq!(rs.len(), 6);
@@ -1623,13 +1943,7 @@ mod tests {
         // paged pools may raise the slot cap past the dense engine max
         server.set_kv_config(Some(KvCacheConfig::default())).unwrap();
         server.set_max_batch(NATIVE_MAX_BATCH * 2).unwrap();
-        server.submit(GenRequest {
-            id: 0,
-            prompt: "p ".into(),
-            max_new_tokens: 4,
-            temperature: 0.0,
-            stop: None,
-        });
+        server.submit(GenRequest::greedy(0, "p ", 4));
         server.step().unwrap();
         assert_eq!(server.in_flight(), 1);
         assert!(server.set_kv_config(None).is_err());
@@ -1637,13 +1951,7 @@ mod tests {
         assert!(server.set_kv_config(None).is_ok());
         // back on dense: the cap clamps to the engine max again
         server.set_max_batch(NATIVE_MAX_BATCH * 2).unwrap();
-        server.submit(GenRequest {
-            id: 1,
-            prompt: "q ".into(),
-            max_new_tokens: 2,
-            temperature: 0.0,
-            stop: None,
-        });
+        server.submit(GenRequest::greedy(1, "q ", 2));
         let rs = server.run_continuous().unwrap();
         assert_eq!(rs.len(), 1);
     }

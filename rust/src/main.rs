@@ -7,6 +7,7 @@
 //! consmax sweep-init   Fig 8: β/γ initialization grid (pjrt)
 //! consmax generate     sample text from a checkpoint
 //! consmax serve-demo   batched generation service + latency stats
+//! consmax serve-net    hardened TCP/HTTP serving front end (drains on SIGTERM)
 //! consmax hw-report    Table I + savings ratios (synthesis estimator)
 //! consmax sim          Fig 5: pipeline schedules, utilization, savings
 //! consmax info         backend, op and model-config summary
@@ -28,8 +29,8 @@ use consmax::config::{KvCacheConfig, KvDtype, ModelConfig, QuantMode};
 #[cfg(feature = "pjrt")]
 use consmax::coordinator::{best_point, sweep_init, SweepOptions, Trainer};
 use consmax::coordinator::{
-    DecodeMode, GenRequest, Generator, NativeTrainer, ParamStore, Server,
-    TrainOptions,
+    DecodeMode, EngineAdapter, GenRequest, Generator, NativeTrainer,
+    ParamStore, Server, TrainOptions,
 };
 use consmax::data::{BatchSampler, ByteTokenizer, Corpus};
 use consmax::hw::{savings, table1, EdaFlow};
@@ -91,6 +92,39 @@ fn specs() -> Vec<Spec> {
             "serve-demo: paged KV block size in tokens (default 16; \
              implies paging)",
         ),
+        Spec::opt_default(
+            "listen",
+            "127.0.0.1:8077",
+            "serve-net: listen address (host:port; port 0 = ephemeral)",
+        ),
+        Spec::opt_default(
+            "queue-cap",
+            "64",
+            "serve-net: bounded admission — shed with 429 + Retry-After \
+             once this many requests are queued",
+        ),
+        Spec::opt_default(
+            "deadline-ms",
+            "0",
+            "serve-net: default per-request deadline in ms (0 = none); \
+             lapsed requests are dropped mid-flight, freeing their KV",
+        ),
+        Spec::opt_default(
+            "drain-timeout-ms",
+            "5000",
+            "serve-net: how long a SIGTERM drain waits for residents \
+             before cancelling them",
+        ),
+        Spec::opt_default(
+            "heartbeat-ms",
+            "500",
+            "serve-net: idle-stream heartbeat interval",
+        ),
+        Spec::opt(
+            "max-requests",
+            "serve-net: drain after this many admission verdicts \
+             (default: serve until SIGTERM)",
+        ),
         Spec::opt_default("seq", "256", "sim/hw: context length"),
         Spec::opt_default("tokens", "1", "sim: tokens to process"),
         Spec::opt_default("norm", "consmax", "sim: normalizer"),
@@ -148,6 +182,7 @@ fn main() {
                     ("sweep-init", "Fig 8: beta/gamma initialization grid (pjrt)"),
                     ("generate", "sample text from a checkpoint"),
                     ("serve-demo", "batched generation + latency stats"),
+                    ("serve-net", "hardened TCP/HTTP serving front end"),
                     ("hw-report", "Table I + savings ratios"),
                     ("sim", "Fig 5 pipeline simulation"),
                     ("info", "backend, op and model-config summary"),
@@ -728,6 +763,7 @@ fn serve_demo_over(mut server: Server<'_>, args: &Args) -> Result<()> {
             max_new_tokens: if id % 4 == 0 { max_new } else { max_new / 4 + 1 },
             temperature: 0.8,
             stop: None,
+            deadline_ms: None,
         });
     }
     let t0 = std::time::Instant::now();
@@ -800,6 +836,84 @@ fn run_serve_demo_pjrt(args: &Args) -> Result<()> {
     };
     let gen = Generator::new(&engine, &store, 1)?;
     serve_demo_over(Server::new(gen), args)
+}
+
+/// `consmax serve-net`: the hardened network front end over the
+/// continuous scheduler. Runs until SIGTERM (drain) or `--max-requests`
+/// admission verdicts, then flushes stats and exits.
+fn run_serve_net(args: &Args) -> Result<()> {
+    use consmax::runtime::serve_net::{self, FaultPlan, NetOptions};
+
+    if wants_pjrt(args)? {
+        bail!(
+            "serve-net needs the native continuous scheduler \
+             (run with --backend native)"
+        );
+    }
+    let (cfg, store) = native_model_setup(args)?;
+    let mode = DecodeMode::parse(&args.get_string("decode", "kv"))?;
+    let quant = QuantMode::parse(&args.get_string("quant", "off"))?;
+    let gen = Generator::native_quant(&cfg, &store, 1, mode, quant)?;
+    let mut server = Server::new(gen);
+    if let Some(kv) = kv_config_from_args(args)? {
+        server.set_kv_config(Some(kv))?;
+    }
+    if let Some(mb) = args.get_opt_usize("max-batch")? {
+        server.set_max_batch(mb)?;
+    }
+    let queue_cap = args.get_usize("queue-cap", 64)?;
+    let deadline_ms = args.get_u64("deadline-ms", 0)?;
+    let mut engine = EngineAdapter::new(
+        server,
+        Some(queue_cap),
+        None,
+        (deadline_ms > 0).then_some(deadline_ms),
+    )?;
+    let opts = NetOptions {
+        queue_cap,
+        heartbeat_ms: args.get_u64("heartbeat-ms", 500)?.max(1),
+        drain_timeout_ms: args.get_u64("drain-timeout-ms", 5_000)?,
+        max_requests: args.get_opt_usize("max-requests")?.map(|n| n as u64),
+        ..NetOptions::default()
+    };
+    let listener = serve_net::bind(&args.get_string("listen", "127.0.0.1:8077"))?;
+    serve_net::install_sigterm_drain();
+    println!(
+        "serving on http://{} (POST /generate, GET /stats; SIGTERM drains)",
+        listener.local_addr()?
+    );
+    let report =
+        serve_net::serve(&mut engine, listener, &opts, &FaultPlan::default())?;
+    let server = engine.into_server();
+    println!(
+        "drained ({}): admitted {} completed {} shed {} rejected {} \
+         timed-out {} disconnects {} slow-readers {}",
+        if report.drained_clean { "clean" } else { "forced" },
+        report.admitted,
+        report.completed,
+        report.shed,
+        report.rejected,
+        report.timed_out,
+        report.disconnects,
+        report.slow_readers,
+    );
+    println!(
+        "TTFT p50 {:.0} ms p99 {:.0} ms | TPOT p50 {:.2} ms/tok | \
+         {} panics recovered, {} preemptions",
+        server.ttft.percentile(50.0).unwrap_or(0.0) / 1e3,
+        server.ttft.percentile(99.0).unwrap_or(0.0) / 1e3,
+        server.tpot.percentile(50.0).unwrap_or(0.0) / 1e3,
+        server.panics_recovered,
+        server.preemptions,
+    );
+    let st = server.stats();
+    if st.kv_paged {
+        println!(
+            "paged KV pool at drain: {} / {} blocks free",
+            st.kv_free_blocks, st.kv_total_blocks
+        );
+    }
+    Ok(())
 }
 
 fn run_info(args: &Args) -> Result<()> {
@@ -887,6 +1001,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "eval" => run_eval(args),
         "generate" => run_generate(args),
         "serve-demo" => run_serve_demo(args),
+        "serve-net" => run_serve_net(args),
         "info" => run_info(args),
         "hw-report" => {
             let flow = match args.get("flow").unwrap_or("proprietary") {

@@ -4,7 +4,6 @@
 //! extracted from.
 
 use std::collections::BTreeMap;
-use std::io::Write;
 use std::path::Path;
 
 use anyhow::{Context, Result};
@@ -79,15 +78,10 @@ impl Metrics {
         out
     }
 
+    /// Atomic (temp + rename): a run killed mid-save never leaves a
+    /// truncated `runs/*_train.jsonl` behind.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
-        let path = path.as_ref();
-        if let Some(parent) = path.parent() {
-            std::fs::create_dir_all(parent)?;
-        }
-        let mut f = std::fs::File::create(path)
-            .with_context(|| format!("creating {}", path.display()))?;
-        f.write_all(self.to_jsonl().as_bytes())?;
-        Ok(())
+        crate::util::atomicio::write_bytes_atomic(path.as_ref(), self.to_jsonl().as_bytes())
     }
 
     pub fn load(path: impl AsRef<Path>) -> Result<Metrics> {

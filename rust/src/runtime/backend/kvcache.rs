@@ -216,28 +216,68 @@ pub struct KvPool {
     by_hash: HashMap<u64, u32>,
 }
 
+/// The pool geometry `cfg` + `kv` imply, computed without allocating
+/// anything: block token span (clamped to ctx), arena elements per
+/// block, blocks per full-context row, and bytes per block.
+#[derive(Debug, Clone, Copy)]
+pub struct KvGeometry {
+    pub block_tokens: usize,
+    pub stride: usize,
+    pub blocks_per_row: usize,
+    pub block_bytes: usize,
+}
+
+impl KvGeometry {
+    pub fn of(cfg: &ModelConfig, kv: &KvCacheConfig) -> KvGeometry {
+        let bt = kv.block_tokens.min(cfg.ctx).max(1);
+        let stride = cfg.n_layer * cfg.n_head * bt * cfg.head_dim();
+        KvGeometry {
+            block_tokens: bt,
+            stride,
+            blocks_per_row: cfg.ctx.div_ceil(bt),
+            block_bytes: block_bytes_of(stride, cfg.head_dim(), kv.dtype),
+        }
+    }
+}
+
+/// Validate `kv` against `cfg`'s geometry without allocating arenas —
+/// the exact arithmetic [`KvPool::new`] applies. A byte budget smaller
+/// than one full `ctx`-token row can never admit *any* request (the
+/// preempt pass would find no victim and every step would zero-progress
+/// bail), so it is rejected here, at configuration time, with the same
+/// message pool construction would produce.
+pub fn validate_budget(cfg: &ModelConfig, kv: &KvCacheConfig) -> Result<()> {
+    kv.validate()?;
+    let geo = KvGeometry::of(cfg, kv);
+    if let Some(bytes) = kv.mem_bytes {
+        let blocks = bytes / geo.block_bytes;
+        ensure!(
+            blocks >= geo.blocks_per_row,
+            "kv budget too small: {blocks} block(s) of {} bytes \
+             cannot hold one full {}-token row ({} blocks; raise \
+             --kv-mem-mb or shrink --kv-block)",
+            geo.block_bytes,
+            cfg.ctx,
+            geo.blocks_per_row
+        );
+    }
+    Ok(())
+}
+
 impl KvPool {
     /// Build a pool for `cfg`'s geometry. With a byte budget the block
     /// count is `budget / block_bytes` (must fit at least one full
-    /// `ctx`-token row); without one, the pool holds `rows` full rows —
-    /// paging (and sharing) without a memory cap.
+    /// `ctx`-token row, enforced by [`validate_budget`]); without one,
+    /// the pool holds `rows` full rows — paging (and sharing) without a
+    /// memory cap.
     pub fn new(cfg: &ModelConfig, kv: &KvCacheConfig, rows: usize) -> Result<KvPool> {
-        kv.validate()?;
-        let bt = kv.block_tokens.min(cfg.ctx).max(1);
-        let stride = cfg.n_layer * cfg.n_head * bt * cfg.head_dim();
-        let per_row = cfg.ctx.div_ceil(bt);
-        let block_bytes = block_bytes_of(stride, cfg.head_dim(), kv.dtype);
+        validate_budget(cfg, kv)?;
+        let geo = KvGeometry::of(cfg, kv);
+        let (bt, stride, per_row) = (geo.block_tokens, geo.stride, geo.blocks_per_row);
         let blocks = match kv.mem_bytes {
-            Some(bytes) => bytes / block_bytes,
+            Some(bytes) => bytes / geo.block_bytes,
             None => rows.max(1) * per_row,
         };
-        ensure!(
-            blocks >= per_row,
-            "kv budget too small: {blocks} block(s) of {block_bytes} bytes \
-             cannot hold one full {}-token row ({per_row} blocks; raise \
-             --kv-mem-mb or shrink --kv-block)",
-            cfg.ctx
-        );
         let elems = blocks * stride;
         let (k, v) = match kv.dtype {
             KvDtype::F32 => {

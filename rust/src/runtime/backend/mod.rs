@@ -44,7 +44,7 @@ use anyhow::{bail, Result};
 use crate::runtime::HostTensor;
 
 pub use decode::DecodeSession;
-pub use kvcache::{KvPool, KvStats};
+pub use kvcache::{validate_budget as validate_kv_budget, KvGeometry, KvPool, KvStats};
 pub use model::NativeModel;
 pub use native::NativeBackend;
 pub use normalizer::{HeadNorm, Normalizer};

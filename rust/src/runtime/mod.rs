@@ -27,9 +27,15 @@
 //! (`--threads` / `CONSMAX_THREADS`); its determinism contract — thread
 //! count never changes results — is documented there and in DESIGN.md
 //! §Parallel-compute seam.
+//!
+//! [`serve_net`] is the hardened TCP/HTTP serving front end (bounded
+//! admission, deadlines, cancellation, graceful drain) over the
+//! [`serve_net::ServeEngine`] seam; the coordinator adapts `Server`
+//! onto it (DESIGN.md §Serving-robustness seam).
 
 pub mod backend;
 pub mod parallel;
+pub mod serve_net;
 pub mod tensor;
 
 #[cfg(feature = "pjrt")]

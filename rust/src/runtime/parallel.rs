@@ -28,9 +28,25 @@
 //! the `CONSMAX_THREADS` environment variable, which wins over
 //! `std::thread::available_parallelism`.
 
+//!
+//! **Panic containment.** A panic inside a worker block must not abort
+//! the process (a caller-side panic racing a worker-side panic would
+//! otherwise double-unwind through `thread::scope`) and must not leave
+//! any poisoned pool state. Every block — spawned or caller-run — runs
+//! under `catch_unwind`; the first payload is re-raised *after* the
+//! scope has joined every worker, so callers observe one clean unwind
+//! and the pool (which is stateless) is immediately reusable. The
+//! serving layer converts that unwind into a recoverable `Err` with
+//! [`catch_panics`]; [`inject_worker_panic_once`] is the deterministic
+//! chaos seam the fault-injection suite arms to exercise the path.
+
+use std::any::Any;
 use std::cell::Cell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::OnceLock;
+use std::sync::{Mutex, OnceLock};
+
+use anyhow::{anyhow, Result};
 
 /// Runtime override installed by `--threads` (0 = unset).
 static OVERRIDE: AtomicUsize = AtomicUsize::new(0);
@@ -40,6 +56,45 @@ static DEFAULT: OnceLock<usize> = OnceLock::new();
 thread_local! {
     /// Set inside pool workers so nested `par_*` calls run serially.
     static IN_POOL: Cell<bool> = const { Cell::new(false) };
+    /// One-shot fault-injection flag, armed on the *calling* thread
+    /// (thread-local so concurrent tests never steal each other's
+    /// injections): the next `par_*` call from this thread panics in
+    /// one of its worker blocks.
+    static INJECT_PANIC: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Message carried by an injected worker panic (asserted on in tests).
+pub const INJECTED_PANIC_MSG: &str = "injected worker panic (fault plan)";
+
+/// Arm a one-shot panic in the next `par_*` call issued from this
+/// thread: with ≥2 workers the first *spawned* worker panics (the real
+/// cross-thread unwind path); with 1 it panics in the serial path, so
+/// the observable behaviour — one clean unwind out of the `par_*` call —
+/// is identical at every thread count. Chaos-testing seam; see
+/// [`catch_panics`] for the recovery side.
+pub fn inject_worker_panic_once() {
+    INJECT_PANIC.with(|c| c.set(true));
+}
+
+/// Run `f`, converting any panic that unwinds out of it (including a
+/// pool-worker panic re-raised by `par_*` after the scope join) into a
+/// clean `Err`. The pool is stateless, so after this returns `Err` the
+/// next `par_*` call is safe — nothing is poisoned.
+pub fn catch_panics<T>(f: impl FnOnce() -> T) -> Result<T> {
+    match catch_unwind(AssertUnwindSafe(f)) {
+        Ok(v) => Ok(v),
+        Err(payload) => Err(anyhow!("worker panic: {}", panic_message(&payload))),
+    }
+}
+
+fn panic_message(payload: &(dyn Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
+    }
 }
 
 /// Resets the calling thread's in-pool flag even on unwind.
@@ -105,8 +160,12 @@ where
     if n_rows == 0 {
         return;
     }
+    let inject = INJECT_PANIC.with(Cell::take);
     let threads = current_threads().min(n_rows);
     if threads <= 1 {
+        if inject {
+            panic!("{INJECTED_PANIC_MSG}");
+        }
         f(0, data);
         return;
     }
@@ -126,21 +185,45 @@ where
         first_row += rows;
     }
 
+    // Every block runs under `catch_unwind` so a panicking block can
+    // never race a second unwind through the scope join (which would
+    // abort). The first payload is re-raised once, after all workers
+    // have joined, as a single clean unwind out of this call.
     let f = &f;
+    let first_panic: Mutex<Option<Box<dyn Any + Send>>> = Mutex::new(None);
+    let record = |payload: Box<dyn Any + Send>| {
+        let mut slot = first_panic.lock().unwrap_or_else(|e| e.into_inner());
+        slot.get_or_insert(payload);
+    };
+    let record = &record;
     std::thread::scope(|scope| {
         let mut blocks = blocks.into_iter();
         let own = blocks.next().expect("threads >= 2 implies a first block");
-        for (start, block) in blocks {
+        for (i, (start, block)) in blocks.enumerate() {
+            let boom = inject && i == 0;
             scope.spawn(move || {
                 IN_POOL.with(|c| c.set(true));
-                f(start, block);
+                if let Err(payload) = catch_unwind(AssertUnwindSafe(|| {
+                    if boom {
+                        panic!("{INJECTED_PANIC_MSG}");
+                    }
+                    f(start, block);
+                })) {
+                    record(payload);
+                }
             });
         }
         // The caller works too, flagged so nested calls stay serial.
         IN_POOL.with(|c| c.set(true));
         let _guard = PoolGuard;
-        f(own.0, own.1);
+        if let Err(payload) = catch_unwind(AssertUnwindSafe(|| f(own.0, own.1))) {
+            record(payload);
+        }
     });
+    let panicked = first_panic.into_inner().unwrap_or_else(|e| e.into_inner());
+    if let Some(payload) = panicked {
+        resume_unwind(payload);
+    }
 }
 
 /// Run `f(chunk_index, chunk)` over consecutive `chunk_len`-element
@@ -243,6 +326,40 @@ mod tests {
 
         set_threads(0);
         assert!(current_threads() >= 1);
+    }
+
+    #[test]
+    fn worker_panic_surfaces_as_clean_err_and_pool_stays_usable() {
+        // A panic in one worker block must unwind out of the par_* call
+        // exactly once (no double-panic abort even though every block
+        // panics here) and convert to Err at the catch_panics seam.
+        let mut data = vec![0u32; 16];
+        let err = catch_panics(|| {
+            par_items(&mut data, |_, _| panic!("kernel exploded"));
+        });
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(msg.contains("kernel exploded"), "{msg}");
+
+        // Nothing is poisoned: the very next call computes normally.
+        let mut after = vec![0u32; 16];
+        par_items(&mut after, |i, v| *v = i as u32);
+        assert!(after.iter().enumerate().all(|(i, &v)| v == i as u32));
+    }
+
+    #[test]
+    fn injected_panic_fires_once_then_clears() {
+        let mut data = vec![0u32; 8];
+        inject_worker_panic_once();
+        let err = catch_panics(|| par_items(&mut data, |_, v| *v += 1)).unwrap_err();
+        assert!(
+            format!("{err:#}").contains(INJECTED_PANIC_MSG),
+            "unexpected error: {err:#}"
+        );
+
+        // One-shot: the same call succeeds immediately afterwards.
+        let mut after = vec![0u32; 8];
+        catch_panics(|| par_items(&mut after, |_, v| *v += 1)).unwrap();
+        assert!(after.iter().all(|&v| v == 1), "{after:?}");
     }
 
     #[test]

@@ -1,0 +1,839 @@
+//! Hardened TCP/HTTP serving front end (std-only, DESIGN.md
+//! §Serving-robustness seam).
+//!
+//! This module puts a wire on the continuous-batching scheduler and is
+//! *designed around failure*: every path a real client can break is
+//! bounded, observable, and drives the request to exactly one terminal
+//! state.
+//!
+//! * **Bounded ingress + load shedding.** Parsed requests land in a
+//!   bounded handoff queue; past the cap the connection gets an
+//!   immediate `429` with `Retry-After` (it never queues unboundedly).
+//!   Admission itself is the engine's verdict ([`ServeEngine::try_admit`]
+//!   — queue depth / estimated-TTFT limits), which also sheds with a
+//!   backoff hint.
+//! * **Per-token streaming with heartbeats.** Admitted requests stream
+//!   NDJSON lines (`{"token":N}` per generated token, `{"hb":1}` when
+//!   idle past the heartbeat interval, a final `{"done":true,...}`
+//!   terminal line). Writes go through a per-connection bounded outbox
+//!   drained by a writer thread, so one slow reader can never stall the
+//!   serve loop — an outbox overflow *is* the slow-reader verdict: the
+//!   connection is dropped and the request cancelled.
+//! * **Disconnect cancellation.** A monitor thread per connection
+//!   watches for EOF; the serve loop cancels the request mid-flight
+//!   ([`ServeEngine::cancel`] frees the row and its paged KV blocks).
+//! * **Graceful drain.** On SIGTERM ([`install_sigterm_drain`]) or
+//!   [`request_drain`]: stop admitting (`503`), keep ticking until
+//!   residents finish or the drain timeout lapses (then cancel the
+//!   remainder), flush stats, return a [`NetReport`].
+//! * **Deterministic fault injection.** A [`FaultPlan`] arms faults at
+//!   the two seams the chaos suite exercises: a worker panic on a given
+//!   tick (`runtime::parallel::inject_worker_panic_once`) and
+//!   server-side mid-stream disconnects after N streamed tokens.
+//!   Slow readers, malformed requests and KV-pressure spikes need no
+//!   injection hooks — real client behaviour and tiny budgets produce
+//!   them (`rust/tests/chaos_serving.rs`).
+//!
+//! The engine behind the wire is abstracted as [`ServeEngine`] so this
+//! layer has no dependency on the coordinator; the production
+//! implementation is `coordinator::net::EngineAdapter` over `Server`.
+//!
+//! **Wire protocol.** `POST /generate` with a JSON body
+//! `{"prompt": "...", "max_new": 16, "temperature": 0.0,
+//! "deadline_ms": 2000}` (all but `prompt` optional) answers
+//! `200` + NDJSON stream, `429` + `Retry-After` when shedding, `400` on
+//! malformed input, `503` while draining. `GET /stats` returns the
+//! engine's gauge snapshot as JSON.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::runtime::parallel;
+use crate::util::json::Json;
+
+/// A request as the wire sees it. Decoupled from the coordinator's
+/// `GenRequest`: the runtime layer never depends on the coordinator.
+#[derive(Debug, Clone)]
+pub struct NetRequest {
+    /// Connection-order id assigned by the serve loop (also echoed to
+    /// the client as `X-Request-Id`).
+    pub id: u64,
+    pub prompt: String,
+    pub max_new_tokens: usize,
+    pub temperature: f32,
+    /// Relative deadline in ms (from admission); `None` = engine
+    /// default.
+    pub deadline_ms: Option<u64>,
+}
+
+/// Admission verdict from the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NetAdmission {
+    Admitted,
+    /// Overloaded: not enqueued; `retry_after_ms` is the backoff hint.
+    Shed { retry_after_ms: u64 },
+}
+
+/// Lifecycle events the engine yields from [`ServeEngine::tick`].
+/// `Token` events must be exactly-once per token position even across
+/// engine-internal replays (preemption, panic recovery).
+#[derive(Debug, Clone)]
+pub enum NetEvent {
+    Token { id: u64, token: i32 },
+    Completed { id: u64, text: String, tokens: usize, latency_ms: f64 },
+    TimedOut { id: u64 },
+    Cancelled { id: u64 },
+}
+
+/// What the front end needs from a scheduler. One implementor drives
+/// one serve loop; all calls come from the loop's thread.
+pub trait ServeEngine {
+    /// Bounded admission; a shed request must be counted terminally by
+    /// the engine (it will never be re-submitted by this layer).
+    fn try_admit(&mut self, req: NetRequest) -> NetAdmission;
+    /// Drop a request wherever it lives, freeing its resources
+    /// mid-flight. `false` if the id already reached a terminal state.
+    fn cancel(&mut self, id: u64) -> bool;
+    /// Advance the scheduler one step and return the lifecycle events
+    /// since the last tick. Must be safe to call with no work (no-op).
+    fn tick(&mut self) -> Result<Vec<NetEvent>>;
+    /// Whether any request is queued or in flight.
+    fn has_work(&self) -> bool;
+    /// Ids of every request still owed a terminal state (drain).
+    fn live_ids(&self) -> Vec<u64>;
+    /// Gauge snapshot as a JSON object string (`GET /stats`).
+    fn stats_json(&self) -> String;
+}
+
+/// Front-end knobs (`consmax serve-net` flags map 1:1 onto these).
+#[derive(Debug, Clone)]
+pub struct NetOptions {
+    /// Bounded-ingress cap: parsed-but-unadmitted connections past this
+    /// are shed at the door with `429`.
+    pub queue_cap: usize,
+    /// Idle-stream heartbeat interval (ms).
+    pub heartbeat_ms: u64,
+    /// How long drain waits for residents before cancelling them (ms).
+    pub drain_timeout_ms: u64,
+    /// Per-connection outbox depth (queued write commands) before a
+    /// reader is judged too slow and disconnected.
+    pub outbox_cap: usize,
+    /// Start draining after this many admission verdicts (admitted +
+    /// shed). `None` = serve until SIGTERM / [`request_drain`].
+    pub max_requests: Option<u64>,
+    /// Serve-loop sleep when there is nothing to do (µs).
+    pub idle_sleep_us: u64,
+}
+
+impl Default for NetOptions {
+    fn default() -> NetOptions {
+        NetOptions {
+            queue_cap: 64,
+            heartbeat_ms: 500,
+            drain_timeout_ms: 5_000,
+            outbox_cap: 64,
+            max_requests: None,
+            idle_sleep_us: 200,
+        }
+    }
+}
+
+/// Deterministic fault injection for the chaos suite. Default = no
+/// faults.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    /// Arm a one-shot worker panic just before this serve-loop tick
+    /// (0-based count of engine ticks).
+    pub panic_on_tick: Option<u64>,
+    /// Server-side mid-stream disconnect: after request `id` has
+    /// streamed `n` tokens, its connection is closed and the request
+    /// cancelled — a deterministic stand-in for a vanishing client.
+    pub close_after_tokens: Vec<(u64, usize)>,
+}
+
+/// What a serve run did (the drain-time stats flush, also logged).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NetReport {
+    /// Requests admitted onto the engine.
+    pub admitted: u64,
+    /// Requests shed with `429` (at the ingress bound or by the
+    /// engine's admission limits).
+    pub shed: u64,
+    /// Malformed requests answered `400`.
+    pub rejected: u64,
+    /// Requests answered `503` because drain had started.
+    pub refused_draining: u64,
+    /// Client-vanished cancellations (EOF monitor or injected close).
+    pub disconnects: u64,
+    /// Slow-reader disconnections (outbox overflow).
+    pub slow_readers: u64,
+    /// Requests that completed over the wire.
+    pub completed: u64,
+    /// Requests that hit their deadline.
+    pub timed_out: u64,
+    /// Engine ticks driven.
+    pub ticks: u64,
+    /// True when drain finished before the timeout (nothing was
+    /// force-cancelled).
+    pub drained_clean: bool,
+}
+
+// ---- drain signal ---------------------------------------------------------
+
+static DRAIN: AtomicBool = AtomicBool::new(false);
+
+/// Ask the serve loop to drain: stop admitting, finish (or cancel at
+/// the timeout) the residents, flush stats, return. Also what the
+/// SIGTERM handler calls.
+pub fn request_drain() {
+    DRAIN.store(true, Ordering::SeqCst);
+}
+
+/// Whether a drain has been requested (process-wide).
+pub fn drain_requested() -> bool {
+    DRAIN.load(Ordering::SeqCst)
+}
+
+/// Re-arm serving after a completed drain (tests serving twice in one
+/// process).
+pub fn reset_drain() {
+    DRAIN.store(false, Ordering::SeqCst);
+}
+
+/// Route SIGTERM to [`request_drain`] so `kill <pid>` drains instead of
+/// killing mid-request. Std-only: the handler is registered through the
+/// C `signal` entry point; the handler body is a single atomic store,
+/// which is async-signal-safe.
+#[cfg(unix)]
+pub fn install_sigterm_drain() {
+    extern "C" fn on_term(_sig: i32) {
+        DRAIN.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGTERM: i32 = 15;
+    let handler: extern "C" fn(i32) = on_term;
+    unsafe {
+        signal(SIGTERM, handler as usize);
+    }
+}
+
+#[cfg(not(unix))]
+pub fn install_sigterm_drain() {}
+
+// ---- wire parsing ---------------------------------------------------------
+
+/// Hard caps on untrusted input: header section and body size.
+const MAX_HEADER_BYTES: u64 = 16 * 1024;
+const MAX_BODY_BYTES: usize = 256 * 1024;
+
+struct WireRequest {
+    prompt: String,
+    max_new_tokens: usize,
+    temperature: f32,
+    deadline_ms: Option<u64>,
+}
+
+enum Parsed {
+    Generate(WireRequest),
+    Stats,
+}
+
+/// Read and parse one HTTP/1.1 request. `Err(msg)` means "answer 400
+/// with this reason and close".
+fn read_request(reader: &mut BufReader<TcpStream>) -> std::result::Result<Parsed, String> {
+    let mut head = (&mut *reader).take(MAX_HEADER_BYTES);
+    let mut line = String::new();
+    head.read_line(&mut line)
+        .map_err(|e| format!("request line unreadable: {e}"))?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+
+    let mut content_length: usize = 0;
+    loop {
+        let mut h = String::new();
+        let n = head
+            .read_line(&mut h)
+            .map_err(|e| format!("header unreadable: {e}"))?;
+        if n == 0 {
+            return Err("truncated header section".into());
+        }
+        let h = h.trim();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = h.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value
+                    .trim()
+                    .parse()
+                    .map_err(|_| "bad content-length".to_string())?;
+            }
+        }
+    }
+
+    match (method.as_str(), path.as_str()) {
+        ("GET", "/stats") => Ok(Parsed::Stats),
+        ("POST", "/generate") => {
+            if content_length == 0 {
+                return Err("empty body".into());
+            }
+            if content_length > MAX_BODY_BYTES {
+                return Err(format!("body over {MAX_BODY_BYTES} bytes"));
+            }
+            let mut body = vec![0u8; content_length];
+            reader
+                .read_exact(&mut body)
+                .map_err(|e| format!("body unreadable: {e}"))?;
+            let text = std::str::from_utf8(&body)
+                .map_err(|_| "body is not utf-8".to_string())?;
+            parse_generate(text).map(Parsed::Generate)
+        }
+        _ => Err(format!("unsupported request {method} {path}")),
+    }
+}
+
+fn parse_generate(body: &str) -> std::result::Result<WireRequest, String> {
+    let v = Json::parse(body).map_err(|e| format!("bad json: {e:?}"))?;
+    let prompt = v
+        .get("prompt")
+        .as_str()
+        .ok_or_else(|| "missing string field \"prompt\"".to_string())?
+        .to_string();
+    let max_new_tokens = match v.get("max_new") {
+        Json::Null => 16,
+        other => other
+            .as_usize()
+            .ok_or_else(|| "\"max_new\" must be a non-negative integer".to_string())?,
+    };
+    let temperature = match v.get("temperature") {
+        Json::Null => 0.0,
+        other => other
+            .as_f64()
+            .ok_or_else(|| "\"temperature\" must be a number".to_string())?
+            as f32,
+    };
+    let deadline_ms = match v.get("deadline_ms") {
+        Json::Null => None,
+        other => Some(
+            other
+                .as_usize()
+                .ok_or_else(|| "\"deadline_ms\" must be a non-negative integer".to_string())?
+                as u64,
+        ),
+    };
+    Ok(WireRequest { prompt, max_new_tokens, temperature, deadline_ms })
+}
+
+// ---- responses ------------------------------------------------------------
+
+fn http_json(status: &str, extra_headers: &str, body: &str) -> String {
+    format!(
+        "HTTP/1.1 {status}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\n{extra_headers}Connection: close\r\n\r\n{body}",
+        body.len()
+    )
+}
+
+fn respond_and_close(mut stream: TcpStream, text: &str) {
+    let _ = stream.write_all(text.as_bytes());
+    let _ = stream.flush();
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+fn respond_429(stream: TcpStream, retry_after_ms: u64) {
+    let secs = retry_after_ms.div_ceil(1000).max(1);
+    let body = format!(
+        "{{\"error\":\"overloaded\",\"retry_after_ms\":{retry_after_ms}}}"
+    );
+    let head = format!("Retry-After: {secs}\r\n");
+    respond_and_close(stream, &http_json("429 Too Many Requests", &head, &body));
+}
+
+fn respond_400(stream: TcpStream, reason: &str) {
+    let mut obj = Json::obj();
+    obj.set("error", Json::from(format!("bad request: {reason}")));
+    respond_and_close(stream, &http_json("400 Bad Request", "", &obj.to_string()));
+}
+
+fn respond_503(stream: TcpStream) {
+    let body = "{\"error\":\"draining\"}";
+    respond_and_close(stream, &http_json("503 Service Unavailable", "", body));
+}
+
+fn stream_head(id: u64) -> String {
+    format!(
+        "HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\n\
+         X-Request-Id: {id}\r\nConnection: close\r\n\r\n"
+    )
+}
+
+// ---- connection plumbing --------------------------------------------------
+
+/// A parsed connection handed from a reader thread to the serve loop.
+enum Incoming {
+    Generate {
+        wire: WireRequest,
+        stream: TcpStream,
+        /// Set by the connection's monitor thread on EOF/error — the
+        /// client is gone.
+        dead: Arc<AtomicBool>,
+    },
+    Stats(TcpStream),
+}
+
+/// State shared between the listener/reader threads and the serve loop.
+struct Shared {
+    ingress: Mutex<Vec<Incoming>>,
+    ingress_cap: usize,
+    draining: AtomicBool,
+    stop: AtomicBool,
+    rejected: AtomicU64,
+    shed_at_door: AtomicU64,
+    refused_draining: AtomicU64,
+}
+
+/// Commands for a connection's writer thread.
+enum WriteCmd {
+    /// Write this chunk.
+    Line(String),
+    /// Write this chunk, then shut the connection down.
+    End(String),
+    /// Shut the connection down now.
+    Close,
+}
+
+/// One admitted, streaming connection as the serve loop tracks it.
+struct Conn {
+    tx: SyncSender<WriteCmd>,
+    dead: Arc<AtomicBool>,
+    last_write: Instant,
+    tokens_sent: usize,
+}
+
+fn spawn_writer(
+    stream: TcpStream,
+    dead: Arc<AtomicBool>,
+    cap: usize,
+) -> SyncSender<WriteCmd> {
+    let (tx, rx) = sync_channel::<WriteCmd>(cap.max(1));
+    std::thread::spawn(move || {
+        let mut stream = stream;
+        for cmd in rx {
+            let (text, end) = match &cmd {
+                WriteCmd::Line(s) => (s.as_str(), false),
+                WriteCmd::End(s) => (s.as_str(), true),
+                WriteCmd::Close => ("", true),
+            };
+            if !text.is_empty() {
+                let ok = stream
+                    .write_all(text.as_bytes())
+                    .and_then(|_| stream.flush())
+                    .is_ok();
+                if !ok {
+                    dead.store(true, Ordering::SeqCst);
+                    break;
+                }
+            }
+            if end {
+                let _ = stream.shutdown(Shutdown::Both);
+                break;
+            }
+        }
+    });
+    tx
+}
+
+/// Per-connection reader: parse one request, hand it to the serve loop
+/// (or answer the error classes directly), then keep watching the
+/// socket for EOF so a vanished client cancels its request.
+fn handle_conn(stream: TcpStream, shared: Arc<Shared>) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(2_000)));
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = BufReader::new(read_half);
+    let parsed = match read_request(&mut reader) {
+        Ok(p) => p,
+        Err(reason) => {
+            shared.rejected.fetch_add(1, Ordering::SeqCst);
+            respond_400(stream, &reason);
+            return;
+        }
+    };
+    match parsed {
+        Parsed::Stats => {
+            // answered by the serve loop (it owns the engine)
+            let mut q = shared.ingress.lock().unwrap();
+            q.push(Incoming::Stats(stream));
+        }
+        Parsed::Generate(wire) => {
+            if shared.draining.load(Ordering::SeqCst) {
+                shared.refused_draining.fetch_add(1, Ordering::SeqCst);
+                respond_503(stream);
+                return;
+            }
+            {
+                let mut q = shared.ingress.lock().unwrap();
+                if q.len() >= shared.ingress_cap {
+                    drop(q);
+                    shared.shed_at_door.fetch_add(1, Ordering::SeqCst);
+                    respond_429(stream, 250);
+                    return;
+                }
+                let dead = Arc::new(AtomicBool::new(false));
+                q.push(Incoming::Generate {
+                    wire,
+                    stream: match stream.try_clone() {
+                        Ok(s) => s,
+                        Err(_) => return,
+                    },
+                    dead: dead.clone(),
+                });
+                drop(q);
+                // this thread becomes the disconnect monitor
+                monitor_eof(stream, dead);
+            }
+        }
+    }
+}
+
+/// Block on the socket until EOF or a real error, flagging `dead`.
+/// Wakes every read-timeout interval; exits promptly once the writer
+/// half shuts the connection down (that read returns EOF too).
+fn monitor_eof(stream: TcpStream, dead: Arc<AtomicBool>) {
+    let mut stream = stream;
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(250)));
+    let mut buf = [0u8; 512];
+    loop {
+        if dead.load(Ordering::SeqCst) {
+            return;
+        }
+        match stream.read(&mut buf) {
+            Ok(0) => {
+                dead.store(true, Ordering::SeqCst);
+                return;
+            }
+            Ok(_) => {} // pipelined bytes: ignored, connection still up
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(_) => {
+                dead.store(true, Ordering::SeqCst);
+                return;
+            }
+        }
+    }
+}
+
+// ---- the serve loop -------------------------------------------------------
+
+/// Bind the listening socket (`"127.0.0.1:0"` for an ephemeral test
+/// port — read it back with `listener.local_addr()`).
+pub fn bind(listen: &str) -> Result<TcpListener> {
+    TcpListener::bind(listen).with_context(|| format!("binding {listen}"))
+}
+
+/// Run the serving front end over `engine` until a drain completes.
+/// Blocks the calling thread (the engine is `&mut` — all scheduling
+/// stays here); listener/reader/writer threads only move bytes.
+pub fn serve<E: ServeEngine>(
+    engine: &mut E,
+    listener: TcpListener,
+    opts: &NetOptions,
+    faults: &FaultPlan,
+) -> Result<NetReport> {
+    let shared = Arc::new(Shared {
+        ingress: Mutex::new(Vec::new()),
+        ingress_cap: opts.queue_cap.max(1),
+        draining: AtomicBool::new(false),
+        stop: AtomicBool::new(false),
+        rejected: AtomicU64::new(0),
+        shed_at_door: AtomicU64::new(0),
+        refused_draining: AtomicU64::new(0),
+    });
+    listener.set_nonblocking(true).context("listener nonblocking")?;
+    let accept_shared = shared.clone();
+    let accepter = std::thread::spawn(move || {
+        loop {
+            if accept_shared.stop.load(Ordering::SeqCst) {
+                return;
+            }
+            match listener.accept() {
+                Ok((stream, _addr)) => {
+                    // accepted sockets may inherit the listener's
+                    // nonblocking mode on some platforms; undo it
+                    let _ = stream.set_nonblocking(false);
+                    let _ = stream.set_nodelay(true);
+                    let conn_shared = accept_shared.clone();
+                    std::thread::spawn(move || handle_conn(stream, conn_shared));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(2)),
+            }
+        }
+    });
+
+    let result = serve_loop(engine, &shared, opts, faults);
+    shared.stop.store(true, Ordering::SeqCst);
+    let _ = accepter.join();
+    // whatever is still parked in ingress gets an honest refusal
+    for inc in shared.ingress.lock().unwrap().drain(..) {
+        match inc {
+            Incoming::Generate { stream, .. } => respond_503(stream),
+            Incoming::Stats(stream) => {
+                respond_and_close(stream, &http_json("200 OK", "", "{}"))
+            }
+        }
+    }
+    result
+}
+
+fn serve_loop<E: ServeEngine>(
+    engine: &mut E,
+    shared: &Arc<Shared>,
+    opts: &NetOptions,
+    faults: &FaultPlan,
+) -> Result<NetReport> {
+    let mut report = NetReport::default();
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut next_id: u64 = 1;
+    let mut draining = false;
+    let mut drain_deadline: Option<Instant> = None;
+    let mut drain_forced = false;
+    let heartbeat = Duration::from_millis(opts.heartbeat_ms.max(1));
+
+    loop {
+        // -- drain trigger: SIGTERM/request_drain or the request budget
+        let budget_done = opts
+            .max_requests
+            .is_some_and(|m| report.admitted + report.shed >= m);
+        if !draining && (drain_requested() || budget_done) {
+            draining = true;
+            shared.draining.store(true, Ordering::SeqCst);
+            drain_deadline = Some(
+                Instant::now() + Duration::from_millis(opts.drain_timeout_ms),
+            );
+            log::info!(
+                "drain: admissions closed, {} live request(s)",
+                engine.live_ids().len()
+            );
+        }
+
+        // -- ingress: admit, shed, or answer directly --------------------
+        let incoming: Vec<Incoming> =
+            shared.ingress.lock().unwrap().drain(..).collect();
+        for inc in incoming {
+            match inc {
+                Incoming::Stats(stream) => {
+                    let body = engine.stats_json();
+                    respond_and_close(stream, &http_json("200 OK", "", &body));
+                }
+                Incoming::Generate { wire, stream, dead } => {
+                    if draining {
+                        report.refused_draining += 1;
+                        respond_503(stream);
+                        continue;
+                    }
+                    let id = next_id;
+                    next_id += 1;
+                    let verdict = engine.try_admit(NetRequest {
+                        id,
+                        prompt: wire.prompt,
+                        max_new_tokens: wire.max_new_tokens,
+                        temperature: wire.temperature,
+                        deadline_ms: wire.deadline_ms,
+                    });
+                    match verdict {
+                        NetAdmission::Shed { retry_after_ms } => {
+                            report.shed += 1;
+                            respond_429(stream, retry_after_ms);
+                        }
+                        NetAdmission::Admitted => {
+                            report.admitted += 1;
+                            let tx =
+                                spawn_writer(stream, dead.clone(), opts.outbox_cap);
+                            let _ = tx.try_send(WriteCmd::Line(stream_head(id)));
+                            conns.insert(
+                                id,
+                                Conn {
+                                    tx,
+                                    dead,
+                                    last_write: Instant::now(),
+                                    tokens_sent: 0,
+                                },
+                            );
+                        }
+                    }
+                }
+            }
+        }
+
+        // -- vanished clients: cancel mid-flight, free the row + blocks --
+        let gone: Vec<u64> = conns
+            .iter()
+            .filter(|(_, c)| c.dead.load(Ordering::SeqCst))
+            .map(|(&id, _)| id)
+            .collect();
+        for id in gone {
+            conns.remove(&id);
+            if engine.cancel(id) {
+                report.disconnects += 1;
+            }
+        }
+
+        // -- injected faults, then one engine tick -----------------------
+        if faults.panic_on_tick == Some(report.ticks) {
+            parallel::inject_worker_panic_once();
+        }
+        let had_work = engine.has_work();
+        if had_work || draining {
+            let events = engine.tick()?;
+            report.ticks += 1;
+            for ev in events {
+                dispatch_event(ev, engine, &mut conns, &mut report, faults);
+            }
+        }
+
+        // -- heartbeats on idle streams ----------------------------------
+        let now = Instant::now();
+        let mut kill: Vec<u64> = Vec::new();
+        for (&id, conn) in conns.iter_mut() {
+            if now.duration_since(conn.last_write) >= heartbeat {
+                match conn.tx.try_send(WriteCmd::Line("{\"hb\":1}\n".into())) {
+                    Ok(()) => conn.last_write = now,
+                    Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
+                        kill.push(id);
+                    }
+                }
+            }
+        }
+        for id in kill {
+            report.slow_readers += 1;
+            conns.remove(&id);
+            engine.cancel(id);
+        }
+
+        // -- exit: drained (clean or by force) ---------------------------
+        if draining {
+            let idle = !engine.has_work()
+                && conns.is_empty()
+                && shared.ingress.lock().unwrap().is_empty();
+            if idle {
+                report.drained_clean = !drain_forced;
+                break;
+            }
+            if !drain_forced
+                && drain_deadline.is_some_and(|d| Instant::now() > d)
+            {
+                // timeout: cancel whatever is left; the cancellations
+                // surface as events on the next tick and close their
+                // connections, after which the loop exits idle
+                drain_forced = true;
+                for id in engine.live_ids() {
+                    engine.cancel(id);
+                }
+            }
+        } else if !had_work {
+            std::thread::sleep(Duration::from_micros(opts.idle_sleep_us.max(1)));
+        }
+    }
+
+    report.rejected = shared.rejected.load(Ordering::SeqCst);
+    report.shed += shared.shed_at_door.load(Ordering::SeqCst);
+    report.refused_draining +=
+        shared.refused_draining.load(Ordering::SeqCst);
+    log::info!(
+        "serve drained: admitted={} completed={} shed={} rejected={} \
+         timed_out={} disconnects={} slow_readers={} ticks={} clean={}",
+        report.admitted,
+        report.completed,
+        report.shed,
+        report.rejected,
+        report.timed_out,
+        report.disconnects,
+        report.slow_readers,
+        report.ticks,
+        report.drained_clean
+    );
+    Ok(report)
+}
+
+fn dispatch_event<E: ServeEngine>(
+    ev: NetEvent,
+    engine: &mut E,
+    conns: &mut HashMap<u64, Conn>,
+    report: &mut NetReport,
+    faults: &FaultPlan,
+) {
+    match ev {
+        NetEvent::Token { id, token } => {
+            let Some(conn) = conns.get_mut(&id) else {
+                return; // client already gone; engine cancel is in flight
+            };
+            let line = format!("{{\"token\":{token}}}\n");
+            match conn.tx.try_send(WriteCmd::Line(line)) {
+                Ok(()) => {
+                    conn.last_write = Instant::now();
+                    conn.tokens_sent += 1;
+                    let sent = conn.tokens_sent;
+                    // injected mid-stream disconnect (client vanishes
+                    // after its n-th token, deterministically)
+                    if faults.close_after_tokens.iter().any(|&(fid, n)| {
+                        fid == id && n == sent
+                    }) {
+                        let _ = conn.tx.try_send(WriteCmd::Close);
+                        conns.remove(&id);
+                        if engine.cancel(id) {
+                            report.disconnects += 1;
+                        }
+                    }
+                }
+                Err(_) => {
+                    // outbox full (slow reader) or writer gone: drop it
+                    report.slow_readers += 1;
+                    conns.remove(&id);
+                    engine.cancel(id);
+                }
+            }
+        }
+        NetEvent::Completed { id, text, tokens, latency_ms } => {
+            report.completed += 1;
+            if let Some(conn) = conns.remove(&id) {
+                let mut obj = Json::obj();
+                obj.set("done", Json::from(true));
+                obj.set("text", Json::from(text));
+                obj.set("tokens", Json::from(tokens));
+                obj.set("latency_ms", Json::from(latency_ms));
+                let line = format!("{obj}\n");
+                let _ = conn.tx.try_send(WriteCmd::End(line));
+            }
+        }
+        NetEvent::TimedOut { id } => {
+            report.timed_out += 1;
+            if let Some(conn) = conns.remove(&id) {
+                let line = "{\"timeout\":true}\n".to_string();
+                let _ = conn.tx.try_send(WriteCmd::End(line));
+            }
+        }
+        NetEvent::Cancelled { id } => {
+            // disconnect-initiated cancels have no conn left; a
+            // drain-forced cancel still owes its client a terminal line
+            if let Some(conn) = conns.remove(&id) {
+                let line = "{\"cancelled\":true}\n".to_string();
+                let _ = conn.tx.try_send(WriteCmd::End(line));
+            }
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! Crash-safe file writes: stage into a temp file, then rename.
+//!
+//! A `File::create` + `write_all` sequence that dies mid-write (SIGKILL,
+//! OOM, power loss) leaves a truncated file at the final path — and a
+//! truncated checkpoint is worse than none, because `consmax train
+//! --resume` will try to load it. [`write_atomic`] stages the bytes into
+//! a sibling temp file in the *same directory* (renames across
+//! filesystems are not atomic) and `rename`s it over the target only
+//! after every byte is flushed, so readers see either the old complete
+//! file or the new complete file, never a prefix.
+
+use std::fs::File;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// Temp-file sibling for `path`: same directory, hidden, pid-tagged so
+/// concurrent writers from different processes never collide.
+fn staging_path(path: &Path) -> PathBuf {
+    let name = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "file".into());
+    path.with_file_name(format!(".{name}.tmp.{}", std::process::id()))
+}
+
+/// Write `path` atomically: `fill` streams into a temp file in the same
+/// directory, which is flushed and renamed over `path` on success. On
+/// any error the temp file is removed and the prior `path` contents (if
+/// any) are left untouched.
+pub fn write_atomic(path: &Path, fill: impl FnOnce(&mut File) -> Result<()>) -> Result<()> {
+    if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+        std::fs::create_dir_all(dir)?;
+    }
+    let tmp = staging_path(path);
+    let result = (|| -> Result<()> {
+        let mut f = File::create(&tmp).with_context(|| format!("creating {}", tmp.display()))?;
+        fill(&mut f)?;
+        f.flush()?;
+        f.sync_all().with_context(|| format!("syncing {}", tmp.display()))?;
+        drop(f);
+        std::fs::rename(&tmp, path).with_context(|| format!("renaming to {}", path.display()))?;
+        Ok(())
+    })();
+    if result.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    result
+}
+
+/// [`write_atomic`] for a single in-memory buffer.
+pub fn write_bytes_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    write_atomic(path, |f| {
+        f.write_all(bytes)?;
+        Ok(())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::bail;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("consmax_atomicio_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn writes_and_overwrites() {
+        let dir = tmpdir("basic");
+        let p = dir.join("out.bin");
+        write_bytes_atomic(&p, b"first").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"first");
+        write_bytes_atomic(&p, b"second, longer").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"second, longer");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn failed_write_preserves_previous_contents() {
+        let dir = tmpdir("preserve");
+        let p = dir.join("ckpt.bin");
+        write_bytes_atomic(&p, b"good checkpoint").unwrap();
+        let err = write_atomic(&p, |f| {
+            f.write_all(b"partial garbage")?;
+            bail!("simulated crash mid-serialize")
+        });
+        assert!(err.is_err());
+        // The original survives and no staging file is left behind.
+        assert_eq!(std::fs::read(&p).unwrap(), b"good checkpoint");
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name())
+            .filter(|n| n.to_string_lossy().contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "staging leak: {leftovers:?}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn creates_missing_parent_dirs() {
+        let dir = tmpdir("parents");
+        let p = dir.join("a/b/c.txt");
+        write_bytes_atomic(&p, b"deep").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"deep");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -5,6 +5,7 @@
 //! half) are replaced by the small, fully-tested implementations here.
 //! Each module documents the subset of behaviour it guarantees.
 
+pub mod atomicio;
 pub mod bench;
 pub mod cli;
 pub mod fp16;

@@ -1,0 +1,921 @@
+//! Chaos suite for the hardened serving stack (ISSUE: robustness PR).
+//!
+//! The invariant under test, at every level: **every submitted request
+//! reaches exactly one terminal state** — completed, shed, timed out,
+//! or cancelled — with no leaked slots, no leaked paged-KV blocks, and
+//! no stats drift (`completed + shed + timed_out + cancelled ==
+//! submitted`), and survivors decode **bit-identically** to a no-fault
+//! solo oracle (the repo's signature-oracle pattern).
+//!
+//! Three layers:
+//!
+//! 1. Engine level (`Server` directly): deadlines, mid-flight cancels,
+//!    contained worker panics, KV-pressure spikes, degenerate budgets,
+//!    plus a randomized-churn property over all of it.
+//! 2. Wire level with a mock engine: slow-reader eviction and the
+//!    [`FaultPlan`] injected mid-stream disconnect, where the real
+//!    model would only add noise.
+//! 3. Full TCP integration: real sockets against `serve_net::serve`
+//!    over the `EngineAdapter` — streaming, malformed requests,
+//!    client disconnects, load shedding with `Retry-After`, and
+//!    graceful drain answering 503.
+//!
+//! The network tests share process-global drain state, so they
+//! serialize on [`NET_LOCK`] and re-arm with `reset_drain`.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{Mutex, OnceLock};
+use std::time::Duration;
+
+use anyhow::Result;
+use consmax::config::{KvCacheConfig, ModelConfig};
+use consmax::coordinator::{
+    Admission, EngineAdapter, GenRequest, GenResponse, Generator,
+    ParamStore, ServeEvent, Server,
+};
+use consmax::prop_assert;
+use consmax::runtime::backend::KvGeometry;
+use consmax::runtime::parallel;
+use consmax::runtime::serve_net::{
+    self, FaultPlan, NetAdmission, NetEvent, NetOptions, NetRequest,
+    ServeEngine,
+};
+use consmax::util::proptest::run_property;
+
+fn setup() -> (ModelConfig, ParamStore) {
+    let cfg = ModelConfig::builtin("tiny", "consmax").unwrap();
+    let store = ParamStore::init(&cfg, 5).unwrap();
+    (cfg, store)
+}
+
+fn greedy(id: u64, prompt: &str, max_new: usize) -> GenRequest {
+    GenRequest::greedy(id, prompt, max_new)
+}
+
+/// Greedy single-request reference: the static oracle at batch 1.
+fn oracle_tokens(
+    cfg: &ModelConfig,
+    store: &ParamStore,
+    prompt: &str,
+    max_new: usize,
+) -> Vec<i32> {
+    let mut g = Generator::native(cfg, store, 0).unwrap();
+    g.generate_batch_ext(&[prompt.to_string()], &[max_new], &[0.0])
+        .unwrap()
+        .tokens
+        .remove(0)
+}
+
+/// Step until the server is empty (bounded: chaos must not livelock).
+fn drain_server(server: &mut Server<'_>) -> Vec<GenResponse> {
+    let mut out = Vec::new();
+    for _ in 0..500 {
+        if server.pending() + server.in_flight() == 0 {
+            return out;
+        }
+        out.extend(server.step().unwrap());
+    }
+    panic!(
+        "server failed to drain in 500 steps: {} pending, {} in flight",
+        server.pending(),
+        server.in_flight()
+    );
+}
+
+/// Accounting closure + paged-pool leak check, asserted at drain.
+fn assert_closed(server: &Server<'_>) {
+    assert_eq!(
+        server.submitted,
+        server.completed + server.shed + server.timed_out + server.cancelled,
+        "terminal-state accounting must close"
+    );
+    let st = server.stats();
+    assert_eq!(server.pending(), 0);
+    assert_eq!(server.in_flight(), 0);
+    if st.kv_paged {
+        assert_eq!(
+            st.kv_free_blocks, st.kv_total_blocks,
+            "paged KV blocks leaked past drain"
+        );
+    }
+}
+
+/// Fold captured events: (terminal events per id, token events per id).
+fn fold_events(
+    events: &[ServeEvent],
+) -> (HashMap<u64, usize>, HashMap<u64, usize>) {
+    let mut terminals: HashMap<u64, usize> = HashMap::new();
+    let mut tokens: HashMap<u64, usize> = HashMap::new();
+    for ev in events {
+        match ev {
+            ServeEvent::Token { id, .. } => *tokens.entry(*id).or_insert(0) += 1,
+            _ => *terminals.entry(ev.id()).or_insert(0) += 1,
+        }
+    }
+    (terminals, tokens)
+}
+
+// ---- engine-level chaos ---------------------------------------------------
+
+#[test]
+fn zero_deadline_times_out_before_taking_a_slot() {
+    let (cfg, store) = setup();
+    let mut server = Server::new(Generator::native(&cfg, &store, 0).unwrap());
+    server.set_event_capture(true);
+    for id in 0..3 {
+        let mut req = greedy(id, "doomed ", 8);
+        req.deadline_ms = Some(0);
+        server.submit(req);
+    }
+    let responses = drain_server(&mut server);
+    assert!(responses.is_empty());
+    assert_eq!(server.timed_out, 3);
+    assert_closed(&server);
+    let (terminals, tokens) = fold_events(&server.drain_events());
+    assert_eq!(terminals.len(), 3);
+    assert!(terminals.values().all(|&n| n == 1));
+    assert!(tokens.is_empty(), "timed-out requests must stream nothing");
+}
+
+#[test]
+fn deadline_drops_a_resident_mid_flight_and_frees_its_kv() {
+    let (cfg, store) = setup();
+    let mut server = Server::new(Generator::native(&cfg, &store, 0).unwrap());
+    let mut kv = KvCacheConfig::default();
+    kv.block_tokens = 8;
+    server.set_kv_config(Some(kv)).unwrap();
+    server.set_event_capture(true);
+    // the victim gets a deadline it will blow mid-decode; the survivor
+    // must come out bit-identical to its solo oracle anyway
+    let mut victim = greedy(0, "victim with a long budget ", 48);
+    victim.deadline_ms = Some(1); // lapses after the first step's work
+    server.submit(victim);
+    server.submit(greedy(1, "survivor ", 6));
+    server.step().unwrap(); // both join, victim's deadline starts burning
+    std::thread::sleep(Duration::from_millis(2));
+    let responses = drain_server(&mut server);
+    assert_eq!(server.timed_out, 1, "victim should lapse mid-flight");
+    assert_eq!(responses.len(), 1);
+    assert_eq!(responses[0].id, 1);
+    assert_eq!(
+        responses[0].tokens,
+        oracle_tokens(&cfg, &store, "survivor ", 6),
+        "survivor diverged from the no-fault oracle"
+    );
+    assert_closed(&server);
+}
+
+#[test]
+fn cancel_frees_queued_and_resident_requests() {
+    let (cfg, store) = setup();
+    let mut server = Server::new(Generator::native(&cfg, &store, 0).unwrap());
+    let mut kv = KvCacheConfig::default();
+    kv.block_tokens = 8;
+    server.set_kv_config(Some(kv)).unwrap();
+    server.set_event_capture(true);
+    for id in 0..4 {
+        server.submit(greedy(id, "cancel target ", 24));
+    }
+    server.step().unwrap();
+    assert!(server.cancel(0), "resident cancel");
+    assert!(server.cancel(3), "cancel works wherever the request lives");
+    assert_eq!(server.cancelled, 2);
+    assert!(!server.cancel(0), "double cancel must be a no-op");
+    let responses = drain_server(&mut server);
+    assert_eq!(
+        responses.len() as u64 + server.cancelled,
+        4,
+        "every request is either served or cancelled"
+    );
+    for r in &responses {
+        assert_eq!(
+            r.tokens,
+            oracle_tokens(&cfg, &store, "cancel target ", 24),
+            "survivor {} diverged after neighbor cancellation",
+            r.id
+        );
+    }
+    assert_closed(&server);
+}
+
+#[test]
+fn contained_worker_panic_replays_residents_bit_identically() {
+    let (cfg, store) = setup();
+    let mut server = Server::new(Generator::native(&cfg, &store, 0).unwrap());
+    server.set_event_capture(true);
+    let cases = [("panic survivor A ", 10usize), ("B ", 4), ("longer C ", 14)];
+    for (id, (prompt, max_new)) in cases.iter().enumerate() {
+        server.submit(greedy(id as u64, prompt, *max_new));
+    }
+    server.step().unwrap(); // all resident
+    parallel::inject_worker_panic_once();
+    server.step().unwrap(); // panic fires, is contained, residents requeue
+    assert_eq!(server.panics_recovered, 1);
+    let responses = drain_server(&mut server);
+    assert_eq!(responses.len(), cases.len());
+    let mut responses = responses;
+    responses.sort_by_key(|r| r.id);
+    for (r, (prompt, max_new)) in responses.iter().zip(&cases) {
+        assert_eq!(
+            r.tokens,
+            oracle_tokens(&cfg, &store, prompt, *max_new),
+            "request {} not replay-deterministic after panic recovery",
+            r.id
+        );
+    }
+    // exactly-once token streaming across the replay: the watermark
+    // suppresses the re-emitted prefix
+    let (terminals, tokens) = fold_events(&server.drain_events());
+    for r in &responses {
+        assert_eq!(terminals.get(&r.id), Some(&1));
+        assert_eq!(
+            tokens.get(&r.id).copied().unwrap_or(0),
+            r.new_tokens,
+            "request {} streamed a duplicated or missing token",
+            r.id
+        );
+    }
+    assert_closed(&server);
+}
+
+#[test]
+fn kv_pressure_spike_preempts_but_every_request_completes() {
+    let (cfg, store) = setup();
+    let mut server = Server::new(Generator::native(&cfg, &store, 0).unwrap());
+    let mut kv = KvCacheConfig::default();
+    kv.block_tokens = 8;
+    // room for ~2 worst-case rows: a 6-deep queue must squeeze through
+    let geo = KvGeometry::of(&cfg, &kv);
+    kv.mem_bytes = Some(2 * geo.blocks_per_row * geo.block_bytes);
+    server.set_kv_config(Some(kv)).unwrap();
+    for id in 0..6 {
+        server.submit(greedy(id, "pressure ", 20));
+    }
+    let responses = drain_server(&mut server);
+    assert_eq!(responses.len(), 6);
+    let want = oracle_tokens(&cfg, &store, "pressure ", 20);
+    for r in &responses {
+        assert_eq!(r.tokens, want, "request {} diverged under pressure", r.id);
+    }
+    assert_closed(&server);
+}
+
+#[test]
+fn chaos_storm_every_request_reaches_exactly_one_terminal_state() {
+    // everything at once: tight paged budget (preemptions), a zero
+    // deadline, a mid-flight cancel, degenerate requests, a contained
+    // worker panic, and a late joiner — accounting must close, blocks
+    // must return, survivors must match their solo oracles
+    let (cfg, store) = setup();
+    let mut server = Server::new(Generator::native(&cfg, &store, 0).unwrap());
+    let mut kv = KvCacheConfig::default();
+    kv.block_tokens = 8;
+    let geo = KvGeometry::of(&cfg, &kv);
+    kv.mem_bytes = Some(2 * geo.blocks_per_row * geo.block_bytes);
+    server.set_kv_config(Some(kv)).unwrap();
+    server.set_event_capture(true);
+    server.set_admission_limits(Some(16), None);
+
+    let survivors = [
+        (0u64, "storm survivor zero ", 12usize),
+        (1, "one ", 5),
+        (2, "a rather longer storm prompt two ", 18),
+        (4, "four ", 9),
+    ];
+    for (id, prompt, max_new) in &survivors {
+        assert_eq!(
+            server.try_submit(greedy(*id, prompt, *max_new)),
+            Admission::Admitted
+        );
+    }
+    server.submit(greedy(3, "cancel victim ", 24));
+    let mut doomed = greedy(10, "deadline victim ", 24);
+    doomed.deadline_ms = Some(0);
+    server.submit(doomed);
+    server.submit(greedy(11, "", 4)); // empty prompt: completes untouched
+    server.submit(greedy(12, "zero budget ", 0)); // completes with 0 tokens
+
+    let mut responses = Vec::new();
+    responses.extend(server.step().unwrap());
+    assert!(server.cancel(3), "victim must be cancellable wherever it is");
+    parallel::inject_worker_panic_once();
+    responses.extend(server.step().unwrap());
+    assert_eq!(server.panics_recovered, 1);
+    // late joiner lands after the recovery requeue
+    server.submit(greedy(5, "late storm joiner ", 7));
+    responses.extend(drain_server(&mut server));
+
+    assert_eq!(server.timed_out, 1);
+    assert_eq!(server.cancelled, 1);
+    assert_closed(&server);
+
+    let mut by_id: HashMap<u64, GenResponse> =
+        responses.into_iter().map(|r| (r.id, r)).collect();
+    for (id, prompt, max_new) in &survivors {
+        let r = by_id.remove(id).expect("survivor response");
+        assert_eq!(
+            r.tokens,
+            oracle_tokens(&cfg, &store, prompt, *max_new),
+            "survivor {id} diverged from its no-fault oracle"
+        );
+    }
+    let late = by_id.remove(&5).expect("late joiner response");
+    assert_eq!(
+        late.tokens,
+        oracle_tokens(&cfg, &store, "late storm joiner ", 7)
+    );
+    assert!(by_id.remove(&11).is_some(), "degenerate empty prompt completes");
+    assert!(by_id.remove(&12).is_some(), "degenerate zero budget completes");
+    assert!(by_id.is_empty(), "unexpected extra responses: {by_id:?}");
+
+    // exactly one terminal event per non-shed request, tokens
+    // exactly-once per position despite the panic replay
+    let (terminals, tokens) = fold_events(&server.drain_events());
+    assert_eq!(
+        terminals.len() as u64,
+        server.completed + server.timed_out + server.cancelled
+    );
+    assert!(terminals.values().all(|&n| n == 1), "duplicate terminal event");
+    for (id, prompt, max_new) in &survivors {
+        let want = oracle_tokens(&cfg, &store, prompt, *max_new).len();
+        assert_eq!(
+            tokens.get(id).copied().unwrap_or(0),
+            want,
+            "survivor {id} token stream not exactly-once"
+        );
+    }
+}
+
+// ---- satellite: degenerate paged budgets ----------------------------------
+
+#[test]
+fn kv_budget_below_one_row_is_rejected_at_config_time() {
+    let (cfg, store) = setup();
+    let mut server = Server::new(Generator::native(&cfg, &store, 0).unwrap());
+    let mut kv = KvCacheConfig::default();
+    kv.mem_bytes = Some(1024); // less than a single block
+    let err = server.set_kv_config(Some(kv)).unwrap_err().to_string();
+    assert!(
+        err.contains("kv budget too small"),
+        "want a clear config-time rejection, got: {err}"
+    );
+    // the server remains usable on the dense layout after the rejection
+    server.submit(greedy(0, "still alive ", 4));
+    let responses = drain_server(&mut server);
+    assert_eq!(responses.len(), 1);
+}
+
+#[test]
+fn one_row_kv_budget_serves_a_worst_case_request_without_livelock() {
+    // the zero-progress edge: the pool holds exactly one worst-case
+    // row, so requests must run strictly one at a time — and finish
+    let (cfg, store) = setup();
+    let mut server = Server::new(Generator::native(&cfg, &store, 0).unwrap());
+    let mut kv = KvCacheConfig::default();
+    kv.block_tokens = 8;
+    let geo = KvGeometry::of(&cfg, &kv);
+    kv.mem_bytes = Some(geo.blocks_per_row * geo.block_bytes);
+    server.set_kv_config(Some(kv)).unwrap();
+    // worst case: prompt + budget saturate the context window
+    let long_prompt = "x".repeat(cfg.ctx - 8);
+    server.submit(greedy(0, &long_prompt, 8));
+    server.submit(greedy(1, "queued behind the giant ", 6));
+    let mut responses = drain_server(&mut server);
+    responses.sort_by_key(|r| r.id);
+    assert_eq!(responses.len(), 2);
+    assert!(responses[0].new_tokens > 0, "giant request made no progress");
+    assert_eq!(
+        responses[1].tokens,
+        oracle_tokens(&cfg, &store, "queued behind the giant ", 6)
+    );
+    assert_closed(&server);
+}
+
+// ---- satellite: accounting property under randomized churn ----------------
+
+#[test]
+fn accounting_closes_under_randomized_churn() {
+    let (cfg, store) = setup();
+    run_property("serve_terminal_accounting", 6, |g| {
+        let mut server =
+            Server::new(Generator::native(&cfg, &store, 3).unwrap());
+        server.set_event_capture(true);
+        server.set_admission_limits(Some(g.usize(1, 5)), None);
+        if g.bool() {
+            let mut kv = KvCacheConfig::default();
+            kv.block_tokens = 8;
+            let geo = KvGeometry::of(&cfg, &kv);
+            kv.mem_bytes = Some(
+                g.usize(1, 4) * geo.blocks_per_row * geo.block_bytes,
+            );
+            server.set_kv_config(Some(kv)).map_err(|e| e.to_string())?;
+        }
+        let n = g.usize(3, 12) as u64;
+        for id in 0..n {
+            let mut req = greedy(
+                id,
+                ["a ", "bb ", "longer prompt ", ""][g.usize(0, 4)],
+                g.usize(0, 12),
+            );
+            req.deadline_ms = match g.usize(0, 3) {
+                0 => Some(0),     // dies in the sweep
+                1 => Some(60_000), // never lapses in-test
+                _ => None,
+            };
+            let _ = server.try_submit(req);
+            // interleave: occasional step, occasional cancel of a
+            // random earlier id (may already be terminal: no-op)
+            if g.bool() {
+                server.step().map_err(|e| e.to_string())?;
+            }
+            if g.bool() {
+                server.cancel(g.u64(0, n.max(2)));
+            }
+        }
+        for _ in 0..500 {
+            if server.pending() + server.in_flight() == 0 {
+                break;
+            }
+            server.step().map_err(|e| e.to_string())?;
+        }
+        prop_assert!(
+            server.pending() + server.in_flight() == 0,
+            "failed to drain"
+        );
+        prop_assert!(
+            server.submitted
+                == server.completed
+                    + server.shed
+                    + server.timed_out
+                    + server.cancelled,
+            "accounting drift: submitted {} completed {} shed {} \
+             timed_out {} cancelled {}",
+            server.submitted,
+            server.completed,
+            server.shed,
+            server.timed_out,
+            server.cancelled
+        );
+        let st = server.stats();
+        if st.kv_paged {
+            prop_assert!(
+                st.kv_free_blocks == st.kv_total_blocks,
+                "leaked {} paged blocks",
+                st.kv_total_blocks - st.kv_free_blocks
+            );
+        }
+        let (terminals, _tokens) = fold_events(&server.drain_events());
+        prop_assert!(
+            terminals.values().all(|&c| c == 1),
+            "duplicate terminal events"
+        );
+        prop_assert!(
+            terminals.len() as u64
+                == server.completed + server.timed_out + server.cancelled,
+            "terminal events {} != terminal counters {}",
+            terminals.len(),
+            server.completed + server.timed_out + server.cancelled
+        );
+        Ok(())
+    });
+}
+
+// ---- wire-level faults over a mock engine ---------------------------------
+
+/// Scripted engine: each admitted request streams `per_tick` tokens per
+/// tick until `total` are out, then completes. Lets the wire tests pin
+/// slow-reader eviction and injected disconnects without model noise.
+struct MockEngine {
+    per_tick: usize,
+    total: usize,
+    live: Vec<(u64, usize)>, // (id, remaining)
+    pub admitted: u64,
+    pub cancelled: u64,
+    pub completed: u64,
+}
+
+impl MockEngine {
+    fn new(per_tick: usize, total: usize) -> MockEngine {
+        MockEngine {
+            per_tick,
+            total,
+            live: Vec::new(),
+            admitted: 0,
+            cancelled: 0,
+            completed: 0,
+        }
+    }
+}
+
+impl ServeEngine for MockEngine {
+    fn try_admit(&mut self, req: NetRequest) -> NetAdmission {
+        self.admitted += 1;
+        self.live.push((req.id, self.total));
+        NetAdmission::Admitted
+    }
+
+    fn cancel(&mut self, id: u64) -> bool {
+        if let Some(pos) = self.live.iter().position(|&(i, _)| i == id) {
+            self.live.remove(pos);
+            self.cancelled += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn tick(&mut self) -> Result<Vec<NetEvent>> {
+        let mut events = Vec::new();
+        let mut finished = Vec::new();
+        for (id, remaining) in self.live.iter_mut() {
+            let n = self.per_tick.min(*remaining);
+            for _ in 0..n {
+                events.push(NetEvent::Token { id: *id, token: 7 });
+            }
+            *remaining -= n;
+            if *remaining == 0 {
+                finished.push(*id);
+            }
+        }
+        for id in finished {
+            self.live.retain(|&(i, _)| i != id);
+            self.completed += 1;
+            events.push(NetEvent::Completed {
+                id,
+                text: String::from("mock"),
+                tokens: self.total,
+                latency_ms: 0.0,
+            });
+        }
+        Ok(events)
+    }
+
+    fn has_work(&self) -> bool {
+        !self.live.is_empty()
+    }
+
+    fn live_ids(&self) -> Vec<u64> {
+        self.live.iter().map(|&(id, _)| id).collect()
+    }
+
+    fn stats_json(&self) -> String {
+        format!(
+            "{{\"admitted\":{},\"completed\":{},\"cancelled\":{}}}",
+            self.admitted, self.completed, self.cancelled
+        )
+    }
+}
+
+/// The network tests mutate process-global drain state: serialize them.
+fn net_lock() -> std::sync::MutexGuard<'static, ()> {
+    static NET_LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    let guard = NET_LOCK
+        .get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner());
+    serve_net::reset_drain();
+    guard
+}
+
+/// Minimal streaming client. Returns (status, raw header block, token
+/// lines seen, saw a terminal line). `hang_up_after` drops the
+/// connection after that many token lines.
+fn http_generate(
+    addr: &str,
+    prompt: &str,
+    max_new: usize,
+    hang_up_after: Option<usize>,
+) -> (u16, String, usize, bool) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(20)))
+        .unwrap();
+    let body = format!("{{\"prompt\":\"{prompt}\",\"max_new\":{max_new}}}");
+    write!(
+        stream,
+        "POST /generate HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .expect("send request");
+    stream.flush().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line).expect("status line");
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    let mut headers = String::new();
+    loop {
+        let mut h = String::new();
+        if reader.read_line(&mut h).unwrap_or(0) == 0 || h.trim().is_empty() {
+            break;
+        }
+        headers.push_str(&h);
+    }
+    let (mut tokens, mut terminal) = (0usize, false);
+    if status == 200 {
+        loop {
+            let mut l = String::new();
+            match reader.read_line(&mut l) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => {}
+            }
+            if l.contains("\"token\"") {
+                tokens += 1;
+                if hang_up_after.is_some_and(|n| tokens >= n) {
+                    return (status, headers, tokens, false);
+                }
+            } else if l.contains("\"done\"")
+                || l.contains("\"timeout\"")
+                || l.contains("\"cancelled\"")
+            {
+                terminal = true;
+                break;
+            }
+        }
+    }
+    (status, headers, tokens, terminal)
+}
+
+#[test]
+fn wire_slow_reader_is_evicted_not_buffered_unboundedly() {
+    let _guard = net_lock();
+    // firehose engine: one request streams far more bytes than any
+    // socket buffer holds; the never-reading client must be evicted by
+    // outbox overflow, not queued without bound
+    let mut engine = MockEngine::new(8192, 4_000_000);
+    let listener = serve_net::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let client = std::thread::spawn(move || {
+        let mut stream = TcpStream::connect(&addr).expect("connect");
+        let body = "{\"prompt\":\"firehose\",\"max_new\":1}";
+        write!(
+            stream,
+            "POST /generate HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .expect("send");
+        stream.flush().unwrap();
+        // never read: hold the socket open until the server gives up
+        std::thread::sleep(Duration::from_secs(20));
+    });
+    let opts = NetOptions {
+        outbox_cap: 2,
+        max_requests: Some(1),
+        drain_timeout_ms: 10_000,
+        ..NetOptions::default()
+    };
+    let report = serve_net::serve(
+        &mut engine,
+        listener,
+        &opts,
+        &FaultPlan::default(),
+    )
+    .unwrap();
+    assert_eq!(report.admitted, 1);
+    assert_eq!(report.slow_readers, 1, "slow reader must be evicted");
+    assert_eq!(engine.cancelled, 1, "eviction must cancel the request");
+    assert!(!engine.has_work(), "no live request may remain");
+    drop(client); // detached; exits on its own
+}
+
+#[test]
+fn wire_fault_plan_disconnects_mid_stream_deterministically() {
+    let _guard = net_lock();
+    let mut engine = MockEngine::new(1, 50);
+    let listener = serve_net::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let client = std::thread::spawn(move || {
+        http_generate(&addr, "doomed stream", 50, None)
+    });
+    let opts = NetOptions {
+        max_requests: Some(1),
+        ..NetOptions::default()
+    };
+    let faults = FaultPlan {
+        close_after_tokens: vec![(1, 3)], // first request, 3 tokens in
+        ..FaultPlan::default()
+    };
+    let report =
+        serve_net::serve(&mut engine, listener, &opts, &faults).unwrap();
+    let (status, _headers, tokens, terminal) = client.join().unwrap();
+    assert_eq!(status, 200);
+    assert!(
+        tokens <= 3,
+        "connection should close right after the injected point"
+    );
+    assert!(!terminal, "no terminal line after an injected disconnect");
+    assert_eq!(report.disconnects, 1);
+    assert_eq!(engine.cancelled, 1);
+}
+
+// ---- full TCP integration over the real engine ----------------------------
+
+fn real_adapter(
+    cfg: &ModelConfig,
+    store: &ParamStore,
+    queue_cap: usize,
+) -> EngineAdapter<'static> {
+    let server = Server::new(Generator::native(cfg, store, 7).unwrap());
+    EngineAdapter::new(server, Some(queue_cap), None, None).unwrap()
+}
+
+#[test]
+fn tcp_streams_to_completion_and_drains_clean() {
+    let _guard = net_lock();
+    let (cfg, store) = setup();
+    let mut engine = real_adapter(&cfg, &store, 32);
+    let listener = serve_net::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let opts = NetOptions {
+        max_requests: Some(2),
+        ..NetOptions::default()
+    };
+    let serve = std::thread::spawn(move || {
+        let report = serve_net::serve(
+            &mut engine,
+            listener,
+            &opts,
+            &FaultPlan::default(),
+        )
+        .unwrap();
+        (report, engine.into_server())
+    });
+    let (s1, _h1, t1, done1) = http_generate(&addr, "The attention ", 8, None);
+    let (s2, _h2, t2, done2) = http_generate(&addr, "net two ", 5, None);
+    let (report, server) = serve.join().unwrap();
+    assert_eq!((s1, s2), (200, 200));
+    assert!(done1 && done2, "both streams must end with a terminal line");
+    assert_eq!(t1, 8, "expected 8 streamed tokens");
+    assert_eq!(t2, 5);
+    assert_eq!(report.admitted, 2);
+    assert_eq!(report.completed, 2);
+    assert!(report.drained_clean);
+    assert_closed(&server);
+    // streamed tokens match the solo oracle lengths — and the server's
+    // own response content matched the oracle already at engine level
+    assert_eq!(server.completed, 2);
+}
+
+#[test]
+fn tcp_malformed_is_400_and_vanished_client_is_cancelled() {
+    let _guard = net_lock();
+    let (cfg, store) = setup();
+    let mut engine = real_adapter(&cfg, &store, 32);
+    let listener = serve_net::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let opts = NetOptions {
+        max_requests: Some(1),
+        drain_timeout_ms: 10_000,
+        ..NetOptions::default()
+    };
+    let serve = std::thread::spawn(move || {
+        let report = serve_net::serve(
+            &mut engine,
+            listener,
+            &opts,
+            &FaultPlan::default(),
+        )
+        .unwrap();
+        (report, engine.into_server())
+    });
+    // malformed request: answered 400 directly, never reaches the engine
+    {
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .unwrap();
+        write!(stream, "BOGUS /nowhere HTTP/1.1\r\n\r\n").unwrap();
+        let mut line = String::new();
+        BufReader::new(stream).read_line(&mut line).unwrap();
+        assert!(line.contains("400"), "want 400, got {line:?}");
+    }
+    // streaming client that vanishes two tokens in
+    let (status, _headers, tokens, terminal) =
+        http_generate(&addr, "vanishing client ", 30, Some(2));
+    assert_eq!(status, 200);
+    assert_eq!(tokens, 2);
+    assert!(!terminal);
+    let (report, server) = serve.join().unwrap();
+    assert_eq!(report.rejected, 1, "malformed request must be counted");
+    assert_eq!(report.admitted, 1);
+    assert_eq!(report.disconnects, 1, "EOF must cancel the request");
+    assert_eq!(server.cancelled, 1);
+    assert_closed(&server);
+}
+
+#[test]
+fn tcp_overload_sheds_with_retry_after_instead_of_queueing() {
+    let _guard = net_lock();
+    let (cfg, store) = setup();
+    // queue_cap 0: the engine sheds every request — the pure shed path
+    let mut engine = real_adapter(&cfg, &store, 0);
+    let listener = serve_net::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let opts = NetOptions {
+        max_requests: Some(1),
+        ..NetOptions::default()
+    };
+    let serve = std::thread::spawn(move || {
+        let report = serve_net::serve(
+            &mut engine,
+            listener,
+            &opts,
+            &FaultPlan::default(),
+        )
+        .unwrap();
+        (report, engine.into_server())
+    });
+    let (status, headers, _tokens, _terminal) =
+        http_generate(&addr, "shed me ", 4, None);
+    let (report, server) = serve.join().unwrap();
+    assert_eq!(status, 429);
+    assert!(
+        headers.to_ascii_lowercase().contains("retry-after:"),
+        "429 must carry Retry-After, got headers: {headers}"
+    );
+    assert_eq!(report.shed, 1);
+    assert_eq!(report.admitted, 0);
+    assert_eq!(server.shed, 1);
+    assert_closed(&server);
+}
+
+#[test]
+fn tcp_drain_refuses_new_work_with_503_and_finishes_residents() {
+    let _guard = net_lock();
+    let (cfg, store) = setup();
+    let mut engine = real_adapter(&cfg, &store, 32);
+    let listener = serve_net::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let opts = NetOptions {
+        drain_timeout_ms: 20_000,
+        ..NetOptions::default() // no max_requests: drains on request
+    };
+    let serve = std::thread::spawn(move || {
+        let report = serve_net::serve(
+            &mut engine,
+            listener,
+            &opts,
+            &FaultPlan::default(),
+        )
+        .unwrap();
+        (report, engine.into_server())
+    });
+    // resident A: signal once its stream is live, then read to the end
+    let (tx, rx) = std::sync::mpsc::channel();
+    let addr_a = addr.clone();
+    let resident = std::thread::spawn(move || {
+        let mut stream = TcpStream::connect(&addr_a).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(20)))
+            .unwrap();
+        let body = "{\"prompt\":\"resident under drain \",\"max_new\":40}";
+        write!(
+            stream,
+            "POST /generate HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .unwrap();
+        stream.flush().unwrap();
+        let mut reader = BufReader::new(stream);
+        let (mut tokens, mut terminal, mut signalled) = (0usize, false, false);
+        loop {
+            let mut l = String::new();
+            match reader.read_line(&mut l) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => {}
+            }
+            if l.contains("\"token\"") {
+                tokens += 1;
+                if !signalled {
+                    signalled = true;
+                    tx.send(()).unwrap(); // stream is live: drain now
+                }
+            } else if l.contains("\"done\"") {
+                terminal = true;
+                break;
+            }
+        }
+        (tokens, terminal)
+    });
+    rx.recv_timeout(Duration::from_secs(20))
+        .expect("resident never started streaming");
+    serve_net::request_drain();
+    // give the serve loop a beat to flip the draining flag, then any
+    // new request must bounce with 503
+    std::thread::sleep(Duration::from_millis(100));
+    let (status, _h, _t, _d) = http_generate(&addr, "too late ", 4, None);
+    assert_eq!(status, 503, "new work during drain must be refused");
+    let (tokens, terminal) = resident.join().unwrap();
+    assert!(terminal, "the resident must finish during a clean drain");
+    assert_eq!(tokens, 40);
+    let (report, server) = serve.join().unwrap();
+    assert!(report.drained_clean, "drain should not need force-cancel");
+    assert_eq!(report.completed, 1);
+    assert!(report.refused_draining >= 1);
+    assert_closed(&server);
+}

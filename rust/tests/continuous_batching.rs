@@ -47,6 +47,7 @@ fn greedy_req(id: u64, prompt: &str, max_new: usize) -> GenRequest {
         max_new_tokens: max_new,
         temperature: 0.0,
         stop: None,
+        deadline_ms: None,
     }
 }
 

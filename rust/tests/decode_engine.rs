@@ -285,6 +285,7 @@ fn per_request_temperature_is_respected() {
         max_new_tokens: 10,
         temperature: 5.0, // near-uniform sampling
         stop: None,
+        deadline_ms: None,
     });
     server.submit(GenRequest {
         id: 1,
@@ -292,6 +293,7 @@ fn per_request_temperature_is_respected() {
         max_new_tokens: 10,
         temperature: 0.0, // greedy
         stop: None,
+        deadline_ms: None,
     });
     let mut responses = server.run_to_completion().unwrap();
     responses.sort_by_key(|r| r.id);
@@ -320,6 +322,7 @@ fn token_space_accounting() {
         max_new_tokens: 5,
         temperature: 0.0,
         stop: None,
+        deadline_ms: None,
     });
     let r = &server.run_to_completion().unwrap()[0];
     assert_eq!(
@@ -337,6 +340,7 @@ fn token_space_accounting() {
         max_new_tokens: 8,
         temperature: 0.0,
         stop: None,
+        deadline_ms: None,
     });
     let r = &server.run_to_completion().unwrap()[0];
     assert_eq!(r.prompt_tokens, cfg.ctx - 8);

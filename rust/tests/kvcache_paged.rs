@@ -355,6 +355,7 @@ fn paged_server_preempts_under_pressure_without_changing_outputs() {
             max_new_tokens: 30,
             temperature: 0.0,
             stop: None,
+            deadline_ms: None,
         });
     }
     let mut responses = server.run_continuous().unwrap();
@@ -401,6 +402,7 @@ fn paged_server_without_budget_matches_oracle_on_a_mixed_queue() {
             max_new_tokens: *max_new,
             temperature: 0.0,
             stop: None,
+            deadline_ms: None,
         });
     }
     let mut responses = server.run_continuous().unwrap();

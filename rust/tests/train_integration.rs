@@ -214,6 +214,7 @@ fn server_serves_all_requests() {
             max_new_tokens: 6,
             temperature: 0.0,
             stop: None,
+            deadline_ms: None,
         });
     }
     let responses = server.run_to_completion().expect("serve");
