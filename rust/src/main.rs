@@ -50,6 +50,7 @@ fn specs() -> Vec<Spec> {
         Spec::opt_default("backend", "auto", "execution backend (native|pjrt|auto)"),
         Spec::opt_default("decode", "kv", "native decode engine (kv|recompute)"),
         Spec::opt("threads", "native worker threads (default: CONSMAX_THREADS or all cores)"),
+        Spec::opt("simd", "SIMD microkernels, auto|off (default: CONSMAX_SIMD or auto)"),
         Spec::opt_default("artifacts", "artifacts", "artifacts directory (pjrt)"),
         Spec::opt_default("config", "tiny", "model config (tiny|paper)"),
         Spec::opt_default("normalizer", "consmax", Normalizer::HELP),
@@ -167,6 +168,16 @@ fn main() {
         Err(e) => {
             eprintln!("error: {e}");
             std::process::exit(2);
+        }
+    }
+    // install the SIMD level the same way: --simd beats CONSMAX_SIMD
+    if let Some(s) = args.get("simd") {
+        match consmax::runtime::backend::simd::Mode::parse(s) {
+            Ok(m) => consmax::runtime::backend::simd::set_mode(m),
+            Err(e) => {
+                eprintln!("error: {e}");
+                std::process::exit(2);
+            }
         }
     }
     if args.has_flag("help") || args.subcommand.is_none() {
@@ -926,6 +937,10 @@ fn run_info(args: &Args) -> Result<()> {
         std::path::Path::new(&artifacts),
     )?;
     println!("backend: {} — {}", backend.name(), backend.platform());
+    println!(
+        "simd: {} (select with --simd auto|off or CONSMAX_SIMD)",
+        consmax::runtime::backend::simd::level().name()
+    );
     println!("ops:");
     for op in backend.ops() {
         println!("  {op}");

@@ -38,7 +38,13 @@
 //!   *reads* the shared pool; encoded writes commit serially afterwards.
 //!
 //! The session owns no parameters; [`NativeModel::prefill`] and
-//! [`NativeModel::decode_step`] drive it.
+//! [`NativeModel::decode_step`] drive it. The per-token compute those
+//! entry points run — `native::dot` scores and the fused
+//! `native::attend_stream` ConSmax tails (which never materialize a
+//! probability row) — sits on the SIMD microkernel seam (DESIGN.md
+//! §SIMD-kernel seam), so dense and paged decode inherit the
+//! vectorized kernels and stay bitwise equal to the streaming forward
+//! pass at any SIMD level.
 //!
 //! [`NativeModel::prefill`]: super::NativeModel::prefill
 //! [`NativeModel::decode_step`]: super::NativeModel::decode_step

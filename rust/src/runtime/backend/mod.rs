@@ -35,6 +35,7 @@ pub mod kvcache;
 pub mod model;
 pub mod native;
 pub mod normalizer;
+pub mod simd;
 pub mod train;
 
 use std::path::Path;

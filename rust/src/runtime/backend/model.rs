@@ -11,17 +11,21 @@
 //! inference form `C·exp(s)` produces once β/γ are merged (asserted in
 //! `native.rs` tests).
 //!
-//! The compute layer is parallel and cache-blocked (DESIGN.md
-//! §Parallel-compute seam): weight matrices are pre-transposed once at
-//! load so every matmul is a unit-stride [`native::matmul_bt_into`];
-//! attention fans out over (batch-row × head) tiles; prefill and decode
-//! fan out over batch rows; the LM head splits across vocab chunks. For
-//! **ConSmax** the attention inner loop streams score→C·exp→PV per key
-//! with no materialized probability row — the paper's reduction-freeness
-//! carried into software — while softmax/softermax must collect each
-//! score row before normalizing. Thread count never changes results:
-//! every output element is produced by one serial reduction in a fixed
-//! order (`rust/tests/parallel_equivalence.rs`).
+//! The compute layer is parallel, cache-blocked and vectorized
+//! (DESIGN.md §Parallel-compute seam, §SIMD-kernel seam): weight
+//! matrices are pre-transposed once at load so every matmul is a
+//! unit-stride [`native::matmul_bt_into`] running the SIMD lane layer's
+//! [`native::dot`]; attention fans out over (batch-row × head) tiles;
+//! prefill and decode fan out over batch rows; the LM head splits
+//! across vocab chunks. For **ConSmax** the attention inner loop
+//! streams score→C·exp→PV per key with no materialized probability row
+//! — the paper's reduction-freeness carried into software, with the
+//! exponential going through the seam's dispatched polynomial
+//! `simd::exp` — while softmax/softermax must collect each score row
+//! before normalizing. Thread count and SIMD level never change
+//! results within a mode: every output element is produced by one
+//! serial reduction in a fixed order
+//! (`rust/tests/parallel_equivalence.rs`, `rust/tests/simd_kernels.rs`).
 //!
 //! Under `--quant int8` (DESIGN.md §Quantization seam) the model builds
 //! per-channel symmetric int8 twins of every projection matrix and the
@@ -500,10 +504,13 @@ impl NativeModel {
                                 let koff = (r * t + j) * 3 * d + d + hh * hd;
                                 let sc =
                                     native::dot(q, &qkv[koff..koff + hd]) * scale;
-                                // same per-key op order as the kernels
-                                // `attend_consmax` / `attend_consmax2` /
+                                // same per-key op order — and, via
+                                // `stream_p`, the same dispatched
+                                // `simd::exp`/`simd::exp2` — as the
+                                // fused `attend_stream` kernel and
                                 // `attend_consmax_lut`, so decode and
-                                // recompute stay bitwise
+                                // recompute stay bitwise at any SIMD
+                                // level
                                 let pj = match table {
                                     Some(tab) => tab
                                         [squant.quantize(sc) as u8 as usize]

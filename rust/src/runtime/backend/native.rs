@@ -18,10 +18,19 @@
 //! triple-loop **oracle** (single-threaded, unblocked, kept for tests
 //! and the op-level `op_consmax_pv`), while [`matmul_bt`] /
 //! [`matmul_bt_into`] are the production kernel — B pre-transposed so
-//! both operands stream with unit stride, an 8-accumulator unrolled
-//! [`dot`] inner loop, cache blocking over column tiles, and work
-//! fanned out over `runtime::parallel`. Thread-count never changes
-//! results: each output element is one serial [`dot`].
+//! both operands stream with unit stride, an 8-lane [`dot`] inner loop
+//! from the SIMD microkernel seam (`runtime::backend::simd` — AVX2
+//! intrinsics where detected, portable unrolled loops everywhere
+//! else, bit-identical by construction), cache blocking over column
+//! tiles, and work fanned out over `runtime::parallel`. Thread-count
+//! and SIMD level never change results: each output element is one
+//! serial [`dot`] with a fixed accumulation order.
+//!
+//! Every exponential below goes through the seam's dispatched
+//! [`simd::exp`] / [`simd::exp2`] (polynomial when SIMD is on, libm
+//! when `--simd off`) — except [`consmax`] / [`consmax_train`], which
+//! stay on libm as the op-level scalar oracle the approximation is
+//! tested against.
 //!
 //! The `--quant int8` serving path adds two twins (DESIGN.md
 //! §Quantization seam): [`matmul_bt_i8_into`] runs the same tiling
@@ -40,6 +49,7 @@
 use anyhow::{bail, ensure, Result};
 
 use crate::quant::{BitSplitLut, Int8Quantizer, QuantizedMatrix};
+use crate::runtime::backend::simd::{self, ExpBase};
 use crate::runtime::backend::Backend;
 use crate::runtime::{DType, HostTensor};
 use crate::util::fp16::F16;
@@ -148,30 +158,34 @@ pub fn consmax_train(s: &[f32], beta: f32, gamma: f32) -> Vec<f32> {
 
 /// Numerically-stable softmax over rows of length `row`.
 pub fn softmax_rows(s: &[f32], row: usize) -> Vec<f32> {
-    reduce_rows(s, row, f32::exp)
+    reduce_rows(s, row, ExpBase::E)
 }
 
 /// Softermax (base-2 softmax) over rows of length `row`.
 pub fn softermax_rows(s: &[f32], row: usize) -> Vec<f32> {
-    reduce_rows(s, row, f32::exp2)
+    reduce_rows(s, row, ExpBase::Two)
 }
 
 /// In-place numerically-stable softmax over one score row.
 pub fn softmax_inplace(row: &mut [f32]) {
-    normalize_inplace(row, f32::exp);
+    normalize_inplace(row, ExpBase::E);
 }
 
 /// In-place softermax (base-2 softmax) over one score row.
 pub fn softermax_inplace(row: &mut [f32]) {
-    normalize_inplace(row, f32::exp2);
+    normalize_inplace(row, ExpBase::Two);
 }
 
-/// The shared two-pass row reduction: max, then `e(x - m)` accumulating
-/// the sum in the same pass, then divide. Writes probabilities over the
-/// scores — no temporary buffer, and a fixed serial reduction order so
-/// results never depend on how callers partition rows across threads.
-fn normalize_inplace(row: &mut [f32], e: fn(f32) -> f32) {
-    let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+/// The shared two-pass row reduction: max, then `e(x - m)`, then the
+/// sum, then divide — every reduction through the seam's lane helpers
+/// ([`simd::max`] / [`simd::sum`]) so there is exactly one reduction
+/// implementation to audit, and the exponential through the seam's
+/// dispatched [`ExpBase::map`]. Writes probabilities over the scores —
+/// no temporary buffer, and a fixed reduction order (a pure function
+/// of the row length) so results never depend on how callers
+/// partition rows across threads.
+fn normalize_inplace(row: &mut [f32], base: ExpBase) {
+    let m = simd::max(row);
     if m == f32::NEG_INFINITY {
         // fully-masked row: every score is -inf, so `x - m` would be
         // NaN. The masked-attention convention is an all-zero row
@@ -180,22 +194,22 @@ fn normalize_inplace(row: &mut [f32], e: fn(f32) -> f32) {
         row.fill(0.0);
         return;
     }
-    let mut sum = 0.0f32;
     for x in row.iter_mut() {
-        *x = e(*x - m);
-        sum += *x;
+        *x -= m;
     }
+    base.map(row);
+    let sum = simd::sum(row);
     for x in row.iter_mut() {
         *x /= sum;
     }
 }
 
-fn reduce_rows(s: &[f32], row: usize, e: fn(f32) -> f32) -> Vec<f32> {
+fn reduce_rows(s: &[f32], row: usize, base: ExpBase) -> Vec<f32> {
     assert!(row > 0 && s.len() % row == 0, "bad row length {row}");
     // one output allocation; each row normalized in place within it
     let mut out = s.to_vec();
     for chunk in out.chunks_exact_mut(row) {
-        normalize_inplace(chunk, e);
+        normalize_inplace(chunk, base);
     }
     out
 }
@@ -236,40 +250,70 @@ pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     out
 }
 
-/// Unrolled dot product with 8 independent accumulators, so LLVM can
-/// keep 8 FMA lanes in flight. The accumulation order is a pure
-/// function of the input length — every caller (batched forward,
-/// prefill capture, incremental decode, the LM head) sums the same
-/// values in the same order, which is what makes KV-decode logits
-/// bitwise identical to the recompute oracle's.
+/// Dot product through the SIMD microkernel seam ([`simd::dot`]):
+/// 8 independent lanes (AVX2 registers or portable accumulators), a
+/// fixed pairwise horizontal reduce, a serial remainder. The
+/// accumulation order is a pure function of the input length — every
+/// caller (batched forward, prefill capture, incremental decode, the
+/// LM head) sums the same values in the same order at every SIMD
+/// level, which is what makes KV-decode logits bitwise identical to
+/// the recompute oracle's.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0.0f32; 8];
-    let a_whole = a.chunks_exact(8);
-    let b_whole = b.chunks_exact(8);
-    let a_rest = a_whole.remainder();
-    let b_rest = b_whole.remainder();
-    for (ca, cb) in a_whole.zip(b_whole) {
-        for (lane, (&x, &y)) in acc.iter_mut().zip(ca.iter().zip(cb)) {
-            *lane += x * y;
-        }
-    }
-    let mut s = ((acc[0] + acc[1]) + (acc[2] + acc[3]))
-        + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
-    for (&x, &y) in a_rest.iter().zip(b_rest) {
-        s += x * y;
-    }
-    s
+    simd::dot(a, b)
 }
 
-/// Fused ConSmax attention tail over a contiguous `[n, head_dim]` K/V
-/// region: for each cached key `j`, score → `C·exp` → PV-accumulate
-/// into `y` (`head_dim` floats) — no row max, no sum, no materialized
-/// probability row (the paper's reduction-freeness). Both the dense
-/// decode path and the paged path (after its per-block gather/dequant)
-/// run this exact loop, in the exact order, which is what keeps
-/// paged-f32 logits bitwise identical to the dense oracle's.
+/// The one fused ConSmax attention tail, generic over the exponent
+/// base — [`attend_consmax`] (base e) and [`attend_consmax2`] (base 2,
+/// a shifter in hardware) are thin wrappers over this body. Over a
+/// contiguous `[n, head_dim]` K/V region, keys are processed in
+/// [`simd::LANES`]-wide blocks: score each key ([`simd::dot`] ×
+/// `scale` − β), exponentiate the whole block through the seam's
+/// dispatched [`ExpBase::map`] (one vectorizable polynomial stream —
+/// bit-equal to exponentiating per key), then PV-accumulate each key
+/// into `y` in ascending order. No row max, no denominator sum, no
+/// materialized probability row (the paper's reduction-freeness), and
+/// the per-key accumulation order is fixed — so both the dense decode
+/// path and the paged path (after its per-block gather/dequant) stay
+/// bitwise identical to each other and to the streaming forward pass.
+#[allow(clippy::too_many_arguments)]
+pub fn attend_stream(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    head_dim: usize,
+    scale: f32,
+    beta: f32,
+    gamma: f32,
+    base: ExpBase,
+    y: &mut [f32],
+) {
+    debug_assert_eq!(k.len(), v.len());
+    debug_assert_eq!(k.len() % head_dim, 0);
+    let n = k.len() / head_dim;
+    let mut block = [0.0f32; simd::LANES];
+    let mut j0 = 0;
+    while j0 < n {
+        let bn = simd::LANES.min(n - j0);
+        for (jj, b) in block[..bn].iter_mut().enumerate() {
+            let j = j0 + jj;
+            let krow = &k[j * head_dim..(j + 1) * head_dim];
+            *b = simd::dot(q, krow) * scale - beta;
+        }
+        base.map(&mut block[..bn]);
+        for (jj, &pe) in block[..bn].iter().enumerate() {
+            let pj = pe / gamma;
+            let vrow = &v[(j0 + jj) * head_dim..(j0 + jj + 1) * head_dim];
+            for (o, &vv) in y.iter_mut().zip(vrow) {
+                *o += pj * vv;
+            }
+        }
+        j0 += bn;
+    }
+}
+
+/// Fused base-e ConSmax attention tail: `p = exp(s − β)/γ` per key.
+/// See [`attend_stream`] for the streaming contract.
 #[allow(clippy::too_many_arguments)]
 pub fn attend_consmax(
     q: &[f32],
@@ -281,18 +325,7 @@ pub fn attend_consmax(
     gamma: f32,
     y: &mut [f32],
 ) {
-    debug_assert_eq!(k.len(), v.len());
-    debug_assert_eq!(k.len() % head_dim, 0);
-    let n = k.len() / head_dim;
-    for j in 0..n {
-        let krow = &k[j * head_dim..(j + 1) * head_dim];
-        let sc = dot(q, krow) * scale;
-        let pj = (sc - beta).exp() / gamma;
-        let vrow = &v[j * head_dim..(j + 1) * head_dim];
-        for (o, &vv) in y.iter_mut().zip(vrow) {
-            *o += pj * vv;
-        }
-    }
+    attend_stream(q, k, v, head_dim, scale, beta, gamma, ExpBase::E, y);
 }
 
 /// Int8/LUT ConSmax attention tail (DESIGN.md §Quantization seam):
@@ -354,8 +387,8 @@ pub fn attend_pv(probs: &[f32], v: &[f32], head_dim: usize, y: &mut [f32]) {
 
 /// Fused ConSmax-v2 attention tail: the base-2 twin of
 /// [`attend_consmax`] — `p = 2^(s − β)/γ` per key (a shifter instead
-/// of `exp` in hardware), same fused score→p→PV stream in the same
-/// order, so the v2 decode engine inherits the dense/paged bitwise
+/// of `exp` in hardware), sharing the one generic [`attend_stream`]
+/// body, so the v2 decode engine inherits the dense/paged bitwise
 /// contract unchanged.
 #[allow(clippy::too_many_arguments)]
 pub fn attend_consmax2(
@@ -368,18 +401,7 @@ pub fn attend_consmax2(
     gamma: f32,
     y: &mut [f32],
 ) {
-    debug_assert_eq!(k.len(), v.len());
-    debug_assert_eq!(k.len() % head_dim, 0);
-    let n = k.len() / head_dim;
-    for j in 0..n {
-        let krow = &k[j * head_dim..(j + 1) * head_dim];
-        let sc = dot(q, krow) * scale;
-        let pj = (sc - beta).exp2() / gamma;
-        let vrow = &v[j * head_dim..(j + 1) * head_dim];
-        for (o, &vv) in y.iter_mut().zip(vrow) {
-            *o += pj * vv;
-        }
-    }
+    attend_stream(q, k, v, head_dim, scale, beta, gamma, ExpBase::Two, y);
 }
 
 /// Tanh-approximate GELU, matching `jax.nn.gelu` (approximate=True).
@@ -596,30 +618,14 @@ fn matmul_bt_block(a: &[f32], bt: &[f32], k: usize, n: usize, out: &mut [f32]) {
     }
 }
 
-/// [`dot`] against int8 codes: each code is widened to f32 in the
-/// multiply; the per-channel scale is applied once by the caller,
-/// after the reduction. Same 8-lane layout and serial accumulation
-/// order as [`dot`], so int8 matmul results are thread-count
-/// invariant too.
+/// [`dot`] against int8 codes through the seam ([`simd::dot_i8`]):
+/// each code is widened to f32 in the multiply; the per-channel scale
+/// is applied once by the caller, after the reduction. Same 8-lane
+/// layout and accumulation order as [`dot`] at every SIMD level, so
+/// int8 matmul results are thread-count invariant too.
 #[inline]
 pub fn dot_i8(a: &[f32], q: &[i8]) -> f32 {
-    debug_assert_eq!(a.len(), q.len());
-    let mut acc = [0.0f32; 8];
-    let a_whole = a.chunks_exact(8);
-    let q_whole = q.chunks_exact(8);
-    let a_rest = a_whole.remainder();
-    let q_rest = q_whole.remainder();
-    for (ca, cq) in a_whole.zip(q_whole) {
-        for (lane, (&x, &code)) in acc.iter_mut().zip(ca.iter().zip(cq)) {
-            *lane += x * code as f32;
-        }
-    }
-    let mut s = ((acc[0] + acc[1]) + (acc[2] + acc[3]))
-        + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
-    for (&x, &code) in a_rest.iter().zip(q_rest) {
-        s += x * code as f32;
-    }
-    s
+    simd::dot_i8(a, q)
 }
 
 /// [`matmul_bt_into`] against per-channel int8 weights:
@@ -980,11 +986,13 @@ mod tests {
         let (scale, beta, gamma) = (0.5f32, 1.5f32, 100.0f32);
 
         // consmax: fused loop == scores -> C*exp -> PV, bit for bit
+        // (the reference loop uses the same dispatched simd::exp the
+        // fused tail runs on, so the assert stays bitwise at any level)
         let mut srow = vec![0.0f32; n];
         attend_scores(&q, &k, hd, scale, &mut srow);
         let mut want = vec![0.0f32; hd];
         for j in 0..n {
-            let pj = (srow[j] - beta).exp() / gamma;
+            let pj = simd::exp(srow[j] - beta) / gamma;
             for (o, &vv) in want.iter_mut().zip(&v[j * hd..(j + 1) * hd]) {
                 *o += pj * vv;
             }
@@ -1024,7 +1032,7 @@ mod tests {
         attend_scores(&q, &k, hd, scale, &mut srow);
         let mut want = vec![0.0f32; hd];
         for j in 0..n {
-            let pj = (srow[j] - beta).exp2() / gamma;
+            let pj = simd::exp2(srow[j] - beta) / gamma;
             for (o, &vv) in want.iter_mut().zip(&v[j * hd..(j + 1) * hd]) {
                 *o += pj * vv;
             }

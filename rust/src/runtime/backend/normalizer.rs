@@ -41,6 +41,7 @@
 use anyhow::{bail, Result};
 
 use crate::runtime::backend::native;
+use crate::runtime::backend::simd;
 
 // `ln 2`: the score-side Jacobian factor of every base-2 normalizer.
 use std::f32::consts::LN_2;
@@ -175,14 +176,16 @@ impl HeadNorm {
         }
     }
 
-    /// Streaming score → probability for the reduction-free kinds
-    /// (identical expression to the fused `attend_*` kernels, so the
-    /// batched forward and the decode engine stay bitwise-equal).
+    /// Streaming score → probability for the reduction-free kinds —
+    /// the identical expression, through the identical dispatched
+    /// [`simd::exp`] / [`simd::exp2`], as the fused `attend_stream`
+    /// kernel, so the batched forward and the decode engine stay
+    /// bitwise-equal at every SIMD level.
     #[inline]
     pub fn stream_p(&self, sc: f32) -> f32 {
         match self.kind {
-            Normalizer::Consmax => (sc - self.beta).exp() / self.gamma,
-            Normalizer::ConsmaxV2 => (sc - self.beta).exp2() / self.gamma,
+            Normalizer::Consmax => simd::exp(sc - self.beta) / self.gamma,
+            Normalizer::ConsmaxV2 => simd::exp2(sc - self.beta) / self.gamma,
             _ => unreachable!("stream_p on a row-reducing normalizer"),
         }
     }

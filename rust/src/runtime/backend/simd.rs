@@ -1,0 +1,684 @@
+//! The **SIMD microkernel seam** (DESIGN.md §SIMD-kernel seam): one
+//! 8-wide lane layer every hot kernel routes through, plus the
+//! polynomial `exp` that turns the ConSmax tail into a single fused
+//! multiply-exp-accumulate stream.
+//!
+//! Three resolved levels, selected once per process:
+//!
+//! * **avx2** — x86_64 with runtime-detected AVX2: hand-written
+//!   256-bit intrinsic inner loops for [`dot`] / [`dot_i8`]. Separate
+//!   multiply + add (never FMA — fused rounding would change bits),
+//!   the same lane-to-element mapping and the same pairwise horizontal
+//!   reduce as the portable path, so the result is **bit-identical by
+//!   construction** to every other level.
+//! * **portable** — the 8-accumulator unrolled loops that compile on
+//!   every target and autovectorize under `-O`; also the fallback when
+//!   AVX2 is absent.
+//! * **off** — the scalar reference: the same portable loops (they
+//!   *are* the bit-exactness oracle for the reductions) but with every
+//!   exponential dispatched to libm instead of the polynomial.
+//!
+//! Selection order: `--simd auto|off` ([`set_mode`]) beats the
+//! `CONSMAX_SIMD` environment variable (`0`/`off` disables) beats the
+//! default `auto`; `consmax info` reports the resolved level.
+//!
+//! **The oracle/tolerance contract.** The reductions ([`dot`],
+//! [`dot_i8`], [`sum`], [`max`]) are pinned bit-identical across all
+//! levels — accumulation order is a pure function of input length, so
+//! matmuls, int8 matmuls and row normalizer reductions never drift
+//! when the level changes. Only the exponential differs: [`exp`] /
+//! [`exp2`] dispatch to [`exp_approx`] / [`exp2_approx`] (a Cephes
+//! f32 polynomial, ~2e-7 max relative error, saturating to `inf`
+//! above [`EXP_HI`] and flushing to `0.0` — never NaN — below
+//! [`EXP_LO`]) when SIMD is on, and to libm when off. Every consumer
+//! of an exponential in the model (streaming tails, `stream_p`, row
+//! softmax/softermax) goes through this one dispatch, so forward,
+//! KV decode, paged decode and the training tape stay bitwise
+//! self-consistent *within* each mode; across modes the outputs agree
+//! within the tolerance pinned by `rust/tests/simd_kernels.rs`.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+use anyhow::{bail, Result};
+
+/// Lane width of the microkernel layer (f32 elements per block).
+pub const LANES: usize = 8;
+
+// ---------------------------------------------------------------------------
+// mode selection
+// ---------------------------------------------------------------------------
+
+/// CLI/env-facing SIMD mode (`--simd auto|off`, `CONSMAX_SIMD`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// Use the best level the host supports (the default).
+    Auto,
+    /// Scalar reference path: libm exponentials, portable reductions.
+    Off,
+}
+
+impl Mode {
+    pub fn parse(s: &str) -> Result<Mode> {
+        Ok(match s {
+            "auto" => Mode::Auto,
+            "off" => Mode::Off,
+            other => bail!("unknown --simd {other:?} (auto|off)"),
+        })
+    }
+}
+
+/// The resolved microkernel level actually running.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Level {
+    /// Scalar reference: portable reductions + libm exponentials.
+    Off,
+    /// Portable 8-lane loops + polynomial exp (compiles everywhere).
+    Portable,
+    /// Runtime-detected AVX2 intrinsics + polynomial exp.
+    Avx2,
+}
+
+impl Level {
+    /// Short name for `consmax info` / bench JSON.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Level::Off => "off",
+            Level::Portable => "portable",
+            Level::Avx2 => "avx2",
+        }
+    }
+}
+
+const MODE_UNSET: u8 = 0;
+const MODE_AUTO: u8 = 1;
+const MODE_OFF: u8 = 2;
+const LVL_UNRESOLVED: u8 = 0;
+const LVL_OFF: u8 = 1;
+const LVL_PORTABLE: u8 = 2;
+const LVL_AVX2: u8 = 3;
+
+/// Runtime override installed by `--simd` (MODE_UNSET = not given).
+static OVERRIDE: AtomicU8 = AtomicU8::new(MODE_UNSET);
+/// Process-wide default, resolved once from `CONSMAX_SIMD`.
+static DEFAULT: OnceLock<Mode> = OnceLock::new();
+/// Cached resolved level (so the hot-path dispatch is one relaxed load).
+static LEVEL: AtomicU8 = AtomicU8::new(LVL_UNRESOLVED);
+
+fn default_mode() -> Mode {
+    *DEFAULT.get_or_init(|| match std::env::var("CONSMAX_SIMD").as_deref() {
+        Ok("0") | Ok("off") => Mode::Off,
+        _ => Mode::Auto,
+    })
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect() -> Level {
+    if is_x86_feature_detected!("avx2") {
+        Level::Avx2
+    } else {
+        Level::Portable
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn detect() -> Level {
+    Level::Portable
+}
+
+fn resolve() -> Level {
+    let mode = match OVERRIDE.load(Ordering::Relaxed) {
+        MODE_AUTO => Mode::Auto,
+        MODE_OFF => Mode::Off,
+        _ => default_mode(),
+    };
+    match mode {
+        Mode::Off => Level::Off,
+        Mode::Auto => detect(),
+    }
+}
+
+fn level_code(l: Level) -> u8 {
+    match l {
+        Level::Off => LVL_OFF,
+        Level::Portable => LVL_PORTABLE,
+        Level::Avx2 => LVL_AVX2,
+    }
+}
+
+/// Install the CLI mode (beats `CONSMAX_SIMD`). Callable any time;
+/// tests that flip modes serialize themselves (the kernels read the
+/// level per call, so a flip between calls is always coherent).
+pub fn set_mode(m: Mode) {
+    OVERRIDE.store(
+        match m {
+            Mode::Auto => MODE_AUTO,
+            Mode::Off => MODE_OFF,
+        },
+        Ordering::Relaxed,
+    );
+    LEVEL.store(level_code(resolve()), Ordering::Relaxed);
+}
+
+/// The resolved level (cached; one relaxed atomic load on hot paths).
+#[inline]
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        LVL_OFF => Level::Off,
+        LVL_PORTABLE => Level::Portable,
+        LVL_AVX2 => Level::Avx2,
+        _ => {
+            let l = resolve();
+            LEVEL.store(level_code(l), Ordering::Relaxed);
+            l
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// lane reductions: dot / dot_i8 / sum / max
+// ---------------------------------------------------------------------------
+
+/// 8-lane dot product — the one reduction every matmul and attention
+/// score in the stack runs through. Lane `j` of the accumulator only
+/// ever sees elements `8k + j`, and the horizontal reduce is the fixed
+/// pairwise tree `((a0+a1)+(a2+a3)) + ((a4+a5)+(a6+a7))` with a serial
+/// remainder, at **every** level — so the result is a pure function of
+/// the input values and length: bit-identical across thread counts,
+/// SIMD levels, and the KV-decode/recompute split.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if level() == Level::Avx2 {
+        // SAFETY: Level::Avx2 is only resolved after
+        // `is_x86_feature_detected!("avx2")` succeeded on this host.
+        return unsafe { avx2::dot(a, b) };
+    }
+    dot_portable(a, b)
+}
+
+/// Portable 8-accumulator [`dot`] core (also the `off`-level oracle).
+#[inline]
+pub fn dot_portable(a: &[f32], b: &[f32]) -> f32 {
+    let a_whole = a.chunks_exact(LANES);
+    let b_whole = b.chunks_exact(LANES);
+    let a_rest = a_whole.remainder();
+    let b_rest = b_whole.remainder();
+    let mut acc = [0.0f32; LANES];
+    for (ca, cb) in a_whole.zip(b_whole) {
+        for (lane, (&x, &y)) in acc.iter_mut().zip(ca.iter().zip(cb)) {
+            *lane += x * y;
+        }
+    }
+    let mut s = ((acc[0] + acc[1]) + (acc[2] + acc[3]))
+        + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    for (&x, &y) in a_rest.iter().zip(b_rest) {
+        s += x * y;
+    }
+    s
+}
+
+/// [`dot`] against int8 codes, widening each code to f32 in the
+/// multiply. Same lane layout and reduce as [`dot`]: bit-identical to
+/// widening the whole vector and running the f32 dot, at every level.
+#[inline]
+pub fn dot_i8(a: &[f32], q: &[i8]) -> f32 {
+    debug_assert_eq!(a.len(), q.len());
+    #[cfg(target_arch = "x86_64")]
+    if level() == Level::Avx2 {
+        // SAFETY: Level::Avx2 implies runtime-detected AVX2.
+        return unsafe { avx2::dot_i8(a, q) };
+    }
+    dot_i8_portable(a, q)
+}
+
+/// Portable 8-accumulator [`dot_i8`] core.
+#[inline]
+pub fn dot_i8_portable(a: &[f32], q: &[i8]) -> f32 {
+    let a_whole = a.chunks_exact(LANES);
+    let q_whole = q.chunks_exact(LANES);
+    let a_rest = a_whole.remainder();
+    let q_rest = q_whole.remainder();
+    let mut acc = [0.0f32; LANES];
+    for (ca, cq) in a_whole.zip(q_whole) {
+        for (lane, (&x, &code)) in acc.iter_mut().zip(ca.iter().zip(cq)) {
+            *lane += x * code as f32;
+        }
+    }
+    let mut s = ((acc[0] + acc[1]) + (acc[2] + acc[3]))
+        + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    for (&x, &code) in a_rest.iter().zip(q_rest) {
+        s += x * code as f32;
+    }
+    s
+}
+
+/// 8-lane sum with the same fixed pairwise reduce as [`dot`] — the one
+/// denominator reduction of `softmax_inplace` / `reduce_rows`. Level-
+/// independent and thread-count-independent by the same argument.
+#[inline]
+pub fn sum(xs: &[f32]) -> f32 {
+    let whole = xs.chunks_exact(LANES);
+    let rest = whole.remainder();
+    let mut acc = [0.0f32; LANES];
+    for c in whole {
+        for (lane, &x) in acc.iter_mut().zip(c) {
+            *lane += x;
+        }
+    }
+    let mut s = ((acc[0] + acc[1]) + (acc[2] + acc[3]))
+        + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    for &x in rest {
+        s += x;
+    }
+    s
+}
+
+/// 8-lane running max (`f32::max` semantics: NaN inputs are dropped,
+/// exactly like the serial `fold(NEG_INFINITY, f32::max)` it replaces
+/// — max is order-independent, so lane-splitting cannot change the
+/// result). Returns `-inf` for an empty slice.
+#[inline]
+pub fn max(xs: &[f32]) -> f32 {
+    let whole = xs.chunks_exact(LANES);
+    let rest = whole.remainder();
+    let mut acc = [f32::NEG_INFINITY; LANES];
+    for c in whole {
+        for (lane, &x) in acc.iter_mut().zip(c) {
+            *lane = lane.max(x);
+        }
+    }
+    let mut m = (acc[0].max(acc[1])).max(acc[2].max(acc[3]));
+    m = m.max((acc[4].max(acc[5])).max(acc[6].max(acc[7])));
+    for &x in rest {
+        m = m.max(x);
+    }
+    m
+}
+
+// ---------------------------------------------------------------------------
+// polynomial exponentials
+// ---------------------------------------------------------------------------
+
+/// Above this input [`exp_approx`] saturates to `+inf`. Chosen so the
+/// scale exponent `n` never exceeds 127 (`exp(88.37) ≈ 2.4e38` is
+/// still finite f32; true `expf` stays finite up to ~88.72 — the gap
+/// is the documented saturation region).
+pub const EXP_HI: f32 = 88.37;
+/// Below this input [`exp_approx`] flushes to `0.0` (never NaN, no
+/// subnormal outputs): the smallest-normal edge, `ln(2^-126)`.
+pub const EXP_LO: f32 = -87.336_54;
+/// [`exp2_approx`] saturates to `+inf` above this input.
+pub const EXP2_HI: f32 = 127.0;
+/// [`exp2_approx`] flushes to `0.0` below this input.
+pub const EXP2_LO: f32 = -126.0;
+
+// Cody–Waite split of ln(2): C1 + C2 == ln(2) to ~2e-11, with C1
+// exactly representable so `x - n*C1` is exact for |n| <= 127.
+const C1: f32 = 0.693_359_375;
+#[allow(clippy::excessive_precision)]
+const C2: f32 = -2.121_944_4e-4;
+
+// Degree-5 minimax polynomial for exp(r) on |r| <= ln(2)/2 (the
+// classic Cephes `expf` coefficients; ~2e-7 max relative error).
+#[allow(clippy::excessive_precision)]
+const P: [f32; 6] = [
+    1.987_569_15e-4,
+    1.398_199_95e-3,
+    8.333_451_9e-3,
+    4.166_579_6e-2,
+    1.666_666_55e-1,
+    5.000_000_1e-1,
+];
+
+/// `exp(r)` for reduced `|r| <= ~0.347`, times `2^n` via exponent-bit
+/// construction. `n` must be in `[-126, 127]`.
+#[inline]
+fn exp_poly_scale(r: f32, n: i32) -> f32 {
+    let r2 = r * r;
+    let mut p = P[0];
+    p = p * r + P[1];
+    p = p * r + P[2];
+    p = p * r + P[3];
+    p = p * r + P[4];
+    p = p * r + P[5];
+    let y = p * r2 + r + 1.0;
+    let scale = f32::from_bits(((n + 127) as u32) << 23);
+    y * scale
+}
+
+/// Round-half-up floor of `t + 0.5` without a libm call: truncating
+/// saturating cast plus a negative-direction correction — this is what
+/// lets the whole function autovectorize on baseline targets (a
+/// `f32::floor` call would block the vectorizer without SSE4.1).
+#[inline]
+fn round_i32(t: f32) -> i32 {
+    let zf = t + 0.5;
+    let mut n = zf as i32;
+    n -= ((n as f32) > zf) as i32;
+    n
+}
+
+/// Branchless polynomial `exp(x)`: Cody–Waite range reduction, the
+/// degree-5 Cephes polynomial, exponent-bit scaling. ~2e-7 max
+/// relative error over `[EXP_LO, EXP_HI]`; `+inf` above, exact `0.0`
+/// below (never NaN — pinned in `rust/tests/simd_kernels.rs`); NaN
+/// propagates (`f32::clamp` keeps NaN). Every select compiles to a
+/// branch-free `select`, so a loop over a slice vectorizes.
+#[inline]
+pub fn exp_approx(x: f32) -> f32 {
+    let xc = x.clamp(EXP_LO, EXP_HI);
+    let n = round_i32(xc * std::f32::consts::LOG2_E);
+    let nf = n as f32;
+    let r = (xc - nf * C1) - nf * C2;
+    let out = exp_poly_scale(r, n);
+    let out = if x > EXP_HI { f32::INFINITY } else { out };
+    if x < EXP_LO {
+        0.0
+    } else {
+        out
+    }
+}
+
+/// Branchless polynomial `exp2(x)` (the ConSmax-v2 / softermax base):
+/// the integer part scales by exponent bits exactly, the fractional
+/// part `r ∈ [-0.5, 0.5]` goes through the same polynomial as
+/// `exp(r·ln2)`. Same saturation/flush/NaN contract as [`exp_approx`].
+#[inline]
+pub fn exp2_approx(x: f32) -> f32 {
+    let xc = x.clamp(EXP2_LO, EXP2_HI);
+    let n = round_i32(xc);
+    let r = (xc - n as f32) * std::f32::consts::LN_2;
+    let out = exp_poly_scale(r, n);
+    let out = if x > EXP2_HI { f32::INFINITY } else { out };
+    if x < EXP2_LO {
+        0.0
+    } else {
+        out
+    }
+}
+
+/// The one `exp` dispatch every model exponential goes through:
+/// libm when the level is `off`, the polynomial otherwise. Used by
+/// `HeadNorm::stream_p`, the fused attention tails, and the row
+/// normalizers alike, so each mode is bitwise self-consistent across
+/// forward / decode / paged / training paths.
+#[inline]
+pub fn exp(x: f32) -> f32 {
+    if level() == Level::Off {
+        x.exp()
+    } else {
+        exp_approx(x)
+    }
+}
+
+/// Base-2 twin of [`exp`].
+#[inline]
+pub fn exp2(x: f32) -> f32 {
+    if level() == Level::Off {
+        x.exp2()
+    } else {
+        exp2_approx(x)
+    }
+}
+
+/// Exponentiate a slice in place — the block form the fused tails and
+/// row normalizers use. The level is read once, so the inner loop is
+/// pure straight-line polynomial math that the compiler vectorizes.
+/// Element-for-element identical to mapping [`exp`].
+#[inline]
+pub fn exp_map(xs: &mut [f32]) {
+    if level() == Level::Off {
+        for x in xs.iter_mut() {
+            *x = x.exp();
+        }
+    } else {
+        for x in xs.iter_mut() {
+            *x = exp_approx(*x);
+        }
+    }
+}
+
+/// Base-2 twin of [`exp_map`].
+#[inline]
+pub fn exp2_map(xs: &mut [f32]) {
+    if level() == Level::Off {
+        for x in xs.iter_mut() {
+            *x = x.exp2();
+        }
+    } else {
+        for x in xs.iter_mut() {
+            *x = exp2_approx(*x);
+        }
+    }
+}
+
+/// Which exponent base a normalizer kernel runs on — the parameter
+/// that dedupes the base-e/base-2 twin kernels (`attend_consmax` /
+/// `attend_consmax2`, softmax/softermax) into one generic body each.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExpBase {
+    /// Natural base (`softmax`, `consmax`).
+    E,
+    /// Base 2 (`softermax`, `consmax-v2` — a shifter in hardware).
+    Two,
+}
+
+impl ExpBase {
+    /// Scalar dispatched exponential in this base.
+    #[inline]
+    pub fn eval(self, x: f32) -> f32 {
+        match self {
+            ExpBase::E => exp(x),
+            ExpBase::Two => exp2(x),
+        }
+    }
+
+    /// In-place slice exponential in this base ([`exp_map`] /
+    /// [`exp2_map`]); bit-equal to mapping [`ExpBase::eval`].
+    #[inline]
+    pub fn map(self, xs: &mut [f32]) {
+        match self {
+            ExpBase::E => exp_map(xs),
+            ExpBase::Two => exp2_map(xs),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 intrinsic cores (x86_64 only, runtime-gated by `level()`)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::{
+        __m128i, __m256, _mm256_add_ps, _mm256_cvtepi8_epi32,
+        _mm256_cvtepi32_ps, _mm256_loadu_ps, _mm256_mul_ps,
+        _mm256_setzero_ps, _mm256_storeu_ps, _mm_loadl_epi64,
+    };
+
+    /// Pairwise reduce matching the portable order exactly.
+    #[inline]
+    unsafe fn reduce(acc: __m256) -> f32 {
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+            + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]))
+    }
+
+    /// 256-bit [`super::dot`] core: unaligned loads, separate
+    /// multiply+add (no FMA — fused rounding would break the
+    /// bit-identity contract with the portable path).
+    ///
+    /// # Safety
+    /// Caller must have runtime-verified AVX2 support.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n8 = a.len() / 8 * 8;
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < n8 {
+            let va = _mm256_loadu_ps(a.as_ptr().add(i));
+            let vb = _mm256_loadu_ps(b.as_ptr().add(i));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+            i += 8;
+        }
+        let mut s = reduce(acc);
+        for j in n8..a.len() {
+            s += a[j] * b[j];
+        }
+        s
+    }
+
+    /// 256-bit [`super::dot_i8`] core: 8 codes widen i8→i32→f32 per
+    /// step, then the same multiply+add lanes as [`dot`].
+    ///
+    /// # Safety
+    /// Caller must have runtime-verified AVX2 support.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_i8(a: &[f32], q: &[i8]) -> f32 {
+        let n8 = a.len() / 8 * 8;
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < n8 {
+            let va = _mm256_loadu_ps(a.as_ptr().add(i));
+            let vq8 = _mm_loadl_epi64(q.as_ptr().add(i) as *const __m128i);
+            let vq = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(vq8));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vq));
+            i += 8;
+        }
+        let mut s = reduce(acc);
+        for j in n8..a.len() {
+            s += a[j] * q[j] as f32;
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: no test here calls `set_mode` — the lib test binary runs
+    // tests concurrently and other modules assert bitwise contracts
+    // that must not see the level flip mid-test. Mode-flipping tests
+    // live in `rust/tests/simd_kernels.rs` (own process, serialized).
+
+    #[test]
+    fn mode_parses() {
+        assert_eq!(Mode::parse("auto").unwrap(), Mode::Auto);
+        assert_eq!(Mode::parse("off").unwrap(), Mode::Off);
+        assert!(Mode::parse("avx512").is_err());
+    }
+
+    #[test]
+    fn level_is_resolved_and_named() {
+        let l = level();
+        assert!(matches!(l, Level::Off | Level::Portable | Level::Avx2));
+        assert!(["off", "portable", "avx2"].contains(&l.name()));
+    }
+
+    #[test]
+    fn exp_approx_is_accurate_near_zero() {
+        for i in -64..=64 {
+            let x = i as f32 / 8.0;
+            let want = (x as f64).exp();
+            let got = exp_approx(x) as f64;
+            assert!(
+                (got - want).abs() <= 1e-6 * want,
+                "x={x}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn exp_approx_edge_cases() {
+        assert_eq!(exp_approx(0.0), 1.0);
+        assert_eq!(exp_approx(f32::NEG_INFINITY), 0.0);
+        assert_eq!(exp_approx(-1e10), 0.0);
+        assert_eq!(exp_approx(-88.0), 0.0);
+        assert!(exp_approx(f32::INFINITY).is_infinite());
+        assert!(exp_approx(1e10).is_infinite());
+        assert!(exp_approx(f32::NAN).is_nan());
+        // subnormal inputs round to exp(0) = 1
+        assert_eq!(exp_approx(1.0e-40), 1.0);
+        // top of the finite range stays finite
+        assert!(exp_approx(EXP_HI).is_finite());
+    }
+
+    #[test]
+    fn exp2_approx_edge_cases() {
+        assert_eq!(exp2_approx(0.0), 1.0);
+        assert_eq!(exp2_approx(10.0), 1024.0);
+        assert_eq!(exp2_approx(-1.0), 0.5);
+        assert_eq!(exp2_approx(f32::NEG_INFINITY), 0.0);
+        assert_eq!(exp2_approx(-1e10), 0.0);
+        assert!(exp2_approx(f32::INFINITY).is_infinite());
+        assert!(exp2_approx(f32::NAN).is_nan());
+        assert!(exp2_approx(EXP2_HI).is_finite());
+        assert!(exp2_approx(128.0).is_infinite());
+    }
+
+    #[test]
+    fn portable_dot_matches_f64_reference() {
+        for len in [0usize, 1, 7, 8, 9, 31, 64, 100] {
+            let a: Vec<f32> = (0..len).map(|i| (i as f32) * 0.25 - 3.0).collect();
+            let b: Vec<f32> = (0..len).map(|i| 1.5 - (i as f32) * 0.125).collect();
+            let want: f64 =
+                a.iter().zip(&b).map(|(&x, &y)| (x as f64) * (y as f64)).sum();
+            let got = dot_portable(&a, &b) as f64;
+            assert!(
+                (got - want).abs() <= 1e-3 * want.abs().max(1.0),
+                "len {len}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn dispatched_dot_matches_portable_bitwise() {
+        // whatever level the process resolved, the dispatched dot must
+        // agree with the portable oracle bit-for-bit
+        for len in [0usize, 1, 7, 8, 9, 16, 31, 64, 100, 257] {
+            let a: Vec<f32> = (0..len).map(|i| (i as f32) * 0.21 - 5.0).collect();
+            let b: Vec<f32> = (0..len).map(|i| 2.5 - (i as f32) * 0.11).collect();
+            assert_eq!(
+                dot(&a, &b).to_bits(),
+                dot_portable(&a, &b).to_bits(),
+                "len {len} at level {}",
+                level().name()
+            );
+            let q: Vec<i8> = (0..len).map(|i| ((i * 37) % 255) as i8).collect();
+            assert_eq!(
+                dot_i8(&a, &q).to_bits(),
+                dot_i8_portable(&a, &q).to_bits(),
+                "i8 len {len} at level {}",
+                level().name()
+            );
+        }
+    }
+
+    #[test]
+    fn sum_and_max_match_serial_reference() {
+        let xs: Vec<f32> = (0..103).map(|i| ((i * 31) % 17) as f32 - 8.0).collect();
+        let serial_max = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        assert_eq!(max(&xs).to_bits(), serial_max.to_bits());
+        let want: f64 = xs.iter().map(|&x| x as f64).sum();
+        assert!((sum(&xs) as f64 - want).abs() <= 1e-3 * want.abs().max(1.0));
+        assert_eq!(max(&[]), f32::NEG_INFINITY);
+        assert_eq!(sum(&[]), 0.0);
+    }
+
+    #[test]
+    fn exp_maps_match_scalar_dispatch_bitwise() {
+        let xs: Vec<f32> = (0..57).map(|i| (i as f32) * 0.3 - 8.0).collect();
+        let mut m1 = xs.clone();
+        exp_map(&mut m1);
+        let m2: Vec<f32> = xs.iter().map(|&x| exp(x)).collect();
+        assert_eq!(m1, m2);
+        let mut b1 = xs.clone();
+        exp2_map(&mut b1);
+        let b2: Vec<f32> = xs.iter().map(|&x| exp2(x)).collect();
+        assert_eq!(b1, b2);
+    }
+}

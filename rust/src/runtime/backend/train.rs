@@ -23,8 +23,12 @@
 //! orientation via [`native::matmul_at_b_acc`] (`dW = x^T @ dy`),
 //! matching the `ParamStore`/checkpoint layout the optimizer updates.
 //!
-//! Everything is f32 with fixed serial reduction orders; the pass is
-//! pinned by central-finite-difference gradcheck over every normalizer
+//! Everything is f32 with fixed serial reduction orders, and every
+//! dot/exp runs through the same SIMD microkernel seam as inference
+//! ([`native::dot`] and the normalizers' dispatched `simd::exp` —
+//! DESIGN.md §SIMD-kernel seam), so `forward_train` logits match the
+//! eval forward bitwise at any SIMD level. The pass is pinned by
+//! central-finite-difference gradcheck over every normalizer
 //! (`rust/tests/gradcheck.rs`) and the loss-decrease integration suite
 //! (`rust/tests/train_native.rs`).
 

@@ -1,0 +1,290 @@
+//! The SIMD microkernel seam's cross-mode contract (DESIGN.md
+//! §SIMD-kernel seam), pinned from outside the lane module:
+//!
+//! * `exp_approx` / `exp2_approx` vs libm over the LUT-representable
+//!   input grid and a dense sweep of the finite range, plus the edge
+//!   contract (±inf, NaN, subnormals, large-negative → exactly 0.0,
+//!   never NaN);
+//! * the dispatched reductions (`dot`, `dot_i8`) bit-identical between
+//!   `--simd off` and `--simd auto` (bit-identity by construction);
+//! * the fused attention tails and row normalizers within the
+//!   documented exp tolerance between modes, at every thread count
+//!   (property-based);
+//! * model-level `next_logits` within tolerance between modes, and
+//!   bitwise thread-count-invariant *within* each mode.
+//!
+//! Mode and thread flips are process-global, so every test that
+//! touches them serializes through `MODE_LOCK` and restores the
+//! defaults before releasing it. The in-module `simd.rs` unit tests
+//! deliberately never flip modes — this binary owns that.
+
+use std::sync::{Mutex, MutexGuard};
+
+use consmax::config::ModelConfig;
+use consmax::coordinator::ParamStore;
+use consmax::prop_assert;
+use consmax::runtime::backend::simd::{self, Mode};
+use consmax::runtime::backend::{native, NativeModel};
+use consmax::runtime::parallel;
+use consmax::util::proptest::run_property;
+
+/// Serializes every mode/thread flip in this binary (tests run
+/// concurrently in one process). Poison-tolerant: a failing test must
+/// not cascade into every later lock holder.
+static MODE_LOCK: Mutex<()> = Mutex::new(());
+
+fn locked() -> MutexGuard<'static, ()> {
+    MODE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Restore process defaults before the lock is released.
+fn restore() {
+    simd::set_mode(Mode::Auto);
+    parallel::set_threads(0);
+}
+
+/// Relative error of the polynomial vs f64 libm, at a point.
+fn rel_err(got: f32, want: f64) -> f64 {
+    (got as f64 - want).abs() / want.abs().max(f64::MIN_POSITIVE)
+}
+
+// ---------------------------------------------------------------------------
+// exp_approx accuracy + edges (pure functions; no lock needed)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn exp_approx_exhaustive_on_lut_grid() {
+    // every int8 score code at the paper's 1/16 operating point —
+    // the exact input set the quantized datapath can ever produce
+    for code in -128i32..=127 {
+        let x = code as f32 / 16.0;
+        let err = rel_err(simd::exp_approx(x), (x as f64).exp());
+        assert!(err <= 1e-6, "exp({x}): rel err {err:.3e}");
+        let err2 = rel_err(simd::exp2_approx(x), (x as f64).exp2());
+        assert!(err2 <= 1e-6, "exp2({x}): rel err {err2:.3e}");
+    }
+}
+
+#[test]
+fn exp_approx_dense_sweep_of_finite_range() {
+    // ~35k points across the non-saturating input range
+    let mut x = -87.0f32;
+    while x <= 88.0 {
+        let err = rel_err(simd::exp_approx(x), (x as f64).exp());
+        assert!(err <= 3e-6, "exp({x}): rel err {err:.3e}");
+        x += 0.005;
+    }
+    let mut x = -125.0f32;
+    while x <= 126.0 {
+        let err = rel_err(simd::exp2_approx(x), (x as f64).exp2());
+        assert!(err <= 3e-6, "exp2({x}): rel err {err:.3e}");
+        x += 0.007;
+    }
+}
+
+#[test]
+fn exp_approx_edge_contract() {
+    // saturation / flush edges: large-negative must be exactly 0.0 —
+    // never NaN — so masked -inf scores vanish like libm's exp
+    for f in [simd::exp_approx as fn(f32) -> f32, simd::exp2_approx] {
+        assert_eq!(f(f32::NEG_INFINITY).to_bits(), 0.0f32.to_bits());
+        assert_eq!(f(-1e30), 0.0);
+        assert_eq!(f(-200.0), 0.0);
+        assert!(f(f32::INFINITY).is_infinite());
+        assert!(f(1e30).is_infinite());
+        assert!(f(f32::NAN).is_nan());
+        // subnormal and ±0 inputs are exp(~0) = exactly 1
+        assert_eq!(f(0.0), 1.0);
+        assert_eq!(f(-0.0), 1.0);
+        assert_eq!(f(1.0e-40), 1.0);
+        assert_eq!(f(-1.0e-40), 1.0);
+    }
+    // documented saturation points (tighter than libm's overflow edge)
+    assert!(simd::exp_approx(simd::EXP_HI).is_finite());
+    assert!(simd::exp_approx(88.5).is_infinite());
+    assert!(simd::exp2_approx(simd::EXP2_HI).is_finite());
+    assert!(simd::exp2_approx(127.5).is_infinite());
+    // exact powers of two come out exact in base 2
+    assert_eq!(simd::exp2_approx(10.0), 1024.0);
+    assert_eq!(simd::exp2_approx(-3.0), 0.125);
+}
+
+// ---------------------------------------------------------------------------
+// cross-mode contracts (mode/thread flips; all under MODE_LOCK)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn dot_and_dot_i8_bits_equal_across_modes() {
+    let _g = locked();
+    for len in [0usize, 1, 7, 8, 9, 16, 31, 64, 100, 257] {
+        let a: Vec<f32> = (0..len).map(|i| (i as f32) * 0.21 - 5.0).collect();
+        let b: Vec<f32> = (0..len).map(|i| 2.5 - (i as f32) * 0.11).collect();
+        let q: Vec<i8> = (0..len).map(|i| ((i * 37) % 255) as i8).collect();
+        simd::set_mode(Mode::Off);
+        let (d_off, qi_off) = (native::dot(&a, &b), native::dot_i8(&a, &q));
+        simd::set_mode(Mode::Auto);
+        let (d_on, qi_on) = (native::dot(&a, &b), native::dot_i8(&a, &q));
+        assert_eq!(d_off.to_bits(), d_on.to_bits(), "dot len {len}");
+        assert_eq!(qi_off.to_bits(), qi_on.to_bits(), "dot_i8 len {len}");
+    }
+    restore();
+}
+
+#[test]
+fn attention_tails_match_scalar_within_tolerance_at_every_thread_count() {
+    let _g = locked();
+    run_property("simd tail vs scalar tail", 40, |g| {
+        let hd = *g.choose(&[4usize, 8, 16, 32]);
+        let n = g.usize(1, 65);
+        let q: Vec<f32> = (0..hd).map(|_| g.normal_f32() * 0.5).collect();
+        let k: Vec<f32> = (0..n * hd).map(|_| g.normal_f32() * 0.5).collect();
+        let v: Vec<f32> = (0..n * hd).map(|_| g.normal_f32()).collect();
+        let scale = 1.0 / (hd as f32).sqrt();
+        let (beta, gamma) = (g.f32(0.0, 2.0), g.f32(1.0, 100.0));
+        type Tail = fn(
+            &[f32],
+            &[f32],
+            &[f32],
+            usize,
+            f32,
+            f32,
+            f32,
+            &mut [f32],
+        );
+        for tail in [
+            native::attend_consmax as Tail,
+            native::attend_consmax2 as Tail,
+        ] {
+            let mut per_mode: Vec<Vec<f32>> = Vec::new();
+            for mode in [Mode::Off, Mode::Auto] {
+                simd::set_mode(mode);
+                let mut per_threads: Vec<Vec<f32>> = Vec::new();
+                for threads in [1usize, 4] {
+                    parallel::set_threads(threads);
+                    let mut y = vec![0.0f32; hd];
+                    tail(&q, &k, &v, hd, scale, beta, gamma, &mut y);
+                    per_threads.push(y);
+                }
+                // within one mode the tail is bitwise thread-invariant
+                prop_assert!(
+                    per_threads[0] == per_threads[1],
+                    "tail not thread-invariant within a mode (n={n} hd={hd})"
+                );
+                per_mode.push(per_threads.pop().unwrap());
+            }
+            // across modes only the exp differs: documented tolerance
+            for (i, (s, f)) in per_mode[0].iter().zip(&per_mode[1]).enumerate()
+            {
+                let tol = 1e-5 * s.abs().max(f.abs()).max(1.0);
+                prop_assert!(
+                    (s - f).abs() <= tol,
+                    "tail[{i}]: scalar {s} vs simd {f} (n={n} hd={hd} \
+                     beta={beta} gamma={gamma})"
+                );
+            }
+        }
+        Ok(())
+    });
+    restore();
+}
+
+#[test]
+fn row_normalizers_match_scalar_within_tolerance() {
+    let _g = locked();
+    run_property("simd softmax vs scalar softmax", 40, |g| {
+        let row = g.usize(1, 48);
+        let rows = g.usize(1, 4);
+        let mut s: Vec<f32> =
+            (0..rows * row).map(|_| g.normal_f32() * 3.0).collect();
+        // sprinkle -inf masking like the causal mask does
+        if g.bool() && s.len() > 1 {
+            let i = g.usize(0, s.len());
+            s[i] = f32::NEG_INFINITY;
+        }
+        for variant in [
+            native::softmax_rows as fn(&[f32], usize) -> Vec<f32>,
+            native::softermax_rows,
+        ] {
+            simd::set_mode(Mode::Off);
+            let p_off = variant(&s, row);
+            simd::set_mode(Mode::Auto);
+            let p_on = variant(&s, row);
+            for (i, (a, b)) in p_off.iter().zip(&p_on).enumerate() {
+                // probabilities are in [0, 1]: absolute tolerance
+                prop_assert!(
+                    (a - b).abs() <= 2e-6,
+                    "p[{i}]: off {a} vs auto {b} (row={row})"
+                );
+            }
+            // both modes still normalize each live row to 1
+            for chunk in p_on.chunks_exact(row) {
+                let total: f32 = chunk.iter().sum();
+                prop_assert!(
+                    total == 0.0 || (total - 1.0).abs() <= 1e-5,
+                    "row sums to {total}"
+                );
+            }
+        }
+        Ok(())
+    });
+    restore();
+}
+
+#[test]
+fn model_logits_agree_across_modes_and_stay_thread_invariant() {
+    let _g = locked();
+    let seqs: Vec<Vec<i32>> = vec![
+        (0..12).map(|i| (i * 29 + 3) % 256).collect(),
+        (0..7).map(|i| (i * 53 + 11) % 256).collect(),
+    ];
+    for norm in ["consmax", "consmax-v2", "softmax"] {
+        let cfg = ModelConfig::builtin("tiny", norm).unwrap();
+        let store = ParamStore::init(&cfg, 0).unwrap();
+        let model =
+            NativeModel::from_params(&cfg, &store.order, &store.params).unwrap();
+
+        simd::set_mode(Mode::Off);
+        parallel::set_threads(1);
+        let off = model.next_logits(&seqs).unwrap();
+
+        simd::set_mode(Mode::Auto);
+        let auto_1t = model.next_logits(&seqs).unwrap();
+        parallel::set_threads(4);
+        let auto_4t = model.next_logits(&seqs).unwrap();
+
+        // within the SIMD mode: bitwise thread invariance end to end
+        assert_eq!(auto_1t, auto_4t, "{norm}: SIMD logits not thread-invariant");
+        // across modes: the exp approximation's drift through a full
+        // forward stays tiny relative to logit scale
+        assert_eq!(off.len(), auto_1t.len());
+        for (i, (a, b)) in off.iter().zip(&auto_1t).enumerate() {
+            let tol = 1e-4 * a.abs().max(b.abs()).max(1.0);
+            assert!(
+                (a - b).abs() <= tol,
+                "{norm} logit[{i}]: off {a} vs auto {b}"
+            );
+        }
+    }
+    restore();
+}
+
+#[test]
+fn mode_selection_is_reported_and_flips_exp_dispatch() {
+    let _g = locked();
+    simd::set_mode(Mode::Off);
+    assert_eq!(simd::level(), simd::Level::Off);
+    // off mode dispatches to libm exactly
+    for x in [-5.0f32, -0.3, 0.0, 0.7, 10.0] {
+        assert_eq!(simd::exp(x).to_bits(), x.exp().to_bits());
+        assert_eq!(simd::exp2(x).to_bits(), x.exp2().to_bits());
+    }
+    simd::set_mode(Mode::Auto);
+    let l = simd::level();
+    assert!(matches!(l, simd::Level::Portable | simd::Level::Avx2));
+    // auto mode dispatches to the polynomial exactly
+    for x in [-5.0f32, -0.3, 0.0, 0.7, 10.0] {
+        assert_eq!(simd::exp(x).to_bits(), simd::exp_approx(x).to_bits());
+        assert_eq!(simd::exp2(x).to_bits(), simd::exp2_approx(x).to_bits());
+    }
+    restore();
+}
