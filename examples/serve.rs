@@ -15,26 +15,29 @@
 //! * `static` — the vLLM-v0-style reference batcher (pop a batch, drain
 //!   it); greedy outputs are identical, scheduling is not.
 //!
-//! Run: `cargo run --release --example serve -- [requests] [max_new] [ckpt] [decode] [threads] [sched] [kv_mem_mb] [kv_dtype] [max_batch]`
+//! Run: `cargo run --release --example serve -- [requests] [max_new] [ckpt] [decode] [threads] [sched] [kv_mem_mb] [kv_dtype] [max_batch] [prefill_chunk] [spec_k]`
 //! where `decode` is `kv` (default) or `recompute` (the O(T²) oracle;
 //! forces the static scheduler) and `threads` sizes the native worker
 //! pool. `kv_mem_mb`/`kv_dtype` switch the continuous scheduler onto
 //! the paged KV-cache pool (block tables, prefix sharing, byte-budget
 //! admission — DESIGN.md §KV-memory seam); `max_batch` caps the slot
-//! pool. Uses runs/tiny_consmax.ckpt if present, otherwise serves from
-//! random weights (still exercises the full path). `--help` prints this
-//! usage.
+//! pool; `prefill_chunk` turns on chunked prefill and `spec_k` turns on
+//! self-speculative decoding with a tiny self-draft proposing K tokens
+//! per verify step (DESIGN.md §Speculation-and-chunking seam). Uses
+//! runs/tiny_consmax.ckpt if present, otherwise serves from random
+//! weights (still exercises the full path). `--help` prints this usage.
 
 use anyhow::Result;
-use consmax::config::{KvCacheConfig, KvDtype, ModelConfig};
+use consmax::config::{KvCacheConfig, KvDtype, ModelConfig, QuantMode};
 use consmax::coordinator::{
-    DecodeMode, GenRequest, Generator, ParamStore, Server,
+    DecodeMode, GenRequest, Generator, ParamStore, Server, SpecConfig,
 };
+use consmax::runtime::backend::NativeModel;
 use consmax::runtime::parallel;
 use consmax::util::rng::Pcg32;
 
 const USAGE: &str = "\
-usage: serve [requests] [max_new] [ckpt] [decode] [threads] [sched] [kv_mem_mb] [kv_dtype] [max_batch]
+usage: serve [requests] [max_new] [ckpt] [decode] [threads] [sched] [kv_mem_mb] [kv_dtype] [max_batch] [prefill_chunk] [spec_k]
 
   requests   number of Poisson-arrival requests        (default 24)
   max_new    token budget of the *long* requests; the
@@ -51,6 +54,13 @@ usage: serve [requests] [max_new] [ckpt] [decode] [threads] [sched] [kv_mem_mb] 
   kv_dtype   f32 | f16 | bf16 KV storage (paged only)  (default f32)
   max_batch  serving slot cap; paged pools may raise
              it past the dense engine cap              (default: engine max)
+  prefill_chunk
+             chunked prefill: feed at most N prompt
+             tokens per tick; '-' = monolithic         (default '-')
+  spec_k     self-speculative decoding: a tiny
+             self-draft proposes K greedy tokens per
+             batched verify step; '-' = off. Greedy
+             outputs stay bit-identical                (default '-')
 ";
 
 fn main() -> Result<()> {
@@ -153,11 +163,33 @@ fn main() -> Result<()> {
             );
         }
     }
-    if let Some(raw) = args.get(9) {
+    if let Some(raw) = args.get(9).filter(|r| r.as_str() != "-") {
         let mb: usize = raw
             .parse()
             .map_err(|_| anyhow::anyhow!("max_batch must be an integer"))?;
         server.set_max_batch(mb)?;
+    }
+    if let Some(raw) = args.get(10).filter(|r| r.as_str() != "-") {
+        let c: usize = raw
+            .parse()
+            .map_err(|_| anyhow::anyhow!("prefill_chunk must be an integer or '-'"))?;
+        server.set_prefill_chunk(Some(c))?;
+        println!("chunked prefill: at most {c} prompt tokens per tick");
+    }
+    if let Some(raw) = args.get(11).filter(|r| r.as_str() != "-") {
+        let k: usize = raw
+            .parse()
+            .map_err(|_| anyhow::anyhow!("spec_k must be an integer or '-'"))?;
+        // the tiny target drafts for itself: same weights, so greedy
+        // rows accept every proposal — the upper bound of the technique
+        let draft = NativeModel::from_params_quant(
+            &cfg,
+            &store.order,
+            &store.params,
+            QuantMode::Off,
+        )?;
+        server.set_spec(Some((SpecConfig { draft_k: k }, draft)))?;
+        println!("self-speculative decoding: tiny self-draft, draft-k={k}");
     }
     println!();
 
@@ -208,9 +240,17 @@ fn main() -> Result<()> {
         }
         let completed = if continuous { server.step()? } else { server.run_once()? };
         for r in completed {
+            let accept = if r.spec_proposed > 0 {
+                format!(
+                    ", accept {:3.0}%",
+                    100.0 * r.spec_accepted as f64 / r.spec_proposed as f64
+                )
+            } else {
+                String::new()
+            };
             println!(
                 "[lat {:7.1} ms, ttft {:6.1} ms] req {:2} ({} co-resident, \
-                 {} prompt toks, {} new): {:?}",
+                 {} prompt toks, {} new{accept}): {:?}",
                 r.latency_ms, r.ttft_ms, r.id, r.batch_size, r.prompt_tokens,
                 r.new_tokens, r.text
             );
@@ -243,6 +283,22 @@ fn main() -> Result<()> {
         println!(
             "paged KV:   {} blocks x {} tokens, {} free at drain, {} preemption(s)",
             st.kv_total_blocks, st.kv_block_tokens, st.kv_free_blocks, st.preemptions
+        );
+    }
+    if server.prefill_chunk().is_some() || server.spec_config().is_some() {
+        let acc = if st.spec_proposed > 0 {
+            format!(
+                "{:.1}%",
+                100.0 * st.spec_accepted as f64 / st.spec_proposed as f64
+            )
+        } else {
+            "n/a".to_string()
+        };
+        println!(
+            "speculation: {} proposed, {} accepted (acceptance {acc}); \
+             {} prefill-chunk feeds vs {} decode steps",
+            st.spec_proposed, st.spec_accepted,
+            st.prefill_chunk_steps, st.decode_steps
         );
     }
     Ok(())

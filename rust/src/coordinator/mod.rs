@@ -27,7 +27,7 @@ pub use params::ParamStore;
 pub use report::{report_compare, report_run};
 pub use server::{
     Admission, DecodeMode, GenOutput, GenRequest, GenResponse, Generator,
-    ServeEvent, ServeStats, Server,
+    ServeEvent, ServeStats, Server, SpecConfig,
 };
 #[cfg(feature = "pjrt")]
 pub use sweep::{best_point, sweep_init, SweepOptions, SweepPoint};

@@ -67,7 +67,7 @@ use crate::config::{KvCacheConfig, ModelConfig, QuantMode};
 use crate::coordinator::params::ParamStore;
 use crate::data::ByteTokenizer;
 use crate::metrics::LatencyRecorder;
-use crate::runtime::backend::{DecodeSession, NativeModel};
+use crate::runtime::backend::{DecodeSession, ExtendLogits, ExtendReq, NativeModel};
 use crate::runtime::parallel;
 #[cfg(feature = "pjrt")]
 use crate::runtime::{Engine, HostTensor};
@@ -174,6 +174,12 @@ pub struct GenResponse {
     /// Requests co-resident when this one completed (static batching:
     /// the batch size it was served in).
     pub batch_size: usize,
+    /// Draft tokens proposed for this request by self-speculative
+    /// decoding (0 when `--spec` is off or the request never specced).
+    pub spec_proposed: u64,
+    /// Draft proposals the target model accepted; `spec_accepted /
+    /// spec_proposed` is the request's acceptance rate.
+    pub spec_accepted: u64,
 }
 
 /// One batch's generation output, in token space.
@@ -666,6 +672,54 @@ struct Pending {
     submitted: Instant,
 }
 
+/// Self-speculative decoding configuration (`--spec draft-k=K`): a
+/// small builtin draft model proposes `draft_k` greedy tokens per
+/// resident row each tick; one batched target extension verifies them
+/// all, and the longest matched prefix (plus the target's own bonus
+/// token) is accepted. Greedy acceptance keeps outputs bit-identical
+/// to the non-speculative oracle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpecConfig {
+    /// Draft tokens proposed (and verified) per row per round.
+    pub draft_k: usize,
+}
+
+/// The draft side of self-speculative decoding: the draft model plus
+/// its config (the draft `DecodeSession` lives in [`ContState`] so its
+/// lifecycle is tied to the slot pool's).
+struct DraftState {
+    model: Box<NativeModel>,
+    cfg: ModelConfig,
+}
+
+/// Per-row scheduling phase in the continuous pool. Rows only dwell in
+/// `Prefill` under chunked prefill (`--prefill-chunk N`); monolithic
+/// prefill lands a row directly in `Decode` on its join tick.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    /// Prompt ingestion in progress: `fed` prompt tokens are cached.
+    Prefill { fed: usize },
+    /// Prompt fully cached; the row emits one token per decode step
+    /// (or several per speculative round).
+    Decode,
+}
+
+/// What one tick plans to do with one occupied row (computed once per
+/// tick, after joiner prefill, and used both by the paged preemption
+/// pass to price the tick's worst-case block demand and by the
+/// execution stages below it).
+#[derive(Debug, Clone, Copy)]
+enum RowPlan {
+    /// Feed the next `len` prompt tokens; `completes` when this chunk
+    /// is the prompt's last (the row samples its first token and joins
+    /// this same tick's decode step).
+    Chunk { len: usize, completes: bool },
+    /// Run a speculative round proposing and verifying `k` draft tokens.
+    Spec { k: usize },
+    /// Plain single-token decode step.
+    Decode,
+}
+
 /// One occupied row of the continuous-batching slot pool.
 struct Slot {
     req: GenRequest,
@@ -685,6 +739,18 @@ struct Slot {
     rng: Pcg32,
     /// Monotone admission counter: preemption evicts the youngest.
     join_seq: u64,
+    /// Scheduling phase: `Prefill { fed }` while prompt chunks are
+    /// still landing (chunked prefill only), then `Decode`.
+    phase: Phase,
+    /// Draft-cache bookkeeping for self-speculative decoding: the
+    /// draft session's row holds a trailing window of the first
+    /// `draft_cached` committed tokens (prompt ++ generated). 0 = the
+    /// draft row is cold and must be (re)prefilled before proposing.
+    draft_cached: usize,
+    /// Draft tokens proposed for this request (observability).
+    spec_proposed: u64,
+    /// Draft proposals the target accepted (observability).
+    spec_accepted: u64,
 }
 
 impl Slot {
@@ -706,10 +772,118 @@ impl Slot {
 }
 
 /// Persistent continuous-batching state: one `DecodeSession` whose rows
-/// are serving slots. `slots[i] == None` ⇔ row `i` is free.
+/// are serving slots. `slots[i] == None` ⇔ row `i` is free. Under
+/// `--spec` a second (always dense) session holds the draft model's KV
+/// rows, slot-for-slot with the target's.
 struct ContState {
     sess: DecodeSession,
     slots: Vec<Option<Slot>>,
+    draft_sess: Option<DecodeSession>,
+}
+
+impl ContState {
+    /// Free row `i`: take its slot and reset both the target row and
+    /// (when speculating) the draft row. Every release path — harvest,
+    /// cancel, deadline sweep, preemption — must come through here so
+    /// draft KV state can never outlive its request.
+    fn release(&mut self, i: usize) -> Option<Slot> {
+        let s = self.slots[i].take();
+        if s.is_some() {
+            self.sess.reset_row(i);
+            if let Some(d) = self.draft_sess.as_mut() {
+                d.reset_row(i);
+            }
+        }
+        s
+    }
+}
+
+/// Emit a [`ServeEvent::Token`] for position `pos` of request `id`,
+/// deduped by the per-request high-water mark (replays after
+/// preemption / panic recovery re-feed earlier positions). Free
+/// function so call sites can hold disjoint borrows into the server.
+fn emit_token_event(
+    events: &mut Option<Vec<ServeEvent>>,
+    watermark: &mut HashMap<u64, usize>,
+    id: u64,
+    pos: usize,
+    tok: i32,
+) {
+    if events.is_none() {
+        return;
+    }
+    let wm = watermark.entry(id).or_insert(0);
+    if pos > *wm {
+        *wm = pos;
+        if let Some(buf) = events.as_mut() {
+            buf.push(ServeEvent::Token { id, token: tok });
+        }
+    }
+}
+
+/// Token `j` of a slot's committed sequence (prompt ++ generated).
+fn committed_token(s: &Slot, j: usize) -> i32 {
+    if j < s.prompt.len() {
+        s.prompt[j]
+    } else {
+        s.generated[j - s.prompt.len()]
+    }
+}
+
+/// Compute this tick's per-row plan (see [`RowPlan`]). `joins` are the
+/// rows admitted *this* tick: their first prompt chunk (or monolithic
+/// prefill) already ran, so they neither chunk again nor speculate
+/// until the next tick.
+fn plan_rows(
+    cont: &ContState,
+    joins: &[usize],
+    chunk: Option<usize>,
+    spec: Option<SpecConfig>,
+    ctx: usize,
+) -> Vec<Option<RowPlan>> {
+    cont.slots
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            let s = s.as_ref()?;
+            if s.done {
+                return None;
+            }
+            match s.phase {
+                Phase::Prefill { .. } if joins.contains(&i) => None,
+                Phase::Prefill { fed } => {
+                    let plen = s.prompt.len();
+                    let c = chunk
+                        .expect("Prefill phase only exists under chunking")
+                        .min(plen - fed);
+                    Some(RowPlan::Chunk { len: c, completes: fed + c == plen })
+                }
+                Phase::Decode => {
+                    if let Some(sp) = spec {
+                        // greedy rows only (acceptance compares argmaxes),
+                        // never on the join tick, and only when at least
+                        // one proposal fits both the remaining budget
+                        // (k + 1 emitted tokens max) and the target ctx
+                        // (k + 1 more cached positions; rows at the
+                        // eviction boundary fall back to plain decode)
+                        if s.req.temperature == 0.0 && !joins.contains(&i) {
+                            let len = cont.sess.len_of(i);
+                            let budget_room = s
+                                .req
+                                .max_new_tokens
+                                .saturating_sub(s.generated.len() + 1);
+                            let ctx_room = ctx.saturating_sub(len + 1);
+                            let k = sp.draft_k.min(budget_room).min(ctx_room);
+                            if k >= 1 {
+                                return Some(RowPlan::Spec { k });
+                            }
+                        }
+                    }
+                    Some(RowPlan::Decode)
+                }
+            }
+        })
+        .collect()
 }
 
 /// What a scheduler hands to `Server::finish` when a request completes.
@@ -723,6 +897,8 @@ struct Done {
     submitted: Instant,
     first_token_at: Option<Instant>,
     batch_size: usize,
+    spec_proposed: u64,
+    spec_accepted: u64,
 }
 
 /// Admission verdict from [`Server::try_submit`] (bounded ingress).
@@ -809,7 +985,25 @@ pub struct Server<'e> {
     /// Whole-request preemptions under paged memory pressure (each one
     /// re-queued at the front and replayed deterministically).
     pub preemptions: u64,
+    /// Draft tokens proposed across all requests (`--spec`).
+    pub spec_proposed: u64,
+    /// Draft proposals the target model accepted across all requests.
+    pub spec_accepted: u64,
+    /// Prompt-chunk feeds executed by the chunked-prefill path (one per
+    /// row per chunk, first chunks included; 0 when `--prefill-chunk`
+    /// is off).
+    pub prefill_chunk_steps: u64,
+    /// Batched `decode_step_active` invocations (ticks that advanced at
+    /// least one row by plain decode).
+    pub decode_steps: u64,
     cont: Option<ContState>,
+    /// Chunked-prefill size (`--prefill-chunk N`); `None` = monolithic
+    /// prompt ingestion (the legacy path, byte-identical behavior).
+    prefill_chunk: Option<usize>,
+    /// Self-speculative decoding config; `None` = off.
+    spec: Option<SpecConfig>,
+    /// The draft model (present iff `spec` is).
+    draft: Option<DraftState>,
     /// Paged-KV configuration for the continuous slot pool (None =
     /// dense per-row caches, the original layout).
     kv: Option<KvCacheConfig>,
@@ -851,6 +1045,16 @@ pub struct ServeStats {
     /// Blocks referenced by more than one row (prefix sharing at work).
     pub kv_shared_blocks: usize,
     pub kv_block_tokens: usize,
+    /// Draft tokens proposed by self-speculative decoding (`--spec`).
+    pub spec_proposed: u64,
+    /// Draft proposals the target accepted; `spec_accepted /
+    /// spec_proposed` is the aggregate acceptance rate.
+    pub spec_accepted: u64,
+    /// Prompt-chunk feeds executed by chunked prefill
+    /// (`--prefill-chunk`; 0 when off).
+    pub prefill_chunk_steps: u64,
+    /// Batched decode steps executed (ticks advancing ≥1 row).
+    pub decode_steps: u64,
 }
 
 impl<'e> Server<'e> {
@@ -871,7 +1075,14 @@ impl<'e> Server<'e> {
             cancelled: 0,
             panics_recovered: 0,
             preemptions: 0,
+            spec_proposed: 0,
+            spec_accepted: 0,
+            prefill_chunk_steps: 0,
+            decode_steps: 0,
             cont: None,
+            prefill_chunk: None,
+            spec: None,
+            draft: None,
             kv: None,
             queue_cap: None,
             ttft_limit_ms: None,
@@ -962,8 +1173,7 @@ impl<'e> Server<'e> {
         if let Some(cont) = self.cont.as_mut() {
             for i in 0..cont.slots.len() {
                 if matches!(&cont.slots[i], Some(s) if s.req.id == id) {
-                    cont.slots[i] = None;
-                    cont.sess.reset_row(i);
+                    cont.release(i);
                     hit = true;
                     break;
                 }
@@ -1018,8 +1228,7 @@ impl<'e> Server<'e> {
                     Some(s) if !s.done && deadline_passed(&s.req, s.submitted, now)
                 );
                 if lapsed {
-                    let s = cont.slots[i].take().unwrap();
-                    cont.sess.reset_row(i);
+                    let s = cont.release(i).unwrap();
                     expired.push(s.req.id);
                 }
             }
@@ -1137,6 +1346,82 @@ impl<'e> Server<'e> {
         self.kv.as_ref()
     }
 
+    /// Enable chunked prefill (`--prefill-chunk N`): prompt ingestion
+    /// feeds at most `chunk` tokens per tick per row, interleaved with
+    /// resident rows' decode steps, so a long arrival amortizes across
+    /// ticks instead of stalling everyone's TPOT. `None` = monolithic
+    /// prefill (the legacy path). Rejected while requests are in
+    /// flight. Cache state after the last chunk is bit-identical to a
+    /// monolithic prefill (dense always; paged under the f32 KV dtype
+    /// — lossy dtypes quantize at chunk boundaries, the same caveat as
+    /// the existing warm-prefix prefill).
+    pub fn set_prefill_chunk(&mut self, chunk: Option<usize>) -> Result<()> {
+        ensure!(
+            self.in_flight() == 0,
+            "set_prefill_chunk while {} requests are in flight",
+            self.in_flight()
+        );
+        if let Some(c) = chunk {
+            ensure!(c >= 1, "--prefill-chunk must be >= 1");
+        }
+        self.prefill_chunk = chunk;
+        Ok(())
+    }
+
+    /// The active chunked-prefill size, if any.
+    pub fn prefill_chunk(&self) -> Option<usize> {
+        self.prefill_chunk
+    }
+
+    /// Enable self-speculative decoding (`--spec draft-k=K`) with the
+    /// given draft model, or disable with `None`. The draft must share
+    /// the target's vocabulary and have room for `draft_k` proposals
+    /// plus one conditioning token in its context. Rejected while
+    /// requests are in flight; the pool is rebuilt on the next step so
+    /// the draft session comes up beside it.
+    pub fn set_spec(
+        &mut self,
+        spec: Option<(SpecConfig, NativeModel)>,
+    ) -> Result<()> {
+        ensure!(
+            self.in_flight() == 0,
+            "set_spec while {} requests are in flight",
+            self.in_flight()
+        );
+        match spec {
+            Some((sc, model)) => {
+                ensure!(sc.draft_k >= 1, "--spec draft-k must be >= 1");
+                let dcfg = model.cfg.clone();
+                ensure!(
+                    dcfg.vocab == self.generator.cfg.vocab,
+                    "draft vocab {} != target vocab {}",
+                    dcfg.vocab,
+                    self.generator.cfg.vocab
+                );
+                ensure!(
+                    sc.draft_k + 1 <= dcfg.ctx,
+                    "--spec draft-k={} does not fit the draft ctx {} \
+                     (need draft-k + 1 <= ctx)",
+                    sc.draft_k,
+                    dcfg.ctx
+                );
+                self.spec = Some(sc);
+                self.draft = Some(DraftState { model: Box::new(model), cfg: dcfg });
+            }
+            None => {
+                self.spec = None;
+                self.draft = None;
+            }
+        }
+        self.cont = None;
+        Ok(())
+    }
+
+    /// The active self-speculative decoding config, if any.
+    pub fn spec_config(&self) -> Option<SpecConfig> {
+        self.spec
+    }
+
     /// Serving gauges: queue/pool occupancy and paged-KV block usage.
     pub fn stats(&self) -> ServeStats {
         let mut st = ServeStats {
@@ -1150,6 +1435,10 @@ impl<'e> Server<'e> {
             cancelled: self.cancelled,
             panics_recovered: self.panics_recovered,
             preemptions: self.preemptions,
+            spec_proposed: self.spec_proposed,
+            spec_accepted: self.spec_accepted,
+            prefill_chunk_steps: self.prefill_chunk_steps,
+            decode_steps: self.decode_steps,
             ..ServeStats::default()
         };
         if let Some(kv) = self.cont.as_ref().and_then(|c| c.sess.kv_stats()) {
@@ -1173,6 +1462,8 @@ impl<'e> Server<'e> {
             submitted,
             first_token_at,
             batch_size,
+            spec_proposed,
+            spec_accepted,
         } = done;
         let now = Instant::now();
         let latency_ms = now.duration_since(submitted).as_secs_f64() * 1e3;
@@ -1202,6 +1493,8 @@ impl<'e> Server<'e> {
             latency_ms,
             ttft_ms,
             batch_size,
+            spec_proposed,
+            spec_accepted,
         };
         self.token_watermark.remove(&id);
         if self.events.is_some() {
@@ -1231,9 +1524,17 @@ impl<'e> Server<'e> {
                 }
                 None => DecodeSession::new(&self.generator.cfg, self.max_batch),
             };
+            // the draft session is always dense: the draft model is
+            // tiny, its rows are short trailing windows, and rollback
+            // past the accepted prefix must stay cheap
+            let draft_sess = self
+                .draft
+                .as_ref()
+                .map(|d| DecodeSession::new(&d.cfg, self.max_batch));
             self.cont = Some(ContState {
                 sess,
                 slots: (0..self.max_batch).map(|_| None).collect(),
+                draft_sess,
             });
         }
         let vocab = self.generator.cfg.vocab;
@@ -1277,6 +1578,8 @@ impl<'e> Server<'e> {
                     submitted: p.submitted,
                     first_token_at: None,
                     batch_size: 1,
+                    spec_proposed: 0,
+                    spec_accepted: 0,
                 });
                 out.push(resp);
                 continue;
@@ -1326,21 +1629,31 @@ impl<'e> Server<'e> {
                 done: false,
                 rng,
                 join_seq,
+                phase: Phase::Prefill { fed: 0 },
+                draft_cached: 0,
+                spec_proposed: 0,
+                spec_accepted: 0,
             });
             joins.push(slot_idx);
         }
 
-        // -- prefill the joiners (parallel across joining rows) and
-        //    sample their first token from the prefill logits ------------
+        // -- prefill the joiners (parallel across joining rows) and,
+        //    when their whole prompt landed, sample their first token
+        //    from the prefill logits. Under chunked prefill only the
+        //    first `--prefill-chunk` prompt tokens land here (through
+        //    the same prefill_rows call, so paged prefix sharing still
+        //    covers the first-chunk window); the rest feed one chunk
+        //    per tick below, and the first token — hence TTFT — waits
+        //    for the last chunk. ------------------------------------------
         if !joins.is_empty() {
+            let chunk = self.prefill_chunk;
             let cont = self.cont.as_mut().unwrap();
             let mut pairs: Vec<(usize, &[i32])> =
                 Vec::with_capacity(joins.len());
             for &i in &joins {
-                pairs.push((
-                    i,
-                    cont.slots[i].as_ref().unwrap().prompt.as_slice(),
-                ));
+                let prompt = cont.slots[i].as_ref().unwrap().prompt.as_slice();
+                let w = chunk.map_or(prompt.len(), |c| c.min(prompt.len()));
+                pairs.push((i, &prompt[..w]));
             }
             // a worker panic inside the batched prefill is contained:
             // residents (joiners included) requeue and replay
@@ -1363,22 +1676,31 @@ impl<'e> Server<'e> {
             let now = Instant::now();
             for (j, &slot_idx) in joins.iter().enumerate() {
                 let slot = cont.slots[slot_idx].as_mut().unwrap();
+                let plen = slot.prompt.len();
+                let w = chunk.map_or(plen, |c| c.min(plen));
+                if w < plen {
+                    slot.phase = Phase::Prefill { fed: w };
+                    continue; // prompt incomplete: no token yet
+                }
+                slot.phase = Phase::Decode;
                 let row = &logits[j * vocab..(j + 1) * vocab];
                 let tok = pick_token(row, slot.req.temperature, &mut slot.rng);
                 let before = slot.generated.len();
                 slot.feed(tok, now);
-                if self.events.is_some() && slot.generated.len() > before {
+                if slot.generated.len() > before {
                     // exactly-once per position: replayed prefixes
                     // (preemption / panic recovery) are suppressed
-                    let pos = slot.generated.len();
-                    let wm = self.token_watermark.entry(slot.req.id).or_insert(0);
-                    if pos > *wm {
-                        *wm = pos;
-                        if let Some(buf) = self.events.as_mut() {
-                            buf.push(ServeEvent::Token { id: slot.req.id, token: tok });
-                        }
-                    }
+                    emit_token_event(
+                        &mut self.events,
+                        &mut self.token_watermark,
+                        slot.req.id,
+                        slot.generated.len(),
+                        tok,
+                    );
                 }
+            }
+            if chunk.is_some() {
+                self.prefill_chunk_steps += joins.len() as u64;
             }
         }
 
@@ -1392,12 +1714,37 @@ impl<'e> Server<'e> {
         if self.cont.as_ref().unwrap().sess.is_paged() {
             loop {
                 let cont = self.cont.as_ref().unwrap();
-                let active: Vec<bool> = cont
-                    .slots
+                // price the whole tick, not just the decode step: a
+                // prompt-chunk continuation needs its chunk (plus the
+                // first decode token when the chunk completes the
+                // prompt), and a speculative round extends the target
+                // by k proposals + 1 conditioning token before rolling
+                // back — the extensions below must never alloc-fail
+                let plans = plan_rows(
+                    cont,
+                    &joins,
+                    self.prefill_chunk,
+                    self.spec,
+                    self.generator.cfg.ctx,
+                );
+                let active: Vec<bool> = plans
                     .iter()
-                    .map(|s| matches!(s, Some(s) if !s.done))
+                    .map(|p| matches!(p, Some(RowPlan::Decode)))
                     .collect();
-                let demand = cont.sess.paged_step_demand(&active);
+                let mut demand = cont.sess.paged_step_demand(&active);
+                for (i, p) in plans.iter().enumerate() {
+                    match p {
+                        Some(RowPlan::Chunk { len, completes }) => {
+                            demand += cont
+                                .sess
+                                .paged_extend_demand(i, len + usize::from(*completes));
+                        }
+                        Some(RowPlan::Spec { k }) => {
+                            demand += cont.sess.paged_extend_demand(i, k + 1);
+                        }
+                        _ => {}
+                    }
+                }
                 if cont.sess.kv_free_blocks().unwrap_or(0) >= demand {
                     break;
                 }
@@ -1431,15 +1778,116 @@ impl<'e> Server<'e> {
                     );
                 };
                 let cont = self.cont.as_mut().unwrap();
-                let slot = cont.slots[victim].take().unwrap();
-                cont.sess.reset_row(victim);
+                let slot = cont.release(victim).unwrap();
+                joins.retain(|&i| i != victim);
                 self.preemptions += 1;
                 self.queue
                     .push_front(Pending { req: slot.req, submitted: slot.submitted });
             }
         }
 
-        // -- one decode step across whatever mix of in-flight rows exists
+        // -- this tick's per-row plan, recomputed once more now that
+        //    the preemption pass has settled (nothing below releases a
+        //    row, so the plan is stable through execution) ---------------
+        let plans = {
+            let cont = self.cont.as_ref().unwrap();
+            plan_rows(
+                cont,
+                &joins,
+                self.prefill_chunk,
+                self.spec,
+                self.generator.cfg.ctx,
+            )
+        };
+
+        // -- chunked-prefill continuation: one chunk per row per tick,
+        //    batched across rows through the multi-position extension.
+        //    A completing chunk samples the row's first token (this is
+        //    where TTFT starts under chunking) and the row joins this
+        //    same tick's decode step below. --------------------------------
+        let chunk_rows: Vec<(usize, usize, bool)> = plans
+            .iter()
+            .enumerate()
+            .filter_map(|(i, p)| match p {
+                Some(RowPlan::Chunk { len, completes }) => {
+                    Some((i, *len, *completes))
+                }
+                _ => None,
+            })
+            .collect();
+        if !chunk_rows.is_empty() {
+            let ContState { sess, slots, .. } = self.cont.as_mut().unwrap();
+            let reqs: Vec<ExtendReq<'_>> = chunk_rows
+                .iter()
+                .map(|&(i, len, completes)| {
+                    let s = slots[i].as_ref().unwrap();
+                    let Phase::Prefill { fed } = s.phase else {
+                        unreachable!("Chunk plan on a non-prefill row")
+                    };
+                    ExtendReq {
+                        slot: i,
+                        tokens: &s.prompt[fed..fed + len],
+                        logits: if completes {
+                            ExtendLogits::Last
+                        } else {
+                            ExtendLogits::None
+                        },
+                    }
+                })
+                .collect();
+            let extended = match &self.generator.exec {
+                GenExec::Native { model, .. } => parallel::catch_panics(|| {
+                    model.extend_rows(sess, &reqs)
+                }),
+                #[cfg(feature = "pjrt")]
+                GenExec::Pjrt { .. } => {
+                    unreachable!("guarded by supports_continuous")
+                }
+            };
+            let logit_rows = match extended {
+                Ok(r) => r?,
+                Err(panic) => {
+                    self.recover_from_panic(panic);
+                    return Ok(out);
+                }
+            };
+            let now = Instant::now();
+            for (&(i, len, completes), lrow) in
+                chunk_rows.iter().zip(logit_rows.iter())
+            {
+                let slot = slots[i].as_mut().unwrap();
+                let Phase::Prefill { fed } = slot.phase else {
+                    unreachable!()
+                };
+                if completes {
+                    slot.phase = Phase::Decode;
+                    let tok =
+                        pick_token(lrow, slot.req.temperature, &mut slot.rng);
+                    let before = slot.generated.len();
+                    slot.feed(tok, now);
+                    if slot.generated.len() > before {
+                        emit_token_event(
+                            &mut self.events,
+                            &mut self.token_watermark,
+                            slot.req.id,
+                            slot.generated.len(),
+                            tok,
+                        );
+                    }
+                } else {
+                    slot.phase = Phase::Prefill { fed: fed + len };
+                }
+            }
+            self.prefill_chunk_steps += chunk_rows.len() as u64;
+        }
+
+        // -- one decode step across whatever mix of in-flight rows
+        //    exists (rows running a speculative round this tick sit it
+        //    out; rows whose last prompt chunk just landed join in) ------
+        let spec_planned: Vec<bool> = plans
+            .iter()
+            .map(|p| matches!(p, Some(RowPlan::Spec { .. })))
+            .collect();
         {
             let cont = self.cont.as_mut().unwrap();
             let b = cont.slots.len();
@@ -1447,13 +1895,14 @@ impl<'e> Server<'e> {
             let mut last = vec![0i32; b];
             for (i, s) in cont.slots.iter().enumerate() {
                 if let Some(s) = s {
-                    if !s.done {
+                    if !s.done && s.phase == Phase::Decode && !spec_planned[i] {
                         active[i] = true;
                         last[i] = s.last;
                     }
                 }
             }
             if active.iter().any(|&a| a) {
+                self.decode_steps += 1;
                 // worker panics are contained here too: the torn step's
                 // residents requeue and replay deterministically
                 let stepped = match &self.generator.exec {
@@ -1483,21 +1932,246 @@ impl<'e> Server<'e> {
                         pick_token(row, slot.req.temperature, &mut slot.rng);
                     let before = slot.generated.len();
                     slot.feed(tok, now);
-                    if self.events.is_some() && slot.generated.len() > before {
-                        let pos = slot.generated.len();
-                        let wm =
-                            self.token_watermark.entry(slot.req.id).or_insert(0);
-                        if pos > *wm {
-                            *wm = pos;
-                            if let Some(buf) = self.events.as_mut() {
-                                buf.push(ServeEvent::Token {
-                                    id: slot.req.id,
-                                    token: tok,
-                                });
-                            }
-                        }
+                    if slot.generated.len() > before {
+                        emit_token_event(
+                            &mut self.events,
+                            &mut self.token_watermark,
+                            slot.req.id,
+                            slot.generated.len(),
+                            tok,
+                        );
                     }
                 }
+            }
+        }
+
+        // -- speculative rounds: the draft model proposes k greedy
+        //    tokens per planned row (k batched draft steps), one batched
+        //    target extension scores every proposal at once, and the
+        //    longest matched prefix plus the target's own bonus token is
+        //    accepted. Both KV rows then roll back past the accepted
+        //    prefix. Greedy acceptance makes the emitted stream
+        //    bit-identical to plain one-token-per-step decode. -----------
+        let spec_rows: Vec<(usize, usize)> = plans
+            .iter()
+            .enumerate()
+            .filter_map(|(i, p)| match p {
+                Some(RowPlan::Spec { k }) => Some((i, *k)),
+                _ => None,
+            })
+            .collect();
+        if !spec_rows.is_empty() {
+            let draft =
+                self.draft.as_ref().expect("Spec plan without a draft model");
+            let dctx = draft.cfg.ctx;
+            let dvocab = draft.cfg.vocab;
+            let ContState { sess, slots, draft_sess } =
+                self.cont.as_mut().unwrap();
+            let dsess = draft_sess
+                .as_mut()
+                .expect("Spec plan without a draft session");
+            let b = slots.len();
+
+            // sync each draft row so it caches (a trailing window of)
+            // the committed tokens minus the pending last one: cold rows
+            // and rows whose k proposals would overrun the draft ctx
+            // re-prefill a window; rows that fell behind (plain decode
+            // steps ran in between, or a fully-accepted round left its
+            // final proposal unfed) extend with the missing tokens
+            let mut reprefill: Vec<(usize, Vec<i32>, usize)> = Vec::new();
+            let mut gap_feed: Vec<(usize, Vec<i32>)> = Vec::new();
+            for &(i, k) in &spec_rows {
+                let s = slots[i].as_ref().unwrap();
+                let committed = s.prompt.len() + s.generated.len();
+                let need = committed - 1;
+                let have = s.draft_cached;
+                let dlen = dsess.len_of(i);
+                let gap = need.saturating_sub(have);
+                if have == 0 || have > need || dlen + gap + k > dctx {
+                    let w = need.min(dctx - k);
+                    let window: Vec<i32> =
+                        (need - w..need).map(|j| committed_token(s, j)).collect();
+                    reprefill.push((i, window, need));
+                } else if gap > 0 {
+                    let fill: Vec<i32> =
+                        (have..need).map(|j| committed_token(s, j)).collect();
+                    gap_feed.push((i, fill));
+                }
+            }
+            if !reprefill.is_empty() {
+                let pairs: Vec<(usize, &[i32])> = reprefill
+                    .iter()
+                    .map(|(i, w, _)| (*i, w.as_slice()))
+                    .collect();
+                match parallel::catch_panics(|| {
+                    draft.model.prefill_rows(dsess, &pairs)
+                }) {
+                    Ok(r) => {
+                        r?;
+                    }
+                    Err(panic) => {
+                        self.recover_from_panic(panic);
+                        return Ok(out);
+                    }
+                }
+                for (i, _, need) in &reprefill {
+                    slots[*i].as_mut().unwrap().draft_cached = *need;
+                }
+            }
+            if !gap_feed.is_empty() {
+                let reqs: Vec<ExtendReq<'_>> = gap_feed
+                    .iter()
+                    .map(|(i, toks)| ExtendReq {
+                        slot: *i,
+                        tokens: toks,
+                        logits: ExtendLogits::None,
+                    })
+                    .collect();
+                match parallel::catch_panics(|| {
+                    draft.model.extend_rows(dsess, &reqs)
+                }) {
+                    Ok(r) => {
+                        r?;
+                    }
+                    Err(panic) => {
+                        self.recover_from_panic(panic);
+                        return Ok(out);
+                    }
+                }
+                for (i, toks) in &gap_feed {
+                    slots[*i].as_mut().unwrap().draft_cached += toks.len();
+                }
+            }
+
+            // k batched greedy draft steps propose the continuation
+            let kmax = spec_rows.iter().map(|&(_, k)| k).max().unwrap();
+            let mut proposals: Vec<Vec<i32>> = vec![Vec::new(); b];
+            let mut feed = vec![0i32; b];
+            let mut dlen0 = vec![0usize; b];
+            for &(i, _) in &spec_rows {
+                feed[i] = slots[i].as_ref().unwrap().last;
+                dlen0[i] = dsess.len_of(i);
+            }
+            for t in 0..kmax {
+                let mut active = vec![false; b];
+                for &(i, k) in &spec_rows {
+                    if t < k {
+                        active[i] = true;
+                    }
+                }
+                let stepped = parallel::catch_panics(|| {
+                    draft.model.decode_step_active(dsess, &feed, &active)
+                });
+                let logits = match stepped {
+                    Ok(r) => r?,
+                    Err(panic) => {
+                        self.recover_from_panic(panic);
+                        return Ok(out);
+                    }
+                };
+                for &(i, k) in &spec_rows {
+                    if t >= k {
+                        continue;
+                    }
+                    let row = &logits[i * dvocab..(i + 1) * dvocab];
+                    let p = argmax(row) as i32;
+                    proposals[i].push(p);
+                    feed[i] = p;
+                }
+            }
+
+            // one batched target extension scores every proposal: row m
+            // of a request's returned logits is the target's next-token
+            // distribution after [last, p1..pm]
+            let verify_toks: Vec<(usize, Vec<i32>)> = spec_rows
+                .iter()
+                .map(|&(i, _)| {
+                    let mut t = Vec::with_capacity(proposals[i].len() + 1);
+                    t.push(slots[i].as_ref().unwrap().last);
+                    t.extend_from_slice(&proposals[i]);
+                    (i, t)
+                })
+                .collect();
+            let len0: Vec<usize> =
+                spec_rows.iter().map(|&(i, _)| sess.len_of(i)).collect();
+            let reqs: Vec<ExtendReq<'_>> = verify_toks
+                .iter()
+                .map(|(i, t)| ExtendReq {
+                    slot: *i,
+                    tokens: t,
+                    logits: ExtendLogits::All,
+                })
+                .collect();
+            let verified = match &self.generator.exec {
+                GenExec::Native { model, .. } => parallel::catch_panics(|| {
+                    model.extend_rows(sess, &reqs)
+                }),
+                #[cfg(feature = "pjrt")]
+                GenExec::Pjrt { .. } => {
+                    unreachable!("guarded by supports_continuous")
+                }
+            };
+            let all_logits = match verified {
+                Ok(r) => r?,
+                Err(panic) => {
+                    self.recover_from_panic(panic);
+                    return Ok(out);
+                }
+            };
+            let now = Instant::now();
+            for (idx, (i, toks)) in verify_toks.iter().enumerate() {
+                let lrows = &all_logits[idx];
+                let k = toks.len() - 1;
+                let slot = slots[*i].as_mut().unwrap();
+                let committed = slot.prompt.len() + slot.generated.len();
+                // acceptance walk: a proposal matching the target's
+                // argmax commits and moves the walk forward; the first
+                // mismatch (or running out of proposals) makes that
+                // argmax the bonus token — always ≥1 emitted token, so
+                // a round never regresses below plain decode
+                let mut m = 0usize;
+                let mut emitted = Vec::with_capacity(k + 1);
+                loop {
+                    let t = argmax(&lrows[m * vocab..(m + 1) * vocab]) as i32;
+                    emitted.push(t);
+                    if m < k && toks[m + 1] == t {
+                        m += 1;
+                    } else {
+                        break;
+                    }
+                }
+                slot.spec_proposed += k as u64;
+                slot.spec_accepted += m as u64;
+                self.spec_proposed += k as u64;
+                self.spec_accepted += m as u64;
+                for &t in &emitted {
+                    if slot.done {
+                        break; // a stop token ended the request mid-walk
+                    }
+                    let before = slot.generated.len();
+                    slot.feed(t, now);
+                    if slot.generated.len() > before {
+                        emit_token_event(
+                            &mut self.events,
+                            &mut self.token_watermark,
+                            slot.req.id,
+                            slot.generated.len(),
+                            t,
+                        );
+                    }
+                }
+                // roll both KV rows back past the accepted prefix: the
+                // verify extension fed 1 + k tokens of which 1 + m are
+                // committed; the draft fed [last, p1..p_{k-1}] of which
+                // 1 + min(m, k - 1) are
+                sess.rollback_row(*i, len0[idx] + 1 + m);
+                let dl = dsess.len_of(*i);
+                dsess.rollback_row(*i, (dlen0[*i] + 1 + m).min(dl));
+                slot.draft_cached = if m < k {
+                    committed + m
+                } else {
+                    committed + k - 1
+                };
             }
         }
 
@@ -1508,8 +2182,7 @@ impl<'e> Server<'e> {
             let cont = self.cont.as_mut().unwrap();
             for i in 0..cont.slots.len() {
                 if matches!(&cont.slots[i], Some(s) if s.done) {
-                    finished.push(cont.slots[i].take().unwrap());
-                    cont.sess.reset_row(i);
+                    finished.push(cont.release(i).unwrap());
                 }
             }
         }
@@ -1522,6 +2195,8 @@ impl<'e> Server<'e> {
                 submitted: slot.submitted,
                 first_token_at: slot.first_token_at,
                 batch_size: occupancy,
+                spec_proposed: slot.spec_proposed,
+                spec_accepted: slot.spec_accepted,
             });
             out.push(resp);
         }
@@ -1583,6 +2258,8 @@ impl<'e> Server<'e> {
                     submitted: p.submitted,
                     first_token_at: None,
                     batch_size: 1,
+                    spec_proposed: 0,
+                    spec_accepted: 0,
                 });
                 out.push(resp);
                 continue;
@@ -1640,6 +2317,8 @@ impl<'e> Server<'e> {
                 // static batching streams nothing early: TTFT = latency
                 first_token_at: None,
                 batch_size: b,
+                spec_proposed: 0,
+                spec_accepted: 0,
             });
             out.push(resp);
         }

@@ -30,7 +30,7 @@ use consmax::config::{KvCacheConfig, KvDtype, ModelConfig, QuantMode};
 use consmax::coordinator::{best_point, sweep_init, SweepOptions, Trainer};
 use consmax::coordinator::{
     DecodeMode, EngineAdapter, GenRequest, Generator, NativeTrainer,
-    ParamStore, Server, TrainOptions,
+    ParamStore, Server, SpecConfig, TrainOptions,
 };
 use consmax::data::{BatchSampler, ByteTokenizer, Corpus};
 use consmax::hw::{savings, table1, EdaFlow};
@@ -92,6 +92,22 @@ fn specs() -> Vec<Spec> {
             "kv-block",
             "serve-demo: paged KV block size in tokens (default 16; \
              implies paging)",
+        ),
+        Spec::opt_default(
+            "prefill-chunk",
+            "off",
+            "serve: chunked prefill — feed at most N prompt tokens per \
+             scheduler tick instead of the whole prompt at admission, \
+             interleaving long-prompt ingestion with resident decode \
+             steps (off|N; continuous scheduler only)",
+        ),
+        Spec::opt_default(
+            "spec",
+            "off",
+            "serve: self-speculative decoding (off|draft-k=K) — the \
+             builtin tiny config drafts K greedy tokens per row and one \
+             batched target step verifies them; greedy outputs stay \
+             bit-identical to plain decode (continuous scheduler only)",
         ),
         Spec::opt_default(
             "listen",
@@ -721,6 +737,107 @@ fn kv_config_from_args(args: &Args) -> Result<Option<KvCacheConfig>> {
     Ok(Some(kv))
 }
 
+/// Parse `--prefill-chunk off|N`. `None` keeps monolithic prefill.
+fn prefill_chunk_from_args(args: &Args) -> Result<Option<usize>> {
+    match args.get("prefill-chunk") {
+        None | Some("off") => Ok(None),
+        Some(s) => {
+            let n: usize = s.parse().map_err(|_| {
+                anyhow::anyhow!("--prefill-chunk expects off or a token count, got {s:?}")
+            })?;
+            if n == 0 {
+                bail!("--prefill-chunk must be >= 1 (or off)");
+            }
+            Ok(Some(n))
+        }
+    }
+}
+
+/// Parse `--spec off|draft-k=K`. `None` keeps plain decode.
+fn spec_from_args(args: &Args) -> Result<Option<usize>> {
+    match args.get("spec") {
+        None | Some("off") => Ok(None),
+        Some(s) => {
+            let Some(k) = s.strip_prefix("draft-k=") else {
+                bail!("--spec expects off or draft-k=K, got {s:?}");
+            };
+            let k: usize = k.parse().map_err(|_| {
+                anyhow::anyhow!("--spec draft-k expects an integer, got {k:?}")
+            })?;
+            if k == 0 {
+                bail!("--spec draft-k must be >= 1");
+            }
+            Ok(Some(k))
+        }
+    }
+}
+
+/// Apply `--prefill-chunk` / `--spec` to a native continuous server.
+///
+/// The draft is always the builtin `tiny` config under the same
+/// normalizer and runs unquantized: a `tiny` target reuses its own
+/// weights (a self-draft, so every proposal verifies), any other target
+/// drafts from seed-initialized tiny weights. Either way the target's
+/// batched verification step keeps greedy outputs bit-identical to
+/// plain decode.
+fn configure_serving_features(
+    server: &mut Server<'_>,
+    args: &Args,
+    cfg: &ModelConfig,
+    store: &ParamStore,
+) -> Result<()> {
+    server.set_prefill_chunk(prefill_chunk_from_args(args)?)?;
+    if let Some(draft_k) = spec_from_args(args)? {
+        let normalizer = args.get_string("normalizer", "consmax");
+        let draft_cfg = ModelConfig::builtin("tiny", &normalizer)?;
+        let draft = if cfg.key == draft_cfg.key {
+            NativeModel::from_params_quant(
+                &draft_cfg,
+                &store.order,
+                &store.params,
+                QuantMode::Off,
+            )?
+        } else {
+            let dstore = ParamStore::init(&draft_cfg, args.get_u64("seed", 0)?)?;
+            NativeModel::from_params_quant(
+                &draft_cfg,
+                &dstore.order,
+                &dstore.params,
+                QuantMode::Off,
+            )?
+        };
+        server.set_spec(Some((SpecConfig { draft_k }, draft)))?;
+    }
+    Ok(())
+}
+
+/// One human-readable summary of the speculation/chunking telemetry,
+/// shared by the serve-demo and serve-net drain reports.
+fn print_serving_feature_stats(server: &Server<'_>) {
+    let chunk = server.prefill_chunk();
+    let spec = server.spec_config();
+    if chunk.is_none() && spec.is_none() {
+        return;
+    }
+    let st = server.stats();
+    let chunk_s = chunk.map_or("off".to_string(), |c| c.to_string());
+    let spec_s = spec.map_or("off".to_string(), |s| format!("draft-k={}", s.draft_k));
+    let acc = if st.spec_proposed > 0 {
+        format!(
+            "{:.1}%",
+            100.0 * st.spec_accepted as f64 / st.spec_proposed as f64
+        )
+    } else {
+        "n/a".to_string()
+    };
+    println!(
+        "serving features: prefill-chunk {chunk_s}, spec {spec_s} | \
+         {} prefill-chunk feeds vs {} decode steps | draft proposed {} \
+         accepted {} (acceptance {acc})",
+        st.prefill_chunk_steps, st.decode_steps, st.spec_proposed, st.spec_accepted,
+    );
+}
+
 fn serve_demo_over(mut server: Server<'_>, args: &Args) -> Result<()> {
     let n = args.get_usize("requests", 16)?;
     let max_new = args.get_usize("max-new", 32)?;
@@ -759,6 +876,14 @@ fn serve_demo_over(mut server: Server<'_>, args: &Args) -> Result<()> {
     }
     if let Some(mb) = args.get_opt_usize("max-batch")? {
         server.set_max_batch(mb)?;
+    }
+    if !continuous
+        && (server.prefill_chunk().is_some() || server.spec_config().is_some())
+    {
+        log::warn!(
+            "--prefill-chunk/--spec drive the continuous scheduler; \
+             this static run decodes without them"
+        );
     }
     let mut rng = Pcg32::seeded(args.get_u64("seed", 0)?);
     let prompts = [
@@ -816,6 +941,28 @@ fn serve_demo_over(mut server: Server<'_>, args: &Args) -> Result<()> {
             st.preemptions,
         );
     }
+    print_serving_feature_stats(&server);
+    if server.spec_config().is_some() {
+        // per-request acceptance spread: a mixed workload can hide a
+        // badly drafting request inside a healthy aggregate rate
+        let mut rates: Vec<f64> = responses
+            .iter()
+            .filter(|r| r.spec_proposed > 0)
+            .map(|r| r.spec_accepted as f64 / r.spec_proposed as f64)
+            .collect();
+        rates.sort_by(|a, b| a.total_cmp(b));
+        if let (Some(lo), Some(hi)) = (rates.first(), rates.last()) {
+            println!(
+                "per-request acceptance: min {:.1}% median {:.1}% max {:.1}% \
+                 ({} of {} requests drafted)",
+                100.0 * lo,
+                100.0 * rates[rates.len() / 2],
+                100.0 * hi,
+                rates.len(),
+                responses.len(),
+            );
+        }
+    }
     Ok(())
 }
 
@@ -827,7 +974,9 @@ fn run_serve_demo(args: &Args) -> Result<()> {
     let mode = DecodeMode::parse(&args.get_string("decode", "kv"))?;
     let quant = QuantMode::parse(&args.get_string("quant", "off"))?;
     let gen = Generator::native_quant(&cfg, &store, 1, mode, quant)?;
-    serve_demo_over(Server::new(gen), args)
+    let mut server = Server::new(gen);
+    configure_serving_features(&mut server, args, &cfg, &store)?;
+    serve_demo_over(server, args)
 }
 
 #[cfg(not(feature = "pjrt"))]
@@ -846,6 +995,12 @@ fn run_serve_demo_pjrt(args: &Args) -> Result<()> {
         None => ParamStore::init(&cfg, args.get_u64("seed", 0)?)?,
     };
     let gen = Generator::new(&engine, &store, 1)?;
+    if prefill_chunk_from_args(args)?.is_some() || spec_from_args(args)?.is_some() {
+        bail!(
+            "--prefill-chunk/--spec need the native continuous scheduler \
+             (run with --backend native)"
+        );
+    }
     serve_demo_over(Server::new(gen), args)
 }
 
@@ -872,6 +1027,7 @@ fn run_serve_net(args: &Args) -> Result<()> {
     if let Some(mb) = args.get_opt_usize("max-batch")? {
         server.set_max_batch(mb)?;
     }
+    configure_serving_features(&mut server, args, &cfg, &store)?;
     let queue_cap = args.get_usize("queue-cap", 64)?;
     let deadline_ms = args.get_u64("deadline-ms", 0)?;
     let mut engine = EngineAdapter::new(
@@ -924,6 +1080,7 @@ fn run_serve_net(args: &Args) -> Result<()> {
             st.kv_free_blocks, st.kv_total_blocks
         );
     }
+    print_serving_feature_stats(&server);
     Ok(())
 }
 
@@ -961,6 +1118,13 @@ fn run_info(args: &Args) -> Result<()> {
             );
         }
     }
+    println!(
+        "serving features: --prefill-chunk {}, --spec {}",
+        prefill_chunk_from_args(args)?
+            .map_or("off".to_string(), |c| c.to_string()),
+        spec_from_args(args)?
+            .map_or("off".to_string(), |k| format!("draft-k={k}")),
+    );
     if !cfg!(feature = "pjrt") {
         println!("\npjrt engine not compiled (build with --features pjrt)");
     } else if std::path::Path::new(&artifacts).join("manifest.json").exists() {

@@ -383,6 +383,70 @@ impl DecodeSession {
         need
     }
 
+    /// Worst-case fresh blocks appending `extra` tokens to row `r`
+    /// needs (the multi-token twin of [`DecodeSession::paged_step_demand`]):
+    /// one per block boundary the append crosses, plus a CoW
+    /// privatization if the current tail block is shared. Used by the
+    /// scheduler to budget chunked-prefill advances and speculative
+    /// verify extensions before running them, so the extension itself
+    /// stays infallible on memory. Always 0 for dense sessions.
+    pub fn paged_extend_demand(&self, r: usize, extra: usize) -> usize {
+        let KvBacking::Paged { pool, tables } = &self.store else {
+            return 0;
+        };
+        let len = self.len[r];
+        let have = tables[r].len();
+        let target = (len + extra).min(self.ctx).max(1);
+        let mut need = pool.blocks_for(target).saturating_sub(have);
+        // a mid-block first write into a still-shared tail block costs
+        // one CoW copy (defensive: partial tails are private today, but
+        // the resolve stays budgeted — see paged_step_demand)
+        if extra > 0 && len < have * pool.block_tokens() {
+            let bt = pool.block_tokens();
+            if pool.is_shared(tables[r][len / bt]) {
+                need += 1;
+            }
+        }
+        need
+    }
+
+    /// Roll row `r` back to `new_len` cached positions, discarding the
+    /// most recent `len - new_len` tokens from the cache and history
+    /// ring — the KV rollback contract of speculative decoding: a
+    /// verify extension appends K+1 draft positions, then the scheduler
+    /// rolls back past the accepted prefix. Paged rows release the
+    /// blocks past the new boundary (extension blocks are never
+    /// registered for prefix sharing, so no registry entries go stale).
+    ///
+    /// Only valid while the row has not window-re-encoded since the
+    /// tokens being discarded were appended (`history.len() == len`,
+    /// which holds whenever `len < ctx` throughout the append) — the
+    /// scheduler guarantees this by never speculating within K+1 tokens
+    /// of the context edge.
+    pub fn rollback_row(&mut self, r: usize, new_len: usize) {
+        let cur = self.len[r];
+        assert!(
+            new_len >= 1 && new_len <= cur,
+            "rollback_row: new_len {new_len} outside 1..={cur}"
+        );
+        assert_eq!(
+            self.history[r].len(),
+            cur,
+            "rollback_row after a window re-encode is not representable"
+        );
+        for _ in new_len..cur {
+            self.history[r].pop_back();
+        }
+        self.len[r] = new_len;
+        if let KvBacking::Paged { pool, tables } = &mut self.store {
+            let keep = pool.blocks_for(new_len);
+            while tables[r].len() > keep {
+                let blk = tables[r].pop().expect("table shrinks past keep");
+                pool.release(blk);
+            }
+        }
+    }
+
     /// Clear one row back to the empty state (length zero, empty
     /// history) without touching any other row — the slot-lifecycle
     /// seam of the continuous-batching scheduler: a finished request
@@ -593,6 +657,75 @@ mod tests {
             s.kv_free_blocks().unwrap(),
             s.kv_stats().unwrap().total_blocks
         );
+    }
+
+    #[test]
+    fn rollback_row_truncates_len_and_history() {
+        let cfg = ModelConfig::builtin("tiny", "consmax").unwrap();
+        let mut s = DecodeSession::new(&cfg, 2);
+        {
+            let mut rows = s.rows_mut();
+            rows[0].reset(&[1, 2, 3, 4, 5]);
+            *rows[0].len = 5;
+            rows[1].reset(&[9]);
+            *rows[1].len = 1;
+        }
+        s.rollback_row(0, 2);
+        assert_eq!(s.len_of(0), 2);
+        assert_eq!(s.history[0].iter().copied().collect::<Vec<_>>(), vec![1, 2]);
+        // neighbor untouched
+        assert_eq!(s.len_of(1), 1);
+        // no-op rollback
+        s.rollback_row(0, 2);
+        assert_eq!(s.len_of(0), 2);
+    }
+
+    #[test]
+    fn paged_rollback_releases_trailing_blocks() {
+        let cfg = ModelConfig::builtin("tiny", "consmax").unwrap();
+        let kv = KvCacheConfig { block_tokens: 4, ..KvCacheConfig::default() };
+        let mut s = DecodeSession::new_paged(&cfg, 1, &kv).unwrap();
+        {
+            let parts = s.paged_parts().unwrap();
+            for _ in 0..3 {
+                let blk = parts.pool.alloc().unwrap();
+                parts.tables[0].push(blk);
+            }
+            parts.len[0] = 10; // 3 blocks of 4 tokens, tail partial
+            parts.history[0].extend(0..10);
+        }
+        assert_eq!(s.kv_stats().unwrap().used_blocks, 3);
+        // roll back within the middle block: trailing block released
+        s.rollback_row(0, 6);
+        assert_eq!(s.len_of(0), 6);
+        assert_eq!(s.kv_stats().unwrap().used_blocks, 2);
+        assert_eq!(s.history[0].len(), 6);
+        // roll back to a block boundary keeps exactly those blocks
+        s.rollback_row(0, 4);
+        assert_eq!(s.kv_stats().unwrap().used_blocks, 1);
+    }
+
+    #[test]
+    fn paged_extend_demand_counts_boundary_allocs() {
+        let cfg = ModelConfig::builtin("tiny", "consmax").unwrap();
+        let kv = KvCacheConfig { block_tokens: 4, ..KvCacheConfig::default() };
+        let mut s = DecodeSession::new_paged(&cfg, 1, &kv).unwrap();
+        // empty row: first chunk of 9 tokens needs 3 blocks
+        assert_eq!(s.paged_extend_demand(0, 9), 3);
+        {
+            let parts = s.paged_parts().unwrap();
+            let blk = parts.pool.alloc().unwrap();
+            parts.tables[0].push(blk);
+            parts.len[0] = 3;
+            parts.history[0].extend(0..3);
+        }
+        // 1 token fits the tail block; 2 cross one boundary; 6 cross two
+        assert_eq!(s.paged_extend_demand(0, 1), 0);
+        assert_eq!(s.paged_extend_demand(0, 2), 1);
+        assert_eq!(s.paged_extend_demand(0, 6), 2);
+        // dense sessions never demand blocks
+        let dense = DecodeSession::new(&cfg, 1);
+        assert_eq!(dense.paged_extend_demand(0, 64), 0);
     }
 
     #[test]

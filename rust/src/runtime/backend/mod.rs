@@ -46,7 +46,7 @@ use crate::runtime::HostTensor;
 
 pub use decode::DecodeSession;
 pub use kvcache::{validate_budget as validate_kv_budget, KvGeometry, KvPool, KvStats};
-pub use model::NativeModel;
+pub use model::{ExtendLogits, ExtendReq, NativeModel};
 pub use native::NativeBackend;
 pub use normalizer::{HeadNorm, Normalizer};
 pub use train::TrainTape;

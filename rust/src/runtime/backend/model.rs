@@ -106,6 +106,28 @@ pub struct NativeModel {
     consmax_tables: Vec<[F16; 256]>,
 }
 
+/// Which logit rows an [`ExtendReq`] wants back from [`NativeModel::extend_rows`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExtendLogits {
+    /// Cache writes only — no final LN, no LM head (mid-prompt chunks).
+    None,
+    /// Logits for the last appended position only (the final prompt
+    /// chunk: these are the next-token logits the sampler needs).
+    Last,
+    /// Logits for **every** appended position (speculative verify: the
+    /// target scores all K+1 proposal positions in one pass).
+    All,
+}
+
+/// One row's batched cache-extension request: append `tokens` after the
+/// row's current length, exactly as if fed one at a time through
+/// `decode_step_active`, and return the logit rows `logits` asks for.
+pub struct ExtendReq<'a> {
+    pub slot: usize,
+    pub tokens: &'a [i32],
+    pub logits: ExtendLogits,
+}
+
 impl NativeModel {
     /// Build from a parameter list in canonical order (e.g. a
     /// `ParamStore`'s `order`/`params` pair), with the f32 kernels.
@@ -379,6 +401,67 @@ impl NativeModel {
                 self.cfg.vocab,
                 out,
             );
+        }
+    }
+
+    /// The shared attention-tail dispatch over a contiguous (l, hh) K/V
+    /// region spanning cached positions `0..=pos` — the **single site**
+    /// every incremental path routes through (dense decode, paged
+    /// decode-after-gather, and the chunked/speculative extensions), so
+    /// all of them run the same kernels over the same values in the
+    /// same order and stay bitwise interchangeable. `srow` is a
+    /// `>= pos + 1` scratch row the reducing normalizers collect scores
+    /// into; the streaming ConSmax family never touches it.
+    #[allow(clippy::too_many_arguments)]
+    fn attend_cached(
+        &self,
+        l: usize,
+        hh: usize,
+        q: &[f32],
+        kreg: &[f32],
+        vreg: &[f32],
+        pos: usize,
+        srow: &mut [f32],
+        yh: &mut [f32],
+    ) {
+        let hd = self.cfg.head_dim();
+        let scale = 1.0 / (hd as f32).sqrt();
+        let hn = self.head_norm(l, hh);
+        match self.norm {
+            // The ConSmax family has no row max/sum (the paper's
+            // point): score → p → PV streams per cached key, exactly
+            // the fused loop of the batched forward. Int8 consmax reads
+            // its probabilities from the (l, hh) LUT response table —
+            // the hardware unit's bits — instead.
+            Normalizer::Consmax if self.quant.is_int8() => {
+                native::attend_consmax_lut(
+                    q,
+                    kreg,
+                    vreg,
+                    hd,
+                    scale,
+                    &self.score_quant,
+                    self.consmax_table(l, hh),
+                    yh,
+                );
+            }
+            Normalizer::Consmax => {
+                native::attend_consmax(
+                    q, kreg, vreg, hd, scale, hn.beta, hn.gamma, yh,
+                );
+            }
+            Normalizer::ConsmaxV2 => {
+                native::attend_consmax2(
+                    q, kreg, vreg, hd, scale, hn.beta, hn.gamma, yh,
+                );
+            }
+            // the row-reducing normalizers collect the whole score row
+            // first, into the caller's scratch buffer
+            _ => {
+                native::attend_scores(q, kreg, hd, scale, &mut srow[..=pos]);
+                hn.normalize_row(&mut srow[..=pos]);
+                native::attend_pv(&srow[..=pos], vreg, hd, yh);
+            }
         }
     }
 
@@ -882,6 +965,439 @@ impl NativeModel {
         Ok(out)
     }
 
+    /// Append a **batch of tokens** to each requested row's cache in one
+    /// pass — the shared primitive behind chunked prefill (extend a
+    /// partially fed prompt) and speculative verify (score K draft
+    /// positions with one target step).
+    ///
+    /// Per row, all `m` new positions run through each layer together:
+    /// one multi-row LN, one `m`-row QKV/proj/MLP matmul (amortizing the
+    /// memory-bound weight streaming that dominates single-token
+    /// decode), then a per-position causal attention tail over exactly
+    /// the span a token-by-token feed would see. [`native::matmul_bt_into`]
+    /// computes each output row as an independent serial reduction, so
+    /// every row's activations — and therefore the cache writes and any
+    /// returned logits — are **bitwise identical** to feeding the same
+    /// tokens one at a time through `decode_step_active`. (On paged
+    /// rows the staged-roundtrip contract extends this to every KV
+    /// dtype: staged bits == stored bits.)
+    ///
+    /// Requirements per request: the row is prefilled (`len >= 1`),
+    /// `tokens` is non-empty, and `len + tokens.len() <= ctx` — batched
+    /// extension never evicts; the scheduler falls back to one-token
+    /// steps at the context horizon.
+    pub fn extend_rows(
+        &self,
+        sess: &mut DecodeSession,
+        reqs: &[ExtendReq<'_>],
+    ) -> Result<Vec<Vec<f32>>> {
+        self.check_session(sess)?;
+        let v = self.cfg.vocab;
+        let ctx = self.cfg.ctx;
+        let mut seen = vec![false; sess.batch()];
+        for req in reqs {
+            ensure!(
+                req.slot < sess.batch(),
+                "extend_rows: slot {} out of range for a session of {}",
+                req.slot,
+                sess.batch()
+            );
+            ensure!(!seen[req.slot], "extend_rows: duplicate slot {}", req.slot);
+            seen[req.slot] = true;
+            ensure!(
+                !req.tokens.is_empty(),
+                "extend_rows: slot {} got no tokens",
+                req.slot
+            );
+            let len = sess.len_of(req.slot);
+            ensure!(len >= 1, "extend_rows on row {} before prefill", req.slot);
+            ensure!(
+                len + req.tokens.len() <= ctx,
+                "extend_rows would overflow ctx on row {}: \
+                 {} cached + {} new > {}",
+                req.slot,
+                len,
+                req.tokens.len(),
+                ctx
+            );
+            for &tok in req.tokens {
+                ensure!(
+                    (0..v as i32).contains(&tok),
+                    "token id {tok} outside vocab {v}"
+                );
+            }
+        }
+        let mut out: Vec<Vec<f32>> = reqs
+            .iter()
+            .map(|req| {
+                let rows = match req.logits {
+                    ExtendLogits::None => 0,
+                    ExtendLogits::Last => 1,
+                    ExtendLogits::All => req.tokens.len(),
+                };
+                vec![0.0f32; rows * v]
+            })
+            .collect();
+        if sess.is_paged() {
+            // serial per row, like every paged mutation path: block
+            // allocation and the CoW resolves need the pool mutably
+            for (req, o) in reqs.iter().zip(out.iter_mut()) {
+                self.extend_row_paged(sess, req.slot, req.tokens, req.logits, o)?;
+            }
+            return Ok(out);
+        }
+        struct Work<'a> {
+            row: RowMut<'a>,
+            tokens: &'a [i32],
+            logits: ExtendLogits,
+            out: &'a mut [f32],
+        }
+        let mut views: Vec<Option<RowMut<'_>>> =
+            sess.rows_mut().into_iter().map(Some).collect();
+        let mut items: Vec<Work<'_>> = Vec::with_capacity(reqs.len());
+        for (req, o) in reqs.iter().zip(out.iter_mut()) {
+            let row = views[req.slot].take().expect("validated unique slot");
+            items.push(Work {
+                row,
+                tokens: req.tokens,
+                logits: req.logits,
+                out: o,
+            });
+        }
+        parallel::par_items(&mut items, |_, it| {
+            self.extend_row_dense(&mut it.row, it.tokens, it.logits, it.out);
+        });
+        Ok(out)
+    }
+
+    /// Dense per-row worker for [`Self::extend_rows`] — infallible (all
+    /// validation happened up front), so it can run under `par_items`.
+    fn extend_row_dense(
+        &self,
+        row: &mut RowMut<'_>,
+        tokens: &[i32],
+        mode: ExtendLogits,
+        out: &mut [f32],
+    ) {
+        let cfg = &self.cfg;
+        let (d, h, hd) = (cfg.n_embd, cfg.n_head, cfg.head_dim());
+        let m = tokens.len();
+        let pos0 = *row.len;
+        debug_assert!(pos0 >= 1 && pos0 + m <= cfg.ctx);
+
+        let wte = self.p("wte");
+        let wpe = self.p("wpe");
+
+        // m-row activation buffers: the per-token scratch arena is sized
+        // for one row, and a chunk's allocation is amortized by the
+        // batched matmuls it buys
+        let mut x = vec![0.0f32; m * d];
+        let mut xn = vec![0.0f32; m * d];
+        let mut qkv = vec![0.0f32; m * 3 * d];
+        let mut y = vec![0.0f32; m * d];
+        let mut proj = vec![0.0f32; m * d];
+        let mut hid = vec![0.0f32; m * 4 * d];
+
+        for (i, &tok) in tokens.iter().enumerate() {
+            row.push_history(tok);
+            let te = &wte[tok as usize * d..(tok as usize + 1) * d];
+            let pe = &wpe[(pos0 + i) * d..(pos0 + i + 1) * d];
+            for (o, (&a, &p)) in
+                x[i * d..(i + 1) * d].iter_mut().zip(te.iter().zip(pe))
+            {
+                *o = a + p;
+            }
+        }
+
+        for l in 0..cfg.n_layer {
+            layer_norm_into(
+                &x,
+                self.layer("ln1_g", l, d),
+                self.layer("ln1_b", l, d),
+                d,
+                &mut xn,
+            );
+            self.affine_layer(&xn, "attn_qkv_w", "attn_qkv_b", l, m, d, 3 * d, &mut qkv);
+            // append all m positions' K/V first; the causal spans below
+            // never read past their own position
+            for i in 0..m {
+                for hh in 0..h {
+                    let kb = row.kv_start(l, hh, pos0 + i);
+                    let ko = i * 3 * d + d + hh * hd;
+                    row.k[kb..kb + hd].copy_from_slice(&qkv[ko..ko + hd]);
+                    let vo = ko + d;
+                    row.v[kb..kb + hd].copy_from_slice(&qkv[vo..vo + hd]);
+                }
+            }
+            y.fill(0.0);
+            for i in 0..m {
+                let pos = pos0 + i;
+                for hh in 0..h {
+                    let qo = i * 3 * d + hh * hd;
+                    let q = &qkv[qo..qo + hd];
+                    let base = row.kv_start(l, hh, 0);
+                    let span = (pos + 1) * hd;
+                    let kreg = &row.k[base..base + span];
+                    let vreg = &row.v[base..base + span];
+                    let yh = &mut y[i * d + hh * hd..i * d + (hh + 1) * hd];
+                    self.attend_cached(
+                        l,
+                        hh,
+                        q,
+                        kreg,
+                        vreg,
+                        pos,
+                        &mut row.scratch.srow,
+                        yh,
+                    );
+                }
+            }
+            self.affine_layer(&y, "attn_proj_w", "attn_proj_b", l, m, d, d, &mut proj);
+            for (xv, pv) in x.iter_mut().zip(proj.iter()) {
+                *xv += pv;
+            }
+            layer_norm_into(
+                &x,
+                self.layer("ln2_g", l, d),
+                self.layer("ln2_b", l, d),
+                d,
+                &mut xn,
+            );
+            self.affine_layer(&xn, "mlp_fc_w", "mlp_fc_b", l, m, d, 4 * d, &mut hid);
+            for hv in hid.iter_mut() {
+                *hv = gelu(*hv);
+            }
+            self.affine_layer(&hid, "mlp_proj_w", "mlp_proj_b", l, m, 4 * d, d, &mut proj);
+            for (xv, pv) in x.iter_mut().zip(proj.iter()) {
+                *xv += pv;
+            }
+        }
+
+        match mode {
+            ExtendLogits::None => {}
+            ExtendLogits::Last => {
+                let lastx = &x[(m - 1) * d..m * d];
+                let mut ln = vec![0.0f32; d];
+                layer_norm_into(lastx, self.p("lnf_g"), self.p("lnf_b"), d, &mut ln);
+                self.lm_head_into(&ln, 1, out);
+            }
+            ExtendLogits::All => {
+                layer_norm_into(&x, self.p("lnf_g"), self.p("lnf_b"), d, &mut xn);
+                self.lm_head_into(&xn, m, out);
+            }
+        }
+        *row.len = pos0 + m;
+    }
+
+    /// Paged per-row worker for [`Self::extend_rows`]: resolve all `m`
+    /// write-target blocks up front (alloc at boundaries, CoW-privatize
+    /// a shared mid-block landing spot), run the batched layer pass with
+    /// the new K/V *staged* through the pool dtype, then commit — the
+    /// same stage/attend/commit discipline as `decode_token_paged`, once
+    /// per chunk instead of once per token (and one gather/dequant of
+    /// the cached prefix per head instead of m).
+    ///
+    /// Freshly filled extension blocks are deliberately **not**
+    /// registered in the prefix registry: decode-time blocks were never
+    /// shareable on the token-by-token path either, and speculative
+    /// rollback must be able to pop them without touching the registry.
+    /// The cost is that a chunk-fed *prompt* tail doesn't publish its
+    /// full blocks for CoW reuse — prefix sharing still covers the
+    /// first-chunk window, which `prefill_rows` registers as before.
+    fn extend_row_paged(
+        &self,
+        sess: &mut DecodeSession,
+        slot: usize,
+        tokens: &[i32],
+        mode: ExtendLogits,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let cfg = &self.cfg;
+        let (d, h, hd) = (cfg.n_embd, cfg.n_head, cfg.head_dim());
+        let m = tokens.len();
+
+        let parts = sess.paged_parts().expect("paged extend on a dense session");
+        let PagedParts { pool, tables, len, history, scratch } = parts;
+        let bt = pool.block_tokens();
+        let dtype = pool.dtype();
+        let pos0 = len[slot];
+        debug_assert!(pos0 >= 1 && pos0 + m <= cfg.ctx);
+
+        // -- resolve write targets for every appended position up front;
+        //    on exhaustion undo this call's own allocations and bail (the
+        //    scheduler budgets `paged_extend_demand` beforehand, so this
+        //    is a backstop, not a steady state)
+        {
+            let table = &mut tables[slot];
+            let appended0 = table.len();
+            for i in 0..m {
+                let pos = pos0 + i;
+                if pos == table.len() * bt {
+                    match pool.alloc() {
+                        Some(blk) => table.push(blk),
+                        None => {
+                            while table.len() > appended0 {
+                                let blk = table.pop().expect("just appended");
+                                pool.release(blk);
+                            }
+                            bail!(
+                                "kv pool exhausted mid-extension ({} free \
+                                 blocks); the scheduler must budget \
+                                 paged_extend_demand first",
+                                pool.free_blocks()
+                            );
+                        }
+                    }
+                } else if i == 0 {
+                    // only the first position can land mid-block in a
+                    // pre-existing (possibly shared) block; later in-chunk
+                    // positions continue a block this call just allocated
+                    let bi = pos / bt;
+                    if pool.is_shared(table[bi]) {
+                        let Some(blk) = pool.make_private(table[bi]) else {
+                            bail!("kv pool exhausted resolving copy-on-write");
+                        };
+                        table[bi] = blk;
+                    }
+                }
+            }
+        }
+
+        // pos0 + m <= ctx, so the history ring never wraps here
+        for &tok in tokens {
+            history[slot].push_back(tok);
+        }
+
+        let wte = self.p("wte");
+        let wpe = self.p("wpe");
+        let lanes = cfg.n_layer * h * hd;
+        // staged K/V for all m new positions — per-token
+        // `[n_layer * n_head, head_dim]` lanes round-tripped through the
+        // pool dtype (staged bits == stored bits)
+        let mut staged_k = vec![0.0f32; m * lanes];
+        let mut staged_v = vec![0.0f32; m * lanes];
+
+        let mut x = vec![0.0f32; m * d];
+        let mut xn = vec![0.0f32; m * d];
+        let mut qkv = vec![0.0f32; m * 3 * d];
+        let mut y = vec![0.0f32; m * d];
+        let mut proj = vec![0.0f32; m * d];
+        let mut hid = vec![0.0f32; m * 4 * d];
+
+        for (i, &tok) in tokens.iter().enumerate() {
+            let te = &wte[tok as usize * d..(tok as usize + 1) * d];
+            let pe = &wpe[(pos0 + i) * d..(pos0 + i + 1) * d];
+            for (o, (&a, &p)) in
+                x[i * d..(i + 1) * d].iter_mut().zip(te.iter().zip(pe))
+            {
+                *o = a + p;
+            }
+        }
+
+        let table: &[u32] = &tables[slot];
+        let sc = &mut scratch[slot];
+        for l in 0..cfg.n_layer {
+            layer_norm_into(
+                &x,
+                self.layer("ln1_g", l, d),
+                self.layer("ln1_b", l, d),
+                d,
+                &mut xn,
+            );
+            self.affine_layer(&xn, "attn_qkv_w", "attn_qkv_b", l, m, d, 3 * d, &mut qkv);
+            for i in 0..m {
+                for hh in 0..h {
+                    let lane = i * lanes + (l * h + hh) * hd;
+                    let ko = i * 3 * d + d + hh * hd;
+                    let vo = ko + d;
+                    staged_k[lane..lane + hd].copy_from_slice(&qkv[ko..ko + hd]);
+                    staged_v[lane..lane + hd].copy_from_slice(&qkv[vo..vo + hd]);
+                    dtype.roundtrip_vec(&mut staged_k[lane..lane + hd]);
+                    dtype.roundtrip_vec(&mut staged_v[lane..lane + hd]);
+                }
+            }
+            y.fill(0.0);
+            for hh in 0..h {
+                // gather/dequant the cached (l, hh) prefix once per head,
+                // then place each new position's staged lane and attend
+                // its causal span — same kernels, same bits, one gather
+                // instead of m
+                let mut t0 = 0usize;
+                for &blk in table {
+                    if t0 >= pos0 {
+                        break;
+                    }
+                    let n = (pos0 - t0).min(bt);
+                    pool.read_k(blk, l, hh, 0, n, &mut sc.kgath[t0 * hd..(t0 + n) * hd]);
+                    pool.read_v(blk, l, hh, 0, n, &mut sc.vgath[t0 * hd..(t0 + n) * hd]);
+                    t0 += n;
+                }
+                debug_assert_eq!(t0, pos0);
+                for i in 0..m {
+                    let pos = pos0 + i;
+                    let lane = i * lanes + (l * h + hh) * hd;
+                    sc.kgath[pos * hd..(pos + 1) * hd]
+                        .copy_from_slice(&staged_k[lane..lane + hd]);
+                    sc.vgath[pos * hd..(pos + 1) * hd]
+                        .copy_from_slice(&staged_v[lane..lane + hd]);
+                    let qo = i * 3 * d + hh * hd;
+                    let q = &qkv[qo..qo + hd];
+                    let span = (pos + 1) * hd;
+                    let yh = &mut y[i * d + hh * hd..i * d + (hh + 1) * hd];
+                    let (kg, vg, sr) =
+                        (&sc.kgath[..span], &sc.vgath[..span], &mut sc.srow);
+                    self.attend_cached(l, hh, q, kg, vg, pos, sr, yh);
+                }
+            }
+            self.affine_layer(&y, "attn_proj_w", "attn_proj_b", l, m, d, d, &mut proj);
+            for (xv, pv) in x.iter_mut().zip(proj.iter()) {
+                *xv += pv;
+            }
+            layer_norm_into(
+                &x,
+                self.layer("ln2_g", l, d),
+                self.layer("ln2_b", l, d),
+                d,
+                &mut xn,
+            );
+            self.affine_layer(&xn, "mlp_fc_w", "mlp_fc_b", l, m, d, 4 * d, &mut hid);
+            for hv in hid.iter_mut() {
+                *hv = gelu(*hv);
+            }
+            self.affine_layer(&hid, "mlp_proj_w", "mlp_proj_b", l, m, 4 * d, d, &mut proj);
+            for (xv, pv) in x.iter_mut().zip(proj.iter()) {
+                *xv += pv;
+            }
+        }
+
+        match mode {
+            ExtendLogits::None => {}
+            ExtendLogits::Last => {
+                let lastx = &x[(m - 1) * d..m * d];
+                let mut ln = vec![0.0f32; d];
+                layer_norm_into(lastx, self.p("lnf_g"), self.p("lnf_b"), d, &mut ln);
+                self.lm_head_into(&ln, 1, out);
+            }
+            ExtendLogits::All => {
+                layer_norm_into(&x, self.p("lnf_g"), self.p("lnf_b"), d, &mut xn);
+                self.lm_head_into(&xn, m, out);
+            }
+        }
+
+        // -- commit the staged K/V into the resolved blocks
+        for i in 0..m {
+            let pos = pos0 + i;
+            pool.write_token(
+                table[pos / bt],
+                pos % bt,
+                &staged_k[i * lanes..(i + 1) * lanes],
+                &staged_v[i * lanes..(i + 1) * lanes],
+            );
+        }
+        len[slot] = pos0 + m;
+        Ok(())
+    }
+
     /// One incremental decode pass for a session row: append K/V for
     /// `tok` at the next cache slot and attend over the row's cached
     /// positions, entirely against the row's pre-sized scratch arena —
@@ -898,7 +1414,6 @@ impl NativeModel {
 
         let wte = self.p("wte");
         let wpe = self.p("wpe");
-        let scale = 1.0 / (hd as f32).sqrt();
 
         let s = &mut *row.scratch;
         {
@@ -938,7 +1453,6 @@ impl NativeModel {
             }
             s.y.fill(0.0);
             for hh in 0..h {
-                let hn = self.head_norm(l, hh);
                 let q = &s.qkv[hh * hd..(hh + 1) * hd];
                 // a dense row's (l, hh) slots are one contiguous
                 // [ctx, hd] run, so the shared attention-tail kernels
@@ -949,49 +1463,7 @@ impl NativeModel {
                 let kreg = &row.k[base..base + span];
                 let vreg = &row.v[base..base + span];
                 let yh = &mut s.y[hh * hd..(hh + 1) * hd];
-                match self.norm {
-                    // The ConSmax family has no row max/sum (the
-                    // paper's point): score → p → PV streams per cached
-                    // key, exactly the fused loop of the batched
-                    // forward. Int8 consmax reads its probabilities
-                    // from the (l, hh) LUT response table — the
-                    // hardware unit's bits — instead.
-                    Normalizer::Consmax if self.quant.is_int8() => {
-                        native::attend_consmax_lut(
-                            q,
-                            kreg,
-                            vreg,
-                            hd,
-                            scale,
-                            &self.score_quant,
-                            self.consmax_table(l, hh),
-                            yh,
-                        );
-                    }
-                    Normalizer::Consmax => {
-                        native::attend_consmax(
-                            q, kreg, vreg, hd, scale, hn.beta, hn.gamma, yh,
-                        );
-                    }
-                    Normalizer::ConsmaxV2 => {
-                        native::attend_consmax2(
-                            q, kreg, vreg, hd, scale, hn.beta, hn.gamma, yh,
-                        );
-                    }
-                    // the row-reducing normalizers collect the whole
-                    // score row first, into the row's scratch buffer
-                    _ => {
-                        native::attend_scores(
-                            q,
-                            kreg,
-                            hd,
-                            scale,
-                            &mut s.srow[..=pos],
-                        );
-                        hn.normalize_row(&mut s.srow[..=pos]);
-                        native::attend_pv(&s.srow[..=pos], vreg, hd, yh);
-                    }
-                }
+                self.attend_cached(l, hh, q, kreg, vreg, pos, &mut s.srow, yh);
             }
             self.affine_layer(
                 &s.y,
@@ -1437,7 +1909,6 @@ impl NativeModel {
 
         let wte = self.p("wte");
         let wpe = self.p("wpe");
-        let scale = 1.0 / (hd as f32).sqrt();
         let bt = pool.block_tokens();
         let dtype = pool.dtype();
 
@@ -1519,64 +1990,12 @@ impl NativeModel {
                 s.vgath[pos * hd..(pos + 1) * hd]
                     .copy_from_slice(&s.staged_v[lane..lane + hd]);
 
-                let hn = self.head_norm(l, hh);
                 let q = &s.qkv[hh * hd..(hh + 1) * hd];
                 let span = (pos + 1) * hd;
                 let yh = &mut s.y[hh * hd..(hh + 1) * hd];
-                match self.norm {
-                    Normalizer::Consmax if self.quant.is_int8() => {
-                        native::attend_consmax_lut(
-                            q,
-                            &s.kgath[..span],
-                            &s.vgath[..span],
-                            hd,
-                            scale,
-                            &self.score_quant,
-                            self.consmax_table(l, hh),
-                            yh,
-                        );
-                    }
-                    Normalizer::Consmax => {
-                        native::attend_consmax(
-                            q,
-                            &s.kgath[..span],
-                            &s.vgath[..span],
-                            hd,
-                            scale,
-                            hn.beta,
-                            hn.gamma,
-                            yh,
-                        );
-                    }
-                    Normalizer::ConsmaxV2 => {
-                        native::attend_consmax2(
-                            q,
-                            &s.kgath[..span],
-                            &s.vgath[..span],
-                            hd,
-                            scale,
-                            hn.beta,
-                            hn.gamma,
-                            yh,
-                        );
-                    }
-                    _ => {
-                        native::attend_scores(
-                            q,
-                            &s.kgath[..span],
-                            hd,
-                            scale,
-                            &mut s.srow[..=pos],
-                        );
-                        hn.normalize_row(&mut s.srow[..=pos]);
-                        native::attend_pv(
-                            &s.srow[..=pos],
-                            &s.vgath[..span],
-                            hd,
-                            yh,
-                        );
-                    }
-                }
+                // split-borrow srow away from kgath/vgath for the helper
+                let (kg, vg, sr) = (&s.kgath[..span], &s.vgath[..span], &mut s.srow);
+                self.attend_cached(l, hh, q, kg, vg, pos, sr, yh);
             }
             self.affine_layer(
                 &s.y,

@@ -1,0 +1,577 @@
+//! Equivalence suite for the two latency features on the continuous
+//! scheduler (DESIGN.md §Speculation-and-chunking seam):
+//!
+//! * **Chunked prefill** (`--prefill-chunk N`) splits prompt ingestion
+//!   into fixed-size cache-extension chunks interleaved with resident
+//!   decode steps. `NativeModel::extend_rows` performs the same float
+//!   ops in the same order as monolithic prefill, so logits, KV state
+//!   and therefore every emitted token must be **bitwise identical** to
+//!   the monolithic path — at any chunk size, on the dense and paged
+//!   (f32) pools, under every normalizer, quantized or not.
+//! * **Self-speculative decoding** (`--spec draft-k=K`) drafts K greedy
+//!   tokens with a small model and verifies all of them with one
+//!   batched target step. Greedy acceptance emits only tokens that are
+//!   argmaxes of *target* logits, so outputs never depend on the draft:
+//!   a perfect self-draft accepts everything, a mismatched draft only
+//!   costs speed — never changes a token.
+//!
+//! Paged pools here pin the f32 KV dtype: lossy dtypes (f16/bf16/int8)
+//! quantize at chunk boundaries, so chunked-vs-monolithic bitwise
+//! equality is an f32 property (same caveat as warm prefix-shared
+//! prefill).
+
+use consmax::config::{KvCacheConfig, KvDtype, ModelConfig, QuantMode};
+use consmax::coordinator::{
+    DecodeMode, GenRequest, GenResponse, Generator, ParamStore, ServeEvent,
+    Server, SpecConfig,
+};
+use consmax::prop_assert;
+use consmax::runtime::backend::{
+    DecodeSession, ExtendLogits, ExtendReq, NativeModel, Normalizer,
+};
+use consmax::util::proptest::{run_property, Gen};
+
+fn setup() -> (ModelConfig, ParamStore) {
+    setup_norm("consmax")
+}
+
+fn setup_norm(norm: &str) -> (ModelConfig, ParamStore) {
+    let cfg = ModelConfig::builtin("tiny", norm).unwrap();
+    let store = ParamStore::init(&cfg, 5).unwrap();
+    (cfg, store)
+}
+
+fn greedy_req(id: u64, prompt: &str, max_new: usize) -> GenRequest {
+    GenRequest {
+        id,
+        prompt: prompt.into(),
+        max_new_tokens: max_new,
+        temperature: 0.0,
+        stop: None,
+        deadline_ms: None,
+    }
+}
+
+fn by_id(mut responses: Vec<GenResponse>) -> Vec<GenResponse> {
+    responses.sort_by_key(|r| r.id);
+    responses
+}
+
+/// Build a continuous server with the full feature matrix: quantization,
+/// KV pool, chunked prefill, and speculation (draft weights given as a
+/// separate store so tests can pair a target with a mismatched draft).
+fn build_server<'a>(
+    cfg: &'a ModelConfig,
+    store: &'a ParamStore,
+    quant: QuantMode,
+    kv: Option<KvCacheConfig>,
+    chunk: Option<usize>,
+    spec: Option<(usize, &ParamStore)>,
+) -> Server<'a> {
+    let gen =
+        Generator::native_quant(cfg, store, 0, DecodeMode::Kv, quant).unwrap();
+    let mut server = Server::new(gen);
+    if let Some(kv) = kv {
+        server.set_kv_config(Some(kv)).unwrap();
+    }
+    server.set_prefill_chunk(chunk).unwrap();
+    if let Some((k, dstore)) = spec {
+        let draft = NativeModel::from_params_quant(
+            cfg,
+            &dstore.order,
+            &dstore.params,
+            QuantMode::Off,
+        )
+        .unwrap();
+        server
+            .set_spec(Some((SpecConfig { draft_k: k }, draft)))
+            .unwrap();
+    }
+    server
+}
+
+fn serve(
+    cfg: &ModelConfig,
+    store: &ParamStore,
+    quant: QuantMode,
+    kv: Option<KvCacheConfig>,
+    chunk: Option<usize>,
+    spec: Option<(usize, &ParamStore)>,
+    reqs: &[GenRequest],
+) -> Vec<GenResponse> {
+    let mut server = build_server(cfg, store, quant, kv, chunk, spec);
+    for r in reqs {
+        server.submit(r.clone());
+    }
+    by_id(server.run_continuous().unwrap())
+}
+
+fn mixed_reqs() -> Vec<GenRequest> {
+    vec![
+        greedy_req(0, "The constant softmax ", 9),
+        greedy_req(1, "Attention ", 1),
+        greedy_req(2, "x", 6),
+        greedy_req(3, "", 4), // empty: completes with no tokens, no slot
+        greedy_req(4, "A much longer prompt that spans a few more byte tokens ", 12),
+        greedy_req(5, "tail ", 3),
+    ]
+}
+
+fn assert_same_tokens(got: &[GenResponse], want: &[GenResponse], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: request count diverged");
+    for (g, w) in got.iter().zip(want) {
+        assert_eq!(g.id, w.id);
+        assert_eq!(
+            g.tokens, w.tokens,
+            "{what}: req {} diverged: {:?} vs {:?}",
+            g.id, g.tokens, w.tokens
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// chunked prefill
+// ---------------------------------------------------------------------------
+
+#[test]
+fn chunked_prefill_matches_monolithic_every_chunk_size() {
+    // chunk sizes below, straddling, and beyond every prompt length —
+    // including 1 (pure token-at-a-time ingestion) and >= ctx (degrades
+    // to the monolithic path exactly)
+    let (cfg, store) = setup();
+    let reqs = mixed_reqs();
+    let mono = serve(&cfg, &store, QuantMode::Off, None, None, None, &reqs);
+    for chunk in [1usize, 3, 7, 64] {
+        let chunked =
+            serve(&cfg, &store, QuantMode::Off, None, Some(chunk), None, &reqs);
+        assert_same_tokens(&chunked, &mono, &format!("dense chunk={chunk}"));
+    }
+}
+
+#[test]
+fn chunked_prefill_matches_monolithic_on_paged_f32() {
+    let (cfg, store) = setup();
+    let reqs = mixed_reqs();
+    let pools = [
+        KvCacheConfig { dtype: KvDtype::F32, block_tokens: 8, mem_bytes: None },
+        KvCacheConfig {
+            dtype: KvDtype::F32,
+            block_tokens: 16,
+            // 9 blocks: tight enough to exercise preemption mid-chunking
+            mem_bytes: Some(
+                9 * 2 * cfg.n_layer * cfg.n_head * 16 * cfg.head_dim() * 4,
+            ),
+        },
+    ];
+    for kv in pools {
+        let mono =
+            serve(&cfg, &store, QuantMode::Off, Some(kv), None, None, &reqs);
+        for chunk in [1usize, 3] {
+            let chunked = serve(
+                &cfg, &store, QuantMode::Off, Some(kv), Some(chunk), None, &reqs,
+            );
+            assert_same_tokens(
+                &chunked,
+                &mono,
+                &format!("paged({:?} blocks) chunk={chunk}", kv.mem_bytes),
+            );
+        }
+    }
+}
+
+#[test]
+fn chunked_prefill_matches_monolithic_every_normalizer() {
+    for norm in Normalizer::NAMES {
+        let (cfg, store) = setup_norm(norm);
+        let reqs =
+            vec![greedy_req(0, "normalizer zoo ", 5), greedy_req(1, "x", 3)];
+        let mono = serve(&cfg, &store, QuantMode::Off, None, None, None, &reqs);
+        let chunked =
+            serve(&cfg, &store, QuantMode::Off, None, Some(3), None, &reqs);
+        assert_same_tokens(&chunked, &mono, &format!("normalizer {norm}"));
+    }
+}
+
+#[test]
+fn chunked_prefill_matches_monolithic_int8_weights() {
+    // int8 *weight* quantization is position-independent (the same
+    // quantized matrices serve every forward), so chunking stays bitwise
+    let (cfg, store) = setup();
+    let reqs = mixed_reqs();
+    let mono = serve(&cfg, &store, QuantMode::Int8, None, None, None, &reqs);
+    for chunk in [1usize, 3] {
+        let chunked =
+            serve(&cfg, &store, QuantMode::Int8, None, Some(chunk), None, &reqs);
+        assert_same_tokens(&chunked, &mono, &format!("int8 chunk={chunk}"));
+    }
+}
+
+#[test]
+fn chunked_prefill_logits_and_decode_path_bitwise_at_model_level() {
+    // below the scheduler: prefill(w) + extend_rows(rest) must leave the
+    // session with bit-identical next-token logits AND a KV state that
+    // decodes bit-identically to monolithic prefill
+    let (cfg, store) = setup();
+    let model =
+        NativeModel::from_params(&cfg, &store.order, &store.params).unwrap();
+    let prompt: Vec<i32> = "chunk boundary test".bytes().map(i32::from).collect();
+    for w in [1usize, 4, prompt.len() - 1] {
+        let mut mono = DecodeSession::new(&cfg, 2);
+        let l_mono = model.prefill_rows(&mut mono, &[(0, &prompt[..])]).unwrap();
+
+        let mut chunked = DecodeSession::new(&cfg, 2);
+        model.prefill_rows(&mut chunked, &[(0, &prompt[..w])]).unwrap();
+        let l_chunk = model
+            .extend_rows(
+                &mut chunked,
+                &[ExtendReq {
+                    slot: 0,
+                    tokens: &prompt[w..],
+                    logits: ExtendLogits::Last,
+                }],
+            )
+            .unwrap()
+            .remove(0);
+        assert_eq!(l_mono, l_chunk, "w={w}: final-chunk logits diverged");
+
+        // a few greedy decode steps certify the cached KV is the same
+        let mut tok = argmax(&l_mono) as i32;
+        for step in 0..4 {
+            let a = model
+                .decode_step_active(&mut mono, &[tok, 0], &[true, false])
+                .unwrap();
+            let b = model
+                .decode_step_active(&mut chunked, &[tok, 0], &[true, false])
+                .unwrap();
+            assert_eq!(a, b, "w={w}: decode step {step} diverged");
+            tok = argmax(&a[..cfg.vocab]) as i32;
+        }
+    }
+}
+
+fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[test]
+fn chunked_ttft_counts_to_first_emitted_token() {
+    // a 5-token prompt at chunk=1 dwells 4 ticks in Prefill and emits
+    // its first token on the 5th — TTFT is submit -> first *emitted*
+    // token, and the event stream must show exactly that shape
+    let (cfg, store) = setup();
+    let mut server =
+        build_server(&cfg, &store, QuantMode::Off, None, Some(1), None);
+    server.set_event_capture(true);
+    server.submit(greedy_req(0, "abcde", 3));
+    for tick in 1..=4 {
+        let done = server.step().unwrap();
+        assert!(done.is_empty(), "tick {tick}: completed too early");
+        let evs = server.drain_events();
+        assert!(
+            !evs.iter().any(|e| matches!(e, ServeEvent::Token { .. })),
+            "tick {tick}: token emitted while the prompt was still feeding"
+        );
+    }
+    server.step().unwrap(); // 5th tick: final chunk lands + first token
+    let evs = server.drain_events();
+    assert!(
+        evs.iter().any(|e| matches!(e, ServeEvent::Token { .. })),
+        "5th tick: the completing chunk must emit the first token"
+    );
+    let r = by_id(server.run_continuous().unwrap()).remove(0);
+    assert!(r.ttft_ms > 0.0 && r.ttft_ms <= r.latency_ms);
+    let st = server.stats();
+    assert_eq!(st.prefill_chunk_steps, 5, "one feed per tick at chunk=1");
+    assert!(st.decode_steps > 0);
+}
+
+// ---------------------------------------------------------------------------
+// self-speculative decoding
+// ---------------------------------------------------------------------------
+
+#[test]
+fn self_draft_accepts_everything_and_stays_bitwise() {
+    // the draft IS the target: every proposal is the target's own argmax,
+    // so acceptance is 100% and outputs are trivially bit-identical
+    let (cfg, store) = setup();
+    let reqs = mixed_reqs();
+    let plain = serve(&cfg, &store, QuantMode::Off, None, None, None, &reqs);
+    for k in [1usize, 2, 3] {
+        let mut server = build_server(
+            &cfg, &store, QuantMode::Off, None, None, Some((k, &store)),
+        );
+        for r in &reqs {
+            server.submit(r.clone());
+        }
+        let spec = by_id(server.run_continuous().unwrap());
+        assert_same_tokens(&spec, &plain, &format!("self-draft k={k}"));
+        let st = server.stats();
+        assert!(st.spec_proposed > 0, "k={k}: speculation never ran");
+        assert_eq!(
+            st.spec_accepted, st.spec_proposed,
+            "k={k}: a self-draft must accept every proposal"
+        );
+        // per-response counters sum to the server totals
+        let (p, a) = spec.iter().fold((0u64, 0u64), |(p, a), r| {
+            (p + r.spec_proposed, a + r.spec_accepted)
+        });
+        assert_eq!((p, a), (st.spec_proposed, st.spec_accepted));
+    }
+}
+
+#[test]
+fn mismatched_draft_changes_speed_never_tokens() {
+    // a draft trained on different weights proposes garbage; greedy
+    // verification rejects what the target would not have emitted, so
+    // outputs are still bitwise — only the acceptance rate drops
+    let (cfg, store) = setup();
+    let wrong = ParamStore::init(&cfg, 99).unwrap();
+    let reqs = mixed_reqs();
+    let plain = serve(&cfg, &store, QuantMode::Off, None, None, None, &reqs);
+    let mut server = build_server(
+        &cfg, &store, QuantMode::Off, None, None, Some((2, &wrong)),
+    );
+    for r in &reqs {
+        server.submit(r.clone());
+    }
+    let spec = by_id(server.run_continuous().unwrap());
+    assert_same_tokens(&spec, &plain, "mismatched draft");
+    let st = server.stats();
+    assert!(st.spec_proposed > 0);
+    assert!(st.spec_accepted <= st.spec_proposed);
+}
+
+#[test]
+fn spec_decode_matches_plain_every_normalizer() {
+    for norm in Normalizer::NAMES {
+        let (cfg, store) = setup_norm(norm);
+        let reqs =
+            vec![greedy_req(0, "normalizer zoo ", 6), greedy_req(1, "x", 3)];
+        let plain = serve(&cfg, &store, QuantMode::Off, None, None, None, &reqs);
+        let spec = serve(
+            &cfg, &store, QuantMode::Off, None, None, Some((2, &store)), &reqs,
+        );
+        assert_same_tokens(&spec, &plain, &format!("normalizer {norm}"));
+    }
+}
+
+#[test]
+fn spec_decode_int8_target_with_f32_draft_stays_bitwise() {
+    // quantized target + unquantized draft: proposals diverge wherever
+    // int8 rounding flips an argmax, but verification is the int8
+    // target's own logits, so the emitted stream is the int8 stream
+    let (cfg, store) = setup();
+    let reqs = mixed_reqs();
+    let plain = serve(&cfg, &store, QuantMode::Int8, None, None, None, &reqs);
+    let spec = serve(
+        &cfg, &store, QuantMode::Int8, None, None, Some((2, &store)), &reqs,
+    );
+    assert_same_tokens(&spec, &plain, "int8 target, f32 self-draft");
+}
+
+#[test]
+fn spec_and_chunking_compose() {
+    let (cfg, store) = setup();
+    let reqs = mixed_reqs();
+    let plain = serve(&cfg, &store, QuantMode::Off, None, None, None, &reqs);
+    for kv in [
+        None,
+        Some(KvCacheConfig {
+            dtype: KvDtype::F32,
+            block_tokens: 8,
+            mem_bytes: None,
+        }),
+    ] {
+        let both = serve(
+            &cfg, &store, QuantMode::Off, kv, Some(3), Some((2, &store)), &reqs,
+        );
+        assert_same_tokens(&both, &plain, &format!("spec+chunk kv={kv:?}"));
+    }
+}
+
+#[test]
+fn spec_churn_proptest_mixed_temperatures_and_pools() {
+    // randomized join/leave churn with sampled rows co-resident: greedy
+    // rows speculate, sampled rows never do, and per-slot RNG streams
+    // (seeded by request id) make even the sampled rows bitwise
+    // reproducible against a spec-off run of the same pool
+    let (cfg, store) = setup();
+    let pools: [Option<KvCacheConfig>; 2] = [
+        None,
+        Some(KvCacheConfig {
+            dtype: KvDtype::F32,
+            block_tokens: 16,
+            // 9 blocks: preemption fires while draft state is resident
+            mem_bytes: Some(
+                9 * 2 * cfg.n_layer * cfg.n_head * 16 * cfg.head_dim() * 4,
+            ),
+        }),
+    ];
+    for (pi, kv) in pools.iter().enumerate() {
+        run_property("spec on == spec off under churn", 5, |g: &mut Gen| {
+            let n = g.usize(3, 8);
+            let mut reqs = Vec::new();
+            for id in 0..n as u64 {
+                let plen = g.usize(0, 90); // ctx is 64: some prompts clamp
+                let prompt: String = (0..plen)
+                    .map(|_| (b'a' + (g.usize(0, 26) as u8)) as char)
+                    .collect();
+                let mut r = greedy_req(id, &prompt, g.usize(0, 8));
+                if g.usize(0, 3) == 0 {
+                    r.temperature = 0.8;
+                }
+                reqs.push(r);
+            }
+            let run = |spec: Option<(usize, &ParamStore)>,
+                       split: usize,
+                       ticks: usize|
+             -> Vec<GenResponse> {
+                let mut server =
+                    build_server(&cfg, &store, QuantMode::Off, *kv, None, spec);
+                for r in reqs.iter().take(split) {
+                    server.submit(r.clone());
+                }
+                let mut out = Vec::new();
+                for _ in 0..ticks {
+                    out.extend(server.step().unwrap());
+                }
+                for r in reqs.iter().skip(split) {
+                    server.submit(r.clone());
+                }
+                out.extend(server.run_continuous().unwrap());
+                by_id(out)
+            };
+            let split = g.usize(0, n + 1);
+            let ticks = g.usize(0, 5);
+            let plain = run(None, split, ticks);
+            let spec = run(Some((2, &store)), split, ticks);
+            prop_assert!(
+                spec.len() == reqs.len(),
+                "pool {pi}: served {} of {}",
+                spec.len(),
+                reqs.len()
+            );
+            for (s, p) in spec.iter().zip(&plain) {
+                prop_assert!(
+                    s.tokens == p.tokens,
+                    "pool {pi}: req {} diverged under speculation: {:?} vs {:?}",
+                    s.id,
+                    s.tokens,
+                    p.tokens
+                );
+            }
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn cancel_deadline_preempt_free_draft_state() {
+    // terminal states while speculation is live: a cancelled resident, a
+    // lapsed deadline, and budget-pressure preemption all release the
+    // draft row with the slot; the accounting invariant holds and the
+    // pool serves later requests bit-identically
+    let (cfg, store) = setup();
+    let kv = KvCacheConfig {
+        dtype: KvDtype::F32,
+        block_tokens: 16,
+        mem_bytes: Some(9 * 2 * cfg.n_layer * cfg.n_head * 16 * cfg.head_dim() * 4),
+    };
+    let mut server = build_server(
+        &cfg, &store, QuantMode::Off, Some(kv), Some(3), Some((2, &store)),
+    );
+    server.submit(greedy_req(0, "long running resident ", 24));
+    server.submit(greedy_req(1, "will be cancelled ", 24));
+    let mut doomed = greedy_req(2, "will time out ", 24);
+    doomed.deadline_ms = Some(1); // lapses on the next sweep
+    server.submit(doomed);
+    server.submit(greedy_req(3, "queued behind the doomed ", 4));
+    for _ in 0..3 {
+        server.step().unwrap();
+    }
+    assert!(server.cancel(1), "resident cancel must land");
+    std::thread::sleep(std::time::Duration::from_millis(3));
+    let mut done = server.run_continuous().unwrap();
+    // the freed slots keep serving: a fresh request still matches the
+    // plain-decode reference
+    server.submit(greedy_req(4, "after the churn ", 5));
+    done.extend(server.run_continuous().unwrap());
+    let done = by_id(done);
+    let st = server.stats();
+    assert_eq!(
+        st.completed + st.timed_out + st.cancelled + st.shed,
+        st.submitted,
+        "terminal accounting must balance with spec+chunking live"
+    );
+    assert_eq!(server.in_flight(), 0);
+    let reqs = [greedy_req(0, "after the churn ", 5)];
+    let want = serve(&cfg, &store, QuantMode::Off, None, None, None, &reqs);
+    let after = done.iter().find(|r| r.id == 4).expect("req 4 completed");
+    assert_eq!(after.tokens, want[0].tokens, "post-churn request diverged");
+    assert!(st.spec_accepted <= st.spec_proposed);
+}
+
+#[test]
+fn feature_knobs_validate_and_gate_on_idle() {
+    let (cfg, store) = setup();
+    let mut server = build_server(&cfg, &store, QuantMode::Off, None, None, None);
+    assert!(server.set_prefill_chunk(Some(0)).is_err(), "chunk 0 rejected");
+    let draft = NativeModel::from_params_quant(
+        &cfg,
+        &store.order,
+        &store.params,
+        QuantMode::Off,
+    )
+    .unwrap();
+    assert!(
+        server.set_spec(Some((SpecConfig { draft_k: 0 }, draft))).is_err(),
+        "draft-k 0 rejected"
+    );
+    // both setters are rejected while requests are resident
+    server.submit(greedy_req(0, "resident ", 8));
+    server.step().unwrap();
+    assert!(server.set_prefill_chunk(Some(2)).is_err());
+    let draft = NativeModel::from_params_quant(
+        &cfg,
+        &store.order,
+        &store.params,
+        QuantMode::Off,
+    )
+    .unwrap();
+    assert!(server.set_spec(Some((SpecConfig { draft_k: 2 }, draft))).is_err());
+    server.run_continuous().unwrap();
+    // and accepted again once the pool drains
+    server.set_prefill_chunk(Some(2)).unwrap();
+    assert_eq!(server.prefill_chunk(), Some(2));
+    let draft = NativeModel::from_params_quant(
+        &cfg,
+        &store.order,
+        &store.params,
+        QuantMode::Off,
+    )
+    .unwrap();
+    server.set_spec(Some((SpecConfig { draft_k: 2 }, draft))).unwrap();
+    assert_eq!(server.spec_config(), Some(SpecConfig { draft_k: 2 }));
+}
+
+#[test]
+fn legacy_path_reports_zero_feature_counters() {
+    // both features off: the scheduler must not tick the new counters
+    // (prefill_chunk_steps stays 0; decode_steps is the only addition)
+    let (cfg, store) = setup();
+    let mut server = build_server(&cfg, &store, QuantMode::Off, None, None, None);
+    server.submit(greedy_req(0, "legacy ", 4));
+    server.run_continuous().unwrap();
+    let st = server.stats();
+    assert_eq!(st.prefill_chunk_steps, 0);
+    assert_eq!(st.spec_proposed, 0);
+    assert_eq!(st.spec_accepted, 0);
+    // token 1 comes from the prefill sample; 2..4 from decode ticks
+    assert!(st.decode_steps >= 3);
+}
